@@ -1,0 +1,84 @@
+//! Figures 2, 6, 7: training-loss curves split into the non-causal (draft)
+//! and causal (target) components of Eq. 9.
+//!
+//! Reads the CSV loss logs written by python/train/train.py and summarizes
+//! the paper's qualitative claims: the two components track each other
+//! early (the output residual initializes the target at the draft), then
+//! the causal component drops *below* the non-causal one as the causal
+//! block learns to exploit the extra revealed context — the capacity gap
+//! speculative sampling then converts into fewer NFE.
+//!
+//!   cargo run --release --example fig2_losses -- --runs python/runs
+
+use anyhow::Result;
+use ssmd::harness::{fmt_f, Table};
+use ssmd::util::args::Args;
+
+struct Run {
+    name: &'static str,
+    figure: &'static str,
+    csv: String,
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let runs = args.str("runs", "python/runs");
+    let candidates = [
+        Run { name: "text8", figure: "Fig. 2",
+              csv: format!("{runs}/text8/losses.csv") },
+        Run { name: "owt", figure: "Fig. 6",
+              csv: format!("{runs}/owt/losses.csv") },
+        Run { name: "protein_head (frozen backbone)", figure: "Fig. 7",
+              csv: format!("{runs}/protein_head/losses.csv") },
+    ];
+
+    for run in &candidates {
+        let Ok(text) = std::fs::read_to_string(&run.csv) else {
+            println!("({}: no loss log at {}, skipping)", run.name, run.csv);
+            continue;
+        };
+        let mut rows: Vec<(usize, f64, f64)> = Vec::new();
+        for line in text.lines().skip(1) {
+            let mut f = line.split(',');
+            let step: usize = f.next().unwrap_or("0").parse().unwrap_or(0);
+            let nc: f64 = f.next().unwrap_or("0").parse().unwrap_or(0.0);
+            let c: f64 = f.next().unwrap_or("0").parse().unwrap_or(0.0);
+            rows.push((step, nc, c));
+        }
+        if rows.is_empty() {
+            continue;
+        }
+        println!("\n# {} — {} training losses ({} log points)", run.figure,
+                 run.name, rows.len());
+        let mut t = Table::new(&["step", "non-causal", "causal",
+                                 "gap (nc - c)"]);
+        // Print ~8 evenly spaced checkpoints.
+        let stride = (rows.len() / 8).max(1);
+        for (i, (step, nc, c)) in rows.iter().enumerate() {
+            if i % stride == 0 || i == rows.len() - 1 {
+                t.row(vec![
+                    format!("{step}"),
+                    fmt_f(*nc, 4),
+                    fmt_f(*c, 4),
+                    fmt_f(nc - c, 4),
+                ]);
+            }
+        }
+        t.print();
+        let early = &rows[..(rows.len() / 5).max(1)];
+        let late = &rows[rows.len() * 4 / 5..];
+        let mean =
+            |xs: &[(usize, f64, f64)], f: fn(&(usize, f64, f64)) -> f64| {
+                xs.iter().map(f).sum::<f64>() / xs.len() as f64
+            };
+        let early_gap = mean(early, |r| r.1 - r.2);
+        let late_gap = mean(late, |r| r.1 - r.2);
+        println!(
+            "early mean gap {:+.4} nats -> late mean gap {:+.4} nats \
+             (paper: gap opens as the causal block learns non-factorized \
+             structure)",
+            early_gap, late_gap
+        );
+    }
+    Ok(())
+}

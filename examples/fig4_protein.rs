@@ -1,0 +1,72 @@
+//! Figure 4: pLDDT(-proxy) vs NFE on the synthetic protein task.
+//!
+//! Mirrors the paper's Sec. 5.3 setup: a pretrained MDM backbone is frozen
+//! and a single causal block fine-tuned on top (checkpoint `protein_head`).
+//! The MDM baseline samples the *same frozen backbone* via its draft half —
+//! exactly the paper's "original non-causal model with the standard MDM
+//! algorithm" comparison. Quality = exact-likelihood pLDDT proxy (HMM
+//! forward algorithm, DESIGN.md substitutions), mean over samples with SEM.
+//!
+//!   cargo run --release --example fig4_protein -- --artifacts artifacts \
+//!       --samples 128
+
+use anyhow::Result;
+use ssmd::coordinator::EngineModel;
+use ssmd::harness::{self, fmt_f, mdm_sweep, nfe_reduction, spec_sweep,
+                    Table};
+use ssmd::oracle::HmmOracle;
+use ssmd::util::args::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let artifacts = args.str("artifacts", "artifacts");
+    let n_samples = args.usize("samples", 128);
+    let seed = args.u64("seed", 0);
+
+    let (_rt, manifest, models) =
+        harness::load_models(&artifacts, &["protein_head"])?;
+    let model = &models["protein_head"];
+    let d = EngineModel::seq_len(model);
+    let oracle = HmmOracle::from_spec_file(
+        manifest.specs.get("protein").expect("spec").to_str().unwrap())?;
+
+    let spec_settings: &[(usize, f64)] =
+        &[(1, 0.01), (1, 0.02), (2, 0.04), (3, 0.083), (4, 0.125)];
+    let mdm_steps = [4usize, 8, 16, 24, 32, 48, 64];
+
+    println!("# Figure 4 — pLDDT proxy vs NFE (HMM protein, D={d}, \
+              {n_samples} samples/point)\n");
+    let mut t = Table::new(&["method", "setting", "NFE", "pLDDT", "SEM"]);
+    let mut spec_curve = Vec::new();
+    for p in spec_sweep(model, spec_settings, n_samples, seed)? {
+        let (mean, sem) = oracle.plddt_mean_sem(&p.samples, d);
+        spec_curve.push((p.nfe, mean));
+        t.row(vec![
+            "speculative".into(),
+            p.label,
+            fmt_f(p.nfe, 1),
+            fmt_f(mean, 2),
+            fmt_f(sem, 2),
+        ]);
+    }
+    let mut mdm_curve = Vec::new();
+    for p in mdm_sweep(model, &mdm_steps, n_samples, seed + 1)? {
+        let (mean, sem) = oracle.plddt_mean_sem(&p.samples, d);
+        mdm_curve.push((p.nfe, mean));
+        t.row(vec![
+            "mdm (frozen backbone)".into(),
+            p.label,
+            fmt_f(p.nfe, 1),
+            fmt_f(mean, 2),
+            fmt_f(sem, 2),
+        ]);
+    }
+    t.print();
+
+    // Reference: real HMM samples score ~85 by calibration.
+    if let Some(f) = nfe_reduction(&spec_curve, &mdm_curve) {
+        println!("\nheadline: ~{f:.2}x NFE reduction at matched pLDDT \
+                  (paper: ~2x at high pLDDT)");
+    }
+    Ok(())
+}

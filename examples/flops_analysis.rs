@@ -1,0 +1,58 @@
+//! Appendix E: FLOP overhead of the self-speculative architecture.
+//! Regenerates every number of the appendix (paper OWT settings) and the
+//! 0.98% headline, plus a sweep over model scales showing the overhead
+//! shrinks as models grow.
+//!
+//!   cargo run --release --example flops_analysis
+
+use ssmd::flops::TransformerShape;
+use ssmd::harness::{fmt_f, Table};
+
+fn main() {
+    let t = TransformerShape::paper_owt();
+    println!("# Appendix E — FLOP analysis (C=768 V=50257 K=64 H=12 \
+              F=3072 S=1024 L=12)\n");
+    let mut table = Table::new(&["component", "FLOPs", "paper"]);
+    let rows: Vec<(&str, u64, &str)> = vec![
+        ("embedding", t.embedding(), "7.9e10"),
+        ("qkv projection", t.qkv_projection(), "3.6e9"),
+        ("k@q", t.kq_matmul(), "1.6e9"),
+        ("softmax", t.softmax(), "3.7e7"),
+        ("softmax@query reduction", t.softmax_query_reduction(), "1.6e9"),
+        ("linear", t.attn_linear(), "1.2e9"),
+        ("attention total", t.attention(), "8e9"),
+        ("dense block", t.dense_block(), "9.7e9"),
+        ("final logits", t.final_logits(), "7.9e10"),
+        ("TOTAL vanilla", t.total_vanilla(), "3.7e11"),
+        ("speculative overhead", t.speculative_overhead(), "3.6e9"),
+    ];
+    for (name, v, paper) in rows {
+        table.row(vec![name.into(), format!("{:.3e}", v as f64),
+                       paper.into()]);
+    }
+    table.print();
+    println!(
+        "\noverhead fraction = {}% (paper: 0.98%)",
+        fmt_f(100.0 * t.overhead_fraction(), 2)
+    );
+
+    println!("\n## Scale sweep (overhead dilutes with width)\n");
+    let mut sweep = Table::new(&["C", "layers", "overhead %"]);
+    for (c, layers) in [(256u64, 6u64), (768, 12), (1536, 24), (4096, 32)] {
+        let s = TransformerShape {
+            c,
+            f: 4 * c,
+            h: c / 64,
+            k: 64,
+            v: 50_257,
+            s: 1024,
+            layers,
+        };
+        sweep.row(vec![
+            format!("{c}"),
+            format!("{layers}"),
+            fmt_f(100.0 * s.overhead_fraction(), 3),
+        ]);
+    }
+    sweep.print();
+}

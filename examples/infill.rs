@@ -1,0 +1,86 @@
+//! Infilling demo: condition on an arbitrarily-located prompt and fill the
+//! rest in any order — the ordering flexibility the paper motivates for
+//! MDMs (and which strict left-to-right self-speculative models lack).
+//!
+//!   cargo run --release --example infill -- --artifacts artifacts \
+//!       --model text8 --prefix "the " --middle " and "
+
+use anyhow::Result;
+use ssmd::coordinator::{EngineModel, SamplerChoice};
+use ssmd::engine::{Prompt, SpecParams, Window};
+use ssmd::harness;
+use ssmd::oracle::decode_chars;
+use ssmd::util::args::Args;
+use ssmd::util::rng::Pcg;
+
+fn encode_char(c: char) -> i32 {
+    if c == ' ' {
+        0
+    } else {
+        (c as u8 - b'a') as i32 + 1
+    }
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let artifacts = args.str("artifacts", "artifacts");
+    let model_name = args.str("model", "text8");
+    let n = args.usize("n", 3);
+
+    let (_rt, _m, models) =
+        harness::load_models(&artifacts, &[&model_name])?;
+    let model = &models[&model_name];
+    let d = EngineModel::seq_len(model);
+
+    // Pin a prefix at the start and a fragment in the middle.
+    let prefix = args.str("prefix", "za ");
+    let middle = args.str("middle", " bo ");
+    let mut prompt = Prompt::empty(d);
+    for (i, c) in prefix.chars().enumerate().take(d) {
+        prompt.0[i] = Some(encode_char(c));
+    }
+    let mid_start = d / 2;
+    for (i, c) in middle.chars().enumerate() {
+        if mid_start + i < d {
+            prompt.0[mid_start + i] = Some(encode_char(c));
+        }
+    }
+
+    let sampler = SamplerChoice::Speculative(SpecParams {
+        window: Window::Cosine { dtau: 0.03 },
+        n_verify: 2,
+        ..Default::default()
+    });
+    let mut rng = Pcg::new(args.u64("seed", 7));
+    let prompts = vec![prompt.clone(); n];
+    let samples = model.sample(&prompts, &sampler, &mut rng)?;
+
+    println!("prompt (fixed chars shown, '_' generated):");
+    let mask_view: String = prompt
+        .0
+        .iter()
+        .map(|s| match s {
+            Some(t) => {
+                if *t == 0 {
+                    ' '
+                } else {
+                    (b'a' + (*t as u8) - 1) as char
+                }
+            }
+            None => '_',
+        })
+        .collect();
+    println!("  [{mask_view}]");
+    for (i, s) in samples.iter().enumerate() {
+        println!("infill {i} (nfe {:.1}): [{}]", s.nfe,
+                 decode_chars(&s.tokens));
+        // Prompt positions must be intact.
+        for (pos, slot) in prompt.0.iter().enumerate() {
+            if let Some(t) = slot {
+                assert_eq!(s.tokens[pos], *t, "prompt violated at {pos}");
+            }
+        }
+    }
+    println!("(prompt positions verified intact in all samples)");
+    Ok(())
+}

@@ -1,0 +1,116 @@
+//! Table 1: judge NLL (oracle bigram NLL replacing GPT2 — see DESIGN.md
+//! substitutions) and unigram entropy at fixed NFE levels, for:
+//!   masked diffusion, speculative (ours), SDTT, and the two ablations
+//!   (no output residual, 2-causal-block).
+//!
+//! Each method's metric-NFE curve is traced by sweeping sampler settings;
+//! values at each NFE level are read off by linear interpolation between
+//! the two nearest points (the paper's Table 1 protocol).
+//!
+//!   cargo run --release --example table1_owt -- --artifacts artifacts \
+//!       --samples 96
+
+use anyhow::Result;
+use ssmd::coordinator::EngineModel;
+use ssmd::harness::{self, fmt_opt, interp_at, mdm_sweep, spec_sweep, Table};
+use ssmd::oracle::{unigram_entropy, BigramOracle};
+use ssmd::util::args::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let artifacts = args.str("artifacts", "artifacts");
+    let n_samples = args.usize("samples", 96);
+    let seed = args.u64("seed", 0);
+
+    let names = ["owt", "owt_nores", "owt_2c", "sdtt"];
+    let (_rt, manifest, models) = harness::load_models(&artifacts, &names)?;
+    let oracle = BigramOracle::from_spec_file(
+        manifest.specs.get("owt").expect("owt spec").to_str().unwrap())?;
+    let d = EngineModel::seq_len(&models["owt"]);
+
+    // Our D=64 analog of the paper's {32,64,128,256} @ D=1024.
+    let nfe_levels = [8.0, 16.0, 32.0, 48.0];
+    // Sweep settings (Table 4 style).
+    let spec_settings: &[(usize, f64)] =
+        &[(1, 0.005), (1, 0.01), (2, 0.02), (3, 0.04), (4, 0.083),
+          (6, 0.125)];
+    let mdm_steps = [4usize, 8, 16, 24, 32, 48, 64];
+
+    type Curve = Vec<(f64, f64, f64)>; // (nfe, nll, entropy)
+    let metricize = |points: &[harness::CurvePoint]| -> Curve {
+        points
+            .iter()
+            .map(|p| {
+                (
+                    p.nfe,
+                    oracle.mean_nll(&p.samples, d),
+                    unigram_entropy(&p.samples, d),
+                )
+            })
+            .collect()
+    };
+
+    let mut curves: Vec<(String, Curve)> = Vec::new();
+    println!("sweeping masked diffusion (owt draft half)...");
+    curves.push((
+        "Masked Diffusion".into(),
+        metricize(&mdm_sweep(&models["owt"], &mdm_steps, n_samples, seed)?),
+    ));
+    println!("sweeping speculative (ours)...");
+    curves.push((
+        "Speculative (ours)".into(),
+        metricize(&spec_sweep(&models["owt"], spec_settings, n_samples,
+                              seed)?),
+    ));
+    println!("sweeping SDTT...");
+    curves.push((
+        "SDTT".into(),
+        metricize(&mdm_sweep(&models["sdtt"], &mdm_steps, n_samples, seed)?),
+    ));
+    println!("sweeping ablation: no output residual...");
+    curves.push((
+        "No output residual".into(),
+        metricize(&spec_sweep(&models["owt_nores"], spec_settings,
+                              n_samples, seed)?),
+    ));
+    println!("sweeping ablation: 2nc-2c layers...");
+    curves.push((
+        "2nc-2c layers".into(),
+        metricize(&spec_sweep(&models["owt_2c"], spec_settings, n_samples,
+                              seed)?),
+    ));
+
+    println!("\n# Table 1 — oracle NLL (nats/token; judge = true bigram \
+              process) and unigram entropy (nats)\n");
+    println!("data reference: oracle NLL of real corpus windows = entropy \
+              rate {:.3} nats/token\n", oracle.entropy_rate());
+    let mut header = vec!["method".to_string()];
+    for l in nfe_levels {
+        header.push(format!("NLL@{l}"));
+    }
+    for l in nfe_levels {
+        header.push(format!("Ent@{l}"));
+    }
+    let mut t = Table::new(
+        &header.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+    for (name, curve) in &curves {
+        let nll_pts: Vec<(f64, f64)> =
+            curve.iter().map(|&(n, nll, _)| (n, nll)).collect();
+        let ent_pts: Vec<(f64, f64)> =
+            curve.iter().map(|&(n, _, e)| (n, e)).collect();
+        let mut row = vec![name.clone()];
+        for l in nfe_levels {
+            row.push(fmt_opt(interp_at(&nll_pts, l), 3));
+        }
+        for l in nfe_levels {
+            row.push(fmt_opt(interp_at(&ent_pts, l), 3));
+        }
+        t.row(row);
+    }
+    t.print();
+    println!("\nexpected shape (paper): ours matches MDM quality at ~half \
+              the NFE with equal entropy; SDTT shows lower NLL *and* lower \
+              entropy (mode seeking); both ablations trade off worse than \
+              ours.");
+    Ok(())
+}

@@ -1,0 +1,157 @@
+"""AOT export: lower trained inference graphs to HLO *text* artifacts.
+
+For each trained checkpoint this emits, per batch-size bucket:
+
+  draft_b{B}.hlo.txt   tokens [B,D] i32 -> (h [B,D,C] f32, logits [B,D,V] f32)
+  verify_b{B}.hlo.txt  (h [B,D,C] f32, tokens [B,D] i32, sigma [B,D] i32)
+                         -> target logits [B,D,V] f32 (track order)
+
+plus a single ``manifest.json`` the rust coordinator uses for discovery
+(model configs, buckets, file names, data-spec files).
+
+HLO **text** is the interchange format, not ``lowered.compiler_ir("hlo")`` /
+serialized protos: jax >= 0.5 emits 64-bit instruction ids that the crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md). We lower stablehlo -> XlaComputation with
+``return_tuple=True`` and the rust side unwraps with ``to_tuple()``.
+
+Weights are baked into the HLO as constants, so the rust binary is fully
+self-contained once artifacts are built. Python never runs at serve time.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+from compile.config import ModelConfig
+
+# Per-model batch-size buckets. `owt` powers the serving example, so it gets
+# the full dynamic-batcher bucket ladder; experiment harnesses sample with a
+# single large bucket.
+DEFAULT_BUCKETS = {
+    "owt": [1, 4, 16],
+    "text8": [16],
+    "owt_nores": [16],
+    "owt_2c": [16],
+    "protein_head": [16],
+    "sdtt": [16],
+}
+# SDTT is sampled with the plain MDM algorithm: draft executable only.
+DRAFT_ONLY = {"sdtt"}
+
+
+def to_hlo_text(fn, example_args) -> str:
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    # return_tuple=False + single-array outputs everywhere: this PJRT
+    # client cannot read multi-element tuple literals (see make_draft_fn).
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False)
+    # as_hlo_text(True) == print_large_constants=True: the baked weights
+    # MUST appear in the text or the rust-side parser zero-fills them.
+    return comp.as_hlo_text(True)
+
+
+def golden_outputs(name: str, draft_fn, verify_fn, cfg, has_verify: bool):
+    """Deterministic input/output fingerprints for the rust parity test.
+
+    The rust runtime must reproduce these numbers bit-for-bit-ish (f32
+    tolerance) when executing the exported HLO — the core L2<->runtime
+    correctness signal (tests/pjrt_parity.rs).
+    """
+    import numpy as np
+    D = cfg.seq_len
+    rng = np.random.default_rng(20260710)
+    tokens = rng.integers(0, cfg.vocab_size, size=(1, D)).astype(np.int32)
+    tokens[0, ::3] = cfg.mask_id  # some masked positions
+    out = jax.jit(draft_fn)(jnp.asarray(tokens))
+    h, logits = out[..., :cfg.hidden], out[..., cfg.hidden:]
+    out = {
+        "model": name,
+        "tokens": tokens[0].tolist(),
+        "draft_logits_head": np.asarray(logits)[0, 0, :8].tolist(),
+        "draft_logits_mean": float(np.mean(np.asarray(logits))),
+        "h_mean": float(np.mean(np.asarray(h))),
+    }
+    if has_verify:
+        full = rng.integers(0, cfg.vocab_size, size=(1, D)).astype(np.int32)
+        sigma = rng.permutation(D).astype(np.int32)[None]
+        tl = jax.jit(verify_fn)(h, jnp.asarray(full), jnp.asarray(sigma))
+        out.update({
+            "full_tokens": full[0].tolist(),
+            "sigma": sigma[0].tolist(),
+            "target_logits_head": np.asarray(tl)[0, 0, :8].tolist(),
+            "target_logits_mean": float(np.mean(np.asarray(tl))),
+        })
+    return out
+
+
+def export_model(name: str, ckpt_path: str, out_dir: str, buckets):
+    params, cfg = M.load_params(ckpt_path)
+    D, C = cfg.seq_len, cfg.hidden
+    draft_fn = M.make_draft_fn(params, cfg)
+    verify_fn = M.make_verify_fn(params, cfg)
+    entry = {"config": cfg.to_dict(), "buckets": list(buckets),
+             "draft": {}, "verify": {},
+             "golden": golden_outputs(name, draft_fn, verify_fn, cfg,
+                                      name not in DRAFT_ONLY)}
+    for B in buckets:
+        tok_spec = jax.ShapeDtypeStruct((B, D), jnp.int32)
+        h_spec = jax.ShapeDtypeStruct((B, D, C), jnp.float32)
+        sig_spec = jax.ShapeDtypeStruct((B, D), jnp.int32)
+
+        fname = f"{name}_draft_b{B}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(to_hlo_text(draft_fn, (tok_spec,)))
+        entry["draft"][str(B)] = fname
+        print(f"  wrote {fname}", flush=True)
+
+        if name not in DRAFT_ONLY:
+            fname = f"{name}_verify_b{B}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(to_hlo_text(verify_fn, (h_spec, tok_spec, sig_spec)))
+            entry["verify"][str(B)] = fname
+            print(f"  wrote {fname}", flush=True)
+    return entry
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--runs", default="runs")
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default=",".join(DEFAULT_BUCKETS))
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"models": {}, "specs": {}}
+    for name in args.models.split(","):
+        ckpt = os.path.join(args.runs, name, "ckpt.npz")
+        if not os.path.exists(ckpt):
+            print(f"skipping {name}: no checkpoint at {ckpt}", flush=True)
+            continue
+        print(f"exporting {name} from {ckpt}", flush=True)
+        manifest["models"][name] = export_model(
+            name, ckpt, args.out, DEFAULT_BUCKETS.get(name, [16]))
+
+    # Data-generator specs used by the rust oracle scorers.
+    for spec in ("text8_spec.json", "owt_spec.json", "protein_spec.json"):
+        src = os.path.join(args.runs, spec)
+        if os.path.exists(src):
+            shutil.copy(src, os.path.join(args.out, spec))
+            manifest["specs"][spec.split("_")[0]] = spec
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"manifest written to {args.out}/manifest.json", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,99 @@
+"""Model configuration for the hybrid non-causal / causal SSMD transformer.
+
+The config is shared by training (python/train), AOT export (compile/aot.py)
+and the pytest suite. It is serialized into artifacts/manifest.json so the
+rust coordinator can discover shapes without re-parsing HLO.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Hyperparameters of the hybrid SSMD transformer.
+
+    Attributes:
+      vocab_size: number of *data* categories S. The mask token id is
+        ``vocab_size`` (i.e. M = S + 1 in the paper, 0-indexed here), so the
+        embedding table has ``vocab_size + 1`` rows.
+      seq_len: D, the (fixed) sequence length.
+      hidden: C, residual stream width.
+      heads: H, attention heads. ``hidden % heads == 0``.
+      ffn: F, feed-forward hidden width.
+      n_noncausal: number of non-causal (any-to-any) blocks.
+      n_causal: number of sigma-GPT causal blocks (paper: 1 is best).
+      residual_out: whether the causal output adds the non-causal hidden of
+        the *predicted* position before the head (Fig. 1). Ablation: False.
+      dropout: dropout rate (training only; inference graphs are det.).
+    """
+
+    vocab_size: int
+    seq_len: int
+    hidden: int = 64
+    heads: int = 4
+    ffn: int = 256
+    n_noncausal: int = 3
+    n_causal: int = 1
+    residual_out: bool = True
+    dropout: float = 0.0
+
+    @property
+    def mask_id(self) -> int:
+        return self.vocab_size
+
+    @property
+    def n_embed(self) -> int:
+        return self.vocab_size + 1
+
+    @property
+    def head_dim(self) -> int:
+        assert self.hidden % self.heads == 0
+        return self.hidden // self.heads
+
+    @property
+    def n_layers(self) -> int:
+        return self.n_noncausal + self.n_causal
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_dict(d: Dict[str, Any]) -> "ModelConfig":
+        fields = {f.name for f in dataclasses.fields(ModelConfig)}
+        return ModelConfig(**{k: v for k, v in d.items() if k in fields})
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), indent=2, sort_keys=True)
+
+    @staticmethod
+    def from_json(s: str) -> "ModelConfig":
+        return ModelConfig.from_dict(json.loads(s))
+
+
+# Preset configs used by the reproduction experiments. Small enough to train
+# on the single-core CPU testbed, large enough to exhibit the paper's
+# mechanisms (Fig. 2 loss split, Fig. 3/4 NFE-quality trade-off).
+def text8_config() -> ModelConfig:
+    """Char-level synthetic-text8 model (paper Sec. 5.1: 11nc+1c)."""
+    return ModelConfig(vocab_size=27, seq_len=64, hidden=64, heads=4,
+                       ffn=256, n_noncausal=3, n_causal=1)
+
+
+def owt_config(**kw) -> ModelConfig:
+    """Word-level synthetic-corpus model (paper Sec. 5.2 analog)."""
+    base = dict(vocab_size=256, seq_len=64, hidden=64, heads=4, ffn=256,
+                n_noncausal=3, n_causal=1)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def protein_config(**kw) -> ModelConfig:
+    """HMM-protein model (paper Sec. 5.3 analog: frozen backbone + 1 causal)."""
+    base = dict(vocab_size=20, seq_len=64, hidden=64, heads=4, ffn=256,
+                n_noncausal=4, n_causal=1)
+    base.update(kw)
+    return ModelConfig(**base)

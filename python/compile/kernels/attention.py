@@ -1,0 +1,195 @@
+"""L1 Pallas kernel: fused masked flash-attention.
+
+This is the compute hot-spot of both halves of the hybrid SSMD transformer:
+
+* the non-causal draft stack uses **any-to-any** attention (zero bias);
+* the sigma-GPT causal verify block uses a **causal** bias applied to the
+  permuted sequence.
+
+One kernel serves both: QK^T -> additive bias -> online (flash-style) softmax
+-> V, tiled over (batch, head, query-block) with a running (max, sum, acc)
+carried across key blocks so only (block_q x block_k) score tiles ever live in
+VMEM.
+
+Hardware adaptation (DESIGN.md "Hardware-Adaptation"): the paper's models run
+on TPU; we tile for VMEM via BlockSpecs (q/k blocks of 64, f32 accumulation)
+and keep the two matmuls MXU-shaped. ``interpret=True`` is mandatory on this
+CPU testbed — real-TPU lowering emits a Mosaic custom-call the CPU PJRT
+plugin cannot execute — so the kernel is validated for *correctness* here and
+its TPU efficiency is estimated analytically in DESIGN.md / EXPERIMENTS.md
+(Perf section).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, bias_ref, o_ref, *, block_k: int,
+                 scale: float, kv_len: int):
+    """Pallas kernel body for one (batch*head, q-block) grid cell.
+
+    Refs:
+      q_ref:    [block_q, dk]   query tile (VMEM)
+      k_ref:    [kv_len, dk]    full keys for this head (VMEM)
+      v_ref:    [kv_len, dk]    full values for this head (VMEM)
+      bias_ref: [block_q, kv_len] additive bias tile (VMEM)
+      o_ref:    [block_q, dk]   output tile (VMEM)
+    """
+    q = q_ref[...].astype(jnp.float32) * scale
+    block_q, dk = q.shape
+    n_kb = kv_len // block_k
+
+    def body(kb, carry):
+        m_prev, l_prev, acc = carry
+        k = k_ref[pl.dslice(kb * block_k, block_k), :].astype(jnp.float32)
+        v = v_ref[pl.dslice(kb * block_k, block_k), :].astype(jnp.float32)
+        b = bias_ref[:, pl.dslice(kb * block_k, block_k)].astype(jnp.float32)
+        s = q @ k.T + b  # [block_q, block_k]
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        # Rescale previous accumulator; accumulate current block.
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + p @ v
+        return m_new, l_new, acc
+
+    m0 = jnp.full((block_q,), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((block_q,), dtype=jnp.float32)
+    acc0 = jnp.zeros((block_q, dk), dtype=jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_kb, body, (m0, l0, acc0))
+    # Guard against a degenerate all-underflow row (the finite sentinel
+    # bias keeps l > 0 in practice; ref.py mirrors this guard).
+    l = jnp.where(l == 0.0, 1.0, l)
+    o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def _pick_block(n: int, pref: int) -> int:
+    """Largest divisor of ``n`` that is <= pref (VMEM-friendly tile size)."""
+    b = min(pref, n)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def _attention_vjp(q, k, v, bias, block_q, block_k):
+    return _attention_impl(q, k, v, bias, block_q, block_k)
+
+
+def _attention_fwd(q, k, v, bias, block_q, block_k):
+    o = _attention_impl(q, k, v, bias, block_q, block_k)
+    return o, (q, k, v, bias)
+
+
+def _attention_bwd(block_q, block_k, res, do):
+    """Analytic attention backward (pallas_call has no autodiff rule in
+    interpret mode; training recomputes probabilities in pure jnp — the
+    standard flash-attention recompute strategy)."""
+    q, k, v, bias = res
+    B, H, D, dk = q.shape
+    scale = 1.0 / math.sqrt(dk)
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    dof = do.astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", qf, kf) * scale + bias[None, None]
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    l = jnp.where(l == 0.0, 1.0, l)
+    p = p / l
+    dv = jnp.einsum("bhqk,bhqd->bhkd", p, dof)
+    dp = jnp.einsum("bhqd,bhkd->bhqk", dof, vf)
+    ds = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))
+    dq = jnp.einsum("bhqk,bhkd->bhqd", ds, kf) * scale
+    dk_ = jnp.einsum("bhqk,bhqd->bhkd", ds, qf) * scale
+    dbias = jnp.sum(ds, axis=(0, 1))
+    return (dq.astype(q.dtype), dk_.astype(k.dtype), dv.astype(v.dtype),
+            dbias.astype(bias.dtype))
+
+
+_attention_vjp.defvjp(_attention_fwd, _attention_bwd)
+
+
+def masked_flash_attention(q, k, v, bias, *, block_q: int = 64,
+                           block_k: int = 64):
+    """Public entry point (differentiable). See `_attention_impl`."""
+    return _attention_vjp(q, k, v, bias, block_q, block_k)
+
+
+def _attention_impl(q, k, v, bias, block_q: int = 64, block_k: int = 64):
+    """Fused attention with an additive bias shared across batch and heads.
+
+    Args:
+      q, k, v: [B, H, D, dk] arrays (any float dtype; accumulated in f32).
+      bias: [D, D] additive attention bias (0 = attend, -inf = masked).
+      block_q, block_k: tile sizes; rounded down to divisors of D.
+
+    Returns:
+      [B, H, D, dk] attention output, dtype of ``q``.
+    """
+    B, H, D, dk = q.shape
+    assert k.shape == (B, H, D, dk) and v.shape == (B, H, D, dk)
+    assert bias.shape == (D, D), bias.shape
+    bq = _pick_block(D, block_q)
+    bk = _pick_block(D, block_k)
+    scale = 1.0 / math.sqrt(dk)
+
+    kernel = functools.partial(_attn_kernel, block_k=bk, scale=scale,
+                               kv_len=D)
+    qf = q.reshape(B * H, D, dk)
+    kf = k.reshape(B * H, D, dk)
+    vf = v.reshape(B * H, D, dk)
+    grid = (B * H, D // bq)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, bq, dk), lambda bh, qb: (bh, qb, 0)),
+            pl.BlockSpec((None, D, dk), lambda bh, qb: (bh, 0, 0)),
+            pl.BlockSpec((None, D, dk), lambda bh, qb: (bh, 0, 0)),
+            pl.BlockSpec((bq, D), lambda bh, qb: (qb, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, bq, dk), lambda bh, qb: (bh, qb, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, D, dk), q.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls.
+    )(qf, kf, vf, bias)
+    return out.reshape(B, H, D, dk)
+
+
+def causal_bias(D: int) -> jnp.ndarray:
+    """Standard lower-triangular causal additive bias [D, D]."""
+    i = jnp.arange(D)
+    return jnp.where(i[:, None] >= i[None, :], 0.0, NEG_INF).astype(jnp.float32)
+
+
+def zero_bias(D: int) -> jnp.ndarray:
+    """Any-to-any (non-causal) bias: all zeros."""
+    return jnp.zeros((D, D), dtype=jnp.float32)
+
+
+def vmem_footprint_bytes(D: int, dk: int, block_q: int = 64,
+                         block_k: int = 64, dtype_bytes: int = 4) -> int:
+    """Analytic VMEM footprint of one grid cell (perf-model input).
+
+    q tile + k/v residents + bias tile + score tile + accumulator.
+    Used by the Perf section to check we stay under ~16 MiB/core VMEM and to
+    estimate MXU utilization on a hypothetical TPU deployment.
+    """
+    bq = _pick_block(D, block_q)
+    bk = _pick_block(D, block_k)
+    q_t = bq * dk
+    kv = 2 * D * dk
+    bias_t = bq * D
+    score = bq * bk
+    acc = bq * dk + 2 * bq
+    return (q_t + kv + bias_t + score + acc) * dtype_bytes

@@ -1,0 +1,38 @@
+"""Pure-jnp correctness oracle for the Pallas attention kernel.
+
+Deliberately naive: materializes the full [B, H, D, D] score tensor and uses
+plain softmax math. Every numerical choice (f32 accumulation, scale, bias
+semantics, fully-masked-row -> zeros) mirrors the kernel contract so that
+``assert_allclose(kernel, ref)`` is the core L1 correctness signal.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def reference_attention(q, k, v, bias):
+    """Naive softmax attention. Same signature/semantics as the kernel.
+
+    Args:
+      q, k, v: [B, H, D, dk].
+      bias: [D, D] additive bias.
+    Returns:
+      [B, H, D, dk] in the dtype of q.
+    """
+    B, H, D, dk = q.shape
+    scale = 1.0 / math.sqrt(dk)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    s = s + bias.astype(jnp.float32)[None, None]
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    # Degenerate all-underflow guard, mirroring the kernel.
+    l = jnp.where(l == 0.0, 1.0, l)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p / l, v.astype(jnp.float32))
+    return o.astype(q.dtype)

@@ -1,0 +1,314 @@
+"""L2: hybrid non-causal / sigma-GPT causal SSMD transformer in JAX.
+
+Implements the architecture of Fig. 1:
+
+* **non-causal stack** — a standard MDM transformer: token + mask embeddings,
+  pre-LN blocks with any-to-any attention (L1 Pallas kernel, zero bias) and
+  RoPE positions, producing hidden states ``h`` and the factorized *draft*
+  distribution over masked positions.
+* **causal stack** — sigma-GPT blocks over the *permuted* sequence with a
+  causal attention bias and double RoPE (split channels: first half rotated by
+  the current ordering position sigma(j), second half by the *next* position
+  sigma(j+1), exactly App. G.3). The causal input of track j is a projection
+  of [h_perm[j]; h_perm[j+1]; embed(token_perm[j])]. A residual output
+  connection adds ``h_perm[j+1]`` (the non-causal hidden of the *predicted*
+  position) before the shared output head — the Fig. 1 wiring; disabled by
+  ``cfg.residual_out=False`` for the Table 1 ablation.
+
+Conventions (0-indexed, shared with the rust coordinator):
+  * mask token id = ``cfg.vocab_size``;
+  * ``sigma`` [B, D] is the generation ordering: ``sigma[b, j]`` is the
+    sequence position revealed j-th;
+  * draft logits are in **sequence-position order** (slot p predicts the
+    token at position p);
+  * verify logits are in **track order**: track j predicts the token at
+    position ``sigma[b, j+1]``; track D-1 wraps around and must not be read
+    (ordering position 0's target is the draft distribution — the paper's
+    "first position" rule).
+
+Python is build-time only: these functions are trained (python/train) and
+AOT-lowered (compile/aot.py) to HLO text executed by the rust runtime.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from compile.config import ModelConfig
+from compile.kernels.attention import (causal_bias, masked_flash_attention,
+                                       zero_bias)
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+def _init_block(key, C: int, F: int) -> Params:
+    k = jax.random.split(key, 6)
+    s = lambda *sh: 1.0 / jnp.sqrt(jnp.asarray(sh[0], jnp.float32))
+    return {
+        "ln1_g": jnp.ones((C,)), "ln1_b": jnp.zeros((C,)),
+        "wq": jax.random.normal(k[0], (C, C)) * s(C),
+        "wk": jax.random.normal(k[1], (C, C)) * s(C),
+        "wv": jax.random.normal(k[2], (C, C)) * s(C),
+        "wo": jax.random.normal(k[3], (C, C)) * s(C),
+        "ln2_g": jnp.ones((C,)), "ln2_b": jnp.zeros((C,)),
+        "w1": jax.random.normal(k[4], (C, F)) * s(C),
+        "b1": jnp.zeros((F,)),
+        "w2": jax.random.normal(k[5], (F, C)) * s(F),
+        "b2": jnp.zeros((C,)),
+    }
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    """Initialize the full hybrid model parameter pytree."""
+    C, F = cfg.hidden, cfg.ffn
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    nc = [_init_block(keys[i], C, F) for i in range(cfg.n_noncausal)]
+    cb = [_init_block(keys[cfg.n_noncausal + i], C, F)
+          for i in range(cfg.n_causal)]
+    k_emb, k_out, k_in = keys[-3], keys[-2], keys[-1]
+    return {
+        "embed": jax.random.normal(k_emb, (cfg.n_embed, C)) * 0.02,
+        "out_w": jax.random.normal(k_out, (C, cfg.vocab_size)) / jnp.sqrt(C),
+        "out_b": jnp.zeros((cfg.vocab_size,)),
+        "nc_blocks": nc,
+        "nc_lnf_g": jnp.ones((C,)), "nc_lnf_b": jnp.zeros((C,)),
+        # Causal half: input projection of [h_cur; h_next; tok_emb] -> C.
+        "c_in_w": jax.random.normal(k_in, (3 * C, C)) / jnp.sqrt(3 * C),
+        "c_in_b": jnp.zeros((C,)),
+        "c_blocks": cb,
+        "c_lnf_g": jnp.ones((C,)), "c_lnf_b": jnp.zeros((C,)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Primitive ops
+# ---------------------------------------------------------------------------
+
+def layer_norm(x, g, b, eps: float = 1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _rope_angles(pos, n_freq: int, base: float = 10000.0):
+    """pos [..., D] -> angles [..., D, n_freq]."""
+    freqs = base ** (-jnp.arange(n_freq, dtype=jnp.float32) / n_freq)
+    return pos[..., None].astype(jnp.float32) * freqs
+
+
+def _apply_rot(x, angles):
+    """Rotate channel pairs of x [..., 2*n_freq] by angles [..., n_freq]."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c, s = jnp.cos(angles), jnp.sin(angles)
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+
+
+def rope_single(x, pos):
+    """Standard RoPE: x [B, H, D, dk], pos [B, D] (or [D])."""
+    B, H, D, dk = x.shape
+    if pos.ndim == 1:
+        pos = jnp.broadcast_to(pos[None], (B, D))
+    ang = _rope_angles(pos, dk // 2)[:, None]  # [B, 1, D, dk/2]
+    return _apply_rot(x, ang)
+
+
+def rope_double(x, pos_cur, pos_next):
+    """Split-channel double RoPE (App. G.3).
+
+    First half of head channels rotated by the current ordering position,
+    second half by the next position in the ordering.
+    """
+    B, H, D, dk = x.shape
+    xa, xb = jnp.split(x, 2, axis=-1)
+    ang_c = _rope_angles(pos_cur, dk // 4)[:, None]
+    ang_n = _rope_angles(pos_next, dk // 4)[:, None]
+    return jnp.concatenate([_apply_rot(xa, ang_c), _apply_rot(xb, ang_n)],
+                           axis=-1)
+
+
+def _heads(x, H):
+    B, D, C = x.shape
+    return x.reshape(B, D, H, C // H).transpose(0, 2, 1, 3)
+
+
+def _unheads(x):
+    B, H, D, dk = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(B, D, H * dk)
+
+
+def _block(p: Params, x, bias, cfg: ModelConfig, rope_fn):
+    """One pre-LN transformer block: attention + MLP, residual stream."""
+    h = layer_norm(x, p["ln1_g"], p["ln1_b"])
+    q = rope_fn(_heads(h @ p["wq"], cfg.heads))
+    k = rope_fn(_heads(h @ p["wk"], cfg.heads))
+    v = _heads(h @ p["wv"], cfg.heads)
+    a = masked_flash_attention(q, k, v, bias)
+    x = x + _unheads(a) @ p["wo"]
+    h = layer_norm(x, p["ln2_g"], p["ln2_b"])
+    x = x + jax.nn.gelu(h @ p["w1"] + p["b1"]) @ p["w2"] + p["b2"]
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def noncausal_hiddens(params: Params, cfg: ModelConfig, tokens):
+    """Non-causal stack: tokens [B, D] (mask id allowed) -> h [B, D, C]."""
+    B, D = tokens.shape
+    x = params["embed"][tokens]
+    bias = zero_bias(D)
+    pos = jnp.arange(D)
+    rope_fn = lambda t: rope_single(t, pos)
+    for p in params["nc_blocks"]:
+        x = _block(p, x, bias, cfg, rope_fn)
+    return layer_norm(x, params["nc_lnf_g"], params["nc_lnf_b"])
+
+
+def head_logits(params: Params, h):
+    """Shared output head: hiddens -> logits over the data vocabulary."""
+    return h @ params["out_w"] + params["out_b"]
+
+
+def draft_forward(params: Params, cfg: ModelConfig, tokens):
+    """Full draft pass: tokens -> (h, draft_logits in sequence order)."""
+    h = noncausal_hiddens(params, cfg, tokens)
+    return h, head_logits(params, h)
+
+
+def verify_forward(params: Params, cfg: ModelConfig, h, tokens, sigma):
+    """Causal verify pass.
+
+    Args:
+      h: [B, D, C] non-causal hiddens (from ``noncausal_hiddens`` run on the
+        *masked* context — the theta(x^sigma(1:i)) conditioning).
+      tokens: [B, D] full token sequence in sequence order: real revealed
+        values where revealed, draft values elsewhere. No mask tokens.
+      sigma: [B, D] int32 generation ordering.
+
+    Returns:
+      [B, D, V] target logits in **track order**: track j predicts the token
+      at sequence position ``sigma[b, j+1]``; track D-1 is wrap-around filler.
+    """
+    B, D = tokens.shape
+    hp = jnp.take_along_axis(h, sigma[..., None], axis=1)
+    tokp = jnp.take_along_axis(tokens, sigma, axis=1)
+    hp_next = jnp.roll(hp, -1, axis=1)
+    sig_next = jnp.roll(sigma, -1, axis=1)
+    emb = params["embed"][tokp]
+    x = jnp.concatenate([hp, hp_next, emb], axis=-1) @ params["c_in_w"] \
+        + params["c_in_b"]
+    bias = causal_bias(D)
+    rope_fn = lambda t: rope_double(t, sigma, sig_next)
+    for p in params["c_blocks"]:
+        x = _block(p, x, bias, cfg, rope_fn)
+    x = layer_norm(x, params["c_lnf_g"], params["c_lnf_b"])
+    if cfg.residual_out:
+        # Fig. 1 output residual: add the non-causal hidden state of the
+        # position being predicted. Aligns draft and target distributions.
+        x = x + hp_next
+    return head_logits(params, x)
+
+
+def hybrid_forward(params: Params, cfg: ModelConfig, masked_tokens,
+                   full_tokens, sigma):
+    """Training-path forward: one pass producing draft AND target logits."""
+    h, draft_logits = draft_forward(params, cfg, masked_tokens)
+    target_logits = verify_forward(params, cfg, h, full_tokens, sigma)
+    return draft_logits, target_logits
+
+
+# ---------------------------------------------------------------------------
+# Inference graphs for AOT export (closed over trained params)
+# ---------------------------------------------------------------------------
+
+def make_draft_fn(params: Params, cfg: ModelConfig):
+    """tokens [B, D] i32 -> concat([h, logits], -1) as [B, D, C+V] f32.
+
+    Single-array output: the image's PJRT client (xla_extension 0.5.1 via
+    the rust `xla` crate) does not untuple multi-output roots, and
+    multi-element tuple literals read back zeroed. The rust runtime splits
+    the last axis back into (h [B,D,C], logits [B,D,V]).
+    """
+
+    def fn(tokens):
+        h, logits = draft_forward(params, cfg, tokens)
+        return jnp.concatenate(
+            [h.astype(jnp.float32), logits.astype(jnp.float32)], axis=-1)
+
+    return fn
+
+
+def make_verify_fn(params: Params, cfg: ModelConfig):
+    """(h, tokens, sigma) -> target logits [B, D, V] in track order."""
+
+    def fn(h, tokens, sigma):
+        return verify_forward(params, cfg, h, tokens, sigma).astype(
+            jnp.float32)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Parameter (de)serialization — npz with flattened path keys
+# ---------------------------------------------------------------------------
+
+def flatten_params(params: Params, prefix: str = "") -> Dict[str, Any]:
+    flat = {}
+    if isinstance(params, dict):
+        for k, v in params.items():
+            flat.update(flatten_params(v, f"{prefix}{k}/"))
+    elif isinstance(params, (list, tuple)):
+        for i, v in enumerate(params):
+            flat.update(flatten_params(v, f"{prefix}{i}/"))
+    else:
+        flat[prefix[:-1]] = params
+    return flat
+
+
+def unflatten_params(flat: Dict[str, Any]) -> Params:
+    root: Dict[str, Any] = {}
+    for path, v in flat.items():
+        parts = path.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = jnp.asarray(v)
+
+    def listify(node):
+        if not isinstance(node, dict):
+            return node
+        keys = list(node.keys())
+        if keys and all(k.isdigit() for k in keys):
+            return [listify(node[str(i)]) for i in range(len(keys))]
+        return {k: listify(v) for k, v in node.items()}
+
+    return listify(root)
+
+
+def save_params(path: str, params: Params, cfg: ModelConfig) -> None:
+    import numpy as np
+    flat = {k: np.asarray(v) for k, v in flatten_params(params).items()}
+    flat["__config__"] = np.frombuffer(
+        cfg.to_json().encode("utf-8"), dtype=np.uint8)
+    np.savez(path, **flat)
+
+
+def load_params(path: str):
+    import numpy as np
+    data = dict(np.load(path))
+    cfg = ModelConfig.from_json(
+        bytes(data.pop("__config__").tobytes()).decode("utf-8"))
+    return unflatten_params(data), cfg
+
+
+def param_count(params: Params) -> int:
+    return sum(int(v.size) for v in flatten_params(params).values())

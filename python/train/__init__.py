@@ -1,0 +1,1 @@
+# Build-time training package: synthetic data, Eq. 9 loss, Adam, drivers.

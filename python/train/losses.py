@@ -1,0 +1,115 @@
+"""Training objectives.
+
+Eq. 9 of the paper: jointly maximize the masked (non-causal, factorized) and
+any-order AR (causal) cross-entropies with the D/(D-i) weighting that
+normalizes by the number of masked positions. With per-token normalization
+the weighted sum over masked positions is exactly the *mean* cross-entropy
+over masked positions, which is what we log (nats/token, comparable between
+the two components — Fig. 2/6/7).
+
+Conventions follow compile/model.py: draft logits in sequence order, target
+logits in track order (track j predicts position sigma[j+1]); ordering
+position 0 falls back to the draft distribution (first-position rule), so its
+causal loss term equals its non-causal term.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile import model as M
+from compile.config import ModelConfig
+
+
+def sample_masking(key, cfg: ModelConfig, batch: int):
+    """Sample (sigma, i) per example with the cosine MDM schedule.
+
+    t ~ U(0,1); mask probability alpha_t = cos(pi/2 * (1 - t)); the number of
+    masked positions m ~ Binomial(D, alpha_t) clipped to [1, D] (p(i=D)=0).
+    Masking the *last m* positions of a uniform sigma is distributionally the
+    same as masking each position independently w.p. alpha_t.
+
+    Returns:
+      sigma: [B, D] int32 orderings.
+      n_revealed: [B] int32, i = D - m.
+    """
+    D = cfg.seq_len
+    k1, k2, k3 = jax.random.split(key, 3)
+    sigma = jax.vmap(lambda k: jax.random.permutation(k, D))(
+        jax.random.split(k1, batch)).astype(jnp.int32)
+    t = jax.random.uniform(k2, (batch,))
+    alpha = jnp.cos(jnp.pi / 2.0 * (1.0 - t))
+    m = jnp.sum(jax.random.uniform(k3, (batch, D)) < alpha[:, None], axis=1)
+    m = jnp.clip(m, 1, D).astype(jnp.int32)
+    return sigma, D - m
+
+
+def apply_masking(cfg: ModelConfig, x, sigma, n_revealed):
+    """Mask positions sigma(i:D) (0-indexed) with the mask token."""
+    B, D = x.shape
+    rank = jnp.argsort(sigma, axis=1)  # rank[b, pos] = index of pos in sigma
+    masked = rank >= n_revealed[:, None]
+    return jnp.where(masked, cfg.mask_id, x), masked
+
+
+def hybrid_losses(params, cfg: ModelConfig, x, sigma, n_revealed):
+    """Per-component mean-over-masked cross entropies (nats/token).
+
+    Returns (loss_noncausal, loss_causal); total Eq. 9 loss = sum.
+    """
+    B, D = x.shape
+    masked_tokens, masked = apply_masking(cfg, x, sigma, n_revealed)
+    draft_logits, target_logits = M.hybrid_forward(
+        params, cfg, masked_tokens, x, sigma)
+
+    logp_draft = jax.nn.log_softmax(draft_logits, axis=-1)
+    nll_draft = -jnp.take_along_axis(
+        logp_draft, x[..., None], axis=-1)[..., 0]  # [B, D] seq order
+
+    # Causal: track j predicts position sigma[j+1]. Build per-ordering-
+    # position NLL: ordering position d>=1 reads track d-1; position 0 reads
+    # the draft NLL of sigma[:, 0].
+    logp_tgt = jax.nn.log_softmax(target_logits, axis=-1)
+    x_perm = jnp.take_along_axis(x, sigma, axis=1)  # [B, D] ordering order
+    x_next = jnp.roll(x_perm, -1, axis=1)
+    nll_tracks = -jnp.take_along_axis(
+        logp_tgt, x_next[..., None], axis=-1)[..., 0]  # track j -> pos j+1
+    nll_causal_ord = jnp.concatenate(
+        [jnp.take_along_axis(nll_draft, sigma[:, :1], axis=1),
+         nll_tracks[:, :-1]], axis=1)  # [B, D] per ordering position
+
+    rank = jnp.argsort(sigma, axis=1)
+    m = (D - n_revealed).astype(jnp.float32)  # number of masked, >= 1
+    w_nc = masked.astype(jnp.float32) / m[:, None]
+    loss_nc = jnp.sum(nll_draft * w_nc) / B
+
+    ord_idx = jnp.arange(D)[None, :]
+    masked_ord = ord_idx >= n_revealed[:, None]
+    w_c = masked_ord.astype(jnp.float32) / m[:, None]
+    loss_c = jnp.sum(nll_causal_ord * w_c) / B
+    return loss_nc, loss_c
+
+
+def eq9_loss(params, cfg: ModelConfig, x, sigma, n_revealed):
+    lnc, lc = hybrid_losses(params, cfg, x, sigma, n_revealed)
+    return lnc + lc, (lnc, lc)
+
+
+def mdm_loss(params, cfg: ModelConfig, x, sigma, n_revealed):
+    """Non-causal-only loss (standard MDM objective; backbone pretraining)."""
+    masked_tokens, masked = apply_masking(cfg, x, sigma, n_revealed)
+    _, draft_logits = M.draft_forward(params, cfg, masked_tokens)
+    logp = jax.nn.log_softmax(draft_logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, x[..., None], axis=-1)[..., 0]
+    B, D = x.shape
+    m = (D - n_revealed).astype(jnp.float32)
+    w = masked.astype(jnp.float32) / m[:, None]
+    loss = jnp.sum(nll * w) / B
+    return loss, (loss, jnp.zeros(()))
+
+
+def causal_only_loss(params, cfg: ModelConfig, x, sigma, n_revealed):
+    """Causal-component-only loss (frozen-backbone fine-tuning, Sec. 5.3)."""
+    lnc, lc = hybrid_losses(params, cfg, x, sigma, n_revealed)
+    return lc, (lnc, lc)

@@ -1,0 +1,77 @@
+"""Minimal Adam + schedules (optax is not available in this environment).
+
+Pure-pytree implementation with global-norm clipping, linear warmup + cosine
+decay (the paper's schedule, App. G.1), weight decay, and an optional
+``trainable`` mask pytree for frozen-backbone fine-tuning (Sec. 5.3).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def adam_init(params) -> Dict[str, Any]:
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros,
+            "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def warmup_cosine(step, *, peak_lr: float, warmup: int, total: int,
+                  floor: float = 0.0):
+    step = step.astype(jnp.float32)
+    warm = peak_lr * step / jnp.maximum(1.0, float(warmup))
+    prog = jnp.clip((step - warmup) / jnp.maximum(1.0, float(total - warmup)),
+                    0.0, 1.0)
+    cos = floor + (peak_lr - floor) * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), gn
+
+
+def adam_update(params, grads, state, *, lr, b1: float = 0.9,
+                b2: float = 0.999, eps: float = 1e-8,
+                weight_decay: float = 0.0,
+                trainable: Optional[Any] = None):
+    """One Adam step. ``trainable`` is an optional pytree of 0/1 floats with
+    the same structure as params; frozen leaves receive zero update."""
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(
+        lambda mm, g: b1 * mm + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(
+        lambda vv, g: b2 * vv + (1 - b2) * g * g, state["v"], grads)
+    bc1 = 1 - b1 ** t.astype(jnp.float32)
+    bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+    def upd(p, mm, vv, mask):
+        step = lr * (mm / bc1) / (jnp.sqrt(vv / bc2) + eps)
+        step = step + lr * weight_decay * p
+        return p - mask * step
+
+    if trainable is None:
+        trainable = jax.tree_util.tree_map(lambda p: 1.0, params)
+    new_params = jax.tree_util.tree_map(upd, params, m, v, trainable)
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def trainable_mask_for_head(params) -> Any:
+    """Mask pytree freezing everything except the causal half (Sec. 5.3:
+    frozen pretrained backbone, train only the added causal block)."""
+    causal_keys = {"c_in_w", "c_in_b", "c_blocks", "c_lnf_g", "c_lnf_b"}
+
+    def build(node, path=()):
+        if isinstance(node, dict):
+            return {k: build(v, path + (k,)) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return [build(v, path) for v in node]
+        return 1.0 if (path and path[0] in causal_keys) else 0.0
+
+    return build(params)

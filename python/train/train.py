@@ -1,0 +1,161 @@
+"""Training driver (build-time only).
+
+Tasks (each writes runs/<name>/{losses.csv, ckpt.npz, spec json}):
+
+  text8            hybrid model on char-level synthetic text8   (Fig. 2/3, Tab. 2)
+  owt              hybrid model on word-level corpus            (Tab. 1, Fig. 6)
+  owt_nores        Tab. 1 ablation: residual_out = False
+  owt_2c           Tab. 1 ablation: 2 causal blocks (paper: 10nc-2c)
+  protein_backbone MDM-only backbone on the HMM corpus          (Fig. 4, Fig. 7)
+  protein_head     frozen backbone + 1 causal block fine-tune   (Fig. 4, Fig. 7)
+
+Usage: python -m train.train --task text8 --steps 1200 --batch 32 --out runs
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model as M
+from compile.config import ModelConfig, owt_config, protein_config, text8_config
+from train import data as D
+from train import hmm as H
+from train import losses as L
+from train import optim as O
+
+
+def make_step(cfg: ModelConfig, loss_fn, lr_kw, trainable=None):
+    @functools.partial(jax.jit, donate_argnums=(0, 1))
+    def step(params, opt, x, sigma, n_rev):
+        (loss, (lnc, lc)), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, x, sigma, n_rev), has_aux=True)(params)
+        grads, gn = O.clip_by_global_norm(grads, 1.0)
+        lr = O.warmup_cosine(opt["t"] + 1, **lr_kw)
+        params, opt = O.adam_update(params, grads, opt, lr=lr,
+                                    weight_decay=0.03, trainable=trainable)
+        return params, opt, lnc, lc
+    return step
+
+
+def train_loop(name, cfg, corpus_batch, loss_fn, steps, batch, out_dir,
+               init_from=None, trainable=None, seed=0, log_every=25):
+    os.makedirs(os.path.join(out_dir, name), exist_ok=True)
+    key = jax.random.PRNGKey(seed)
+    if init_from is not None:
+        params, loaded_cfg = M.load_params(init_from)
+        # Extend a backbone checkpoint to a hybrid config if needed: the
+        # causal half is freshly initialized, the rest is copied.
+        if loaded_cfg.n_causal != cfg.n_causal or loaded_cfg != cfg:
+            fresh = M.init_params(key, cfg)
+            for k in params:
+                fresh[k] = params[k]
+            params = fresh
+    else:
+        params = M.init_params(key, cfg)
+    opt = O.adam_init(params)
+    lr_kw = dict(peak_lr=3e-4, warmup=min(200, steps // 10 + 1), total=steps)
+    step = make_step(cfg, loss_fn, lr_kw, trainable)
+    rng = np.random.default_rng(seed + 1)
+    log_path = os.path.join(out_dir, name, "losses.csv")
+    t0 = time.time()
+    # Continued runs append to the existing loss log with a step offset so
+    # Fig. 2/6/7 show the full curve.
+    step_offset = 0
+    mode = "w"
+    if init_from is not None and os.path.exists(log_path):
+        with open(log_path) as f:
+            lines = [l for l in f.read().strip().splitlines()[1:] if l]
+        if lines:
+            step_offset = int(lines[-1].split(",")[0])
+            mode = "a"
+    with open(log_path, mode) as log:
+        if mode == "w":
+            log.write("step,loss_noncausal,loss_causal,elapsed_s\n")
+        ln_acc, lc_acc, n_acc = 0.0, 0.0, 0
+        for it in range(1, steps + 1):
+            x = jnp.asarray(corpus_batch(rng, batch))
+            key, sub = jax.random.split(key)
+            sigma, n_rev = L.sample_masking(sub, cfg, batch)
+            params, opt, lnc, lc = step(params, opt, x, sigma, n_rev)
+            ln_acc += float(lnc); lc_acc += float(lc); n_acc += 1
+            if it % log_every == 0 or it == steps:
+                log.write(f"{it + step_offset},{ln_acc/n_acc:.6f},"
+                          f"{lc_acc/n_acc:.6f},{time.time()-t0:.1f}\n")
+                log.flush()
+                print(f"[{name}] step {it}/{steps} nc={ln_acc/n_acc:.4f} "
+                      f"c={lc_acc/n_acc:.4f} ({time.time()-t0:.0f}s)",
+                      flush=True)
+                ln_acc, lc_acc, n_acc = 0.0, 0.0, 0
+    ckpt = os.path.join(out_dir, name, "ckpt.npz")
+    M.save_params(ckpt, params, cfg)
+    print(f"[{name}] saved {ckpt} ({M.param_count(params)} params, "
+          f"{time.time()-t0:.0f}s)", flush=True)
+    return ckpt
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--task", required=True)
+    ap.add_argument("--steps", type=int, default=1200)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--out", default="runs")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--init-from", default=None)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    char_chain, word_chain = D.default_chains()
+
+    if args.task == "text8":
+        cfg = text8_config()
+        corpus = D.CharCorpus(char_chain, cfg.seq_len)
+        D.save_spec(os.path.join(args.out, "text8_spec.json"),
+                    char_chain.to_spec())
+        train_loop("text8", cfg, corpus.batch, L.eq9_loss, args.steps,
+                   args.batch, args.out, seed=args.seed)
+    elif args.task in ("owt", "owt_nores", "owt_2c"):
+        kw = {}
+        if args.task == "owt_nores":
+            kw["residual_out"] = False
+        if args.task == "owt_2c":
+            kw.update(n_noncausal=2, n_causal=2)
+        cfg = owt_config(**kw)
+        corpus = D.WordCorpus(word_chain, cfg.seq_len)
+        D.save_spec(os.path.join(args.out, "owt_spec.json"),
+                    word_chain.to_spec())
+        train_loop(args.task, cfg, corpus.batch, L.eq9_loss, args.steps,
+                   args.batch, args.out, seed=args.seed)
+    elif args.task == "protein_backbone":
+        cfg = protein_config(n_causal=0)
+        # n_causal=0 is invalid for the hybrid fwd; train MDM loss on a
+        # hybrid-shaped model instead so the checkpoint layout is uniform.
+        cfg = protein_config()
+        hmm = H.default_hmm(cfg.seq_len)
+        hmm.save_spec(os.path.join(args.out, "protein_spec.json"))
+        corpus_batch = lambda rng, b: hmm.batch(rng, b, cfg.seq_len)
+        train_loop("protein_backbone", cfg, corpus_batch, L.mdm_loss,
+                   args.steps, args.batch, args.out, seed=args.seed)
+    elif args.task == "protein_head":
+        cfg = protein_config()
+        hmm = H.default_hmm(cfg.seq_len)
+        corpus_batch = lambda rng, b: hmm.batch(rng, b, cfg.seq_len)
+        init = args.init_from or os.path.join(
+            args.out, "protein_backbone", "ckpt.npz")
+        params0, _ = M.load_params(init)
+        mask = O.trainable_mask_for_head(params0)
+        train_loop("protein_head", cfg, corpus_batch, L.causal_only_loss,
+                   args.steps, args.batch, args.out, init_from=init,
+                   trainable=mask, seed=args.seed)
+    else:
+        raise SystemExit(f"unknown task {args.task}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+//! Engine hot-path benchmarks (mock model — isolates L3 coordinator cost
+//! from PJRT execution, which `benches/runtime.rs` measures separately).
+//!
+//! These are the §Perf numbers for the speculative sampling loop itself:
+//! draft-token sampling, accept/reject sweeps, residual resampling, and the
+//! Prop. 3.1 likelihood DP.
+
+use ssmd::engine::{
+    mdm_sample, speculative_sample, MdmParams, MockModel, Prompt, SpecParams,
+    Window,
+};
+use ssmd::likelihood::{log_likelihood, rejection_posterior, SpecTable};
+use ssmd::util::bench::{bench, print_header, print_result};
+use ssmd::util::rng::Pcg;
+
+fn main() {
+    print_header("engine (mock model, D=64 V=256)");
+    let model = MockModel::new(64, 256, 7);
+
+    for (label, n_verify, dtau) in [
+        ("spec n_verify=1 dtau=0.02", 1usize, 0.02),
+        ("spec n_verify=4 dtau=0.083", 4, 0.083),
+    ] {
+        let params = SpecParams {
+            window: Window::Cosine { dtau },
+            n_verify,
+            ..Default::default()
+        };
+        let mut rng = Pcg::new(1);
+        let prompts = vec![Prompt::empty(64); 16];
+        let r = bench(label, 2, 5, 1.0, || {
+            let _ = speculative_sample(&model, &prompts, &params, &mut rng);
+        });
+        print_result(&r);
+        println!("    -> {:.0} samples/s", r.throughput(16.0));
+    }
+
+    {
+        let params = MdmParams { steps: 32, temperature: 1.0 };
+        let mut rng = Pcg::new(2);
+        let prompts = vec![Prompt::empty(64); 16];
+        let r = bench("mdm K=32", 2, 5, 1.0, || {
+            let _ = mdm_sample(&model, &prompts, &params, &mut rng);
+        });
+        print_result(&r);
+        println!("    -> {:.0} samples/s", r.throughput(16.0));
+    }
+
+    print_header("likelihood (Prop 3.1 / C.2, D=64)");
+    let tokens: Vec<i32> = (0..64).map(|i| (i * 7) % 256).collect();
+    let mut rng = Pcg::new(3);
+    let sigma = rng.permutation(64);
+    let table = SpecTable::from_model(&model, &tokens, &sigma);
+    print_result(&bench("SpecTable::from_model", 1, 3, 0.5, || {
+        let _ = SpecTable::from_model(&model, &tokens, &sigma);
+    }));
+    print_result(&bench("log_likelihood DP", 10, 50, 0.5, || {
+        let _ = log_likelihood(&table);
+    }));
+    print_result(&bench("rejection_posterior DP", 5, 20, 0.5, || {
+        let _ = rejection_posterior(&table);
+    }));
+}

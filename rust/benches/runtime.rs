@@ -1,0 +1,56 @@
+//! PJRT runtime benchmarks: draft / verify executable latency per batch
+//! bucket. This is the L2-side cost the coordinator amortizes via dynamic
+//! batching; per-token cost falling with bucket size is what makes the
+//! batcher worthwhile. Skips gracefully if `artifacts/` is missing.
+
+use ssmd::engine::HybridModel;
+use ssmd::harness;
+use ssmd::util::args::Args;
+use ssmd::util::bench::{bench, print_header, print_result};
+use ssmd::util::rng::Pcg;
+
+fn main() {
+    let args = Args::from_env();
+    let artifacts = args.str("artifacts", "artifacts");
+    if !std::path::Path::new(&artifacts).join("manifest.json").exists() {
+        println!("(runtime bench skipped: no {artifacts}/manifest.json — \
+                  run `make artifacts`)");
+        return;
+    }
+    let (_rt, _m, models) = match harness::load_models(&artifacts, &["owt"]) {
+        Ok(x) => x,
+        Err(e) => {
+            println!("(runtime bench skipped: {e})");
+            return;
+        }
+    };
+    let model = &models["owt"];
+    let d = model.seq_len();
+    let v = model.vocab() as i32;
+    let mut rng = Pcg::new(5);
+
+    print_header("pjrt runtime (owt)");
+    for bucket in model.buckets() {
+        let tokens: Vec<i32> = (0..bucket * d)
+            .map(|_| rng.below(v as usize) as i32)
+            .collect();
+        let r = bench(&format!("draft b{bucket}"), 3, 10, 1.0, || {
+            std::hint::black_box(model.draft(&tokens, bucket));
+        });
+        print_result(&r);
+        println!("    -> {:.0} tokens/s",
+                 r.throughput((bucket * d) as f64));
+
+        let (state, _) = model.draft(&tokens, bucket);
+        let sigma: Vec<i32> = (0..bucket)
+            .flat_map(|_| rng.permutation(d))
+            .collect();
+        let r = bench(&format!("verify b{bucket}"), 3, 10, 1.0, || {
+            std::hint::black_box(model.verify(&state, &tokens, &sigma,
+                                              bucket));
+        });
+        print_result(&r);
+        println!("    -> {:.0} tokens/s",
+                 r.throughput((bucket * d) as f64));
+    }
+}

@@ -1,0 +1,106 @@
+//! End-to-end serving benchmark: full coordinator path (queue -> batcher ->
+//! engine thread -> PJRT) under concurrent load, across batcher settings.
+//! The paper's efficiency claim is NFE; this bench translates it into the
+//! serving currency (samples/s, p50/p95 latency) on this testbed.
+//! Skips gracefully if `artifacts/` is missing.
+
+use std::time::{Duration, Instant};
+
+use ssmd::coordinator::{
+    BatcherConfig, Coordinator, EngineModel, GenRequest, ModelMap,
+    SamplerChoice,
+};
+use ssmd::engine::{MdmParams, SpecParams, Window};
+use ssmd::util::args::Args;
+use ssmd::util::bench::{fmt_duration, print_header, summarize};
+
+fn factory(artifacts: String)
+           -> impl FnOnce() -> anyhow::Result<ModelMap> + Send {
+    move || {
+        let manifest = ssmd::runtime::Manifest::load(&artifacts)?;
+        let runtime = ssmd::runtime::Runtime::cpu()?;
+        let mut map = ModelMap::new();
+        map.insert(
+            "owt".to_string(),
+            Box::new(runtime.load_model(manifest.model("owt")?)?)
+                as Box<dyn EngineModel>,
+        );
+        Ok(map)
+    }
+}
+
+fn drive(c: &Coordinator, sampler: SamplerChoice, clients: usize,
+         reqs: usize) -> (Vec<f64>, f64) {
+    let started = Instant::now();
+    let mut handles = Vec::new();
+    for cl in 0..clients {
+        let cc = c.clone();
+        let s = sampler.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut lat = Vec::new();
+            for r in 0..reqs {
+                let t = Instant::now();
+                cc.generate(GenRequest {
+                    model: "owt".into(),
+                    n_samples: 1,
+                    sampler: s.clone(),
+                    seed: (cl * 100 + r) as u64,
+                    ..Default::default()
+                })
+                .unwrap();
+                lat.push(t.elapsed().as_secs_f64());
+            }
+            lat
+        }));
+    }
+    let mut all = Vec::new();
+    for h in handles {
+        all.extend(h.join().unwrap());
+    }
+    (all, started.elapsed().as_secs_f64())
+}
+
+fn main() {
+    let args = Args::from_env();
+    let artifacts = args.str("artifacts", "artifacts");
+    if !std::path::Path::new(&artifacts).join("manifest.json").exists() {
+        println!("(serving bench skipped: no {artifacts}/manifest.json — \
+                  run `make artifacts`)");
+        return;
+    }
+    let clients = args.usize("clients", 4);
+    let reqs = args.usize("requests", 4);
+
+    print_header("end-to-end serving (owt, concurrent clients)");
+    for (label, wait_ms) in [("batch-wait 0ms", 0u64), ("batch-wait 10ms", 10)]
+    {
+        let c = Coordinator::start(
+            factory(artifacts.clone()),
+            BatcherConfig { max_wait: Duration::from_millis(wait_ms) },
+        )
+        .unwrap();
+        for (name, sampler) in [
+            (
+                "speculative",
+                SamplerChoice::Speculative(SpecParams {
+                    window: Window::Cosine { dtau: 0.05 },
+                    n_verify: 2,
+                    ..Default::default()
+                }),
+            ),
+            ("mdm K=32",
+             SamplerChoice::Mdm(MdmParams { steps: 32, temperature: 1.0 })),
+        ] {
+            let (lat, wall) = drive(&c, sampler, clients, reqs);
+            let r = summarize(&format!("{label} {name}"), lat.clone());
+            println!(
+                "{:<40} p50 {:>9} p95 {:>9}  {:>7.2} samples/s",
+                r.name,
+                fmt_duration(r.p50_s),
+                fmt_duration(r.p95_s),
+                lat.len() as f64 / wall
+            );
+        }
+        c.shutdown();
+    }
+}

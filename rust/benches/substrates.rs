@@ -1,0 +1,58 @@
+//! Substrate micro-benchmarks: the from-scratch utility layers that sit on
+//! the request path (softmax/categorical, JSON codec, oracle scorers,
+//! histogram observe). Regressions here show up as coordinator overhead.
+
+use ssmd::engine::softmax::{log_softmax_row, softmax_row};
+use ssmd::oracle::{spelling_accuracy, unigram_entropy};
+use ssmd::util::bench::{bench, print_header, print_result};
+use ssmd::util::json::Json;
+use ssmd::util::metrics::Histogram;
+use ssmd::util::rng::Pcg;
+
+fn main() {
+    print_header("substrates");
+    let mut rng = Pcg::new(1);
+    let logits: Vec<f32> = (0..256).map(|_| rng.f64() as f32 * 8.0).collect();
+
+    print_result(&bench("softmax_row V=256", 100, 1000, 0.5, || {
+        std::hint::black_box(softmax_row(&logits));
+    }));
+    print_result(&bench("log_softmax_row V=256", 100, 1000, 0.5, || {
+        std::hint::black_box(log_softmax_row(&logits));
+    }));
+
+    let probs = softmax_row(&logits);
+    print_result(&bench("categorical V=256", 100, 1000, 0.5, || {
+        std::hint::black_box(rng.categorical(&probs));
+    }));
+    print_result(&bench("permutation D=1024", 20, 200, 0.5, || {
+        std::hint::black_box(rng.permutation(1024));
+    }));
+
+    let payload = format!(
+        r#"{{"model":"owt","n":4,"samples":[{}]}}"#,
+        (0..64).map(|i| i.to_string()).collect::<Vec<_>>().join(",")
+    );
+    print_result(&bench("json parse (api req)", 100, 1000, 0.5, || {
+        std::hint::black_box(Json::parse(&payload).unwrap());
+    }));
+    let v = Json::parse(&payload).unwrap();
+    print_result(&bench("json serialize", 100, 1000, 0.5, || {
+        std::hint::black_box(v.to_string());
+    }));
+
+    let sample: Vec<i32> = (0..4096).map(|_| rng.below(27) as i32).collect();
+    let lexicon: Vec<String> =
+        (0..500).map(|i| format!("word{i}")).collect();
+    print_result(&bench("spelling_accuracy 64x64", 10, 100, 0.5, || {
+        std::hint::black_box(spelling_accuracy(&sample, 64, &lexicon));
+    }));
+    print_result(&bench("unigram_entropy 64x64", 10, 100, 0.5, || {
+        std::hint::black_box(unigram_entropy(&sample, 64));
+    }));
+
+    let h = Histogram::default();
+    print_result(&bench("histogram observe", 100, 1000, 0.2, || {
+        h.observe(0.0123);
+    }));
+}

@@ -1,0 +1,73 @@
+//! Dynamic batching policy.
+//!
+//! XLA executables have static shapes, so the unit of batching is the
+//! bucket ladder compiled per model (e.g. {1, 4, 16}). The engine thread
+//! accumulates compatible requests for at most `max_wait`, stopping early
+//! once the largest bucket is filled; `pick_bucket` then selects the
+//! smallest bucket that fits and the engine pads the remainder with dummy
+//! rows. The trade-off mirrors vLLM's batch scheduler: waiting adds queue
+//! latency but amortizes the forward pass.
+
+use std::time::Duration;
+
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// Maximum time to hold the first request of a batch while waiting for
+    /// companions.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_wait: Duration::from_millis(5) }
+    }
+}
+
+/// Smallest bucket >= n, or the largest available if n exceeds them all.
+pub fn pick_bucket(buckets: &[usize], n: usize) -> usize {
+    buckets
+        .iter()
+        .copied()
+        .filter(|&b| b >= n)
+        .min()
+        .or_else(|| buckets.iter().copied().max())
+        .unwrap_or(n.max(1))
+}
+
+/// Padding waste of running `n` real rows in bucket `b`.
+pub fn padding_waste(bucket: usize, n: usize) -> f64 {
+    if bucket == 0 {
+        return 0.0;
+    }
+    (bucket.saturating_sub(n)) as f64 / bucket as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn picks_smallest_fitting() {
+        let b = [1, 4, 16];
+        assert_eq!(pick_bucket(&b, 1), 1);
+        assert_eq!(pick_bucket(&b, 2), 4);
+        assert_eq!(pick_bucket(&b, 4), 4);
+        assert_eq!(pick_bucket(&b, 5), 16);
+    }
+
+    #[test]
+    fn oversize_falls_back_to_largest() {
+        assert_eq!(pick_bucket(&[1, 4], 9), 4);
+    }
+
+    #[test]
+    fn empty_buckets_degenerate() {
+        assert_eq!(pick_bucket(&[], 3), 3);
+    }
+
+    #[test]
+    fn waste_fraction() {
+        assert_eq!(padding_waste(4, 4), 0.0);
+        assert_eq!(padding_waste(4, 1), 0.75);
+    }
+}

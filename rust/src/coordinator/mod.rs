@@ -1,0 +1,492 @@
+//! L3 coordinator: request queue, dynamic batcher, engine thread.
+//!
+//! PJRT executables are not `Send`, so the coordinator follows the classic
+//! accelerator-worker design (cf. vLLM's engine loop): a single **engine
+//! thread** owns all compiled models; callers submit `Job`s over an mpsc
+//! channel and wait on per-request reply channels. The batcher groups
+//! compatible requests (same model + sampler settings) arriving within a
+//! small window into one flattened engine call, padding up to the model's
+//! batch-size buckets — XLA shapes are static, so buckets are the dynamic-
+//! batching unit.
+
+pub mod batcher;
+pub mod request;
+
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::engine::{
+    mdm_sample, speculative_sample, HybridModel, Prompt, Sample,
+};
+use crate::likelihood::{log_likelihood, rejection_posterior, SpecTable};
+use crate::util::json::Json;
+use crate::util::metrics::Registry;
+use crate::util::rng::Pcg;
+
+pub use batcher::BatcherConfig;
+pub use request::{GenRequest, GenResponse, SamplerChoice, ScoreRequest,
+                  ScoreResponse};
+
+/// Object-safe erasure of `HybridModel` (hides the associated State type)
+/// plus the operations the coordinator exposes.
+pub trait EngineModel {
+    fn seq_len(&self) -> usize;
+    fn vocab(&self) -> usize;
+    fn has_verify(&self) -> bool;
+    fn max_bucket(&self) -> usize;
+    fn info(&self) -> Json;
+    fn sample(&self, prompts: &[Prompt], sampler: &SamplerChoice,
+              rng: &mut Pcg) -> Result<Vec<Sample>>;
+    fn log_likelihood(&self, tokens: &[i32], sigma: &[i32]) -> Result<f64>;
+    fn rejection_posterior(&self, tokens: &[i32], sigma: &[i32])
+                           -> Result<Vec<f64>>;
+}
+
+impl<M: HybridModel> EngineModel for M {
+    fn seq_len(&self) -> usize {
+        HybridModel::seq_len(self)
+    }
+
+    fn vocab(&self) -> usize {
+        HybridModel::vocab(self)
+    }
+
+    fn has_verify(&self) -> bool {
+        HybridModel::has_verify(self)
+    }
+
+    fn max_bucket(&self) -> usize {
+        self.buckets().into_iter().max().unwrap_or(1)
+    }
+
+    fn info(&self) -> Json {
+        Json::obj(vec![
+            ("seq_len", Json::num(HybridModel::seq_len(self) as f64)),
+            ("vocab", Json::num(HybridModel::vocab(self) as f64)),
+            ("has_verify", Json::Bool(HybridModel::has_verify(self))),
+            (
+                "buckets",
+                Json::arr(
+                    self.buckets().into_iter().map(|b| Json::num(b as f64)),
+                ),
+            ),
+        ])
+    }
+
+    fn sample(&self, prompts: &[Prompt], sampler: &SamplerChoice,
+              rng: &mut Pcg) -> Result<Vec<Sample>> {
+        match sampler {
+            SamplerChoice::Speculative(p) => {
+                if !HybridModel::has_verify(self) {
+                    return Err(anyhow!(
+                        "model has no causal half; use the mdm sampler"
+                    ));
+                }
+                Ok(speculative_sample(self, prompts, p, rng).0)
+            }
+            SamplerChoice::Mdm(p) => Ok(mdm_sample(self, prompts, p, rng)),
+        }
+    }
+
+    fn log_likelihood(&self, tokens: &[i32], sigma: &[i32]) -> Result<f64> {
+        if !HybridModel::has_verify(self) {
+            return Err(anyhow!("likelihood needs the causal half"));
+        }
+        Ok(log_likelihood(&SpecTable::from_model(self, tokens, sigma)))
+    }
+
+    fn rejection_posterior(&self, tokens: &[i32], sigma: &[i32])
+                           -> Result<Vec<f64>> {
+        if !HybridModel::has_verify(self) {
+            return Err(anyhow!("posterior needs the causal half"));
+        }
+        Ok(rejection_posterior(&SpecTable::from_model(self, tokens, sigma)))
+    }
+}
+
+pub type ModelMap = BTreeMap<String, Box<dyn EngineModel>>;
+
+enum Job {
+    Generate {
+        req: GenRequest,
+        reply: mpsc::Sender<Result<GenResponse>>,
+        enqueued: Instant,
+    },
+    Score {
+        req: ScoreRequest,
+        reply: mpsc::Sender<Result<ScoreResponse>>,
+    },
+    Info {
+        reply: mpsc::Sender<Json>,
+    },
+    Shutdown,
+}
+
+/// Handle used by the server / examples; cheaply cloneable.
+#[derive(Clone)]
+pub struct Coordinator {
+    tx: mpsc::Sender<Job>,
+    pub metrics: Arc<Registry>,
+}
+
+impl Coordinator {
+    /// Spawn the engine thread. `factory` runs *inside* the thread and
+    /// builds the model map there (PJRT handles are not Send).
+    pub fn start<F>(factory: F, batcher: BatcherConfig) -> Result<Coordinator>
+    where
+        F: FnOnce() -> Result<ModelMap> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let metrics = Arc::new(Registry::default());
+        let m = metrics.clone();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        std::thread::Builder::new()
+            .name("ssmd-engine".into())
+            .spawn(move || {
+                let models = match factory() {
+                    Ok(models) => {
+                        let _ = ready_tx.send(Ok(()));
+                        models
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                engine_loop(models, rx, m, batcher);
+            })
+            .expect("spawn engine thread");
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("engine thread died during startup"))??;
+        Ok(Coordinator { tx, metrics })
+    }
+
+    pub fn generate(&self, req: GenRequest) -> Result<GenResponse> {
+        let (reply, wait) = mpsc::channel();
+        self.tx
+            .send(Job::Generate { req, reply, enqueued: Instant::now() })
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        wait.recv().map_err(|_| anyhow!("engine dropped reply"))?
+    }
+
+    pub fn score(&self, req: ScoreRequest) -> Result<ScoreResponse> {
+        let (reply, wait) = mpsc::channel();
+        self.tx
+            .send(Job::Score { req, reply })
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        wait.recv().map_err(|_| anyhow!("engine dropped reply"))?
+    }
+
+    pub fn models_info(&self) -> Result<Json> {
+        let (reply, wait) = mpsc::channel();
+        self.tx
+            .send(Job::Info { reply })
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        wait.recv().map_err(|_| anyhow!("engine dropped reply"))
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Job::Shutdown);
+    }
+}
+
+fn engine_loop(models: ModelMap, rx: mpsc::Receiver<Job>,
+               metrics: Arc<Registry>, cfg: BatcherConfig) {
+    let h_latency = metrics.histogram("generate_latency_s");
+    let h_queue = metrics.histogram("queue_wait_s");
+    let h_batch = metrics.histogram("batch_size");
+    let h_nfe = metrics.histogram("nfe_per_sample");
+    let c_reqs = metrics.counter("requests");
+    let c_samples = metrics.counter("samples");
+    let c_errors = metrics.counter("errors");
+
+    let mut rng = Pcg::new(0x55d);
+    let mut stash: Option<Job> = None;
+
+    loop {
+        let first = match stash.take() {
+            Some(j) => j,
+            None => match rx.recv() {
+                Ok(j) => j,
+                Err(_) => return,
+            },
+        };
+        let mut batch = Vec::new();
+        match first {
+            Job::Shutdown => return,
+            Job::Info { reply } => {
+                let obj = Json::Obj(
+                    models.iter().map(|(k, v)| (k.clone(), v.info())).collect(),
+                );
+                let _ = reply.send(obj);
+                continue;
+            }
+            Job::Score { req, reply } => {
+                let _ = reply.send(run_score(&models, &req, &mut rng));
+                continue;
+            }
+            Job::Generate { req, reply, enqueued } => {
+                batch.push((req, reply, enqueued));
+            }
+        }
+
+        // ---- dynamic batching window ------------------------------------
+        let cap = models
+            .get(&batch[0].0.model)
+            .map(|m| m.max_bucket())
+            .unwrap_or(1);
+        let deadline = Instant::now() + cfg.max_wait;
+        while batch.iter().map(|(r, _, _)| r.total_samples()).sum::<usize>()
+            < cap
+        {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(Job::Generate { req, reply, enqueued })
+                    if req.batch_key() == batch[0].0.batch_key() =>
+                {
+                    batch.push((req, reply, enqueued));
+                }
+                Ok(other) => {
+                    stash = Some(other);
+                    break;
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+
+        // ---- execute ------------------------------------------------------
+        c_reqs.add(batch.len() as u64);
+        let started = Instant::now();
+        for (_, _, enq) in &batch {
+            h_queue.observe(started.duration_since(*enq).as_secs_f64());
+        }
+        let key_req = batch[0].0.clone();
+        let result = run_generate_batch(&models, &key_req, &batch, &mut rng);
+        let elapsed = started.elapsed().as_secs_f64();
+        h_latency.observe(elapsed);
+
+        match result {
+            Ok(mut per_request) => {
+                h_batch.observe(
+                    per_request.iter().map(|s| s.len()).sum::<usize>() as f64,
+                );
+                for (i, (_, reply, _)) in batch.iter().enumerate() {
+                    let samples = std::mem::take(&mut per_request[i]);
+                    c_samples.add(samples.len() as u64);
+                    for s in &samples {
+                        h_nfe.observe(s.nfe);
+                    }
+                    let _ = reply.send(Ok(GenResponse {
+                        model: key_req.model.clone(),
+                        samples,
+                        wall_s: elapsed,
+                    }));
+                }
+            }
+            Err(e) => {
+                c_errors.inc();
+                for (_, reply, _) in &batch {
+                    let _ = reply.send(Err(anyhow!("{e}")));
+                }
+            }
+        }
+    }
+}
+
+type PendingGen = (GenRequest, mpsc::Sender<Result<GenResponse>>, Instant);
+
+/// Flatten all requests of a compatible batch into one engine call and
+/// split the samples back out per request.
+fn run_generate_batch(models: &ModelMap, key_req: &GenRequest,
+                      batch: &[PendingGen], rng: &mut Pcg)
+                      -> Result<Vec<Vec<Sample>>> {
+    let model = models
+        .get(&key_req.model)
+        .ok_or_else(|| anyhow!("unknown model '{}'", key_req.model))?;
+    let d = model.seq_len();
+    let mut prompts = Vec::new();
+    let mut counts = Vec::new();
+    for (req, _, _) in batch {
+        let prompt = req.prompt.clone().unwrap_or_else(|| Prompt::empty(d));
+        if prompt.0.len() != d {
+            return Err(anyhow!("prompt length {} != D {d}", prompt.0.len()));
+        }
+        for _ in 0..req.n_samples {
+            prompts.push(prompt.clone());
+        }
+        counts.push(req.n_samples);
+    }
+    let mut seeded = Pcg::new(key_req.seed ^ rng.next_u64());
+    let seed_rng = if key_req.deterministic {
+        Pcg::new(key_req.seed)
+    } else {
+        seeded.split()
+    };
+    let mut r = seed_rng;
+    let samples = model.sample(&prompts, &key_req.sampler, &mut r)?;
+    let mut out = Vec::with_capacity(counts.len());
+    let mut off = 0;
+    for c in counts {
+        out.push(samples[off..off + c].to_vec());
+        off += c;
+    }
+    Ok(out)
+}
+
+fn run_score(models: &ModelMap, req: &ScoreRequest, rng: &mut Pcg)
+             -> Result<ScoreResponse> {
+    let model = models
+        .get(&req.model)
+        .ok_or_else(|| anyhow!("unknown model '{}'", req.model))?;
+    let d = model.seq_len();
+    if req.tokens.len() != d {
+        return Err(anyhow!("tokens length {} != D {d}", req.tokens.len()));
+    }
+    let sigma = match &req.sigma {
+        Some(s) => s.clone(),
+        None => Pcg::new(req.seed.unwrap_or_else(|| rng.next_u64()))
+            .permutation(d),
+    };
+    let ll = model.log_likelihood(&req.tokens, &sigma)?;
+    let posterior = if req.with_posterior {
+        Some(model.rejection_posterior(&req.tokens, &sigma)?)
+    } else {
+        None
+    };
+    Ok(ScoreResponse { log_likelihood: ll, sigma, rejection_posterior: posterior })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::mock::MockModel;
+    use crate::engine::{MdmParams, SpecParams};
+    use std::time::Duration;
+
+    fn mock_coordinator() -> Coordinator {
+        Coordinator::start(
+            || {
+                let mut m: ModelMap = BTreeMap::new();
+                m.insert(
+                    "mock".into(),
+                    Box::new(MockModel::new(8, 4, 5)) as Box<dyn EngineModel>,
+                );
+                Ok(m)
+            },
+            BatcherConfig { max_wait: Duration::from_millis(1) },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn generate_speculative_roundtrip() {
+        let c = mock_coordinator();
+        let resp = c
+            .generate(GenRequest {
+                model: "mock".into(),
+                n_samples: 3,
+                sampler: SamplerChoice::Speculative(SpecParams::default()),
+                ..Default::default()
+            })
+            .unwrap();
+        assert_eq!(resp.samples.len(), 3);
+        assert!(resp.samples[0].nfe > 0.0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn generate_mdm_roundtrip() {
+        let c = mock_coordinator();
+        let resp = c
+            .generate(GenRequest {
+                model: "mock".into(),
+                n_samples: 2,
+                sampler: SamplerChoice::Mdm(MdmParams::default()),
+                ..Default::default()
+            })
+            .unwrap();
+        assert_eq!(resp.samples.len(), 2);
+        c.shutdown();
+    }
+
+    #[test]
+    fn unknown_model_errors() {
+        let c = mock_coordinator();
+        let err = c
+            .generate(GenRequest {
+                model: "nope".into(),
+                n_samples: 1,
+                ..Default::default()
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("unknown model"));
+        c.shutdown();
+    }
+
+    #[test]
+    fn score_roundtrip_and_posterior_sums_to_one() {
+        let c = mock_coordinator();
+        let resp = c
+            .score(ScoreRequest {
+                model: "mock".into(),
+                tokens: vec![0, 1, 2, 3, 0, 1, 2, 3],
+                sigma: None,
+                seed: Some(7),
+                with_posterior: true,
+            })
+            .unwrap();
+        assert!(resp.log_likelihood < 0.0);
+        let post = resp.rejection_posterior.unwrap();
+        assert!((post.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        c.shutdown();
+    }
+
+    #[test]
+    fn concurrent_requests_all_served() {
+        let c = mock_coordinator();
+        let mut handles = Vec::new();
+        for i in 0..6 {
+            let cc = c.clone();
+            handles.push(std::thread::spawn(move || {
+                cc.generate(GenRequest {
+                    model: "mock".into(),
+                    n_samples: 1,
+                    seed: i,
+                    ..Default::default()
+                })
+                .unwrap()
+            }));
+        }
+        for h in handles {
+            let r = h.join().unwrap();
+            assert_eq!(r.samples.len(), 1);
+        }
+        assert!(c.metrics.counter("requests").get() >= 6);
+        c.shutdown();
+    }
+
+    #[test]
+    fn deterministic_requests_reproduce() {
+        let c = mock_coordinator();
+        let req = GenRequest {
+            model: "mock".into(),
+            n_samples: 2,
+            seed: 99,
+            deterministic: true,
+            ..Default::default()
+        };
+        let a = c.generate(req.clone()).unwrap();
+        let b = c.generate(req).unwrap();
+        assert_eq!(a.samples[0].tokens, b.samples[0].tokens);
+        c.shutdown();
+    }
+}

@@ -1,0 +1,352 @@
+//! Request / response types of the coordinator API.
+
+use crate::engine::{MdmParams, Prompt, Sample, SpecParams, Window};
+use crate::util::json::Json;
+
+/// Which sampling algorithm to run.
+#[derive(Clone, Debug)]
+pub enum SamplerChoice {
+    /// Algorithm 3 (the paper's contribution).
+    Speculative(SpecParams),
+    /// Standard masked-diffusion baseline.
+    Mdm(MdmParams),
+}
+
+impl Default for SamplerChoice {
+    fn default() -> Self {
+        SamplerChoice::Speculative(SpecParams::default())
+    }
+}
+
+impl SamplerChoice {
+    /// Batching key: requests with identical keys can share an engine call.
+    pub fn key(&self) -> String {
+        match self {
+            SamplerChoice::Speculative(p) => format!(
+                "spec:{:?}:{}:{}:{:?}",
+                p.window, p.n_verify, p.temperature, p.sigma
+            ),
+            SamplerChoice::Mdm(p) => {
+                format!("mdm:{}:{}", p.steps, p.temperature)
+            }
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct GenRequest {
+    pub model: String,
+    pub n_samples: usize,
+    pub sampler: SamplerChoice,
+    /// Optional infilling prompt (length D; None slots are generated).
+    pub prompt: Option<Prompt>,
+    pub seed: u64,
+    /// If true the response depends only on `seed` (no per-call entropy) —
+    /// used by tests and the reproduction harnesses.
+    pub deterministic: bool,
+}
+
+impl Default for GenRequest {
+    fn default() -> Self {
+        GenRequest {
+            model: String::new(),
+            n_samples: 1,
+            sampler: SamplerChoice::default(),
+            prompt: None,
+            seed: 0,
+            deterministic: false,
+        }
+    }
+}
+
+impl GenRequest {
+    pub fn total_samples(&self) -> usize {
+        self.n_samples
+    }
+
+    /// Requests batch together iff model + sampler settings + prompt shape
+    /// match (deterministic requests never batch with others: their RNG
+    /// stream must not depend on queue neighbours).
+    pub fn batch_key(&self) -> String {
+        let det = if self.deterministic {
+            format!("det{}", self.seed)
+        } else {
+            "live".into()
+        };
+        format!("{}|{}|{}", self.model, self.sampler.key(), det)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct GenResponse {
+    pub model: String,
+    pub samples: Vec<Sample>,
+    pub wall_s: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct ScoreRequest {
+    pub model: String,
+    pub tokens: Vec<i32>,
+    /// Fixed ordering; random (seeded) if None — Eq. 12's Monte-Carlo ELBO
+    /// averages scores over random sigmas.
+    pub sigma: Option<Vec<i32>>,
+    pub seed: Option<u64>,
+    pub with_posterior: bool,
+}
+
+#[derive(Clone, Debug)]
+pub struct ScoreResponse {
+    pub log_likelihood: f64,
+    pub sigma: Vec<i32>,
+    /// p(N = n | x, sigma) over rejection counts (Prop. C.2).
+    pub rejection_posterior: Option<Vec<f64>>,
+}
+
+// ---------------------------------------------------------------------------
+// JSON (de)serialization for the HTTP API
+// ---------------------------------------------------------------------------
+
+impl GenRequest {
+    pub fn from_json(v: &Json) -> Result<GenRequest, String> {
+        let model = v
+            .get("model")
+            .and_then(|m| m.as_str())
+            .ok_or("missing 'model'")?
+            .to_string();
+        let n_samples =
+            v.get("n").and_then(|n| n.as_usize()).unwrap_or(1).max(1);
+        let sampler_name = v
+            .get("sampler")
+            .and_then(|s| s.as_str())
+            .unwrap_or("speculative");
+        let temperature =
+            v.get("temperature").and_then(|t| t.as_f64()).unwrap_or(1.0);
+        let sampler = match sampler_name {
+            "speculative" => {
+                let window_s = v
+                    .get("window")
+                    .and_then(|w| w.as_str())
+                    .unwrap_or("cosine:0.05")
+                    .to_string();
+                let window = Window::parse(&window_s)
+                    .ok_or(format!("bad window '{window_s}'"))?;
+                SamplerChoice::Speculative(SpecParams {
+                    window,
+                    n_verify: v
+                        .get("n_verify")
+                        .and_then(|n| n.as_usize())
+                        .unwrap_or(1)
+                        .max(1),
+                    temperature,
+                    ..Default::default()
+                })
+            }
+            "mdm" => SamplerChoice::Mdm(MdmParams {
+                steps: v
+                    .get("steps")
+                    .and_then(|s| s.as_usize())
+                    .unwrap_or(64)
+                    .max(1),
+                temperature,
+            }),
+            other => return Err(format!("unknown sampler '{other}'")),
+        };
+        let prompt = match v.get("prompt") {
+            None | Some(Json::Null) => None,
+            Some(Json::Obj(slots)) => {
+                let seq_len = v
+                    .get("seq_len")
+                    .and_then(|d| d.as_usize())
+                    .ok_or("prompt requires 'seq_len'")?;
+                let mut p = Prompt::empty(seq_len);
+                for (k, tok) in slots {
+                    let pos: usize =
+                        k.parse().map_err(|_| "bad prompt key")?;
+                    if pos >= seq_len {
+                        return Err("prompt position out of range".into());
+                    }
+                    p.0[pos] =
+                        Some(tok.as_f64().ok_or("bad prompt token")? as i32);
+                }
+                Some(p)
+            }
+            _ => return Err("prompt must be an object".into()),
+        };
+        Ok(GenRequest {
+            model,
+            n_samples,
+            sampler,
+            prompt,
+            seed: v.get("seed").and_then(|s| s.as_f64()).unwrap_or(0.0)
+                as u64,
+            deterministic: v
+                .get("deterministic")
+                .and_then(|d| d.as_bool())
+                .unwrap_or(false),
+        })
+    }
+}
+
+impl GenResponse {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::str(self.model.clone())),
+            ("wall_s", Json::num(self.wall_s)),
+            (
+                "samples",
+                Json::arr(self.samples.iter().map(|s| {
+                    Json::obj(vec![
+                        (
+                            "tokens",
+                            Json::arr(
+                                s.tokens
+                                    .iter()
+                                    .map(|&t| Json::num(t as f64)),
+                            ),
+                        ),
+                        ("nfe", Json::num(s.nfe)),
+                        ("outer_loops", Json::num(s.outer_loops as f64)),
+                        ("accepted", Json::num(s.accepted as f64)),
+                        ("rejected", Json::num(s.rejected as f64)),
+                    ])
+                })),
+            ),
+        ])
+    }
+}
+
+impl ScoreRequest {
+    pub fn from_json(v: &Json) -> Result<ScoreRequest, String> {
+        let model = v
+            .get("model")
+            .and_then(|m| m.as_str())
+            .ok_or("missing 'model'")?
+            .to_string();
+        let tokens: Vec<i32> = v
+            .get("tokens")
+            .and_then(|t| t.as_f64_vec())
+            .ok_or("missing 'tokens'")?
+            .into_iter()
+            .map(|x| x as i32)
+            .collect();
+        let sigma = v
+            .get("sigma")
+            .and_then(|s| s.as_f64_vec())
+            .map(|s| s.into_iter().map(|x| x as i32).collect());
+        Ok(ScoreRequest {
+            model,
+            tokens,
+            sigma,
+            seed: v.get("seed").and_then(|s| s.as_f64()).map(|s| s as u64),
+            with_posterior: v
+                .get("with_posterior")
+                .and_then(|b| b.as_bool())
+                .unwrap_or(false),
+        })
+    }
+}
+
+impl ScoreResponse {
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("log_likelihood", Json::num(self.log_likelihood)),
+            (
+                "sigma",
+                Json::arr(self.sigma.iter().map(|&s| Json::num(s as f64))),
+            ),
+        ];
+        if let Some(p) = &self.rejection_posterior {
+            fields.push((
+                "rejection_posterior",
+                Json::arr(p.iter().map(|&x| Json::num(x))),
+            ));
+        }
+        Json::obj(fields)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gen_request_json_roundtrip() {
+        let v = Json::parse(
+            r#"{"model":"owt","n":2,"sampler":"speculative",
+                "window":"cosine:0.02","n_verify":3,"seed":7}"#,
+        )
+        .unwrap();
+        let r = GenRequest::from_json(&v).unwrap();
+        assert_eq!(r.model, "owt");
+        assert_eq!(r.n_samples, 2);
+        match r.sampler {
+            SamplerChoice::Speculative(p) => {
+                assert_eq!(p.n_verify, 3);
+                assert_eq!(p.window, Window::Cosine { dtau: 0.02 });
+            }
+            _ => panic!("wrong sampler"),
+        }
+    }
+
+    #[test]
+    fn mdm_request_and_prompt() {
+        let v = Json::parse(
+            r#"{"model":"owt","sampler":"mdm","steps":16,
+                "seq_len":8,"prompt":{"0":5,"3":1}}"#,
+        )
+        .unwrap();
+        let r = GenRequest::from_json(&v).unwrap();
+        let p = r.prompt.unwrap();
+        assert_eq!(p.0[0], Some(5));
+        assert_eq!(p.0[3], Some(1));
+        assert_eq!(p.0[1], None);
+    }
+
+    #[test]
+    fn rejects_bad_requests() {
+        for s in [
+            r#"{"n":1}"#,
+            r#"{"model":"m","sampler":"bogus"}"#,
+            r#"{"model":"m","window":"wat"}"#,
+            r#"{"model":"m","prompt":{"0":1}}"#,
+        ] {
+            let v = Json::parse(s).unwrap();
+            assert!(GenRequest::from_json(&v).is_err(), "{s}");
+        }
+    }
+
+    #[test]
+    fn batch_keys_separate_incompatible() {
+        let a = GenRequest {
+            model: "m".into(),
+            ..Default::default()
+        };
+        let mut b = a.clone();
+        b.sampler = SamplerChoice::Mdm(MdmParams::default());
+        assert_ne!(a.batch_key(), b.batch_key());
+        let mut c = a.clone();
+        c.deterministic = true;
+        assert_ne!(a.batch_key(), c.batch_key());
+        assert_eq!(a.batch_key(), a.clone().batch_key());
+    }
+
+    #[test]
+    fn score_json_roundtrip() {
+        let v = Json::parse(
+            r#"{"model":"owt","tokens":[1,2,3],"with_posterior":true}"#,
+        )
+        .unwrap();
+        let r = ScoreRequest::from_json(&v).unwrap();
+        assert_eq!(r.tokens, vec![1, 2, 3]);
+        assert!(r.with_posterior);
+        let resp = ScoreResponse {
+            log_likelihood: -3.5,
+            sigma: vec![0, 2, 1],
+            rejection_posterior: Some(vec![0.5, 0.5]),
+        };
+        let out = resp.to_json().to_string();
+        assert!(out.contains("-3.5"));
+        assert!(out.contains("rejection_posterior"));
+    }
+}

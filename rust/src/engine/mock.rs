@@ -1,0 +1,188 @@
+//! Deterministic mock `HybridModel` for engine / likelihood tests.
+//!
+//! Distributions are derived by hashing the exact information the real
+//! model would condition on, so the mock is *consistent* (same context →
+//! same distribution), which is the property the likelihood recursions of
+//! Prop. 3.1 rely on:
+//!
+//! * draft logits for position `p` depend only on the masked context
+//!   (all `[B, D]` masked tokens) and `p`;
+//! * target logits for track `j` depend on the masked context, the permuted
+//!   tokens up to and including track `j` (causal attention), and the
+//!   position being predicted `sigma[j+1]`.
+
+use crate::engine::HybridModel;
+use crate::util::rng::Pcg;
+
+#[derive(Clone, Debug)]
+pub struct MockModel {
+    pub seq_len: usize,
+    pub vocab: usize,
+    /// Logit scale; higher = sharper distributions (lower acceptance when
+    /// draft and target disagree).
+    pub sharp: f32,
+    /// Extra seed so tests can instantiate independent models.
+    pub seed: u64,
+    /// If true, target == draft (acceptance rate must then be 1).
+    pub target_equals_draft: bool,
+}
+
+impl MockModel {
+    pub fn new(seq_len: usize, vocab: usize, seed: u64) -> MockModel {
+        MockModel { seq_len, vocab, sharp: 1.5, seed,
+                    target_equals_draft: false }
+    }
+
+    fn hash_logits(&self, tag: u64, payload: &[i32], pos: i32) -> Vec<f32> {
+        // FNV-1a over the conditioning info, then PCG-generated logits.
+        let mut h: u64 = 0xcbf29ce484222325 ^ self.seed;
+        let mut feed = |x: u64| {
+            h ^= x;
+            h = h.wrapping_mul(0x100000001b3);
+        };
+        feed(tag);
+        feed(pos as u64 as u64);
+        for &t in payload {
+            feed(t as u64);
+        }
+        let mut rng = Pcg::new(h);
+        (0..self.vocab)
+            .map(|_| (rng.f64() as f32 * 4.0 - 2.0) * self.sharp)
+            .collect()
+    }
+
+    /// Draft logits for sequence position `pos` under a masked context.
+    pub fn draft_logits(&self, masked_tokens: &[i32], pos: usize) -> Vec<f32> {
+        self.hash_logits(1, masked_tokens, pos as i32)
+    }
+
+    /// Target logits for track `j` (predicting `sigma[j+1]`).
+    pub fn target_logits(&self, masked_tokens: &[i32], tokens: &[i32],
+                         sigma: &[i32], j: usize) -> Vec<f32> {
+        if self.target_equals_draft {
+            let pos = sigma[(j + 1) % self.seq_len] as usize;
+            return self.draft_logits(masked_tokens, pos);
+        }
+        let d = self.seq_len;
+        let mut payload: Vec<i32> = masked_tokens.to_vec();
+        // Causal prefix in permuted order (tracks 0..=j).
+        for t in sigma.iter().take(j + 1) {
+            payload.push(tokens[*t as usize]);
+        }
+        let next_pos = sigma[(j + 1) % d];
+        self.hash_logits(2, &payload, next_pos)
+    }
+}
+
+impl HybridModel for MockModel {
+    type State = Vec<i32>;
+
+    fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn n_noncausal(&self) -> usize {
+        11
+    }
+
+    fn n_causal(&self) -> usize {
+        1
+    }
+
+    fn buckets(&self) -> Vec<usize> {
+        vec![1, 2, 4, 8, 16, 32]
+    }
+
+    fn draft(&self, tokens: &[i32], batch: usize) -> (Vec<i32>, Vec<f32>) {
+        let d = self.seq_len;
+        let v = self.vocab;
+        let mut logits = Vec::with_capacity(batch * d * v);
+        for b in 0..batch {
+            let ctx = &tokens[b * d..(b + 1) * d];
+            for pos in 0..d {
+                logits.extend(self.draft_logits(ctx, pos));
+            }
+        }
+        (tokens.to_vec(), logits)
+    }
+
+    fn verify(&self, state: &Vec<i32>, tokens: &[i32], sigma: &[i32],
+              batch: usize) -> Vec<f32> {
+        let d = self.seq_len;
+        let v = self.vocab;
+        let mut logits = Vec::with_capacity(batch * d * v);
+        for b in 0..batch {
+            let ctx = &state[b * d..(b + 1) * d];
+            let toks = &tokens[b * d..(b + 1) * d];
+            let sig = &sigma[b * d..(b + 1) * d];
+            for j in 0..d {
+                logits.extend(self.target_logits(ctx, toks, sig, j));
+            }
+        }
+        logits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let m = MockModel::new(4, 3, 7);
+        let ctx = vec![3, 3, 1, 3]; // mask id = 3
+        assert_eq!(m.draft_logits(&ctx, 2), m.draft_logits(&ctx, 2));
+        let toks = vec![0, 2, 1, 0];
+        let sigma = vec![2i32, 0, 3, 1];
+        assert_eq!(
+            m.target_logits(&ctx, &toks, &sigma, 1),
+            m.target_logits(&ctx, &toks, &sigma, 1)
+        );
+    }
+
+    #[test]
+    fn target_depends_only_on_causal_prefix() {
+        // Changing a token *after* track j must not change track j's logits.
+        let m = MockModel::new(4, 3, 7);
+        let ctx = vec![3, 3, 3, 3];
+        let sigma = vec![2i32, 0, 3, 1];
+        let a = vec![0, 2, 1, 0];
+        let mut b = a.clone();
+        b[1] = 1; // position 1 = sigma[3], after track 1's prefix {2, 0}
+        assert_eq!(
+            m.target_logits(&ctx, &a, &sigma, 1),
+            m.target_logits(&ctx, &b, &sigma, 1)
+        );
+    }
+
+    #[test]
+    fn target_changes_with_prefix() {
+        let m = MockModel::new(4, 3, 7);
+        let ctx = vec![3, 3, 3, 3];
+        let sigma = vec![2i32, 0, 3, 1];
+        let a = vec![0, 2, 1, 0];
+        let mut b = a.clone();
+        b[2] = 2; // position 2 = sigma[0], inside every prefix
+        assert_ne!(
+            m.target_logits(&ctx, &a, &sigma, 1),
+            m.target_logits(&ctx, &b, &sigma, 1)
+        );
+    }
+
+    #[test]
+    fn batch_layout_matches_single() {
+        let m = MockModel::new(3, 2, 1);
+        let t0 = vec![2, 2, 0];
+        let t1 = vec![1, 2, 2];
+        let both: Vec<i32> = [t0.clone(), t1.clone()].concat();
+        let (_, l) = m.draft(&both, 2);
+        let (_, l0) = m.draft(&t0, 1);
+        let (_, l1) = m.draft(&t1, 1);
+        assert_eq!(&l[..l0.len()], &l0[..]);
+        assert_eq!(&l[l0.len()..], &l1[..]);
+    }
+}

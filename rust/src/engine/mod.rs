@@ -1,0 +1,148 @@
+//! The paper's sampling engine (L3 core).
+//!
+//! `HybridModel` abstracts the two AOT-compiled forward passes so the
+//! engine logic (Alg. 1–3, Prop. 3.1/C.2) is testable against closed-form
+//! mock models without PJRT. The production implementation lives in
+//! `runtime::PjrtModel`.
+
+pub mod mdm;
+pub mod mock;
+pub mod softmax;
+pub mod speculative;
+pub mod window;
+
+pub use mdm::{mdm_sample, MdmParams};
+pub use mock::MockModel;
+pub use softmax::{log_softmax_row, softmax_row};
+pub use speculative::{speculative_sample, SpecParams, SpecStats};
+pub use window::Window;
+
+/// Abstract interface over the hybrid model's two executables.
+///
+/// Layout conventions (shared with python/compile/model.py):
+/// * tokens are `[B, D]` row-major, mask token id = `vocab()`;
+/// * `draft` returns `(state, logits)` with logits `[B, D, V]` in
+///   **sequence-position** order;
+/// * `verify` returns logits `[B, D, V]` in **track** order: track `j`
+///   predicts the token at position `sigma[b, j+1]`; track `D-1` is
+///   wrap-around filler and must not be read. Ordering position 0 has no
+///   causal prediction — its target is the draft distribution (the paper's
+///   first-position rule).
+pub trait HybridModel {
+    /// Opaque non-causal activations passed from draft to verify
+    /// (`Vec<f32>` hiddens for PJRT, unit for mocks).
+    type State;
+
+    fn seq_len(&self) -> usize;
+    fn vocab(&self) -> usize;
+    fn mask_id(&self) -> i32 {
+        self.vocab() as i32
+    }
+    /// Non-causal / causal block counts — used for fractional NFE
+    /// accounting (Sec. 5.1: 11nc+1c forward = 1 NFE; each extra causal
+    /// pass costs 1/12).
+    fn n_noncausal(&self) -> usize;
+    fn n_causal(&self) -> usize;
+
+    /// Batch sizes this model can execute. The engine picks the smallest
+    /// bucket >= requested batch and pads.
+    fn buckets(&self) -> Vec<usize>;
+
+    /// Non-causal forward: masked tokens `[B, D]` -> (state, draft logits
+    /// `[B, D, V]`).
+    fn draft(&self, tokens: &[i32], batch: usize) -> (Self::State, Vec<f32>);
+
+    /// Causal forward re-using the draft state: (state, full tokens
+    /// `[B, D]`, sigma `[B, D]`) -> target logits `[B, D, V]` track order.
+    fn verify(&self, state: &Self::State, tokens: &[i32], sigma: &[i32],
+              batch: usize) -> Vec<f32>;
+
+    /// Whether the checkpoint has a causal half (SDTT exports are
+    /// draft-only and can only be sampled with the MDM algorithm).
+    fn has_verify(&self) -> bool {
+        true
+    }
+
+    /// NFE cost of one non-causal pass followed by `n_verify` causal
+    /// passes, in units of one full forward (Sec. 5.1).
+    fn nfe_cost(&self, n_verify: usize) -> f64 {
+        let l = (self.n_noncausal() + self.n_causal()) as f64;
+        (self.n_noncausal() as f64 + n_verify as f64 * self.n_causal() as f64)
+            / l
+    }
+}
+
+/// A prompt: revealed positions of the sequence (infilling / conditioning).
+/// `None` entries are generated; `Some(tok)` are fixed and never resampled.
+#[derive(Clone, Debug, Default)]
+pub struct Prompt(pub Vec<Option<i32>>);
+
+impl Prompt {
+    pub fn empty(seq_len: usize) -> Prompt {
+        Prompt(vec![None; seq_len])
+    }
+
+    pub fn n_revealed(&self) -> usize {
+        self.0.iter().filter(|x| x.is_some()).count()
+    }
+}
+
+/// Output of one sampled sequence.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub tokens: Vec<i32>,
+    /// Function evaluations consumed, fractional (Sec. 5.1 accounting).
+    pub nfe: f64,
+    /// Number of outer (draft) loops this sequence participated in.
+    pub outer_loops: usize,
+    /// Accepted / rejected draft-token counts (speculative only).
+    pub accepted: usize,
+    pub rejected: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Dummy;
+    impl HybridModel for Dummy {
+        type State = ();
+        fn seq_len(&self) -> usize {
+            4
+        }
+        fn vocab(&self) -> usize {
+            3
+        }
+        fn n_noncausal(&self) -> usize {
+            11
+        }
+        fn n_causal(&self) -> usize {
+            1
+        }
+        fn buckets(&self) -> Vec<usize> {
+            vec![1]
+        }
+        fn draft(&self, _: &[i32], _: usize) -> ((), Vec<f32>) {
+            ((), vec![])
+        }
+        fn verify(&self, _: &(), _: &[i32], _: &[i32], _: usize) -> Vec<f32> {
+            vec![]
+        }
+    }
+
+    #[test]
+    fn nfe_cost_matches_paper_example() {
+        // Paper Sec. 5.1: 11nc+1c with 7 causal passes = 18/12 = 1.5 NFE.
+        let d = Dummy;
+        assert!((d.nfe_cost(7) - 1.5).abs() < 1e-12);
+        assert!((d.nfe_cost(1) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prompt_counts() {
+        let mut p = Prompt::empty(5);
+        assert_eq!(p.n_revealed(), 0);
+        p.0[2] = Some(7);
+        assert_eq!(p.n_revealed(), 1);
+    }
+}

@@ -1,0 +1,104 @@
+//! Numerically stable softmax / log-softmax over logits rows.
+//!
+//! The runtime returns raw logits `[B, D, V]`; the engine converts rows to
+//! probabilities for the speculative accept/reject tests, the residual
+//! resampling distribution (Alg. 2), and categorical draws.
+
+/// Stable softmax of one row, in f64 for downstream probability arithmetic.
+pub fn softmax_row(logits: &[f32]) -> Vec<f64> {
+    let m = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let mut out: Vec<f64> =
+        logits.iter().map(|&x| ((x as f64) - m).exp()).collect();
+    let s: f64 = out.iter().sum();
+    out.iter_mut().for_each(|x| *x /= s);
+    out
+}
+
+/// Stable log-softmax of one row.
+pub fn log_softmax_row(logits: &[f32]) -> Vec<f64> {
+    let m = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let lse = logits
+        .iter()
+        .map(|&x| ((x as f64) - m).exp())
+        .sum::<f64>()
+        .ln()
+        + m;
+    logits.iter().map(|&x| x as f64 - lse).collect()
+}
+
+/// Softmax with temperature (Table 1 note: generative perplexity can be
+/// cheated with low temperature; exposed so harnesses can demonstrate it).
+pub fn softmax_row_temp(logits: &[f32], temp: f64) -> Vec<f64> {
+    let scaled: Vec<f32> =
+        logits.iter().map(|&x| (x as f64 / temp) as f32).collect();
+    softmax_row(&scaled)
+}
+
+/// The speculative residual distribution max(0, q - p), normalized.
+/// Returns None if q <= p everywhere (numerically zero mass — caller then
+/// falls back to q itself, which only happens when p == q exactly).
+pub fn residual_distribution(q: &[f64], p: &[f64]) -> Option<Vec<f64>> {
+    let mut out: Vec<f64> =
+        q.iter().zip(p).map(|(&a, &b)| (a - b).max(0.0)).collect();
+    let s: f64 = out.iter().sum();
+    if s <= 0.0 {
+        return None;
+    }
+    out.iter_mut().for_each(|x| *x /= s);
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_sums_to_one_and_orders() {
+        let p = softmax_row(&[1.0, 2.0, 3.0]);
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn softmax_handles_large_logits() {
+        let p = softmax_row(&[1000.0, 1000.0]);
+        assert!((p[0] - 0.5).abs() < 1e-12);
+        let p = softmax_row(&[-1000.0, 0.0]);
+        assert!(p[1] > 0.999);
+    }
+
+    #[test]
+    fn log_softmax_consistent_with_softmax() {
+        let logits = [0.3f32, -1.2, 2.0, 0.0];
+        let p = softmax_row(&logits);
+        let lp = log_softmax_row(&logits);
+        for (a, b) in p.iter().zip(&lp) {
+            assert!((a.ln() - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn temperature_sharpens() {
+        let logits = [1.0f32, 2.0];
+        let p1 = softmax_row_temp(&logits, 1.0);
+        let p01 = softmax_row_temp(&logits, 0.1);
+        assert!(p01[1] > p1[1]);
+    }
+
+    #[test]
+    fn residual_matches_hand_calc() {
+        let q = [0.5, 0.3, 0.2];
+        let p = [0.2, 0.5, 0.3];
+        let r = residual_distribution(&q, &p).unwrap();
+        // max(0, q-p) = [0.3, 0, 0] -> [1, 0, 0]
+        assert!((r[0] - 1.0).abs() < 1e-12);
+        assert_eq!(r[1], 0.0);
+        assert_eq!(r[2], 0.0);
+    }
+
+    #[test]
+    fn residual_none_when_equal() {
+        let q = [0.5, 0.5];
+        assert!(residual_distribution(&q, &q).is_none());
+    }
+}

@@ -1,0 +1,411 @@
+//! Self-speculative masked diffusion sampling — Algorithms 2 and 3.
+//!
+//! One **outer loop** = one non-causal (draft) forward pass producing a
+//! factorized draft distribution over all masked positions. Inside it, up to
+//! `n_verify` **inner loops** each run one causal (verify) pass over the
+//! drafted tokens and a speculative accept/reject sweep: accepted tokens are
+//! revealed; the first rejection resamples from the residual distribution
+//! max(0, q - p) and ends the sweep (the resample changes the causal
+//! conditioning, so the next inner loop recomputes targets). A window W(i)
+//! (App. D) caps the reveals per outer loop.
+//!
+//! NFE accounting follows Sec. 5.1 exactly: a pass of all L blocks is 1 NFE,
+//! so an outer loop that used `n` verify passes costs
+//! (n_noncausal + n * n_causal) / L — counted per batch element.
+
+use crate::engine::softmax::{residual_distribution, softmax_row};
+use crate::engine::window::Window;
+use crate::engine::{HybridModel, Prompt, Sample};
+use crate::util::rng::Pcg;
+
+#[derive(Clone, Debug)]
+pub struct SpecParams {
+    pub window: Window,
+    /// N: draft/verify inner loops per non-causal pass (Alg. 3).
+    pub n_verify: usize,
+    /// Safety valve (a well-formed run needs at most D outer loops).
+    pub max_outer: usize,
+    /// Optional sampling temperature applied to draft AND target logits.
+    pub temperature: f64,
+    /// Fix the generation ordering (tests, likelihood cross-checks, and the
+    /// HTTP API's explicit-ordering mode). Must be a permutation of 0..D
+    /// whose prefix covers the prompt's revealed positions.
+    pub sigma: Option<Vec<i32>>,
+}
+
+impl Default for SpecParams {
+    fn default() -> Self {
+        SpecParams {
+            window: Window::Cosine { dtau: 0.05 },
+            n_verify: 1,
+            max_outer: 100_000,
+            temperature: 1.0,
+            sigma: None,
+        }
+    }
+}
+
+/// Aggregate statistics over one batched sampling call.
+#[derive(Clone, Debug, Default)]
+pub struct SpecStats {
+    pub outer_loops: usize,
+    pub verify_passes: usize,
+    pub accepted: usize,
+    pub rejected: usize,
+}
+
+struct SeqState {
+    tokens: Vec<i32>,
+    sigma: Vec<i32>,
+    /// revealed[pos]: position already carries its final token. Kept
+    /// incrementally — rebuilding it from sigma[..i] each outer loop made
+    /// the draft-context build O(D^2 * i) (see EXPERIMENTS.md §Perf L3).
+    revealed: Vec<bool>,
+    /// Tokens revealed so far (= next ordering position to decide).
+    i: usize,
+    done: bool,
+    nfe: f64,
+    outer: usize,
+    accepted: usize,
+    rejected: usize,
+    rng: Pcg,
+}
+
+/// Sample a batch of sequences with Algorithm 3.
+///
+/// Prompt positions are treated as already revealed: they are placed first
+/// in the generation ordering sigma (in random order), matching the paper's
+/// arbitrary-location conditioning.
+pub fn speculative_sample<M: HybridModel>(
+    model: &M,
+    prompts: &[Prompt],
+    params: &SpecParams,
+    rng: &mut Pcg,
+) -> (Vec<Sample>, SpecStats) {
+    assert!(model.has_verify(), "model has no causal half");
+    let d = model.seq_len();
+    let v = model.vocab();
+    let mask = model.mask_id();
+    let n_req = prompts.len();
+    let bucket = pick_bucket(&model.buckets(), n_req);
+
+    let mut seqs: Vec<SeqState> = (0..bucket)
+        .map(|b| {
+            let prompt = prompts.get(b).cloned().unwrap_or_else(|| {
+                Prompt::empty(d) // padding rows
+            });
+            init_seq(&prompt, d, mask, rng.split(), params.sigma.as_deref())
+        })
+        .collect();
+    let mut stats = SpecStats::default();
+
+    for _ in 0..params.max_outer {
+        if seqs.iter().all(|s| s.done) {
+            break;
+        }
+        stats.outer_loops += 1;
+
+        // ---- draft pass over the whole bucket --------------------------
+        let mut masked_tokens = Vec::with_capacity(bucket * d);
+        for s in &seqs {
+            for pos in 0..d {
+                masked_tokens
+                    .push(if s.revealed[pos] { s.tokens[pos] } else { mask });
+            }
+        }
+        let (state, draft_logits) = model.draft(&masked_tokens, bucket);
+
+        // Per-sequence draft probabilities + window target.
+        let mut draft_probs: Vec<Vec<Vec<f64>>> = Vec::with_capacity(bucket);
+        let mut targets = Vec::with_capacity(bucket);
+        let mut full_tokens = Vec::with_capacity(bucket * d);
+        for (b, s) in seqs.iter_mut().enumerate() {
+            let mut probs_rows: Vec<Vec<f64>> = vec![Vec::new(); d];
+            if !s.done {
+                let w = params.window.limit(s.i, d);
+                targets.push((s.i + w).min(d));
+                // Sample draft tokens for every masked ordering position.
+                for od in s.i..d {
+                    let pos = s.sigma[od] as usize;
+                    let row = &draft_logits[(b * d + pos) * v..
+                                            (b * d + pos) * v + v];
+                    let p = temp_probs(row, params.temperature);
+                    let tok = s.rng.categorical(&p) as i32;
+                    s.tokens[pos] = tok;
+                    probs_rows[pos] = p;
+                }
+            } else {
+                targets.push(s.i);
+            }
+            draft_probs.push(probs_rows);
+            full_tokens.extend_from_slice(&s.tokens);
+        }
+        let sigma_flat: Vec<i32> =
+            seqs.iter().flat_map(|s| s.sigma.iter().copied()).collect();
+
+        // j = reveals within this outer loop, per sequence.
+        let mut j: Vec<usize> = seqs.iter().map(|s| s.i).collect();
+        let mut verify_used = vec![0usize; bucket];
+
+        // ---- inner speculative loops ------------------------------------
+        for _ in 0..params.n_verify {
+            let any_active = seqs
+                .iter()
+                .enumerate()
+                .any(|(b, s)| !s.done && j[b] < targets[b]);
+            if !any_active {
+                break;
+            }
+            let target_logits =
+                model.verify(&state, &full_tokens, &sigma_flat, bucket);
+            stats.verify_passes += 1;
+
+            for (b, s) in seqs.iter_mut().enumerate() {
+                if s.done || j[b] >= targets[b] {
+                    continue;
+                }
+                verify_used[b] += 1;
+                let mut dd = j[b];
+                while dd < targets[b] {
+                    let pos = s.sigma[dd] as usize;
+                    let tok = s.tokens[pos] as usize;
+                    let p_row = &draft_probs[b][pos];
+                    // Target: ordering position 0 falls back to the draft
+                    // (first-position rule); otherwise track dd-1.
+                    let q_row: Vec<f64> = if dd == 0 {
+                        p_row.clone()
+                    } else {
+                        let tr = (b * d + (dd - 1)) * v;
+                        temp_probs(&target_logits[tr..tr + v],
+                                   params.temperature)
+                    };
+                    let accept_p = if p_row[tok] > 0.0 {
+                        (q_row[tok] / p_row[tok]).min(1.0)
+                    } else {
+                        1.0
+                    };
+                    if s.rng.f64() < accept_p {
+                        s.accepted += 1;
+                        stats.accepted += 1;
+                        dd += 1;
+                    } else {
+                        s.rejected += 1;
+                        stats.rejected += 1;
+                        let res = residual_distribution(&q_row, p_row)
+                            .unwrap_or(q_row);
+                        let new_tok = s.rng.categorical(&res) as i32;
+                        s.tokens[pos] = new_tok;
+                        full_tokens[b * d + pos] = new_tok;
+                        dd += 1;
+                        break; // resample ends this inner sweep
+                    }
+                }
+                j[b] = dd;
+            }
+        }
+
+        // ---- bookkeeping -------------------------------------------------
+        for (b, s) in seqs.iter_mut().enumerate() {
+            if s.done {
+                continue;
+            }
+            s.outer += 1;
+            s.nfe += model.nfe_cost(verify_used[b]);
+            for od in s.i..j[b] {
+                s.revealed[s.sigma[od] as usize] = true;
+            }
+            s.i = j[b];
+            if s.i >= d {
+                s.done = true;
+            }
+        }
+    }
+
+    let samples = seqs
+        .into_iter()
+        .take(n_req)
+        .map(|s| Sample {
+            tokens: s.tokens,
+            nfe: s.nfe,
+            outer_loops: s.outer,
+            accepted: s.accepted,
+            rejected: s.rejected,
+        })
+        .collect();
+    (samples, stats)
+}
+
+fn init_seq(prompt: &Prompt, d: usize, mask: i32, mut rng: Pcg,
+            fixed_sigma: Option<&[i32]>) -> SeqState {
+    let mut revealed: Vec<i32> = Vec::new();
+    let mut hidden: Vec<i32> = Vec::new();
+    let mut tokens = vec![mask; d];
+    for (pos, slot) in prompt.0.iter().enumerate() {
+        match slot {
+            Some(tok) => {
+                tokens[pos] = *tok;
+                revealed.push(pos as i32);
+            }
+            None => hidden.push(pos as i32),
+        }
+    }
+    rng.shuffle(&mut revealed);
+    rng.shuffle(&mut hidden);
+    let i = revealed.len();
+    let mut sigma = revealed;
+    sigma.extend(hidden);
+    if let Some(fixed) = fixed_sigma {
+        debug_assert_eq!(fixed.len(), d);
+        debug_assert!(fixed[..i]
+            .iter()
+            .all(|p| prompt.0[*p as usize].is_some()));
+        sigma = fixed.to_vec();
+    }
+    let revealed_mask: Vec<bool> =
+        prompt.0.iter().map(|s| s.is_some()).collect();
+    SeqState {
+        tokens,
+        sigma,
+        revealed: revealed_mask,
+        i,
+        done: i >= d,
+        nfe: 0.0,
+        outer: 0,
+        accepted: 0,
+        rejected: 0,
+        rng,
+    }
+}
+
+fn pick_bucket(buckets: &[usize], n: usize) -> usize {
+    buckets
+        .iter()
+        .copied()
+        .filter(|&b| b >= n)
+        .min()
+        .unwrap_or_else(|| buckets.iter().copied().max().unwrap_or(n).max(n))
+}
+
+fn temp_probs(logits: &[f32], temperature: f64) -> Vec<f64> {
+    if (temperature - 1.0).abs() < 1e-12 {
+        softmax_row(logits)
+    } else {
+        crate::engine::softmax::softmax_row_temp(logits, temperature)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::mock::MockModel;
+
+    fn run(model: &MockModel, n: usize, params: &SpecParams, seed: u64)
+           -> (Vec<Sample>, SpecStats) {
+        let prompts = vec![Prompt::empty(model.seq_len); n];
+        let mut rng = Pcg::new(seed);
+        speculative_sample(model, &prompts, params, &mut rng)
+    }
+
+    #[test]
+    fn completes_and_tokens_valid() {
+        let m = MockModel::new(12, 5, 3);
+        let (samples, _) = run(&m, 3, &SpecParams::default(), 1);
+        for s in &samples {
+            assert_eq!(s.tokens.len(), 12);
+            assert!(s.tokens.iter().all(|&t| (0..5).contains(&t)),
+                    "{:?}", s.tokens);
+            assert!(s.nfe > 0.0);
+        }
+    }
+
+    #[test]
+    fn target_equals_draft_accepts_everything() {
+        // With q == p every accept test passes: zero rejections, and each
+        // outer loop reveals the full window.
+        let mut m = MockModel::new(16, 4, 9);
+        m.target_equals_draft = true;
+        let (samples, stats) = run(&m, 2, &SpecParams::default(), 2);
+        assert_eq!(stats.rejected, 0);
+        for s in samples {
+            assert_eq!(s.rejected, 0);
+            assert_eq!(s.accepted, 16);
+        }
+    }
+
+    #[test]
+    fn accepted_plus_rejected_is_seq_len() {
+        // Every ordering position is decided exactly once: either accepted
+        // or rejected-and-resampled.
+        let m = MockModel::new(20, 6, 5);
+        let params = SpecParams {
+            n_verify: 3,
+            window: Window::Cosine { dtau: 0.1 },
+            ..Default::default()
+        };
+        let (samples, _) = run(&m, 4, &params, 7);
+        for s in samples {
+            assert_eq!(s.accepted + s.rejected, 20, "{s:?}");
+        }
+    }
+
+    #[test]
+    fn nfe_formula_holds_for_single_verify() {
+        // With n_verify = 1 each outer loop costs exactly 1 NFE
+        // ((11 + 1)/12) so nfe == outer_loops.
+        let m = MockModel::new(16, 4, 11);
+        let params = SpecParams { n_verify: 1, ..Default::default() };
+        let (samples, _) = run(&m, 2, &params, 3);
+        for s in samples {
+            assert!((s.nfe - s.outer_loops as f64).abs() < 1e-9, "{s:?}");
+        }
+    }
+
+    #[test]
+    fn prompt_tokens_survive() {
+        let m = MockModel::new(10, 4, 13);
+        let mut p = Prompt::empty(10);
+        p.0[3] = Some(2);
+        p.0[7] = Some(1);
+        let mut rng = Pcg::new(5);
+        let (samples, _) =
+            speculative_sample(&m, &[p], &SpecParams::default(), &mut rng);
+        assert_eq!(samples[0].tokens[3], 2);
+        assert_eq!(samples[0].tokens[7], 1);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let m = MockModel::new(14, 5, 17);
+        let (a, _) = run(&m, 2, &SpecParams::default(), 42);
+        let (b, _) = run(&m, 2, &SpecParams::default(), 42);
+        assert_eq!(a[0].tokens, b[0].tokens);
+        assert_eq!(a[1].tokens, b[1].tokens);
+    }
+
+    #[test]
+    fn larger_window_fewer_outer_loops() {
+        let m = MockModel::new(32, 4, 19);
+        let small = SpecParams {
+            window: Window::Cosine { dtau: 0.01 },
+            ..Default::default()
+        };
+        let big = SpecParams {
+            window: Window::Cosine { dtau: 0.2 },
+            n_verify: 4,
+            ..Default::default()
+        };
+        let (a, _) = run(&m, 4, &small, 23);
+        let (b, _) = run(&m, 4, &big, 23);
+        let nfe = |v: &[Sample]| {
+            v.iter().map(|s| s.nfe).sum::<f64>() / v.len() as f64
+        };
+        assert!(nfe(&b) < nfe(&a), "{} !< {}", nfe(&b), nfe(&a));
+    }
+
+    #[test]
+    fn bucket_padding_returns_requested_count() {
+        let m = MockModel::new(8, 3, 29);
+        let (samples, _) = run(&m, 3, &SpecParams::default(), 31);
+        assert_eq!(samples.len(), 3);
+    }
+}

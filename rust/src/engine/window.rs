@@ -1,0 +1,136 @@
+//! Window functions W(i) — Appendix D.
+//!
+//! The window caps how many tokens one draft (non-causal) pass may reveal.
+//! Monotonically increasing windows work best: early tokens pin down the
+//! sample and must be chosen carefully; late tokens are strongly determined
+//! by context and can be revealed in bulk.
+
+/// A window schedule mapping `i` (tokens revealed so far) to the maximum
+/// number of tokens the current outer loop may reveal.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Window {
+    /// W(i) = i + 1 (App. D Eq. 124).
+    Linear,
+    /// Fixed window size (plain speculative-decoding style).
+    Constant(usize),
+    /// Cosine window emulating an MDM sampled on a cosine grid with time
+    /// step `dtau` (App. D Eq. 127–129). The paper's best choice.
+    Cosine { dtau: f64 },
+}
+
+impl Window {
+    /// Maximum reveals for this pass. Always in [1, D - i].
+    pub fn limit(&self, i: usize, d: usize) -> usize {
+        debug_assert!(i < d);
+        let remaining = d - i;
+        let w = match *self {
+            Window::Linear => i + 1,
+            Window::Constant(k) => k.max(1),
+            Window::Cosine { dtau } => {
+                // alpha_tau = proportion of masks; invert the cosine
+                // schedule for the equivalent time, advance by dtau, and
+                // take the expected number of newly revealed positions.
+                let alpha = remaining as f64 / d as f64;
+                let tau = 1.0 - 2.0 / std::f64::consts::PI * alpha.acos();
+                let alpha_next = (std::f64::consts::PI / 2.0
+                    * (1.0 - tau + dtau))
+                    .cos()
+                    .max(0.0);
+                (d as f64 * (alpha - alpha_next)).floor() as usize
+            }
+        };
+        w.clamp(1, remaining)
+    }
+
+    /// Parse "linear" | "constant:K" | "cosine:DTAU" (CLI / HTTP API).
+    pub fn parse(s: &str) -> Option<Window> {
+        if s == "linear" {
+            return Some(Window::Linear);
+        }
+        if let Some(k) = s.strip_prefix("constant:") {
+            return k.parse().ok().map(Window::Constant);
+        }
+        if let Some(dt) = s.strip_prefix("cosine:") {
+            return dt.parse().ok().map(|dtau| Window::Cosine { dtau });
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ptest;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn linear_is_i_plus_one() {
+        let w = Window::Linear;
+        assert_eq!(w.limit(0, 64), 1);
+        assert_eq!(w.limit(5, 64), 6);
+        assert_eq!(w.limit(63, 64), 1); // clamped to remaining
+    }
+
+    #[test]
+    fn cosine_matches_closed_form() {
+        // Hand-check one value: D=64, i=32 -> alpha=0.5,
+        // tau = 1 - (2/pi) acos(0.5) = 1 - 2/3 = 1/3.
+        // alpha_next = cos(pi/2 (2/3 + dtau)).
+        let d = 64;
+        let dtau = 0.1;
+        let alpha_next = (std::f64::consts::PI / 2.0 * (2.0 / 3.0 + dtau)).cos();
+        let expect = (64.0 * (0.5 - alpha_next)).floor() as usize;
+        assert_eq!(Window::Cosine { dtau }.limit(32, d), expect.clamp(1, 32));
+    }
+
+    #[test]
+    fn cosine_window_grows_with_i() {
+        // Monotonically increasing reveals as generation progresses
+        // (App. D's motivation), sampled at a few points.
+        let w = Window::Cosine { dtau: 0.05 };
+        let d = 256;
+        let w0 = w.limit(0, d);
+        let w_half = w.limit(d / 2, d);
+        let w_late = w.limit(3 * d / 4, d);
+        assert!(w0 <= w_half && w_half <= w_late,
+                "{w0} {w_half} {w_late}");
+    }
+
+    #[test]
+    fn limits_always_valid_property() {
+        ptest::check(
+            300,
+            0x1d0e5,
+            |rng: &mut Pcg, _| {
+                let d = 2 + rng.below(512);
+                let i = rng.below(d);
+                let kind = rng.below(3);
+                let w = match kind {
+                    0 => Window::Linear,
+                    1 => Window::Constant(1 + rng.below(64)),
+                    _ => Window::Cosine { dtau: 0.001 + rng.f64() * 0.3 },
+                };
+                (w, i, d)
+            },
+            |&(w, i, d)| {
+                let l = w.limit(i, d);
+                if l >= 1 && l <= d - i {
+                    Ok(())
+                } else {
+                    Err(format!("limit {l} outside [1, {}]", d - i))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn parse_forms() {
+        assert_eq!(Window::parse("linear"), Some(Window::Linear));
+        assert_eq!(Window::parse("constant:8"), Some(Window::Constant(8)));
+        assert_eq!(
+            Window::parse("cosine:0.05"),
+            Some(Window::Cosine { dtau: 0.05 })
+        );
+        assert_eq!(Window::parse("bogus"), None);
+    }
+}

@@ -1,0 +1,142 @@
+//! Appendix E FLOP analysis, reproduced exactly.
+//!
+//! The paper derives (following Hoffmann et al. 2022, App. F) the forward
+//! FLOPs of a vanilla transformer and shows the self-speculative
+//! architecture adds only the causal input projection (`2*(3C)*C` per token)
+//! plus the output residual add (`C` per token): a **0.98%** overhead at the
+//! OpenWebText settings. `examples/flops_analysis.rs` regenerates the
+//! numbers of App. E; the unit tests below pin them.
+
+/// Transformer shape parameters (paper notation).
+#[derive(Clone, Copy, Debug)]
+pub struct TransformerShape {
+    /// Base hidden dimension C.
+    pub c: u64,
+    /// Feed-forward hidden dimension F.
+    pub f: u64,
+    /// Number of heads H.
+    pub h: u64,
+    /// Key dimension K.
+    pub k: u64,
+    /// Vocabulary size V.
+    pub v: u64,
+    /// Sequence length S.
+    pub s: u64,
+    /// Number of layers.
+    pub layers: u64,
+}
+
+impl TransformerShape {
+    /// The paper's OpenWebText / GPT2-scale settings (App. E).
+    pub fn paper_owt() -> Self {
+        TransformerShape {
+            c: 768,
+            f: 3072,
+            h: 12,
+            k: 64,
+            v: 50_257,
+            s: 1024,
+            layers: 12,
+        }
+    }
+
+    pub fn embedding(&self) -> u64 {
+        2 * self.s * self.v * self.c
+    }
+
+    pub fn qkv_projection(&self) -> u64 {
+        6 * self.s * self.c * self.k * self.h
+    }
+
+    pub fn kq_matmul(&self) -> u64 {
+        2 * self.s * self.s * self.k * self.h
+    }
+
+    pub fn softmax(&self) -> u64 {
+        3 * self.h * self.s * self.s
+    }
+
+    pub fn softmax_query_reduction(&self) -> u64 {
+        2 * self.s * self.s * self.k * self.h
+    }
+
+    pub fn attn_linear(&self) -> u64 {
+        2 * self.s * self.k * self.h * self.c
+    }
+
+    pub fn attention(&self) -> u64 {
+        self.qkv_projection()
+            + self.kq_matmul()
+            + self.softmax()
+            + self.softmax_query_reduction()
+            + self.attn_linear()
+    }
+
+    pub fn dense_block(&self) -> u64 {
+        4 * self.s * self.c * self.f
+    }
+
+    pub fn final_logits(&self) -> u64 {
+        2 * self.s * self.c * self.v
+    }
+
+    /// Total forward FLOPs of the vanilla transformer. Identical for AR
+    /// models and MDMs — they differ only in the attention mask.
+    pub fn total_vanilla(&self) -> u64 {
+        self.embedding()
+            + self.layers * (self.attention() + self.dense_block())
+            + self.final_logits()
+    }
+
+    /// Extra FLOPs of the self-speculative architecture: the causal input
+    /// projection of [h_cur; h_next; tok_emb] (3C -> C, i.e. 2*3C*C per
+    /// token) plus the output residual add (C per token).
+    pub fn speculative_overhead(&self) -> u64 {
+        self.s * (6 * self.c * self.c + self.c)
+    }
+
+    /// Overhead as a fraction of the vanilla forward cost.
+    pub fn overhead_fraction(&self) -> f64 {
+        self.speculative_overhead() as f64 / self.total_vanilla() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_component_values() {
+        // Appendix E reports these magnitudes for the OWT settings.
+        let t = TransformerShape::paper_owt();
+        assert_eq!(t.embedding(), 2 * 1024 * 50_257 * 768); // 7.9e10
+        assert!((t.qkv_projection() as f64 - 3.6e9).abs() / 3.6e9 < 0.05);
+        assert!((t.kq_matmul() as f64 - 1.6e9).abs() / 1.6e9 < 0.05);
+        assert!((t.softmax() as f64 - 3.7e7).abs() / 3.7e7 < 0.05);
+        assert!((t.attn_linear() as f64 - 1.2e9).abs() / 1.2e9 < 0.05);
+        assert!((t.attention() as f64 - 8e9).abs() / 8e9 < 0.02);
+        assert!((t.dense_block() as f64 - 9.7e9).abs() / 9.7e9 < 0.01);
+        assert!((t.final_logits() as f64 - 7.9e10).abs() / 7.9e10 < 0.01);
+        assert!((t.total_vanilla() as f64 - 3.7e11).abs() / 3.7e11 < 0.02);
+    }
+
+    #[test]
+    fn overhead_is_0_98_percent() {
+        let t = TransformerShape::paper_owt();
+        let frac = t.overhead_fraction();
+        assert!(
+            (frac - 0.0098).abs() < 0.0002,
+            "overhead fraction {frac} != 0.98%"
+        );
+    }
+
+    #[test]
+    fn overhead_shrinks_with_vocab() {
+        // The logits/embedding terms dominate; a larger vocab dilutes the
+        // causal-projection overhead.
+        let mut t = TransformerShape::paper_owt();
+        let base = t.overhead_fraction();
+        t.v *= 2;
+        assert!(t.overhead_fraction() < base);
+    }
+}

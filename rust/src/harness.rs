@@ -1,0 +1,257 @@
+//! Experiment harness support: quality-vs-NFE sweeps and table formatting.
+//!
+//! Every table/figure harness in `examples/` follows the paper's recipe
+//! (Sec. 5.1/5.2): trace a metric-NFE trade-off curve by sweeping sampler
+//! settings (Table 3/4), then read metrics off at fixed NFE levels by
+//! linear interpolation between the two nearest points (Table 1 caption).
+
+use anyhow::Result;
+
+use crate::coordinator::EngineModel;
+use crate::coordinator::SamplerChoice;
+use crate::engine::{MdmParams, Prompt, SpecParams, Window};
+use crate::runtime::{Manifest, PjrtModel, Runtime};
+use crate::util::rng::Pcg;
+
+/// Load + compile a set of models for single-threaded harness use. The
+/// returned `Runtime` must outlive the models only notionally (executables
+/// hold their own client handle) but is returned to make lifetimes obvious.
+pub fn load_models(artifacts: &str, names: &[&str])
+                   -> Result<(Runtime, Manifest,
+                              std::collections::BTreeMap<String, PjrtModel>)> {
+    let manifest = Manifest::load(artifacts)?;
+    let runtime = Runtime::cpu()?;
+    let mut map = std::collections::BTreeMap::new();
+    for name in names {
+        let entry = manifest.model(name)?;
+        eprintln!("[harness] compiling '{name}' (buckets {:?})",
+                  entry.buckets);
+        map.insert(name.to_string(), runtime.load_model(entry)?);
+    }
+    Ok((runtime, manifest, map))
+}
+
+/// One point of a quality-NFE curve: samples generated at some setting.
+#[derive(Clone, Debug)]
+pub struct CurvePoint {
+    pub label: String,
+    pub nfe: f64,
+    /// Flattened samples, `n_samples` rows of `seq_len`.
+    pub samples: Vec<i32>,
+    pub n_samples: usize,
+    pub accept_rate: f64,
+}
+
+/// Generate `n_samples` with a sampler setting, batching through the
+/// model's largest bucket, and average the per-sample NFE.
+pub fn run_point(model: &dyn EngineModel, sampler: &SamplerChoice,
+                 label: &str, n_samples: usize, seed: u64)
+                 -> Result<CurvePoint> {
+    let d = model.seq_len();
+    let bucket = model.max_bucket();
+    let mut rng = Pcg::new(seed);
+    let mut samples = Vec::with_capacity(n_samples * d);
+    let mut nfe_acc = 0.0;
+    let mut acc = 0usize;
+    let mut rej = 0usize;
+    let mut produced = 0;
+    while produced < n_samples {
+        let n = bucket.min(n_samples - produced);
+        let prompts = vec![Prompt::empty(d); n];
+        let out = model.sample(&prompts, sampler, &mut rng)?;
+        for s in out {
+            nfe_acc += s.nfe;
+            acc += s.accepted;
+            rej += s.rejected;
+            samples.extend_from_slice(&s.tokens);
+            produced += 1;
+        }
+    }
+    let decided = (acc + rej).max(1);
+    Ok(CurvePoint {
+        label: label.to_string(),
+        nfe: nfe_acc / n_samples as f64,
+        samples,
+        n_samples,
+        accept_rate: acc as f64 / decided as f64,
+    })
+}
+
+/// The paper's speculative sweep: (n_verify, dtau) setting pairs
+/// (Table 3 for text8, Table 4 for OpenWebText).
+pub fn spec_sweep(model: &dyn EngineModel,
+                  settings: &[(usize, f64)], n_samples: usize, seed: u64)
+                  -> Result<Vec<CurvePoint>> {
+    let mut out = Vec::new();
+    for &(n_verify, dtau) in settings {
+        let sampler = SamplerChoice::Speculative(SpecParams {
+            window: Window::Cosine { dtau },
+            n_verify,
+            ..Default::default()
+        });
+        let label = format!("spec n={n_verify} dtau={dtau}");
+        out.push(run_point(model, &sampler, &label, n_samples, seed)?);
+    }
+    Ok(out)
+}
+
+/// MDM baseline sweep over timestep counts.
+pub fn mdm_sweep(model: &dyn EngineModel, steps_list: &[usize],
+                 n_samples: usize, seed: u64) -> Result<Vec<CurvePoint>> {
+    let mut out = Vec::new();
+    for &steps in steps_list {
+        let sampler =
+            SamplerChoice::Mdm(MdmParams { steps, temperature: 1.0 });
+        out.push(run_point(model, &sampler, &format!("mdm K={steps}"),
+                           n_samples, seed)?);
+    }
+    Ok(out)
+}
+
+/// Linear interpolation of a metric at a fixed NFE level (Table 1 caption:
+/// "values at each NFE are read off by linearly interpolating between the
+/// two nearest points"). Points need not be sorted. Returns None if `nfe`
+/// is outside the curve's range.
+pub fn interp_at(points: &[(f64, f64)], nfe: f64) -> Option<f64> {
+    let mut pts: Vec<(f64, f64)> = points.to_vec();
+    pts.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    if pts.is_empty() || nfe < pts[0].0 - 1e-9
+        || nfe > pts[pts.len() - 1].0 + 1e-9
+    {
+        return None;
+    }
+    for w in pts.windows(2) {
+        let (x0, y0) = w[0];
+        let (x1, y1) = w[1];
+        if nfe >= x0 - 1e-9 && nfe <= x1 + 1e-9 {
+            if (x1 - x0).abs() < 1e-12 {
+                return Some(y0);
+            }
+            let t = (nfe - x0) / (x1 - x0);
+            return Some(y0 + t * (y1 - y0));
+        }
+    }
+    Some(pts[pts.len() - 1].1)
+}
+
+/// Headline metric of the paper: the NFE reduction factor of the
+/// speculative curve vs the baseline at matched quality. For each baseline
+/// point whose quality lies inside the speculative curve's range, find the
+/// speculative NFE achieving the same quality (interpolating NFE as a
+/// function of quality) and average the ratios. Assumes quality improves
+/// with NFE for both curves.
+pub fn nfe_reduction(spec: &[(f64, f64)], baseline: &[(f64, f64)])
+                     -> Option<f64> {
+    // Build quality -> NFE mapping for the speculative curve.
+    let q_to_nfe: Vec<(f64, f64)> =
+        spec.iter().map(|&(nfe, q)| (q, nfe)).collect();
+    let mut ratios = Vec::new();
+    for &(b_nfe, b_q) in baseline {
+        if let Some(s_nfe) = interp_at(&q_to_nfe, b_q) {
+            if s_nfe > 0.0 {
+                ratios.push(b_nfe / s_nfe);
+            }
+        }
+    }
+    if ratios.is_empty() {
+        None
+    } else {
+        Some(ratios.iter().sum::<f64>() / ratios.len() as f64)
+    }
+}
+
+/// Markdown-ish aligned table printer shared by the harnesses.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> =
+            self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                if i < widths.len() {
+                    widths[i] = widths[i].max(c.len());
+                }
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            let mut line = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                let w = widths.get(i).copied().unwrap_or(c.len());
+                line.push_str(&format!(" {c:<w$} |"));
+            }
+            line
+        };
+        println!("{}", fmt_row(&self.header));
+        let sep: Vec<String> =
+            widths.iter().map(|w| "-".repeat(*w)).collect();
+        println!("{}", fmt_row(&sep));
+        for row in &self.rows {
+            println!("{}", fmt_row(row));
+        }
+    }
+}
+
+pub fn fmt_f(x: f64, prec: usize) -> String {
+    format!("{x:.prec$}")
+}
+
+pub fn fmt_opt(x: Option<f64>, prec: usize) -> String {
+    x.map(|v| fmt_f(v, prec)).unwrap_or_else(|| "-".into())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::mock::MockModel;
+
+    #[test]
+    fn interp_basic() {
+        let pts = [(1.0, 10.0), (3.0, 30.0), (2.0, 20.0)];
+        assert!((interp_at(&pts, 2.5).unwrap() - 25.0).abs() < 1e-9);
+        assert!((interp_at(&pts, 1.0).unwrap() - 10.0).abs() < 1e-9);
+        assert_eq!(interp_at(&pts, 0.5), None);
+        assert_eq!(interp_at(&pts, 3.5), None);
+    }
+
+    #[test]
+    fn run_point_counts_and_shapes() {
+        let m = MockModel::new(8, 4, 3);
+        let p = run_point(&m, &SamplerChoice::default(), "x", 5, 1).unwrap();
+        assert_eq!(p.n_samples, 5);
+        assert_eq!(p.samples.len(), 40);
+        assert!(p.nfe > 0.0);
+        assert!(p.accept_rate > 0.0 && p.accept_rate <= 1.0);
+    }
+
+    #[test]
+    fn sweeps_produce_points() {
+        let m = MockModel::new(8, 4, 3);
+        let s = spec_sweep(&m, &[(1, 0.02), (2, 0.1)], 3, 1).unwrap();
+        assert_eq!(s.len(), 2);
+        let md = mdm_sweep(&m, &[2, 8], 3, 1).unwrap();
+        assert_eq!(md.len(), 2);
+        assert!(md[0].nfe <= 2.0 + 1e-9);
+    }
+
+    #[test]
+    fn table_prints() {
+        let mut t = Table::new(&["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.print(); // smoke: no panic
+    }
+}

@@ -1,0 +1,30 @@
+//! # ssmd — Self-Speculative Masked Diffusions
+//!
+//! A three-layer reproduction of *Self-Speculative Masked Diffusions*
+//! (Campbell et al., 2025):
+//!
+//! * **L3 (this crate)** — the serving coordinator: the paper's speculative
+//!   sampling algorithms (Alg. 1–3), window schedules (App. D), exact
+//!   likelihood recursions (Prop. 3.1 / C.2), NFE accounting, a dynamic
+//!   batcher with batch-size buckets, and a threaded HTTP server. Rust owns
+//!   the entire request path.
+//! * **L2/L1 (python/, build time only)** — the hybrid non-causal / causal
+//!   transformer in JAX with a Pallas fused-attention kernel, trained on
+//!   synthetic corpora and AOT-lowered to HLO text artifacts.
+//! * **runtime** — a PJRT wrapper (via the `xla` crate) that loads
+//!   `artifacts/*.hlo.txt` and executes them on the request path.
+//!
+//! Offline-substrate note: tokio / serde / clap / criterion / proptest are
+//! unavailable in this environment, so `util` contains from-scratch
+//! equivalents (threaded server, JSON codec, arg parser, bench-lite,
+//! property-test helper) — see DESIGN.md §2.
+
+pub mod coordinator;
+pub mod engine;
+pub mod harness;
+pub mod flops;
+pub mod likelihood;
+pub mod oracle;
+pub mod runtime;
+pub mod server;
+pub mod util;

@@ -1,0 +1,460 @@
+//! Exact likelihood of Algorithm 2 — Propositions 3.1 and C.2.
+//!
+//! The inner-loop target distribution shifts whenever a rejection occurs
+//! (the non-causal conditioning gains the freshly revealed tokens), so the
+//! likelihood of a full sequence naively sums over exponentially many
+//! accept/reject paths. Prop. 3.1 gives an O(D^2) dynamic program over the
+//! "last rejection position"; Prop. C.2 extends it with the rejection-count
+//! posterior p(N^D | x, sigma) (one plus the number of rejections = the
+//! number of forward passes Algorithm 2 spends on the sequence).
+//!
+//! Everything reduces (Lemma C.1) to per-position scalars under each
+//! possible conditioning context c (= number of revealed tokens at the last
+//! rejection):
+//!
+//!   accept mass  a(c, d) = min(p_c(x_d), q_c(x_d))
+//!   reject mass  r(c, d) = max(0, q_c(x_d) - p_c(x_d))
+//!
+//! which `SpecTable` tabulates — either from closed-form mocks (tests) or
+//! from D draft + D verify passes of a real model (`from_model`, batched
+//! into the model's buckets).
+
+use crate::engine::softmax::softmax_row;
+use crate::engine::HybridModel;
+
+const NEG_INF: f64 = f64::NEG_INFINITY;
+
+/// Per-context / per-position probabilities of the *observed* tokens.
+///
+/// `p[c][d]` = draft probability of token x_sigma(d) when the non-causal
+/// context is the first `c` ordering positions; `q[c][d]` = the causal
+/// target probability with the same context (track `d-1`). Both are defined
+/// for `d >= c`; entries below the diagonal are unused. The first-position
+/// rule requires `q[0][0] == p[0][0]`.
+#[derive(Clone, Debug)]
+pub struct SpecTable {
+    pub d: usize,
+    pub p: Vec<Vec<f64>>,
+    pub q: Vec<Vec<f64>>,
+}
+
+impl SpecTable {
+    /// Tabulate from a model for a given sample and ordering. Runs D draft
+    /// and D verify passes, chunked into the model's largest batch bucket
+    /// (O(D) network passes total, as in Prop. 3.1).
+    pub fn from_model<M: HybridModel>(model: &M, tokens: &[i32],
+                                      sigma: &[i32]) -> SpecTable {
+        let d = model.seq_len();
+        let v = model.vocab();
+        let mask = model.mask_id();
+        assert_eq!(tokens.len(), d);
+        assert_eq!(sigma.len(), d);
+        let bucket = model.buckets().into_iter().max().unwrap_or(1);
+
+        let mut p = vec![vec![0.0; d]; d];
+        let mut q = vec![vec![0.0; d]; d];
+
+        let contexts: Vec<usize> = (0..d).collect();
+        for chunk in contexts.chunks(bucket) {
+            let rows = chunk.len();
+            // Build masked contexts: row r reveals the first chunk[r]
+            // ordering positions.
+            let mut masked = vec![mask; bucket * d];
+            for (r, &c) in chunk.iter().enumerate() {
+                for &posi in sigma.iter().take(c) {
+                    masked[r * d + posi as usize] = tokens[posi as usize];
+                }
+            }
+            let (state, draft_logits) = model.draft(&masked, bucket);
+            let full: Vec<i32> = (0..bucket)
+                .flat_map(|_| tokens.iter().copied())
+                .collect();
+            let sig: Vec<i32> = (0..bucket)
+                .flat_map(|_| sigma.iter().copied())
+                .collect();
+            let target_logits = model.verify(&state, &full, &sig, bucket);
+
+            for (r, &c) in chunk.iter().enumerate().take(rows) {
+                for dd in c..d {
+                    let pos = sigma[dd] as usize;
+                    let tok = tokens[pos] as usize;
+                    let row = &draft_logits
+                        [(r * d + pos) * v..(r * d + pos) * v + v];
+                    p[c][dd] = softmax_row(row)[tok];
+                    if dd == 0 {
+                        q[c][dd] = p[c][dd]; // first-position rule
+                    } else {
+                        let tr = (r * d + (dd - 1)) * v;
+                        q[c][dd] =
+                            softmax_row(&target_logits[tr..tr + v])[tok];
+                    }
+                }
+            }
+        }
+        SpecTable { d, p, q }
+    }
+
+    #[inline]
+    fn ln_accept(&self, c: usize, d: usize) -> f64 {
+        let a = self.p[c][d].min(self.q[c][d]);
+        if a > 0.0 {
+            a.ln()
+        } else {
+            NEG_INF
+        }
+    }
+
+    #[inline]
+    fn ln_reject(&self, c: usize, d: usize) -> f64 {
+        let r = (self.q[c][d] - self.p[c][d]).max(0.0);
+        if r > 0.0 {
+            r.ln()
+        } else {
+            NEG_INF
+        }
+    }
+}
+
+fn log_sum_exp(xs: &[f64]) -> f64 {
+    let m = xs.iter().copied().fold(NEG_INF, f64::max);
+    if m == NEG_INF {
+        return NEG_INF;
+    }
+    m + xs.iter().map(|x| (x - m).exp()).sum::<f64>().ln()
+}
+
+/// Prop. 3.1: log p(x^sigma(1:D) | sigma) under Algorithm 2, O(D^2).
+pub fn log_likelihood(t: &SpecTable) -> f64 {
+    let d = t.d;
+    // acc[c][j] = sum_{l=c..j-1} ln a(c, l): log prob that positions c..j-1
+    // are all accepted when the last rejection left context c.
+    // Stored as prefix sums per context for O(1) range queries.
+    let mut acc = vec![vec![0.0; d + 1]; d];
+    for c in 0..d {
+        for l in c..d {
+            acc[c][l + 1] = acc[c][l] + t.ln_accept(c, l);
+        }
+    }
+    // r[dd] = ln p(x^{1..dd}, R at ordering position dd-1) (1-indexed dd).
+    let mut r = vec![NEG_INF; d + 1];
+    let mut terms = Vec::with_capacity(d);
+    for dd in 1..=d {
+        terms.clear();
+        // Last rejection before this one left context c = k-1; positions
+        // k-1 .. dd-2 (0-indexed) accepted, position dd-1 rejected.
+        for k in 1..=dd {
+            let c = k - 1;
+            let prev = if c == 0 { 0.0 } else { r[c] };
+            if prev == NEG_INF {
+                continue;
+            }
+            let a = acc[c][dd - 1] - acc[c][c]; // accepts c..dd-2
+            let rej = t.ln_reject(c, dd - 1);
+            terms.push(prev + a + rej);
+        }
+        r[dd] = log_sum_exp(&terms);
+    }
+    // Total: all-accept path + sum over last-rejection positions.
+    let mut total = Vec::with_capacity(d + 1);
+    total.push(acc[0][d] - acc[0][0]);
+    for dd in 1..=d {
+        if r[dd] == NEG_INF {
+            continue;
+        }
+        let tail = if dd < d { acc[dd][d] - acc[dd][dd] } else { 0.0 };
+        total.push(r[dd] + tail);
+    }
+    log_sum_exp(&total)
+}
+
+/// Simple-recursion oracle: walk positions left to right carrying the
+/// current context (last rejection point); exponential-looking but
+/// mathematically identical — used to validate the Prop. 3.1 decomposition.
+pub fn brute_force_log_likelihood(t: &SpecTable) -> f64 {
+    fn rec(t: &SpecTable, d: usize, c: usize) -> f64 {
+        if d == t.d {
+            return 1.0;
+        }
+        let a = t.p[c][d].min(t.q[c][d]);
+        let r = (t.q[c][d] - t.p[c][d]).max(0.0);
+        let mut total = 0.0;
+        if a > 0.0 {
+            total += a * rec(t, d + 1, c); // accept keeps the context
+        }
+        if r > 0.0 {
+            total += r * rec(t, d + 1, d + 1); // reject resets it
+        }
+        total
+    }
+    rec(t, 0, 0).ln()
+}
+
+/// Prop. C.2: posterior p(N^D = n | x, sigma) over the number of
+/// rejections, n = 0..D. Algorithm 2 spends (n + 1) draft passes on the
+/// sequence, so this also gives the exact NFE posterior.
+pub fn rejection_posterior(t: &SpecTable) -> Vec<f64> {
+    let d = t.d;
+    let mut acc = vec![vec![0.0; d + 1]; d];
+    for c in 0..d {
+        for l in c..d {
+            acc[c][l + 1] = acc[c][l] + t.ln_accept(c, l);
+        }
+    }
+    // rn[dd][n] = ln p(x^{1..dd}, R^{dd}, N = n).
+    let mut rn = vec![vec![NEG_INF; d + 1]; d + 1];
+    rn[0][0] = 0.0;
+    for dd in 1..=d {
+        for n in 1..=dd {
+            let mut terms = Vec::new();
+            for k in 1..=dd {
+                let c = k - 1;
+                let prev = rn[c][n - 1];
+                if prev == NEG_INF {
+                    continue;
+                }
+                let a = acc[c][dd - 1] - acc[c][c];
+                let rej = t.ln_reject(c, dd - 1);
+                terms.push(prev + a + rej);
+            }
+            rn[dd][n] = log_sum_exp(&terms);
+        }
+    }
+    // p(x, N=n) = sum_{dd=0..D} rn[dd][n] * (all-accept tail from dd).
+    let mut joint = vec![NEG_INF; d + 1];
+    for n in 0..=d {
+        let mut terms = Vec::new();
+        for dd in 0..=d {
+            if rn[dd][n] == NEG_INF {
+                continue;
+            }
+            let tail = if dd < d { acc[dd][d] - acc[dd][dd] } else { 0.0 };
+            terms.push(rn[dd][n] + tail);
+        }
+        joint[n] = log_sum_exp(&terms);
+    }
+    let z = log_sum_exp(&joint);
+    joint.iter().map(|&j| (j - z).exp()).collect()
+}
+
+/// Brute-force oracle for the rejection-count joint (validation).
+pub fn brute_force_rejection_posterior(t: &SpecTable) -> Vec<f64> {
+    fn rec(t: &SpecTable, d: usize, c: usize, n: usize, w: f64,
+           out: &mut [f64]) {
+        if d == t.d {
+            out[n] += w;
+            return;
+        }
+        let a = t.p[c][d].min(t.q[c][d]);
+        let r = (t.q[c][d] - t.p[c][d]).max(0.0);
+        if a > 0.0 {
+            rec(t, d + 1, c, n, w * a, out);
+        }
+        if r > 0.0 {
+            rec(t, d + 1, d + 1, n + 1, w * r, out);
+        }
+    }
+    let mut out = vec![0.0; t.d + 1];
+    rec(t, 0, 0, 0, 1.0, &mut out);
+    let z: f64 = out.iter().sum();
+    out.iter_mut().for_each(|x| *x /= z);
+    out
+}
+
+/// Monte-Carlo ELBO of Eq. 12: E_sigma[log p(x | sigma)] <= log p(x).
+pub fn elbo<M: HybridModel>(model: &M, tokens: &[i32], n_orderings: usize,
+                            rng: &mut crate::util::rng::Pcg) -> f64 {
+    let d = model.seq_len();
+    let mut acc = 0.0;
+    for _ in 0..n_orderings {
+        let sigma = rng.permutation(d);
+        let table = SpecTable::from_model(model, tokens, &sigma);
+        acc += log_likelihood(&table);
+    }
+    acc / n_orderings as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::mock::MockModel;
+    use crate::engine::{speculative_sample, Prompt, SpecParams, Window};
+    use crate::util::ptest::{self, Size};
+    use crate::util::rng::Pcg;
+
+    /// Random consistent table: arbitrary per-token probabilities in (0,1)
+    /// with the first-position rule enforced.
+    fn random_table(rng: &mut Pcg, d: usize) -> SpecTable {
+        let mut p = vec![vec![0.0; d]; d];
+        let mut q = vec![vec![0.0; d]; d];
+        for c in 0..d {
+            for dd in c..d {
+                p[c][dd] = 0.05 + rng.f64() * 0.9;
+                q[c][dd] = 0.05 + rng.f64() * 0.9;
+            }
+        }
+        q[0][0] = p[0][0];
+        SpecTable { d, p, q }
+    }
+
+    #[test]
+    fn dp_matches_brute_force_property() {
+        ptest::check(
+            60,
+            0x51ab,
+            |rng: &mut Pcg, s: Size| random_table(rng, 2 + s.0.min(8)),
+            |t| {
+                let dp = log_likelihood(t);
+                let bf = brute_force_log_likelihood(t);
+                if (dp - bf).abs() < 1e-9 {
+                    Ok(())
+                } else {
+                    Err(format!("dp {dp} != brute force {bf}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn rejection_posterior_matches_brute_force() {
+        ptest::check(
+            40,
+            0xc2,
+            |rng: &mut Pcg, s: Size| random_table(rng, 2 + s.0.min(7)),
+            |t| {
+                let dp = rejection_posterior(t);
+                let bf = brute_force_rejection_posterior(t);
+                for (a, b) in dp.iter().zip(&bf) {
+                    if (a - b).abs() > 1e-9 {
+                        return Err(format!("{dp:?} vs {bf:?}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn posterior_sums_to_one_and_consistent_with_likelihood() {
+        let mut rng = Pcg::new(77);
+        let t = random_table(&mut rng, 7);
+        let post = rejection_posterior(&t);
+        assert!((post.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        // N = 0 requires the all-accept path: p(N=0|x) = exp(A - loglik).
+        let all_accept: f64 =
+            (0..7).map(|l| t.p[0][l].min(t.q[0][l]).ln()).sum();
+        let expect = (all_accept - log_likelihood(&t)).exp();
+        assert!((post[0] - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn all_accept_when_q_equals_p() {
+        // target == draft: rejection mass is zero everywhere, so the
+        // likelihood is the plain product of draft probabilities and
+        // p(N=0) = 1.
+        let d = 5;
+        let mut rng = Pcg::new(3);
+        let mut t = random_table(&mut rng, d);
+        t.q = t.p.clone();
+        let expect: f64 = (0..d).map(|l| t.p[0][l].ln()).sum();
+        assert!((log_likelihood(&t) - expect).abs() < 1e-9);
+        let post = rejection_posterior(&t);
+        assert!((post[0] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn from_model_table_shape_and_first_position_rule() {
+        let m = MockModel::new(6, 4, 21);
+        let tokens = vec![0, 1, 2, 3, 0, 1];
+        let mut rng = Pcg::new(4);
+        let sigma = rng.permutation(6);
+        let t = SpecTable::from_model(&m, &tokens, &sigma);
+        assert_eq!(t.d, 6);
+        assert!((t.q[0][0] - t.p[0][0]).abs() < 1e-12);
+        for c in 0..6 {
+            for dd in c..6 {
+                assert!(t.p[c][dd] > 0.0 && t.p[c][dd] < 1.0);
+                assert!(t.q[c][dd] > 0.0 && t.q[c][dd] < 1.0);
+            }
+        }
+    }
+
+    /// End-to-end statistical check: empirical sampling frequencies of
+    /// Algorithm 2 (window = D, one verify pass per draft) must match the
+    /// Prop. 3.1 likelihood for every outcome of a tiny model.
+    #[test]
+    fn sampler_frequencies_match_likelihood() {
+        let d = 4;
+        let v = 2;
+        let m = MockModel::new(d, v, 123);
+        let sigma: Vec<i32> = vec![2, 0, 3, 1];
+        let params = SpecParams {
+            window: Window::Constant(d),
+            n_verify: 1,
+            sigma: Some(sigma.clone()),
+            ..Default::default()
+        };
+        let n_samples = 40_000;
+        let mut counts = std::collections::HashMap::new();
+        let mut rng = Pcg::new(9);
+        for _ in 0..n_samples {
+            let (s, _) = speculative_sample(&m, &[Prompt::empty(d)], &params,
+                                            &mut rng);
+            *counts.entry(s[0].tokens.clone()).or_insert(0usize) += 1;
+        }
+        // Compare every outcome with >= 100 observations.
+        for (tokens, count) in counts {
+            if count < 100 {
+                continue;
+            }
+            let t = SpecTable::from_model(&m, &tokens, &sigma);
+            let model_p = log_likelihood(&t).exp();
+            let emp = count as f64 / n_samples as f64;
+            let sd = (model_p * (1.0 - model_p) / n_samples as f64).sqrt();
+            assert!(
+                (emp - model_p).abs() < 5.0 * sd + 1e-3,
+                "tokens {tokens:?}: empirical {emp:.4} vs model {model_p:.4}"
+            );
+        }
+    }
+
+    /// The rejection-count posterior must predict the sampler's observed
+    /// rejection counts conditioned on the produced sequence.
+    #[test]
+    fn rejection_posterior_matches_sampler() {
+        let d = 3;
+        let m = MockModel::new(d, 2, 55);
+        let sigma: Vec<i32> = vec![1, 2, 0];
+        let params = SpecParams {
+            window: Window::Constant(d),
+            n_verify: 1,
+            sigma: Some(sigma.clone()),
+            ..Default::default()
+        };
+        let mut rng = Pcg::new(10);
+        // Conditioned on the most frequent outcome.
+        let mut by_outcome: std::collections::HashMap<Vec<i32>, Vec<usize>> =
+            Default::default();
+        for _ in 0..30_000 {
+            let (s, _) = speculative_sample(&m, &[Prompt::empty(d)], &params,
+                                            &mut rng);
+            by_outcome
+                .entry(s[0].tokens.clone())
+                .or_default()
+                .push(s[0].rejected);
+        }
+        let (tokens, rejs) =
+            by_outcome.into_iter().max_by_key(|(_, v)| v.len()).unwrap();
+        let t = SpecTable::from_model(&m, &tokens, &sigma);
+        let post = rejection_posterior(&t);
+        let n = rejs.len() as f64;
+        for nn in 0..=d {
+            let emp = rejs.iter().filter(|&&r| r == nn).count() as f64 / n;
+            let sd = (post[nn] * (1.0 - post[nn]) / n).sqrt();
+            assert!(
+                (emp - post[nn]).abs() < 5.0 * sd + 2e-2,
+                "N={nn}: empirical {emp:.3} vs posterior {:.3}",
+                post[nn]
+            );
+        }
+    }
+}

@@ -1,0 +1,230 @@
+//! ssmd CLI — leader entrypoint.
+//!
+//! Subcommands:
+//!   serve     start the HTTP serving coordinator
+//!   generate  sample from a model and print tokens / decoded text
+//!   score     exact likelihood + rejection posterior of a token sequence
+//!   flops     reproduce the Appendix E FLOP analysis
+//!   models    list models in the artifact manifest
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use ssmd::coordinator::{
+    BatcherConfig, Coordinator, EngineModel, GenRequest, ModelMap,
+    SamplerChoice, ScoreRequest,
+};
+use ssmd::engine::{MdmParams, SpecParams, Window};
+use ssmd::flops::TransformerShape;
+use ssmd::oracle;
+use ssmd::runtime::{Manifest, Runtime};
+use ssmd::server::Server;
+use ssmd::util::args::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args
+        .positional()
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("help")
+        .to_string();
+    let result = match cmd.as_str() {
+        "serve" => cmd_serve(&args),
+        "generate" => cmd_generate(&args),
+        "score" => cmd_score(&args),
+        "flops" => cmd_flops(),
+        "models" => cmd_models(&args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "ssmd — Self-Speculative Masked Diffusions serving stack\n\n\
+         USAGE: ssmd <command> [--flags]\n\n\
+         COMMANDS:\n\
+         \x20 serve     --artifacts DIR --addr 127.0.0.1:8080 [--models a,b]\n\
+         \x20 generate  --artifacts DIR --model NAME [--n 4] [--sampler\n\
+         \x20           speculative|mdm] [--window cosine:0.05] [--n-verify 1]\n\
+         \x20           [--steps 64] [--seed 0] [--decode text8]\n\
+         \x20 score     --artifacts DIR --model NAME --tokens 1,2,3 [--seed 0]\n\
+         \x20 flops     reproduce Appendix E\n\
+         \x20 models    --artifacts DIR"
+    );
+}
+
+/// Build the engine-thread model factory for the given artifact dir.
+fn model_factory(artifacts: String, only: Option<Vec<String>>)
+                 -> impl FnOnce() -> Result<ModelMap> + Send + 'static {
+    move || {
+        let manifest = Manifest::load(&artifacts)?;
+        let runtime = Runtime::cpu()?;
+        eprintln!("pjrt platform: {}", runtime.platform());
+        let mut map: ModelMap = BTreeMap::new();
+        for (name, entry) in &manifest.models {
+            if let Some(only) = &only {
+                if !only.contains(name) {
+                    continue;
+                }
+            }
+            eprintln!("compiling model '{name}' (buckets {:?})",
+                      entry.buckets);
+            map.insert(
+                name.clone(),
+                Box::new(runtime.load_model(entry)?) as Box<dyn EngineModel>,
+            );
+        }
+        if map.is_empty() {
+            return Err(anyhow!("no models loaded from {artifacts}"));
+        }
+        Ok(map)
+    }
+}
+
+fn start_coordinator(args: &Args) -> Result<Coordinator> {
+    let artifacts = args.str("artifacts", "artifacts");
+    let only = args
+        .opt_str("models")
+        .map(|s| s.split(',').map(|x| x.trim().to_string()).collect());
+    Coordinator::start(
+        model_factory(artifacts, only),
+        BatcherConfig {
+            max_wait: Duration::from_millis(args.u64("batch-wait-ms", 5)),
+        },
+    )
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let coordinator = start_coordinator(args)?;
+    let addr = args.str("addr", "127.0.0.1:8080");
+    Server::new(coordinator).serve(&addr)
+}
+
+fn sampler_from_args(args: &Args) -> Result<SamplerChoice> {
+    Ok(match args.str("sampler", "speculative").as_str() {
+        "speculative" => {
+            let w = args.str("window", "cosine:0.05");
+            SamplerChoice::Speculative(SpecParams {
+                window: Window::parse(&w)
+                    .ok_or_else(|| anyhow!("bad --window '{w}'"))?,
+                n_verify: args.usize("n-verify", 1).max(1),
+                temperature: args.f64("temperature", 1.0),
+                ..Default::default()
+            })
+        }
+        "mdm" => SamplerChoice::Mdm(MdmParams {
+            steps: args.usize("steps", 64).max(1),
+            temperature: args.f64("temperature", 1.0),
+        }),
+        other => return Err(anyhow!("unknown sampler '{other}'")),
+    })
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let coordinator = start_coordinator(args)?;
+    let model = args
+        .opt_str("model")
+        .ok_or_else(|| anyhow!("--model required"))?;
+    let resp = coordinator.generate(GenRequest {
+        model,
+        n_samples: args.usize("n", 4),
+        sampler: sampler_from_args(args)?,
+        seed: args.u64("seed", 0),
+        deterministic: args.bool("deterministic"),
+        prompt: None,
+    })?;
+    let decode = args.str("decode", "none");
+    for (i, s) in resp.samples.iter().enumerate() {
+        println!(
+            "--- sample {i}: nfe={:.2} outer={} accepted={} rejected={}",
+            s.nfe, s.outer_loops, s.accepted, s.rejected
+        );
+        if decode == "text8" {
+            println!("{}", oracle::decode_chars(&s.tokens));
+        } else {
+            println!("{:?}", s.tokens);
+        }
+    }
+    println!("wall: {:.3}s for {} samples", resp.wall_s,
+             resp.samples.len());
+    coordinator.shutdown();
+    Ok(())
+}
+
+fn cmd_score(args: &Args) -> Result<()> {
+    let coordinator = start_coordinator(args)?;
+    let model = args
+        .opt_str("model")
+        .ok_or_else(|| anyhow!("--model required"))?;
+    let tokens: Vec<i32> = args
+        .opt_str("tokens")
+        .ok_or_else(|| anyhow!("--tokens required (comma separated)"))?
+        .split(',')
+        .filter_map(|t| t.trim().parse().ok())
+        .collect();
+    let resp = coordinator.score(ScoreRequest {
+        model,
+        tokens,
+        sigma: None,
+        seed: Some(args.u64("seed", 0)),
+        with_posterior: true,
+    })?;
+    println!("log-likelihood (Prop 3.1): {:.4} nats", resp.log_likelihood);
+    if let Some(post) = resp.rejection_posterior {
+        let mean: f64 =
+            post.iter().enumerate().map(|(n, p)| n as f64 * p).sum();
+        println!("rejection posterior (Prop C.2): E[N] = {mean:.2}");
+        for (n, p) in post.iter().enumerate().filter(|(_, p)| **p > 1e-3) {
+            println!("  p(N={n}) = {p:.4}");
+        }
+    }
+    coordinator.shutdown();
+    Ok(())
+}
+
+fn cmd_flops() -> Result<()> {
+    let t = TransformerShape::paper_owt();
+    println!("Appendix E FLOP analysis (paper OWT settings)");
+    println!("  embedding          = {:.3e}", t.embedding() as f64);
+    println!("  qkv projection     = {:.3e}", t.qkv_projection() as f64);
+    println!("  k@q                = {:.3e}", t.kq_matmul() as f64);
+    println!("  softmax            = {:.3e}", t.softmax() as f64);
+    println!("  softmax@query red. = {:.3e}",
+             t.softmax_query_reduction() as f64);
+    println!("  linear             = {:.3e}", t.attn_linear() as f64);
+    println!("  attention total    = {:.3e}", t.attention() as f64);
+    println!("  dense block        = {:.3e}", t.dense_block() as f64);
+    println!("  final logits       = {:.3e}", t.final_logits() as f64);
+    println!("  TOTAL vanilla      = {:.3e}", t.total_vanilla() as f64);
+    println!("  spec overhead      = {:.3e}",
+             t.speculative_overhead() as f64);
+    println!("  overhead fraction  = {:.2}% (paper: 0.98%)",
+             100.0 * t.overhead_fraction());
+    Ok(())
+}
+
+fn cmd_models(args: &Args) -> Result<()> {
+    let manifest = Manifest::load(&args.str("artifacts", "artifacts"))?;
+    for (name, e) in &manifest.models {
+        println!(
+            "{name}: D={} V={} {}nc+{}c buckets={:?} verify={}",
+            e.config.seq_len,
+            e.config.vocab_size,
+            e.config.n_noncausal,
+            e.config.n_causal,
+            e.buckets,
+            e.has_verify()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,193 @@
+//! HMM oracle: the exact-likelihood pLDDT proxy for the protein task
+//! (Fig. 4's ESMFold substitute). Reproduces python/train/hmm.py: scaled
+//! forward algorithm + fixed logistic calibration to a [0, 100] score.
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+pub struct HmmOracle {
+    pub k: usize,
+    pub n_obs: usize,
+    pub init: Vec<f64>,
+    /// trans[i * k + j] = p(z' = j | z = i).
+    pub trans: Vec<f64>,
+    /// emis[i * n_obs + o] = p(x = o | z = i).
+    pub emis: Vec<f64>,
+    pub calib_mu: f64,
+    pub calib_sigma: f64,
+    pub calib_scale: f64,
+    pub calib_offset: f64,
+}
+
+impl HmmOracle {
+    pub fn from_spec_file(path: &str) -> Result<HmmOracle> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path}"))?;
+        Self::from_json(&Json::parse(&text).map_err(|e| anyhow!("{e}"))?)
+    }
+
+    pub fn from_json(v: &Json) -> Result<HmmOracle> {
+        let init = v
+            .get("init")
+            .and_then(|x| x.as_f64_vec())
+            .ok_or_else(|| anyhow!("missing init"))?;
+        let k = init.len();
+        let flat = |key: &str| -> Result<(Vec<f64>, usize)> {
+            let rows = v
+                .get(key)
+                .and_then(|x| x.as_arr())
+                .ok_or_else(|| anyhow!("missing {key}"))?;
+            let mut out = Vec::new();
+            let mut width = 0;
+            for r in rows {
+                let row = r.as_f64_vec().ok_or_else(|| anyhow!("bad row"))?;
+                width = row.len();
+                out.extend(row);
+            }
+            Ok((out, width))
+        };
+        let (trans, tw) = flat("trans")?;
+        let (emis, n_obs) = flat("emis")?;
+        if tw != k || trans.len() != k * k || emis.len() != k * n_obs {
+            return Err(anyhow!("inconsistent hmm dims"));
+        }
+        let g = |key: &str, d: f64| {
+            v.get(key).and_then(|x| x.as_f64()).unwrap_or(d)
+        };
+        Ok(HmmOracle {
+            k,
+            n_obs,
+            init,
+            trans,
+            emis,
+            calib_mu: g("calib_mu", 0.0),
+            calib_sigma: g("calib_sigma", 1.0),
+            calib_scale: g("calib_scale", 1.5),
+            calib_offset: g("calib_offset", 1.7),
+        })
+    }
+
+    /// Exact log p(seq) via the scaled forward algorithm.
+    pub fn loglik(&self, seq: &[i32]) -> f64 {
+        assert!(!seq.is_empty());
+        let k = self.k;
+        let mut a: Vec<f64> = (0..k)
+            .map(|z| self.init[z] * self.emis[z * self.n_obs + seq[0] as usize])
+            .collect();
+        let mut ll = 0.0;
+        let s: f64 = a.iter().sum();
+        ll += s.ln();
+        a.iter_mut().for_each(|x| *x /= s);
+        let mut next = vec![0.0; k];
+        for &obs in &seq[1..] {
+            for j in 0..k {
+                let mut acc = 0.0;
+                for i in 0..k {
+                    acc += a[i] * self.trans[i * k + j];
+                }
+                next[j] = acc * self.emis[j * self.n_obs + obs as usize];
+            }
+            let s: f64 = next.iter().sum();
+            ll += s.ln();
+            for j in 0..k {
+                a[j] = next[j] / s;
+            }
+        }
+        ll
+    }
+
+    pub fn per_residue_ll(&self, seq: &[i32]) -> f64 {
+        self.loglik(seq) / seq.len() as f64
+    }
+
+    /// pLDDT proxy: logistic calibration of the per-residue log-likelihood,
+    /// matching python/train/hmm.py `plddt_proxy`.
+    pub fn plddt(&self, seq: &[i32]) -> f64 {
+        let z = (self.per_residue_ll(seq) - self.calib_mu) / self.calib_sigma;
+        let x = self.calib_scale * z + self.calib_offset;
+        100.0 / (1.0 + (-x).exp())
+    }
+
+    /// (mean, standard error of the mean) of pLDDT over a batch — Fig. 4
+    /// reports mean with SEM shading over 512 samples.
+    pub fn plddt_mean_sem(&self, samples: &[i32], seq_len: usize)
+                          -> (f64, f64) {
+        let rows = samples.len() / seq_len;
+        let vals: Vec<f64> = (0..rows)
+            .map(|r| self.plddt(&samples[r * seq_len..(r + 1) * seq_len]))
+            .collect();
+        let mean = vals.iter().sum::<f64>() / rows as f64;
+        let var = vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>()
+            / (rows.max(2) - 1) as f64;
+        (mean, (var / rows as f64).sqrt())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> HmmOracle {
+        // 2 states, 2 observations.
+        HmmOracle {
+            k: 2,
+            n_obs: 2,
+            init: vec![0.6, 0.4],
+            trans: vec![0.7, 0.3, 0.2, 0.8],
+            emis: vec![0.9, 0.1, 0.25, 0.75],
+            calib_mu: -0.6,
+            calib_sigma: 0.1,
+            calib_scale: 1.5,
+            calib_offset: 1.7,
+        }
+    }
+
+    #[test]
+    fn forward_matches_enumeration() {
+        let o = tiny();
+        let seq = [0i32, 1, 1];
+        // Brute force over hidden paths.
+        let mut p = 0.0;
+        for z0 in 0..2 {
+            for z1 in 0..2 {
+                for z2 in 0..2 {
+                    p += o.init[z0]
+                        * o.emis[z0 * 2 + 0]
+                        * o.trans[z0 * 2 + z1]
+                        * o.emis[z1 * 2 + 1]
+                        * o.trans[z1 * 2 + z2]
+                        * o.emis[z2 * 2 + 1];
+                }
+            }
+        }
+        assert!((o.loglik(&seq) - p.ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn plddt_monotone_in_loglik() {
+        let o = tiny();
+        // seq likely under the model vs unlikely.
+        let good = [0i32, 0, 0];
+        let bad = [1i32, 0, 1];
+        if o.per_residue_ll(&good) > o.per_residue_ll(&bad) {
+            assert!(o.plddt(&good) > o.plddt(&bad));
+        }
+    }
+
+    #[test]
+    fn plddt_in_range() {
+        let o = tiny();
+        let v = o.plddt(&[0, 1, 0, 1]);
+        assert!((0.0..=100.0).contains(&v));
+    }
+
+    #[test]
+    fn mean_sem_sane() {
+        let o = tiny();
+        let batch = [0i32, 0, 1, 1, 0, 1, 1, 0];
+        let (m, sem) = o.plddt_mean_sem(&batch, 2);
+        assert!((0.0..=100.0).contains(&m));
+        assert!(sem >= 0.0);
+    }
+}

@@ -1,0 +1,99 @@
+//! Text metrics: char decoding, spelling accuracy (Sec. 5.1) and unigram
+//! token entropy (Sec. 5.2), matching python/train/data.py exactly.
+
+use std::collections::{HashMap, HashSet};
+
+/// text8 char vocabulary: 0 = space, 1..=26 = 'a'..'z'.
+pub fn decode_chars(ids: &[i32]) -> String {
+    ids.iter()
+        .map(|&i| {
+            if i == 0 {
+                ' '
+            } else {
+                (b'a' + (i as u8).saturating_sub(1).min(25)) as char
+            }
+        })
+        .collect()
+}
+
+/// Fraction of whitespace-delimited words in the samples that appear in the
+/// lexicon (paper Sec. 5.1: "proportion of words within the sample that
+/// also appear in the training dataset").
+pub fn spelling_accuracy(samples: &[i32], seq_len: usize,
+                         lexicon: &[String]) -> f64 {
+    let vocab: HashSet<&str> = lexicon.iter().map(|s| s.as_str()).collect();
+    let rows = samples.len() / seq_len;
+    let mut total = 0usize;
+    let mut good = 0usize;
+    for r in 0..rows {
+        let text = decode_chars(&samples[r * seq_len..(r + 1) * seq_len]);
+        for w in text.split(' ') {
+            if w.is_empty() {
+                continue;
+            }
+            total += 1;
+            good += vocab.contains(w) as usize;
+        }
+    }
+    good as f64 / total.max(1) as f64
+}
+
+/// Per-sample unigram entropy in nats, averaged over samples (Sec. 5.2).
+pub fn unigram_entropy(samples: &[i32], seq_len: usize) -> f64 {
+    let rows = samples.len() / seq_len;
+    let mut acc = 0.0;
+    for r in 0..rows {
+        let row = &samples[r * seq_len..(r + 1) * seq_len];
+        let mut counts: HashMap<i32, usize> = HashMap::new();
+        for &t in row {
+            *counts.entry(t).or_default() += 1;
+        }
+        let n = row.len() as f64;
+        let ent: f64 = counts
+            .values()
+            .map(|&c| {
+                let p = c as f64 / n;
+                -p * p.ln()
+            })
+            .sum();
+        acc += ent;
+    }
+    acc / rows.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decode_roundtrip() {
+        assert_eq!(decode_chars(&[8, 9, 0, 20, 8, 5, 18, 5]), "hi there");
+    }
+
+    #[test]
+    fn accuracy_counts_words() {
+        // "hi there hix" with lexicon {hi, there} -> 2/3.
+        let ids: Vec<i32> = "hi there hix"
+            .chars()
+            .map(|c| if c == ' ' { 0 } else { c as i32 - 'a' as i32 + 1 })
+            .collect();
+        let lex = vec!["hi".to_string(), "there".to_string()];
+        let acc = spelling_accuracy(&ids, ids.len(), &lex);
+        assert!((acc - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn entropy_extremes() {
+        // All-same tokens: entropy 0. Uniform over 4: ln 4.
+        assert_eq!(unigram_entropy(&[3, 3, 3, 3], 4), 0.0);
+        let e = unigram_entropy(&[0, 1, 2, 3], 4);
+        assert!((e - 4f64.ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn entropy_averages_samples() {
+        let e = unigram_entropy(&[1, 1, 0, 1], 2);
+        let expect = (0.0 + 2f64.ln()) / 2.0;
+        assert!((e - expect).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,198 @@
+//! `artifacts/manifest.json` parsing: model discovery for the coordinator.
+//!
+//! The manifest is written by `python/compile/aot.py` and lists, per model,
+//! the L2 config and the per-bucket HLO artifact file names, plus the data
+//! generator specs used by the oracle scorers.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// Mirror of python/compile/config.py `ModelConfig`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub vocab_size: usize,
+    pub seq_len: usize,
+    pub hidden: usize,
+    pub heads: usize,
+    pub ffn: usize,
+    pub n_noncausal: usize,
+    pub n_causal: usize,
+    pub residual_out: bool,
+}
+
+impl ModelConfig {
+    pub fn mask_id(&self) -> i32 {
+        self.vocab_size as i32
+    }
+
+    pub fn from_json(v: &Json) -> Result<ModelConfig> {
+        let u = |k: &str| -> Result<usize> {
+            v.get(k)
+                .and_then(|x| x.as_usize())
+                .ok_or_else(|| anyhow!("config missing {k}"))
+        };
+        Ok(ModelConfig {
+            vocab_size: u("vocab_size")?,
+            seq_len: u("seq_len")?,
+            hidden: u("hidden")?,
+            heads: u("heads")?,
+            ffn: u("ffn")?,
+            n_noncausal: u("n_noncausal")?,
+            n_causal: u("n_causal")?,
+            residual_out: v
+                .get("residual_out")
+                .and_then(|x| x.as_bool())
+                .unwrap_or(true),
+        })
+    }
+}
+
+/// One model's artifact set.
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub name: String,
+    pub config: ModelConfig,
+    pub buckets: Vec<usize>,
+    /// bucket -> HLO file path.
+    pub draft: BTreeMap<usize, PathBuf>,
+    pub verify: BTreeMap<usize, PathBuf>,
+}
+
+impl ModelEntry {
+    pub fn has_verify(&self) -> bool {
+        !self.verify.is_empty()
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelEntry>,
+    /// task name ("text8" / "owt" / "protein") -> spec file path.
+    pub specs: BTreeMap<String, PathBuf>,
+}
+
+impl Manifest {
+    pub fn load(dir: &str) -> Result<Manifest> {
+        let dir = Path::new(dir).to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+
+        let mut models = BTreeMap::new();
+        let model_obj = v
+            .get("models")
+            .and_then(|m| m.as_obj())
+            .ok_or_else(|| anyhow!("manifest missing models"))?;
+        for (name, entry) in model_obj {
+            let config = ModelConfig::from_json(
+                entry.get("config").ok_or_else(|| anyhow!("no config"))?,
+            )?;
+            let buckets: Vec<usize> = entry
+                .get("buckets")
+                .and_then(|b| b.as_arr())
+                .ok_or_else(|| anyhow!("no buckets"))?
+                .iter()
+                .filter_map(|x| x.as_usize())
+                .collect();
+            let files = |key: &str| -> BTreeMap<usize, PathBuf> {
+                entry
+                    .get(key)
+                    .and_then(|m| m.as_obj())
+                    .map(|m| {
+                        m.iter()
+                            .filter_map(|(k, f)| {
+                                Some((
+                                    k.parse().ok()?,
+                                    dir.join(f.as_str()?),
+                                ))
+                            })
+                            .collect()
+                    })
+                    .unwrap_or_default()
+            };
+            models.insert(
+                name.clone(),
+                ModelEntry {
+                    name: name.clone(),
+                    config,
+                    buckets,
+                    draft: files("draft"),
+                    verify: files("verify"),
+                },
+            );
+        }
+
+        let mut specs = BTreeMap::new();
+        if let Some(s) = v.get("specs").and_then(|s| s.as_obj()) {
+            for (task, file) in s {
+                if let Some(f) = file.as_str() {
+                    specs.insert(task.clone(), dir.join(f));
+                }
+            }
+        }
+        Ok(Manifest { dir, models, specs })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("model '{name}' not in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest() {
+        let dir = std::env::temp_dir().join(format!(
+            "ssmd_manifest_test_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let manifest = r#"{
+          "models": {
+            "owt": {
+              "config": {"vocab_size": 256, "seq_len": 64, "hidden": 64,
+                         "heads": 4, "ffn": 256, "n_noncausal": 3,
+                         "n_causal": 1, "residual_out": true},
+              "buckets": [1, 4],
+              "draft": {"1": "owt_draft_b1.hlo.txt",
+                        "4": "owt_draft_b4.hlo.txt"},
+              "verify": {"1": "owt_verify_b1.hlo.txt",
+                         "4": "owt_verify_b4.hlo.txt"}
+            }
+          },
+          "specs": {"owt": "owt_spec.json"}
+        }"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        let m = Manifest::load(dir.to_str().unwrap()).unwrap();
+        let e = m.model("owt").unwrap();
+        assert_eq!(e.config.vocab_size, 256);
+        assert_eq!(e.buckets, vec![1, 4]);
+        assert!(e.has_verify());
+        assert!(e.draft[&4].ends_with("owt_draft_b4.hlo.txt"));
+        assert!(m.specs["owt"].ends_with("owt_spec.json"));
+        assert!(m.model("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn config_defaults_residual() {
+        let v = Json::parse(
+            r#"{"vocab_size":10,"seq_len":8,"hidden":4,"heads":2,
+                "ffn":8,"n_noncausal":2,"n_causal":1}"#,
+        )
+        .unwrap();
+        let c = ModelConfig::from_json(&v).unwrap();
+        assert!(c.residual_out);
+        assert_eq!(c.mask_id(), 10);
+    }
+}

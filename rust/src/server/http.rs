@@ -1,0 +1,193 @@
+//! Minimal HTTP/1.1 message parsing and serialization.
+//!
+//! Supports what the API needs: request line, headers, Content-Length
+//! bodies, keep-alive. Not a general server — no chunked encoding, no TLS.
+
+use std::io::Read;
+use std::net::TcpStream;
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn keep_alive(&self) -> bool {
+        !matches!(self.header("connection"),
+                  Some(v) if v.eq_ignore_ascii_case("close"))
+    }
+
+    pub fn body_str(&self) -> String {
+        String::from_utf8_lossy(&self.body).to_string()
+    }
+}
+
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn json(status: u16, v: &Json) -> Response {
+        Response {
+            status,
+            content_type: "application/json",
+            body: v.to_string().into_bytes(),
+        }
+    }
+
+    pub fn error(status: u16, msg: &str) -> Response {
+        Response::json(
+            status,
+            &Json::obj(vec![("error", Json::str(msg.to_string()))]),
+        )
+    }
+
+    pub fn serialize(&self) -> Vec<u8> {
+        let reason = match self.status {
+            200 => "OK",
+            400 => "Bad Request",
+            404 => "Not Found",
+            500 => "Internal Server Error",
+            _ => "Status",
+        };
+        let mut out = format!(
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n\r\n",
+            self.status,
+            reason,
+            self.content_type,
+            self.body.len()
+        )
+        .into_bytes();
+        out.extend_from_slice(&self.body);
+        out
+    }
+}
+
+/// Parse one request from a stream. Returns Ok(None) on clean EOF.
+pub fn read_request(stream: &mut TcpStream)
+                    -> std::io::Result<Option<Request>> {
+    let mut buf = Vec::new();
+    let mut tmp = [0u8; 4096];
+    // Read until the header terminator.
+    let header_end = loop {
+        if let Some(pos) = find_subslice(&buf, b"\r\n\r\n") {
+            break pos;
+        }
+        let n = stream.read(&mut tmp)?;
+        if n == 0 {
+            if buf.is_empty() {
+                return Ok(None);
+            }
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "eof in headers",
+            ));
+        }
+        buf.extend_from_slice(&tmp[..n]);
+        if buf.len() > 1 << 20 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "headers too large",
+            ));
+        }
+    };
+
+    let header_text = String::from_utf8_lossy(&buf[..header_end]).to_string();
+    let mut lines = header_text.split("\r\n");
+    let request_line = lines.next().unwrap_or_default();
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or_default().to_string();
+    let path = parts.next().unwrap_or_default().to_string();
+    if method.is_empty() || path.is_empty() {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "bad request line",
+        ));
+    }
+    let headers: Vec<(String, String)> = lines
+        .filter_map(|l| {
+            l.split_once(':')
+                .map(|(k, v)| (k.trim().to_string(), v.trim().to_string()))
+        })
+        .collect();
+    let content_length: usize = headers
+        .iter()
+        .find(|(k, _)| k.eq_ignore_ascii_case("content-length"))
+        .and_then(|(_, v)| v.parse().ok())
+        .unwrap_or(0);
+
+    let mut body = buf[header_end + 4..].to_vec();
+    while body.len() < content_length {
+        let n = stream.read(&mut tmp)?;
+        if n == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "eof in body",
+            ));
+        }
+        body.extend_from_slice(&tmp[..n]);
+    }
+    body.truncate(content_length);
+    Ok(Some(Request { method, path, headers, body }))
+}
+
+fn find_subslice(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack
+        .windows(needle.len())
+        .position(|w| w == needle)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn response_serializes() {
+        let r = Response::json(200, &Json::obj(vec![("a", Json::num(1.0))]));
+        let s = String::from_utf8(r.serialize()).unwrap();
+        assert!(s.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(s.contains("Content-Length: 7"));
+        assert!(s.ends_with("{\"a\":1}"));
+    }
+
+    #[test]
+    fn error_has_json_body() {
+        let r = Response::error(400, "nope");
+        assert_eq!(r.status, 400);
+        assert!(String::from_utf8(r.body).unwrap().contains("nope"));
+    }
+
+    #[test]
+    fn find_subslice_works() {
+        assert_eq!(find_subslice(b"abcd", b"cd"), Some(2));
+        assert_eq!(find_subslice(b"abcd", b"xy"), None);
+        assert_eq!(find_subslice(b"", b"x"), None);
+    }
+
+    #[test]
+    fn request_header_lookup_case_insensitive() {
+        let r = Request {
+            method: "GET".into(),
+            path: "/".into(),
+            headers: vec![("Content-Type".into(), "text/plain".into())],
+            body: vec![],
+        };
+        assert_eq!(r.header("content-type"), Some("text/plain"));
+        assert!(r.keep_alive());
+    }
+}

@@ -1,0 +1,267 @@
+//! Threaded HTTP/1.1 server + JSON API (tokio/hyper unavailable offline).
+//!
+//! Endpoints:
+//!   GET  /healthz   -> {"ok":true}
+//!   GET  /metrics   -> metrics registry snapshot
+//!   GET  /models    -> per-model config/buckets
+//!   POST /generate  -> run a sampling request (see request::GenRequest)
+//!   POST /score     -> exact likelihood + rejection posterior (Prop 3.1/C.2)
+
+pub mod http;
+
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::{Coordinator, GenRequest, ScoreRequest};
+use crate::util::json::Json;
+use http::{read_request, Request, Response};
+
+pub struct Server {
+    coordinator: Coordinator,
+}
+
+impl Server {
+    pub fn new(coordinator: Coordinator) -> Server {
+        Server { coordinator }
+    }
+
+    /// Bind and serve forever (thread per connection).
+    pub fn serve(self, addr: &str) -> Result<()> {
+        let listener = TcpListener::bind(addr)?;
+        eprintln!("ssmd serving on http://{addr}");
+        let this = Arc::new(self);
+        for stream in listener.incoming() {
+            let stream = match stream {
+                Ok(s) => s,
+                Err(_) => continue,
+            };
+            let srv = this.clone();
+            std::thread::spawn(move || {
+                let _ = srv.handle_conn(stream);
+            });
+        }
+        Ok(())
+    }
+
+    /// Serve until `stop` returns true, polling between accepts (tests).
+    pub fn serve_until(self, addr: &str,
+                       stop: impl Fn() -> bool + Send + 'static)
+                       -> Result<()> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let this = Arc::new(self);
+        loop {
+            if stop() {
+                return Ok(());
+            }
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    stream.set_nonblocking(false).ok();
+                    let srv = this.clone();
+                    std::thread::spawn(move || {
+                        let _ = srv.handle_conn(stream);
+                    });
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+                Err(_) => {}
+            }
+        }
+    }
+
+    fn handle_conn(&self, mut stream: TcpStream) -> Result<()> {
+        // keep-alive loop: serve requests until the peer closes.
+        loop {
+            let req = match read_request(&mut stream) {
+                Ok(Some(r)) => r,
+                Ok(None) | Err(_) => return Ok(()),
+            };
+            let keep_alive = req.keep_alive();
+            let resp = self.route(&req);
+            stream.write_all(&resp.serialize())?;
+            stream.flush()?;
+            if !keep_alive {
+                return Ok(());
+            }
+        }
+    }
+
+    pub fn route(&self, req: &Request) -> Response {
+        match (req.method.as_str(), req.path.as_str()) {
+            ("GET", "/healthz") => {
+                Response::json(200, &Json::obj(vec![("ok", Json::Bool(true))]))
+            }
+            ("GET", "/metrics") => {
+                Response::json(200, &self.coordinator.metrics.snapshot())
+            }
+            ("GET", "/models") => match self.coordinator.models_info() {
+                Ok(info) => Response::json(200, &info),
+                Err(e) => Response::error(500, &e.to_string()),
+            },
+            ("POST", "/generate") => self.handle_generate(req),
+            ("POST", "/score") => self.handle_score(req),
+            _ => Response::error(404, "not found"),
+        }
+    }
+
+    fn handle_generate(&self, req: &Request) -> Response {
+        let body = match Json::parse(&req.body_str()) {
+            Ok(v) => v,
+            Err(e) => return Response::error(400, &format!("bad json: {e}")),
+        };
+        let gen_req = match GenRequest::from_json(&body) {
+            Ok(r) => r,
+            Err(e) => return Response::error(400, &e),
+        };
+        match self.coordinator.generate(gen_req) {
+            Ok(resp) => Response::json(200, &resp.to_json()),
+            Err(e) => Response::error(500, &e.to_string()),
+        }
+    }
+
+    fn handle_score(&self, req: &Request) -> Response {
+        let body = match Json::parse(&req.body_str()) {
+            Ok(v) => v,
+            Err(e) => return Response::error(400, &format!("bad json: {e}")),
+        };
+        let score_req = match ScoreRequest::from_json(&body) {
+            Ok(r) => r,
+            Err(e) => return Response::error(400, &e),
+        };
+        match self.coordinator.score(score_req) {
+            Ok(resp) => Response::json(200, &resp.to_json()),
+            Err(e) => Response::error(500, &e.to_string()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{BatcherConfig, EngineModel, ModelMap};
+    use crate::engine::mock::MockModel;
+    use std::collections::BTreeMap;
+    use std::time::Duration;
+
+    fn test_server() -> Server {
+        let c = Coordinator::start(
+            || {
+                let mut m: ModelMap = BTreeMap::new();
+                m.insert(
+                    "mock".into(),
+                    Box::new(MockModel::new(8, 4, 5)) as Box<dyn EngineModel>,
+                );
+                Ok(m)
+            },
+            BatcherConfig { max_wait: Duration::from_millis(1) },
+        )
+        .unwrap();
+        Server::new(c)
+    }
+
+    fn post(path: &str, body: &str) -> Request {
+        Request {
+            method: "POST".into(),
+            path: path.into(),
+            headers: vec![],
+            body: body.as_bytes().to_vec(),
+        }
+    }
+
+    fn get(path: &str) -> Request {
+        Request {
+            method: "GET".into(),
+            path: path.into(),
+            headers: vec![],
+            body: vec![],
+        }
+    }
+
+    #[test]
+    fn healthz() {
+        let s = test_server();
+        let r = s.route(&get("/healthz"));
+        assert_eq!(r.status, 200);
+        assert!(String::from_utf8_lossy(&r.body).contains("true"));
+    }
+
+    #[test]
+    fn generate_endpoint() {
+        let s = test_server();
+        let r = s.route(&post("/generate",
+                              r#"{"model":"mock","n":2,"seed":3}"#));
+        assert_eq!(r.status, 200, "{}", String::from_utf8_lossy(&r.body));
+        let v = Json::parse(&String::from_utf8_lossy(&r.body)).unwrap();
+        assert_eq!(v.get("samples").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn score_endpoint() {
+        let s = test_server();
+        let r = s.route(&post(
+            "/score",
+            r#"{"model":"mock","tokens":[0,1,2,3,0,1,2,3],"seed":1,
+                "with_posterior":true}"#,
+        ));
+        assert_eq!(r.status, 200, "{}", String::from_utf8_lossy(&r.body));
+        let v = Json::parse(&String::from_utf8_lossy(&r.body)).unwrap();
+        assert!(v.get("log_likelihood").unwrap().as_f64().unwrap() < 0.0);
+    }
+
+    #[test]
+    fn bad_requests_get_4xx() {
+        let s = test_server();
+        assert_eq!(s.route(&post("/generate", "{not json")).status, 400);
+        assert_eq!(s.route(&post("/generate", r#"{"n":1}"#)).status, 400);
+        assert_eq!(s.route(&get("/bogus")).status, 404);
+    }
+
+    #[test]
+    fn metrics_and_models_endpoints() {
+        let s = test_server();
+        s.route(&post("/generate", r#"{"model":"mock","n":1}"#));
+        let m = s.route(&get("/metrics"));
+        assert_eq!(m.status, 200);
+        let v = Json::parse(&String::from_utf8_lossy(&m.body)).unwrap();
+        assert!(v.get("counters").is_some());
+        let models = s.route(&get("/models"));
+        assert!(String::from_utf8_lossy(&models.body).contains("seq_len"));
+    }
+
+    #[test]
+    fn end_to_end_over_tcp() {
+        use std::io::{Read, Write};
+        let s = test_server();
+        let stop = std::sync::Arc::new(
+            std::sync::atomic::AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let addr = "127.0.0.1:39471";
+        let handle = std::thread::spawn(move || {
+            s.serve_until(addr, move || {
+                stop2.load(std::sync::atomic::Ordering::Relaxed)
+            })
+            .unwrap();
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        let mut conn = std::net::TcpStream::connect(addr).unwrap();
+        let body = r#"{"model":"mock","n":1}"#;
+        write!(
+            conn,
+            "POST /generate HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\
+             Connection: close\r\n\r\n{}",
+            body.len(),
+            body
+        )
+        .unwrap();
+        let mut out = String::new();
+        conn.read_to_string(&mut out).unwrap();
+        assert!(out.starts_with("HTTP/1.1 200"), "{out}");
+        assert!(out.contains("tokens"), "{out}");
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        handle.join().unwrap();
+    }
+}

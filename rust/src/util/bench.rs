@@ -1,0 +1,114 @@
+//! Bench-lite: a micro-benchmark harness (criterion is unavailable
+//! offline). `cargo bench` targets set `harness = false` and drive this.
+//!
+//! Measures wall-clock over timed iterations after a warmup, reports
+//! mean / p50 / p95 / throughput, and prints aligned table rows so the
+//! paper-table harnesses in `examples/` and `rust/benches/` share one
+//! formatter.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.mean_s
+    }
+}
+
+/// Run `f` repeatedly: `warmup` untimed iterations, then timed iterations
+/// until `min_time_s` elapses (at least `min_iters`).
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, min_iters: usize,
+                         min_time_s: f64, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while samples.len() < min_iters
+        || start.elapsed().as_secs_f64() < min_time_s
+    {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+        if samples.len() > 100_000 {
+            break;
+        }
+    }
+    summarize(name, samples)
+}
+
+pub fn summarize(name: &str, mut samples: Vec<f64>) -> BenchResult {
+    assert!(!samples.is_empty());
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters: n,
+        mean_s: mean,
+        p50_s: samples[n / 2],
+        p95_s: samples[(n as f64 * 0.95) as usize % n],
+        min_s: samples[0],
+    }
+}
+
+pub fn fmt_duration(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.2}s", s)
+    }
+}
+
+pub fn print_header(title: &str) {
+    println!("\n== {title} ==");
+    println!("{:<40} {:>8} {:>10} {:>10} {:>10}", "bench", "iters", "mean",
+             "p50", "p95");
+}
+
+pub fn print_result(r: &BenchResult) {
+    println!(
+        "{:<40} {:>8} {:>10} {:>10} {:>10}",
+        r.name,
+        r.iters,
+        fmt_duration(r.mean_s),
+        fmt_duration(r.p50_s),
+        fmt_duration(r.p95_s)
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("spin", 2, 5, 0.0, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(r.iters >= 5);
+        assert!(r.mean_s > 0.0);
+        assert!(r.p50_s >= r.min_s);
+    }
+
+    #[test]
+    fn fmt_scales() {
+        assert!(fmt_duration(3e-9).ends_with("ns"));
+        assert!(fmt_duration(3e-6).ends_with("us"));
+        assert!(fmt_duration(3e-3).ends_with("ms"));
+        assert!(fmt_duration(3.0).ends_with('s'));
+    }
+}

@@ -1,0 +1,232 @@
+//! Serving metrics: counters + streaming latency histograms.
+//!
+//! Log-bucketed histograms (~4% relative resolution) cover nanoseconds to
+//! minutes without pre-configuring bounds; quantile queries interpolate
+//! within a bucket. A global-free `Registry` is shared behind an `Arc` by
+//! the coordinator and exported as JSON at `GET /metrics`.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Monotonic counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1)
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+const BUCKETS_PER_OCTAVE: usize = 16;
+const N_BUCKETS: usize = 64 * BUCKETS_PER_OCTAVE;
+
+/// Log-scale histogram over positive f64 values (e.g. seconds).
+pub struct Histogram {
+    counts: Mutex<Vec<u64>>,
+    sum: Mutex<f64>,
+    n: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            counts: Mutex::new(vec![0; N_BUCKETS]),
+            sum: Mutex::new(0.0),
+            n: AtomicU64::new(0),
+        }
+    }
+}
+
+fn bucket_index(v: f64) -> usize {
+    // Map value ~1e-9..~1e10 onto log buckets.
+    let lv = v.max(1e-9).log2() + 30.0; // 1e-9 -> ~0
+    ((lv * BUCKETS_PER_OCTAVE as f64) as usize).min(N_BUCKETS - 1)
+}
+
+fn bucket_value(i: usize) -> f64 {
+    2f64.powf((i as f64 + 0.5) / BUCKETS_PER_OCTAVE as f64 - 30.0)
+}
+
+impl Histogram {
+    pub fn observe(&self, v: f64) {
+        let mut counts = self.counts.lock().unwrap();
+        counts[bucket_index(v)] += 1;
+        *self.sum.lock().unwrap() += v;
+        self.n.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            *self.sum.lock().unwrap() / n as f64
+        }
+    }
+
+    pub fn quantile(&self, q: f64) -> f64 {
+        let counts = self.counts.lock().unwrap();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * total as f64).ceil().max(1.0) as u64;
+        let mut acc = 0;
+        for (i, c) in counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return bucket_value(i);
+            }
+        }
+        bucket_value(N_BUCKETS - 1)
+    }
+
+    pub fn snapshot(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::num(self.count() as f64)),
+            ("mean", Json::num(self.mean())),
+            ("p50", Json::num(self.quantile(0.5))),
+            ("p95", Json::num(self.quantile(0.95))),
+            ("p99", Json::num(self.quantile(0.99))),
+        ])
+    }
+}
+
+/// Named metric registry exported at /metrics.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, std::sync::Arc<Counter>>>,
+    histograms: Mutex<BTreeMap<String, std::sync::Arc<Histogram>>>,
+}
+
+impl Registry {
+    pub fn counter(&self, name: &str) -> std::sync::Arc<Counter> {
+        self.counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn histogram(&self, name: &str) -> std::sync::Arc<Histogram> {
+        self.histograms
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn snapshot(&self) -> Json {
+        let counters = Json::Obj(
+            self.counters
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::num(v.get() as f64)))
+                .collect(),
+        );
+        let hists = Json::Obj(
+            self.histograms
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, v)| (k.clone(), v.snapshot()))
+                .collect(),
+        );
+        Json::obj(vec![("counters", counters), ("histograms", hists)])
+    }
+}
+
+/// RAII timer that records elapsed seconds into a histogram on drop.
+pub struct Timer {
+    start: Instant,
+    hist: std::sync::Arc<Histogram>,
+}
+
+impl Timer {
+    pub fn new(hist: std::sync::Arc<Histogram>) -> Timer {
+        Timer { start: Instant::now(), hist }
+    }
+}
+
+impl Drop for Timer {
+    fn drop(&mut self) {
+        self.hist.observe(self.start.elapsed().as_secs_f64());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_adds() {
+        let c = Counter::default();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn histogram_quantiles_bracket_values() {
+        let h = Histogram::default();
+        for i in 1..=1000 {
+            h.observe(i as f64 / 1000.0); // 0.001..1.0 uniform
+        }
+        let p50 = h.quantile(0.5);
+        assert!((0.4..0.62).contains(&p50), "p50={p50}");
+        let p99 = h.quantile(0.99);
+        assert!((0.9..1.1).contains(&p99), "p99={p99}");
+        assert!((h.mean() - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn histogram_relative_resolution() {
+        let h = Histogram::default();
+        h.observe(0.123);
+        let q = h.quantile(0.5);
+        assert!((q / 0.123 - 1.0).abs() < 0.05, "q={q}");
+    }
+
+    #[test]
+    fn registry_snapshot_is_json() {
+        let r = Registry::default();
+        r.counter("reqs").add(3);
+        r.histogram("lat").observe(0.01);
+        let s = r.snapshot().to_string();
+        let v = Json::parse(&s).unwrap();
+        assert_eq!(
+            v.get("counters").unwrap().get("reqs").unwrap().as_f64(),
+            Some(3.0)
+        );
+    }
+
+    #[test]
+    fn timer_records() {
+        let r = Registry::default();
+        let h = r.histogram("t");
+        {
+            let _t = Timer::new(h.clone());
+        }
+        assert_eq!(h.count(), 1);
+    }
+}

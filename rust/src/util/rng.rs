@@ -1,0 +1,193 @@
+//! PCG64-family PRNG + sampling primitives for the serving hot path.
+//!
+//! Deterministic, seedable, and fast; `rand` is unavailable offline. The
+//! generator is PCG-XSH-RR-64/32 extended to 64-bit output by concatenating
+//! two draws, which is ample for sampling categorical distributions.
+
+/// PCG-XSH-RR 64/32 with 64-bit convenience output.
+#[derive(Clone, Debug)]
+pub struct Pcg {
+    state: u64,
+    inc: u64,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Pcg {
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0xda3e39cb94b95bdb)
+    }
+
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg { state: 0, inc: (stream << 1) | 1 };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1) with 53 bits of entropy.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n) (Lemire-style rejection-free for our use).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.f64() * n as f64) as usize % n
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            xs.swap(i, self.below(i + 1));
+        }
+    }
+
+    /// Uniform random permutation of 0..n as i32 (a generation ordering σ).
+    pub fn permutation(&mut self, n: usize) -> Vec<i32> {
+        let mut p: Vec<i32> = (0..n as i32).collect();
+        self.shuffle(&mut p);
+        p
+    }
+
+    /// Sample an index from an (unnormalized, non-negative) weight vector.
+    pub fn categorical(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        debug_assert!(total > 0.0, "categorical needs positive mass");
+        let mut u = self.f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            u -= w;
+            if u <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Sample from f32 probabilities (the engine's softmax output).
+    pub fn categorical_f32(&mut self, probs: &[f32]) -> usize {
+        let total: f64 = probs.iter().map(|&p| p as f64).sum();
+        let mut u = self.f64() * total;
+        for (i, &p) in probs.iter().enumerate() {
+            u -= p as f64;
+            if u <= 0.0 {
+                return i;
+            }
+        }
+        probs.len() - 1
+    }
+
+    /// Split off an independent stream (for per-request RNGs).
+    pub fn split(&mut self) -> Pcg {
+        Pcg::with_stream(self.next_u64(), self.next_u64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Pcg::new(42);
+        let mut b = Pcg::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg::new(1);
+        let mut b = Pcg::new(2);
+        assert_ne!(
+            (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn f64_in_unit_interval_and_roughly_uniform() {
+        let mut rng = Pcg::new(7);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let u = rng.f64();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn permutation_is_a_permutation() {
+        let mut rng = Pcg::new(3);
+        for n in [1usize, 2, 7, 64] {
+            let mut p = rng.permutation(n);
+            p.sort();
+            assert_eq!(p, (0..n as i32).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn permutation_is_uniformish() {
+        // Position of element 0 should be uniform over n slots.
+        let mut rng = Pcg::new(11);
+        let n = 8;
+        let trials = 16_000;
+        let mut counts = vec![0usize; n];
+        for _ in 0..trials {
+            let p = rng.permutation(n);
+            counts[p.iter().position(|&x| x == 0).unwrap()] += 1;
+        }
+        let expect = trials as f64 / n as f64;
+        for c in counts {
+            assert!((c as f64 - expect).abs() < 6.0 * expect.sqrt());
+        }
+    }
+
+    #[test]
+    fn categorical_matches_weights() {
+        let mut rng = Pcg::new(5);
+        let w = [1.0, 3.0, 6.0];
+        let trials = 30_000;
+        let mut counts = [0usize; 3];
+        for _ in 0..trials {
+            counts[rng.categorical(&w)] += 1;
+        }
+        for (i, c) in counts.iter().enumerate() {
+            let p = w[i] / 10.0;
+            let expect = trials as f64 * p;
+            assert!(
+                (*c as f64 - expect).abs() < 6.0 * (expect * (1.0 - p)).sqrt(),
+                "bucket {i}: {c} vs {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn split_streams_are_independent_seeds() {
+        let mut root = Pcg::new(9);
+        let mut a = root.split();
+        let mut b = root.split();
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+}

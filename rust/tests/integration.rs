@@ -1,0 +1,266 @@
+//! Cross-module integration tests on the mock model: coordinator + server
+//! + engine + likelihood wired together exactly as in production, minus
+//! PJRT (covered by tests/pjrt_parity.rs and the examples).
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use ssmd::coordinator::{
+    BatcherConfig, Coordinator, EngineModel, GenRequest, ModelMap,
+    SamplerChoice, ScoreRequest,
+};
+use ssmd::engine::{MdmParams, MockModel, Prompt, SpecParams, Window};
+use ssmd::util::json::Json;
+use ssmd::util::rng::Pcg;
+
+fn coordinator(seq_len: usize, vocab: usize) -> Coordinator {
+    Coordinator::start(
+        move || {
+            let mut m: ModelMap = BTreeMap::new();
+            m.insert(
+                "mock".into(),
+                Box::new(MockModel::new(seq_len, vocab, 5))
+                    as Box<dyn EngineModel>,
+            );
+            let mut draft_only = MockModel::new(seq_len, vocab, 6);
+            draft_only.target_equals_draft = true;
+            m.insert("sharp".into(),
+                     Box::new(draft_only) as Box<dyn EngineModel>);
+            Ok(m)
+        },
+        BatcherConfig { max_wait: Duration::from_millis(2) },
+    )
+    .unwrap()
+}
+
+#[test]
+fn speculative_beats_mdm_nfe_when_target_matches_draft() {
+    // With a perfectly aligned target (q == p) the speculative sampler
+    // accepts whole windows: far fewer NFE than a fine-grained MDM run.
+    let c = coordinator(32, 8);
+    let spec = c
+        .generate(GenRequest {
+            model: "sharp".into(),
+            n_samples: 4,
+            sampler: SamplerChoice::Speculative(SpecParams {
+                window: Window::Cosine { dtau: 0.1 },
+                n_verify: 4,
+                ..Default::default()
+            }),
+            seed: 1,
+            ..Default::default()
+        })
+        .unwrap();
+    let mdm = c
+        .generate(GenRequest {
+            model: "sharp".into(),
+            n_samples: 4,
+            sampler: SamplerChoice::Mdm(MdmParams {
+                steps: 32,
+                temperature: 1.0,
+            }),
+            seed: 1,
+            ..Default::default()
+        })
+        .unwrap();
+    let nfe = |r: &ssmd::coordinator::GenResponse| {
+        r.samples.iter().map(|s| s.nfe).sum::<f64>()
+            / r.samples.len() as f64
+    };
+    assert!(
+        nfe(&spec) < 0.7 * nfe(&mdm),
+        "spec {} !< mdm {}",
+        nfe(&spec),
+        nfe(&mdm)
+    );
+    c.shutdown();
+}
+
+#[test]
+fn infilling_respects_prompt_through_the_whole_stack() {
+    let c = coordinator(16, 6);
+    let mut prompt = Prompt::empty(16);
+    prompt.0[0] = Some(3);
+    prompt.0[9] = Some(1);
+    for sampler in [
+        SamplerChoice::Speculative(SpecParams::default()),
+        SamplerChoice::Mdm(MdmParams::default()),
+    ] {
+        let resp = c
+            .generate(GenRequest {
+                model: "mock".into(),
+                n_samples: 3,
+                sampler,
+                prompt: Some(prompt.clone()),
+                seed: 2,
+                ..Default::default()
+            })
+            .unwrap();
+        for s in &resp.samples {
+            assert_eq!(s.tokens[0], 3);
+            assert_eq!(s.tokens[9], 1);
+            assert!(s.tokens.iter().all(|&t| (0..6).contains(&t)));
+        }
+    }
+    c.shutdown();
+}
+
+#[test]
+fn score_likelihood_is_sane_and_sigma_dependent() {
+    let c = coordinator(8, 4);
+    let tokens = vec![0, 1, 2, 3, 3, 2, 1, 0];
+    let a = c
+        .score(ScoreRequest {
+            model: "mock".into(),
+            tokens: tokens.clone(),
+            sigma: Some((0..8).collect()),
+            seed: None,
+            with_posterior: true,
+        })
+        .unwrap();
+    let b = c
+        .score(ScoreRequest {
+            model: "mock".into(),
+            tokens,
+            sigma: Some((0..8).rev().collect()),
+            seed: None,
+            with_posterior: false,
+        })
+        .unwrap();
+    assert!(a.log_likelihood < 0.0);
+    assert!(b.log_likelihood < 0.0);
+    assert_ne!(a.log_likelihood, b.log_likelihood);
+    let post = a.rejection_posterior.unwrap();
+    assert_eq!(post.len(), 9);
+    assert!((post.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    c.shutdown();
+}
+
+#[test]
+fn batcher_groups_compatible_requests() {
+    // Fire many concurrent compatible requests; the batch-size histogram
+    // should record at least one multi-request batch.
+    let c = coordinator(16, 6);
+    let mut handles = Vec::new();
+    for i in 0..8 {
+        let cc = c.clone();
+        handles.push(std::thread::spawn(move || {
+            cc.generate(GenRequest {
+                model: "mock".into(),
+                n_samples: 2,
+                seed: i,
+                ..Default::default()
+            })
+            .unwrap()
+        }));
+    }
+    for h in handles {
+        assert_eq!(h.join().unwrap().samples.len(), 2);
+    }
+    let snap = c.metrics.snapshot();
+    let batches = snap
+        .get("histograms")
+        .and_then(|h| h.get("batch_size"))
+        .and_then(|b| b.get("count"))
+        .and_then(|c| c.as_f64())
+        .unwrap();
+    let reqs = snap
+        .get("counters")
+        .and_then(|x| x.get("requests"))
+        .and_then(|x| x.as_f64())
+        .unwrap();
+    assert_eq!(reqs, 8.0);
+    assert!(batches <= reqs, "batches {batches} > requests {reqs}");
+    c.shutdown();
+}
+
+#[test]
+fn full_http_stack_generate_and_score() {
+    use std::io::{Read, Write};
+    let c = coordinator(8, 4);
+    let server = ssmd::server::Server::new(c);
+    let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let stop2 = stop.clone();
+    let addr = "127.0.0.1:39482";
+    let handle = std::thread::spawn(move || {
+        server
+            .serve_until(addr, move || {
+                stop2.load(std::sync::atomic::Ordering::Relaxed)
+            })
+            .unwrap();
+    });
+    std::thread::sleep(Duration::from_millis(50));
+
+    let call = |path: &str, body: &str| -> (u16, Json) {
+        let mut conn = std::net::TcpStream::connect(addr).unwrap();
+        write!(
+            conn,
+            "POST {path} HTTP/1.1\r\nContent-Length: {}\r\n\
+             Connection: close\r\n\r\n{body}",
+            body.len()
+        )
+        .unwrap();
+        let mut out = String::new();
+        conn.read_to_string(&mut out).unwrap();
+        let status: u16 = out[9..12].parse().unwrap();
+        let body = out.split_once("\r\n\r\n").unwrap().1;
+        (status, Json::parse(body).unwrap())
+    };
+
+    let (status, v) = call(
+        "/generate",
+        r#"{"model":"mock","n":2,"sampler":"mdm","steps":4,"seed":1}"#,
+    );
+    assert_eq!(status, 200, "{v}");
+    assert_eq!(v.get("samples").unwrap().as_arr().unwrap().len(), 2);
+
+    let (status, v) = call(
+        "/score",
+        r#"{"model":"mock","tokens":[0,1,2,3,0,1,2,3],"seed":3,
+            "with_posterior":true}"#,
+    );
+    assert_eq!(status, 200, "{v}");
+    assert!(v.get("rejection_posterior").is_some());
+
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    handle.join().unwrap();
+}
+
+#[test]
+fn mdm_and_spec_agree_on_distribution_when_aligned() {
+    // With target == draft and window covering everything, a single
+    // speculative outer loop samples the full factorized distribution in
+    // one pass — the same distribution MDM with K=1 samples. Check the
+    // per-position marginals roughly agree.
+    let d = 6;
+    let v = 3;
+    let mut m = MockModel::new(d, v, 77);
+    m.target_equals_draft = true;
+    let spec = SpecParams {
+        window: Window::Constant(d),
+        n_verify: 1,
+        ..Default::default()
+    };
+    let mdm = MdmParams { steps: 1, temperature: 1.0 };
+    let n = 4000;
+    let mut counts_spec = vec![0usize; d * v];
+    let mut counts_mdm = vec![0usize; d * v];
+    let mut rng = Pcg::new(1);
+    for _ in 0..n {
+        let (s, _) = ssmd::engine::speculative_sample(
+            &m, &[Prompt::empty(d)], &spec, &mut rng);
+        for (pos, &t) in s[0].tokens.iter().enumerate() {
+            counts_spec[pos * v + t as usize] += 1;
+        }
+        let s = ssmd::engine::mdm_sample(&m, &[Prompt::empty(d)], &mdm,
+                                         &mut rng);
+        for (pos, &t) in s[0].tokens.iter().enumerate() {
+            counts_mdm[pos * v + t as usize] += 1;
+        }
+    }
+    for i in 0..d * v {
+        let a = counts_spec[i] as f64 / n as f64;
+        let b = counts_mdm[i] as f64 / n as f64;
+        assert!((a - b).abs() < 0.05, "marginal {i}: {a} vs {b}");
+    }
+}

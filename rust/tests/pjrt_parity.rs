@@ -1,0 +1,175 @@
+//! JAX <-> rust-runtime numerical parity.
+//!
+//! `python/compile/aot.py` embeds a golden record per model in the
+//! manifest: a deterministic input and the JAX-computed outputs (logit
+//! head slices + means). This test replays the same input through the
+//! compiled HLO via PJRT and checks the numbers to f32 tolerance — the
+//! core guarantee that the serving path computes the same function the
+//! model was trained as.
+//!
+//! Skips silently when artifacts are absent (pre-`make artifacts` builds).
+
+use ssmd::engine::HybridModel;
+use ssmd::runtime::{Manifest, Runtime};
+use ssmd::util::json::Json;
+
+const ATOL: f64 = 2e-4;
+
+fn artifacts_dir() -> Option<String> {
+    let dir =
+        std::env::var("SSMD_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    std::path::Path::new(&dir)
+        .join("manifest.json")
+        .exists()
+        .then_some(dir)
+}
+
+fn close(a: f64, b: f64, what: &str) {
+    assert!(
+        (a - b).abs() < ATOL * (1.0 + b.abs()),
+        "{what}: rust {a} vs jax {b}"
+    );
+}
+
+#[test]
+fn golden_outputs_match_jax() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("pjrt_parity skipped: no artifacts");
+        return;
+    };
+    let manifest = Manifest::load(&dir).unwrap();
+    let raw = std::fs::read_to_string(
+        std::path::Path::new(&dir).join("manifest.json"),
+    )
+    .unwrap();
+    let manifest_json = Json::parse(&raw).unwrap();
+    let runtime = Runtime::cpu().unwrap();
+
+    let mut checked = 0;
+    for (name, entry) in &manifest.models {
+        let Some(golden) = manifest_json
+            .get("models")
+            .and_then(|m| m.get(name))
+            .and_then(|m| m.get("golden"))
+        else {
+            continue;
+        };
+        let model = runtime.load_model(entry).unwrap();
+        let d = model.seq_len();
+        let v = model.vocab();
+        let bucket = model.buckets().into_iter().min().unwrap();
+
+        // ---- draft parity -------------------------------------------------
+        let tokens_row: Vec<i32> = golden
+            .get("tokens")
+            .and_then(|t| t.as_f64_vec())
+            .unwrap()
+            .into_iter()
+            .map(|x| x as i32)
+            .collect();
+        assert_eq!(tokens_row.len(), d);
+        let tokens: Vec<i32> = (0..bucket)
+            .flat_map(|_| tokens_row.iter().copied())
+            .collect();
+        let (state, logits) = model.draft(&tokens, bucket);
+        let head = golden
+            .get("draft_logits_head")
+            .and_then(|h| h.as_f64_vec())
+            .unwrap();
+        for (i, expect) in head.iter().enumerate() {
+            close(logits[i] as f64, *expect,
+                  &format!("{name} draft logit {i}"));
+        }
+        let row0_mean = logits[..d * v]
+            .iter()
+            .map(|&x| x as f64)
+            .sum::<f64>()
+            / (d * v) as f64;
+        close(
+            row0_mean,
+            golden.get("draft_logits_mean").unwrap().as_f64().unwrap(),
+            &format!("{name} draft mean"),
+        );
+
+        // ---- verify parity ------------------------------------------------
+        if let Some(full) = golden.get("full_tokens") {
+            let full_row: Vec<i32> = full
+                .as_f64_vec()
+                .unwrap()
+                .into_iter()
+                .map(|x| x as i32)
+                .collect();
+            let sigma_row: Vec<i32> = golden
+                .get("sigma")
+                .and_then(|s| s.as_f64_vec())
+                .unwrap()
+                .into_iter()
+                .map(|x| x as i32)
+                .collect();
+            let full: Vec<i32> = (0..bucket)
+                .flat_map(|_| full_row.iter().copied())
+                .collect();
+            let sigma: Vec<i32> = (0..bucket)
+                .flat_map(|_| sigma_row.iter().copied())
+                .collect();
+            let tlogits = model.verify(&state, &full, &sigma, bucket);
+            let head = golden
+                .get("target_logits_head")
+                .and_then(|h| h.as_f64_vec())
+                .unwrap();
+            for (i, expect) in head.iter().enumerate() {
+                close(tlogits[i] as f64, *expect,
+                      &format!("{name} target logit {i}"));
+            }
+            let mean0 = tlogits[..d * v]
+                .iter()
+                .map(|&x| x as f64)
+                .sum::<f64>()
+                / (d * v) as f64;
+            close(
+                mean0,
+                golden.get("target_logits_mean").unwrap().as_f64().unwrap(),
+                &format!("{name} target mean"),
+            );
+        }
+        checked += 1;
+        eprintln!("parity ok: {name}");
+    }
+    assert!(checked > 0, "no golden records found in manifest");
+}
+
+#[test]
+fn buckets_agree_with_each_other() {
+    // The same row must produce the same outputs regardless of which
+    // bucket executes it (padding rows must not leak).
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("bucket test skipped: no artifacts");
+        return;
+    };
+    let manifest = Manifest::load(&dir).unwrap();
+    let runtime = Runtime::cpu().unwrap();
+    let Some(entry) = manifest.models.get("owt") else {
+        return;
+    };
+    if entry.buckets.len() < 2 {
+        return;
+    }
+    let model = runtime.load_model(entry).unwrap();
+    let d = model.seq_len();
+    let v = model.vocab();
+    let row: Vec<i32> = (0..d as i32).map(|i| (i * 5) % v as i32).collect();
+    let b0 = entry.buckets[0];
+    let b1 = entry.buckets[1];
+    let t0: Vec<i32> = (0..b0).flat_map(|_| row.iter().copied()).collect();
+    let t1: Vec<i32> = (0..b1).flat_map(|_| row.iter().copied()).collect();
+    let (_, l0) = model.draft(&t0, b0);
+    let (_, l1) = model.draft(&t1, b1);
+    for i in 0..d * v {
+        assert!(
+            (l0[i] - l1[i]).abs() < 1e-4,
+            "bucket outputs diverge at {i}: {} vs {}",
+            l0[i],
+            l1[i]
+        );
+    }
+}
