@@ -1,12 +1,16 @@
 //! Dynamic batching policy.
 //!
 //! XLA executables have static shapes, so the unit of batching is the
-//! bucket ladder compiled per model (e.g. {1, 4, 16}). The engine thread
-//! accumulates compatible requests for at most `max_wait`, stopping early
-//! once the largest bucket is filled; `pick_bucket` then selects the
-//! smallest bucket that fits and the engine pads the remainder with dummy
-//! rows. The trade-off mirrors vLLM's batch scheduler: waiting adds queue
-//! latency but amortizes the forward pass.
+//! bucket ladder compiled per model (e.g. {1, 4, 16}). `pick_bucket` is
+//! the **single** bucket-selection policy in the codebase (implemented in
+//! `engine::scheduler`, re-exported here): the continuous-batching
+//! scheduler applies it every step to find the smallest bucket covering
+//! the resident sequences, and sizes its
+//! slot table to the largest rung — so overflow parks in the pending queue
+//! and the truncating fallback below is never reached from the engine (a
+//! model is never handed a batch size it didn't compile). `max_wait` now
+//! only bounds the idle-engine admission window (admission otherwise
+//! happens between scheduler steps).
 
 use std::time::Duration;
 
@@ -24,15 +28,9 @@ impl Default for BatcherConfig {
 }
 
 /// Smallest bucket >= n, or the largest available if n exceeds them all.
-pub fn pick_bucket(buckets: &[usize], n: usize) -> usize {
-    buckets
-        .iter()
-        .copied()
-        .filter(|&b| b >= n)
-        .min()
-        .or_else(|| buckets.iter().copied().max())
-        .unwrap_or(n.max(1))
-}
+/// Implemented in the engine (the layer that executes buckets) and
+/// re-exported here so L3 code keeps its historical path.
+pub use crate::engine::scheduler::pick_bucket;
 
 /// Padding waste of running `n` real rows in bucket `b`.
 pub fn padding_waste(bucket: usize, n: usize) -> f64 {

@@ -1,13 +1,22 @@
-//! L3 coordinator: request queue, dynamic batcher, engine thread.
+//! L3 coordinator: request queue, continuous-batching engine thread.
 //!
 //! PJRT executables are not `Send`, so the coordinator follows the classic
 //! accelerator-worker design (cf. vLLM's engine loop): a single **engine
 //! thread** owns all compiled models; callers submit `Job`s over an mpsc
-//! channel and wait on per-request reply channels. The batcher groups
-//! compatible requests (same model + sampler settings) arriving within a
-//! small window into one flattened engine call, padding up to the model's
-//! batch-size buckets — XLA shapes are static, so buckets are the dynamic-
-//! batching unit.
+//! channel and wait on per-request reply channels.
+//!
+//! Scheduling is **continuous batching** over the engine's step API
+//! (`engine::scheduler`): requests are admitted into per-model run queues
+//! keyed by `batch_key` (model + sampler settings), each queue drives a
+//! slot table sized to the model's bucket ladder, and the loop interleaves
+//! channel admission *between scheduler steps* — so a short request never
+//! waits for the longest sequence in its batch, finished sequences retire
+//! immediately, freed slots are backfilled from the pending queue, and a
+//! request with more samples than the largest bucket is chunked across
+//! steps instead of being handed to an uncompiled batch size. The old
+//! one-shot `max_wait` window survives only as a brief admission window
+//! when the engine is otherwise idle (it lets near-simultaneous requests
+//! share their first step).
 
 pub mod batcher;
 pub mod request;
@@ -20,11 +29,12 @@ use std::time::Instant;
 use anyhow::{anyhow, Result};
 
 use crate::engine::{
-    mdm_sample, speculative_sample, HybridModel, Prompt, Sample,
+    mdm_sample, speculative_sample, BoundStepper, HybridModel, Prompt,
+    Sample, SeqParams, SlotId, Stepper,
 };
 use crate::likelihood::{log_likelihood, rejection_posterior, SpecTable};
 use crate::util::json::Json;
-use crate::util::metrics::Registry;
+use crate::util::metrics::{Counter, Histogram, Registry};
 use crate::util::rng::Pcg;
 
 pub use batcher::BatcherConfig;
@@ -39,8 +49,15 @@ pub trait EngineModel {
     fn has_verify(&self) -> bool;
     fn max_bucket(&self) -> usize;
     fn info(&self) -> Json;
+    /// One-shot convenience used by harnesses/examples: drive a whole
+    /// prompt set to completion.
     fn sample(&self, prompts: &[Prompt], sampler: &SamplerChoice,
               rng: &mut Pcg) -> Result<Vec<Sample>>;
+    /// Continuous-batching entry point: a scheduler bound to this model
+    /// for one sampler setting (validated here — speculative sampling
+    /// needs the causal half).
+    fn stepper<'a>(&'a self, sampler: &SamplerChoice)
+                   -> Result<Box<dyn Stepper + 'a>>;
     fn log_likelihood(&self, tokens: &[i32], sigma: &[i32]) -> Result<f64>;
     fn rejection_posterior(&self, tokens: &[i32], sigma: &[i32])
                            -> Result<Vec<f64>>;
@@ -90,6 +107,22 @@ impl<M: HybridModel> EngineModel for M {
             }
             SamplerChoice::Mdm(p) => Ok(mdm_sample(self, prompts, p, rng)),
         }
+    }
+
+    fn stepper<'a>(&'a self, sampler: &SamplerChoice)
+                   -> Result<Box<dyn Stepper + 'a>> {
+        let params = match sampler {
+            SamplerChoice::Speculative(p) => {
+                if !HybridModel::has_verify(self) {
+                    return Err(anyhow!(
+                        "model has no causal half; use the mdm sampler"
+                    ));
+                }
+                SeqParams::Spec(p.clone())
+            }
+            SamplerChoice::Mdm(p) => SeqParams::Mdm(p.clone()),
+        };
+        Ok(Box::new(BoundStepper::new(self, params)))
     }
 
     fn log_likelihood(&self, tokens: &[i32], sigma: &[i32]) -> Result<f64> {
@@ -195,151 +228,336 @@ impl Coordinator {
     }
 }
 
-fn engine_loop(models: ModelMap, rx: mpsc::Receiver<Job>,
-               metrics: Arc<Registry>, cfg: BatcherConfig) {
-    let h_latency = metrics.histogram("generate_latency_s");
-    let h_queue = metrics.histogram("queue_wait_s");
-    let h_batch = metrics.histogram("batch_size");
-    let h_nfe = metrics.histogram("nfe_per_sample");
-    let c_reqs = metrics.counter("requests");
-    let c_samples = metrics.counter("samples");
-    let c_errors = metrics.counter("errors");
+/// Metric handles shared across the engine loop helpers.
+struct EngineMetrics {
+    h_latency: Arc<Histogram>,
+    h_queue: Arc<Histogram>,
+    h_batch: Arc<Histogram>,
+    h_nfe: Arc<Histogram>,
+    h_occupancy: Arc<Histogram>,
+    h_step: Arc<Histogram>,
+    h_pending: Arc<Histogram>,
+    c_reqs: Arc<Counter>,
+    c_samples: Arc<Counter>,
+    c_errors: Arc<Counter>,
+    c_backfills: Arc<Counter>,
+    c_steps: Arc<Counter>,
+}
 
-    let mut rng = Pcg::new(0x55d);
-    let mut stash: Option<Job> = None;
-
-    loop {
-        let first = match stash.take() {
-            Some(j) => j,
-            None => match rx.recv() {
-                Ok(j) => j,
-                Err(_) => return,
-            },
-        };
-        let mut batch = Vec::new();
-        match first {
-            Job::Shutdown => return,
-            Job::Info { reply } => {
-                let obj = Json::Obj(
-                    models.iter().map(|(k, v)| (k.clone(), v.info())).collect(),
-                );
-                let _ = reply.send(obj);
-                continue;
-            }
-            Job::Score { req, reply } => {
-                let _ = reply.send(run_score(&models, &req, &mut rng));
-                continue;
-            }
-            Job::Generate { req, reply, enqueued } => {
-                batch.push((req, reply, enqueued));
-            }
-        }
-
-        // ---- dynamic batching window ------------------------------------
-        let cap = models
-            .get(&batch[0].0.model)
-            .map(|m| m.max_bucket())
-            .unwrap_or(1);
-        let deadline = Instant::now() + cfg.max_wait;
-        while batch.iter().map(|(r, _, _)| r.total_samples()).sum::<usize>()
-            < cap
-        {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(Job::Generate { req, reply, enqueued })
-                    if req.batch_key() == batch[0].0.batch_key() =>
-                {
-                    batch.push((req, reply, enqueued));
-                }
-                Ok(other) => {
-                    stash = Some(other);
-                    break;
-                }
-                Err(mpsc::RecvTimeoutError::Timeout) => break,
-                Err(mpsc::RecvTimeoutError::Disconnected) => break,
-            }
-        }
-
-        // ---- execute ------------------------------------------------------
-        c_reqs.add(batch.len() as u64);
-        let started = Instant::now();
-        for (_, _, enq) in &batch {
-            h_queue.observe(started.duration_since(*enq).as_secs_f64());
-        }
-        let key_req = batch[0].0.clone();
-        let result = run_generate_batch(&models, &key_req, &batch, &mut rng);
-        let elapsed = started.elapsed().as_secs_f64();
-        h_latency.observe(elapsed);
-
-        match result {
-            Ok(mut per_request) => {
-                h_batch.observe(
-                    per_request.iter().map(|s| s.len()).sum::<usize>() as f64,
-                );
-                for (i, (_, reply, _)) in batch.iter().enumerate() {
-                    let samples = std::mem::take(&mut per_request[i]);
-                    c_samples.add(samples.len() as u64);
-                    for s in &samples {
-                        h_nfe.observe(s.nfe);
-                    }
-                    let _ = reply.send(Ok(GenResponse {
-                        model: key_req.model.clone(),
-                        samples,
-                        wall_s: elapsed,
-                    }));
-                }
-            }
-            Err(e) => {
-                c_errors.inc();
-                for (_, reply, _) in &batch {
-                    let _ = reply.send(Err(anyhow!("{e}")));
-                }
-            }
+impl EngineMetrics {
+    fn new(metrics: &Registry) -> EngineMetrics {
+        EngineMetrics {
+            h_latency: metrics.histogram("generate_latency_s"),
+            h_queue: metrics.histogram("queue_wait_s"),
+            h_batch: metrics.histogram("batch_size"),
+            h_nfe: metrics.histogram("nfe_per_sample"),
+            h_occupancy: metrics.histogram("slot_occupancy"),
+            h_step: metrics.histogram("step_latency_s"),
+            h_pending: metrics.histogram("pending_depth"),
+            c_reqs: metrics.counter("requests"),
+            c_samples: metrics.counter("samples"),
+            c_errors: metrics.counter("errors"),
+            c_backfills: metrics.counter("backfills"),
+            c_steps: metrics.counter("scheduler_steps"),
         }
     }
 }
 
-type PendingGen = (GenRequest, mpsc::Sender<Result<GenResponse>>, Instant);
+/// A request whose samples are in flight across scheduler steps.
+struct Inflight {
+    reply: mpsc::Sender<Result<GenResponse>>,
+    enqueued: Instant,
+    model: String,
+    got: Vec<Option<Sample>>,
+    remaining: usize,
+    /// Whether queue_wait_s (enqueue -> first sequence placed into a
+    /// slot, i.e. execution start) was recorded yet.
+    queue_observed: bool,
+}
 
-/// Flatten all requests of a compatible batch into one engine call and
-/// split the samples back out per request.
-fn run_generate_batch(models: &ModelMap, key_req: &GenRequest,
-                      batch: &[PendingGen], rng: &mut Pcg)
-                      -> Result<Vec<Vec<Sample>>> {
-    let model = models
-        .get(&key_req.model)
-        .ok_or_else(|| anyhow!("unknown model '{}'", key_req.model))?;
-    let d = model.seq_len();
-    let mut prompts = Vec::new();
-    let mut counts = Vec::new();
-    for (req, _, _) in batch {
-        let prompt = req.prompt.clone().unwrap_or_else(|| Prompt::empty(d));
-        if prompt.0.len() != d {
-            return Err(anyhow!("prompt length {} != D {d}", prompt.0.len()));
+/// One continuous-batching run queue: all admitted sequences share a
+/// `batch_key` (model + sampler settings + determinism class).
+struct RunQueue<'m> {
+    key: String,
+    stepper: Box<dyn Stepper + 'm>,
+    /// slot -> (request id, sample index within the request).
+    routes: BTreeMap<SlotId, (u64, usize)>,
+    /// Whether the formation-time batch size was recorded.
+    formed: bool,
+}
+
+fn engine_loop(models: ModelMap, rx: mpsc::Receiver<Job>,
+               metrics: Arc<Registry>, cfg: BatcherConfig) {
+    let m = EngineMetrics::new(&metrics);
+    let mut rng = Pcg::new(0x55d);
+    let mut req_counter: u64 = 0;
+    let mut inflight: BTreeMap<u64, Inflight> = BTreeMap::new();
+    let mut queues: Vec<RunQueue<'_>> = Vec::new();
+    let mut rr = 0usize;
+    let mut disconnected = false;
+    // Shutdown drains: stop reading the channel but finish (and reply to)
+    // every request already admitted before returning.
+    let mut draining = false;
+
+    loop {
+        let busy = queues.iter().any(|q| !q.stepper.is_idle());
+        if (draining || disconnected) && !busy {
+            return; // nothing left to finish
         }
-        for _ in 0..req.n_samples {
-            prompts.push(prompt.clone());
+        if !draining && !busy {
+            // Idle: block for work, then hold a brief admission window so
+            // near-simultaneous requests share their first step.
+            match rx.recv() {
+                Ok(job) => {
+                    if handle_job(job, &models, &mut queues, &mut inflight,
+                                  &mut rng, &mut req_counter, &m) {
+                        draining = true;
+                    }
+                }
+                Err(_) => return,
+            }
+            let deadline = Instant::now() + cfg.max_wait;
+            while !draining {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(job) => {
+                        if handle_job(job, &models, &mut queues,
+                                      &mut inflight, &mut rng,
+                                      &mut req_counter, &m) {
+                            draining = true;
+                        }
+                    }
+                    Err(mpsc::RecvTimeoutError::Timeout) => break,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        disconnected = true;
+                        break;
+                    }
+                }
+            }
+        } else if !draining {
+            // Busy: admit whatever is queued *between* scheduler steps —
+            // this is what lets a new request join a running batch.
+            loop {
+                match rx.try_recv() {
+                    Ok(job) => {
+                        if handle_job(job, &models, &mut queues,
+                                      &mut inflight, &mut rng,
+                                      &mut req_counter, &m) {
+                            draining = true;
+                            break;
+                        }
+                    }
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        disconnected = true;
+                        break;
+                    }
+                }
+            }
         }
-        counts.push(req.n_samples);
+
+        // One scheduler step on one run queue (round-robin for fairness
+        // across models / sampler settings).
+        let n = queues.len();
+        for off in 0..n {
+            let qi = (rr + off) % n;
+            if queues[qi].stepper.is_idle() {
+                continue;
+            }
+            rr = qi + 1;
+            step_queue(&mut queues[qi], &mut inflight, &m);
+            break;
+        }
+        queues.retain(|q| !q.stepper.is_idle());
     }
-    let mut seeded = Pcg::new(key_req.seed ^ rng.next_u64());
-    let seed_rng = if key_req.deterministic {
-        Pcg::new(key_req.seed)
-    } else {
-        seeded.split()
+}
+
+/// Dispatch one job; returns true on shutdown.
+fn handle_job<'m>(job: Job, models: &'m ModelMap,
+                  queues: &mut Vec<RunQueue<'m>>,
+                  inflight: &mut BTreeMap<u64, Inflight>, rng: &mut Pcg,
+                  req_counter: &mut u64, m: &EngineMetrics) -> bool {
+    match job {
+        Job::Shutdown => true,
+        Job::Info { reply } => {
+            let obj = Json::Obj(
+                models.iter().map(|(k, v)| (k.clone(), v.info())).collect(),
+            );
+            let _ = reply.send(obj);
+            false
+        }
+        Job::Score { req, reply } => {
+            let _ = reply.send(run_score(models, &req, rng));
+            false
+        }
+        Job::Generate { req, reply, enqueued } => {
+            admit_generate(models, queues, inflight, rng, req_counter, m,
+                           req, reply, enqueued);
+            false
+        }
+    }
+}
+
+/// Validate a generate request and admit its samples into the matching
+/// run queue (creating the queue on first use).
+#[allow(clippy::too_many_arguments)]
+fn admit_generate<'m>(models: &'m ModelMap, queues: &mut Vec<RunQueue<'m>>,
+                      inflight: &mut BTreeMap<u64, Inflight>, rng: &mut Pcg,
+                      req_counter: &mut u64, m: &EngineMetrics,
+                      req: GenRequest,
+                      reply: mpsc::Sender<Result<GenResponse>>,
+                      enqueued: Instant) {
+    m.c_reqs.inc();
+    let rid = *req_counter;
+    *req_counter += 1;
+
+    let model = match models.get(&req.model) {
+        Some(model) => model,
+        None => {
+            m.c_errors.inc();
+            let _ =
+                reply.send(Err(anyhow!("unknown model '{}'", req.model)));
+            return;
+        }
     };
-    let mut r = seed_rng;
-    let samples = model.sample(&prompts, &key_req.sampler, &mut r)?;
-    let mut out = Vec::with_capacity(counts.len());
-    let mut off = 0;
-    for c in counts {
-        out.push(samples[off..off + c].to_vec());
-        off += c;
+    let d = model.seq_len();
+    let prompt = req.prompt.clone().unwrap_or_else(|| Prompt::empty(d));
+    if prompt.0.len() != d {
+        m.c_errors.inc();
+        let _ = reply.send(Err(anyhow!(
+            "prompt length {} != D {d}", prompt.0.len()
+        )));
+        return;
     }
-    Ok(out)
+
+    // Per-request base RNG:
+    //  * deterministic — derived from the seed alone, so the response
+    //    depends only on the request (not on queue neighbours, admission
+    //    order, or engine history), and the engine stream is untouched;
+    //  * live — engine entropy XOR seed, with the monotonically increasing
+    //    request index mixed into the PCG stream so two live requests with
+    //    the same seed still draw from distinct streams.
+    let mut base = if req.deterministic {
+        Pcg::new(req.seed)
+    } else {
+        Pcg::with_stream(rng.next_u64() ^ req.seed, rid)
+    };
+
+    let qi = match queues.iter().position(|q| q.key == req.batch_key()) {
+        Some(qi) => qi,
+        None => match model.stepper(&req.sampler) {
+            Ok(stepper) => {
+                queues.push(RunQueue {
+                    key: req.batch_key(),
+                    stepper,
+                    routes: BTreeMap::new(),
+                    formed: false,
+                });
+                queues.len() - 1
+            }
+            Err(e) => {
+                m.c_errors.inc();
+                let _ = reply.send(Err(e));
+                return;
+            }
+        },
+    };
+
+    let n = req.n_samples;
+    if n == 0 {
+        let _ = reply.send(Ok(GenResponse {
+            model: req.model.clone(),
+            samples: Vec::new(),
+            wall_s: 0.0,
+        }));
+        return;
+    }
+    let q = &mut queues[qi];
+    for k in 0..n {
+        let sid = q.stepper.admit(&prompt, base.split());
+        q.routes.insert(sid, (rid, k));
+    }
+    inflight.insert(rid, Inflight {
+        reply,
+        enqueued,
+        model: req.model,
+        got: vec![None; n],
+        remaining: n,
+        queue_observed: false,
+    });
+}
+
+/// Run one scheduler step on a queue and deliver whatever completed.
+fn step_queue(q: &mut RunQueue<'_>, inflight: &mut BTreeMap<u64, Inflight>,
+              m: &EngineMetrics) {
+    if !q.formed {
+        q.formed = true;
+        // Batch size at formation time: sequences gathered before the
+        // queue's first step (each formation consumes >= 1 request, so
+        // this histogram's count never exceeds the request counter).
+        // One observation per queue lifetime by design — the per-step
+        // executed batch view lives in `slot_occupancy`.
+        m.h_batch
+            .observe((q.stepper.n_active() + q.stepper.n_pending()) as f64);
+    }
+    let backfills_before = q.stepper.backfills();
+    let t = Instant::now();
+    let finished = q.stepper.step();
+    m.h_step.observe(t.elapsed().as_secs_f64());
+    // queue_wait_s = enqueue -> first sequence placed into a slot, so time
+    // parked in the scheduler's pending queue is visible under load.
+    // Placement is the first thing step() does (backfill precedes the
+    // forward pass), so the step-start timestamp `t` is the placement
+    // instant — using now() here would bill the whole first step as wait.
+    // Drained before `finished` is processed: a sequence can be placed and
+    // retired within one step, and its route must still resolve.
+    for sid in q.stepper.take_placements() {
+        if let Some(&(rid, _)) = q.routes.get(&sid) {
+            if let Some(inf) = inflight.get_mut(&rid) {
+                if !inf.queue_observed {
+                    inf.queue_observed = true;
+                    let wait = t.saturating_duration_since(inf.enqueued);
+                    m.h_queue.observe(wait.as_secs_f64());
+                }
+            }
+        }
+    }
+    m.h_occupancy.observe(q.stepper.n_active() as f64);
+    m.h_pending.observe(q.stepper.n_pending() as f64);
+    m.c_backfills.add(q.stepper.backfills() - backfills_before);
+    m.c_steps.inc();
+
+    for (sid, sample) in finished {
+        let (rid, idx) =
+            q.routes.remove(&sid).expect("finished slot is routed");
+        let completed = {
+            let inf =
+                inflight.get_mut(&rid).expect("routed request in flight");
+            m.h_nfe.observe(sample.nfe);
+            inf.got[idx] = Some(sample);
+            inf.remaining -= 1;
+            inf.remaining == 0
+        };
+        if completed {
+            let inf = inflight.remove(&rid).unwrap();
+            let wall = inf.enqueued.elapsed().as_secs_f64();
+            m.h_latency.observe(wall);
+            m.c_samples.add(inf.got.len() as u64);
+            let samples: Vec<Sample> = inf
+                .got
+                .into_iter()
+                .map(|s| s.expect("request completed"))
+                .collect();
+            let _ = inf.reply.send(Ok(GenResponse {
+                model: inf.model,
+                samples,
+                wall_s: wall,
+            }));
+        }
+    }
 }
 
 fn run_score(models: &ModelMap, req: &ScoreRequest, rng: &mut Pcg)
@@ -380,6 +598,10 @@ mod tests {
                     "mock".into(),
                     Box::new(MockModel::new(8, 4, 5)) as Box<dyn EngineModel>,
                 );
+                let mut tiny = MockModel::new(8, 4, 5);
+                tiny.buckets = vec![1, 2, 4];
+                m.insert("tiny".into(),
+                         Box::new(tiny) as Box<dyn EngineModel>);
                 Ok(m)
             },
             BatcherConfig { max_wait: Duration::from_millis(1) },
@@ -433,6 +655,30 @@ mod tests {
     }
 
     #[test]
+    fn oversized_request_chunks_through_bucket_ladder() {
+        // 9 samples on a model whose largest bucket is 4: the scheduler
+        // parks the overflow in its pending queue and backfills — the
+        // request round-trips fully instead of truncating or inventing an
+        // uncompiled batch size.
+        let c = mock_coordinator();
+        let resp = c
+            .generate(GenRequest {
+                model: "tiny".into(),
+                n_samples: 9,
+                ..Default::default()
+            })
+            .unwrap();
+        assert_eq!(resp.samples.len(), 9);
+        for s in &resp.samples {
+            assert_eq!(s.tokens.len(), 8);
+            assert!(s.tokens.iter().all(|&t| (0..4).contains(&t)));
+        }
+        assert!(c.metrics.counter("backfills").get() >= 5,
+                "expected pending-queue backfills");
+        c.shutdown();
+    }
+
+    #[test]
     fn score_roundtrip_and_posterior_sums_to_one() {
         let c = mock_coordinator();
         let resp = c
@@ -471,6 +717,7 @@ mod tests {
             assert_eq!(r.samples.len(), 1);
         }
         assert!(c.metrics.counter("requests").get() >= 6);
+        assert!(c.metrics.counter("scheduler_steps").get() >= 1);
         c.shutdown();
     }
 
@@ -487,6 +734,100 @@ mod tests {
         let a = c.generate(req.clone()).unwrap();
         let b = c.generate(req).unwrap();
         assert_eq!(a.samples[0].tokens, b.samples[0].tokens);
+        assert_eq!(a.samples[1].tokens, b.samples[1].tokens);
+        c.shutdown();
+    }
+
+    #[test]
+    fn deterministic_requests_are_immune_to_interleaving() {
+        // A deterministic request must produce identical samples whether
+        // or not unrelated live traffic consumed engine entropy first —
+        // the old path burned `rng.next_u64()` even when deterministic.
+        let c = mock_coordinator();
+        let det = GenRequest {
+            model: "mock".into(),
+            n_samples: 2,
+            seed: 1234,
+            deterministic: true,
+            ..Default::default()
+        };
+        let a = c.generate(det.clone()).unwrap();
+        for i in 0..3 {
+            c.generate(GenRequest {
+                model: "mock".into(),
+                n_samples: 1,
+                seed: i,
+                ..Default::default()
+            })
+            .unwrap();
+        }
+        let b = c.generate(det).unwrap();
+        for (x, y) in a.samples.iter().zip(&b.samples) {
+            assert_eq!(x.tokens, y.tokens);
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn live_requests_with_same_seed_differ() {
+        // Non-deterministic requests mix the request index into their RNG
+        // stream: same seed twice must not replay the same samples.
+        let c = mock_coordinator();
+        let req = GenRequest {
+            model: "mock".into(),
+            n_samples: 2,
+            seed: 7,
+            ..Default::default()
+        };
+        let a = c.generate(req.clone()).unwrap();
+        let b = c.generate(req).unwrap();
+        assert_ne!(
+            (a.samples[0].tokens.clone(), a.samples[1].tokens.clone()),
+            (b.samples[0].tokens.clone(), b.samples[1].tokens.clone())
+        );
+        c.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_admitted_requests() {
+        // A request the engine has already admitted must still be answered
+        // after shutdown() — the loop drains in-flight work before exiting.
+        let c = mock_coordinator();
+        let cc = c.clone();
+        let h = std::thread::spawn(move || {
+            cc.generate(GenRequest {
+                model: "tiny".into(),
+                n_samples: 9,
+                ..Default::default()
+            })
+        });
+        while c.metrics.counter("requests").get() < 1 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        c.shutdown();
+        let resp = h.join().unwrap().unwrap();
+        assert_eq!(resp.samples.len(), 9);
+    }
+
+    #[test]
+    fn scheduler_metrics_are_exported() {
+        let c = mock_coordinator();
+        c.generate(GenRequest {
+            model: "mock".into(),
+            n_samples: 2,
+            ..Default::default()
+        })
+        .unwrap();
+        let snap = c.metrics.snapshot();
+        let hists = snap.get("histograms").unwrap();
+        for key in ["slot_occupancy", "step_latency_s", "pending_depth"] {
+            let count = hists
+                .get(key)
+                .and_then(|h| h.get("count"))
+                .and_then(|c| c.as_f64())
+                .unwrap_or(0.0);
+            assert!(count >= 1.0, "missing histogram {key}");
+        }
         c.shutdown();
     }
 }

@@ -19,16 +19,15 @@ impl Default for SamplerChoice {
 }
 
 impl SamplerChoice {
-    /// Batching key: requests with identical keys can share an engine call.
+    /// Batching key: requests with identical keys can share a run queue.
+    /// Derived from the FULL params debug repr — run queues persist across
+    /// requests, and the queue creator's params are applied to every
+    /// admitted sequence, so any field left out of the key (historically
+    /// `max_outer`) would be silently substituted for later requests.
     pub fn key(&self) -> String {
         match self {
-            SamplerChoice::Speculative(p) => format!(
-                "spec:{:?}:{}:{}:{:?}",
-                p.window, p.n_verify, p.temperature, p.sigma
-            ),
-            SamplerChoice::Mdm(p) => {
-                format!("mdm:{}:{}", p.steps, p.temperature)
-            }
+            SamplerChoice::Speculative(p) => format!("spec:{p:?}"),
+            SamplerChoice::Mdm(p) => format!("mdm:{p:?}"),
         }
     }
 }

@@ -9,8 +9,14 @@
 //! NFE uses the paper's best-case analysis: a grid step that reveals no
 //! token for a given batch element could have been skipped and costs that
 //! element 0 NFE.
+//!
+//! The per-row grid state machine lives in `engine::scheduler` (shared
+//! continuous-batching slot table); `mdm_sample` is the drive-to-completion
+//! wrapper. Because the reveal schedule is a per-row function of its
+//! initial mask count, rows progress independently and the scheduler can
+//! retire finished rows and backfill queued ones mid-run.
 
-use crate::engine::softmax::softmax_row;
+use crate::engine::scheduler::{run_to_completion, SeqParams};
 use crate::engine::{HybridModel, Prompt, Sample};
 use crate::util::rng::Pcg;
 
@@ -30,137 +36,19 @@ impl Default for MdmParams {
 
 /// Cosine schedule: masked proportion at uniform time tau in [0, 1]
 /// (tau=1 -> all masked, tau=0 -> clean), matching Shi et al.
-fn alpha(tau: f64) -> f64 {
+pub(crate) fn mdm_alpha(tau: f64) -> f64 {
     (std::f64::consts::PI / 2.0 * (1.0 - tau)).cos()
 }
 
 /// Sample a batch with the standard MDM algorithm on a cosine grid.
+/// Drive-to-completion wrapper over `SpecScheduler` (see module docs).
 pub fn mdm_sample<M: HybridModel>(
     model: &M,
     prompts: &[Prompt],
     params: &MdmParams,
     rng: &mut Pcg,
 ) -> Vec<Sample> {
-    let d = model.seq_len();
-    let v = model.vocab();
-    let mask = model.mask_id();
-    let n_req = prompts.len();
-    let buckets = model.buckets();
-    let bucket = buckets
-        .iter()
-        .copied()
-        .filter(|&b| b >= n_req)
-        .min()
-        .unwrap_or_else(|| buckets.iter().copied().max().unwrap_or(n_req));
-
-    struct Row {
-        tokens: Vec<i32>,
-        masked: Vec<usize>,
-        nfe: f64,
-        steps_used: usize,
-        rng: Pcg,
-        m0: usize,
-    }
-    let mut rows: Vec<Row> = (0..bucket)
-        .map(|b| {
-            let prompt =
-                prompts.get(b).cloned().unwrap_or_else(|| Prompt::empty(d));
-            let mut tokens = vec![mask; d];
-            let mut masked = Vec::new();
-            for (pos, slot) in prompt.0.iter().enumerate() {
-                match slot {
-                    Some(t) => tokens[pos] = *t,
-                    None => masked.push(pos),
-                }
-            }
-            let m0 = masked.len();
-            Row { tokens, masked, nfe: 0.0, steps_used: 0,
-                  rng: rng.split(), m0 }
-        })
-        .collect();
-
-    let k = params.steps.max(1);
-    for step in 0..k {
-        if rows.iter().all(|r| r.masked.is_empty()) {
-            break;
-        }
-        // Reveal counts for this grid step (deterministic discretization of
-        // the cosine schedule, scaled per-row by its initial mask count).
-        let tau_next = 1.0 - (step + 1) as f64 / k as f64;
-        let mut reveal_counts = Vec::with_capacity(bucket);
-        let mut any = false;
-        for r in &rows {
-            let m_next = (r.m0 as f64 * alpha(tau_next)).round() as usize;
-            let c = r.masked.len().saturating_sub(m_next);
-            any |= c > 0 && !r.masked.is_empty();
-            reveal_counts.push(c);
-        }
-        if !any {
-            continue; // best-case: nobody changes, forward pass skipped
-        }
-
-        let mut batch_tokens = Vec::with_capacity(bucket * d);
-        for r in &rows {
-            batch_tokens.extend_from_slice(&r.tokens);
-        }
-        let (_, logits) = model.draft(&batch_tokens, bucket);
-
-        for (b, r) in rows.iter_mut().enumerate() {
-            let c = reveal_counts[b].min(r.masked.len());
-            if c == 0 || r.masked.is_empty() {
-                continue; // this element's update was a no-op: 0 NFE
-            }
-            r.nfe += 1.0;
-            r.steps_used += 1;
-            // Zheng fix: choose WHICH positions to reveal uniformly,
-            // independent of the sampled values.
-            r.rng.shuffle(&mut r.masked);
-            for _ in 0..c {
-                let pos = r.masked.pop().unwrap();
-                let row = &logits[(b * d + pos) * v..(b * d + pos) * v + v];
-                let p = if (params.temperature - 1.0).abs() < 1e-12 {
-                    softmax_row(row)
-                } else {
-                    crate::engine::softmax::softmax_row_temp(
-                        row, params.temperature)
-                };
-                r.tokens[pos] = r.rng.categorical(&p) as i32;
-            }
-        }
-    }
-
-    // Any positions still masked after the grid (rounding) get one final
-    // forced reveal pass.
-    if rows.iter().any(|r| !r.masked.is_empty()) {
-        let mut batch_tokens = Vec::with_capacity(bucket * d);
-        for r in &rows {
-            batch_tokens.extend_from_slice(&r.tokens);
-        }
-        let (_, logits) = model.draft(&batch_tokens, bucket);
-        for (b, r) in rows.iter_mut().enumerate() {
-            if r.masked.is_empty() {
-                continue;
-            }
-            r.nfe += 1.0;
-            r.steps_used += 1;
-            while let Some(pos) = r.masked.pop() {
-                let row = &logits[(b * d + pos) * v..(b * d + pos) * v + v];
-                let p = softmax_row(row);
-                r.tokens[pos] = r.rng.categorical(&p) as i32;
-            }
-        }
-    }
-
-    rows.into_iter()
-        .take(n_req)
-        .map(|r| Sample {
-            tokens: r.tokens,
-            nfe: r.nfe,
-            outer_loops: r.steps_used,
-            accepted: 0,
-            rejected: 0,
-        })
-        .collect()
+    run_to_completion(model, prompts, &SeqParams::Mdm(params.clone()), rng).0
 }
 
 #[cfg(test)]
@@ -221,6 +109,31 @@ mod tests {
     fn single_step_reveals_all_at_once() {
         for s in run(1, 2, 5) {
             assert!((s.nfe - 1.0).abs() < 1e-9, "{s:?}");
+        }
+    }
+
+    #[test]
+    fn oversized_batch_round_trips() {
+        // More prompts than the largest bucket: queued + backfilled.
+        let mut m = MockModel::new(8, 4, 23);
+        m.buckets = vec![1, 2];
+        let prompts = vec![Prompt::empty(8); 7];
+        let mut rng = Pcg::new(6);
+        let out = mdm_sample(&m, &prompts, &MdmParams { steps: 4,
+                                                        temperature: 1.0 },
+                             &mut rng);
+        assert_eq!(out.len(), 7);
+        for s in &out {
+            assert!(s.tokens.iter().all(|&t| (0..4).contains(&t)));
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = run(8, 3, 42);
+        let b = run(8, 3, 42);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.tokens, y.tokens);
         }
     }
 }

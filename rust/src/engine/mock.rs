@@ -25,12 +25,16 @@ pub struct MockModel {
     pub seed: u64,
     /// If true, target == draft (acceptance rate must then be 1).
     pub target_equals_draft: bool,
+    /// Batch-size ladder; overridable so scheduler tests can force small
+    /// capacities (and exercise pending-queue backfill) cheaply.
+    pub buckets: Vec<usize>,
 }
 
 impl MockModel {
     pub fn new(seq_len: usize, vocab: usize, seed: u64) -> MockModel {
         MockModel { seq_len, vocab, sharp: 1.5, seed,
-                    target_equals_draft: false }
+                    target_equals_draft: false,
+                    buckets: vec![1, 2, 4, 8, 16, 32] }
     }
 
     fn hash_logits(&self, tag: u64, payload: &[i32], pos: i32) -> Vec<f32> {
@@ -94,7 +98,7 @@ impl HybridModel for MockModel {
     }
 
     fn buckets(&self) -> Vec<usize> {
-        vec![1, 2, 4, 8, 16, 32]
+        self.buckets.clone()
     }
 
     fn draft(&self, tokens: &[i32], batch: usize) -> (Vec<i32>, Vec<f32>) {

@@ -7,12 +7,15 @@
 
 pub mod mdm;
 pub mod mock;
+pub mod scheduler;
 pub mod softmax;
 pub mod speculative;
 pub mod window;
 
 pub use mdm::{mdm_sample, MdmParams};
 pub use mock::MockModel;
+pub use scheduler::{pick_bucket, run_to_completion, BoundStepper, SeqParams,
+                    SlotId, SpecScheduler, Stepper};
 pub use softmax::{log_softmax_row, softmax_row};
 pub use speculative::{speculative_sample, SpecParams, SpecStats};
 pub use window::Window;

@@ -1,0 +1,940 @@
+//! Continuous-batching scheduler for the sampling engine.
+//!
+//! The original engine ran each batch to completion: every request waited
+//! for the slowest sequence in its bucket, and padding rows — never marked
+//! done — generated garbage until the last real row finished. This module
+//! restructures sampling as a **step-based slot machine** (the design the
+//! speculative-decoding serving literature calls continuous batching):
+//!
+//! * `admit` enqueues a sequence (speculative or MDM) and returns a
+//!   `SlotId` handle;
+//! * `step` runs **one outer loop** — one draft pass plus, for the
+//!   speculative sampler, its inner verify/accept sweeps — over the
+//!   currently resident sequences, retires everything that finished, and
+//!   backfills freed slots from the pending queue *between* outer loops;
+//! * rows beyond the resident count are pure mask padding and do **zero**
+//!   generation work (no RNG, no accept/reject accounting, no reveals).
+//!
+//! The slot table is sized to the model's largest batch bucket, and each
+//! step executes in the smallest bucket that covers the resident count
+//! ([`pick_bucket`] — the single bucket policy in the codebase, also
+//! re-exported as `coordinator::batcher::pick_bucket` for the L3 layer).
+//! Because admission overflow parks in the pending queue, a
+//! request with more samples than the largest bucket is transparently
+//! chunked across steps instead of being handed to an uncompiled batch
+//! size.
+//!
+//! `speculative_sample` / `mdm_sample` remain as drive-to-completion
+//! wrappers over this scheduler, so single-shot call sites (likelihood
+//! cross-checks, harnesses, examples, benches) are unchanged.
+
+use std::collections::VecDeque;
+
+use crate::engine::mdm::{mdm_alpha, MdmParams};
+use crate::engine::softmax::{residual_distribution, softmax_row,
+                             softmax_row_temp};
+use crate::engine::{HybridModel, Prompt, Sample, SpecParams, SpecStats};
+use crate::util::rng::Pcg;
+
+/// Handle for an admitted sequence; unique within one scheduler.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct SlotId(pub u64);
+
+/// Per-sequence sampler settings, fixed at admission.
+#[derive(Clone, Debug)]
+pub enum SeqParams {
+    /// Algorithm 3: speculative draft/verify loops.
+    Spec(SpecParams),
+    /// Standard masked-diffusion baseline on a cosine grid.
+    Mdm(MdmParams),
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Mode {
+    Spec,
+    Mdm,
+}
+
+/// Speculative per-sequence state machine (Alg. 3), extracted from the old
+/// monolithic `speculative_sample` loop.
+pub(crate) struct SeqState {
+    pub tokens: Vec<i32>,
+    pub sigma: Vec<i32>,
+    /// revealed[pos]: position already carries its final token. Kept
+    /// incrementally — rebuilding it from sigma[..i] each outer loop made
+    /// the draft-context build O(D^2 * i) (see EXPERIMENTS.md §Perf L3).
+    pub revealed: Vec<bool>,
+    /// Tokens revealed so far (= next ordering position to decide).
+    pub i: usize,
+    pub done: bool,
+    pub nfe: f64,
+    pub outer: usize,
+    pub accepted: usize,
+    pub rejected: usize,
+    pub rng: Pcg,
+}
+
+/// MDM per-sequence state machine (Shi et al. grid with the Zheng fix),
+/// extracted from the old `mdm_sample` loop. The grid index is per-row, so
+/// a scheduler step can fast-forward through reveal-free grid steps (which
+/// the paper's best-case NFE accounting already treated as skippable).
+struct MdmState {
+    tokens: Vec<i32>,
+    masked: Vec<usize>,
+    m0: usize,
+    grid_step: usize,
+    nfe: f64,
+    steps_used: usize,
+    rng: Pcg,
+}
+
+enum Kernel {
+    Spec(SeqState, SpecParams),
+    Mdm(MdmState, MdmParams),
+}
+
+struct Slot {
+    id: SlotId,
+    kernel: Kernel,
+}
+
+pub struct SpecScheduler {
+    d: usize,
+    vocab: usize,
+    mask: i32,
+    buckets: Vec<usize>,
+    capacity: usize,
+    slots: Vec<Option<Slot>>,
+    pending: VecDeque<Slot>,
+    next_id: u64,
+    mode: Option<Mode>,
+    stats: SpecStats,
+    steps: u64,
+    row_steps: u64,
+    padded_row_steps: u64,
+    backfills: u64,
+    placements: Vec<SlotId>,
+}
+
+impl SpecScheduler {
+    pub fn new(seq_len: usize, vocab: usize, mask: i32,
+               buckets: Vec<usize>) -> SpecScheduler {
+        let capacity = buckets.iter().copied().max().unwrap_or(1).max(1);
+        SpecScheduler {
+            d: seq_len,
+            vocab,
+            mask,
+            buckets,
+            capacity,
+            slots: (0..capacity).map(|_| None).collect(),
+            pending: VecDeque::new(),
+            next_id: 0,
+            mode: None,
+            stats: SpecStats::default(),
+            steps: 0,
+            row_steps: 0,
+            padded_row_steps: 0,
+            backfills: 0,
+            placements: Vec::new(),
+        }
+    }
+
+    pub fn for_model<M: HybridModel>(model: &M) -> SpecScheduler {
+        SpecScheduler::new(model.seq_len(), model.vocab(), model.mask_id(),
+                           model.buckets())
+    }
+
+    /// Enqueue one sequence. It becomes resident at the next `step` with a
+    /// free slot; until then it parks in the pending queue (which is how
+    /// oversized requests get chunked across the bucket ladder).
+    pub fn admit(&mut self, prompt: &Prompt, params: SeqParams, rng: Pcg)
+                 -> SlotId {
+        assert_eq!(prompt.0.len(), self.d,
+                   "prompt length {} != D {}", prompt.0.len(), self.d);
+        let mode = match &params {
+            SeqParams::Spec(_) => Mode::Spec,
+            SeqParams::Mdm(_) => Mode::Mdm,
+        };
+        match self.mode {
+            None => self.mode = Some(mode),
+            Some(m) => assert_eq!(
+                m, mode,
+                "one scheduler batches one sampler kind; \
+                 key run queues by sampler settings"
+            ),
+        }
+        let id = SlotId(self.next_id);
+        self.next_id += 1;
+        let kernel = match params {
+            SeqParams::Spec(p) => {
+                let s = init_seq(prompt, self.d, self.mask, rng,
+                                 p.sigma.as_deref());
+                Kernel::Spec(s, p)
+            }
+            SeqParams::Mdm(p) => {
+                Kernel::Mdm(init_mdm(prompt, self.d, self.mask, rng), p)
+            }
+        };
+        self.pending.push_back(Slot { id, kernel });
+        id
+    }
+
+    pub fn n_active(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn n_pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.pending.is_empty() && self.slots.iter().all(|s| s.is_none())
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Aggregate speculative statistics since construction / `take_stats`.
+    pub fn stats(&self) -> &SpecStats {
+        &self.stats
+    }
+
+    pub fn take_stats(&mut self) -> SpecStats {
+        std::mem::take(&mut self.stats)
+    }
+
+    /// Outer loops executed (= draft forward passes).
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// Σ bucket size over steps: total batch rows paid for, padding
+    /// included — the cost currency continuous batching optimizes.
+    pub fn row_steps(&self) -> u64 {
+        self.row_steps
+    }
+
+    /// Σ (bucket - resident) over steps: rows paid for but carrying no
+    /// sequence.
+    pub fn padded_row_steps(&self) -> u64 {
+        self.padded_row_steps
+    }
+
+    /// Pending sequences placed into a slot freed by a retirement (i.e.
+    /// placements after the first step; initial placements don't count).
+    pub fn backfills(&self) -> u64 {
+        self.backfills
+    }
+
+    /// Sequences that entered a slot (began executing) since the last
+    /// call — lets the coordinator time enqueue -> execution start.
+    pub fn take_placements(&mut self) -> Vec<SlotId> {
+        std::mem::take(&mut self.placements)
+    }
+
+    /// Move pending sequences into free slots; returns placements made.
+    fn backfill(&mut self) -> usize {
+        let mut placed = 0;
+        for slot in self.slots.iter_mut() {
+            if self.pending.is_empty() {
+                break;
+            }
+            if slot.is_none() {
+                *slot = self.pending.pop_front();
+                self.placements.push(slot.as_ref().unwrap().id);
+                placed += 1;
+                if self.steps > 0 {
+                    self.backfills += 1;
+                }
+            }
+        }
+        placed
+    }
+
+    /// Retire every resident sequence that is already finished (fully
+    /// revealed prompts retire here without ever touching the model).
+    fn retire_finished(&mut self, finished: &mut Vec<(SlotId, Sample)>)
+                       -> usize {
+        let mut retired = 0;
+        for slot in self.slots.iter_mut() {
+            let done = match slot {
+                Some(Slot { kernel: Kernel::Spec(s, _), .. }) => s.done,
+                Some(Slot { kernel: Kernel::Mdm(m, _), .. }) => {
+                    m.masked.is_empty()
+                }
+                None => false,
+            };
+            if done {
+                let s = slot.take().unwrap();
+                finished.push((s.id, emit_sample(s.kernel)));
+                retired += 1;
+            }
+        }
+        retired
+    }
+
+    /// Run one outer loop over the resident sequences: backfill freed
+    /// slots, execute one draft pass (plus verify sweeps for the
+    /// speculative sampler) in the smallest covering bucket, advance every
+    /// resident state machine, and retire whatever finished.
+    pub fn step<M: HybridModel>(&mut self, model: &M)
+                                -> Vec<(SlotId, Sample)> {
+        debug_assert_eq!(model.seq_len(), self.d);
+        debug_assert_eq!(model.mask_id(), self.mask);
+        let mut finished = Vec::new();
+        loop {
+            let placed = self.backfill();
+            let retired = self.retire_finished(&mut finished);
+            if placed == 0 && retired == 0 {
+                break;
+            }
+        }
+
+        let active: Vec<usize> = (0..self.slots.len())
+            .filter(|&i| self.slots[i].is_some())
+            .collect();
+        if active.is_empty() {
+            return finished;
+        }
+        let bucket = pick_bucket(&self.buckets, active.len());
+        debug_assert!(bucket >= active.len(),
+                      "slot table exceeds bucket ladder");
+        self.steps += 1;
+        self.row_steps += bucket as u64;
+        self.padded_row_steps += (bucket - active.len()) as u64;
+
+        match self.mode.expect("active slots imply a mode") {
+            Mode::Spec => self.step_spec(model, &active, bucket,
+                                         &mut finished),
+            Mode::Mdm => self.step_mdm(model, &active, bucket,
+                                       &mut finished),
+        }
+        finished
+    }
+
+    /// One speculative outer loop (Alg. 3) over `active`, batch `bucket`.
+    fn step_spec<M: HybridModel>(&mut self, model: &M, active: &[usize],
+                                 bucket: usize,
+                                 finished: &mut Vec<(SlotId, Sample)>) {
+        let d = self.d;
+        let v = self.vocab;
+        let mask = self.mask;
+        let n_act = active.len();
+        let slots = &mut self.slots;
+        let stats = &mut self.stats;
+
+        // ---- draft pass: resident rows first, then pure-mask padding ----
+        let mut masked_tokens = vec![mask; bucket * d];
+        for (r, &si) in active.iter().enumerate() {
+            let (s, _) = spec_ref(&slots[si]);
+            for pos in 0..d {
+                if s.revealed[pos] {
+                    masked_tokens[r * d + pos] = s.tokens[pos];
+                }
+            }
+        }
+        // Padding-liveness invariant: rows beyond the resident count carry
+        // only mask tokens into the draft pass and are never sampled from.
+        debug_assert!(
+            masked_tokens[n_act * d..].iter().all(|&t| t == mask),
+            "padding rows must contribute only mask tokens"
+        );
+        let (state, draft_logits) = model.draft(&masked_tokens, bucket);
+        stats.outer_loops += 1;
+
+        // ---- sample draft tokens + window targets (resident rows only) --
+        let mut draft_probs: Vec<Vec<Vec<f64>>> = Vec::with_capacity(n_act);
+        let mut targets = Vec::with_capacity(n_act);
+        let mut full_tokens = vec![mask; bucket * d];
+        let mut sigma_flat = vec![0i32; bucket * d];
+        for row in sigma_flat[n_act * d..].chunks_exact_mut(d) {
+            for (pos, out) in row.iter_mut().enumerate() {
+                *out = pos as i32; // identity σ for padding rows
+            }
+        }
+        for (r, &si) in active.iter().enumerate() {
+            let (s, p) = spec_mut(&mut slots[si]);
+            let w = p.window.limit(s.i, d);
+            targets.push((s.i + w).min(d));
+            let mut probs_rows: Vec<Vec<f64>> = vec![Vec::new(); d];
+            for od in s.i..d {
+                let pos = s.sigma[od] as usize;
+                let row = &draft_logits[(r * d + pos) * v..
+                                        (r * d + pos) * v + v];
+                let prob = temp_probs(row, p.temperature);
+                s.tokens[pos] = s.rng.categorical(&prob) as i32;
+                probs_rows[pos] = prob;
+            }
+            draft_probs.push(probs_rows);
+            full_tokens[r * d..(r + 1) * d].copy_from_slice(&s.tokens);
+            sigma_flat[r * d..(r + 1) * d].copy_from_slice(&s.sigma);
+        }
+
+        // j = reveals within this outer loop, per resident sequence.
+        let mut j: Vec<usize> =
+            active.iter().map(|&si| spec_ref(&slots[si]).0.i).collect();
+        let mut verify_used = vec![0usize; n_act];
+        let max_nv = active
+            .iter()
+            .map(|&si| spec_ref(&slots[si]).1.n_verify.max(1))
+            .max()
+            .unwrap_or(1);
+
+        // ---- inner speculative loops ------------------------------------
+        for k in 0..max_nv {
+            let any_active = active.iter().enumerate().any(|(r, &si)| {
+                let (_, p) = spec_ref(&slots[si]);
+                k < p.n_verify.max(1) && j[r] < targets[r]
+            });
+            if !any_active {
+                break;
+            }
+            let target_logits =
+                model.verify(&state, &full_tokens, &sigma_flat, bucket);
+            stats.verify_passes += 1;
+
+            for (r, &si) in active.iter().enumerate() {
+                let (s, p) = spec_mut(&mut slots[si]);
+                if k >= p.n_verify.max(1) || j[r] >= targets[r] {
+                    continue;
+                }
+                verify_used[r] += 1;
+                let temperature = p.temperature;
+                let mut dd = j[r];
+                let mut accepted = 0usize;
+                let mut rejected = 0usize;
+                while dd < targets[r] {
+                    let pos = s.sigma[dd] as usize;
+                    let tok = s.tokens[pos] as usize;
+                    let p_row = &draft_probs[r][pos];
+                    // Target: ordering position 0 falls back to the draft
+                    // (first-position rule); otherwise track dd-1.
+                    let q_row: Vec<f64> = if dd == 0 {
+                        p_row.clone()
+                    } else {
+                        let tr = (r * d + (dd - 1)) * v;
+                        temp_probs(&target_logits[tr..tr + v], temperature)
+                    };
+                    let accept_p = if p_row[tok] > 0.0 {
+                        (q_row[tok] / p_row[tok]).min(1.0)
+                    } else {
+                        1.0
+                    };
+                    if s.rng.f64() < accept_p {
+                        s.accepted += 1;
+                        accepted += 1;
+                        dd += 1;
+                    } else {
+                        s.rejected += 1;
+                        rejected += 1;
+                        let res = residual_distribution(&q_row, p_row)
+                            .unwrap_or(q_row);
+                        let new_tok = s.rng.categorical(&res) as i32;
+                        s.tokens[pos] = new_tok;
+                        full_tokens[r * d + pos] = new_tok;
+                        dd += 1;
+                        break; // resample ends this inner sweep
+                    }
+                }
+                j[r] = dd;
+                stats.accepted += accepted;
+                stats.rejected += rejected;
+            }
+        }
+
+        // ---- bookkeeping + immediate retirement -------------------------
+        for (r, &si) in active.iter().enumerate() {
+            let (s, p) = spec_mut(&mut slots[si]);
+            s.outer += 1;
+            s.nfe += model.nfe_cost(verify_used[r]);
+            for od in s.i..j[r] {
+                s.revealed[s.sigma[od] as usize] = true;
+            }
+            s.i = j[r];
+            if s.i >= d {
+                s.done = true;
+            }
+            // Safety valve: a well-formed run needs at most D outer loops.
+            let retire = s.done || s.outer >= p.max_outer;
+            if retire {
+                let slot = slots[si].take().unwrap();
+                finished.push((slot.id, emit_sample(slot.kernel)));
+            }
+        }
+    }
+
+    /// One MDM reveal step over `active`, batch `bucket`. Each row is
+    /// fast-forwarded through reveal-free grid steps (0 NFE, per the
+    /// paper's best-case accounting) so every draft pass reveals work for
+    /// every resident row.
+    fn step_mdm<M: HybridModel>(&mut self, model: &M, active: &[usize],
+                                bucket: usize,
+                                finished: &mut Vec<(SlotId, Sample)>) {
+        let d = self.d;
+        let v = self.vocab;
+        let mask = self.mask;
+        let n_act = active.len();
+        let slots = &mut self.slots;
+
+        // Reveal counts for this step (advances each row's grid cursor).
+        let mut reveals = Vec::with_capacity(n_act);
+        for &si in active {
+            let (m, p) = mdm_mut(&mut slots[si]);
+            reveals.push(next_reveal(m, p));
+        }
+
+        let mut batch_tokens = vec![mask; bucket * d];
+        for (r, &si) in active.iter().enumerate() {
+            let (m, _) = mdm_mut(&mut slots[si]);
+            batch_tokens[r * d..(r + 1) * d].copy_from_slice(&m.tokens);
+        }
+        debug_assert!(
+            batch_tokens[n_act * d..].iter().all(|&t| t == mask),
+            "padding rows must contribute only mask tokens"
+        );
+        let (_, logits) = model.draft(&batch_tokens, bucket);
+
+        for (r, &si) in active.iter().enumerate() {
+            let (m, p) = mdm_mut(&mut slots[si]);
+            let (c, forced) = reveals[r];
+            let c = c.min(m.masked.len());
+            debug_assert!(c > 0, "resident MDM row must reveal every step");
+            m.nfe += 1.0;
+            m.steps_used += 1;
+            // Zheng fix: choose WHICH positions to reveal uniformly,
+            // independent of the sampled values.
+            m.rng.shuffle(&mut m.masked);
+            for _ in 0..c {
+                let pos = m.masked.pop().unwrap();
+                let row = &logits[(r * d + pos) * v..(r * d + pos) * v + v];
+                // The grid uses the sampling temperature; the final forced
+                // pass (rounding leftovers) reveals at temperature 1.
+                let prob = if forced { softmax_row(row) }
+                           else { temp_probs(row, p.temperature) };
+                m.tokens[pos] = m.rng.categorical(&prob) as i32;
+            }
+            if m.masked.is_empty() {
+                let slot = slots[si].take().unwrap();
+                finished.push((slot.id, emit_sample(slot.kernel)));
+            }
+        }
+    }
+}
+
+fn spec_ref(slot: &Option<Slot>) -> (&SeqState, &SpecParams) {
+    match slot {
+        Some(Slot { kernel: Kernel::Spec(s, p), .. }) => (s, p),
+        _ => unreachable!("non-speculative slot in speculative step"),
+    }
+}
+
+fn spec_mut(slot: &mut Option<Slot>) -> (&mut SeqState, &SpecParams) {
+    match slot {
+        Some(Slot { kernel: Kernel::Spec(s, p), .. }) => (s, p),
+        _ => unreachable!("non-speculative slot in speculative step"),
+    }
+}
+
+fn mdm_mut(slot: &mut Option<Slot>) -> (&mut MdmState, &MdmParams) {
+    match slot {
+        Some(Slot { kernel: Kernel::Mdm(m, p), .. }) => (m, p),
+        _ => unreachable!("non-MDM slot in MDM step"),
+    }
+}
+
+fn emit_sample(kernel: Kernel) -> Sample {
+    match kernel {
+        Kernel::Spec(s, _) => Sample {
+            tokens: s.tokens,
+            nfe: s.nfe,
+            outer_loops: s.outer,
+            accepted: s.accepted,
+            rejected: s.rejected,
+        },
+        Kernel::Mdm(m, _) => Sample {
+            tokens: m.tokens,
+            nfe: m.nfe,
+            outer_loops: m.steps_used,
+            accepted: 0,
+            rejected: 0,
+        },
+    }
+}
+
+pub(crate) fn init_seq(prompt: &Prompt, d: usize, mask: i32, mut rng: Pcg,
+                       fixed_sigma: Option<&[i32]>) -> SeqState {
+    let mut revealed: Vec<i32> = Vec::new();
+    let mut hidden: Vec<i32> = Vec::new();
+    let mut tokens = vec![mask; d];
+    for (pos, slot) in prompt.0.iter().enumerate() {
+        match slot {
+            Some(tok) => {
+                tokens[pos] = *tok;
+                revealed.push(pos as i32);
+            }
+            None => hidden.push(pos as i32),
+        }
+    }
+    rng.shuffle(&mut revealed);
+    rng.shuffle(&mut hidden);
+    let i = revealed.len();
+    let mut sigma = revealed;
+    sigma.extend(hidden);
+    if let Some(fixed) = fixed_sigma {
+        debug_assert_eq!(fixed.len(), d);
+        debug_assert!(fixed[..i]
+            .iter()
+            .all(|p| prompt.0[*p as usize].is_some()));
+        sigma = fixed.to_vec();
+    }
+    let revealed_mask: Vec<bool> =
+        prompt.0.iter().map(|s| s.is_some()).collect();
+    SeqState {
+        tokens,
+        sigma,
+        revealed: revealed_mask,
+        i,
+        done: i >= d,
+        nfe: 0.0,
+        outer: 0,
+        accepted: 0,
+        rejected: 0,
+        rng,
+    }
+}
+
+fn init_mdm(prompt: &Prompt, d: usize, mask: i32, rng: Pcg) -> MdmState {
+    let mut tokens = vec![mask; d];
+    let mut masked = Vec::new();
+    for (pos, slot) in prompt.0.iter().enumerate() {
+        match slot {
+            Some(t) => tokens[pos] = *t,
+            None => masked.push(pos),
+        }
+    }
+    let m0 = masked.len();
+    MdmState { tokens, masked, m0, grid_step: 0, nfe: 0.0, steps_used: 0,
+               rng }
+}
+
+/// Advance a row's grid cursor to its next *revealing* step and return
+/// (reveal count, is-forced-final). Reveal-free grid steps cost nothing
+/// (the paper's best-case NFE accounting) so they are skipped outright.
+fn next_reveal(m: &mut MdmState, p: &MdmParams) -> (usize, bool) {
+    let k = p.steps.max(1);
+    loop {
+        if m.grid_step >= k {
+            // Rounding leftovers after the grid: one forced reveal pass.
+            return (m.masked.len(), true);
+        }
+        let tau_next = 1.0 - (m.grid_step + 1) as f64 / k as f64;
+        let m_next = (m.m0 as f64 * mdm_alpha(tau_next)).round() as usize;
+        m.grid_step += 1;
+        let c = m.masked.len().saturating_sub(m_next);
+        if c > 0 {
+            return (c, false);
+        }
+    }
+}
+
+/// Drive-to-completion helper shared by `speculative_sample` and
+/// `mdm_sample`: admit every prompt, step until the scheduler drains, and
+/// reassemble samples in admission order.
+pub fn run_to_completion<M: HybridModel>(
+    model: &M,
+    prompts: &[Prompt],
+    params: &SeqParams,
+    rng: &mut Pcg,
+) -> (Vec<Sample>, SpecStats) {
+    let mut sched = SpecScheduler::for_model(model);
+    let ids: Vec<SlotId> = prompts
+        .iter()
+        .map(|p| sched.admit(p, params.clone(), rng.split()))
+        .collect();
+    let mut done: std::collections::BTreeMap<SlotId, Sample> =
+        std::collections::BTreeMap::new();
+    while !sched.is_idle() {
+        for (id, sample) in sched.step(model) {
+            done.insert(id, sample);
+        }
+    }
+    let samples = ids
+        .into_iter()
+        .map(|id| done.remove(&id).expect("scheduler retired every admit"))
+        .collect();
+    (samples, sched.take_stats())
+}
+
+/// Smallest bucket >= n, or the largest available if n exceeds them all.
+///
+/// The **single** bucket-selection policy in the codebase (re-exported as
+/// `coordinator::batcher::pick_bucket` for the L3 layer). The scheduler
+/// caps residency at the largest rung, so the truncating fallback is never
+/// reached from the engine — a model is never handed a batch size it
+/// didn't compile.
+pub fn pick_bucket(buckets: &[usize], n: usize) -> usize {
+    buckets
+        .iter()
+        .copied()
+        .filter(|&b| b >= n)
+        .min()
+        .or_else(|| buckets.iter().copied().max())
+        .unwrap_or(n.max(1))
+}
+
+pub(crate) fn temp_probs(logits: &[f32], temperature: f64) -> Vec<f64> {
+    if (temperature - 1.0).abs() < 1e-12 {
+        softmax_row(logits)
+    } else {
+        softmax_row_temp(logits, temperature)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Object-safe stepping facade for the coordinator
+// ---------------------------------------------------------------------------
+
+/// What the coordinator's run queues drive: a scheduler bound to a model,
+/// with the `HybridModel::State` type erased so it can live behind
+/// `Box<dyn EngineModel>`.
+pub trait Stepper {
+    fn admit(&mut self, prompt: &Prompt, rng: Pcg) -> SlotId;
+    fn step(&mut self) -> Vec<(SlotId, Sample)>;
+    fn n_active(&self) -> usize;
+    fn n_pending(&self) -> usize;
+    fn is_idle(&self) -> bool;
+    fn capacity(&self) -> usize;
+    fn steps(&self) -> u64;
+    fn backfills(&self) -> u64;
+    fn take_placements(&mut self) -> Vec<SlotId>;
+}
+
+/// A `SpecScheduler` bound to one model reference and one sampler setting
+/// (the coordinator keys run queues by `batch_key`, so every sequence in a
+/// queue shares its settings).
+pub struct BoundStepper<'m, M: HybridModel> {
+    model: &'m M,
+    params: SeqParams,
+    pub sched: SpecScheduler,
+}
+
+impl<'m, M: HybridModel> BoundStepper<'m, M> {
+    pub fn new(model: &'m M, params: SeqParams) -> BoundStepper<'m, M> {
+        BoundStepper { model, params, sched: SpecScheduler::for_model(model) }
+    }
+}
+
+impl<'m, M: HybridModel> Stepper for BoundStepper<'m, M> {
+    fn admit(&mut self, prompt: &Prompt, rng: Pcg) -> SlotId {
+        self.sched.admit(prompt, self.params.clone(), rng)
+    }
+
+    fn step(&mut self) -> Vec<(SlotId, Sample)> {
+        self.sched.step(self.model)
+    }
+
+    fn n_active(&self) -> usize {
+        self.sched.n_active()
+    }
+
+    fn n_pending(&self) -> usize {
+        self.sched.n_pending()
+    }
+
+    fn is_idle(&self) -> bool {
+        self.sched.is_idle()
+    }
+
+    fn capacity(&self) -> usize {
+        self.sched.capacity()
+    }
+
+    fn steps(&self) -> u64 {
+        self.sched.steps()
+    }
+
+    fn backfills(&self) -> u64 {
+        self.sched.backfills()
+    }
+
+    fn take_placements(&mut self) -> Vec<SlotId> {
+        self.sched.take_placements()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::mock::MockModel;
+
+    fn spec(params: &SpecParams) -> SeqParams {
+        SeqParams::Spec(params.clone())
+    }
+
+    #[test]
+    fn admissions_park_in_pending_until_stepped() {
+        let mut m = MockModel::new(8, 4, 3);
+        m.buckets = vec![1, 2];
+        let mut sched = SpecScheduler::for_model(&m);
+        let mut rng = Pcg::new(1);
+        for _ in 0..5 {
+            sched.admit(&Prompt::empty(8), spec(&SpecParams::default()),
+                        rng.split());
+        }
+        assert_eq!(sched.n_pending(), 5);
+        assert_eq!(sched.n_active(), 0);
+        assert_eq!(sched.capacity(), 2);
+        assert!(!sched.is_idle());
+    }
+
+    #[test]
+    fn backfill_admits_queued_after_retirement() {
+        let mut m = MockModel::new(8, 4, 3);
+        m.buckets = vec![1, 2];
+        let mut sched = SpecScheduler::for_model(&m);
+        let mut rng = Pcg::new(2);
+        let n = 5;
+        let ids: Vec<SlotId> = (0..n)
+            .map(|_| sched.admit(&Prompt::empty(8),
+                                 spec(&SpecParams::default()), rng.split()))
+            .collect();
+        let mut done = Vec::new();
+        let mut guard = 0;
+        while !sched.is_idle() {
+            assert!(sched.n_active() <= 2, "slot table overflow");
+            done.extend(sched.step(&m));
+            guard += 1;
+            assert!(guard < 10_000, "scheduler failed to drain");
+        }
+        assert_eq!(done.len(), n);
+        let mut got: Vec<SlotId> = done.iter().map(|(id, _)| *id).collect();
+        got.sort();
+        assert_eq!(got, ids);
+        // Capacity 2, five sequences: at least three must have entered via
+        // backfill after a retirement freed a slot.
+        assert!(sched.backfills() >= 3, "backfills {}", sched.backfills());
+    }
+
+    #[test]
+    fn short_request_retires_while_long_still_resident() {
+        let d = 24;
+        let m = MockModel::new(d, 4, 7);
+        let mut sched = SpecScheduler::for_model(&m);
+        let mut rng = Pcg::new(3);
+        let mut short = Prompt::empty(d);
+        for pos in 0..d - 2 {
+            short.0[pos] = Some((pos % 4) as i32);
+        }
+        let long_id = sched.admit(&Prompt::empty(d),
+                                  spec(&SpecParams::default()), rng.split());
+        let short_id =
+            sched.admit(&short, spec(&SpecParams::default()), rng.split());
+        // Step until the first retirement: it must be the short sequence,
+        // and the long one must still be resident (not held hostage).
+        let mut first = None;
+        let mut guard = 0;
+        while first.is_none() {
+            let fin = sched.step(&m);
+            if let Some((id, s)) = fin.into_iter().next() {
+                first = Some((id, s));
+            }
+            guard += 1;
+            assert!(guard < 10_000);
+        }
+        let (id, sample) = first.unwrap();
+        assert_eq!(id, short_id);
+        assert_eq!(sample.accepted + sample.rejected, 2);
+        assert!(!sched.is_idle(), "long sequence must still be running");
+        // Drain the long one too.
+        let mut rest = Vec::new();
+        while !sched.is_idle() {
+            rest.extend(sched.step(&m));
+        }
+        assert_eq!(rest.len(), 1);
+        assert_eq!(rest[0].0, long_id);
+    }
+
+    #[test]
+    fn fully_revealed_prompt_retires_without_model_work() {
+        let d = 6;
+        let m = MockModel::new(d, 3, 11);
+        let mut sched = SpecScheduler::for_model(&m);
+        let mut prompt = Prompt::empty(d);
+        for pos in 0..d {
+            prompt.0[pos] = Some((pos % 3) as i32);
+        }
+        let id = sched.admit(&prompt, spec(&SpecParams::default()),
+                             Pcg::new(1));
+        let fin = sched.step(&m);
+        assert_eq!(fin.len(), 1);
+        assert_eq!(fin[0].0, id);
+        assert_eq!(fin[0].1.nfe, 0.0);
+        assert_eq!(sched.steps(), 0, "no forward pass may run");
+        assert!(sched.is_idle());
+    }
+
+    #[test]
+    fn padding_never_exceeds_bucket_ladder() {
+        let mut m = MockModel::new(8, 4, 5);
+        m.buckets = vec![1, 2, 4];
+        let mut sched = SpecScheduler::for_model(&m);
+        let mut rng = Pcg::new(9);
+        for _ in 0..3 {
+            sched.admit(&Prompt::empty(8), spec(&SpecParams::default()),
+                        rng.split());
+        }
+        while !sched.is_idle() {
+            sched.step(&m);
+        }
+        // 3 resident rows run in bucket 4 (1 padded row) until the first
+        // retirement shrinks the batch down the ladder; no bucket is ever
+        // made up on the fly (the old `max(bucket, n)` fallback).
+        assert!(sched.padded_row_steps() >= 1,
+                "3 rows in bucket 4 must pad");
+        assert!(sched.row_steps() >= sched.steps(),
+                "every step pays at least one row");
+    }
+
+    #[test]
+    fn scheduler_is_deterministic_for_identical_admissions() {
+        let run = || {
+            let m = MockModel::new(10, 5, 13);
+            let mut sched = SpecScheduler::for_model(&m);
+            let mut rng = Pcg::new(77);
+            for _ in 0..3 {
+                sched.admit(&Prompt::empty(10),
+                            spec(&SpecParams::default()), rng.split());
+            }
+            let mut out = Vec::new();
+            while !sched.is_idle() {
+                out.extend(sched.step(&m));
+            }
+            out.sort_by_key(|(id, _)| *id);
+            out.into_iter().map(|(_, s)| s.tokens).collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn mdm_rows_flow_through_scheduler() {
+        let d = 16;
+        let m = MockModel::new(d, 5, 17);
+        let mut sched = SpecScheduler::for_model(&m);
+        let mut rng = Pcg::new(21);
+        let params = MdmParams { steps: 8, temperature: 1.0 };
+        for _ in 0..3 {
+            sched.admit(&Prompt::empty(d), SeqParams::Mdm(params.clone()),
+                        rng.split());
+        }
+        let mut out = Vec::new();
+        while !sched.is_idle() {
+            out.extend(sched.step(&m));
+        }
+        assert_eq!(out.len(), 3);
+        for (_, s) in &out {
+            assert!(s.tokens.iter().all(|&t| (0..5).contains(&t)));
+            assert!(s.nfe >= 1.0 && s.nfe <= 9.0, "{s:?}");
+        }
+    }
+}

@@ -12,8 +12,16 @@
 //! NFE accounting follows Sec. 5.1 exactly: a pass of all L blocks is 1 NFE,
 //! so an outer loop that used `n` verify passes costs
 //! (n_noncausal + n * n_causal) / L — counted per batch element.
+//!
+//! The outer/inner loop machinery itself lives in `engine::scheduler`
+//! (continuous batching: slot table + pending queue + per-step backfill);
+//! `speculative_sample` below is the drive-to-completion wrapper that
+//! admits a fixed prompt set and steps the scheduler until it drains.
+//! Padding rows no longer exist as sequences at all — rows beyond the
+//! resident count are mask-only filler that accrues no accept/reject
+//! counts and does no generation work.
 
-use crate::engine::softmax::{residual_distribution, softmax_row};
+use crate::engine::scheduler::{run_to_completion, SeqParams};
 use crate::engine::window::Window;
 use crate::engine::{HybridModel, Prompt, Sample};
 use crate::util::rng::Pcg;
@@ -45,7 +53,9 @@ impl Default for SpecParams {
     }
 }
 
-/// Aggregate statistics over one batched sampling call.
+/// Aggregate statistics over one batched sampling call. With the
+/// continuous-batching engine these cover **real sequences only**: padding
+/// rows contribute nothing.
 #[derive(Clone, Debug, Default)]
 pub struct SpecStats {
     pub outer_loops: usize,
@@ -54,28 +64,16 @@ pub struct SpecStats {
     pub rejected: usize,
 }
 
-struct SeqState {
-    tokens: Vec<i32>,
-    sigma: Vec<i32>,
-    /// revealed[pos]: position already carries its final token. Kept
-    /// incrementally — rebuilding it from sigma[..i] each outer loop made
-    /// the draft-context build O(D^2 * i) (see EXPERIMENTS.md §Perf L3).
-    revealed: Vec<bool>,
-    /// Tokens revealed so far (= next ordering position to decide).
-    i: usize,
-    done: bool,
-    nfe: f64,
-    outer: usize,
-    accepted: usize,
-    rejected: usize,
-    rng: Pcg,
-}
-
 /// Sample a batch of sequences with Algorithm 3.
 ///
 /// Prompt positions are treated as already revealed: they are placed first
 /// in the generation ordering sigma (in random order), matching the paper's
 /// arbitrary-location conditioning.
+///
+/// Drive-to-completion wrapper over `SpecScheduler`: prompts beyond the
+/// model's largest batch bucket are queued and backfilled as slots free up,
+/// so any `prompts.len()` is valid — the model only ever sees bucket sizes
+/// it compiled.
 pub fn speculative_sample<M: HybridModel>(
     model: &M,
     prompts: &[Prompt],
@@ -83,215 +81,7 @@ pub fn speculative_sample<M: HybridModel>(
     rng: &mut Pcg,
 ) -> (Vec<Sample>, SpecStats) {
     assert!(model.has_verify(), "model has no causal half");
-    let d = model.seq_len();
-    let v = model.vocab();
-    let mask = model.mask_id();
-    let n_req = prompts.len();
-    let bucket = pick_bucket(&model.buckets(), n_req);
-
-    let mut seqs: Vec<SeqState> = (0..bucket)
-        .map(|b| {
-            let prompt = prompts.get(b).cloned().unwrap_or_else(|| {
-                Prompt::empty(d) // padding rows
-            });
-            init_seq(&prompt, d, mask, rng.split(), params.sigma.as_deref())
-        })
-        .collect();
-    let mut stats = SpecStats::default();
-
-    for _ in 0..params.max_outer {
-        if seqs.iter().all(|s| s.done) {
-            break;
-        }
-        stats.outer_loops += 1;
-
-        // ---- draft pass over the whole bucket --------------------------
-        let mut masked_tokens = Vec::with_capacity(bucket * d);
-        for s in &seqs {
-            for pos in 0..d {
-                masked_tokens
-                    .push(if s.revealed[pos] { s.tokens[pos] } else { mask });
-            }
-        }
-        let (state, draft_logits) = model.draft(&masked_tokens, bucket);
-
-        // Per-sequence draft probabilities + window target.
-        let mut draft_probs: Vec<Vec<Vec<f64>>> = Vec::with_capacity(bucket);
-        let mut targets = Vec::with_capacity(bucket);
-        let mut full_tokens = Vec::with_capacity(bucket * d);
-        for (b, s) in seqs.iter_mut().enumerate() {
-            let mut probs_rows: Vec<Vec<f64>> = vec![Vec::new(); d];
-            if !s.done {
-                let w = params.window.limit(s.i, d);
-                targets.push((s.i + w).min(d));
-                // Sample draft tokens for every masked ordering position.
-                for od in s.i..d {
-                    let pos = s.sigma[od] as usize;
-                    let row = &draft_logits[(b * d + pos) * v..
-                                            (b * d + pos) * v + v];
-                    let p = temp_probs(row, params.temperature);
-                    let tok = s.rng.categorical(&p) as i32;
-                    s.tokens[pos] = tok;
-                    probs_rows[pos] = p;
-                }
-            } else {
-                targets.push(s.i);
-            }
-            draft_probs.push(probs_rows);
-            full_tokens.extend_from_slice(&s.tokens);
-        }
-        let sigma_flat: Vec<i32> =
-            seqs.iter().flat_map(|s| s.sigma.iter().copied()).collect();
-
-        // j = reveals within this outer loop, per sequence.
-        let mut j: Vec<usize> = seqs.iter().map(|s| s.i).collect();
-        let mut verify_used = vec![0usize; bucket];
-
-        // ---- inner speculative loops ------------------------------------
-        for _ in 0..params.n_verify {
-            let any_active = seqs
-                .iter()
-                .enumerate()
-                .any(|(b, s)| !s.done && j[b] < targets[b]);
-            if !any_active {
-                break;
-            }
-            let target_logits =
-                model.verify(&state, &full_tokens, &sigma_flat, bucket);
-            stats.verify_passes += 1;
-
-            for (b, s) in seqs.iter_mut().enumerate() {
-                if s.done || j[b] >= targets[b] {
-                    continue;
-                }
-                verify_used[b] += 1;
-                let mut dd = j[b];
-                while dd < targets[b] {
-                    let pos = s.sigma[dd] as usize;
-                    let tok = s.tokens[pos] as usize;
-                    let p_row = &draft_probs[b][pos];
-                    // Target: ordering position 0 falls back to the draft
-                    // (first-position rule); otherwise track dd-1.
-                    let q_row: Vec<f64> = if dd == 0 {
-                        p_row.clone()
-                    } else {
-                        let tr = (b * d + (dd - 1)) * v;
-                        temp_probs(&target_logits[tr..tr + v],
-                                   params.temperature)
-                    };
-                    let accept_p = if p_row[tok] > 0.0 {
-                        (q_row[tok] / p_row[tok]).min(1.0)
-                    } else {
-                        1.0
-                    };
-                    if s.rng.f64() < accept_p {
-                        s.accepted += 1;
-                        stats.accepted += 1;
-                        dd += 1;
-                    } else {
-                        s.rejected += 1;
-                        stats.rejected += 1;
-                        let res = residual_distribution(&q_row, p_row)
-                            .unwrap_or(q_row);
-                        let new_tok = s.rng.categorical(&res) as i32;
-                        s.tokens[pos] = new_tok;
-                        full_tokens[b * d + pos] = new_tok;
-                        dd += 1;
-                        break; // resample ends this inner sweep
-                    }
-                }
-                j[b] = dd;
-            }
-        }
-
-        // ---- bookkeeping -------------------------------------------------
-        for (b, s) in seqs.iter_mut().enumerate() {
-            if s.done {
-                continue;
-            }
-            s.outer += 1;
-            s.nfe += model.nfe_cost(verify_used[b]);
-            for od in s.i..j[b] {
-                s.revealed[s.sigma[od] as usize] = true;
-            }
-            s.i = j[b];
-            if s.i >= d {
-                s.done = true;
-            }
-        }
-    }
-
-    let samples = seqs
-        .into_iter()
-        .take(n_req)
-        .map(|s| Sample {
-            tokens: s.tokens,
-            nfe: s.nfe,
-            outer_loops: s.outer,
-            accepted: s.accepted,
-            rejected: s.rejected,
-        })
-        .collect();
-    (samples, stats)
-}
-
-fn init_seq(prompt: &Prompt, d: usize, mask: i32, mut rng: Pcg,
-            fixed_sigma: Option<&[i32]>) -> SeqState {
-    let mut revealed: Vec<i32> = Vec::new();
-    let mut hidden: Vec<i32> = Vec::new();
-    let mut tokens = vec![mask; d];
-    for (pos, slot) in prompt.0.iter().enumerate() {
-        match slot {
-            Some(tok) => {
-                tokens[pos] = *tok;
-                revealed.push(pos as i32);
-            }
-            None => hidden.push(pos as i32),
-        }
-    }
-    rng.shuffle(&mut revealed);
-    rng.shuffle(&mut hidden);
-    let i = revealed.len();
-    let mut sigma = revealed;
-    sigma.extend(hidden);
-    if let Some(fixed) = fixed_sigma {
-        debug_assert_eq!(fixed.len(), d);
-        debug_assert!(fixed[..i]
-            .iter()
-            .all(|p| prompt.0[*p as usize].is_some()));
-        sigma = fixed.to_vec();
-    }
-    let revealed_mask: Vec<bool> =
-        prompt.0.iter().map(|s| s.is_some()).collect();
-    SeqState {
-        tokens,
-        sigma,
-        revealed: revealed_mask,
-        i,
-        done: i >= d,
-        nfe: 0.0,
-        outer: 0,
-        accepted: 0,
-        rejected: 0,
-        rng,
-    }
-}
-
-fn pick_bucket(buckets: &[usize], n: usize) -> usize {
-    buckets
-        .iter()
-        .copied()
-        .filter(|&b| b >= n)
-        .min()
-        .unwrap_or_else(|| buckets.iter().copied().max().unwrap_or(n).max(n))
-}
-
-fn temp_probs(logits: &[f32], temperature: f64) -> Vec<f64> {
-    if (temperature - 1.0).abs() < 1e-12 {
-        softmax_row(logits)
-    } else {
-        crate::engine::softmax::softmax_row_temp(logits, temperature)
-    }
+    run_to_completion(model, prompts, &SeqParams::Spec(params.clone()), rng)
 }
 
 #[cfg(test)]
@@ -345,6 +135,41 @@ mod tests {
         let (samples, _) = run(&m, 4, &params, 7);
         for s in samples {
             assert_eq!(s.accepted + s.rejected, 20, "{s:?}");
+        }
+    }
+
+    #[test]
+    fn padding_rows_accrue_no_counts() {
+        // 3 requests in a bucket of 4: the padding row must contribute
+        // zero accepted/rejected decisions — batch statistics are exactly
+        // the sum over the real sequences.
+        let m = MockModel::new(12, 5, 3);
+        let (samples, stats) = run(&m, 3, &SpecParams::default(), 11);
+        assert_eq!(samples.len(), 3);
+        assert_eq!(
+            samples.iter().map(|s| s.accepted).sum::<usize>(),
+            stats.accepted
+        );
+        assert_eq!(
+            samples.iter().map(|s| s.rejected).sum::<usize>(),
+            stats.rejected
+        );
+        for s in &samples {
+            assert_eq!(s.accepted + s.rejected, 12, "{s:?}");
+        }
+    }
+
+    #[test]
+    fn oversized_batch_chunks_through_bucket_ladder() {
+        // More prompts than the largest bucket: the scheduler queues the
+        // overflow and backfills, never inventing an uncompiled batch size.
+        let mut m = MockModel::new(8, 4, 19);
+        m.buckets = vec![1, 2, 4];
+        let (samples, _) = run(&m, 11, &SpecParams::default(), 13);
+        assert_eq!(samples.len(), 11);
+        for s in &samples {
+            assert_eq!(s.accepted + s.rejected, 8);
+            assert!(s.tokens.iter().all(|&t| (0..4).contains(&t)));
         }
     }
 

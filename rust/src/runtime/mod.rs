@@ -1,196 +1,26 @@
-//! PJRT runtime: load AOT HLO-text artifacts and execute them on the
-//! request path (pattern adapted from /opt/xla-example/load_hlo).
+//! Runtime layer: execute AOT-compiled model artifacts on the request path.
 //!
-//! One `PjRtClient` per process; each model variant compiles one executable
-//! per (draft|verify, batch bucket) pair at startup. Python is never
-//! involved after `make artifacts` — the HLO carries the trained weights as
-//! constants.
+//! Two interchangeable backends share one API surface (`Runtime`,
+//! `PjrtModel`) so the harness/bench/CLI layers compile identically:
+//!
+//! * `pjrt` (feature `pjrt`) — the real thing: loads `artifacts/*.hlo.txt`
+//!   via the offline `xla` crate and executes through PJRT.
+//! * `stub` (default) — for environments without the `xla` vendor set;
+//!   `Runtime::cpu()` errors at startup and every artifact-driven path
+//!   falls back to its "skipped" branch. Mock-model serving is unaffected.
+//!
+//! `manifest` (artifact discovery) is backend-independent pure JSON.
 
 pub mod manifest;
 
-use std::collections::BTreeMap;
+#[cfg(feature = "pjrt")]
+mod pjrt;
+#[cfg(feature = "pjrt")]
+pub use pjrt::{PjrtModel, Runtime};
 
-use anyhow::{anyhow, Context, Result};
+#[cfg(not(feature = "pjrt"))]
+mod stub;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{PjrtModel, Runtime};
 
-use crate::engine::HybridModel;
 pub use manifest::{Manifest, ModelConfig, ModelEntry};
-
-/// Process-wide PJRT client wrapper.
-pub struct Runtime {
-    client: xla::PjRtClient,
-}
-
-impl Runtime {
-    pub fn cpu() -> Result<Runtime> {
-        let client =
-            xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e}"))?;
-        Ok(Runtime { client })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    fn compile_file(&self, path: &std::path::Path)
-                    -> Result<xla::PjRtLoadedExecutable> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
-        )
-        .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        self.client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compile {}: {e}", path.display()))
-    }
-
-    /// Load + compile all buckets of one manifest entry.
-    pub fn load_model(&self, entry: &ModelEntry) -> Result<PjrtModel> {
-        let mut draft = BTreeMap::new();
-        for (&b, path) in &entry.draft {
-            draft.insert(b, self.compile_file(path).with_context(|| {
-                format!("loading draft bucket {b} of {}", entry.name)
-            })?);
-        }
-        let mut verify = BTreeMap::new();
-        for (&b, path) in &entry.verify {
-            verify.insert(b, self.compile_file(path).with_context(|| {
-                format!("loading verify bucket {b} of {}", entry.name)
-            })?);
-        }
-        Ok(PjrtModel {
-            name: entry.name.clone(),
-            config: entry.config.clone(),
-            client: self.client.clone(),
-            draft,
-            verify,
-        })
-    }
-}
-
-/// PJRT may return a multi-element computation result either as one
-/// tuple-shaped buffer or untupled into one buffer per element (the CPU
-/// client untuples). Normalize to a Vec<Literal> of the elements.
-fn untuple(mut row: Vec<xla::PjRtBuffer>) -> Vec<xla::Literal> {
-    if row.len() == 1 {
-        let mut lit = row.remove(0).to_literal_sync().expect("to_literal");
-        match lit.primitive_type() {
-            Ok(xla::PrimitiveType::Tuple) => {
-                lit.decompose_tuple().expect("decompose tuple")
-            }
-            _ => vec![lit],
-        }
-    } else {
-        row.into_iter()
-            .map(|b| b.to_literal_sync().expect("to_literal"))
-            .collect()
-    }
-}
-
-/// A compiled model variant: implements the engine's `HybridModel` over
-/// PJRT executables.
-pub struct PjrtModel {
-    pub name: String,
-    pub config: ModelConfig,
-    /// Kept so buffers can be uploaded host->device without a Runtime
-    /// handle (future device-resident-state optimization; see §Perf).
-    #[allow(dead_code)]
-    client: xla::PjRtClient,
-    draft: BTreeMap<usize, xla::PjRtLoadedExecutable>,
-    verify: BTreeMap<usize, xla::PjRtLoadedExecutable>,
-}
-
-impl PjrtModel {
-    fn exe_for<'a>(
-        map: &'a BTreeMap<usize, xla::PjRtLoadedExecutable>,
-        batch: usize,
-        what: &str,
-    ) -> &'a xla::PjRtLoadedExecutable {
-        map.get(&batch).unwrap_or_else(|| {
-            panic!(
-                "no {what} executable for bucket {batch}; available: {:?}",
-                map.keys().collect::<Vec<_>>()
-            )
-        })
-    }
-
-    fn literal_i32(data: &[i32], rows: usize, cols: usize) -> xla::Literal {
-        xla::Literal::vec1(data)
-            .reshape(&[rows as i64, cols as i64])
-            .expect("reshape tokens")
-    }
-}
-
-impl HybridModel for PjrtModel {
-    /// Non-causal hiddens `[B, D, C]`, kept as a host literal between the
-    /// draft pass and the (possibly many) verify passes of one outer loop.
-    type State = xla::Literal;
-
-    fn seq_len(&self) -> usize {
-        self.config.seq_len
-    }
-
-    fn vocab(&self) -> usize {
-        self.config.vocab_size
-    }
-
-    fn n_noncausal(&self) -> usize {
-        self.config.n_noncausal
-    }
-
-    fn n_causal(&self) -> usize {
-        self.config.n_causal
-    }
-
-    fn buckets(&self) -> Vec<usize> {
-        self.draft.keys().copied().collect()
-    }
-
-    fn has_verify(&self) -> bool {
-        !self.verify.is_empty()
-    }
-
-    fn draft(&self, tokens: &[i32], batch: usize)
-             -> (xla::Literal, Vec<f32>) {
-        let d = self.config.seq_len;
-        let c = self.config.hidden;
-        let v = self.config.vocab_size;
-        debug_assert_eq!(tokens.len(), batch * d);
-        let exe = Self::exe_for(&self.draft, batch, "draft");
-        let input = Self::literal_i32(tokens, batch, d);
-        let mut rows = exe
-            .execute::<xla::Literal>(&[input])
-            .expect("draft execute");
-        let mut elems = untuple(rows.swap_remove(0));
-        assert_eq!(elems.len(), 1, "draft must return concat(h, logits)");
-        // Single-array output [B, D, C+V] (see python make_draft_fn);
-        // split back into h and logits.
-        let full = elems.pop().unwrap().to_vec::<f32>().expect("draft vec");
-        debug_assert_eq!(full.len(), batch * d * (c + v));
-        let mut h = Vec::with_capacity(batch * d * c);
-        let mut logits = Vec::with_capacity(batch * d * v);
-        for row in full.chunks_exact(c + v) {
-            h.extend_from_slice(&row[..c]);
-            logits.extend_from_slice(&row[c..]);
-        }
-        let h_lit = xla::Literal::vec1(&h)
-            .reshape(&[batch as i64, d as i64, c as i64])
-            .expect("h reshape");
-        (h_lit, logits)
-    }
-
-    fn verify(&self, state: &xla::Literal, tokens: &[i32], sigma: &[i32],
-              batch: usize) -> Vec<f32> {
-        let d = self.config.seq_len;
-        debug_assert_eq!(tokens.len(), batch * d);
-        let exe = Self::exe_for(&self.verify, batch, "verify");
-        let tok = Self::literal_i32(tokens, batch, d);
-        let sig = Self::literal_i32(sigma, batch, d);
-        let args: Vec<&xla::Literal> = vec![state, &tok, &sig];
-        let mut rows = exe
-            .execute::<&xla::Literal>(&args)
-            .expect("verify execute");
-        let mut elems = untuple(rows.swap_remove(0));
-        assert_eq!(elems.len(), 1, "verify must return (logits,)");
-        elems.pop().unwrap().to_vec::<f32>().expect("verify vec")
-    }
-}

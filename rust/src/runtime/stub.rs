@@ -1,0 +1,96 @@
+//! Stub runtime used when the crate is built **without** `--features pjrt`
+//! (the `xla` vendor set is absent in that configuration).
+//!
+//! API-compatible with `runtime::pjrt`: `Runtime::cpu()` fails with a clear
+//! message, so every artifact-driven path (CLI, benches, parity tests)
+//! degrades to its existing "skipped: no artifacts/runtime" branch while
+//! the mock-model engine, coordinator, and server remain fully usable.
+
+use anyhow::{anyhow, Result};
+
+use crate::engine::HybridModel;
+use crate::runtime::manifest::{ModelConfig, ModelEntry};
+
+fn unavailable() -> anyhow::Error {
+    anyhow!(
+        "PJRT runtime unavailable: built without the `pjrt` feature \
+         (vendor the `xla` crate and build with `--features pjrt`)"
+    )
+}
+
+/// Placeholder for `pjrt::Runtime`; construction always fails.
+pub struct Runtime {
+    _private: (),
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        Err(unavailable())
+    }
+
+    pub fn platform(&self) -> String {
+        "stub".into()
+    }
+
+    pub fn load_model(&self, _entry: &ModelEntry) -> Result<PjrtModel> {
+        Err(unavailable())
+    }
+}
+
+/// Placeholder for `pjrt::PjrtModel`. Never constructible (the only
+/// factory, `Runtime::load_model`, always errors), so the `HybridModel`
+/// methods below are unreachable; they exist to keep harness/bench/test
+/// code compiling unmodified.
+pub struct PjrtModel {
+    pub name: String,
+    pub config: ModelConfig,
+    _private: (),
+}
+
+impl HybridModel for PjrtModel {
+    type State = ();
+
+    fn seq_len(&self) -> usize {
+        self.config.seq_len
+    }
+
+    fn vocab(&self) -> usize {
+        self.config.vocab_size
+    }
+
+    fn n_noncausal(&self) -> usize {
+        self.config.n_noncausal
+    }
+
+    fn n_causal(&self) -> usize {
+        self.config.n_causal
+    }
+
+    fn buckets(&self) -> Vec<usize> {
+        Vec::new()
+    }
+
+    fn has_verify(&self) -> bool {
+        false
+    }
+
+    fn draft(&self, _tokens: &[i32], _batch: usize) -> ((), Vec<f32>) {
+        unreachable!("stub runtime cannot execute models")
+    }
+
+    fn verify(&self, _state: &(), _tokens: &[i32], _sigma: &[i32],
+              _batch: usize) -> Vec<f32> {
+        unreachable!("stub runtime cannot execute models")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_runtime_reports_missing_feature() {
+        let err = Runtime::cpu().err().expect("stub must not construct");
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+}
