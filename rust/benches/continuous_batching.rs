@@ -20,7 +20,7 @@ use std::time::Instant;
 
 use ssmd::engine::{SeqParams, SpecParams, SpecScheduler};
 use ssmd::engine::{MockModel, Prompt};
-use ssmd::util::bench::fmt_duration;
+use ssmd::util::bench::{fmt_duration, write_json, BenchResult};
 use ssmd::util::rng::Pcg;
 
 const D: usize = 32;
@@ -163,4 +163,37 @@ fn main() {
         blocking.row_steps
     );
     assert!(continuous.backfills > 0, "workload must exercise backfill");
+
+    // Machine-readable perf artifact (uploaded by CI per PR). This bench
+    // always runs its full deterministic workload (it measures one
+    // scenario, not timed iterations), so even when the artifact is
+    // stamped smoke:true the `extra` fields below — row_steps, steps,
+    // backfills — are exact and valid for trend analysis; only the
+    // wall-clock entries inherit CI timing noise.
+    let results = [
+        BenchResult::single("blocking.total_wall_s", blocking.total_wall_s)
+            .with_items(N_REQUESTS as f64),
+        BenchResult::single("blocking.wall_per_sample_s",
+                            blocking.mean_wall_per_sample_s),
+        BenchResult::single("continuous.total_wall_s",
+                            continuous.total_wall_s)
+            .with_items(N_REQUESTS as f64),
+        BenchResult::single("continuous.wall_per_sample_s",
+                            continuous.mean_wall_per_sample_s),
+    ];
+    let extra = [
+        ("blocking.row_steps", blocking.row_steps as f64),
+        ("continuous.row_steps", continuous.row_steps as f64),
+        ("blocking.steps", blocking.steps as f64),
+        ("continuous.steps", continuous.steps as f64),
+        ("continuous.backfills", continuous.backfills as f64),
+        (
+            "row_steps_saved_frac",
+            1.0 - continuous.row_steps as f64 / blocking.row_steps as f64,
+        ),
+    ];
+    match write_json("continuous_batching", &results, &extra) {
+        Ok(p) => println!("wrote {}", p.display()),
+        Err(e) => eprintln!("BENCH_continuous_batching.json not written: {e}"),
+    }
 }

@@ -569,8 +569,33 @@ fn run_score(models: &ModelMap, req: &ScoreRequest, rng: &mut Pcg)
     if req.tokens.len() != d {
         return Err(anyhow!("tokens length {} != D {d}", req.tokens.len()));
     }
+    // Range-check before the likelihood tables index logits rows with
+    // these values (a mask id from a max_outer-cut sample, or any
+    // out-of-range token, must error here instead of panicking the
+    // engine thread).
+    let v = model.vocab() as i32;
+    if let Some(t) = req.tokens.iter().find(|&&t| t < 0 || t >= v) {
+        return Err(anyhow!(
+            "token {t} out of range 0..{v} (incomplete samples carry the \
+             mask id and cannot be scored)"
+        ));
+    }
     let sigma = match &req.sigma {
-        Some(s) => s.clone(),
+        Some(s) => {
+            if s.len() != d {
+                return Err(anyhow!("sigma length {} != D {d}", s.len()));
+            }
+            let mut seen = vec![false; d];
+            for &p in s {
+                if p < 0 || p >= d as i32 || seen[p as usize] {
+                    return Err(anyhow!(
+                        "sigma must be a permutation of 0..{d}"
+                    ));
+                }
+                seen[p as usize] = true;
+            }
+            s.clone()
+        }
         None => Pcg::new(req.seed.unwrap_or_else(|| rng.next_u64()))
             .permutation(d),
     };

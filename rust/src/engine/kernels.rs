@@ -1,0 +1,593 @@
+//! Logits-domain sampling kernels for the scheduler hot path.
+//!
+//! The old hot loop materialized a full `Vec<f64>` softmax row (B·D·V f64
+//! of transient probability mass per outer loop) even though the
+//! accept/reject test of Algorithm 3 only ever reads `q[tok] / p[tok]` for
+//! one token per row. This module replaces probability-vector arithmetic
+//! with three logits-domain identities, none of which allocates:
+//!
+//! * **Gumbel-max draws** ([`gumbel_draw_lse`]): `argmax_i(x_i + g_i)`
+//!   with `x = logits / T` and `g_i = -ln(-ln u_i)` i.i.d. Gumbel samples
+//!   exactly `softmax(logits / T)`. We evaluate it in the equivalent
+//!   *exponential-race* form `argmin_i E_i / e_i` (`E_i = -ln u_i`,
+//!   `e_i = exp(x_i - max x)`), which reuses the `exp` values the row's
+//!   log-sum-exp needs anyway and costs one `ln` per element instead of
+//!   two. The race comparison is division-free (`E_i < best * e_i`).
+//! * **LSE accept tests** ([`accept_prob`]): the speculative acceptance
+//!   probability `min(1, q[tok]/p[tok])` equals
+//!   `min(1, exp((q_l[tok]/T - lse_q) - (p_l[tok]/T - lse_p)))` with
+//!   `lse = ln Σ exp(l_i / T)` — one cached scalar per row replaces a
+//!   V-length probability vector.
+//! * **Lazy residuals** ([`residual_draw_into`]): the resampling
+//!   distribution `max(0, q - p)` is only needed *after* a rejection, so
+//!   it is computed on demand into one caller-owned scratch row instead of
+//!   being derivable from two materialized rows.
+//!
+//! Per-element transcendentals use branchless polynomial kernels
+//! ([`fexp32`], [`fln64`]) written as fixed-lane blocked loops so the
+//! compiler can vectorize them (the repo builds with `target-cpu=native`;
+//! see `.cargo/config.toml`). Their relative error (~5e-6 / ~4e-9) is far
+//! below anything a sampling test can resolve; the chi-square tests below
+//! pin distributional equivalence to the old `softmax_row` path.
+//!
+//! **RNG-stream note.** The Gumbel draw needs one noise value *per vocab
+//! entry*, so driving it from the sequential PCG stream would consume V
+//! draws per token (and serialize the hot loop on the generator). Instead
+//! each row draw consumes exactly **one** `Pcg::next_u64()` which seeds a
+//! counter-based SplitMix64 stream (`u_i = mix64(seed + i·GOLDEN)`) — the
+//! same construction GPU samplers use. Draws are therefore seed-stable
+//! and deterministic, but the token stream differs from the old
+//! CDF-inversion sampler: determinism tests assert reproducibility of the
+//! *new* path plus chi-square equivalence to the old distribution, not
+//! bitwise equality with pre-change streams.
+//!
+//! Consistency guarantee: [`gumbel_draw_lse`] and [`row_lse`] accumulate
+//! their sums in the identical order, so the LSE a draw caches for its
+//! draft row is bit-identical to the LSE an accept test would compute for
+//! the same logits — when target == draft the accept probability is
+//! exactly 1.0 (zero spurious rejections).
+
+use crate::util::rng::Pcg;
+
+/// Lane width of the blocked accumulations (matches a 256-bit f32 vector).
+const LANES: usize = 8;
+/// Elements per noise block in the fused draw loop.
+const BLK: usize = 64;
+/// SplitMix64 counter increment (odd; 2^64 / golden ratio).
+const GOLDEN: u64 = 0x9e37_79b9_7f4a_7c15;
+
+/// Fast branchless `exp` for f32, intended for max-subtracted arguments
+/// (`x <= 0`); the result saturates at `2^±126` outside `|x| < 87`.
+/// Relative error ~5e-6. Inputs must be finite.
+#[inline(always)]
+pub fn fexp32(x: f32) -> f32 {
+    // Decompose exp(x) = 2^n * 2^r with n = round(x·log2e), r in [-.5, .5].
+    let z = (x * std::f32::consts::LOG2E).clamp(-126.0, 126.0);
+    let zs = z + 12_582_912.0_f32; // 1.5·2^23: magic round-to-nearest
+    let n = (zs.to_bits() & 0x7f_ffff) as i32 - 0x40_0000;
+    let r = z - (zs - 12_582_912.0_f32);
+    // 2^r via the exp(r·ln2) Taylor series, Estrin-ish grouping.
+    const C1: f32 = std::f32::consts::LN_2;
+    const C2: f32 = 0.240_226_51;
+    const C3: f32 = 0.055_504_11;
+    const C4: f32 = 0.009_618_129;
+    const C5: f32 = 0.001_333_355_8;
+    let r2 = r * r;
+    let p = (1.0 + C1 * r) + r2 * ((C2 + C3 * r) + r2 * (C4 + C5 * r));
+    f32::from_bits((p.to_bits() as i32).wrapping_add(n << 23) as u32)
+}
+
+/// Fast branchless natural log for positive, finite, normal f64 inputs
+/// (the uniform variates fed to the Gumbel noise are all in (2^-54, 1)).
+/// Division-free; relative error ~4e-9.
+#[inline(always)]
+pub fn fln64(x: f64) -> f64 {
+    let bits = x.to_bits();
+    let mant = bits & 0x000f_ffff_ffff_ffff;
+    let mut e = ((bits >> 52) & 0x7ff) as i64 - 1023;
+    // Fold mantissas above sqrt(2) down one octave (integer-side select
+    // keeps the pass branch-free for the vectorizer).
+    let adj = (mant >= 0x6_a09e_667f_3bcd) as i64; // sqrt(2) mantissa bits
+    e += adj;
+    let m = f64::from_bits(mant | (((1023 - adj) as u64) << 52));
+    let w = m - 1.0; // in [sqrt(2)/2 - 1, sqrt(2) - 1]
+    let z = w * w;
+    // Cephes-style minimax for ln(1+w): w - w²/2 + w³·P(w).
+    let mut p = 7.037_683_629_2e-2;
+    p = p * w - 1.151_461_031_0e-1;
+    p = p * w + 1.167_699_874_0e-1;
+    p = p * w - 1.242_014_084_6e-1;
+    p = p * w + 1.424_932_278_7e-1;
+    p = p * w - 1.666_805_766_5e-1;
+    p = p * w + 2.000_071_476_5e-1;
+    p = p * w - 2.499_999_399_3e-1;
+    p = p * w + 3.333_333_117_4e-1;
+    let y = w * z * p - 0.5 * z;
+    w + y + e as f64 * std::f64::consts::LN_2
+}
+
+/// SplitMix64 finalizer: the counter-based noise generator for Gumbel
+/// draws (one independent uniform per vocab entry from one PCG seed).
+#[inline(always)]
+fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Uniform in (0, 1) from 53 high bits of a hash (never exactly 0 or 1,
+/// so `-ln(u)` is always finite and positive).
+#[inline(always)]
+fn unit_open(h: u64) -> f64 {
+    ((h >> 11) as f64 + 0.5) * (1.0 / 9_007_199_254_740_992.0)
+}
+
+/// Max over a logits row (lane-blocked so it vectorizes). Row must be
+/// non-empty and finite.
+#[inline]
+fn row_max(logits: &[f32]) -> f32 {
+    let mut acc = [f32::NEG_INFINITY; LANES];
+    let mut chunks = logits.chunks_exact(LANES);
+    for c in chunks.by_ref() {
+        for k in 0..LANES {
+            acc[k] = c[k].max(acc[k]);
+        }
+    }
+    let mut m = f32::NEG_INFINITY;
+    for &a in &acc {
+        m = a.max(m);
+    }
+    for &x in chunks.remainder() {
+        m = x.max(m);
+    }
+    m
+}
+
+/// Shared summation pass: `Σ exp(l_i·inv_temp - ms)` with a fixed
+/// accumulation order — 64-element blocks of 8 f32 lanes, an f64 scalar
+/// tail, lanes folded in last. [`gumbel_draw_lse`] replicates this exact
+/// order (same block split, same lane stride), which makes the LSE it
+/// caches bit-identical to [`row_lse`] on the same row.
+#[inline]
+fn sum_exp(logits: &[f32], inv_temp: f32, ms: f32) -> f64 {
+    let mut acc = [0.0_f32; LANES];
+    let mut sum_tail = 0.0_f64;
+    let n = logits.len();
+    let mut i = 0;
+    while i + BLK <= n {
+        for k in (0..BLK).step_by(LANES) {
+            for k2 in 0..LANES {
+                acc[k2] += fexp32(logits[i + k + k2] * inv_temp - ms);
+            }
+        }
+        i += BLK;
+    }
+    while i < n {
+        sum_tail += fexp32(logits[i] * inv_temp - ms) as f64;
+        i += 1;
+    }
+    let mut sum = sum_tail;
+    for &a in &acc {
+        sum += a as f64;
+    }
+    sum
+}
+
+/// Log-sum-exp of `logits · inv_temp`: the per-row normalizer scalar the
+/// accept tests cache instead of a softmax vector.
+pub fn row_lse(logits: &[f32], inv_temp: f32) -> f64 {
+    let ms = row_max(logits) * inv_temp;
+    ms as f64 + sum_exp(logits, inv_temp, ms).ln()
+}
+
+/// Fused Gumbel-max categorical draw + log-sum-exp over one logits row.
+///
+/// Returns `(token, lse)` where `token ~ softmax(logits · inv_temp)` and
+/// `lse = ln Σ exp(l_i · inv_temp)` (bit-identical to [`row_lse`] on the
+/// same row). `seed` is one `Pcg::next_u64()`; the per-element noise is a
+/// counter-based SplitMix64 stream (see module docs). Zero allocation.
+pub fn gumbel_draw_lse(logits: &[f32], inv_temp: f32, seed: u64)
+                       -> (usize, f64) {
+    debug_assert!(!logits.is_empty(), "draw over an empty row");
+    let ms = row_max(logits) * inv_temp;
+    // Race state: token i wins iff E_i / e_i is the running minimum, which
+    // is exactly argmax_i (x_i + gumbel_i). Comparisons are division-free;
+    // the division only runs when the minimum improves (~ln V times).
+    let mut best = f64::INFINITY;
+    let mut arg = 0usize;
+    let mut acc = [0.0_f32; LANES];
+    let mut sum_tail = 0.0_f64;
+    let mut ebuf = [0.0_f32; BLK];
+    let mut enb = [0.0_f64; BLK];
+    let n = logits.len();
+    let mut i = 0;
+    while i + BLK <= n {
+        for k in 0..BLK {
+            ebuf[k] = fexp32(logits[i + k] * inv_temp - ms);
+        }
+        for k in (0..BLK).step_by(LANES) {
+            for k2 in 0..LANES {
+                acc[k2] += ebuf[k + k2];
+            }
+        }
+        for k in 0..BLK {
+            let h = mix64(
+                seed.wrapping_add(((i + k) as u64).wrapping_mul(GOLDEN)),
+            );
+            enb[k] = -fln64(unit_open(h));
+        }
+        for k in 0..BLK {
+            let e = ebuf[k] as f64;
+            if enb[k] < best * e {
+                best = enb[k] / e;
+                arg = i + k;
+            }
+        }
+        i += BLK;
+    }
+    while i < n {
+        let e32 = fexp32(logits[i] * inv_temp - ms);
+        sum_tail += e32 as f64;
+        let h = mix64(seed.wrapping_add((i as u64).wrapping_mul(GOLDEN)));
+        let en = -fln64(unit_open(h));
+        let e = e32 as f64;
+        if en < best * e {
+            best = en / e;
+            arg = i;
+        }
+        i += 1;
+    }
+    let mut sum = sum_tail;
+    for &a in &acc {
+        sum += a as f64;
+    }
+    (arg, ms as f64 + sum.ln())
+}
+
+/// Speculative acceptance probability in log space:
+/// `min(1, exp((q_l·inv_t - lse_q) - (p_l·inv_t - lse_p)))`, identical to
+/// the probability-domain `min(1, q[tok]/p[tok])` (including the `p == 0
+/// => accept` edge, where the exponent overflows toward +inf).
+#[inline]
+pub fn accept_prob(q_logit: f32, lse_q: f64, p_logit: f32, lse_p: f64,
+                   inv_temp: f64) -> f64 {
+    let diff = (q_logit as f64 * inv_temp - lse_q)
+        - (p_logit as f64 * inv_temp - lse_p);
+    diff.exp().min(1.0)
+}
+
+/// Lazy residual resample: draw from `max(0, q - p)` (normalized), built
+/// on demand into `scratch` (reused across calls — resized, never
+/// reallocated once warm). Falls back to sampling `q` itself when the
+/// residual carries no mass (q <= p everywhere, i.e. q == p), matching
+/// the old `residual_distribution(..).unwrap_or(q_row)` behavior.
+pub fn residual_draw_into(scratch: &mut Vec<f64>, q_logits: &[f32],
+                          lse_q: f64, p_logits: &[f32], lse_p: f64,
+                          inv_temp: f64, rng: &mut Pcg) -> usize {
+    let n = q_logits.len();
+    debug_assert_eq!(p_logits.len(), n);
+    scratch.clear();
+    scratch.resize(n, 0.0);
+    let mut sum = 0.0_f64;
+    for i in 0..n {
+        let dq = fexp32((q_logits[i] as f64 * inv_temp - lse_q) as f32);
+        let dp = fexp32((p_logits[i] as f64 * inv_temp - lse_p) as f32);
+        let r = (dq as f64 - dp as f64).max(0.0);
+        scratch[i] = r;
+        sum += r;
+    }
+    if sum <= 0.0 {
+        return gumbel_draw_lse(q_logits, inv_temp as f32, rng.next_u64()).0;
+    }
+    let mut u = rng.f64() * sum;
+    for (i, &w) in scratch.iter().enumerate() {
+        u -= w;
+        if u <= 0.0 {
+            return i;
+        }
+    }
+    n - 1
+}
+
+/// Exact (libm, f64) log-sum-exp of a raw logits row — the cold-path
+/// flavor for the likelihood tables, where a scalar probability
+/// `exp(l[tok] - lse_f64(row))` replaces a full `softmax_row` allocation.
+pub fn lse_f64(logits: &[f32]) -> f64 {
+    let m = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let s: f64 = logits.iter().map(|&x| (x as f64 - m).exp()).sum();
+    m + s.ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::softmax::{residual_distribution, softmax_row,
+                                 softmax_row_temp};
+    use crate::util::ptest::{self, chi_square, chi_square_crit, Size};
+
+    fn random_row(rng: &mut Pcg, v: usize, scale: f64) -> Vec<f32> {
+        (0..v).map(|_| ((rng.f64() * 2.0 - 1.0) * scale) as f32).collect()
+    }
+
+    /// The old path's distribution for a row at a given temperature.
+    fn old_probs(row: &[f32], temp: f64) -> Vec<f64> {
+        if (temp - 1.0).abs() < 1e-12 {
+            softmax_row(row)
+        } else {
+            softmax_row_temp(row, temp)
+        }
+    }
+
+    #[test]
+    fn fexp32_matches_std_exp() {
+        let mut rng = Pcg::new(11);
+        for _ in 0..50_000 {
+            let x = (-rng.f64() * 100.0) as f32;
+            let got = fexp32(x);
+            let want = x.exp();
+            if want > 1e-30 {
+                assert!(
+                    ((got - want) / want).abs() < 2e-5,
+                    "exp({x}) = {got} vs {want}"
+                );
+            }
+        }
+        assert!((fexp32(0.0) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fln64_matches_std_ln() {
+        let mut rng = Pcg::new(12);
+        for _ in 0..50_000 {
+            let u = rng.f64().max(1e-300);
+            let got = fln64(u);
+            let want = u.ln();
+            assert!(
+                (got - want).abs() <= want.abs().max(1e-12) * 1e-7,
+                "ln({u}) = {got} vs {want}"
+            );
+        }
+        // The Gumbel tail: u near 1 must keep relative precision.
+        for k in 1..100u64 {
+            let u = 1.0 - k as f64 * 1e-9;
+            let got = fln64(u);
+            let want = u.ln();
+            assert!(((got - want) / want).abs() < 1e-6, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn row_lse_matches_exact_lse() {
+        let mut rng = Pcg::new(13);
+        for v in [1usize, 7, 27, 64, 100, 1000] {
+            let row = random_row(&mut rng, v, 6.0);
+            let fast = row_lse(&row, 1.0);
+            let exact = lse_f64(&row);
+            assert!(
+                (fast - exact).abs() < 1e-4,
+                "V={v}: {fast} vs {exact}"
+            );
+            let fast_t = row_lse(&row, 1.0 / 0.7);
+            let scaled: Vec<f32> =
+                row.iter().map(|&x| (x as f64 / 0.7) as f32).collect();
+            let exact_t = lse_f64(&scaled);
+            assert!((fast_t - exact_t).abs() < 1e-3);
+        }
+    }
+
+    /// The zero-spurious-rejection invariant: a draw's cached LSE must be
+    /// bit-identical to `row_lse` on the same logits, so q == p implies
+    /// accept probability exactly 1.
+    #[test]
+    fn draw_lse_is_bitwise_row_lse() {
+        let mut rng = Pcg::new(14);
+        for v in [1usize, 8, 27, 63, 64, 65, 200, 1000] {
+            for &temp in &[0.7_f64, 1.0] {
+                let row = random_row(&mut rng, v, 5.0);
+                let inv_t = (1.0 / temp) as f32;
+                let (_, lse) = gumbel_draw_lse(&row, inv_t, rng.next_u64());
+                let direct = row_lse(&row, inv_t);
+                assert_eq!(
+                    lse.to_bits(),
+                    direct.to_bits(),
+                    "V={v} T={temp}: {lse} vs {direct}"
+                );
+                let a = accept_prob(row[0], lse, row[0], direct, 1.0 / temp);
+                assert_eq!(a, 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn draw_is_seed_stable_and_seed_sensitive() {
+        let mut rng = Pcg::new(15);
+        let row = random_row(&mut rng, 50, 4.0);
+        let (a, la) = gumbel_draw_lse(&row, 1.0, 42);
+        let (b, lb) = gumbel_draw_lse(&row, 1.0, 42);
+        assert_eq!((a, la.to_bits()), (b, lb.to_bits()));
+        let distinct: std::collections::HashSet<usize> = (0..200)
+            .map(|s| gumbel_draw_lse(&row, 1.0, s).0)
+            .collect();
+        assert!(distinct.len() > 3, "draws ignore the seed");
+    }
+
+    #[test]
+    fn draw_prefers_dominant_logit() {
+        let mut row = vec![0.0_f32; 40];
+        row[17] = 30.0;
+        for seed in 0..50 {
+            assert_eq!(gumbel_draw_lse(&row, 1.0, seed).0, 17);
+        }
+    }
+
+    /// Distributional equivalence of the Gumbel-max draw to the old
+    /// materialized-softmax path at the paper's temperatures, chi-square
+    /// at the 99.99% critical value (seeded, deterministic).
+    #[test]
+    fn draw_matches_old_softmax_distribution() {
+        for (case, &temp) in [0.7_f64, 1.0].iter().enumerate() {
+            let mut rng = Pcg::new(0x6a11 + case as u64);
+            let v = 27;
+            let row = random_row(&mut rng, v, 3.0);
+            let probs = old_probs(&row, temp);
+            let n = 200_000;
+            let mut counts = vec![0usize; v];
+            let inv_t = (1.0 / temp) as f32;
+            for _ in 0..n {
+                counts[gumbel_draw_lse(&row, inv_t, rng.next_u64()).0] += 1;
+            }
+            let chi2 = chi_square(&counts, &probs);
+            let crit = chi_square_crit(v - 1);
+            assert!(
+                chi2 < crit,
+                "T={temp}: chi2 {chi2:.1} >= crit {crit:.1}"
+            );
+        }
+    }
+
+    /// Property flavor of the same equivalence over random small rows.
+    #[test]
+    fn draw_distribution_property() {
+        ptest::check(
+            8,
+            0xd1a3,
+            |rng: &mut Pcg, s: Size| {
+                let v = 4 + (s.0 * 3).min(24);
+                let temp = if s.0 % 2 == 0 { 0.7 } else { 1.0 };
+                let row = random_row(rng, v, 3.0);
+                let seeds: Vec<u64> =
+                    (0..30_000).map(|_| rng.next_u64()).collect();
+                (row, temp, seeds)
+            },
+            |(row, temp, seeds)| {
+                let probs = old_probs(row, *temp);
+                let mut counts = vec![0usize; row.len()];
+                let inv_t = (1.0 / temp) as f32;
+                for &s in seeds {
+                    counts[gumbel_draw_lse(row, inv_t, s).0] += 1;
+                }
+                let chi2 = chi_square(&counts, &probs);
+                let crit = chi_square_crit(row.len() - 1);
+                if chi2 < crit {
+                    Ok(())
+                } else {
+                    Err(format!("chi2 {chi2:.1} >= crit {crit:.1}"))
+                }
+            },
+        );
+    }
+
+    /// The log-space accept probability must match the old
+    /// probability-domain ratio numerically (not just statistically).
+    #[test]
+    fn accept_prob_matches_old_ratio() {
+        ptest::check(
+            40,
+            0xacc,
+            |rng: &mut Pcg, s: Size| {
+                let v = 2 + (s.0 * 7).min(120);
+                let temp = if s.0 % 2 == 0 { 0.7 } else { 1.0 };
+                (random_row(rng, v, 4.0), random_row(rng, v, 4.0), temp)
+            },
+            |(p_row, q_row, temp)| {
+                let pp = old_probs(p_row, *temp);
+                let qq = old_probs(q_row, *temp);
+                let inv_t = 1.0 / temp;
+                let lse_p = row_lse(p_row, inv_t as f32);
+                let lse_q = row_lse(q_row, inv_t as f32);
+                for tok in 0..p_row.len() {
+                    let old = (qq[tok] / pp[tok]).min(1.0);
+                    let new = accept_prob(q_row[tok], lse_q, p_row[tok],
+                                          lse_p, inv_t);
+                    if (old - new).abs() > 1e-4 {
+                        return Err(format!(
+                            "tok {tok}: old {old} vs new {new}"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Residual resampling must follow the old normalized max(0, q - p).
+    #[test]
+    fn residual_matches_old_distribution() {
+        let mut rng = Pcg::new(0x4e5);
+        let v = 27;
+        let temp = 0.7;
+        let p_row = random_row(&mut rng, v, 3.0);
+        let q_row = random_row(&mut rng, v, 3.0);
+        let pp = old_probs(&p_row, temp);
+        let qq = old_probs(&q_row, temp);
+        let res = residual_distribution(&qq, &pp).expect("has mass");
+        let inv_t = 1.0 / temp;
+        let lse_p = row_lse(&p_row, inv_t as f32);
+        let lse_q = row_lse(&q_row, inv_t as f32);
+        let mut scratch = Vec::new();
+        let n = 200_000;
+        let mut counts = vec![0usize; v];
+        for _ in 0..n {
+            counts[residual_draw_into(&mut scratch, &q_row, lse_q, &p_row,
+                                      lse_p, inv_t, &mut rng)] += 1;
+        }
+        // Lump near-empty residual bins into one tail bucket so the
+        // chi-square approximation holds.
+        let mut big_counts = Vec::new();
+        let mut big_probs = Vec::new();
+        let mut tail_c = 0usize;
+        let mut tail_p = 0.0;
+        for i in 0..v {
+            if res[i] * n as f64 >= 10.0 {
+                big_counts.push(counts[i]);
+                big_probs.push(res[i]);
+            } else {
+                tail_c += counts[i];
+                tail_p += res[i];
+            }
+        }
+        if tail_p > 0.0 {
+            big_counts.push(tail_c);
+            big_probs.push(tail_p);
+        }
+        let chi2 = chi_square(&big_counts, &big_probs);
+        let crit = chi_square_crit(big_counts.len() - 1);
+        assert!(chi2 < crit, "chi2 {chi2:.1} >= crit {crit:.1}");
+    }
+
+    #[test]
+    fn residual_falls_back_to_q_when_massless() {
+        // q == p: the residual has no mass; the draw must come from q
+        // (here: the dominant logit) instead of panicking.
+        let mut rng = Pcg::new(0x4e6);
+        let mut row = vec![0.0_f32; 16];
+        row[3] = 25.0;
+        let lse = row_lse(&row, 1.0);
+        let mut scratch = Vec::new();
+        let tok = residual_draw_into(&mut scratch, &row, lse, &row, lse,
+                                     1.0, &mut rng);
+        assert_eq!(tok, 3);
+    }
+
+    #[test]
+    fn lse_f64_matches_softmax_row() {
+        let mut rng = Pcg::new(0x15e);
+        for v in [2usize, 27, 300] {
+            let row = random_row(&mut rng, v, 6.0);
+            let probs = softmax_row(&row);
+            let lse = lse_f64(&row);
+            for (i, &p) in probs.iter().enumerate() {
+                let via_lse = (row[i] as f64 - lse).exp();
+                assert!((p - via_lse).abs() < 1e-12, "{p} vs {via_lse}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_element_row() {
+        let row = [2.5_f32];
+        let (tok, lse) = gumbel_draw_lse(&row, 1.0, 9);
+        assert_eq!(tok, 0);
+        assert!((lse - 2.5).abs() < 1e-5);
+    }
+}

@@ -10,6 +10,12 @@
 //! * target logits for track `j` depend on the masked context, the permuted
 //!   tokens up to and including track `j` (causal attention), and the
 //!   position being predicted `sigma[j+1]`.
+//!
+//! The hashing is streamed (`Fnv`) and the `HybridModel::draft_into` /
+//! `verify_into` overrides write logits into caller-owned buffers, so a
+//! warm scheduler step on a MockModel performs **zero heap allocations**
+//! (asserted by `tests/alloc_regression.rs`). `draft`/`verify` delegate
+//! to the `_into` flavors, so both paths produce identical logits.
 
 use crate::engine::HybridModel;
 use crate::util::rng::Pcg;
@@ -30,6 +36,23 @@ pub struct MockModel {
     pub buckets: Vec<usize>,
 }
 
+/// Streaming FNV-1a over the conditioning info (replaces the old
+/// payload-vector build, which allocated per track in `verify`).
+struct Fnv(u64);
+
+impl Fnv {
+    #[inline]
+    fn new(seed: u64) -> Fnv {
+        Fnv(0xcbf29ce484222325 ^ seed)
+    }
+
+    #[inline]
+    fn feed(&mut self, x: u64) {
+        self.0 ^= x;
+        self.0 = self.0.wrapping_mul(0x100000001b3);
+    }
+}
+
 impl MockModel {
     pub fn new(seq_len: usize, vocab: usize, seed: u64) -> MockModel {
         MockModel { seq_len, vocab, sharp: 1.5, seed,
@@ -37,44 +60,63 @@ impl MockModel {
                     buckets: vec![1, 2, 4, 8, 16, 32] }
     }
 
-    fn hash_logits(&self, tag: u64, payload: &[i32], pos: i32) -> Vec<f32> {
-        // FNV-1a over the conditioning info, then PCG-generated logits.
-        let mut h: u64 = 0xcbf29ce484222325 ^ self.seed;
-        let mut feed = |x: u64| {
-            h ^= x;
-            h = h.wrapping_mul(0x100000001b3);
-        };
-        feed(tag);
-        feed(pos as u64 as u64);
-        for &t in payload {
-            feed(t as u64);
-        }
+    /// PCG-generated logits from a finished hash, appended to `out`.
+    fn push_logits(&self, h: u64, out: &mut Vec<f32>) {
         let mut rng = Pcg::new(h);
-        (0..self.vocab)
-            .map(|_| (rng.f64() as f32 * 4.0 - 2.0) * self.sharp)
-            .collect()
+        for _ in 0..self.vocab {
+            out.push((rng.f64() as f32 * 4.0 - 2.0) * self.sharp);
+        }
+    }
+
+    /// Draft-row hash + logits for sequence position `pos` under a masked
+    /// context, appended to `out`.
+    fn push_draft_row(&self, masked_tokens: &[i32], pos: usize,
+                      out: &mut Vec<f32>) {
+        let mut h = Fnv::new(self.seed);
+        h.feed(1);
+        h.feed(pos as i32 as u64);
+        for &t in masked_tokens {
+            h.feed(t as u64);
+        }
+        self.push_logits(h.0, out);
+    }
+
+    /// Target-row hash + logits for track `j` (predicting `sigma[j+1]`),
+    /// appended to `out`. The causal prefix is streamed into the hash, so
+    /// no payload vector is built.
+    fn push_target_row(&self, masked_tokens: &[i32], tokens: &[i32],
+                       sigma: &[i32], j: usize, out: &mut Vec<f32>) {
+        let d = self.seq_len;
+        if self.target_equals_draft {
+            let pos = sigma[(j + 1) % d] as usize;
+            return self.push_draft_row(masked_tokens, pos, out);
+        }
+        let next_pos = sigma[(j + 1) % d];
+        let mut h = Fnv::new(self.seed);
+        h.feed(2);
+        h.feed(next_pos as u64);
+        for &t in masked_tokens {
+            h.feed(t as u64);
+        }
+        for t in sigma.iter().take(j + 1) {
+            h.feed(tokens[*t as usize] as u64);
+        }
+        self.push_logits(h.0, out);
     }
 
     /// Draft logits for sequence position `pos` under a masked context.
     pub fn draft_logits(&self, masked_tokens: &[i32], pos: usize) -> Vec<f32> {
-        self.hash_logits(1, masked_tokens, pos as i32)
+        let mut out = Vec::with_capacity(self.vocab);
+        self.push_draft_row(masked_tokens, pos, &mut out);
+        out
     }
 
     /// Target logits for track `j` (predicting `sigma[j+1]`).
     pub fn target_logits(&self, masked_tokens: &[i32], tokens: &[i32],
                          sigma: &[i32], j: usize) -> Vec<f32> {
-        if self.target_equals_draft {
-            let pos = sigma[(j + 1) % self.seq_len] as usize;
-            return self.draft_logits(masked_tokens, pos);
-        }
-        let d = self.seq_len;
-        let mut payload: Vec<i32> = masked_tokens.to_vec();
-        // Causal prefix in permuted order (tracks 0..=j).
-        for t in sigma.iter().take(j + 1) {
-            payload.push(tokens[*t as usize]);
-        }
-        let next_pos = sigma[(j + 1) % d];
-        self.hash_logits(2, &payload, next_pos)
+        let mut out = Vec::with_capacity(self.vocab);
+        self.push_target_row(masked_tokens, tokens, sigma, j, &mut out);
+        out
     }
 }
 
@@ -102,32 +144,52 @@ impl HybridModel for MockModel {
     }
 
     fn draft(&self, tokens: &[i32], batch: usize) -> (Vec<i32>, Vec<f32>) {
-        let d = self.seq_len;
-        let v = self.vocab;
-        let mut logits = Vec::with_capacity(batch * d * v);
-        for b in 0..batch {
-            let ctx = &tokens[b * d..(b + 1) * d];
-            for pos in 0..d {
-                logits.extend(self.draft_logits(ctx, pos));
-            }
-        }
-        (tokens.to_vec(), logits)
+        let mut state = None;
+        let mut logits = Vec::new();
+        self.draft_into(tokens, batch, &mut state, &mut logits);
+        (state.expect("draft_into sets the state"), logits)
     }
 
     fn verify(&self, state: &Vec<i32>, tokens: &[i32], sigma: &[i32],
               batch: usize) -> Vec<f32> {
+        let mut logits = Vec::new();
+        self.verify_into(state, tokens, sigma, batch, &mut logits);
+        logits
+    }
+
+    fn draft_into(&self, tokens: &[i32], batch: usize,
+                  state: &mut Option<Vec<i32>>, logits: &mut Vec<f32>) {
+        match state {
+            Some(s) => {
+                s.clear();
+                s.extend_from_slice(tokens);
+            }
+            None => *state = Some(tokens.to_vec()),
+        }
         let d = self.seq_len;
-        let v = self.vocab;
-        let mut logits = Vec::with_capacity(batch * d * v);
+        logits.clear();
+        logits.reserve(batch * d * self.vocab);
+        for b in 0..batch {
+            let ctx = &tokens[b * d..(b + 1) * d];
+            for pos in 0..d {
+                self.push_draft_row(ctx, pos, logits);
+            }
+        }
+    }
+
+    fn verify_into(&self, state: &Vec<i32>, tokens: &[i32], sigma: &[i32],
+                   batch: usize, logits: &mut Vec<f32>) {
+        let d = self.seq_len;
+        logits.clear();
+        logits.reserve(batch * d * self.vocab);
         for b in 0..batch {
             let ctx = &state[b * d..(b + 1) * d];
             let toks = &tokens[b * d..(b + 1) * d];
             let sig = &sigma[b * d..(b + 1) * d];
             for j in 0..d {
-                logits.extend(self.target_logits(ctx, toks, sig, j));
+                self.push_target_row(ctx, toks, sig, j, logits);
             }
         }
-        logits
     }
 }
 
@@ -188,5 +250,42 @@ mod tests {
         let (_, l1) = m.draft(&t1, 1);
         assert_eq!(&l[..l0.len()], &l0[..]);
         assert_eq!(&l[l0.len()..], &l1[..]);
+    }
+
+    #[test]
+    fn into_flavors_match_allocating_flavors() {
+        // draft/verify delegate to the _into overrides; a reused buffer
+        // (dirty from a previous call) must produce identical logits.
+        let m = MockModel::new(5, 4, 9);
+        let tokens = vec![4, 1, 4, 2, 4, 0, 4, 4, 4, 3];
+        let (state, logits) = m.draft(&tokens, 2);
+        let mut state2 = Some(vec![9i32; 3]); // wrong size, gets rebuilt
+        let mut logits2 = vec![1.0f32; 7];
+        m.draft_into(&tokens, 2, &mut state2, &mut logits2);
+        assert_eq!(state, state2.unwrap());
+        assert_eq!(logits, logits2);
+
+        let sigma: Vec<i32> = vec![1, 3, 0, 4, 2, 1, 3, 0, 4, 2];
+        let full = vec![0i32, 1, 2, 3, 0, 1, 2, 3, 0, 1];
+        let v1 = m.verify(&state, &full, &sigma, 2);
+        let mut v2 = vec![5.0f32; 3];
+        m.verify_into(&state, &full, &sigma, 2, &mut v2);
+        assert_eq!(v1, v2);
+    }
+
+    #[test]
+    fn target_equals_draft_rows_match_draft_rows() {
+        let mut m = MockModel::new(4, 3, 7);
+        m.target_equals_draft = true;
+        let ctx = vec![3, 3, 3, 3];
+        let sigma = vec![2i32, 0, 3, 1];
+        let toks = vec![0, 2, 1, 0];
+        // Track j predicts sigma[j+1]; with target==draft the row must be
+        // the draft row for that position, bit-for-bit.
+        for j in 0..3 {
+            let t = m.target_logits(&ctx, &toks, &sigma, j);
+            let d = m.draft_logits(&ctx, sigma[j + 1] as usize);
+            assert_eq!(t, d);
+        }
     }
 }

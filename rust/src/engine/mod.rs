@@ -5,6 +5,7 @@
 //! mock models without PJRT. The production implementation lives in
 //! `runtime::PjrtModel`.
 
+pub mod kernels;
 pub mod mdm;
 pub mod mock;
 pub mod scheduler;
@@ -33,8 +34,11 @@ pub use window::Window;
 ///   first-position rule).
 pub trait HybridModel {
     /// Opaque non-causal activations passed from draft to verify
-    /// (`Vec<f32>` hiddens for PJRT, unit for mocks).
-    type State;
+    /// (`Vec<f32>` hiddens for PJRT, token context for mocks). `'static`
+    /// so the scheduler's `StepArena` can retain it across steps (type-
+    /// erased) and implementations can rebuild it in place instead of
+    /// reallocating.
+    type State: 'static;
 
     fn seq_len(&self) -> usize;
     fn vocab(&self) -> usize;
@@ -59,6 +63,25 @@ pub trait HybridModel {
     /// `[B, D]`, sigma `[B, D]`) -> target logits `[B, D, V]` track order.
     fn verify(&self, state: &Self::State, tokens: &[i32], sigma: &[i32],
               batch: usize) -> Vec<f32>;
+
+    /// Buffer-reusing draft: rebuild `state` and `logits` in place. The
+    /// default delegates to [`HybridModel::draft`] and moves the results
+    /// into the caller's buffers; implementations on the serving hot path
+    /// (MockModel, and any backend that can write into caller memory)
+    /// should override to make warm scheduler steps allocation-free (see
+    /// `engine::scheduler::StepArena`).
+    fn draft_into(&self, tokens: &[i32], batch: usize,
+                  state: &mut Option<Self::State>, logits: &mut Vec<f32>) {
+        let (s, l) = self.draft(tokens, batch);
+        *state = Some(s);
+        *logits = l;
+    }
+
+    /// Buffer-reusing verify; same contract as [`HybridModel::draft_into`].
+    fn verify_into(&self, state: &Self::State, tokens: &[i32],
+                   sigma: &[i32], batch: usize, logits: &mut Vec<f32>) {
+        *logits = self.verify(state, tokens, sigma, batch);
+    }
 
     /// Whether the checkpoint has a causal half (SDTT exports are
     /// draft-only and can only be sampled with the MDM algorithm).
@@ -93,6 +116,14 @@ impl Prompt {
 /// Output of one sampled sequence.
 #[derive(Clone, Debug)]
 pub struct Sample {
+    /// Sampled tokens, one per position, in `0..vocab` — except when the
+    /// sequence was cut off by the `max_outer` safety valve, in which
+    /// case every undecided position holds the mask id (`== vocab`),
+    /// marking the sample as incomplete. Before feeding tokens to
+    /// vocab-indexed consumers (e.g. the likelihood tables), check that
+    /// no token equals the mask id; prompt-revealed positions never
+    /// count toward `accepted`/`rejected`, so those tallies are not a
+    /// completeness check.
     pub tokens: Vec<i32>,
     /// Function evaluations consumed, fractional (Sec. 5.1 accounting).
     pub nfe: f64,

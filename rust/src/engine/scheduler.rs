@@ -24,15 +24,40 @@
 //! chunked across steps instead of being handed to an uncompiled batch
 //! size.
 //!
+//! ## Zero-allocation steps (the arena invariant)
+//!
+//! All per-step buffers live in a [`StepArena`] owned by the scheduler:
+//! token/sigma staging, both logits buffers (filled in place via
+//! `HybridModel::draft_into` / `verify_into`), the per-row draft LSE
+//! table, the residual scratch row, and the step-local bookkeeping vecs.
+//! After the first step warms their capacities, a steady-state `step`
+//! performs **zero heap allocations** (asserted by
+//! `tests/alloc_regression.rs`; retirement and backfill may allocate, the
+//! per-step sampling work never does). The old hot loop instead
+//! materialized a `Vec<Vec<Vec<f64>>>` of full softmax rows per outer
+//! loop — B·D·V f64 of transient probability mass — even though the
+//! accept test only reads one scalar per row; that table is gone,
+//! replaced by `engine::kernels` logits-domain primitives (Gumbel-max
+//! draws, cached log-sum-exps, lazy residuals — see the module docs there
+//! for the identities and the RNG-stream compatibility note).
+//!
+//! Drafting is also **window-lazy**: an outer loop only samples the
+//! ordering positions its accept window can consume (`[i, i + W(i))`).
+//! The old loop drew and softmaxed *every* remaining position each outer
+//! loop, but positions beyond the window were never accept-tested and
+//! were redrawn from fresh logits the next loop — dead work. Positions
+//! beyond the window enter the verify pass as mask tokens; causal tracks
+//! `< target` never attend to them, so consumed logits are unchanged.
+//!
 //! `speculative_sample` / `mdm_sample` remain as drive-to-completion
 //! wrappers over this scheduler, so single-shot call sites (likelihood
 //! cross-checks, harnesses, examples, benches) are unchanged.
 
+use std::any::Any;
 use std::collections::VecDeque;
 
+use crate::engine::kernels;
 use crate::engine::mdm::{mdm_alpha, MdmParams};
-use crate::engine::softmax::{residual_distribution, softmax_row,
-                             softmax_row_temp};
 use crate::engine::{HybridModel, Prompt, Sample, SpecParams, SpecStats};
 use crate::util::rng::Pcg;
 
@@ -98,6 +123,62 @@ struct Slot {
     kernel: Kernel,
 }
 
+/// All per-step buffers, owned by the scheduler so steady-state steps
+/// reuse capacity instead of allocating (see module docs). The model
+/// `State` is retained type-erased because `SpecScheduler` itself is not
+/// generic over the model.
+struct StepArena {
+    /// Step-local list of resident slot indices.
+    active: Vec<usize>,
+    /// `[bucket, D]` masked draft input (mask-padded past the residents).
+    masked_tokens: Vec<i32>,
+    /// `[bucket, D]` verify input: decided prefix + window draws; mask
+    /// beyond the window (causal tracks below the window never attend to
+    /// those positions, so their logits are unaffected).
+    full_tokens: Vec<i32>,
+    /// `[bucket, D]` orderings (identity for padding rows).
+    sigma_flat: Vec<i32>,
+    /// Draft logits `[bucket, D, V]`, rebuilt in place by `draft_into`.
+    draft_logits: Vec<f32>,
+    /// Target logits `[bucket, D, V]`, rebuilt in place by `verify_into`.
+    target_logits: Vec<f32>,
+    /// Per-row log-sum-exp of the drafted rows, cached at draw time and
+    /// reused by every accept test of the outer loop (replaces the old
+    /// per-row softmax vectors). Indexed `r * D + pos`.
+    draft_lse: Vec<f64>,
+    /// Reusable V-length row for lazy residual resampling.
+    scratch: Vec<f64>,
+    /// Per-resident reveal targets / progress / verify-pass counts.
+    targets: Vec<usize>,
+    j: Vec<usize>,
+    verify_used: Vec<usize>,
+    /// Per-resident MDM (reveal count, forced-final) pairs.
+    reveals: Vec<(usize, bool)>,
+    /// Retained `Option<M::State>` (type-erased), rebuilt in place by
+    /// models that override `draft_into`.
+    state: Option<Box<dyn Any>>,
+}
+
+impl StepArena {
+    fn new(capacity: usize, d: usize, vocab: usize) -> StepArena {
+        StepArena {
+            active: Vec::with_capacity(capacity),
+            masked_tokens: Vec::with_capacity(capacity * d),
+            full_tokens: Vec::with_capacity(capacity * d),
+            sigma_flat: Vec::with_capacity(capacity * d),
+            draft_logits: Vec::new(),
+            target_logits: Vec::new(),
+            draft_lse: Vec::with_capacity(capacity * d),
+            scratch: Vec::with_capacity(vocab),
+            targets: Vec::with_capacity(capacity),
+            j: Vec::with_capacity(capacity),
+            verify_used: Vec::with_capacity(capacity),
+            reveals: Vec::with_capacity(capacity),
+            state: None,
+        }
+    }
+}
+
 pub struct SpecScheduler {
     d: usize,
     vocab: usize,
@@ -114,6 +195,7 @@ pub struct SpecScheduler {
     padded_row_steps: u64,
     backfills: u64,
     placements: Vec<SlotId>,
+    arena: StepArena,
 }
 
 impl SpecScheduler {
@@ -136,6 +218,7 @@ impl SpecScheduler {
             padded_row_steps: 0,
             backfills: 0,
             placements: Vec::new(),
+            arena: StepArena::new(capacity, seq_len, vocab),
         }
     }
 
@@ -291,41 +374,57 @@ impl SpecScheduler {
             }
         }
 
-        let active: Vec<usize> = (0..self.slots.len())
-            .filter(|&i| self.slots[i].is_some())
-            .collect();
-        if active.is_empty() {
+        self.arena.active.clear();
+        for (i, slot) in self.slots.iter().enumerate() {
+            if slot.is_some() {
+                self.arena.active.push(i);
+            }
+        }
+        if self.arena.active.is_empty() {
             return finished;
         }
-        let bucket = pick_bucket(&self.buckets, active.len());
-        debug_assert!(bucket >= active.len(),
+        let bucket = pick_bucket(&self.buckets, self.arena.active.len());
+        debug_assert!(bucket >= self.arena.active.len(),
                       "slot table exceeds bucket ladder");
         self.steps += 1;
         self.row_steps += bucket as u64;
-        self.padded_row_steps += (bucket - active.len()) as u64;
+        self.padded_row_steps += (bucket - self.arena.active.len()) as u64;
 
         match self.mode.expect("active slots imply a mode") {
-            Mode::Spec => self.step_spec(model, &active, bucket,
-                                         &mut finished),
-            Mode::Mdm => self.step_mdm(model, &active, bucket,
-                                       &mut finished),
+            Mode::Spec => self.step_spec(model, bucket, &mut finished),
+            Mode::Mdm => self.step_mdm(model, bucket, &mut finished),
         }
         finished
     }
 
-    /// One speculative outer loop (Alg. 3) over `active`, batch `bucket`.
-    fn step_spec<M: HybridModel>(&mut self, model: &M, active: &[usize],
-                                 bucket: usize,
+    /// Reclaim (or lazily create) the type-erased retained model state.
+    fn take_state<M: HybridModel>(state: &mut Option<Box<dyn Any>>)
+                                  -> Box<Option<M::State>> {
+        match state.take() {
+            Some(any) => any.downcast().unwrap_or_else(|_| Box::new(None)),
+            None => Box::new(None),
+        }
+    }
+
+    /// One speculative outer loop (Alg. 3) over the residents, batch
+    /// `bucket`. Allocation-free once the arena is warm.
+    fn step_spec<M: HybridModel>(&mut self, model: &M, bucket: usize,
                                  finished: &mut Vec<(SlotId, Sample)>) {
         let d = self.d;
         let v = self.vocab;
         let mask = self.mask;
-        let n_act = active.len();
         let slots = &mut self.slots;
         let stats = &mut self.stats;
+        let StepArena {
+            active, masked_tokens, full_tokens, sigma_flat, draft_logits,
+            target_logits, draft_lse, scratch, targets, j, verify_used,
+            state, ..
+        } = &mut self.arena;
+        let n_act = active.len();
 
         // ---- draft pass: resident rows first, then pure-mask padding ----
-        let mut masked_tokens = vec![mask; bucket * d];
+        masked_tokens.clear();
+        masked_tokens.resize(bucket * d, mask);
         for (r, &si) in active.iter().enumerate() {
             let (s, _) = spec_ref(&slots[si]);
             for pos in 0..d {
@@ -340,41 +439,54 @@ impl SpecScheduler {
             masked_tokens[n_act * d..].iter().all(|&t| t == mask),
             "padding rows must contribute only mask tokens"
         );
-        let (state, draft_logits) = model.draft(&masked_tokens, bucket);
+        let mut state_box = Self::take_state::<M>(state);
+        model.draft_into(&masked_tokens[..], bucket, &mut state_box,
+                         draft_logits);
         stats.outer_loops += 1;
 
-        // ---- sample draft tokens + window targets (resident rows only) --
-        let mut draft_probs: Vec<Vec<Vec<f64>>> = Vec::with_capacity(n_act);
-        let mut targets = Vec::with_capacity(n_act);
-        let mut full_tokens = vec![mask; bucket * d];
-        let mut sigma_flat = vec![0i32; bucket * d];
+        // ---- window-lazy draws (resident rows only) ---------------------
+        // Only the ordering positions the accept window can consume are
+        // drawn; each draw caches its row's log-sum-exp for the accept
+        // tests below. Beyond-window positions stay mask in the verify
+        // input (their tracks are never read this loop — see module docs).
+        targets.clear();
+        j.clear();
+        verify_used.clear();
+        full_tokens.clear();
+        full_tokens.resize(bucket * d, mask);
+        sigma_flat.clear();
+        sigma_flat.resize(bucket * d, 0);
         for row in sigma_flat[n_act * d..].chunks_exact_mut(d) {
             for (pos, out) in row.iter_mut().enumerate() {
                 *out = pos as i32; // identity σ for padding rows
             }
         }
+        draft_lse.clear();
+        draft_lse.resize(bucket * d, f64::NAN);
         for (r, &si) in active.iter().enumerate() {
             let (s, p) = spec_mut(&mut slots[si]);
             let w = p.window.limit(s.i, d);
-            targets.push((s.i + w).min(d));
-            let mut probs_rows: Vec<Vec<f64>> = vec![Vec::new(); d];
-            for od in s.i..d {
+            let target = (s.i + w).min(d);
+            targets.push(target);
+            j.push(s.i);
+            verify_used.push(0);
+            let inv_t = (1.0 / p.temperature) as f32;
+            for od in s.i..target {
                 let pos = s.sigma[od] as usize;
-                let row = &draft_logits[(r * d + pos) * v..
-                                        (r * d + pos) * v + v];
-                let prob = temp_probs(row, p.temperature);
-                s.tokens[pos] = s.rng.categorical(&prob) as i32;
-                probs_rows[pos] = prob;
+                let row = &draft_logits[(r * d + pos) * v
+                                        ..(r * d + pos) * v + v];
+                let (tok, lse) =
+                    kernels::gumbel_draw_lse(row, inv_t, s.rng.next_u64());
+                s.tokens[pos] = tok as i32;
+                draft_lse[r * d + pos] = lse;
             }
-            draft_probs.push(probs_rows);
-            full_tokens[r * d..(r + 1) * d].copy_from_slice(&s.tokens);
+            for od in 0..target {
+                let pos = s.sigma[od] as usize;
+                full_tokens[r * d + pos] = s.tokens[pos];
+            }
             sigma_flat[r * d..(r + 1) * d].copy_from_slice(&s.sigma);
         }
 
-        // j = reveals within this outer loop, per resident sequence.
-        let mut j: Vec<usize> =
-            active.iter().map(|&si| spec_ref(&slots[si]).0.i).collect();
-        let mut verify_used = vec![0usize; n_act];
         let max_nv = active
             .iter()
             .map(|&si| spec_ref(&slots[si]).1.n_verify.max(1))
@@ -390,8 +502,10 @@ impl SpecScheduler {
             if !any_active {
                 break;
             }
-            let target_logits =
-                model.verify(&state, &full_tokens, &sigma_flat, bucket);
+            let st =
+                (*state_box).as_ref().expect("draft_into sets the state");
+            model.verify_into(st, &full_tokens[..], &sigma_flat[..], bucket,
+                              target_logits);
             stats.verify_passes += 1;
 
             for (r, &si) in active.iter().enumerate() {
@@ -400,27 +514,34 @@ impl SpecScheduler {
                     continue;
                 }
                 verify_used[r] += 1;
-                let temperature = p.temperature;
+                let inv_t = 1.0 / p.temperature;
+                let inv_t32 = inv_t as f32;
                 let mut dd = j[r];
                 let mut accepted = 0usize;
                 let mut rejected = 0usize;
                 while dd < targets[r] {
+                    if dd == 0 {
+                        // First-position rule: ordering position 0's
+                        // target IS the draft row, so the acceptance
+                        // probability is exactly 1 — no q row, no RNG.
+                        s.accepted += 1;
+                        accepted += 1;
+                        dd += 1;
+                        continue;
+                    }
                     let pos = s.sigma[dd] as usize;
                     let tok = s.tokens[pos] as usize;
-                    let p_row = &draft_probs[r][pos];
-                    // Target: ordering position 0 falls back to the draft
-                    // (first-position rule); otherwise track dd-1.
-                    let q_row: Vec<f64> = if dd == 0 {
-                        p_row.clone()
-                    } else {
-                        let tr = (r * d + (dd - 1)) * v;
-                        temp_probs(&target_logits[tr..tr + v], temperature)
-                    };
-                    let accept_p = if p_row[tok] > 0.0 {
-                        (q_row[tok] / p_row[tok]).min(1.0)
-                    } else {
-                        1.0
-                    };
+                    let pr = (r * d + pos) * v;
+                    let p_row = &draft_logits[pr..pr + v];
+                    let lse_p = draft_lse[r * d + pos];
+                    debug_assert!(lse_p.is_finite(),
+                                  "accept test on an undrafted row");
+                    // Target: track dd-1 of this verify pass.
+                    let tr = (r * d + (dd - 1)) * v;
+                    let q_row = &target_logits[tr..tr + v];
+                    let lse_q = kernels::row_lse(q_row, inv_t32);
+                    let accept_p = kernels::accept_prob(
+                        q_row[tok], lse_q, p_row[tok], lse_p, inv_t);
                     if s.rng.f64() < accept_p {
                         s.accepted += 1;
                         accepted += 1;
@@ -428,9 +549,9 @@ impl SpecScheduler {
                     } else {
                         s.rejected += 1;
                         rejected += 1;
-                        let res = residual_distribution(&q_row, p_row)
-                            .unwrap_or(q_row);
-                        let new_tok = s.rng.categorical(&res) as i32;
+                        let new_tok = kernels::residual_draw_into(
+                            scratch, q_row, lse_q, p_row, lse_p, inv_t,
+                            &mut s.rng) as i32;
                         s.tokens[pos] = new_tok;
                         full_tokens[r * d + pos] = new_tok;
                         dd += 1;
@@ -456,44 +577,59 @@ impl SpecScheduler {
                 s.done = true;
             }
             // Safety valve: a well-formed run needs at most D outer loops.
+            // A valve retirement emits the mask id at every undecided
+            // position (never-drafted positions already hold it; drawn-
+            // but-unverified window positions are masked out here), so an
+            // incomplete sample is unambiguously marked as cut off.
             let retire = s.done || s.outer >= p.max_outer;
             if retire {
+                if !s.done {
+                    for od in j[r]..targets[r] {
+                        s.tokens[s.sigma[od] as usize] = mask;
+                    }
+                }
                 let slot = slots[si].take().unwrap();
                 finished.push((slot.id, emit_sample(slot.kernel)));
             }
         }
+        *state = Some(state_box);
     }
 
-    /// One MDM reveal step over `active`, batch `bucket`. Each row is
+    /// One MDM reveal step over the residents, batch `bucket`. Each row is
     /// fast-forwarded through reveal-free grid steps (0 NFE, per the
     /// paper's best-case accounting) so every draft pass reveals work for
-    /// every resident row.
-    fn step_mdm<M: HybridModel>(&mut self, model: &M, active: &[usize],
-                                bucket: usize,
+    /// every resident row. Allocation-free once the arena is warm.
+    fn step_mdm<M: HybridModel>(&mut self, model: &M, bucket: usize,
                                 finished: &mut Vec<(SlotId, Sample)>) {
         let d = self.d;
         let v = self.vocab;
         let mask = self.mask;
-        let n_act = active.len();
         let slots = &mut self.slots;
+        let StepArena {
+            active, masked_tokens, draft_logits, reveals, state, ..
+        } = &mut self.arena;
+        let n_act = active.len();
 
         // Reveal counts for this step (advances each row's grid cursor).
-        let mut reveals = Vec::with_capacity(n_act);
-        for &si in active {
+        reveals.clear();
+        for &si in active.iter() {
             let (m, p) = mdm_mut(&mut slots[si]);
             reveals.push(next_reveal(m, p));
         }
 
-        let mut batch_tokens = vec![mask; bucket * d];
+        masked_tokens.clear();
+        masked_tokens.resize(bucket * d, mask);
         for (r, &si) in active.iter().enumerate() {
             let (m, _) = mdm_mut(&mut slots[si]);
-            batch_tokens[r * d..(r + 1) * d].copy_from_slice(&m.tokens);
+            masked_tokens[r * d..(r + 1) * d].copy_from_slice(&m.tokens);
         }
         debug_assert!(
-            batch_tokens[n_act * d..].iter().all(|&t| t == mask),
+            masked_tokens[n_act * d..].iter().all(|&t| t == mask),
             "padding rows must contribute only mask tokens"
         );
-        let (_, logits) = model.draft(&batch_tokens, bucket);
+        let mut state_box = Self::take_state::<M>(state);
+        model.draft_into(&masked_tokens[..], bucket, &mut state_box,
+                         draft_logits);
 
         for (r, &si) in active.iter().enumerate() {
             let (m, p) = mdm_mut(&mut slots[si]);
@@ -505,20 +641,24 @@ impl SpecScheduler {
             // Zheng fix: choose WHICH positions to reveal uniformly,
             // independent of the sampled values.
             m.rng.shuffle(&mut m.masked);
+            // The grid uses the sampling temperature; the final forced
+            // pass (rounding leftovers) reveals at temperature 1.
+            let inv_t = if forced { 1.0 }
+                        else { (1.0 / p.temperature) as f32 };
             for _ in 0..c {
                 let pos = m.masked.pop().unwrap();
-                let row = &logits[(r * d + pos) * v..(r * d + pos) * v + v];
-                // The grid uses the sampling temperature; the final forced
-                // pass (rounding leftovers) reveals at temperature 1.
-                let prob = if forced { softmax_row(row) }
-                           else { temp_probs(row, p.temperature) };
-                m.tokens[pos] = m.rng.categorical(&prob) as i32;
+                let row = &draft_logits[(r * d + pos) * v
+                                        ..(r * d + pos) * v + v];
+                let (tok, _) =
+                    kernels::gumbel_draw_lse(row, inv_t, m.rng.next_u64());
+                m.tokens[pos] = tok as i32;
             }
             if m.masked.is_empty() {
                 let slot = slots[si].take().unwrap();
                 finished.push((slot.id, emit_sample(slot.kernel)));
             }
         }
+        *state = Some(state_box);
     }
 }
 
@@ -683,14 +823,6 @@ pub fn pick_bucket(buckets: &[usize], n: usize) -> usize {
         .unwrap_or(n.max(1))
 }
 
-pub(crate) fn temp_probs(logits: &[f32], temperature: f64) -> Vec<f64> {
-    if (temperature - 1.0).abs() < 1e-12 {
-        softmax_row(logits)
-    } else {
-        softmax_row_temp(logits, temperature)
-    }
-}
-
 // ---------------------------------------------------------------------------
 // Object-safe stepping facade for the coordinator
 // ---------------------------------------------------------------------------
@@ -767,6 +899,7 @@ impl<'m, M: HybridModel> Stepper for BoundStepper<'m, M> {
 mod tests {
     use super::*;
     use crate::engine::mock::MockModel;
+    use crate::engine::Window;
 
     fn spec(params: &SpecParams) -> SeqParams {
         SeqParams::Spec(params.clone())
@@ -896,6 +1029,13 @@ mod tests {
                 "every step pays at least one row");
     }
 
+    /// Seed-stability of the new Gumbel-draw path: identical admissions
+    /// (same seeds) must reproduce identical tokens. Distributional
+    /// equivalence to the old CDF-inversion path is pinned separately by
+    /// the chi-square tests in `engine::kernels` and the likelihood
+    /// cross-check in `likelihood::tests` — bitwise equality with
+    /// pre-change RNG streams is explicitly *not* a goal (the Gumbel draw
+    /// consumes the PCG stream differently).
     #[test]
     fn scheduler_is_deterministic_for_identical_admissions() {
         let run = || {
@@ -936,5 +1076,30 @@ mod tests {
             assert!(s.tokens.iter().all(|&t| (0..5).contains(&t)));
             assert!(s.nfe >= 1.0 && s.nfe <= 9.0, "{s:?}");
         }
+    }
+
+    /// Window-lazy drafting must not change the per-loop reveal
+    /// accounting: with a constant window of 1 and one verify pass, every
+    /// outer loop decides exactly one ordering position.
+    #[test]
+    fn constant_window_decides_one_position_per_loop() {
+        let d = 12;
+        let m = MockModel::new(d, 4, 31);
+        let mut sched = SpecScheduler::for_model(&m);
+        let params = SpecParams {
+            window: Window::Constant(1),
+            n_verify: 1,
+            ..Default::default()
+        };
+        sched.admit(&Prompt::empty(d), spec(&params), Pcg::new(5));
+        let mut out = Vec::new();
+        while !sched.is_idle() {
+            out.extend(sched.step(&m));
+        }
+        assert_eq!(out.len(), 1);
+        let s = &out[0].1;
+        assert_eq!(s.accepted + s.rejected, d);
+        assert_eq!(s.outer_loops, d, "window 1 ⇒ one decision per loop");
+        assert_eq!(sched.steps(), d as u64);
     }
 }

@@ -1,8 +1,12 @@
 //! Numerically stable softmax / log-softmax over logits rows.
 //!
-//! The runtime returns raw logits `[B, D, V]`; the engine converts rows to
-//! probabilities for the speculative accept/reject tests, the residual
-//! resampling distribution (Alg. 2), and categorical draws.
+//! The runtime returns raw logits `[B, D, V]`. These materializing
+//! helpers are the *reference* implementations: the scheduler hot path
+//! now runs on the allocation-free logits-domain kernels in
+//! `engine::kernels` (Gumbel-max draws, cached log-sum-exps, lazy
+//! residuals), and the chi-square tests there pin the kernels to the
+//! distributions these functions define. Cold paths (likelihood tables,
+//! oracle scoring, benches) and tests still use them directly.
 
 /// Stable softmax of one row, in f64 for downstream probability arithmetic.
 pub fn softmax_row(logits: &[f32]) -> Vec<f64> {
@@ -28,10 +32,20 @@ pub fn log_softmax_row(logits: &[f32]) -> Vec<f64> {
 
 /// Softmax with temperature (Table 1 note: generative perplexity can be
 /// cheated with low temperature; exposed so harnesses can demonstrate it).
+///
+/// Single f64 pass over the row. The seed implementation scaled into an
+/// intermediate `Vec<f32>` — an extra allocation *and* a round-trip of
+/// `f64/temp` back through f32 that quantized the scaled logits before
+/// the softmax saw them.
 pub fn softmax_row_temp(logits: &[f32], temp: f64) -> Vec<f64> {
-    let scaled: Vec<f32> =
-        logits.iter().map(|&x| (x as f64 / temp) as f32).collect();
-    softmax_row(&scaled)
+    debug_assert!(temp > 0.0, "temperature must be positive");
+    let m = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max) as f64
+        / temp;
+    let mut out: Vec<f64> =
+        logits.iter().map(|&x| (x as f64 / temp - m).exp()).collect();
+    let s: f64 = out.iter().sum();
+    out.iter_mut().for_each(|x| *x /= s);
+    out
 }
 
 /// The speculative residual distribution max(0, q - p), normalized.
@@ -83,6 +97,32 @@ mod tests {
         let p1 = softmax_row_temp(&logits, 1.0);
         let p01 = softmax_row_temp(&logits, 0.1);
         assert!(p01[1] > p1[1]);
+    }
+
+    #[test]
+    fn temp_softmax_is_full_precision() {
+        // The seed implementation round-tripped the scaled logits through
+        // f32; the one-pass version must match an exact f64 reference.
+        let logits = [1.0f32, -0.5, 2.25, 0.125];
+        let temp = 3.0;
+        let got = softmax_row_temp(&logits, temp);
+        let exact: Vec<f64> = {
+            let scaled: Vec<f64> =
+                logits.iter().map(|&x| x as f64 / temp).collect();
+            let m = scaled.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let e: Vec<f64> = scaled.iter().map(|x| (x - m).exp()).collect();
+            let s: f64 = e.iter().sum();
+            e.into_iter().map(|x| x / s).collect()
+        };
+        for (g, x) in got.iter().zip(&exact) {
+            assert!((g - x).abs() < 1e-15, "{g} vs {x}");
+        }
+        // temp == 1 agrees with the plain softmax.
+        let a = softmax_row_temp(&logits, 1.0);
+        let b = softmax_row(&logits);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-15);
+        }
     }
 
     #[test]

@@ -20,6 +20,15 @@
 //! Padding rows no longer exist as sequences at all — rows beyond the
 //! resident count are mask-only filler that accrues no accept/reject
 //! counts and does no generation work.
+//!
+//! Sampling runs on the logits-domain kernels of `engine::kernels`:
+//! Gumbel-max draws (one PCG draw per token seeding a counter-based
+//! noise stream), log-space accept tests from cached per-row
+//! log-sum-exps, and lazy residual resampling. Same-seed runs are
+//! reproducible and the sampled distribution is unchanged (chi-square
+//! pinned in `engine::kernels::tests`), but token streams differ
+//! bitwise from the pre-kernel CDF-inversion sampler — pin seeds, not
+//! historical outputs.
 
 use crate::engine::scheduler::{run_to_completion, SeqParams};
 use crate::engine::window::Window;

@@ -19,7 +19,7 @@
 //! from D draft + D verify passes of a real model (`from_model`, batched
 //! into the model's buckets).
 
-use crate::engine::softmax::softmax_row;
+use crate::engine::kernels::lse_f64;
 use crate::engine::HybridModel;
 
 const NEG_INF: f64 = f64::NEG_INFINITY;
@@ -80,13 +80,17 @@ impl SpecTable {
                     let tok = tokens[pos] as usize;
                     let row = &draft_logits
                         [(r * d + pos) * v..(r * d + pos) * v + v];
-                    p[c][dd] = softmax_row(row)[tok];
+                    // One scalar read per row: exp(l[tok] - lse) replaces
+                    // the old softmax_row(row)[tok], which allocated and
+                    // normalized a full V-length vector per table entry.
+                    p[c][dd] = (row[tok] as f64 - lse_f64(row)).exp();
                     if dd == 0 {
                         q[c][dd] = p[c][dd]; // first-position rule
                     } else {
                         let tr = (r * d + (dd - 1)) * v;
+                        let trow = &target_logits[tr..tr + v];
                         q[c][dd] =
-                            softmax_row(&target_logits[tr..tr + v])[tok];
+                            (trow[tok] as f64 - lse_f64(trow)).exp();
                     }
                 }
             }

@@ -5,8 +5,21 @@
 //! mean / p50 / p95 / throughput, and prints aligned table rows so the
 //! paper-table harnesses in `examples/` and `rust/benches/` share one
 //! formatter.
+//!
+//! Two serving-repo additions:
+//! * [`write_json`] emits `BENCH_<target>.json` (name, iters,
+//!   mean/p50/p95/min, throughput, plus free-form scalar extras) so CI
+//!   can archive per-PR perf artifacts and the repo accumulates a
+//!   machine-readable perf trajectory;
+//! * [`smoke`] (`BENCH_SMOKE=1`) caps every [`bench`] call at one timed
+//!   iteration so CI can exercise bench targets without paying full
+//!   measurement time.
 
+use std::io;
+use std::path::PathBuf;
 use std::time::Instant;
+
+use crate::util::json::Json;
 
 #[derive(Debug, Clone)]
 pub struct BenchResult {
@@ -16,18 +29,53 @@ pub struct BenchResult {
     pub p50_s: f64,
     pub p95_s: f64,
     pub min_s: f64,
+    /// Work items per iteration (0 = unset); gives `write_json` a
+    /// throughput figure without re-deriving it at every call site.
+    pub items_per_iter: f64,
 }
 
 impl BenchResult {
     pub fn throughput(&self, items_per_iter: f64) -> f64 {
         items_per_iter / self.mean_s
     }
+
+    /// Attach an items-per-iteration count (for JSON throughput).
+    pub fn with_items(mut self, items_per_iter: f64) -> BenchResult {
+        self.items_per_iter = items_per_iter;
+        self
+    }
+
+    /// A single-shot measurement (benches that run a scenario once).
+    pub fn single(name: &str, wall_s: f64) -> BenchResult {
+        BenchResult {
+            name: name.to_string(),
+            iters: 1,
+            mean_s: wall_s,
+            p50_s: wall_s,
+            p95_s: wall_s,
+            min_s: wall_s,
+            items_per_iter: 0.0,
+        }
+    }
+}
+
+/// True when `BENCH_SMOKE` is set (and not "0"): bench targets should run
+/// one timed iteration per measurement — enough to exercise the code and
+/// emit JSON artifacts, not enough to trust the numbers.
+pub fn smoke() -> bool {
+    std::env::var("BENCH_SMOKE").map(|v| v != "0").unwrap_or(false)
 }
 
 /// Run `f` repeatedly: `warmup` untimed iterations, then timed iterations
-/// until `min_time_s` elapses (at least `min_iters`).
+/// until `min_time_s` elapses (at least `min_iters`). Under [`smoke`],
+/// warmup and iteration counts collapse to 1.
 pub fn bench<F: FnMut()>(name: &str, warmup: usize, min_iters: usize,
                          min_time_s: f64, mut f: F) -> BenchResult {
+    let (warmup, min_iters, min_time_s) = if smoke() {
+        (warmup.min(1), 1, 0.0)
+    } else {
+        (warmup, min_iters, min_time_s)
+    };
     for _ in 0..warmup {
         f();
     }
@@ -58,7 +106,48 @@ pub fn summarize(name: &str, mut samples: Vec<f64>) -> BenchResult {
         p50_s: samples[n / 2],
         p95_s: samples[(n as f64 * 0.95) as usize % n],
         min_s: samples[0],
+        items_per_iter: 0.0,
     }
+}
+
+/// Write `BENCH_<target>.json` in the working directory (the workspace
+/// root under `cargo bench`): per-result stats plus free-form scalar
+/// `extra` pairs (row counts, speedup ratios, ...). CI uploads these as
+/// per-PR artifacts so perf regressions are visible in review.
+pub fn write_json(target: &str, results: &[BenchResult],
+                  extra: &[(&str, f64)]) -> io::Result<PathBuf> {
+    let path = PathBuf::from(format!("BENCH_{target}.json"));
+    let mut fields = vec![
+        ("target", Json::str(target)),
+        // Smoke runs (1 iteration) are for artifact plumbing, not for
+        // trend analysis — mark them so downstream diffing can skip them.
+        ("smoke", Json::Bool(smoke())),
+        (
+            "results",
+            Json::arr(results.iter().map(|r| {
+                let mut obj = vec![
+                    ("name", Json::str(r.name.clone())),
+                    ("iters", Json::num(r.iters as f64)),
+                    ("mean_s", Json::num(r.mean_s)),
+                    ("p50_s", Json::num(r.p50_s)),
+                    ("p95_s", Json::num(r.p95_s)),
+                    ("min_s", Json::num(r.min_s)),
+                ];
+                if r.items_per_iter > 0.0 && r.mean_s > 0.0 {
+                    obj.push((
+                        "throughput_per_s",
+                        Json::num(r.throughput(r.items_per_iter)),
+                    ));
+                }
+                Json::obj(obj)
+            })),
+        ),
+    ];
+    for &(k, v) in extra {
+        fields.push((k, Json::num(v)));
+    }
+    std::fs::write(&path, Json::obj(fields).to_string())?;
+    Ok(path)
 }
 
 pub fn fmt_duration(s: f64) -> String {
@@ -99,7 +188,13 @@ mod tests {
         let r = bench("spin", 2, 5, 0.0, || {
             std::hint::black_box((0..1000).sum::<u64>());
         });
-        assert!(r.iters >= 5);
+        // min_iters must be honored on normal runs; under BENCH_SMOKE the
+        // harness intentionally collapses to one iteration.
+        if smoke() {
+            assert!(r.iters >= 1);
+        } else {
+            assert!(r.iters >= 5);
+        }
         assert!(r.mean_s > 0.0);
         assert!(r.p50_s >= r.min_s);
     }
@@ -110,5 +205,28 @@ mod tests {
         assert!(fmt_duration(3e-6).ends_with("us"));
         assert!(fmt_duration(3e-3).ends_with("ms"));
         assert!(fmt_duration(3.0).ends_with('s'));
+    }
+
+    #[test]
+    fn json_roundtrips_results_and_extras() {
+        let r = summarize("fast_path", vec![0.5, 1.0, 1.5]).with_items(8.0);
+        let path =
+            write_json("unit_test", &[r], &[("speedup", 6.5)]).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        let v = Json::parse(&body).unwrap();
+        assert_eq!(v.get("target").unwrap().as_str().unwrap(), "unit_test");
+        assert_eq!(v.get("speedup").unwrap().as_f64().unwrap(), 6.5);
+        let results = v.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 1);
+        let r0 = &results[0];
+        assert_eq!(r0.get("name").unwrap().as_str().unwrap(), "fast_path");
+        assert_eq!(r0.get("iters").unwrap().as_usize().unwrap(), 3);
+        assert!((r0.get("mean_s").unwrap().as_f64().unwrap() - 1.0).abs()
+                < 1e-12);
+        assert!((r0.get("throughput_per_s").unwrap().as_f64().unwrap()
+                 - 8.0)
+            .abs()
+            < 1e-9);
     }
 }

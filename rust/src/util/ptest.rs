@@ -35,9 +35,68 @@ pub fn check<T: std::fmt::Debug>(
     }
 }
 
+/// Pearson chi-square statistic of observed `counts` against expected
+/// `probs` (which must sum to ~1; zero-probability bins are skipped).
+/// Used by the sampling-kernel equivalence tests: empirical draw counts
+/// from the logits-domain kernels are tested against the old
+/// materialized-softmax distribution.
+pub fn chi_square(counts: &[usize], probs: &[f64]) -> f64 {
+    debug_assert_eq!(counts.len(), probs.len());
+    let n: usize = counts.iter().sum();
+    counts
+        .iter()
+        .zip(probs)
+        .filter(|&(_, &p)| p > 0.0)
+        .map(|(&c, &p)| {
+            let e = p * n as f64;
+            (c as f64 - e) * (c as f64 - e) / e
+        })
+        .sum()
+}
+
+/// Approximate 99.99% chi-square critical value for `df` degrees of
+/// freedom (Wilson–Hilferty). Tests are seeded and deterministic, so the
+/// generous significance level trades a sliver of power for a negligible
+/// chance of a correct implementation ever tripping the bound; a wrong
+/// sampler overshoots it by an order of magnitude.
+pub fn chi_square_crit(df: usize) -> f64 {
+    let df = df.max(1) as f64;
+    let z = 3.719; // Phi^-1(0.9999)
+    let a = 2.0 / (9.0 * df);
+    df * (1.0 - a + z * a.sqrt()).powi(3)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn chi_square_small_for_perfect_fit() {
+        // Counts exactly proportional to probs -> statistic 0.
+        let probs = [0.5, 0.3, 0.2];
+        let counts = [500usize, 300, 200];
+        assert!(chi_square(&counts, &probs) < 1e-9);
+        // A grossly wrong distribution blows up far past the critical
+        // value.
+        let bad = [200usize, 300, 500];
+        assert!(chi_square(&bad, &probs) > chi_square_crit(2) * 5.0);
+    }
+
+    #[test]
+    fn chi_square_crit_tracks_df() {
+        // Roughly df + 4*sqrt(2 df): grows monotonically and stays above
+        // the mean of the distribution.
+        let mut prev = 0.0;
+        for df in [1usize, 5, 26, 100, 999] {
+            let c = chi_square_crit(df);
+            assert!(c > df as f64, "crit {c} <= df {df}");
+            assert!(c > prev);
+            prev = c;
+        }
+        // Sanity anchors (within a few percent of table values).
+        assert!((chi_square_crit(26) - 61.9).abs() < 3.0);
+        assert!((chi_square_crit(999) - 1173.0).abs() < 25.0);
+    }
 
     #[test]
     fn passes_trivially_true_property() {

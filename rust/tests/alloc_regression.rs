@@ -1,0 +1,113 @@
+//! Allocation-regression guard for the scheduler hot path.
+//!
+//! The continuous-batching scheduler owns a `StepArena` of per-step
+//! buffers (token/sigma staging, both logits buffers, the draft-LSE
+//! table, the residual scratch row) and the sampling primitives are
+//! allocation-free logits-domain kernels, so once the first step has
+//! warmed every capacity a steady-state `SpecScheduler::step` must touch
+//! the heap **zero** times. This test pins that invariant with a counting
+//! `#[global_allocator]`: any future change that sneaks an allocation
+//! into the hot loop (a probability-vector materialization, a per-row
+//! clone, a payload build in the mock) fails here, not in a profile.
+//!
+//! This file must stay a single #[test]: the counter is process-global,
+//! so a concurrently running second test would pollute the measurement.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use ssmd::engine::{MdmParams, MockModel, Prompt, SeqParams, SpecParams,
+                   SpecScheduler, Window};
+use ssmd::util::rng::Pcg;
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout,
+                      new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocs() -> usize {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+#[test]
+fn warm_scheduler_steps_allocate_nothing() {
+    // ---- speculative path -------------------------------------------------
+    let d = 128;
+    let mut model = MockModel::new(d, 16, 0xa110c);
+    model.buckets = vec![1];
+    let mut sched = SpecScheduler::for_model(&model);
+    let params = SpecParams {
+        // Small cosine windows: many outer loops, none of which can
+        // finish the sequence inside the measured region.
+        window: Window::Cosine { dtau: 0.02 },
+        ..Default::default()
+    };
+    sched.admit(&Prompt::empty(d), SeqParams::Spec(params), Pcg::new(1));
+    // Warm the arena: first steps size every buffer (and the first
+    // rejection sizes the residual scratch row's length).
+    for _ in 0..3 {
+        sched.step(&model);
+    }
+    assert!(!sched.is_idle(), "warmup must not finish the sequence");
+
+    let before = allocs();
+    for _ in 0..4 {
+        sched.step(&model);
+    }
+    let spec_allocs = allocs() - before;
+    assert!(
+        !sched.is_idle(),
+        "measured steps must not retire the sequence (retirement is \
+         allowed to allocate)"
+    );
+    assert_eq!(
+        spec_allocs, 0,
+        "warm speculative steps must not allocate (got {spec_allocs} \
+         allocations across 4 steps)"
+    );
+
+    // ---- MDM path ---------------------------------------------------------
+    let mut sched = SpecScheduler::for_model(&model);
+    let params = MdmParams { steps: 4096, temperature: 1.0 };
+    sched.admit(&Prompt::empty(d), SeqParams::Mdm(params), Pcg::new(2));
+    for _ in 0..3 {
+        sched.step(&model);
+    }
+    assert!(!sched.is_idle(), "warmup must not finish the sequence");
+
+    let before = allocs();
+    for _ in 0..4 {
+        sched.step(&model);
+    }
+    let mdm_allocs = allocs() - before;
+    assert!(!sched.is_idle());
+    assert_eq!(
+        mdm_allocs, 0,
+        "warm MDM steps must not allocate (got {mdm_allocs} allocations \
+         across 4 steps)"
+    );
+}
