@@ -1,0 +1,174 @@
+//! Bench trend gate: diff the working directory's `BENCH_*.json`
+//! artifacts against the committed baseline snapshot and exit nonzero on
+//! a >20% mean regression (or a benchmark that disappeared).
+//!
+//!   cargo bench                      # produce BENCH_*.json
+//!   cargo run --example bench_trend  # gate against benchmarks/baseline/
+//!
+//! Flags: `--baseline DIR` (default benchmarks/baseline), `--current DIR`
+//! (default .), `--threshold 0.20`.
+//!
+//! Wall-clock comparisons only gate when *neither* side is a smoke run
+//! (`BENCH_SMOKE=1` emits `smoke:true` artifacts — structure and the
+//! deterministic `extra` counters still diff, timings don't). Seed or
+//! refresh the baseline from a full run:
+//!
+//!   cargo bench && mkdir -p benchmarks/baseline \
+//!     && cp BENCH_*.json benchmarks/baseline/
+
+use std::path::PathBuf;
+use std::process::exit;
+
+use ssmd::util::args::Args;
+use ssmd::util::bench::fmt_duration;
+use ssmd::util::benchdiff::{diff, load};
+
+fn main() {
+    let args = Args::from_env();
+    let baseline_dir =
+        PathBuf::from(args.str("baseline", "benchmarks/baseline"));
+    let current_dir = PathBuf::from(args.str("current", "."));
+    let threshold = args.f64("threshold", 0.20);
+
+    let mut artifacts: Vec<PathBuf> = match std::fs::read_dir(&current_dir)
+    {
+        Ok(rd) => rd
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| {
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .map(|n| n.starts_with("BENCH_") && n.ends_with(".json"))
+                    .unwrap_or(false)
+            })
+            .collect(),
+        Err(e) => {
+            eprintln!("cannot read {}: {e}", current_dir.display());
+            exit(2);
+        }
+    };
+    artifacts.sort();
+    if artifacts.is_empty() {
+        eprintln!(
+            "no BENCH_*.json in {} — run `cargo bench` (or \
+             `BENCH_SMOKE=1 cargo bench`) first",
+            current_dir.display()
+        );
+        exit(2);
+    }
+
+    let mut failed = false;
+    // A baseline artifact with no current counterpart means a whole
+    // bench target vanished — that must fail, not be silently skipped.
+    if let Ok(rd) = std::fs::read_dir(&baseline_dir) {
+        for entry in rd.filter_map(|e| e.ok()) {
+            let name = entry.file_name().to_string_lossy().to_string();
+            if name.starts_with("BENCH_")
+                && name.ends_with(".json")
+                && !artifacts.iter().any(|p| {
+                    p.file_name().and_then(|n| n.to_str())
+                        == Some(name.as_str())
+                })
+            {
+                eprintln!(
+                    "FAIL baseline {name} has no current artifact — did \
+                     a bench target vanish? (re-run cargo bench, or \
+                     remove the baseline file intentionally)"
+                );
+                failed = true;
+            }
+        }
+    }
+    for path in artifacts {
+        let name = path.file_name().unwrap().to_string_lossy().to_string();
+        let base_path = baseline_dir.join(&name);
+        if !base_path.exists() {
+            println!(
+                "{name}: no committed baseline — skipped (seed one: \
+                 cargo bench && cp {name} {}/)",
+                baseline_dir.display()
+            );
+            continue;
+        }
+        let (base, cur) = match (load(&base_path), load(&path)) {
+            (Ok(b), Ok(c)) => (b, c),
+            (Err(e), _) | (_, Err(e)) => {
+                eprintln!("{name}: {e}");
+                failed = true;
+                continue;
+            }
+        };
+        let rep = match diff(&base, &cur) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("{name}: {e}");
+                failed = true;
+                continue;
+            }
+        };
+
+        println!("== {name} (target '{}') ==", rep.target);
+        if !rep.comparable() {
+            println!(
+                "  smoke artifact on {} side: structural + extras check \
+                 only, timings not gated",
+                if rep.cur_smoke && rep.base_smoke {
+                    "both"
+                } else if rep.cur_smoke {
+                    "the current"
+                } else {
+                    "the baseline"
+                }
+            );
+        }
+        for d in &rep.deltas {
+            let pct = d.change() * 100.0;
+            if rep.comparable() {
+                println!(
+                    "  {:<44} {:>10} -> {:>10}  {:+6.1}%",
+                    d.name,
+                    fmt_duration(d.base),
+                    fmt_duration(d.cur),
+                    pct
+                );
+            }
+        }
+        for d in &rep.extra_deltas {
+            println!(
+                "  extra {:<38} {:>10.4} -> {:>10.4}  {:+6.1}%",
+                d.name,
+                d.base,
+                d.cur,
+                d.change() * 100.0
+            );
+        }
+        for n in &rep.new_in_current {
+            println!("  new bench (no baseline yet): {n}");
+        }
+        for n in &rep.missing_extras {
+            println!(
+                "  extra '{n}' only in baseline (not emitted this run — \
+                 expected for timing-derived extras under smoke)"
+            );
+        }
+        for n in &rep.missing_in_current {
+            eprintln!("  FAIL missing bench (present in baseline): {n}");
+            failed = true;
+        }
+        let regs = rep.regressions(threshold);
+        for d in &regs {
+            eprintln!(
+                "  FAIL {}: mean {} -> {} ({:+.1}% > {:.0}%)",
+                d.name,
+                fmt_duration(d.base),
+                fmt_duration(d.cur),
+                d.change() * 100.0,
+                threshold * 100.0
+            );
+        }
+        if !regs.is_empty() {
+            failed = true;
+        }
+    }
+    exit(if failed { 1 } else { 0 });
+}

@@ -66,7 +66,10 @@ fn main() -> Result<()> {
                 Ok(map)
             }
         },
-        BatcherConfig { max_wait: Duration::from_millis(10) },
+        BatcherConfig {
+            max_wait: Duration::from_millis(10),
+            ..Default::default()
+        },
     )?;
     let metrics = coordinator.metrics.clone();
     let server = Server::new(coordinator);

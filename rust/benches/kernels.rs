@@ -226,8 +226,14 @@ fn main() {
         }
     }
 
-    let json = write_json("kernels", &results,
-                          &[("outer_speedup_v50k", outer_ratio_v50k)]);
+    // Timing-derived extras are pure noise on 1-iteration smoke runs and
+    // would pollute the bench-trend extras section (whose contract is
+    // "deterministic workload facts, trustworthy under smoke"), so the
+    // speedup ratio is only emitted on full measurement runs.
+    let speedup_extra = [("outer_speedup_v50k", outer_ratio_v50k)];
+    let extras: &[(&str, f64)] =
+        if smoke() { &[] } else { &speedup_extra };
+    let json = write_json("kernels", &results, extras);
     match json {
         Ok(p) => println!("\nwrote {}", p.display()),
         Err(e) => eprintln!("\nBENCH_kernels.json not written: {e}"),

@@ -76,7 +76,10 @@ fn main() {
     {
         let c = Coordinator::start(
             factory(artifacts.clone()),
-            BatcherConfig { max_wait: Duration::from_millis(wait_ms) },
+            BatcherConfig {
+                max_wait: Duration::from_millis(wait_ms),
+                ..Default::default()
+            },
         )
         .unwrap();
         for (name, sampler) in [

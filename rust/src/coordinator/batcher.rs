@@ -14,16 +14,24 @@
 
 use std::time::Duration;
 
-#[derive(Clone, Copy, Debug)]
+use crate::coordinator::sched::SchedConfig;
+
+#[derive(Clone, Debug)]
 pub struct BatcherConfig {
     /// Maximum time to hold the first request of a batch while waiting for
     /// companions.
     pub max_wait: Duration,
+    /// Cross-queue scheduling: default queue policy, per-model overrides,
+    /// and the weighted-selector tuning knobs (see `coordinator::sched`).
+    pub sched: SchedConfig,
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        BatcherConfig { max_wait: Duration::from_millis(5) }
+        BatcherConfig {
+            max_wait: Duration::from_millis(5),
+            sched: SchedConfig::default(),
+        }
     }
 }
 

@@ -80,6 +80,13 @@ impl GenRequest {
 pub struct GenResponse {
     pub model: String,
     pub samples: Vec<Sample>,
+    /// Per-request enqueue -> completion wall time. Under weighted
+    /// cross-queue scheduling this includes the service this queue's
+    /// weight conceded to other queues *after* its sequences were placed
+    /// — the placement-side wait alone is the per-sequence
+    /// `queue_wait_s` metric (which is what `slo_p95_s` policies are
+    /// enforced against). A low-weight queue therefore shows small
+    /// `queue_wait_s` but stretched `wall_s` under mixed load.
     pub wall_s: f64,
 }
 

@@ -1,0 +1,961 @@
+//! Weighted SLO-aware cross-queue scheduling core.
+//!
+//! The engine thread drives one continuous-batching run queue per
+//! `batch_key`, but until this module the *selector* across queues was
+//! plain round-robin: a latency-sensitive small-vocab queue could stall
+//! behind a bulk GPT2-scale queue regardless of traffic mix. This module
+//! is that selector, factored out of the engine loop into **pure state
+//! plus an injected [`Clock`]** so the same code is driven by wall time
+//! in production and by virtual time in `tests/sched_sim.rs` (exact,
+//! sleep-free latency/fairness assertions).
+//!
+//! ## Algorithm
+//!
+//! Deficit-style weighted fair queuing in virtual-time form. Every queue
+//! accrues service entitlement proportional to its [`QueuePolicy::weight`];
+//! we track the inverse — normalized consumed service
+//! `vtime_q = Σ step_cost / (weight_q · boost_q)` — and each round serve
+//! the ready queue with the smallest adjusted `vtime`. This is equivalent
+//! to credit accrual with an adaptive top-up (the queue farthest below its
+//! entitlement is exactly the one with minimal `vtime`) without the
+//! top-up loop, and it converges long-run *time* shares to the configured
+//! weight ratios under any mix of per-step costs. The engine reports each
+//! step's observed cost back via [`CrossQueueScheduler::report_step`];
+//! the simulation harness reports synthetic costs.
+//!
+//! Layered on the base policy:
+//!
+//! * **SLO boost** — each queue keeps an EWMA of its observed queue waits
+//!   (enqueue → first slot placement, fed by
+//!   [`CrossQueueScheduler::placed`]). A queue whose EWMA exceeds its
+//!   `slo_p95_s` is charged at `weight · boost` (boost = EWMA/SLO, capped
+//!   at `max_boost`) and gets a pick-time priority bonus, so it wins
+//!   rounds until its waits recover; every individual wait above the SLO
+//!   increments the `slo_violations` counter.
+//! * **Burst bound** — `max_consecutive` caps how many rounds one queue
+//!   can win back-to-back while another queue is ready, bounding the
+//!   service gap a high-weight queue can impose.
+//! * **Starvation backstop** — a ready queue passed over `starve_after`
+//!   consecutive rounds is served unconditionally (most-starved first,
+//!   one per round), so with `k` simultaneously starved queues no
+//!   non-empty queue ever waits more than `starve_after + k - 1` rounds
+//!   — bounded by `starve_after + n_queues` regardless of weights,
+//!   boosts, or costs (property-tested in `tests/sched_sim.rs`).
+//! * **Admission backpressure** — [`CrossQueueScheduler::try_enqueue`]
+//!   bounds per-queue pending depth at `max_pending`; an over-full queue
+//!   either sheds the request (`shed_on_full`, counted in
+//!   `shed_requests`) or keeps queueing.
+//!
+//! A queue that goes idle keeps its state but has its `vtime` caught up
+//! to the ready frontier when it next becomes ready, so parked
+//! entitlement cannot be spent as an unbounded burst.
+//!
+//! All per-round state lives in fixed per-queue slots: `pick`,
+//! `report_step` and `placed` allocate nothing, preserving the
+//! zero-allocation warm-step invariant (`tests/alloc_regression.rs`
+//! pins the multi-queue path).
+
+use std::collections::BTreeMap;
+use std::collections::VecDeque;
+
+use crate::util::simclock::Clock;
+
+/// Handle to a registered queue; stable for the scheduler's lifetime.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct QueueId(pub usize);
+
+/// Per-queue scheduling policy, resolved from [`SchedConfig`] when the
+/// coordinator creates a run queue.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QueuePolicy {
+    /// Relative service share (> 0). Long-run step-time shares of
+    /// backlogged queues converge to the weight ratios.
+    pub weight: f64,
+    /// Optional p95 queue-wait target, seconds. When the observed wait
+    /// EWMA exceeds it the queue is boosted and violations are counted.
+    pub slo_p95_s: Option<f64>,
+    /// Max rounds this queue may win back-to-back while others are ready.
+    pub max_consecutive: u32,
+    /// Bound on pending (admitted but not yet placed) sequences. A hard
+    /// cap, not a high-water mark: a single request carrying more
+    /// sequences than this can never be admitted.
+    pub max_pending: usize,
+    /// When the pending bound is hit: shed the request (true) or keep
+    /// queueing anyway (false).
+    pub shed_on_full: bool,
+}
+
+impl Default for QueuePolicy {
+    fn default() -> Self {
+        QueuePolicy {
+            weight: 1.0,
+            slo_p95_s: None,
+            max_consecutive: 4,
+            max_pending: usize::MAX,
+            shed_on_full: false,
+        }
+    }
+}
+
+impl QueuePolicy {
+    /// Apply a comma-separated option list onto this policy, e.g.
+    /// `"weight:4,slo:0.05,burst:2,pending:64,shed"`.
+    pub fn apply_spec(&mut self, spec: &str) -> Result<(), String> {
+        for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty())
+        {
+            match part.split_once(':') {
+                Some(("weight", v)) => {
+                    let w: f64 = v
+                        .trim()
+                        .parse()
+                        .map_err(|_| format!("bad weight '{v}'"))?;
+                    if !w.is_finite() || w <= 0.0 {
+                        return Err(format!(
+                            "weight must be finite and > 0, got {v}"
+                        ));
+                    }
+                    self.weight = w;
+                }
+                Some(("slo", v)) => {
+                    let s: f64 = v
+                        .trim()
+                        .parse()
+                        .map_err(|_| format!("bad slo '{v}'"))?;
+                    if !s.is_finite() || s <= 0.0 {
+                        return Err(format!(
+                            "slo must be finite and > 0, got {v}"
+                        ));
+                    }
+                    self.slo_p95_s = Some(s);
+                }
+                Some(("burst", v)) => {
+                    let b: u32 = v
+                        .trim()
+                        .parse()
+                        .map_err(|_| format!("bad burst '{v}'"))?;
+                    if b == 0 {
+                        return Err("burst must be >= 1".into());
+                    }
+                    self.max_consecutive = b;
+                }
+                Some(("pending", v)) => {
+                    let p: usize = v
+                        .trim()
+                        .parse()
+                        .map_err(|_| format!("bad pending '{v}'"))?;
+                    if p == 0 {
+                        return Err("pending must be >= 1".into());
+                    }
+                    self.max_pending = p;
+                }
+                None if part == "shed" => self.shed_on_full = true,
+                None if part == "queue" => self.shed_on_full = false,
+                _ => {
+                    return Err(format!(
+                        "bad queue-policy option '{part}' (expected \
+                         weight:W, slo:S, burst:N, pending:N, shed, queue)"
+                    ))
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Server-level scheduling configuration: a default policy, per-model
+/// overrides, and the selector tuning knobs.
+#[derive(Clone, Debug)]
+pub struct SchedConfig {
+    pub default_policy: QueuePolicy,
+    pub per_model: BTreeMap<String, QueuePolicy>,
+    /// Starvation backstop: a ready queue passed over this many rounds is
+    /// served unconditionally.
+    pub starve_after: u64,
+    /// Smoothing factor of the per-queue wait EWMA in (0, 1].
+    pub wait_alpha: f64,
+    /// Cap on the SLO charge-rate boost.
+    pub max_boost: f64,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        SchedConfig {
+            default_policy: QueuePolicy::default(),
+            per_model: BTreeMap::new(),
+            starve_after: 64,
+            wait_alpha: 0.2,
+            max_boost: 8.0,
+        }
+    }
+}
+
+impl SchedConfig {
+    /// Policy for a run queue serving `model` (per-model override wins;
+    /// queues created for the same model under different sampler settings
+    /// share the model's policy).
+    pub fn resolve(&self, model: &str) -> QueuePolicy {
+        self.per_model
+            .get(model)
+            .cloned()
+            .unwrap_or_else(|| self.default_policy.clone())
+    }
+
+    /// Apply a CLI spec: `;`-separated entries, each either
+    /// `model=<options>` (per-model override on top of the default) or a
+    /// bare `<options>` list editing the default policy. Bare entries
+    /// are applied first regardless of position, so the outcome is
+    /// order-independent: overrides always layer on the fully-edited
+    /// default. See [`QueuePolicy::apply_spec`] for the option grammar.
+    pub fn apply_cli(&mut self, spec: &str) -> Result<(), String> {
+        let entries = || {
+            spec.split(';').map(str::trim).filter(|s| !s.is_empty())
+        };
+        for entry in entries() {
+            if entry.split_once('=').is_none() {
+                self.default_policy.apply_spec(entry)?;
+            }
+        }
+        for entry in entries() {
+            if let Some((model, opts)) = entry.split_once('=') {
+                let mut p = self.resolve(model.trim());
+                p.apply_spec(opts)?;
+                self.per_model.insert(model.trim().to_string(), p);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Fixed per-queue selector state (no per-round allocations).
+struct QueueState {
+    key: String,
+    policy: QueuePolicy,
+    /// Normalized consumed service Σ cost / (weight · boost).
+    vtime: f64,
+    /// EWMA of observed queue waits (seconds).
+    wait_ewma: f64,
+    waits_seen: u64,
+    /// Arrival timestamps of pending (admitted, unplaced) sequences,
+    /// keyed by caller-chosen *lane* (the coordinator uses one lane per
+    /// batch-key run queue): placements pop their own lane's FIFO, so
+    /// per-sequence waits pair exactly even when several lanes of one
+    /// queue are concurrently backlogged. Emptied lanes are removed, so
+    /// the map is bounded by concurrently-pending lanes.
+    arrivals: BTreeMap<u64, VecDeque<f64>>,
+    /// Total pending sequences across lanes (the `max_pending` subject).
+    pending: usize,
+    /// Consecutive pick rounds this queue was ready but passed over.
+    since_pick: u64,
+    /// Last pick round in which this queue was ready (newly-ready
+    /// detection for the vtime catch-up).
+    ready_gen: u64,
+    steps: u64,
+    cost_total: f64,
+    slo_violations: u64,
+    shed: u64,
+}
+
+/// The cross-queue selector: pure state + an injected clock.
+pub struct CrossQueueScheduler {
+    clock: Box<dyn Clock>,
+    starve_after: u64,
+    wait_alpha: f64,
+    max_boost: f64,
+    queues: Vec<QueueState>,
+    /// Ready-frontier virtual time (max vtime ever charged).
+    vnow: f64,
+    /// EWMA of reported step costs; scales the SLO pick-time bonus.
+    cost_ewma: f64,
+    pick_gen: u64,
+    last_pick: Option<usize>,
+    consecutive: u32,
+    slo_violations: u64,
+    shed_requests: u64,
+}
+
+impl CrossQueueScheduler {
+    pub fn new(clock: Box<dyn Clock>, cfg: &SchedConfig)
+               -> CrossQueueScheduler {
+        CrossQueueScheduler {
+            clock,
+            starve_after: cfg.starve_after.max(1),
+            wait_alpha: cfg.wait_alpha.clamp(1e-6, 1.0),
+            max_boost: cfg.max_boost.max(1.0),
+            queues: Vec::new(),
+            vnow: 0.0,
+            cost_ewma: 0.0,
+            pick_gen: 0,
+            last_pick: None,
+            consecutive: 0,
+            slo_violations: 0,
+            shed_requests: 0,
+        }
+    }
+
+    /// Current reading of the injected clock (seconds since its epoch).
+    pub fn now(&self) -> f64 {
+        self.clock.now()
+    }
+
+    /// Register (or re-resolve the policy of) the queue for `key`. State
+    /// persists across run-queue drop/recreate cycles, so a queue's wait
+    /// EWMA and service history survive idleness.
+    pub fn register(&mut self, key: &str, policy: QueuePolicy) -> QueueId {
+        if let Some(i) = self.queues.iter().position(|q| q.key == key) {
+            self.queues[i].policy = policy;
+            return QueueId(i);
+        }
+        self.queues.push(QueueState {
+            key: key.to_string(),
+            policy,
+            vtime: self.vnow,
+            wait_ewma: 0.0,
+            waits_seen: 0,
+            arrivals: BTreeMap::new(),
+            pending: 0,
+            since_pick: 0,
+            ready_gen: 0,
+            steps: 0,
+            cost_total: 0.0,
+            slo_violations: 0,
+            shed: 0,
+        });
+        QueueId(self.queues.len() - 1)
+    }
+
+    /// Admission backpressure: record `n` sequences arriving now on
+    /// `lane` (minus `age_s`, the time the request already spent in
+    /// transit before the engine saw it). Returns false — and counts a
+    /// shed request — when the queue is over its pending bound and its
+    /// policy sheds. The bound spans all lanes of the queue.
+    pub fn try_enqueue(&mut self, qid: QueueId, lane: u64, n: usize,
+                       age_s: f64) -> bool {
+        let now = self.clock.now();
+        let q = &mut self.queues[qid.0];
+        if q.pending.saturating_add(n) > q.policy.max_pending
+            && q.policy.shed_on_full
+        {
+            q.shed += n as u64;
+            self.shed_requests += 1;
+            return false;
+        }
+        let t = now - age_s.max(0.0);
+        let dq = q.arrivals.entry(lane).or_default();
+        for _ in 0..n {
+            dq.push_back(t);
+        }
+        q.pending += n;
+        true
+    }
+
+    /// Report `n` sequences of `lane` entering slots (execution start).
+    /// Pops that lane's arrival stamps, updates the wait EWMA, counts
+    /// SLO violations, and hands each wait to `observe` (the coordinator
+    /// feeds its `queue_wait_s` histogram; the sim harness records waits
+    /// for exact assertions). Allocation-free with `n == 0` or a warm
+    /// lane.
+    pub fn placed(&mut self, qid: QueueId, lane: u64, n: usize,
+                  observe: impl FnMut(f64)) {
+        let now = self.clock.now();
+        self.placed_at(qid, lane, n, now, observe);
+    }
+
+    /// [`CrossQueueScheduler::placed`] with an explicit placement time:
+    /// placement happens at step *start* (backfill precedes the forward
+    /// pass), so the engine loop passes its pre-step clock reading rather
+    /// than billing the whole first step as queue wait.
+    pub fn placed_at(&mut self, qid: QueueId, lane: u64, n: usize,
+                     now: f64, mut observe: impl FnMut(f64)) {
+        if n == 0 {
+            return;
+        }
+        let alpha = self.wait_alpha;
+        let q = &mut self.queues[qid.0];
+        let mut drained = false;
+        if let Some(dq) = q.arrivals.get_mut(&lane) {
+            for _ in 0..n {
+                let t = dq.pop_front().unwrap_or(now);
+                let wait = (now - t).max(0.0);
+                q.wait_ewma = if q.waits_seen == 0 {
+                    wait
+                } else {
+                    (1.0 - alpha) * q.wait_ewma + alpha * wait
+                };
+                q.waits_seen += 1;
+                if let Some(slo) = q.policy.slo_p95_s {
+                    if wait > slo {
+                        q.slo_violations += 1;
+                        self.slo_violations += 1;
+                    }
+                }
+                observe(wait);
+            }
+            drained = dq.is_empty();
+        }
+        q.pending = q.pending.saturating_sub(n);
+        if drained {
+            q.arrivals.remove(&lane);
+        }
+    }
+
+    /// Roll back the `n` most recent admission stamps on `lane` without
+    /// observing waits (the coordinator uses this when a request was
+    /// optimistically admitted but its run queue could not be created).
+    pub fn cancel_enqueue(&mut self, qid: QueueId, lane: u64, n: usize) {
+        let q = &mut self.queues[qid.0];
+        let mut drained = false;
+        if let Some(dq) = q.arrivals.get_mut(&lane) {
+            for _ in 0..n {
+                dq.pop_back();
+            }
+            drained = dq.is_empty();
+        }
+        if drained {
+            q.arrivals.remove(&lane);
+        }
+        q.pending = q.pending.saturating_sub(n);
+    }
+
+    /// Charge one executed step of `qid` at its observed cost (seconds).
+    /// The engine loop reports wall time; the sim reports synthetic
+    /// costs. Boosted queues are charged at a discounted rate, which is
+    /// what converts SLO pressure into extra service share.
+    pub fn report_step(&mut self, qid: QueueId, cost_s: f64) {
+        let cost = cost_s.max(1e-12);
+        let boost = self.boost(qid.0);
+        self.cost_ewma = if self.cost_ewma == 0.0 {
+            cost
+        } else {
+            0.9 * self.cost_ewma + 0.1 * cost
+        };
+        let alpha = self.wait_alpha;
+        let q = &mut self.queues[qid.0];
+        q.steps += 1;
+        q.cost_total += cost;
+        q.vtime += cost / (q.policy.weight.max(1e-6) * boost);
+        if q.vtime > self.vnow {
+            self.vnow = q.vtime;
+        }
+        // SLO pressure must not freeze at its burst-time value: with no
+        // pending arrivals nothing is waiting, so the wait EWMA decays
+        // each served step instead of granting the boost indefinitely
+        // to a queue running only resident work.
+        if q.arrivals.is_empty() {
+            q.wait_ewma *= 1.0 - alpha;
+        }
+    }
+
+    /// Select the next queue to step among `ready` (queues with resident
+    /// or pending work). Deterministic, allocation-free. Returns `None`
+    /// iff `ready` is empty.
+    pub fn pick(&mut self, ready: &[QueueId]) -> Option<QueueId> {
+        if ready.is_empty() {
+            return None;
+        }
+        self.pick_gen += 1;
+        let cur_gen = self.pick_gen;
+
+        // Newly-ready catch-up: a queue that sat idle must re-enter at
+        // the ready frontier, not spend its parked entitlement as a
+        // burst. The frontier is the min vtime among continuously-ready
+        // queues (falling back to the global frontier).
+        let mut vfloor = f64::INFINITY;
+        for &QueueId(i) in ready {
+            let q = &self.queues[i];
+            if q.ready_gen + 1 == cur_gen {
+                vfloor = vfloor.min(q.vtime);
+            }
+        }
+        if !vfloor.is_finite() {
+            vfloor = self.vnow;
+        }
+        for &QueueId(i) in ready {
+            let q = &mut self.queues[i];
+            if q.ready_gen + 1 != cur_gen {
+                q.vtime = q.vtime.max(vfloor);
+                q.since_pick = 0;
+            }
+            q.ready_gen = cur_gen;
+        }
+
+        // Starvation backstop: a queue passed over starve_after rounds is
+        // served unconditionally (the most-starved one, ties to the
+        // lowest id).
+        let mut starved: Option<usize> = None;
+        for &QueueId(i) in ready {
+            let s = self.queues[i].since_pick;
+            let more_starved = match starved {
+                None => s >= self.starve_after,
+                Some(j) => s > self.queues[j].since_pick,
+            };
+            if more_starved {
+                starved = Some(i);
+            }
+        }
+
+        let chosen = match starved {
+            Some(i) => i,
+            None => {
+                // Burst bound: after max_consecutive back-to-back wins
+                // the incumbent yields to the best other ready queue.
+                let blocked = match self.last_pick {
+                    Some(lp)
+                        if ready.len() > 1
+                            && ready.contains(&QueueId(lp))
+                            && self.consecutive
+                                >= self.queues[lp].policy.max_consecutive =>
+                    {
+                        Some(lp)
+                    }
+                    _ => None,
+                };
+                let cost_ref = self.cost_ewma.max(1e-9);
+                let mut best: Option<(usize, f64)> = None;
+                for &QueueId(i) in ready {
+                    if Some(i) == blocked {
+                        continue;
+                    }
+                    let key = self.pick_key(i, cost_ref);
+                    match best {
+                        Some((_, bk)) if bk <= key => {}
+                        _ => best = Some((i, key)),
+                    }
+                }
+                best.expect("ready set non-empty").0
+            }
+        };
+
+        for &QueueId(i) in ready {
+            if i != chosen {
+                self.queues[i].since_pick += 1;
+            }
+        }
+        self.queues[chosen].since_pick = 0;
+        self.consecutive = if self.last_pick == Some(chosen) {
+            self.consecutive.saturating_add(1)
+        } else {
+            1
+        };
+        self.last_pick = Some(chosen);
+        Some(QueueId(chosen))
+    }
+
+    /// Pick ordering key: smaller wins. Base is the queue's vtime; a
+    /// queue blowing its SLO gets an immediate bonus proportional to how
+    /// far its wait EWMA overshoots, scaled by a typical step cost so the
+    /// bonus is commensurate with vtime increments.
+    fn pick_key(&self, i: usize, cost_ref: f64) -> f64 {
+        let q = &self.queues[i];
+        let pressure = match q.policy.slo_p95_s {
+            Some(slo) if q.wait_ewma > slo => {
+                (q.wait_ewma / slo - 1.0).min(self.max_boost - 1.0)
+                    * cost_ref
+            }
+            _ => 0.0,
+        };
+        q.vtime - pressure
+    }
+
+    /// SLO charge-rate boost of queue `i` (1.0 when within SLO).
+    fn boost(&self, i: usize) -> f64 {
+        let q = &self.queues[i];
+        match q.policy.slo_p95_s {
+            Some(slo) if q.wait_ewma > slo => {
+                (q.wait_ewma / slo).min(self.max_boost)
+            }
+            _ => 1.0,
+        }
+    }
+
+    // ---- observability ---------------------------------------------------
+
+    /// Entitlement lag of a queue in weighted seconds: how far behind the
+    /// ready frontier its consumed service is (>= 0; larger = more owed).
+    pub fn credit(&self, qid: QueueId) -> f64 {
+        (self.vnow - self.queues[qid.0].vtime).max(0.0)
+    }
+
+    pub fn wait_ewma(&self, qid: QueueId) -> f64 {
+        self.queues[qid.0].wait_ewma
+    }
+
+    pub fn pending_depth(&self, qid: QueueId) -> usize {
+        self.queues[qid.0].pending
+    }
+
+    pub fn steps_of(&self, qid: QueueId) -> u64 {
+        self.queues[qid.0].steps
+    }
+
+    /// Per-queue waits observed above this queue's SLO.
+    pub fn slo_violations_of(&self, qid: QueueId) -> u64 {
+        self.queues[qid.0].slo_violations
+    }
+
+    /// Per-queue sequences rejected by admission backpressure.
+    pub fn shed_of(&self, qid: QueueId) -> u64 {
+        self.queues[qid.0].shed
+    }
+
+    pub fn cost_of(&self, qid: QueueId) -> f64 {
+        self.queues[qid.0].cost_total
+    }
+
+    pub fn key_of(&self, qid: QueueId) -> &str {
+        &self.queues[qid.0].key
+    }
+
+    pub fn policy_of(&self, qid: QueueId) -> &QueuePolicy {
+        &self.queues[qid.0].policy
+    }
+
+    pub fn n_queues(&self) -> usize {
+        self.queues.len()
+    }
+
+    /// Total waits observed above their queue's SLO.
+    pub fn slo_violations(&self) -> u64 {
+        self.slo_violations
+    }
+
+    /// Total requests rejected by admission backpressure.
+    pub fn shed_requests(&self) -> u64 {
+        self.shed_requests
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::simclock::SimClock;
+
+    fn sched(cfg: &SchedConfig) -> (SimClock, CrossQueueScheduler) {
+        let clock = SimClock::new();
+        let s = CrossQueueScheduler::new(Box::new(clock.clone()), cfg);
+        (clock, s)
+    }
+
+    fn policy(weight: f64) -> QueuePolicy {
+        QueuePolicy { weight, ..QueuePolicy::default() }
+    }
+
+    #[test]
+    fn register_reuses_by_key_and_updates_policy() {
+        let (_c, mut s) = sched(&SchedConfig::default());
+        let a = s.register("a", policy(1.0));
+        let b = s.register("b", policy(2.0));
+        assert_ne!(a, b);
+        let a2 = s.register("a", policy(3.0));
+        assert_eq!(a, a2);
+        assert_eq!(s.n_queues(), 2);
+        assert_eq!(s.key_of(a), "a");
+    }
+
+    #[test]
+    fn weighted_shares_converge_under_equal_costs() {
+        let (_c, mut s) = sched(&SchedConfig::default());
+        let a = s.register("a", policy(3.0));
+        let b = s.register("b", policy(1.0));
+        let ready = [a, b];
+        let mut picks = [0u64; 2];
+        for _ in 0..400 {
+            let q = s.pick(&ready).unwrap();
+            picks[q.0] += 1;
+            s.report_step(q, 0.01);
+        }
+        let ratio = picks[0] as f64 / picks[1] as f64;
+        assert!(
+            (ratio - 3.0).abs() < 0.3,
+            "3:1 weights gave step ratio {ratio} ({picks:?})"
+        );
+    }
+
+    #[test]
+    fn time_shares_follow_weights_under_unequal_costs() {
+        // Queue a's steps cost 4x queue b's; equal weights must still
+        // split *time* roughly evenly, i.e. b steps ~4x as often.
+        let (_c, mut s) = sched(&SchedConfig::default());
+        let a = s.register("a", policy(1.0));
+        let b = s.register("b", policy(1.0));
+        let ready = [a, b];
+        for _ in 0..500 {
+            let q = s.pick(&ready).unwrap();
+            s.report_step(q, if q == a { 0.04 } else { 0.01 });
+        }
+        let share_a = s.cost_of(a) / (s.cost_of(a) + s.cost_of(b));
+        assert!(
+            (share_a - 0.5).abs() < 0.1,
+            "equal weights gave time share {share_a}"
+        );
+        assert!(s.steps_of(b) > 3 * s.steps_of(a));
+    }
+
+    #[test]
+    fn slo_pressure_wins_the_pick_and_counts_violations() {
+        let (clock, mut s) = sched(&SchedConfig::default());
+        let a = s.register("bulk", policy(1.0));
+        let slo = QueuePolicy {
+            slo_p95_s: Some(0.01),
+            ..QueuePolicy::default()
+        };
+        let b = s.register("latency", slo);
+        // One sequence waits 0.1s before placement: EWMA blows the SLO.
+        assert!(s.try_enqueue(b, 0, 1, 0.0));
+        clock.advance(0.1);
+        let mut waits = 0;
+        s.placed(b, 0, 1, |w| {
+            assert!((w - 0.1).abs() < 1e-12);
+            waits += 1;
+        });
+        assert_eq!(waits, 1);
+        assert_eq!(s.slo_violations(), 1);
+        assert_eq!(s.slo_violations_of(b), 1);
+        assert_eq!(s.slo_violations_of(a), 0);
+        assert!(s.wait_ewma(b) > 0.05);
+        // Fresh vtimes tie at 0; the SLO-violating queue must win it.
+        assert_eq!(s.pick(&[a, b]), Some(b));
+    }
+
+    #[test]
+    fn slo_pressure_decays_without_pending_work() {
+        let (clock, mut s) = sched(&SchedConfig::default());
+        let b = s.register("latency", QueuePolicy {
+            slo_p95_s: Some(0.01),
+            ..QueuePolicy::default()
+        });
+        assert!(s.try_enqueue(b, 0, 1, 0.0));
+        clock.advance(0.5);
+        s.placed(b, 0, 1, |_| {});
+        assert!(s.wait_ewma(b) > 0.01, "EWMA must be blown");
+        // Resident-only service (no pending arrivals): the pressure
+        // relaxes instead of granting the boost forever.
+        for _ in 0..60 {
+            s.report_step(b, 0.01);
+        }
+        assert!(
+            s.wait_ewma(b) < 0.01,
+            "EWMA {} must decay below the SLO",
+            s.wait_ewma(b)
+        );
+    }
+
+    #[test]
+    fn burst_bound_forces_interleave() {
+        let cfg = SchedConfig::default();
+        let (_c, mut s) = sched(&cfg);
+        let a = s.register("heavy", QueuePolicy {
+            weight: 100.0,
+            max_consecutive: 2,
+            ..QueuePolicy::default()
+        });
+        let b = s.register("light", policy(1.0));
+        let ready = [a, b];
+        let mut run = 0u32;
+        let mut max_run = 0u32;
+        for _ in 0..100 {
+            let q = s.pick(&ready).unwrap();
+            s.report_step(q, 0.01);
+            if q == a {
+                run += 1;
+                max_run = max_run.max(run);
+            } else {
+                run = 0;
+            }
+        }
+        assert!(max_run <= 2, "run of {max_run} exceeds burst bound");
+    }
+
+    #[test]
+    fn starvation_backstop_bounds_pick_gaps() {
+        let cfg = SchedConfig { starve_after: 4, ..SchedConfig::default() };
+        let (_c, mut s) = sched(&cfg);
+        let a = s.register("a", QueuePolicy {
+            weight: 1000.0,
+            max_consecutive: u32::MAX,
+            ..QueuePolicy::default()
+        });
+        let b = s.register("b", policy(0.001));
+        let ready = [a, b];
+        let mut gap = 0u64;
+        let mut max_gap = 0u64;
+        for _ in 0..200 {
+            let q = s.pick(&ready).unwrap();
+            s.report_step(q, 0.01);
+            if q == b {
+                gap = 0;
+            } else {
+                gap += 1;
+                max_gap = max_gap.max(gap);
+            }
+        }
+        assert!(
+            max_gap <= cfg.starve_after + 1,
+            "queue b starved for {max_gap} rounds"
+        );
+    }
+
+    #[test]
+    fn shed_policy_bounds_pending_depth() {
+        let (_c, mut s) = sched(&SchedConfig::default());
+        let a = s.register("a", QueuePolicy {
+            max_pending: 2,
+            shed_on_full: true,
+            ..QueuePolicy::default()
+        });
+        assert!(s.try_enqueue(a, 0, 2, 0.0));
+        assert!(!s.try_enqueue(a, 0, 1, 0.0));
+        assert_eq!(s.shed_requests(), 1);
+        assert_eq!(s.shed_of(a), 1);
+        assert_eq!(s.pending_depth(a), 2);
+        // Queue-on-full policy admits past the bound instead.
+        let b = s.register("b", QueuePolicy {
+            max_pending: 1,
+            shed_on_full: false,
+            ..QueuePolicy::default()
+        });
+        assert!(s.try_enqueue(b, 0, 5, 0.0));
+        assert_eq!(s.pending_depth(b), 5);
+        assert_eq!(s.shed_requests(), 1);
+    }
+
+    #[test]
+    fn newly_ready_queue_rejoins_at_the_frontier() {
+        let (_c, mut s) = sched(&SchedConfig::default());
+        let a = s.register("a", policy(1.0));
+        let b = s.register("b", policy(1.0));
+        // b runs alone for a while: its vtime races ahead of idle a.
+        for _ in 0..50 {
+            let q = s.pick(&[b]).unwrap();
+            s.report_step(q, 0.01);
+        }
+        assert!(s.credit(a) > 0.4, "idle queue accrued lag {}", s.credit(a));
+        // When a becomes ready it is caught up: it gets priority once
+        // (its vtime equals the floor, tie-break by id), but not a
+        // monopolizing burst — b is served again within its burst bound.
+        let ready = [a, b];
+        let mut first_b = None;
+        for round in 0..10 {
+            let q = s.pick(&ready).unwrap();
+            s.report_step(q, 0.01);
+            if q == b {
+                first_b = Some(round);
+                break;
+            }
+        }
+        let first_b = first_b.expect("b starved after a rejoined");
+        assert!(
+            first_b <= 4,
+            "rejoining queue burst for {first_b} rounds"
+        );
+    }
+
+    #[test]
+    fn lanes_pair_waits_exactly_across_siblings() {
+        // Two lanes of one queue backlogged concurrently: each
+        // placement must pop its OWN lane's stamp, not the queue-global
+        // oldest — otherwise a late-arriving sibling inherits the early
+        // lane's wait (spurious SLO violation) and the early lane's
+        // wait is undercounted.
+        let (clock, mut s) = sched(&SchedConfig::default());
+        let q = s.register("m", QueuePolicy {
+            slo_p95_s: Some(5.0),
+            ..QueuePolicy::default()
+        });
+        assert!(s.try_enqueue(q, 1, 1, 0.0)); // lane 1 arrives at t=0
+        clock.advance(10.0);
+        assert!(s.try_enqueue(q, 2, 1, 0.0)); // lane 2 arrives at t=10
+        assert_eq!(s.pending_depth(q), 2);
+        // Lane 2 places immediately: wait must be 0, not 10.
+        let mut w2 = f64::NAN;
+        s.placed(q, 2, 1, |w| w2 = w);
+        assert_eq!(w2, 0.0);
+        assert_eq!(s.slo_violations(), 0, "no spurious violation");
+        // Lane 1 places at t=30: wait must be the full 30.
+        clock.advance(20.0);
+        let mut w1 = f64::NAN;
+        s.placed(q, 1, 1, |w| w1 = w);
+        assert!((w1 - 30.0).abs() < 1e-12, "wait {w1}");
+        assert_eq!(s.slo_violations(), 1);
+        assert_eq!(s.pending_depth(q), 0);
+    }
+
+    #[test]
+    fn cancel_enqueue_rolls_back_admission() {
+        let (clock, mut s) = sched(&SchedConfig::default());
+        let a = s.register("a", policy(1.0));
+        assert!(s.try_enqueue(a, 0, 2, 0.0));
+        clock.advance(1.0);
+        assert!(s.try_enqueue(a, 7, 3, 0.0));
+        s.cancel_enqueue(a, 7, 3);
+        assert_eq!(s.pending_depth(a), 2);
+        // The surviving lane-0 stamps still pair correctly.
+        let mut seen = 0;
+        s.placed(a, 0, 2, |w| {
+            assert!((w - 1.0).abs() < 1e-12, "wait {w}");
+            seen += 1;
+        });
+        assert_eq!(seen, 2);
+        assert_eq!(s.pending_depth(a), 0);
+    }
+
+    #[test]
+    fn age_backdates_arrivals() {
+        let (clock, mut s) = sched(&SchedConfig::default());
+        let a = s.register("a", policy(1.0));
+        clock.advance(1.0);
+        // The request spent 0.3s in the channel before the engine saw it.
+        assert!(s.try_enqueue(a, 0, 1, 0.3));
+        clock.advance(0.2);
+        let mut got = f64::NAN;
+        s.placed(a, 0, 1, |w| got = w);
+        assert!((got - 0.5).abs() < 1e-12, "wait {got}");
+    }
+
+    #[test]
+    fn policy_spec_parsing() {
+        let mut p = QueuePolicy::default();
+        p.apply_spec("weight:4, slo:0.05, burst:2, pending:64, shed")
+            .unwrap();
+        assert_eq!(p.weight, 4.0);
+        assert_eq!(p.slo_p95_s, Some(0.05));
+        assert_eq!(p.max_consecutive, 2);
+        assert_eq!(p.max_pending, 64);
+        assert!(p.shed_on_full);
+        p.apply_spec("queue").unwrap();
+        assert!(!p.shed_on_full);
+        assert!(p.apply_spec("weight:-1").is_err());
+        assert!(p.apply_spec("weight:inf").is_err());
+        assert!(p.apply_spec("slo:inf").is_err());
+        assert!(p.apply_spec("burst:0").is_err());
+        assert!(p.apply_spec("pending:0").is_err());
+        assert!(p.apply_spec("wat:3").is_err());
+        assert!(p.apply_spec("shedd").is_err());
+    }
+
+    #[test]
+    fn sched_config_cli_and_resolution() {
+        let mut cfg = SchedConfig::default();
+        cfg.apply_cli("pending:128,shed; owt=weight:4,slo:0.02; gpt2=weight:1")
+            .unwrap();
+        assert_eq!(cfg.default_policy.max_pending, 128);
+        assert!(cfg.default_policy.shed_on_full);
+        let owt = cfg.resolve("owt");
+        assert_eq!(owt.weight, 4.0);
+        assert_eq!(owt.slo_p95_s, Some(0.02));
+        // Per-model overrides layer on the default active when applied.
+        assert_eq!(owt.max_pending, 128);
+        assert!(owt.shed_on_full);
+        let other = cfg.resolve("unknown");
+        assert_eq!(other.weight, 1.0);
+        assert_eq!(other.max_pending, 128);
+        assert!(cfg.apply_cli("owt=weight:zero").is_err());
+        // Order independence: default edits apply before overrides no
+        // matter where they appear in the spec.
+        let mut flipped = SchedConfig::default();
+        flipped
+            .apply_cli("owt=weight:4,slo:0.02; gpt2=weight:1; pending:128,shed")
+            .unwrap();
+        assert_eq!(flipped.resolve("owt"), cfg.resolve("owt"));
+        assert_eq!(flipped.resolve("gpt2"), cfg.resolve("gpt2"));
+    }
+}

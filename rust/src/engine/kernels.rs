@@ -477,6 +477,66 @@ mod tests {
         );
     }
 
+    /// Lump bins whose expected count is tiny into one tail bucket so
+    /// the chi-square approximation holds at sharp temperatures (shared
+    /// with the residual-distribution test below).
+    fn lump_small_bins(counts: &[usize], probs: &[f64], n: usize)
+                       -> (Vec<usize>, Vec<f64>) {
+        let mut big_c = Vec::new();
+        let mut big_p = Vec::new();
+        let mut tail_c = 0usize;
+        let mut tail_p = 0.0;
+        for i in 0..probs.len() {
+            if probs[i] * n as f64 >= 10.0 {
+                big_c.push(counts[i]);
+                big_p.push(probs[i]);
+            } else {
+                tail_c += counts[i];
+                tail_p += probs[i];
+            }
+        }
+        if tail_p > 0.0 {
+            big_c.push(tail_c);
+            big_p.push(tail_p);
+        }
+        (big_c, big_p)
+    }
+
+    /// Coverage at the temperature extremes and the V=2 edge (the paper's
+    /// temperatures 0.7/1.0 are covered above): the Gumbel-max draw must
+    /// match the old materialized-softmax distribution at T=0.3 (sharp)
+    /// and T=2.0 (flat), on binary and word-sized vocabularies alike.
+    #[test]
+    fn draw_matches_softmax_at_temperature_extremes() {
+        for (case, &temp) in [0.3_f64, 2.0].iter().enumerate() {
+            for &v in &[2usize, 27] {
+                let mut rng =
+                    Pcg::new(0x7e3a + 31 * case as u64 + v as u64);
+                // Moderate logit scale at V=2 keeps both bins populated
+                // even at T=0.3 (the lumping below has nothing to lump
+                // into on a binary vocabulary).
+                let scale = if v == 2 { 1.0 } else { 3.0 };
+                let row = random_row(&mut rng, v, scale);
+                let probs = old_probs(&row, temp);
+                let n = 200_000;
+                let mut counts = vec![0usize; v];
+                let inv_t = (1.0 / temp) as f32;
+                for _ in 0..n {
+                    counts
+                        [gumbel_draw_lse(&row, inv_t, rng.next_u64()).0] +=
+                        1;
+                }
+                let (big_c, big_p) = lump_small_bins(&counts, &probs, n);
+                let chi2 = chi_square(&big_c, &big_p);
+                let crit = chi_square_crit(big_c.len().saturating_sub(1));
+                assert!(
+                    chi2 < crit,
+                    "T={temp} V={v}: chi2 {chi2:.1} >= crit {crit:.1}"
+                );
+            }
+        }
+    }
+
     /// The log-space accept probability must match the old
     /// probability-domain ratio numerically (not just statistically).
     #[test]
@@ -533,23 +593,7 @@ mod tests {
         }
         // Lump near-empty residual bins into one tail bucket so the
         // chi-square approximation holds.
-        let mut big_counts = Vec::new();
-        let mut big_probs = Vec::new();
-        let mut tail_c = 0usize;
-        let mut tail_p = 0.0;
-        for i in 0..v {
-            if res[i] * n as f64 >= 10.0 {
-                big_counts.push(counts[i]);
-                big_probs.push(res[i]);
-            } else {
-                tail_c += counts[i];
-                tail_p += res[i];
-            }
-        }
-        if tail_p > 0.0 {
-            big_counts.push(tail_c);
-            big_probs.push(tail_p);
-        }
+        let (big_counts, big_probs) = lump_small_bins(&counts, &res, n);
         let chi2 = chi_square(&big_counts, &big_probs);
         let crit = chi_square_crit(big_counts.len() - 1);
         assert!(chi2 < crit, "chi2 {chi2:.1} >= crit {crit:.1}");

@@ -54,6 +54,8 @@ fn print_help() {
          USAGE: ssmd <command> [--flags]\n\n\
          COMMANDS:\n\
          \x20 serve     --artifacts DIR --addr 127.0.0.1:8080 [--models a,b]\n\
+         \x20           [--queue-policy \"pending:256,shed;m=weight:4,\n\
+         \x20           slo:0.05,burst:2\"] (weighted SLO-aware scheduling)\n\
          \x20 generate  --artifacts DIR --model NAME [--n 4] [--sampler\n\
          \x20           speculative|mdm] [--window cosine:0.05] [--n-verify 1]\n\
          \x20           [--steps 64] [--seed 0] [--decode text8]\n\
@@ -96,10 +98,22 @@ fn start_coordinator(args: &Args) -> Result<Coordinator> {
     let only = args
         .opt_str("models")
         .map(|s| s.split(',').map(|x| x.trim().to_string()).collect());
+    // Cross-queue scheduling policies, e.g.
+    //   --queue-policy "pending:256,shed; owt=weight:4,slo:0.05"
+    // (`;`-separated entries; `model=opts` overrides, bare opts edit the
+    // default policy; opts are weight:W, slo:S, burst:N, pending:N,
+    // shed | queue).
+    let mut sched = ssmd::coordinator::SchedConfig::default();
+    if let Some(spec) = args.opt_str("queue-policy") {
+        sched
+            .apply_cli(&spec)
+            .map_err(|e| anyhow!("--queue-policy: {e}"))?;
+    }
     Coordinator::start(
         model_factory(artifacts, only),
         BatcherConfig {
             max_wait: Duration::from_millis(args.u64("batch-wait-ms", 5)),
+            sched,
         },
     )
 }

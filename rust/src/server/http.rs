@@ -62,6 +62,7 @@ impl Response {
             200 => "OK",
             400 => "Bad Request",
             404 => "Not Found",
+            429 => "Too Many Requests",
             500 => "Internal Server Error",
             _ => "Status",
         };

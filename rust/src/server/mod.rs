@@ -119,7 +119,25 @@ impl Server {
         };
         match self.coordinator.generate(gen_req) {
             Ok(resp) => Response::json(200, &resp.to_json()),
-            Err(e) => Response::error(500, &e.to_string()),
+            Err(e) => {
+                let msg = e.to_string();
+                // Admission-backpressure sheds are overload, not server
+                // faults: surface 429 so load balancers / retry
+                // middleware back off instead of treating the engine as
+                // crashed. The shed path is recognized by the shared
+                // `SHED_ERROR_SUFFIX` constant (the vendored anyhow shim
+                // has no typed variants); client-echoed values in other
+                // errors are always single-quoted, so they cannot forge
+                // the suffix.
+                let status =
+                    if msg.ends_with(crate::coordinator::SHED_ERROR_SUFFIX)
+                    {
+                        429
+                    } else {
+                        500
+                    };
+                Response::error(status, &msg)
+            }
         }
     }
 
@@ -157,7 +175,10 @@ mod tests {
                 );
                 Ok(m)
             },
-            BatcherConfig { max_wait: Duration::from_millis(1) },
+            BatcherConfig {
+                max_wait: Duration::from_millis(1),
+                ..Default::default()
+            },
         )
         .unwrap();
         Server::new(c)
@@ -210,6 +231,42 @@ mod tests {
         assert_eq!(r.status, 200, "{}", String::from_utf8_lossy(&r.body));
         let v = Json::parse(&String::from_utf8_lossy(&r.body)).unwrap();
         assert!(v.get("log_likelihood").unwrap().as_f64().unwrap() < 0.0);
+    }
+
+    #[test]
+    fn shed_requests_get_429() {
+        use crate::coordinator::{QueuePolicy, SchedConfig};
+        let mut sched = SchedConfig::default();
+        // Depth bound 1 with shed: a 3-sample request can never fit and
+        // is rejected deterministically even on an idle engine.
+        sched.per_model.insert("mock".into(), QueuePolicy {
+            max_pending: 1,
+            shed_on_full: true,
+            ..QueuePolicy::default()
+        });
+        let c = Coordinator::start(
+            || {
+                let mut m: ModelMap = BTreeMap::new();
+                m.insert(
+                    "mock".into(),
+                    Box::new(MockModel::new(8, 4, 5)) as Box<dyn EngineModel>,
+                );
+                Ok(m)
+            },
+            BatcherConfig {
+                max_wait: Duration::from_millis(1),
+                sched,
+            },
+        )
+        .unwrap();
+        let s = Server::new(c);
+        let r = s.route(&post("/generate", r#"{"model":"mock","n":3}"#));
+        assert_eq!(r.status, 429, "{}", String::from_utf8_lossy(&r.body));
+        assert!(String::from_utf8_lossy(&r.body).contains("shed"));
+        // Within the bound, admission (and the request) still succeeds.
+        let ok = s.route(&post("/generate", r#"{"model":"mock","n":1}"#));
+        assert_eq!(ok.status, 200, "{}",
+                   String::from_utf8_lossy(&ok.body));
     }
 
     #[test]

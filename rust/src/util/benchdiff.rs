@@ -1,0 +1,270 @@
+//! Bench trend diffing: compare a `BENCH_<target>.json` artifact (see
+//! [`crate::util::bench::write_json`]) against a committed baseline
+//! snapshot and flag mean-time regressions.
+//!
+//! Driven by `cargo run --example bench_trend`, which exits nonzero when
+//! any benchmark's mean regressed more than the threshold (default 20%)
+//! or a benchmark disappeared. Two honesty rules:
+//!
+//! * wall-clock comparisons only count when **neither** side is a smoke
+//!   run (`BENCH_SMOKE=1` collapses to one iteration — artifact
+//!   plumbing, not measurement; the JSON carries a `smoke` flag for
+//!   exactly this decision);
+//! * the free-form `extra` scalars (row counts, speedup ratios, …) are
+//!   deterministic workload facts on several benches, so they are
+//!   diffed and reported regardless of smoke state — they just don't
+//!   gate, because their improvement direction is bench-specific.
+
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// One benchmark present on both sides.
+#[derive(Clone, Debug)]
+pub struct Delta {
+    pub name: String,
+    pub base: f64,
+    pub cur: f64,
+}
+
+impl Delta {
+    /// Fractional change (+0.25 = 25% higher than baseline).
+    pub fn change(&self) -> f64 {
+        if self.base == 0.0 {
+            if self.cur == 0.0 { 0.0 } else { f64::INFINITY }
+        } else {
+            self.cur / self.base - 1.0
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct DiffReport {
+    pub target: String,
+    pub base_smoke: bool,
+    pub cur_smoke: bool,
+    /// Per-benchmark mean_s comparison (both sides).
+    pub deltas: Vec<Delta>,
+    /// Top-level `extra` scalar comparison (both sides).
+    pub extra_deltas: Vec<Delta>,
+    /// Benchmarks in the baseline missing from the current run.
+    pub missing_in_current: Vec<String>,
+    /// Benchmarks new in the current run (informational).
+    pub new_in_current: Vec<String>,
+    /// Extra scalars present only in the baseline (informational: e.g.
+    /// timing-derived extras are deliberately omitted from smoke runs).
+    pub missing_extras: Vec<String>,
+}
+
+impl DiffReport {
+    /// Wall-clock numbers are trustworthy on both sides.
+    pub fn comparable(&self) -> bool {
+        !self.base_smoke && !self.cur_smoke
+    }
+
+    /// Mean-time regressions beyond `threshold` (fractional, e.g. 0.2).
+    /// Empty when either side is a smoke run.
+    pub fn regressions(&self, threshold: f64) -> Vec<&Delta> {
+        if !self.comparable() {
+            return Vec::new();
+        }
+        self.deltas.iter().filter(|d| d.change() > threshold).collect()
+    }
+}
+
+/// (name, mean_s) pairs of a `BENCH_*.json` document.
+fn results_of(v: &Json) -> Result<Vec<(String, f64)>, String> {
+    let arr = v
+        .get("results")
+        .and_then(|r| r.as_arr())
+        .ok_or("missing 'results' array")?;
+    let mut out = Vec::new();
+    for r in arr {
+        let name = r
+            .get("name")
+            .and_then(|n| n.as_str())
+            .ok_or("result missing 'name'")?
+            .to_string();
+        let mean = r
+            .get("mean_s")
+            .and_then(|m| m.as_f64())
+            .ok_or("result missing 'mean_s'")?;
+        out.push((name, mean));
+    }
+    Ok(out)
+}
+
+/// Top-level scalar `extra` fields (everything numeric that is not part
+/// of the fixed schema).
+fn extras_of(v: &Json) -> Vec<(String, f64)> {
+    match v.as_obj() {
+        Some(fields) => fields
+            .iter()
+            .filter(|(k, _)| {
+                let k = k.as_str();
+                k != "target" && k != "smoke" && k != "results"
+            })
+            .filter_map(|(k, val)| val.as_f64().map(|x| (k.clone(), x)))
+            .collect(),
+        None => Vec::new(),
+    }
+}
+
+/// Diff a current artifact against its baseline.
+pub fn diff(baseline: &Json, current: &Json) -> Result<DiffReport, String> {
+    let target = current
+        .get("target")
+        .and_then(|t| t.as_str())
+        .unwrap_or("?")
+        .to_string();
+    let smoke =
+        |v: &Json| v.get("smoke").and_then(|s| s.as_bool()).unwrap_or(false);
+    let base = results_of(baseline)?;
+    let cur = results_of(current)?;
+    let mut deltas = Vec::new();
+    let mut missing = Vec::new();
+    for (name, b) in &base {
+        match cur.iter().find(|(n, _)| n == name) {
+            Some((_, c)) => deltas.push(Delta {
+                name: name.clone(),
+                base: *b,
+                cur: *c,
+            }),
+            None => missing.push(name.clone()),
+        }
+    }
+    let new_in_current = cur
+        .iter()
+        .filter(|(n, _)| !base.iter().any(|(bn, _)| bn == n))
+        .map(|(n, _)| n.clone())
+        .collect();
+    let base_extra = extras_of(baseline);
+    let cur_extra = extras_of(current);
+    let extra_deltas = cur_extra
+        .iter()
+        .filter_map(|(name, c)| {
+            base_extra
+                .iter()
+                .find(|(bn, _)| bn == name)
+                .map(|(_, b)| Delta { name: name.clone(), base: *b, cur: *c })
+        })
+        .collect();
+    let missing_extras = base_extra
+        .iter()
+        .filter(|(bn, _)| !cur_extra.iter().any(|(cn, _)| cn == bn))
+        .map(|(n, _)| n.clone())
+        .collect();
+    Ok(DiffReport {
+        target,
+        base_smoke: smoke(baseline),
+        cur_smoke: smoke(current),
+        deltas,
+        extra_deltas,
+        missing_in_current: missing,
+        new_in_current,
+        missing_extras,
+    })
+}
+
+/// Read and parse one artifact.
+pub fn load(path: &Path) -> Result<Json, String> {
+    let body = std::fs::read_to_string(path)
+        .map_err(|e| format!("read {}: {e}", path.display()))?;
+    Json::parse(&body).map_err(|e| format!("parse {}: {e}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifact(smoke: bool, results: &[(&str, f64)],
+                extras: &[(&str, f64)]) -> Json {
+        let mut s = format!(
+            r#"{{"target":"t","smoke":{smoke},"results":["#
+        );
+        for (i, (n, m)) in results.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(r#"{{"name":"{n}","mean_s":{m}}}"#));
+        }
+        s.push(']');
+        for (k, v) in extras {
+            s.push_str(&format!(r#","{k}":{v}"#));
+        }
+        s.push('}');
+        Json::parse(&s).unwrap()
+    }
+
+    #[test]
+    fn flags_regressions_over_threshold() {
+        let base = artifact(false, &[("a", 1.0), ("b", 1.0)], &[]);
+        let cur = artifact(false, &[("a", 1.15), ("b", 1.30)], &[]);
+        let rep = diff(&base, &cur).unwrap();
+        assert!(rep.comparable());
+        let regs = rep.regressions(0.20);
+        assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].name, "b");
+        assert!((regs[0].change() - 0.30).abs() < 1e-12);
+        assert!(rep.regressions(0.40).is_empty());
+    }
+
+    #[test]
+    fn smoke_runs_never_gate_on_wall_time() {
+        let base = artifact(true, &[("a", 1.0)], &[]);
+        let cur = artifact(false, &[("a", 99.0)], &[]);
+        let rep = diff(&base, &cur).unwrap();
+        assert!(!rep.comparable());
+        assert!(rep.regressions(0.2).is_empty());
+        // ... and symmetrically for a smoke current run.
+        let rep = diff(&artifact(false, &[("a", 1.0)], &[]),
+                       &artifact(true, &[("a", 99.0)], &[]))
+            .unwrap();
+        assert!(rep.regressions(0.2).is_empty());
+    }
+
+    #[test]
+    fn tracks_missing_and_new_benches() {
+        let base = artifact(false, &[("kept", 1.0), ("gone", 1.0)], &[]);
+        let cur = artifact(false, &[("kept", 1.0), ("fresh", 1.0)], &[]);
+        let rep = diff(&base, &cur).unwrap();
+        assert_eq!(rep.missing_in_current, vec!["gone".to_string()]);
+        assert_eq!(rep.new_in_current, vec!["fresh".to_string()]);
+        assert_eq!(rep.deltas.len(), 1);
+    }
+
+    #[test]
+    fn extras_diff_even_under_smoke() {
+        let base = artifact(true, &[("a", 1.0)],
+                            &[("row_steps", 100.0), ("speedup", 8.0)]);
+        let cur = artifact(true, &[("a", 1.0)],
+                           &[("row_steps", 150.0)]);
+        let rep = diff(&base, &cur).unwrap();
+        assert_eq!(rep.extra_deltas.len(), 1);
+        let rs = rep
+            .extra_deltas
+            .iter()
+            .find(|d| d.name == "row_steps")
+            .unwrap();
+        assert!((rs.change() - 0.5).abs() < 1e-12);
+        // An extra present only in the baseline (e.g. a timing-derived
+        // value a smoke run deliberately omits) is surfaced, not lost.
+        assert_eq!(rep.missing_extras, vec!["speedup".to_string()]);
+    }
+
+    #[test]
+    fn rejects_malformed_artifacts() {
+        let bad = Json::parse(r#"{"target":"t"}"#).unwrap();
+        let good = artifact(false, &[("a", 1.0)], &[]);
+        assert!(diff(&bad, &good).is_err());
+        assert!(diff(&good, &bad).is_err());
+    }
+
+    #[test]
+    fn zero_baseline_change_is_safe() {
+        let d = Delta { name: "x".into(), base: 0.0, cur: 0.0 };
+        assert_eq!(d.change(), 0.0);
+        let d = Delta { name: "x".into(), base: 0.0, cur: 1.0 };
+        assert!(d.change().is_infinite());
+    }
+}

@@ -4,7 +4,9 @@
 
 pub mod args;
 pub mod bench;
+pub mod benchdiff;
 pub mod json;
 pub mod metrics;
 pub mod ptest;
 pub mod rng;
+pub mod simclock;

@@ -98,6 +98,36 @@ mod tests {
         assert!((chi_square_crit(999) - 1173.0).abs() < 25.0);
     }
 
+    /// Power demonstration: an actual sampler drawing from a
+    /// deliberately skewed distribution must overshoot `chi_square_crit`
+    /// by a wide margin when tested against the distribution it was
+    /// *supposed* to follow. The equivalence tests elsewhere only ever
+    /// pass-on-match; this pins that the statistic would actually catch
+    /// a wrong sampler (expected chi2 here is ~n·Σ(q-p)²/p ≈ 1260,
+    /// ~70x the 99.99% critical value for df=2).
+    #[test]
+    fn chi_square_rejects_deliberately_skewed_sampler() {
+        let probs = [0.5, 0.3, 0.2]; // what the sampler should emit
+        let skewed = [0.56, 0.3, 0.14]; // what it actually emits
+        let mut rng = Pcg::new(0x5ca1ed);
+        let n = 50_000;
+        let mut counts = [0usize; 3];
+        for _ in 0..n {
+            counts[rng.categorical(&skewed)] += 1;
+        }
+        let chi2 = chi_square(&counts, &probs);
+        let crit = chi_square_crit(2);
+        assert!(
+            chi2 > 5.0 * crit,
+            "skewed sampler must be rejected decisively: chi2 {chi2:.1} \
+             vs crit {crit:.1}"
+        );
+        // And the same draws pass against their true distribution, so
+        // the rejection above is the skew, not the harness.
+        let chi2_true = chi_square(&counts, &skewed);
+        assert!(chi2_true < crit, "{chi2_true:.1} >= {crit:.1}");
+    }
+
     #[test]
     fn passes_trivially_true_property() {
         check(

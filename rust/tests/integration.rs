@@ -28,7 +28,10 @@ fn coordinator(seq_len: usize, vocab: usize) -> Coordinator {
                      Box::new(draft_only) as Box<dyn EngineModel>);
             Ok(m)
         },
-        BatcherConfig { max_wait: Duration::from_millis(2) },
+        BatcherConfig {
+            max_wait: Duration::from_millis(2),
+            ..Default::default()
+        },
     )
     .unwrap()
 }
