@@ -16,9 +16,10 @@
 //! sample. The row-step assertion guards the scheduling win even on noisy
 //! machines.
 
+use std::sync::Arc;
 use std::time::Instant;
 
-use ssmd::engine::{SeqParams, SpecParams, SpecScheduler};
+use ssmd::engine::{SeqParams, SpecParams, SpecScheduler, StepPool};
 use ssmd::engine::{MockModel, Prompt};
 use ssmd::util::bench::{fmt_duration, write_json, BenchResult};
 use ssmd::util::rng::Pcg;
@@ -50,6 +51,17 @@ fn model() -> MockModel {
     m
 }
 
+/// Planar-phase executor width (STEP_THREADS env; CI runs a 2-thread
+/// smoke leg). Results are bitwise identical for any value — the
+/// deterministic row-step counters below must not move across legs.
+fn step_threads() -> usize {
+    std::env::var("STEP_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1)
+        .max(1)
+}
+
 struct RunStats {
     mean_wall_per_sample_s: f64,
     total_wall_s: f64,
@@ -60,7 +72,8 @@ struct RunStats {
 
 /// Blocking: bucket-sized waves, each driven to completion before the
 /// next wave is admitted (no cross-wave backfill).
-fn run_blocking(prompts: &[Prompt], params: &SpecParams) -> RunStats {
+fn run_blocking(prompts: &[Prompt], params: &SpecParams,
+                pool: &Arc<StepPool>) -> RunStats {
     let m = model();
     let mut rng = Pcg::new(1);
     let start = Instant::now();
@@ -70,6 +83,7 @@ fn run_blocking(prompts: &[Prompt], params: &SpecParams) -> RunStats {
     let mut steps = 0;
     for wave in prompts.chunks(BUCKET) {
         let mut sched = SpecScheduler::for_model(&m);
+        sched.set_pool(pool.clone());
         for p in wave {
             sched.admit(p, SeqParams::Spec(params.clone()), rng.split());
         }
@@ -94,10 +108,12 @@ fn run_blocking(prompts: &[Prompt], params: &SpecParams) -> RunStats {
 
 /// Continuous: one scheduler, whole workload admitted up front, retired
 /// slots backfilled from the pending queue every step.
-fn run_continuous(prompts: &[Prompt], params: &SpecParams) -> RunStats {
+fn run_continuous(prompts: &[Prompt], params: &SpecParams,
+                  pool: &Arc<StepPool>) -> RunStats {
     let m = model();
     let mut rng = Pcg::new(1);
     let mut sched = SpecScheduler::for_model(&m);
+    sched.set_pool(pool.clone());
     let start = Instant::now();
     for p in prompts {
         sched.admit(p, SeqParams::Spec(params.clone()), rng.split());
@@ -123,13 +139,15 @@ fn run_continuous(prompts: &[Prompt], params: &SpecParams) -> RunStats {
 fn main() {
     let params = SpecParams::default();
     let prompts = workload();
+    let threads = step_threads();
+    let pool = Arc::new(StepPool::new(threads));
 
     println!("== continuous vs blocking batching ==");
     println!("workload: {N_REQUESTS} requests (50% short / 50% long), \
-              D={D}, single bucket {BUCKET}");
+              D={D}, single bucket {BUCKET}, step_threads={threads}");
 
-    let blocking = run_blocking(&prompts, &params);
-    let continuous = run_continuous(&prompts, &params);
+    let blocking = run_blocking(&prompts, &params, &pool);
+    let continuous = run_continuous(&prompts, &params, &pool);
 
     println!(
         "{:<12} {:>16} {:>12} {:>10} {:>12} {:>10}",
@@ -182,6 +200,7 @@ fn main() {
                             continuous.mean_wall_per_sample_s),
     ];
     let extra = [
+        ("step_threads", threads as f64),
         ("blocking.row_steps", blocking.row_steps as f64),
         ("continuous.row_steps", continuous.row_steps as f64),
         ("blocking.steps", blocking.steps as f64),

@@ -58,7 +58,7 @@ use anyhow::{anyhow, Result};
 
 use crate::engine::{
     mdm_sample, speculative_sample, BoundStepper, HybridModel, Prompt,
-    Sample, SeqParams, SlotId, Stepper,
+    Sample, SeqParams, SlotId, StepPhases, StepPool, Stepper,
 };
 use crate::likelihood::{log_likelihood, rejection_posterior, SpecTable};
 use crate::util::json::Json;
@@ -91,8 +91,10 @@ pub trait EngineModel {
               rng: &mut Pcg) -> Result<Vec<Sample>>;
     /// Continuous-batching entry point: a scheduler bound to this model
     /// for one sampler setting (validated here — speculative sampling
-    /// needs the causal half).
-    fn stepper<'a>(&'a self, sampler: &SamplerChoice)
+    /// needs the causal half). The scheduler's planar phases run on
+    /// `pool`, the engine's shared step pool (spawned once per engine
+    /// thread; see `engine::pool`).
+    fn stepper<'a>(&'a self, sampler: &SamplerChoice, pool: Arc<StepPool>)
                    -> Result<Box<dyn Stepper + 'a>>;
     fn log_likelihood(&self, tokens: &[i32], sigma: &[i32]) -> Result<f64>;
     fn rejection_posterior(&self, tokens: &[i32], sigma: &[i32])
@@ -145,7 +147,7 @@ impl<M: HybridModel> EngineModel for M {
         }
     }
 
-    fn stepper<'a>(&'a self, sampler: &SamplerChoice)
+    fn stepper<'a>(&'a self, sampler: &SamplerChoice, pool: Arc<StepPool>)
                    -> Result<Box<dyn Stepper + 'a>> {
         let params = match sampler {
             SamplerChoice::Speculative(p) => {
@@ -158,7 +160,7 @@ impl<M: HybridModel> EngineModel for M {
             }
             SamplerChoice::Mdm(p) => SeqParams::Mdm(p.clone()),
         };
-        Ok(Box::new(BoundStepper::new(self, params)))
+        Ok(Box::new(BoundStepper::with_pool(self, params, pool)))
     }
 
     fn log_likelihood(&self, tokens: &[i32], sigma: &[i32]) -> Result<f64> {
@@ -272,6 +274,12 @@ struct EngineMetrics {
     h_nfe: Arc<Histogram>,
     h_occupancy: Arc<Histogram>,
     h_step: Arc<Histogram>,
+    /// Per-phase step cost (one observation per step, seconds): the
+    /// model forward passes vs the three planar sampling phases.
+    h_step_model: Arc<Histogram>,
+    h_step_draw: Arc<Histogram>,
+    h_step_lse: Arc<Histogram>,
+    h_step_accept: Arc<Histogram>,
     h_pending: Arc<Histogram>,
     h_credit: Arc<Histogram>,
     c_reqs: Arc<Counter>,
@@ -292,6 +300,10 @@ impl EngineMetrics {
             h_nfe: metrics.histogram("nfe_per_sample"),
             h_occupancy: metrics.histogram("slot_occupancy"),
             h_step: metrics.histogram("step_latency_s"),
+            h_step_model: metrics.histogram("step_model_s"),
+            h_step_draw: metrics.histogram("step_draw_s"),
+            h_step_lse: metrics.histogram("step_lse_s"),
+            h_step_accept: metrics.histogram("step_accept_s"),
             h_pending: metrics.histogram("pending_depth"),
             h_credit: metrics.histogram("queue_credit"),
             c_reqs: metrics.counter("requests"),
@@ -345,6 +357,11 @@ fn engine_loop(models: ModelMap, rx: mpsc::Receiver<Job>,
     let mut req_counter: u64 = 0;
     let mut inflight: BTreeMap<u64, Inflight> = BTreeMap::new();
     let mut queues: Vec<RunQueue<'_>> = Vec::new();
+    // The engine's shared step pool: workers spawned once here, shared
+    // by every run queue's scheduler (`--step-threads`; 1 = the exact
+    // single-threaded code path). Thread count never changes results —
+    // token streams are bitwise identical (see engine::pool).
+    let pool = Arc::new(StepPool::new(cfg.sched.step_threads.max(1)));
     // Weighted SLO-aware cross-queue selector, on wall time here (the
     // simulation harness drives the same core on virtual time).
     let mut xq = CrossQueueScheduler::new(
@@ -375,7 +392,7 @@ fn engine_loop(models: ModelMap, rx: mpsc::Receiver<Job>,
                 Ok(job) => {
                     if handle_job(job, &models, &mut queues, &mut inflight,
                                   &mut rng, &mut req_counter, &m, &cfg,
-                                  &mut xq) {
+                                  &mut xq, &pool) {
                         draining = true;
                     }
                 }
@@ -392,7 +409,7 @@ fn engine_loop(models: ModelMap, rx: mpsc::Receiver<Job>,
                         if handle_job(job, &models, &mut queues,
                                       &mut inflight, &mut rng,
                                       &mut req_counter, &m, &cfg,
-                                      &mut xq) {
+                                      &mut xq, &pool) {
                             draining = true;
                         }
                     }
@@ -412,7 +429,7 @@ fn engine_loop(models: ModelMap, rx: mpsc::Receiver<Job>,
                         if handle_job(job, &models, &mut queues,
                                       &mut inflight, &mut rng,
                                       &mut req_counter, &m, &cfg,
-                                      &mut xq) {
+                                      &mut xq, &pool) {
                             draining = true;
                             break;
                         }
@@ -471,8 +488,8 @@ fn handle_job<'m>(job: Job, models: &'m ModelMap,
                   queues: &mut Vec<RunQueue<'m>>,
                   inflight: &mut BTreeMap<u64, Inflight>, rng: &mut Pcg,
                   req_counter: &mut u64, m: &EngineMetrics,
-                  cfg: &BatcherConfig, xq: &mut CrossQueueScheduler)
-                  -> bool {
+                  cfg: &BatcherConfig, xq: &mut CrossQueueScheduler,
+                  pool: &Arc<StepPool>) -> bool {
     match job {
         Job::Shutdown => true,
         Job::Info { reply } => {
@@ -488,7 +505,7 @@ fn handle_job<'m>(job: Job, models: &'m ModelMap,
         }
         Job::Generate { req, reply, enqueued } => {
             admit_generate(models, queues, inflight, rng, req_counter, m,
-                           cfg, xq, req, reply, enqueued);
+                           cfg, xq, pool, req, reply, enqueued);
             false
         }
     }
@@ -502,7 +519,7 @@ fn admit_generate<'m>(models: &'m ModelMap, queues: &mut Vec<RunQueue<'m>>,
                       inflight: &mut BTreeMap<u64, Inflight>, rng: &mut Pcg,
                       req_counter: &mut u64, m: &EngineMetrics,
                       cfg: &BatcherConfig, xq: &mut CrossQueueScheduler,
-                      req: GenRequest,
+                      pool: &Arc<StepPool>, req: GenRequest,
                       reply: mpsc::Sender<Result<GenResponse>>,
                       enqueued: Instant) {
     m.c_reqs.inc();
@@ -588,7 +605,7 @@ fn admit_generate<'m>(models: &'m ModelMap, queues: &mut Vec<RunQueue<'m>>,
 
     let qi = match existing {
         Some(qi) => qi,
-        None => match model.stepper(&req.sampler) {
+        None => match model.stepper(&req.sampler, pool.clone()) {
             Ok(stepper) => {
                 queues.push(RunQueue {
                     key: key.clone(),
@@ -646,9 +663,17 @@ fn step_queue(q: &mut RunQueue<'_>, inflight: &mut BTreeMap<u64, Inflight>,
     let finished = q.stepper.step();
     let cost = t.elapsed().as_secs_f64();
     m.h_step.observe(cost);
-    // Step-cost feedback: the weighted selector charges this queue for
-    // the service it just consumed.
-    xq.report_step(q.sched_id, cost);
+    // Step-cost feedback, now per-phase: the weighted selector charges
+    // this queue for the total service it just consumed and retains the
+    // model/draw/LSE/accept split; the same split is exported as
+    // histograms so an operator can see whether steps are model-bound
+    // or sampling-bound (the part `--step-threads` scales).
+    let phases: StepPhases = q.stepper.take_phases();
+    m.h_step_model.observe(phases.model_s);
+    m.h_step_draw.observe(phases.draw_s);
+    m.h_step_lse.observe(phases.lse_s);
+    m.h_step_accept.observe(phases.accept_s);
+    xq.report_step_phases(q.sched_id, cost, &phases);
     // queue_wait_s = enqueue -> sequence placed into a slot, one value
     // per sequence, so pending-queue congestion and cross-queue waiting
     // are visible under load. Placement is the first thing step() does
@@ -991,7 +1016,8 @@ mod tests {
         let snap = c.metrics.snapshot();
         let hists = snap.get("histograms").unwrap();
         for key in ["slot_occupancy", "step_latency_s", "pending_depth",
-                    "queue_credit", "queue_wait_s"] {
+                    "queue_credit", "queue_wait_s", "step_model_s",
+                    "step_draw_s", "step_lse_s", "step_accept_s"] {
             let count = hists
                 .get(key)
                 .and_then(|h| h.get("count"))

@@ -58,6 +58,7 @@
 use std::collections::BTreeMap;
 use std::collections::VecDeque;
 
+use crate::engine::scheduler::StepPhases;
 use crate::util::simclock::Clock;
 
 /// Handle to a registered queue; stable for the scheduler's lifetime.
@@ -175,6 +176,12 @@ pub struct SchedConfig {
     pub wait_alpha: f64,
     /// Cap on the SLO charge-rate boost.
     pub max_boost: f64,
+    /// Worker-thread count of the engine's shared step pool
+    /// (`engine::pool::StepPool`): the scheduler's planar phases run
+    /// chunked across this many executors. `1` (the default) is the
+    /// exact single-threaded code path; token streams are bitwise
+    /// identical for any value. CLI: `--step-threads N`.
+    pub step_threads: usize,
 }
 
 impl Default for SchedConfig {
@@ -185,6 +192,7 @@ impl Default for SchedConfig {
             starve_after: 64,
             wait_alpha: 0.2,
             max_boost: 8.0,
+            step_threads: 1,
         }
     }
 }
@@ -251,6 +259,10 @@ struct QueueState {
     ready_gen: u64,
     steps: u64,
     cost_total: f64,
+    /// Cumulative per-phase step cost (model/draw/LSE/accept seconds),
+    /// fed by [`CrossQueueScheduler::report_step_phases`]. Fixed-size —
+    /// no per-round allocation.
+    phase_cost: StepPhases,
     slo_violations: u64,
     shed: u64,
 }
@@ -317,6 +329,7 @@ impl CrossQueueScheduler {
             ready_gen: 0,
             steps: 0,
             cost_total: 0.0,
+            phase_cost: StepPhases::default(),
             slo_violations: 0,
             shed: 0,
         });
@@ -414,6 +427,32 @@ impl CrossQueueScheduler {
             q.arrivals.remove(&lane);
         }
         q.pending = q.pending.saturating_sub(n);
+    }
+
+    /// [`CrossQueueScheduler::report_step`] with the engine's per-phase
+    /// cost breakdown (model forward / draw / batched LSE / accept —
+    /// `engine::scheduler::StepPhases`): the total wall cost drives the
+    /// virtual-time charge exactly as before, while the per-phase
+    /// cumulative totals are retained per queue and readable via
+    /// [`CrossQueueScheduler::phase_cost_of`] — the per-queue
+    /// attribution of service time to model vs sampling phases (the
+    /// registry histograms in the coordinator aggregate across queues
+    /// and lose that split). Allocation-free.
+    pub fn report_step_phases(&mut self, qid: QueueId, cost_s: f64,
+                              phases: &StepPhases) {
+        {
+            let q = &mut self.queues[qid.0];
+            q.phase_cost.model_s += phases.model_s;
+            q.phase_cost.draw_s += phases.draw_s;
+            q.phase_cost.lse_s += phases.lse_s;
+            q.phase_cost.accept_s += phases.accept_s;
+        }
+        self.report_step(qid, cost_s);
+    }
+
+    /// Cumulative per-phase step cost reported for `qid`.
+    pub fn phase_cost_of(&self, qid: QueueId) -> StepPhases {
+        self.queues[qid.0].phase_cost
     }
 
     /// Charge one executed step of `qid` at its observed cost (seconds).
@@ -649,6 +688,34 @@ mod tests {
         assert_eq!(a, a2);
         assert_eq!(s.n_queues(), 2);
         assert_eq!(s.key_of(a), "a");
+    }
+
+    #[test]
+    fn phased_reports_charge_vtime_and_accumulate_per_queue() {
+        // report_step_phases must be exactly report_step on the selector
+        // side (same vtime charge, same step count) while additionally
+        // retaining the per-queue model/draw/LSE/accept split.
+        let (_c, mut s) = sched(&SchedConfig::default());
+        let a = s.register("a", policy(1.0));
+        let b = s.register("b", policy(1.0));
+        let phases = StepPhases {
+            model_s: 0.006,
+            draw_s: 0.002,
+            lse_s: 0.001,
+            accept_s: 0.001,
+        };
+        s.report_step_phases(a, phases.total_s(), &phases);
+        s.report_step_phases(a, phases.total_s(), &phases);
+        s.report_step(b, 0.01);
+        assert_eq!(s.steps_of(a), 2);
+        assert!((s.cost_of(a) - 0.02).abs() < 1e-12);
+        assert!((s.cost_of(b) - 0.01).abs() < 1e-12);
+        let split = s.phase_cost_of(a);
+        assert!((split.model_s - 0.012).abs() < 1e-12);
+        assert!((split.draw_s - 0.004).abs() < 1e-12);
+        assert!((split.lse_s - 0.002).abs() < 1e-12);
+        assert!((split.accept_s - 0.002).abs() < 1e-12);
+        assert_eq!(s.phase_cost_of(b), StepPhases::default());
     }
 
     #[test]

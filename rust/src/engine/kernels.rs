@@ -26,9 +26,15 @@
 //! Per-element transcendentals use branchless polynomial kernels
 //! ([`fexp32`], [`fln64`]) written as fixed-lane blocked loops so the
 //! compiler can vectorize them (the repo builds with `target-cpu=native`;
-//! see `.cargo/config.toml`). Their relative error (~5e-6 / ~4e-9) is far
-//! below anything a sampling test can resolve; the chi-square tests below
-//! pin distributional equivalence to the old `softmax_row` path.
+//! see `.cargo/config.toml`). With the `simd` cargo feature the hot
+//! 64-element block forms of these kernels are replaced by explicit
+//! `core::arch` implementations (AVX2/SSE2 on x86_64, NEON on aarch64,
+//! runtime-dispatched — see `engine::simd`) that replicate the portable
+//! loops operation-for-operation, so results are **bit-identical** with
+//! the feature on or off (pinned by a test below). Their relative error
+//! (~5e-6 / ~4e-9) is far below anything a sampling test can resolve;
+//! the chi-square tests below pin distributional equivalence to the old
+//! `softmax_row` path.
 //!
 //! **RNG-stream note.** The Gumbel draw needs one noise value *per vocab
 //! entry*, so driving it from the sequential PCG stream would consume V
@@ -50,11 +56,38 @@
 use crate::util::rng::Pcg;
 
 /// Lane width of the blocked accumulations (matches a 256-bit f32 vector).
-const LANES: usize = 8;
+pub(crate) const LANES: usize = 8;
 /// Elements per noise block in the fused draw loop.
-const BLK: usize = 64;
+pub(crate) const BLK: usize = 64;
 /// SplitMix64 counter increment (odd; 2^64 / golden ratio).
 const GOLDEN: u64 = 0x9e37_79b9_7f4a_7c15;
+
+/// 2^r Taylor coefficients of [`fexp32`] (shared verbatim by the
+/// explicit-SIMD variants in `engine::simd` — the bit-identity guarantee
+/// rests on both paths evaluating the same polynomial in the same order).
+pub(crate) const EXP_C1: f32 = std::f32::consts::LN_2;
+pub(crate) const EXP_C2: f32 = 0.240_226_51;
+pub(crate) const EXP_C3: f32 = 0.055_504_11;
+pub(crate) const EXP_C4: f32 = 0.009_618_129;
+pub(crate) const EXP_C5: f32 = 0.001_333_355_8;
+/// 1.5·2^23: magic round-to-nearest constant of [`fexp32`].
+pub(crate) const EXP_MAGIC: f32 = 12_582_912.0;
+
+/// Cephes-style minimax coefficients for ln(1+w) of [`fln64`], applied
+/// Horner-first-to-last (shared verbatim with `engine::simd`).
+pub(crate) const LN_POLY: [f64; 9] = [
+    7.037_683_629_2e-2,
+    -1.151_461_031_0e-1,
+    1.167_699_874_0e-1,
+    -1.242_014_084_6e-1,
+    1.424_932_278_7e-1,
+    -1.666_805_766_5e-1,
+    2.000_071_476_5e-1,
+    -2.499_999_399_3e-1,
+    3.333_333_117_4e-1,
+];
+/// Mantissa bits of sqrt(2): the octave-fold threshold of [`fln64`].
+pub(crate) const LN_SQRT2_MANT: u64 = 0x6_a09e_667f_3bcd;
 
 /// Fast branchless `exp` for f32, intended for max-subtracted arguments
 /// (`x <= 0`); the result saturates at `2^±126` outside `|x| < 87`.
@@ -63,17 +96,13 @@ const GOLDEN: u64 = 0x9e37_79b9_7f4a_7c15;
 pub fn fexp32(x: f32) -> f32 {
     // Decompose exp(x) = 2^n * 2^r with n = round(x·log2e), r in [-.5, .5].
     let z = (x * std::f32::consts::LOG2E).clamp(-126.0, 126.0);
-    let zs = z + 12_582_912.0_f32; // 1.5·2^23: magic round-to-nearest
+    let zs = z + EXP_MAGIC;
     let n = (zs.to_bits() & 0x7f_ffff) as i32 - 0x40_0000;
-    let r = z - (zs - 12_582_912.0_f32);
+    let r = z - (zs - EXP_MAGIC);
     // 2^r via the exp(r·ln2) Taylor series, Estrin-ish grouping.
-    const C1: f32 = std::f32::consts::LN_2;
-    const C2: f32 = 0.240_226_51;
-    const C3: f32 = 0.055_504_11;
-    const C4: f32 = 0.009_618_129;
-    const C5: f32 = 0.001_333_355_8;
     let r2 = r * r;
-    let p = (1.0 + C1 * r) + r2 * ((C2 + C3 * r) + r2 * (C4 + C5 * r));
+    let p = (1.0 + EXP_C1 * r)
+        + r2 * ((EXP_C2 + EXP_C3 * r) + r2 * (EXP_C4 + EXP_C5 * r));
     f32::from_bits((p.to_bits() as i32).wrapping_add(n << 23) as u32)
 }
 
@@ -87,21 +116,16 @@ pub fn fln64(x: f64) -> f64 {
     let mut e = ((bits >> 52) & 0x7ff) as i64 - 1023;
     // Fold mantissas above sqrt(2) down one octave (integer-side select
     // keeps the pass branch-free for the vectorizer).
-    let adj = (mant >= 0x6_a09e_667f_3bcd) as i64; // sqrt(2) mantissa bits
+    let adj = (mant >= LN_SQRT2_MANT) as i64;
     e += adj;
     let m = f64::from_bits(mant | (((1023 - adj) as u64) << 52));
     let w = m - 1.0; // in [sqrt(2)/2 - 1, sqrt(2) - 1]
     let z = w * w;
-    // Cephes-style minimax for ln(1+w): w - w²/2 + w³·P(w).
-    let mut p = 7.037_683_629_2e-2;
-    p = p * w - 1.151_461_031_0e-1;
-    p = p * w + 1.167_699_874_0e-1;
-    p = p * w - 1.242_014_084_6e-1;
-    p = p * w + 1.424_932_278_7e-1;
-    p = p * w - 1.666_805_766_5e-1;
-    p = p * w + 2.000_071_476_5e-1;
-    p = p * w - 2.499_999_399_3e-1;
-    p = p * w + 3.333_333_117_4e-1;
+    // ln(1+w) = w - w²/2 + w³·P(w), P in Horner form.
+    let mut p = LN_POLY[0];
+    for &c in &LN_POLY[1..] {
+        p = p * w + c;
+    }
     let y = w * z * p - 0.5 * z;
     w + y + e as f64 * std::f64::consts::LN_2
 }
@@ -122,26 +146,70 @@ fn unit_open(h: u64) -> f64 {
     ((h >> 11) as f64 + 0.5) * (1.0 / 9_007_199_254_740_992.0)
 }
 
-/// Max over a logits row (lane-blocked so it vectorizes). Row must be
-/// non-empty and finite.
-#[inline]
-fn row_max(logits: &[f32]) -> f32 {
-    let mut acc = [f32::NEG_INFINITY; LANES];
-    let mut chunks = logits.chunks_exact(LANES);
-    for c in chunks.by_ref() {
-        for k in 0..LANES {
-            acc[k] = c[k].max(acc[k]);
+/// Portable (auto-vectorized) block kernels: the reference semantics of
+/// the hot loops. The explicit-SIMD variants in `engine::simd` replicate
+/// these operation-for-operation, so their results are **bit-identical**
+/// (pinned by `dispatched_blocks_match_portable_bitwise` below); without
+/// the `simd` cargo feature they are the only implementation.
+pub(crate) mod portable {
+    use super::{fexp32, fln64, BLK, LANES};
+
+    /// `out[k] = fexp32(x[k]·inv_temp - ms)` over one 64-element block,
+    /// accumulating `acc[k % LANES] += out[k]` in the fixed 8-lane order
+    /// every LSE consumer shares.
+    #[inline]
+    pub fn exp_accum_block(x: &[f32], inv_temp: f32, ms: f32,
+                           acc: &mut [f32; LANES], out: &mut [f32; BLK]) {
+        debug_assert_eq!(x.len(), BLK);
+        for k in 0..BLK {
+            out[k] = fexp32(x[k] * inv_temp - ms);
+        }
+        for k in (0..BLK).step_by(LANES) {
+            for k2 in 0..LANES {
+                acc[k2] += out[k + k2];
+            }
         }
     }
-    let mut m = f32::NEG_INFINITY;
-    for &a in &acc {
-        m = a.max(m);
+
+    /// In-place `u[k] = -fln64(u[k])` over one 64-element block (the
+    /// exponential-race noise `E = -ln u`).
+    #[inline]
+    pub fn neg_ln_block(u: &mut [f64; BLK]) {
+        for v in u.iter_mut() {
+            *v = -fln64(*v);
+        }
     }
-    for &x in chunks.remainder() {
-        m = x.max(m);
+
+    /// Max over a logits row (lane-blocked so it vectorizes). Row must
+    /// be non-empty and finite.
+    #[inline]
+    pub fn row_max(logits: &[f32]) -> f32 {
+        let mut acc = [f32::NEG_INFINITY; LANES];
+        let mut chunks = logits.chunks_exact(LANES);
+        for c in chunks.by_ref() {
+            for k in 0..LANES {
+                acc[k] = c[k].max(acc[k]);
+            }
+        }
+        let mut m = f32::NEG_INFINITY;
+        for &a in &acc {
+            m = a.max(m);
+        }
+        for &x in chunks.remainder() {
+            m = x.max(m);
+        }
+        m
     }
-    m
 }
+
+// Runtime-dispatched block kernels: explicit `core::arch` SIMD when the
+// `simd` feature is on (AVX2/SSE2 on x86_64, NEON on aarch64; see
+// `engine::simd` for the dispatch table), the portable loops otherwise.
+// Both paths are bit-identical by construction.
+#[cfg(feature = "simd")]
+use crate::engine::simd::{exp_accum_block, neg_ln_block, row_max};
+#[cfg(not(feature = "simd"))]
+use self::portable::{exp_accum_block, neg_ln_block, row_max};
 
 /// Shared summation pass: `Σ exp(l_i·inv_temp - ms)` with a fixed
 /// accumulation order — 64-element blocks of 8 f32 lanes, an f64 scalar
@@ -151,15 +219,13 @@ fn row_max(logits: &[f32]) -> f32 {
 #[inline]
 fn sum_exp(logits: &[f32], inv_temp: f32, ms: f32) -> f64 {
     let mut acc = [0.0_f32; LANES];
+    let mut ebuf = [0.0_f32; BLK];
     let mut sum_tail = 0.0_f64;
     let n = logits.len();
     let mut i = 0;
     while i + BLK <= n {
-        for k in (0..BLK).step_by(LANES) {
-            for k2 in 0..LANES {
-                acc[k2] += fexp32(logits[i + k + k2] * inv_temp - ms);
-            }
-        }
+        exp_accum_block(&logits[i..i + BLK], inv_temp, ms, &mut acc,
+                        &mut ebuf);
         i += BLK;
     }
     while i < n {
@@ -202,20 +268,17 @@ pub fn gumbel_draw_lse(logits: &[f32], inv_temp: f32, seed: u64)
     let n = logits.len();
     let mut i = 0;
     while i + BLK <= n {
-        for k in 0..BLK {
-            ebuf[k] = fexp32(logits[i + k] * inv_temp - ms);
-        }
-        for k in (0..BLK).step_by(LANES) {
-            for k2 in 0..LANES {
-                acc[k2] += ebuf[k + k2];
-            }
-        }
-        for k in 0..BLK {
+        exp_accum_block(&logits[i..i + BLK], inv_temp, ms, &mut acc,
+                        &mut ebuf);
+        // Counter-based uniforms stay scalar (64-bit multiplies have no
+        // AVX2 lane form); the -ln pass over the block is dispatched.
+        for (k, u) in enb.iter_mut().enumerate() {
             let h = mix64(
                 seed.wrapping_add(((i + k) as u64).wrapping_mul(GOLDEN)),
             );
-            enb[k] = -fln64(unit_open(h));
+            *u = unit_open(h);
         }
+        neg_ln_block(&mut enb);
         for k in 0..BLK {
             let e = ebuf[k] as f64;
             if enb[k] < best * e {
@@ -633,5 +696,93 @@ mod tests {
         let (tok, lse) = gumbel_draw_lse(&row, 1.0, 9);
         assert_eq!(tok, 0);
         assert!((lse - 2.5).abs() < 1e-5);
+    }
+
+    /// The block kernels the hot loops actually call (explicit SIMD when
+    /// the `simd` feature is on, the portable loops otherwise) must be
+    /// **bit-identical** to the portable reference — this is what makes
+    /// token streams invariant under `--features simd`. Exercises every
+    /// dispatch target available on the build host; trivially green on a
+    /// scalar build (both sides are the portable path).
+    #[test]
+    fn dispatched_blocks_match_portable_bitwise() {
+        let mut rng = Pcg::new(0x51_3d);
+        for trial in 0..200 {
+            // Logit-scaled f32 inputs plus the temperatures the
+            // scheduler uses.
+            let inv_temp = [1.0_f32, 1.0 / 0.7, 1.0 / 0.3, 0.5]
+                [trial % 4];
+            let mut x = [0.0_f32; BLK];
+            for v in x.iter_mut() {
+                *v = ((rng.f64() * 2.0 - 1.0) * 8.0) as f32;
+            }
+            let ms = portable::row_max(&x) * inv_temp;
+
+            let mut acc_a = [0.0_f32; LANES];
+            let mut out_a = [0.0_f32; BLK];
+            exp_accum_block(&x, inv_temp, ms, &mut acc_a, &mut out_a);
+            let mut acc_b = [0.0_f32; LANES];
+            let mut out_b = [0.0_f32; BLK];
+            portable::exp_accum_block(&x, inv_temp, ms, &mut acc_b,
+                                      &mut out_b);
+            for k in 0..BLK {
+                assert_eq!(out_a[k].to_bits(), out_b[k].to_bits(),
+                           "exp lane {k}: {} vs {}", out_a[k], out_b[k]);
+            }
+            for k in 0..LANES {
+                assert_eq!(acc_a[k].to_bits(), acc_b[k].to_bits(),
+                           "acc lane {k}: {} vs {}", acc_a[k], acc_b[k]);
+            }
+
+            // Uniforms in (0, 1) — exactly what the Gumbel race feeds in.
+            let mut u_a = [0.0_f64; BLK];
+            for v in u_a.iter_mut() {
+                *v = unit_open(rng.next_u64());
+            }
+            let u_ref = u_a;
+            let mut u_b = u_ref;
+            neg_ln_block(&mut u_a);
+            portable::neg_ln_block(&mut u_b);
+            for k in 0..BLK {
+                assert_eq!(u_a[k].to_bits(), u_b[k].to_bits(),
+                           "ln lane {k}: {} vs {}", u_a[k], u_b[k]);
+            }
+
+            // Row max over an odd-length row (remainder path included).
+            let row: Vec<f32> = (0..77)
+                .map(|_| ((rng.f64() * 2.0 - 1.0) * 6.0) as f32)
+                .collect();
+            assert_eq!(row_max(&row).to_bits(),
+                       portable::row_max(&row).to_bits());
+
+            // The baseline-ISA variants too (SSE2 on x86_64, NEON on
+            // aarch64): the dispatcher picks the best ISA on this host,
+            // but a weaker host would dispatch to these — the
+            // bit-identity guarantee must cover every variant.
+            #[cfg(feature = "simd")]
+            {
+                use crate::engine::simd;
+                let mut acc_c = [0.0_f32; LANES];
+                let mut out_c = [0.0_f32; BLK];
+                simd::exp_accum_block_baseline(&x, inv_temp, ms,
+                                               &mut acc_c, &mut out_c);
+                for k in 0..BLK {
+                    assert_eq!(out_c[k].to_bits(), out_b[k].to_bits(),
+                               "baseline exp lane {k}");
+                }
+                for k in 0..LANES {
+                    assert_eq!(acc_c[k].to_bits(), acc_b[k].to_bits(),
+                               "baseline acc lane {k}");
+                }
+                let mut u_c = u_ref;
+                simd::neg_ln_block_baseline(&mut u_c);
+                for k in 0..BLK {
+                    assert_eq!(u_c[k].to_bits(), u_b[k].to_bits(),
+                               "baseline ln lane {k}");
+                }
+                assert_eq!(simd::row_max_baseline(&row).to_bits(),
+                           portable::row_max(&row).to_bits());
+            }
+        }
     }
 }

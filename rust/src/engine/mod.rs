@@ -8,15 +8,19 @@
 pub mod kernels;
 pub mod mdm;
 pub mod mock;
+pub mod pool;
 pub mod scheduler;
+#[cfg(feature = "simd")]
+pub mod simd;
 pub mod softmax;
 pub mod speculative;
 pub mod window;
 
 pub use mdm::{mdm_sample, MdmParams};
 pub use mock::MockModel;
+pub use pool::{SharedSlice, StepPool};
 pub use scheduler::{pick_bucket, run_to_completion, BoundStepper, SeqParams,
-                    SlotId, SpecScheduler, Stepper};
+                    SlotId, SpecScheduler, StepPhases, Stepper};
 pub use softmax::{log_softmax_row, softmax_row};
 pub use speculative::{speculative_sample, SpecParams, SpecStats};
 pub use window::Window;

@@ -1,0 +1,446 @@
+//! Hand-rolled chunked thread pool for the scheduler's planar phases.
+//!
+//! The planar step loop (`engine::scheduler`) executes three phases —
+//! draws, batched verify-row LSEs, accept/residual sweeps — each of which
+//! is a loop over *independent* work items (residents, or logits rows).
+//! [`StepPool`] runs such a loop across a fixed set of worker threads:
+//!
+//! * workers are spawned **once** (per engine, at pool construction) and
+//!   parked on a condvar between steps — no per-step thread or channel
+//!   churn, and a warm [`StepPool::run`] performs **zero heap
+//!   allocations** (pinned by `tests/alloc_regression.rs`);
+//! * each `run` splits `0..n_items` into exactly `threads` contiguous
+//!   chunks; chunk 0 executes inline on the calling thread, so a
+//!   single-thread pool is byte-for-byte the plain sequential loop (no
+//!   workers, no synchronization, no atomics — the exact single-threaded
+//!   code path `--step-threads 1` promises);
+//! * the task is borrowed, not `Arc`-wrapped: `run` publishes a raw fat
+//!   pointer to the caller's closure and blocks until every chunk
+//!   finished, so the closure may freely borrow the scheduler's
+//!   `StepArena` (scoped-thread semantics without `std::thread::scope`'s
+//!   per-call spawn cost).
+//!
+//! Determinism note: the chunk split is a pure function of
+//! `(n_items, threads)` and every item is processed exactly once by
+//! exactly one chunk, so any computation whose items are independent
+//! (the scheduler's phases: per-resident RNG streams, per-row LSEs)
+//! produces bitwise-identical results for **any** thread count.
+//!
+//! [`SharedSlice`] is the companion aliasing escape hatch: a `Send +
+//! Sync` view over a `&mut [T]` whose disjoint per-item regions are
+//! written by different chunks. Safety is the caller's obligation (each
+//! index touched by at most one concurrent chunk), which the scheduler
+//! upholds by indexing every shared buffer by item id.
+
+use std::ops::Range;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// The shape every pooled task is erased to: `(chunk_index, item_range)`.
+/// Chunk 0 always runs on the thread that called [`StepPool::run`];
+/// `chunk_index` doubles as a scratch-buffer selector for tasks that
+/// need per-worker mutable scratch (e.g. residual rows).
+type Task = dyn Fn(usize, Range<usize>) + Sync;
+
+/// Lifetime-erased handle to the currently published task. The
+/// `'static` is a fiction confined to this module: [`StepPool::run`]
+/// does not return until every chunk completed, so the borrow it erases
+/// strictly outlives every call through this handle.
+#[derive(Clone, Copy)]
+struct TaskPtr(&'static Task);
+
+struct JobState {
+    /// Bumped once per published job; workers run each generation once.
+    gen: u64,
+    task: Option<TaskPtr>,
+    n_items: usize,
+    chunks: usize,
+    /// Worker chunks still running (the caller's chunk 0 not included).
+    remaining: usize,
+    /// A worker chunk of the current job panicked (caught, recorded,
+    /// re-raised on the calling thread once the job completes).
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<JobState>,
+    /// Signalled when a job is published (or on shutdown).
+    work: Condvar,
+    /// Signalled when the last worker chunk of a job completes.
+    done: Condvar,
+}
+
+/// Fixed-size worker pool executing chunked loops (see module docs).
+pub struct StepPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl StepPool {
+    /// Spawn `threads - 1` workers (the calling thread is the first
+    /// executor). `threads <= 1` spawns nothing and makes every
+    /// [`StepPool::run`] a plain inline loop.
+    pub fn new(threads: usize) -> StepPool {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(JobState {
+                gen: 0,
+                task: None,
+                n_items: 0,
+                chunks: 0,
+                remaining: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let mut workers = Vec::with_capacity(threads - 1);
+        for w in 1..threads {
+            let sh = shared.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("ssmd-step-{w}"))
+                    .spawn(move || worker_loop(&sh, w))
+                    .expect("spawn step-pool worker"),
+            );
+        }
+        StepPool { shared, workers, threads }
+    }
+
+    /// Number of concurrent executors (worker threads + the caller).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `task(chunk_index, item_range)` over `0..n_items` split into
+    /// `threads` contiguous chunks; blocks until every chunk completed.
+    /// Chunk 0 runs inline on the calling thread. With no workers this
+    /// is exactly `task(0, 0..n_items)` — no synchronization at all.
+    pub fn run<F: Fn(usize, Range<usize>) + Sync>(&self, n_items: usize,
+                                                  task: F) {
+        if n_items == 0 {
+            return;
+        }
+        if self.workers.is_empty() || n_items == 1 {
+            task(0, 0..n_items);
+            return;
+        }
+        let chunks = self.threads;
+        {
+            let r: &(dyn Fn(usize, Range<usize>) + Sync) = &task;
+            // SAFETY: pure lifetime erasure (the types differ only in
+            // the object lifetime bound). The completion barrier below
+            // keeps the closure alive past every worker call.
+            #[allow(clippy::useless_transmute)]
+            let ptr = TaskPtr(unsafe {
+                std::mem::transmute::<
+                    &(dyn Fn(usize, Range<usize>) + Sync),
+                    &'static Task,
+                >(r)
+            });
+            let mut st = self.shared.state.lock().unwrap();
+            debug_assert!(st.task.is_none(),
+                          "StepPool::run is not reentrant");
+            st.gen = st.gen.wrapping_add(1);
+            st.task = Some(ptr);
+            st.n_items = n_items;
+            st.chunks = chunks;
+            st.remaining = chunks - 1;
+            st.panicked = false;
+            self.shared.work.notify_all();
+        }
+        // Completion barrier as a drop guard: even if chunk 0 (below)
+        // unwinds, we wait for every worker chunk and clear the
+        // published task *before* the borrowed closure is dropped — no
+        // worker can ever call a dead closure, and the job state is
+        // clean for the next `run`.
+        let guard = CompletionGuard { shared: &self.shared };
+        let r0 = chunk_range(n_items, chunks, 0);
+        if !r0.is_empty() {
+            task(0, r0);
+        }
+        drop(guard);
+        // Re-raise a worker-chunk panic on the calling thread (workers
+        // catch theirs so the barrier always completes).
+        let panicked = self.shared.state.lock().unwrap().panicked;
+        if panicked {
+            panic!("StepPool task panicked in a worker chunk");
+        }
+    }
+}
+
+impl Drop for StepPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Waits for all worker chunks of the current job and retracts the
+/// published task pointer, whether the caller's chunk completed or
+/// unwound (see [`StepPool::run`]).
+struct CompletionGuard<'a> {
+    shared: &'a Shared,
+}
+
+impl Drop for CompletionGuard<'_> {
+    fn drop(&mut self) {
+        let mut st = self.shared.state.lock().unwrap();
+        while st.remaining > 0 {
+            st = self.shared.done.wait(st).unwrap();
+        }
+        st.task = None;
+    }
+}
+
+/// Contiguous chunk `i` of `0..n` split into `chunks` near-equal parts
+/// (the first `n % chunks` chunks carry one extra item). Pure function
+/// of its arguments — the determinism anchor of the pool.
+fn chunk_range(n: usize, chunks: usize, i: usize) -> Range<usize> {
+    let base = n / chunks;
+    let rem = n % chunks;
+    let start = i * base + i.min(rem);
+    let len = base + usize::from(i < rem);
+    start..start + len
+}
+
+fn worker_loop(shared: &Shared, chunk: usize) {
+    let mut seen_gen = 0u64;
+    loop {
+        let (task, gen, n_items, chunks) = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if let Some(t) = st.task {
+                    if st.gen != seen_gen {
+                        break (t, st.gen, st.n_items, st.chunks);
+                    }
+                }
+                st = shared.work.wait(st).unwrap();
+            }
+        };
+        seen_gen = gen;
+        let range = chunk_range(n_items, chunks, chunk);
+        // The handle's 'static is a fiction (see TaskPtr): `run`'s
+        // completion barrier keeps the closure alive for the duration of
+        // this call. Panics are caught so the barrier always completes
+        // (a dead worker would deadlock the caller); `run` re-raises
+        // them on the calling thread.
+        let outcome = if range.is_empty() {
+            Ok(())
+        } else {
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                (task.0)(chunk, range)
+            }))
+        };
+        let mut st = shared.state.lock().unwrap();
+        if outcome.is_err() {
+            st.panicked = true;
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            shared.done.notify_one();
+        }
+    }
+}
+
+/// `Send + Sync` view over a `&mut [T]` for phase loops whose chunks
+/// write disjoint regions. The borrow checker cannot see the
+/// disjointness, so the accessors are `unsafe` and the caller promises
+/// it (the scheduler indexes every shared buffer by item id, and the
+/// pool hands each item to exactly one chunk).
+pub struct SharedSlice<T> {
+    ptr: *mut T,
+    len: usize,
+}
+
+unsafe impl<T: Send> Send for SharedSlice<T> {}
+unsafe impl<T: Send> Sync for SharedSlice<T> {}
+
+impl<T> SharedSlice<T> {
+    pub fn new(slice: &mut [T]) -> SharedSlice<T> {
+        SharedSlice { ptr: slice.as_mut_ptr(), len: slice.len() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Mutable element access without a unique borrow of the backing
+    /// slice.
+    ///
+    /// # Safety
+    ///
+    /// `i` must be in bounds and no other thread may concurrently access
+    /// element `i` (each index owned by exactly one pool chunk).
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn get_mut(&self, i: usize) -> &mut T {
+        debug_assert!(i < self.len);
+        &mut *self.ptr.add(i)
+    }
+
+    /// Mutable subslice access without a unique borrow of the backing
+    /// slice.
+    ///
+    /// # Safety
+    ///
+    /// `start + len` must be in bounds and no other thread may
+    /// concurrently access any element of the range (each range owned by
+    /// exactly one pool chunk).
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn range_mut(&self, start: usize, len: usize) -> &mut [T] {
+        debug_assert!(start + len <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(start), len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn chunks_partition_exactly() {
+        for n in [0usize, 1, 2, 7, 64, 65, 1000] {
+            for threads in [1usize, 2, 3, 4, 8] {
+                let mut seen = vec![0u8; n];
+                for c in 0..threads {
+                    for i in chunk_range(n, threads, c) {
+                        seen[i] += 1;
+                    }
+                }
+                assert!(seen.iter().all(|&s| s == 1),
+                        "n={n} threads={threads}: {seen:?}");
+                // Contiguity: chunk c ends where chunk c+1 starts.
+                for c in 0..threads - 1 {
+                    assert_eq!(chunk_range(n, threads, c).end,
+                               chunk_range(n, threads, c + 1).start);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_thread_pool_runs_inline() {
+        let pool = StepPool::new(1);
+        assert_eq!(pool.threads(), 1);
+        let mut out = vec![0usize; 10];
+        let view = SharedSlice::new(&mut out);
+        pool.run(10, |w, range| {
+            assert_eq!(w, 0);
+            for i in range {
+                unsafe { *view.get_mut(i) = i * i };
+            }
+        });
+        for (i, &x) in out.iter().enumerate() {
+            assert_eq!(x, i * i);
+        }
+    }
+
+    #[test]
+    fn multi_thread_pool_covers_every_item() {
+        let pool = StepPool::new(4);
+        let n = 1003;
+        let mut out = vec![0usize; n];
+        let view = SharedSlice::new(&mut out);
+        pool.run(n, |_w, range| {
+            for i in range {
+                unsafe { *view.get_mut(i) = i + 1 };
+            }
+        });
+        for (i, &x) in out.iter().enumerate() {
+            assert_eq!(x, i + 1, "item {i} missed or doubled");
+        }
+    }
+
+    #[test]
+    fn pool_is_reusable_across_many_runs() {
+        let pool = StepPool::new(3);
+        let hits = AtomicUsize::new(0);
+        for _ in 0..100 {
+            pool.run(17, |_w, range| {
+                hits.fetch_add(range.len(), Ordering::Relaxed);
+            });
+        }
+        assert_eq!(hits.load(Ordering::Relaxed), 1700);
+    }
+
+    #[test]
+    fn results_identical_for_any_thread_count() {
+        // The determinism contract: a per-item pure computation lands
+        // identical results regardless of the executor count.
+        let compute = |threads: usize| {
+            let pool = StepPool::new(threads);
+            let mut out = vec![0u64; 513];
+            let view = SharedSlice::new(&mut out);
+            pool.run(513, |_w, range| {
+                for i in range {
+                    let mut h = i as u64 ^ 0x9e3779b97f4a7c15;
+                    h = h.wrapping_mul(0xbf58476d1ce4e5b9);
+                    unsafe { *view.get_mut(i) = h };
+                }
+            });
+            out
+        };
+        let base = compute(1);
+        for t in [2, 3, 8] {
+            assert_eq!(compute(t), base, "threads={t} diverged");
+        }
+    }
+
+    #[test]
+    fn zero_items_is_a_no_op() {
+        let pool = StepPool::new(2);
+        pool.run(0, |_, _| panic!("must not run"));
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let pool = StepPool::new(3);
+        let result =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                pool.run(100, |_w, range| {
+                    if range.contains(&50) {
+                        panic!("boom");
+                    }
+                });
+            }));
+        assert!(result.is_err(), "panic must reach the caller");
+        // The pool must be clean and reusable after a panicked job.
+        let hits = AtomicUsize::new(0);
+        pool.run(10, |_w, range| {
+            hits.fetch_add(range.len(), Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn empty_chunks_are_skipped() {
+        // Fewer items than threads: trailing chunks are empty and the
+        // run still completes (no hang on the completion barrier).
+        let pool = StepPool::new(8);
+        let mut out = vec![0usize; 3];
+        let view = SharedSlice::new(&mut out);
+        pool.run(3, |_w, range| {
+            for i in range {
+                unsafe { *view.get_mut(i) = 7 };
+            }
+        });
+        assert_eq!(out, vec![7, 7, 7]);
+    }
+}

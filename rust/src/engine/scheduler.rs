@@ -49,15 +49,35 @@
 //! beyond the window enter the verify pass as mask tokens; causal tracks
 //! `< target` never attend to them, so consumed logits are unchanged.
 //!
+//! ## Planar step execution (the parallel hot loop)
+//!
+//! The per-step sampling work is organized as **planar phases over the
+//! whole arena** instead of per-row interleaved loops: (1) a *draw*
+//! phase performs all Gumbel draws for all residents, (2) a batched
+//! *LSE* phase computes every verify-row log-sum-exp the current verify
+//! pass can consume into one flat table (`verify_lse` — each row exactly
+//! once), and (3) an *accept/residual* phase runs the per-resident
+//! accept sweeps reading only cached scalars. Each phase executes
+//! chunked across a fixed-worker [`StepPool`] (`engine::pool`,
+//! installed via [`SpecScheduler::set_pool`]; the default single-thread
+//! pool is the exact sequential code path). Residents are independent —
+//! per-sequence counter-based RNG streams, disjoint arena rows — so
+//! **token streams and all counters are bitwise identical for any
+//! thread count**. Per-phase wall-clock costs are accumulated into
+//! [`StepPhases`] for the coordinator's step-cost reporting.
+//!
 //! `speculative_sample` / `mdm_sample` remain as drive-to-completion
 //! wrappers over this scheduler, so single-shot call sites (likelihood
 //! cross-checks, harnesses, examples, benches) are unchanged.
 
 use std::any::Any;
 use std::collections::VecDeque;
+use std::sync::Arc;
+use std::time::Instant;
 
 use crate::engine::kernels;
 use crate::engine::mdm::{mdm_alpha, MdmParams};
+use crate::engine::pool::{SharedSlice, StepPool};
 use crate::engine::{HybridModel, Prompt, Sample, SpecParams, SpecStats};
 use crate::util::rng::Pcg;
 
@@ -123,6 +143,49 @@ struct Slot {
     kernel: Kernel,
 }
 
+/// Raw pointer to one resident's slot, collected once per step so the
+/// planar phases can hand each pool chunk a disjoint set of residents to
+/// mutate. `Send + Sync` is sound because the pool assigns every
+/// resident index to exactly one chunk. The pointers are all derived
+/// from a single raw base of the slot buffer (not per-element indexing,
+/// which would invalidate siblings under Stacked Borrows), and `slots`
+/// itself is not touched again until the phases finish.
+struct ResidentPtr(*mut Slot);
+
+unsafe impl Send for ResidentPtr {}
+unsafe impl Sync for ResidentPtr {}
+
+/// Wall-clock cost of scheduler steps since the last
+/// [`SpecScheduler::take_phases`], split by planar phase. The
+/// coordinator exports these as per-phase histograms and feeds the total
+/// to the cross-queue selector's step-cost accounting.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StepPhases {
+    /// Model forward passes (`draft_into` + `verify_into`).
+    pub model_s: f64,
+    /// Draw phase: all Gumbel draws for all residents.
+    pub draw_s: f64,
+    /// Batched verify-row log-sum-exp phase. Zero on a single-thread
+    /// pool: there the LSEs are computed lazily inside the accept sweep
+    /// (and thus billed to `accept_s`) — same scalars, no wasted work
+    /// past a rejection.
+    pub lse_s: f64,
+    /// Accept/residual phase (cached LSE scalars on multi-thread pools;
+    /// includes the lazy LSEs on single-thread pools).
+    pub accept_s: f64,
+}
+
+impl StepPhases {
+    /// Non-model scheduler CPU time (the part the step pool scales).
+    pub fn sampling_s(&self) -> f64 {
+        self.draw_s + self.lse_s + self.accept_s
+    }
+
+    pub fn total_s(&self) -> f64 {
+        self.model_s + self.sampling_s()
+    }
+}
+
 /// All per-step buffers, owned by the scheduler so steady-state steps
 /// reuse capacity instead of allocating (see module docs). The model
 /// `State` is retained type-erased because `SpecScheduler` itself is not
@@ -130,6 +193,9 @@ struct Slot {
 struct StepArena {
     /// Step-local list of resident slot indices.
     active: Vec<usize>,
+    /// Step-local raw slot pointers, one per resident (see
+    /// [`ResidentPtr`]); rebuilt each step, reused capacity.
+    residents: Vec<ResidentPtr>,
     /// `[bucket, D]` masked draft input (mask-padded past the residents).
     masked_tokens: Vec<i32>,
     /// `[bucket, D]` verify input: decided prefix + window draws; mask
@@ -146,12 +212,26 @@ struct StepArena {
     /// reused by every accept test of the outer loop (replaces the old
     /// per-row softmax vectors). Indexed `r * D + pos`.
     draft_lse: Vec<f64>,
-    /// Reusable V-length row for lazy residual resampling.
-    scratch: Vec<f64>,
+    /// Per-verify-pass flat table of target-row log-sum-exps, indexed
+    /// `r * D + track` — filled by the batched LSE phase so the accept
+    /// phase consumes only cached scalars.
+    verify_lse: Vec<f64>,
+    /// Work list of the LSE phase: `(flat row index, 1/temperature)`
+    /// per verify row the current pass can consume.
+    lse_jobs: Vec<(u32, f32)>,
+    /// Reusable V-length rows for lazy residual resampling, one per pool
+    /// chunk (pre-warmed to vocab capacity so a worker's first rejection
+    /// does not allocate).
+    scratch: Vec<Vec<f64>>,
     /// Per-resident reveal targets / progress / verify-pass counts.
     targets: Vec<usize>,
     j: Vec<usize>,
     verify_used: Vec<usize>,
+    /// Per-resident accept/reject tallies of one verify pass, reduced
+    /// into `SpecStats` in resident order (deterministic for any thread
+    /// count).
+    acc_cnt: Vec<usize>,
+    rej_cnt: Vec<usize>,
     /// Per-resident MDM (reveal count, forced-final) pairs.
     reveals: Vec<(usize, bool)>,
     /// Retained `Option<M::State>` (type-erased), rebuilt in place by
@@ -160,19 +240,27 @@ struct StepArena {
 }
 
 impl StepArena {
-    fn new(capacity: usize, d: usize, vocab: usize) -> StepArena {
+    fn new(capacity: usize, d: usize, vocab: usize, threads: usize)
+           -> StepArena {
         StepArena {
             active: Vec::with_capacity(capacity),
+            residents: Vec::with_capacity(capacity),
             masked_tokens: Vec::with_capacity(capacity * d),
             full_tokens: Vec::with_capacity(capacity * d),
             sigma_flat: Vec::with_capacity(capacity * d),
             draft_logits: Vec::new(),
             target_logits: Vec::new(),
             draft_lse: Vec::with_capacity(capacity * d),
-            scratch: Vec::with_capacity(vocab),
+            verify_lse: Vec::with_capacity(capacity * d),
+            lse_jobs: Vec::with_capacity(capacity * d),
+            scratch: (0..threads.max(1))
+                .map(|_| Vec::with_capacity(vocab))
+                .collect(),
             targets: Vec::with_capacity(capacity),
             j: Vec::with_capacity(capacity),
             verify_used: Vec::with_capacity(capacity),
+            acc_cnt: Vec::with_capacity(capacity),
+            rej_cnt: Vec::with_capacity(capacity),
             reveals: Vec::with_capacity(capacity),
             state: None,
         }
@@ -195,6 +283,14 @@ pub struct SpecScheduler {
     padded_row_steps: u64,
     backfills: u64,
     placements: Vec<SlotId>,
+    phases: StepPhases,
+    /// Executor of the planar phases. The default is a single-thread
+    /// pool (no workers — the exact sequential code path); the engine
+    /// installs its shared multi-thread pool via
+    /// [`SpecScheduler::set_pool`]. Token streams are bitwise identical
+    /// for any thread count (per-resident RNG streams, deterministic
+    /// chunking — see `engine::pool`).
+    pool: Arc<StepPool>,
     arena: StepArena,
 }
 
@@ -218,13 +314,35 @@ impl SpecScheduler {
             padded_row_steps: 0,
             backfills: 0,
             placements: Vec::new(),
-            arena: StepArena::new(capacity, seq_len, vocab),
+            phases: StepPhases::default(),
+            pool: Arc::new(StepPool::new(1)),
+            arena: StepArena::new(capacity, seq_len, vocab, 1),
         }
     }
 
     pub fn for_model<M: HybridModel>(model: &M) -> SpecScheduler {
         SpecScheduler::new(model.seq_len(), model.vocab(), model.mask_id(),
                            model.buckets())
+    }
+
+    /// Install a (shared) step pool: subsequent steps execute their
+    /// planar phases across its workers. Per-chunk residual scratch rows
+    /// are pre-warmed here so pooled warm steps stay allocation-free.
+    pub fn set_pool(&mut self, pool: Arc<StepPool>) {
+        while self.arena.scratch.len() < pool.threads() {
+            self.arena.scratch.push(Vec::with_capacity(self.vocab));
+        }
+        self.pool = pool;
+    }
+
+    /// Executor thread count of the installed pool.
+    pub fn step_threads(&self) -> usize {
+        self.pool.threads()
+    }
+
+    /// Per-phase wall-clock cost accumulated since the last call.
+    pub fn take_phases(&mut self) -> StepPhases {
+        std::mem::take(&mut self.phases)
     }
 
     /// Enqueue one sequence. It becomes resident at the next `step` with a
@@ -407,18 +525,38 @@ impl SpecScheduler {
     }
 
     /// One speculative outer loop (Alg. 3) over the residents, batch
-    /// `bucket`. Allocation-free once the arena is warm.
+    /// `bucket`, restructured into **planar phases over the whole
+    /// step's arena** (each phase chunked across the step pool):
+    ///
+    /// 1. **draw** — all Gumbel draws for all residents (window-lazy, as
+    ///    before), caching each drafted row's LSE;
+    /// 2. **LSE** — per verify pass, one batched sweep computing every
+    ///    verify-row log-sum-exp the pass can consume into a flat table
+    ///    (`verify_lse`), each row exactly once (multi-thread pools;
+    ///    a single-thread pool computes the same scalars lazily inside
+    ///    the accept sweep — the exact sequential path, no eager work
+    ///    past a rejection);
+    /// 3. **accept/residual** — the per-resident accept sweeps, reading
+    ///    only cached LSE scalars (plus logit rows for the occasional
+    ///    residual resample).
+    ///
+    /// Residents are mutually independent (per-sequence RNG streams,
+    /// disjoint arena rows), so the phases parallelize without locks and
+    /// token streams are bitwise identical for any thread count.
+    /// Allocation-free once the arena is warm.
     fn step_spec<M: HybridModel>(&mut self, model: &M, bucket: usize,
                                  finished: &mut Vec<(SlotId, Sample)>) {
         let d = self.d;
         let v = self.vocab;
         let mask = self.mask;
+        let pool = &self.pool;
         let slots = &mut self.slots;
         let stats = &mut self.stats;
+        let phases = &mut self.phases;
         let StepArena {
-            active, masked_tokens, full_tokens, sigma_flat, draft_logits,
-            target_logits, draft_lse, scratch, targets, j, verify_used,
-            state, ..
+            active, residents, masked_tokens, full_tokens, sigma_flat,
+            draft_logits, target_logits, draft_lse, verify_lse, lse_jobs,
+            scratch, targets, j, verify_used, acc_cnt, rej_cnt, state, ..
         } = &mut self.arena;
         let n_act = active.len();
 
@@ -440,18 +578,41 @@ impl SpecScheduler {
             "padding rows must contribute only mask tokens"
         );
         let mut state_box = Self::take_state::<M>(state);
+        let t = Instant::now();
         model.draft_into(&masked_tokens[..], bucket, &mut state_box,
                          draft_logits);
+        phases.model_s += t.elapsed().as_secs_f64();
         stats.outer_loops += 1;
 
-        // ---- window-lazy draws (resident rows only) ---------------------
+        // Per-resident slot pointers for the planar phases: each pool
+        // chunk mutates a disjoint set of residents. `slots` itself is
+        // not touched again until the bookkeeping block below.
+        residents.clear();
+        // Every pointer is derived from one raw base: indexing `slots`
+        // per iteration would create a fresh unique reborrow of the
+        // whole buffer each time, invalidating the previously collected
+        // pointers under the Stacked Borrows aliasing rules.
+        let base = slots.as_mut_ptr();
+        for &si in active.iter() {
+            // SAFETY: `si < slots.len()` (collected from this very vec a
+            // moment ago) and every active slot is occupied.
+            let slot = unsafe {
+                (*base.add(si)).as_mut().expect("active slot")
+            };
+            residents.push(ResidentPtr(slot as *mut Slot));
+        }
+
+        // ---- phase 1: draws (window-lazy, all residents) ----------------
         // Only the ordering positions the accept window can consume are
         // drawn; each draw caches its row's log-sum-exp for the accept
         // tests below. Beyond-window positions stay mask in the verify
         // input (their tracks are never read this loop — see module docs).
         targets.clear();
+        targets.resize(n_act, 0);
         j.clear();
+        j.resize(n_act, 0);
         verify_used.clear();
+        verify_used.resize(n_act, 0);
         full_tokens.clear();
         full_tokens.resize(bucket * d, mask);
         sigma_flat.clear();
@@ -463,106 +624,248 @@ impl SpecScheduler {
         }
         draft_lse.clear();
         draft_lse.resize(bucket * d, f64::NAN);
-        for (r, &si) in active.iter().enumerate() {
-            let (s, p) = spec_mut(&mut slots[si]);
-            let w = p.window.limit(s.i, d);
-            let target = (s.i + w).min(d);
-            targets.push(target);
-            j.push(s.i);
-            verify_used.push(0);
-            let inv_t = (1.0 / p.temperature) as f32;
-            for od in s.i..target {
-                let pos = s.sigma[od] as usize;
-                let row = &draft_logits[(r * d + pos) * v
-                                        ..(r * d + pos) * v + v];
-                let (tok, lse) =
-                    kernels::gumbel_draw_lse(row, inv_t, s.rng.next_u64());
-                s.tokens[pos] = tok as i32;
-                draft_lse[r * d + pos] = lse;
-            }
-            for od in 0..target {
-                let pos = s.sigma[od] as usize;
-                full_tokens[r * d + pos] = s.tokens[pos];
-            }
-            sigma_flat[r * d..(r + 1) * d].copy_from_slice(&s.sigma);
+        let t = Instant::now();
+        {
+            let res: &[ResidentPtr] = &residents[..];
+            let dl: &[f32] = &draft_logits[..];
+            let lse_w = SharedSlice::new(draft_lse);
+            let full_w = SharedSlice::new(full_tokens);
+            let sig_w = SharedSlice::new(sigma_flat);
+            let tgt_w = SharedSlice::new(targets);
+            let j_w = SharedSlice::new(j);
+            let vu_w = SharedSlice::new(verify_used);
+            pool.run(n_act, |_chunk, range| {
+                for r in range {
+                    // SAFETY: resident r and row r of every shared
+                    // buffer are handed to exactly one chunk.
+                    let slot = unsafe { &mut *res[r].0 };
+                    let (s, p) = spec_parts(slot);
+                    let w = p.window.limit(s.i, d);
+                    let target = (s.i + w).min(d);
+                    let inv_t = (1.0 / p.temperature) as f32;
+                    unsafe {
+                        *tgt_w.get_mut(r) = target;
+                        *j_w.get_mut(r) = s.i;
+                        *vu_w.get_mut(r) = 0;
+                    }
+                    let lse_row = unsafe { lse_w.range_mut(r * d, d) };
+                    for od in s.i..target {
+                        let pos = s.sigma[od] as usize;
+                        let row = &dl[(r * d + pos) * v
+                                      ..(r * d + pos) * v + v];
+                        let (tok, lse) = kernels::gumbel_draw_lse(
+                            row, inv_t, s.rng.next_u64());
+                        s.tokens[pos] = tok as i32;
+                        lse_row[pos] = lse;
+                    }
+                    let full_row = unsafe { full_w.range_mut(r * d, d) };
+                    for od in 0..target {
+                        let pos = s.sigma[od] as usize;
+                        full_row[pos] = s.tokens[pos];
+                    }
+                    unsafe { sig_w.range_mut(r * d, d) }
+                        .copy_from_slice(&s.sigma);
+                }
+            });
         }
+        phases.draw_s += t.elapsed().as_secs_f64();
 
-        let max_nv = active
-            .iter()
-            .map(|&si| spec_ref(&slots[si]).1.n_verify.max(1))
+        let max_nv = (0..n_act)
+            .map(|r| {
+                // SAFETY: sequential read between phases; no chunk holds
+                // the pointer anymore.
+                let slot = unsafe { &*residents[r].0 };
+                spec_params_of(slot).n_verify.max(1)
+            })
             .max()
             .unwrap_or(1);
 
         // ---- inner speculative loops ------------------------------------
         for k in 0..max_nv {
-            let any_active = active.iter().enumerate().any(|(r, &si)| {
-                let (_, p) = spec_ref(&slots[si]);
-                k < p.n_verify.max(1) && j[r] < targets[r]
+            let any_active = (0..n_act).any(|r| {
+                // SAFETY: sequential read between phases.
+                let slot = unsafe { &*residents[r].0 };
+                k < spec_params_of(slot).n_verify.max(1)
+                    && j[r] < targets[r]
             });
             if !any_active {
                 break;
             }
             let st =
                 (*state_box).as_ref().expect("draft_into sets the state");
+            let t = Instant::now();
             model.verify_into(st, &full_tokens[..], &sigma_flat[..], bucket,
                               target_logits);
+            phases.model_s += t.elapsed().as_secs_f64();
             stats.verify_passes += 1;
 
-            for (r, &si) in active.iter().enumerate() {
-                let (s, p) = spec_mut(&mut slots[si]);
-                if k >= p.n_verify.max(1) || j[r] >= targets[r] {
-                    continue;
-                }
-                verify_used[r] += 1;
-                let inv_t = 1.0 / p.temperature;
-                let inv_t32 = inv_t as f32;
-                let mut dd = j[r];
-                let mut accepted = 0usize;
-                let mut rejected = 0usize;
-                while dd < targets[r] {
-                    if dd == 0 {
-                        // First-position rule: ordering position 0's
-                        // target IS the draft row, so the acceptance
-                        // probability is exactly 1 — no q row, no RNG.
-                        s.accepted += 1;
-                        accepted += 1;
-                        dd += 1;
+            // ---- phase 2: batched verify-row LSEs -----------------------
+            // One flat work list over every (resident, track) row this
+            // pass may accept-test — each row's LSE computed exactly
+            // once, chunked across the pool, so the accept phase
+            // consumes only cached scalars. Eager LSEs are a win only
+            // when there are workers to absorb them (rows past a
+            // rejection are computed but never read), so with a
+            // single-thread pool this phase is skipped and the accept
+            // sweep computes each LSE lazily at its accept test — the
+            // exact pre-planar sequential path, zero wasted O(V) work.
+            // `row_lse` is deterministic, so both paths consume
+            // bit-identical scalars and the token stream does not depend
+            // on the thread count. (First-position rule: track dd-1
+            // exists only for dd >= 1, hence the max(j, 1).)
+            let planar_lse = pool.threads() > 1;
+            let t = Instant::now();
+            if planar_lse {
+                lse_jobs.clear();
+                for r in 0..n_act {
+                    // SAFETY: sequential read between phases.
+                    let slot = unsafe { &*residents[r].0 };
+                    let p = spec_params_of(slot);
+                    if k >= p.n_verify.max(1) || j[r] >= targets[r] {
                         continue;
                     }
-                    let pos = s.sigma[dd] as usize;
-                    let tok = s.tokens[pos] as usize;
-                    let pr = (r * d + pos) * v;
-                    let p_row = &draft_logits[pr..pr + v];
-                    let lse_p = draft_lse[r * d + pos];
-                    debug_assert!(lse_p.is_finite(),
-                                  "accept test on an undrafted row");
-                    // Target: track dd-1 of this verify pass.
-                    let tr = (r * d + (dd - 1)) * v;
-                    let q_row = &target_logits[tr..tr + v];
-                    let lse_q = kernels::row_lse(q_row, inv_t32);
-                    let accept_p = kernels::accept_prob(
-                        q_row[tok], lse_q, p_row[tok], lse_p, inv_t);
-                    if s.rng.f64() < accept_p {
-                        s.accepted += 1;
-                        accepted += 1;
-                        dd += 1;
-                    } else {
-                        s.rejected += 1;
-                        rejected += 1;
-                        let new_tok = kernels::residual_draw_into(
-                            scratch, q_row, lse_q, p_row, lse_p, inv_t,
-                            &mut s.rng) as i32;
-                        s.tokens[pos] = new_tok;
-                        full_tokens[r * d + pos] = new_tok;
-                        dd += 1;
-                        break; // resample ends this inner sweep
+                    let inv_t32 = (1.0 / p.temperature) as f32;
+                    for dd in j[r].max(1)..targets[r] {
+                        lse_jobs.push(((r * d + (dd - 1)) as u32,
+                                       inv_t32));
                     }
                 }
-                j[r] = dd;
-                stats.accepted += accepted;
-                stats.rejected += rejected;
+                verify_lse.clear();
+                verify_lse.resize(bucket * d, f64::NAN);
+                let jobs: &[(u32, f32)] = &lse_jobs[..];
+                let tl: &[f32] = &target_logits[..];
+                let out_w = SharedSlice::new(verify_lse);
+                pool.run(jobs.len(), |_chunk, range| {
+                    for i in range {
+                        let (flat, inv_t32) = jobs[i];
+                        let fl = flat as usize;
+                        let row = &tl[fl * v..fl * v + v];
+                        // SAFETY: each flat row id appears at most once
+                        // in the job list.
+                        unsafe {
+                            *out_w.get_mut(fl) =
+                                kernels::row_lse(row, inv_t32);
+                        }
+                    }
+                });
             }
+            phases.lse_s += t.elapsed().as_secs_f64();
+
+            // ---- phase 3: accept/residual sweeps ------------------------
+            let t = Instant::now();
+            acc_cnt.clear();
+            acc_cnt.resize(n_act, 0);
+            rej_cnt.clear();
+            rej_cnt.resize(n_act, 0);
+            {
+                let res: &[ResidentPtr] = &residents[..];
+                let dl: &[f32] = &draft_logits[..];
+                let tl: &[f32] = &target_logits[..];
+                let dlse: &[f64] = &draft_lse[..];
+                let vlse: &[f64] = &verify_lse[..];
+                let tg: &[usize] = &targets[..];
+                let full_w = SharedSlice::new(full_tokens);
+                let j_w = SharedSlice::new(j);
+                let vu_w = SharedSlice::new(verify_used);
+                let acc_w = SharedSlice::new(acc_cnt);
+                let rej_w = SharedSlice::new(rej_cnt);
+                let scr_w = SharedSlice::new(scratch.as_mut_slice());
+                pool.run(n_act, |chunk, range| {
+                    for r in range {
+                        // SAFETY: resident r, row r of every shared
+                        // buffer, and scratch[chunk] are owned by
+                        // exactly this chunk.
+                        let slot = unsafe { &mut *res[r].0 };
+                        let (s, p) = spec_parts(slot);
+                        let jj = unsafe { *j_w.get_mut(r) };
+                        if k >= p.n_verify.max(1) || jj >= tg[r] {
+                            continue;
+                        }
+                        unsafe { *vu_w.get_mut(r) += 1 };
+                        let inv_t = 1.0 / p.temperature;
+                        let full_row =
+                            unsafe { full_w.range_mut(r * d, d) };
+                        let scratch_row = unsafe { scr_w.get_mut(chunk) };
+                        let mut dd = jj;
+                        let mut accepted = 0usize;
+                        let mut rejected = 0usize;
+                        while dd < tg[r] {
+                            if dd == 0 {
+                                // First-position rule: ordering position
+                                // 0's target IS the draft row, so the
+                                // acceptance probability is exactly 1 —
+                                // no q row, no RNG.
+                                s.accepted += 1;
+                                accepted += 1;
+                                dd += 1;
+                                continue;
+                            }
+                            let pos = s.sigma[dd] as usize;
+                            let tok = s.tokens[pos] as usize;
+                            let pr = (r * d + pos) * v;
+                            let p_row = &dl[pr..pr + v];
+                            let lse_p = dlse[r * d + pos];
+                            debug_assert!(
+                                lse_p.is_finite(),
+                                "accept test on an undrafted row"
+                            );
+                            // Target: track dd-1 of this verify pass —
+                            // LSE cached by phase 2, or computed lazily
+                            // on the single-thread path (identical
+                            // scalar either way).
+                            let tr_flat = r * d + (dd - 1);
+                            let q_row =
+                                &tl[tr_flat * v..tr_flat * v + v];
+                            let lse_q = if planar_lse {
+                                let cached = vlse[tr_flat];
+                                debug_assert!(
+                                    cached.is_finite(),
+                                    "accept test on a row the LSE \
+                                     phase did not cover"
+                                );
+                                cached
+                            } else {
+                                kernels::row_lse(q_row, inv_t as f32)
+                            };
+                            let accept_p = kernels::accept_prob(
+                                q_row[tok], lse_q, p_row[tok], lse_p,
+                                inv_t);
+                            if s.rng.f64() < accept_p {
+                                s.accepted += 1;
+                                accepted += 1;
+                                dd += 1;
+                            } else {
+                                s.rejected += 1;
+                                rejected += 1;
+                                let new_tok =
+                                    kernels::residual_draw_into(
+                                        scratch_row, q_row, lse_q, p_row,
+                                        lse_p, inv_t, &mut s.rng)
+                                        as i32;
+                                s.tokens[pos] = new_tok;
+                                full_row[pos] = new_tok;
+                                dd += 1;
+                                break; // resample ends this inner sweep
+                            }
+                        }
+                        unsafe {
+                            *j_w.get_mut(r) = dd;
+                            *acc_w.get_mut(r) = accepted;
+                            *rej_w.get_mut(r) = rejected;
+                        }
+                    }
+                });
+            }
+            // Deterministic stats reduction in resident order (identical
+            // totals for any thread count).
+            for (&a, &rj) in acc_cnt.iter().zip(rej_cnt.iter()) {
+                stats.accepted += a;
+                stats.rejected += rj;
+            }
+            phases.accept_s += t.elapsed().as_secs_f64();
         }
+        // Raw pointers die here; `slots` is re-borrowed below.
+        residents.clear();
 
         // ---- bookkeeping + immediate retirement -------------------------
         for (r, &si) in active.iter().enumerate() {
@@ -598,15 +901,21 @@ impl SpecScheduler {
     /// One MDM reveal step over the residents, batch `bucket`. Each row is
     /// fast-forwarded through reveal-free grid steps (0 NFE, per the
     /// paper's best-case accounting) so every draft pass reveals work for
-    /// every resident row. Allocation-free once the arena is warm.
+    /// every resident row. The reveal/draw loop is planar: residents are
+    /// independent (own RNG streams, disjoint rows), so it runs chunked
+    /// across the step pool with bitwise-identical results for any
+    /// thread count. Allocation-free once the arena is warm.
     fn step_mdm<M: HybridModel>(&mut self, model: &M, bucket: usize,
                                 finished: &mut Vec<(SlotId, Sample)>) {
         let d = self.d;
         let v = self.vocab;
         let mask = self.mask;
+        let pool = &self.pool;
         let slots = &mut self.slots;
+        let phases = &mut self.phases;
         let StepArena {
-            active, masked_tokens, draft_logits, reveals, state, ..
+            active, residents, masked_tokens, draft_logits, reveals, state,
+            ..
         } = &mut self.arena;
         let n_act = active.len();
 
@@ -628,32 +937,76 @@ impl SpecScheduler {
             "padding rows must contribute only mask tokens"
         );
         let mut state_box = Self::take_state::<M>(state);
+        let t = Instant::now();
         model.draft_into(&masked_tokens[..], bucket, &mut state_box,
                          draft_logits);
+        phases.model_s += t.elapsed().as_secs_f64();
 
-        for (r, &si) in active.iter().enumerate() {
-            let (m, p) = mdm_mut(&mut slots[si]);
-            let (c, forced) = reveals[r];
-            let c = c.min(m.masked.len());
-            debug_assert!(c > 0, "resident MDM row must reveal every step");
-            m.nfe += 1.0;
-            m.steps_used += 1;
-            // Zheng fix: choose WHICH positions to reveal uniformly,
-            // independent of the sampled values.
-            m.rng.shuffle(&mut m.masked);
-            // The grid uses the sampling temperature; the final forced
-            // pass (rounding leftovers) reveals at temperature 1.
-            let inv_t = if forced { 1.0 }
-                        else { (1.0 / p.temperature) as f32 };
-            for _ in 0..c {
-                let pos = m.masked.pop().unwrap();
-                let row = &draft_logits[(r * d + pos) * v
-                                        ..(r * d + pos) * v + v];
-                let (tok, _) =
-                    kernels::gumbel_draw_lse(row, inv_t, m.rng.next_u64());
-                m.tokens[pos] = tok as i32;
-            }
-            if m.masked.is_empty() {
+        // Per-resident slot pointers for the planar reveal phase.
+        residents.clear();
+        // Every pointer is derived from one raw base: indexing `slots`
+        // per iteration would create a fresh unique reborrow of the
+        // whole buffer each time, invalidating the previously collected
+        // pointers under the Stacked Borrows aliasing rules.
+        let base = slots.as_mut_ptr();
+        for &si in active.iter() {
+            // SAFETY: `si < slots.len()` (collected from this very vec a
+            // moment ago) and every active slot is occupied.
+            let slot = unsafe {
+                (*base.add(si)).as_mut().expect("active slot")
+            };
+            residents.push(ResidentPtr(slot as *mut Slot));
+        }
+
+        // ---- planar reveal/draw phase -----------------------------------
+        let t = Instant::now();
+        {
+            let res: &[ResidentPtr] = &residents[..];
+            let dl: &[f32] = &draft_logits[..];
+            let rv: &[(usize, bool)] = &reveals[..];
+            pool.run(n_act, |_chunk, range| {
+                for r in range {
+                    // SAFETY: resident r is handed to exactly one chunk.
+                    let slot = unsafe { &mut *res[r].0 };
+                    let (m, p) = mdm_parts(slot);
+                    let (c, forced) = rv[r];
+                    let c = c.min(m.masked.len());
+                    debug_assert!(c > 0,
+                                  "resident MDM row must reveal every step");
+                    m.nfe += 1.0;
+                    m.steps_used += 1;
+                    // Zheng fix: choose WHICH positions to reveal
+                    // uniformly, independent of the sampled values.
+                    m.rng.shuffle(&mut m.masked);
+                    // The grid uses the sampling temperature; the final
+                    // forced pass (rounding leftovers) reveals at
+                    // temperature 1.
+                    let inv_t = if forced {
+                        1.0
+                    } else {
+                        (1.0 / p.temperature) as f32
+                    };
+                    for _ in 0..c {
+                        let pos = m.masked.pop().unwrap();
+                        let row = &dl[(r * d + pos) * v
+                                      ..(r * d + pos) * v + v];
+                        let (tok, _) = kernels::gumbel_draw_lse(
+                            row, inv_t, m.rng.next_u64());
+                        m.tokens[pos] = tok as i32;
+                    }
+                }
+            });
+        }
+        phases.draw_s += t.elapsed().as_secs_f64();
+
+        // Raw pointers die here; retirement re-borrows `slots`.
+        residents.clear();
+        for &si in active.iter() {
+            let done = {
+                let (m, _) = mdm_mut(&mut slots[si]);
+                m.masked.is_empty()
+            };
+            if done {
                 let slot = slots[si].take().unwrap();
                 finished.push((slot.id, emit_sample(slot.kernel)));
             }
@@ -679,6 +1032,29 @@ fn spec_mut(slot: &mut Option<Slot>) -> (&mut SeqState, &SpecParams) {
 fn mdm_mut(slot: &mut Option<Slot>) -> (&mut MdmState, &MdmParams) {
     match slot {
         Some(Slot { kernel: Kernel::Mdm(m, p), .. }) => (m, p),
+        _ => unreachable!("non-MDM slot in MDM step"),
+    }
+}
+
+/// Direct-slot flavors of the accessors above, used by the planar phases
+/// (which reach residents through [`ResidentPtr`], not `&mut Option`).
+fn spec_parts(slot: &mut Slot) -> (&mut SeqState, &SpecParams) {
+    match &mut slot.kernel {
+        Kernel::Spec(s, p) => (s, p),
+        _ => unreachable!("non-speculative slot in speculative step"),
+    }
+}
+
+fn spec_params_of(slot: &Slot) -> &SpecParams {
+    match &slot.kernel {
+        Kernel::Spec(_, p) => p,
+        _ => unreachable!("non-speculative slot in speculative step"),
+    }
+}
+
+fn mdm_parts(slot: &mut Slot) -> (&mut MdmState, &MdmParams) {
+    match &mut slot.kernel {
+        Kernel::Mdm(m, p) => (m, p),
         _ => unreachable!("non-MDM slot in MDM step"),
     }
 }
@@ -840,6 +1216,9 @@ pub trait Stepper {
     fn steps(&self) -> u64;
     fn backfills(&self) -> u64;
     fn take_placements(&mut self) -> Vec<SlotId>;
+    /// Per-phase wall-clock cost (model / draw / LSE / accept) since the
+    /// last call — the coordinator's per-phase step-cost reporting.
+    fn take_phases(&mut self) -> StepPhases;
 }
 
 /// A `SpecScheduler` bound to one model reference and one sampler setting
@@ -854,6 +1233,15 @@ pub struct BoundStepper<'m, M: HybridModel> {
 impl<'m, M: HybridModel> BoundStepper<'m, M> {
     pub fn new(model: &'m M, params: SeqParams) -> BoundStepper<'m, M> {
         BoundStepper { model, params, sched: SpecScheduler::for_model(model) }
+    }
+
+    /// Bound stepper whose scheduler runs its planar phases on the given
+    /// (shared) step pool.
+    pub fn with_pool(model: &'m M, params: SeqParams, pool: Arc<StepPool>)
+                     -> BoundStepper<'m, M> {
+        let mut stepper = BoundStepper::new(model, params);
+        stepper.sched.set_pool(pool);
+        stepper
     }
 }
 
@@ -892,6 +1280,10 @@ impl<'m, M: HybridModel> Stepper for BoundStepper<'m, M> {
 
     fn take_placements(&mut self) -> Vec<SlotId> {
         self.sched.take_placements()
+    }
+
+    fn take_phases(&mut self) -> StepPhases {
+        self.sched.take_phases()
     }
 }
 
@@ -1054,6 +1446,54 @@ mod tests {
             out.into_iter().map(|(_, s)| s.tokens).collect::<Vec<_>>()
         };
         assert_eq!(run(), run());
+    }
+
+    /// The planar-phase determinism contract at the scheduler level:
+    /// identical admissions produce bitwise-identical token streams and
+    /// counters for any `step_threads` (the full workload-level pin,
+    /// including the coordinator, lives in tests/thread_invariance.rs).
+    #[test]
+    fn scheduler_is_thread_count_invariant() {
+        let run = |threads: usize| {
+            let m = MockModel::new(18, 7, 91);
+            let mut sched = SpecScheduler::for_model(&m);
+            sched.set_pool(Arc::new(StepPool::new(threads)));
+            assert_eq!(sched.step_threads(), threads);
+            let mut rng = Pcg::new(0x7c0);
+            let params = SpecParams { n_verify: 2, ..Default::default() };
+            for _ in 0..6 {
+                sched.admit(&Prompt::empty(18), spec(&params), rng.split());
+            }
+            let mut out = Vec::new();
+            while !sched.is_idle() {
+                out.extend(sched.step(&m));
+            }
+            out.sort_by_key(|(id, _)| *id);
+            let tokens: Vec<Vec<i32>> =
+                out.iter().map(|(_, s)| s.tokens.clone()).collect();
+            let stats = sched.take_stats();
+            (tokens, sched.steps(), sched.row_steps(),
+             stats.accepted, stats.rejected, stats.verify_passes)
+        };
+        let base = run(1);
+        for t in [2usize, 3, 8] {
+            assert_eq!(run(t), base, "step_threads={t} diverged");
+        }
+    }
+
+    /// Phase timings are accumulated and drained.
+    #[test]
+    fn step_phases_are_reported() {
+        let m = MockModel::new(12, 4, 33);
+        let mut sched = SpecScheduler::for_model(&m);
+        sched.admit(&Prompt::empty(12), spec(&SpecParams::default()),
+                    Pcg::new(8));
+        sched.step(&m);
+        let ph = sched.take_phases();
+        assert!(ph.model_s > 0.0, "{ph:?}");
+        assert!(ph.total_s() >= ph.sampling_s());
+        let drained = sched.take_phases();
+        assert_eq!(drained, StepPhases::default());
     }
 
     #[test]

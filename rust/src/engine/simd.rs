@@ -1,0 +1,567 @@
+//! Explicit-SIMD (`core::arch`) variants of the sampling block kernels.
+//!
+//! Compiled only with the `simd` cargo feature. Each function here
+//! replicates its portable reference in `engine::kernels::portable`
+//! **operation for operation** — same per-lane arithmetic, same
+//! accumulation order, same integer bit games — so results are
+//! bit-identical with the feature on or off (pinned by
+//! `engine::kernels::tests::dispatched_blocks_match_portable_bitwise`),
+//! which is what keeps token streams invariant across builds.
+//!
+//! Dispatch is at runtime, cached after the first probe:
+//!
+//! | arch     | exp block | -ln block | row max |
+//! |----------|-----------|-----------|---------|
+//! | x86_64 + AVX2 | AVX2 | AVX2      | AVX2    |
+//! | x86_64 (base) | SSE2 | portable¹ | SSE2    |
+//! | aarch64       | NEON | NEON      | NEON    |
+//! | other         | portable | portable | portable |
+//!
+//! ¹ SSE2 has no 64-bit integer compare or i64→f64 convert, which the
+//!   `fln64` bit games need; the portable loop (auto-vectorized under
+//!   `target-cpu=native`) stands in.
+//!
+//! The counter-based SplitMix64 uniforms feeding the Gumbel race stay
+//! scalar everywhere: 64×64-bit multiplies have no AVX2/NEON lane form,
+//! and the hash is a small fraction of the block cost next to `exp`/`ln`.
+
+use crate::engine::kernels::{portable, BLK, LANES};
+
+/// Instruction set selected for the block kernels on this host.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Isa {
+    Portable,
+    Sse2,
+    Avx2,
+    Neon,
+}
+
+/// Runtime-detected ISA, probed once and cached.
+#[cfg(target_arch = "x86_64")]
+pub fn isa() -> Isa {
+    use std::sync::atomic::{AtomicU8, Ordering};
+    static CACHED: AtomicU8 = AtomicU8::new(0);
+    match CACHED.load(Ordering::Relaxed) {
+        2 => Isa::Avx2,
+        1 => Isa::Sse2,
+        _ => {
+            let detected = if std::arch::is_x86_feature_detected!("avx2") {
+                Isa::Avx2
+            } else {
+                Isa::Sse2 // x86_64 baseline
+            };
+            CACHED.store(if detected == Isa::Avx2 { 2 } else { 1 },
+                         Ordering::Relaxed);
+            detected
+        }
+    }
+}
+
+/// Runtime-detected ISA (NEON is baseline on aarch64).
+#[cfg(target_arch = "aarch64")]
+pub fn isa() -> Isa {
+    Isa::Neon
+}
+
+/// Runtime-detected ISA (no explicit kernels for this architecture).
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+pub fn isa() -> Isa {
+    Isa::Portable
+}
+
+/// Dispatched `exp_accum_block`: see
+/// [`portable::exp_accum_block`](crate::engine::kernels::portable) for
+/// the contract.
+#[inline]
+pub fn exp_accum_block(x: &[f32], inv_temp: f32, ms: f32,
+                       acc: &mut [f32; LANES], out: &mut [f32; BLK]) {
+    match isa() {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe {
+            x86::exp_accum_block_avx2(x, inv_temp, ms, acc, out)
+        },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Sse2 => unsafe {
+            x86::exp_accum_block_sse2(x, inv_temp, ms, acc, out)
+        },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe {
+            arm::exp_accum_block_neon(x, inv_temp, ms, acc, out)
+        },
+        _ => portable::exp_accum_block(x, inv_temp, ms, acc, out),
+    }
+}
+
+/// Dispatched in-place `-ln` block (SSE2 falls back to portable — no
+/// 64-bit lane compare/convert).
+#[inline]
+pub fn neg_ln_block(u: &mut [f64; BLK]) {
+    match isa() {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { x86::neg_ln_block_avx2(u) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { arm::neg_ln_block_neon(u) },
+        _ => portable::neg_ln_block(u),
+    }
+}
+
+/// Dispatched row max.
+#[inline]
+pub fn row_max(logits: &[f32]) -> f32 {
+    match isa() {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { x86::row_max_avx2(logits) },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Sse2 => unsafe { x86::row_max_sse2(logits) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { arm::row_max_neon(logits) },
+        _ => portable::row_max(logits),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Baseline-ISA entry points (SSE2 on x86_64, NEON on aarch64, portable
+// elsewhere). The runtime dispatcher never picks these on a host with a
+// better ISA, but a *different* host would — so the bit-identity test in
+// `engine::kernels` calls them directly: the "bitwise identical with
+// simd on/off" guarantee must hold for every variant any machine could
+// dispatch to, not just the best one on the CI runner.
+// ---------------------------------------------------------------------------
+
+/// Baseline-ISA `exp_accum_block` (see above).
+pub fn exp_accum_block_baseline(x: &[f32], inv_temp: f32, ms: f32,
+                                acc: &mut [f32; LANES],
+                                out: &mut [f32; BLK]) {
+    #[cfg(target_arch = "x86_64")]
+    // SAFETY: SSE2 is the x86_64 baseline.
+    return unsafe { x86::exp_accum_block_sse2(x, inv_temp, ms, acc, out) };
+    #[cfg(target_arch = "aarch64")]
+    // SAFETY: NEON is the aarch64 baseline.
+    return unsafe { arm::exp_accum_block_neon(x, inv_temp, ms, acc, out) };
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    portable::exp_accum_block(x, inv_temp, ms, acc, out)
+}
+
+/// Baseline-ISA `-ln` block (portable on x86_64 — SSE2 has no 64-bit
+/// lane compare/convert, exactly what the dispatcher does there).
+pub fn neg_ln_block_baseline(u: &mut [f64; BLK]) {
+    #[cfg(target_arch = "aarch64")]
+    // SAFETY: NEON is the aarch64 baseline.
+    return unsafe { arm::neg_ln_block_neon(u) };
+    #[cfg(not(target_arch = "aarch64"))]
+    portable::neg_ln_block(u)
+}
+
+/// Baseline-ISA row max (see above).
+pub fn row_max_baseline(logits: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    // SAFETY: SSE2 is the x86_64 baseline.
+    return unsafe { x86::row_max_sse2(logits) };
+    #[cfg(target_arch = "aarch64")]
+    // SAFETY: NEON is the aarch64 baseline.
+    return unsafe { arm::row_max_neon(logits) };
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    portable::row_max(logits)
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use core::arch::x86_64::*;
+
+    use crate::engine::kernels::{EXP_C1, EXP_C2, EXP_C3, EXP_C4, EXP_C5,
+                                 EXP_MAGIC, LN_POLY, LN_SQRT2_MANT, BLK,
+                                 LANES};
+
+    /// AVX2 `exp_accum_block`: eight `fexp32` lanes per iteration, lane
+    /// accumulation in the portable order.
+    ///
+    /// # Safety
+    ///
+    /// Caller must have verified AVX2 support (`super::isa()`).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn exp_accum_block_avx2(x: &[f32], inv_temp: f32, ms: f32,
+                                       acc: &mut [f32; LANES],
+                                       out: &mut [f32; BLK]) {
+        debug_assert_eq!(x.len(), BLK);
+        let inv_t = _mm256_set1_ps(inv_temp);
+        let msv = _mm256_set1_ps(ms);
+        let log2e = _mm256_set1_ps(std::f32::consts::LOG2E);
+        let lo = _mm256_set1_ps(-126.0);
+        let hi = _mm256_set1_ps(126.0);
+        let magic = _mm256_set1_ps(EXP_MAGIC);
+        let mant_mask = _mm256_set1_epi32(0x7f_ffff);
+        let bias = _mm256_set1_epi32(0x40_0000);
+        let one = _mm256_set1_ps(1.0);
+        let c1 = _mm256_set1_ps(EXP_C1);
+        let c2 = _mm256_set1_ps(EXP_C2);
+        let c3 = _mm256_set1_ps(EXP_C3);
+        let c4 = _mm256_set1_ps(EXP_C4);
+        let c5 = _mm256_set1_ps(EXP_C5);
+        let mut accv = _mm256_loadu_ps(acc.as_ptr());
+        let mut k = 0;
+        while k < BLK {
+            let xv = _mm256_loadu_ps(x.as_ptr().add(k));
+            // Mirrors fexp32(x·inv_temp - ms) term for term.
+            let xa = _mm256_sub_ps(_mm256_mul_ps(xv, inv_t), msv);
+            let z = _mm256_min_ps(
+                _mm256_max_ps(_mm256_mul_ps(xa, log2e), lo), hi);
+            let zs = _mm256_add_ps(z, magic);
+            let n = _mm256_sub_epi32(
+                _mm256_and_si256(_mm256_castps_si256(zs), mant_mask),
+                bias);
+            let r = _mm256_sub_ps(z, _mm256_sub_ps(zs, magic));
+            let r2 = _mm256_mul_ps(r, r);
+            let t1 = _mm256_add_ps(one, _mm256_mul_ps(c1, r));
+            let t2 = _mm256_add_ps(c2, _mm256_mul_ps(c3, r));
+            let t3 = _mm256_add_ps(c4, _mm256_mul_ps(c5, r));
+            let p = _mm256_add_ps(
+                t1,
+                _mm256_mul_ps(r2, _mm256_add_ps(t2, _mm256_mul_ps(r2, t3))),
+            );
+            let e = _mm256_castsi256_ps(_mm256_add_epi32(
+                _mm256_castps_si256(p),
+                _mm256_slli_epi32::<23>(n),
+            ));
+            _mm256_storeu_ps(out.as_mut_ptr().add(k), e);
+            accv = _mm256_add_ps(accv, e);
+            k += 8;
+        }
+        _mm256_storeu_ps(acc.as_mut_ptr(), accv);
+    }
+
+    /// Four `fexp32` lanes on a pre-scaled argument (`x·inv_temp - ms`).
+    ///
+    /// # Safety
+    ///
+    /// SSE2 is the x86_64 baseline; unsafe only for the intrinsics.
+    #[inline]
+    unsafe fn exp4_sse2(xa: __m128) -> __m128 {
+        let log2e = _mm_set1_ps(std::f32::consts::LOG2E);
+        let lo = _mm_set1_ps(-126.0);
+        let hi = _mm_set1_ps(126.0);
+        let magic = _mm_set1_ps(EXP_MAGIC);
+        let z = _mm_min_ps(_mm_max_ps(_mm_mul_ps(xa, log2e), lo), hi);
+        let zs = _mm_add_ps(z, magic);
+        let n = _mm_sub_epi32(
+            _mm_and_si128(_mm_castps_si128(zs), _mm_set1_epi32(0x7f_ffff)),
+            _mm_set1_epi32(0x40_0000),
+        );
+        let r = _mm_sub_ps(z, _mm_sub_ps(zs, magic));
+        let r2 = _mm_mul_ps(r, r);
+        let t1 = _mm_add_ps(_mm_set1_ps(1.0),
+                            _mm_mul_ps(_mm_set1_ps(EXP_C1), r));
+        let t2 = _mm_add_ps(_mm_set1_ps(EXP_C2),
+                            _mm_mul_ps(_mm_set1_ps(EXP_C3), r));
+        let t3 = _mm_add_ps(_mm_set1_ps(EXP_C4),
+                            _mm_mul_ps(_mm_set1_ps(EXP_C5), r));
+        let p = _mm_add_ps(
+            t1, _mm_mul_ps(r2, _mm_add_ps(t2, _mm_mul_ps(r2, t3))));
+        _mm_castsi128_ps(_mm_add_epi32(_mm_castps_si128(p),
+                                       _mm_slli_epi32::<23>(n)))
+    }
+
+    /// SSE2 `exp_accum_block`: the 8-lane accumulator is kept as two
+    /// 4-lane halves, preserving the portable per-lane add order.
+    ///
+    /// # Safety
+    ///
+    /// SSE2 is the x86_64 baseline; unsafe only for the raw loads.
+    pub unsafe fn exp_accum_block_sse2(x: &[f32], inv_temp: f32, ms: f32,
+                                       acc: &mut [f32; LANES],
+                                       out: &mut [f32; BLK]) {
+        debug_assert_eq!(x.len(), BLK);
+        let inv_t = _mm_set1_ps(inv_temp);
+        let msv = _mm_set1_ps(ms);
+        let mut acc_lo = _mm_loadu_ps(acc.as_ptr());
+        let mut acc_hi = _mm_loadu_ps(acc.as_ptr().add(4));
+        let mut k = 0;
+        while k < BLK {
+            let x0 = _mm_loadu_ps(x.as_ptr().add(k));
+            let x1 = _mm_loadu_ps(x.as_ptr().add(k + 4));
+            let e0 = exp4_sse2(_mm_sub_ps(_mm_mul_ps(x0, inv_t), msv));
+            let e1 = exp4_sse2(_mm_sub_ps(_mm_mul_ps(x1, inv_t), msv));
+            _mm_storeu_ps(out.as_mut_ptr().add(k), e0);
+            _mm_storeu_ps(out.as_mut_ptr().add(k + 4), e1);
+            acc_lo = _mm_add_ps(acc_lo, e0);
+            acc_hi = _mm_add_ps(acc_hi, e1);
+            k += 8;
+        }
+        _mm_storeu_ps(acc.as_mut_ptr(), acc_lo);
+        _mm_storeu_ps(acc.as_mut_ptr().add(4), acc_hi);
+    }
+
+    /// AVX2 `-fln64` over one block: four f64 lanes per iteration,
+    /// mirroring the scalar mantissa/exponent bit games exactly. The
+    /// exponent field is converted to f64 via the 2^52 magic-or trick
+    /// (exact for the 11-bit field; AVX2 has no i64→f64 convert).
+    ///
+    /// # Safety
+    ///
+    /// Caller must have verified AVX2 support (`super::isa()`).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn neg_ln_block_avx2(u: &mut [f64; BLK]) {
+        let mant_mask = _mm256_set1_epi64x(0x000f_ffff_ffff_ffff);
+        let sqrt2_lt = _mm256_set1_epi64x(LN_SQRT2_MANT as i64 - 1);
+        let exp_field = _mm256_set1_epi64x(0x7ff);
+        let int_magic = _mm256_set1_epi64x(0x4330_0000_0000_0000);
+        let int_magic_f = _mm256_set1_pd(4_503_599_627_370_496.0); // 2^52
+        let bias_f = _mm256_set1_pd(1023.0);
+        let one_bit52 = _mm256_set1_epi64x(1i64 << 52);
+        let exp_bias = _mm256_set1_epi64x(1023i64 << 52);
+        let one = _mm256_set1_pd(1.0);
+        let half = _mm256_set1_pd(0.5);
+        let ln2 = _mm256_set1_pd(std::f64::consts::LN_2);
+        let sign = _mm256_set1_pd(-0.0);
+        let mut k = 0;
+        while k < BLK {
+            let xv = _mm256_loadu_pd(u.as_ptr().add(k));
+            let bits = _mm256_castpd_si256(xv);
+            let mant = _mm256_and_si256(bits, mant_mask);
+            // mant >= sqrt(2) mantissa, as mant > (threshold - 1): both
+            // operands are < 2^52 so the signed compare is exact.
+            let ge = _mm256_cmpgt_epi64(mant, sqrt2_lt);
+            let eraw = _mm256_and_si256(_mm256_srli_epi64::<52>(bits),
+                                        exp_field);
+            let ef = _mm256_sub_pd(
+                _mm256_castsi256_pd(_mm256_or_si256(eraw, int_magic)),
+                int_magic_f,
+            );
+            let adj_f = _mm256_and_pd(_mm256_castsi256_pd(ge), one);
+            // e = raw_exponent - 1023 + adj, exactly (all integers).
+            let e_val = _mm256_add_pd(_mm256_sub_pd(ef, bias_f), adj_f);
+            let sub52 = _mm256_and_si256(ge, one_bit52);
+            let biased = _mm256_sub_epi64(exp_bias, sub52);
+            let m = _mm256_castsi256_pd(_mm256_or_si256(mant, biased));
+            let w = _mm256_sub_pd(m, one);
+            let z = _mm256_mul_pd(w, w);
+            let mut p = _mm256_set1_pd(LN_POLY[0]);
+            for &c in &LN_POLY[1..] {
+                p = _mm256_add_pd(_mm256_mul_pd(p, w), _mm256_set1_pd(c));
+            }
+            let y = _mm256_sub_pd(_mm256_mul_pd(_mm256_mul_pd(w, z), p),
+                                  _mm256_mul_pd(half, z));
+            let res = _mm256_add_pd(_mm256_add_pd(w, y),
+                                    _mm256_mul_pd(e_val, ln2));
+            // -x = exact sign-bit flip, matching the scalar negation.
+            _mm256_storeu_pd(u.as_mut_ptr().add(k),
+                             _mm256_xor_pd(res, sign));
+            k += 4;
+        }
+    }
+
+    /// AVX2 row max (portable lane order: vector max per 8-chunk, lanes
+    /// folded sequentially, scalar remainder).
+    ///
+    /// # Safety
+    ///
+    /// Caller must have verified AVX2 support (`super::isa()`).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn row_max_avx2(logits: &[f32]) -> f32 {
+        let n = logits.len();
+        let mut accv = _mm256_set1_ps(f32::NEG_INFINITY);
+        let mut i = 0;
+        while i + 8 <= n {
+            accv = _mm256_max_ps(_mm256_loadu_ps(logits.as_ptr().add(i)),
+                                 accv);
+            i += 8;
+        }
+        let mut acc = [f32::NEG_INFINITY; LANES];
+        _mm256_storeu_ps(acc.as_mut_ptr(), accv);
+        let mut m = f32::NEG_INFINITY;
+        for &a in &acc {
+            m = a.max(m);
+        }
+        while i < n {
+            m = logits[i].max(m);
+            i += 1;
+        }
+        m
+    }
+
+    /// SSE2 row max, two 4-lane halves of the 8-lane accumulator.
+    ///
+    /// # Safety
+    ///
+    /// SSE2 is the x86_64 baseline; unsafe only for the raw loads.
+    pub unsafe fn row_max_sse2(logits: &[f32]) -> f32 {
+        let n = logits.len();
+        let mut acc_lo = _mm_set1_ps(f32::NEG_INFINITY);
+        let mut acc_hi = _mm_set1_ps(f32::NEG_INFINITY);
+        let mut i = 0;
+        while i + 8 <= n {
+            acc_lo = _mm_max_ps(_mm_loadu_ps(logits.as_ptr().add(i)),
+                                acc_lo);
+            acc_hi = _mm_max_ps(_mm_loadu_ps(logits.as_ptr().add(i + 4)),
+                                acc_hi);
+            i += 8;
+        }
+        let mut acc = [f32::NEG_INFINITY; LANES];
+        _mm_storeu_ps(acc.as_mut_ptr(), acc_lo);
+        _mm_storeu_ps(acc.as_mut_ptr().add(4), acc_hi);
+        let mut m = f32::NEG_INFINITY;
+        for &a in &acc {
+            m = a.max(m);
+        }
+        while i < n {
+            m = logits[i].max(m);
+            i += 1;
+        }
+        m
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    use core::arch::aarch64::*;
+
+    use crate::engine::kernels::{EXP_C1, EXP_C2, EXP_C3, EXP_C4, EXP_C5,
+                                 EXP_MAGIC, LN_POLY, LN_SQRT2_MANT, BLK,
+                                 LANES};
+
+    /// Four `fexp32` lanes on a pre-scaled argument.
+    ///
+    /// # Safety
+    ///
+    /// NEON is the aarch64 baseline; unsafe only for the intrinsics.
+    #[inline]
+    unsafe fn exp4_neon(xa: float32x4_t) -> float32x4_t {
+        let log2e = vdupq_n_f32(std::f32::consts::LOG2E);
+        let lo = vdupq_n_f32(-126.0);
+        let hi = vdupq_n_f32(126.0);
+        let magic = vdupq_n_f32(EXP_MAGIC);
+        let z = vminq_f32(vmaxq_f32(vmulq_f32(xa, log2e), lo), hi);
+        let zs = vaddq_f32(z, magic);
+        let n = vsubq_s32(
+            vandq_s32(vreinterpretq_s32_f32(zs), vdupq_n_s32(0x7f_ffff)),
+            vdupq_n_s32(0x40_0000),
+        );
+        let r = vsubq_f32(z, vsubq_f32(zs, magic));
+        let r2 = vmulq_f32(r, r);
+        let t1 = vaddq_f32(vdupq_n_f32(1.0),
+                           vmulq_f32(vdupq_n_f32(EXP_C1), r));
+        let t2 = vaddq_f32(vdupq_n_f32(EXP_C2),
+                           vmulq_f32(vdupq_n_f32(EXP_C3), r));
+        let t3 = vaddq_f32(vdupq_n_f32(EXP_C4),
+                           vmulq_f32(vdupq_n_f32(EXP_C5), r));
+        let p = vaddq_f32(t1, vmulq_f32(r2, vaddq_f32(t2, vmulq_f32(r2, t3))));
+        vreinterpretq_f32_s32(vaddq_s32(vreinterpretq_s32_f32(p),
+                                        vshlq_n_s32::<23>(n)))
+    }
+
+    /// NEON `exp_accum_block` (two 4-lane halves of the 8-lane
+    /// accumulator, portable add order).
+    ///
+    /// # Safety
+    ///
+    /// NEON is the aarch64 baseline; unsafe only for the raw loads.
+    pub unsafe fn exp_accum_block_neon(x: &[f32], inv_temp: f32, ms: f32,
+                                       acc: &mut [f32; LANES],
+                                       out: &mut [f32; BLK]) {
+        debug_assert_eq!(x.len(), BLK);
+        let inv_t = vdupq_n_f32(inv_temp);
+        let msv = vdupq_n_f32(ms);
+        let mut acc_lo = vld1q_f32(acc.as_ptr());
+        let mut acc_hi = vld1q_f32(acc.as_ptr().add(4));
+        let mut k = 0;
+        while k < BLK {
+            let x0 = vld1q_f32(x.as_ptr().add(k));
+            let x1 = vld1q_f32(x.as_ptr().add(k + 4));
+            let e0 = exp4_neon(vsubq_f32(vmulq_f32(x0, inv_t), msv));
+            let e1 = exp4_neon(vsubq_f32(vmulq_f32(x1, inv_t), msv));
+            vst1q_f32(out.as_mut_ptr().add(k), e0);
+            vst1q_f32(out.as_mut_ptr().add(k + 4), e1);
+            acc_lo = vaddq_f32(acc_lo, e0);
+            acc_hi = vaddq_f32(acc_hi, e1);
+            k += 8;
+        }
+        vst1q_f32(acc.as_mut_ptr(), acc_lo);
+        vst1q_f32(acc.as_mut_ptr().add(4), acc_hi);
+    }
+
+    /// NEON `-fln64` over one block, two f64 lanes per iteration
+    /// (aarch64 has a direct exact i64→f64 convert).
+    ///
+    /// # Safety
+    ///
+    /// NEON is the aarch64 baseline; unsafe only for the raw loads.
+    pub unsafe fn neg_ln_block_neon(u: &mut [f64; BLK]) {
+        let mut k = 0;
+        while k < BLK {
+            let xv = vld1q_f64(u.as_ptr().add(k));
+            let bits = vreinterpretq_u64_f64(xv);
+            let mant = vandq_u64(bits, vdupq_n_u64(0x000f_ffff_ffff_ffff));
+            let ge = vcgeq_u64(mant, vdupq_n_u64(LN_SQRT2_MANT));
+            let eraw = vandq_u64(vshrq_n_u64::<52>(bits),
+                                 vdupq_n_u64(0x7ff));
+            let adj = vandq_u64(ge, vdupq_n_u64(1));
+            let e_i = vsubq_s64(
+                vaddq_s64(vreinterpretq_s64_u64(eraw),
+                          vreinterpretq_s64_u64(adj)),
+                vdupq_n_s64(1023),
+            );
+            let e_f = vcvtq_f64_s64(e_i);
+            let sub52 = vandq_u64(ge, vdupq_n_u64(1u64 << 52));
+            let biased = vsubq_u64(vdupq_n_u64(1023u64 << 52), sub52);
+            let m = vreinterpretq_f64_u64(vorrq_u64(mant, biased));
+            let w = vsubq_f64(m, vdupq_n_f64(1.0));
+            let z = vmulq_f64(w, w);
+            let mut p = vdupq_n_f64(LN_POLY[0]);
+            for &c in &LN_POLY[1..] {
+                p = vaddq_f64(vmulq_f64(p, w), vdupq_n_f64(c));
+            }
+            let y = vsubq_f64(vmulq_f64(vmulq_f64(w, z), p),
+                              vmulq_f64(vdupq_n_f64(0.5), z));
+            let res = vaddq_f64(
+                vaddq_f64(w, y),
+                vmulq_f64(e_f, vdupq_n_f64(std::f64::consts::LN_2)),
+            );
+            vst1q_f64(u.as_mut_ptr().add(k), vnegq_f64(res));
+            k += 2;
+        }
+    }
+
+    /// NEON row max (portable lane order).
+    ///
+    /// # Safety
+    ///
+    /// NEON is the aarch64 baseline; unsafe only for the raw loads.
+    pub unsafe fn row_max_neon(logits: &[f32]) -> f32 {
+        let n = logits.len();
+        let mut acc_lo = vdupq_n_f32(f32::NEG_INFINITY);
+        let mut acc_hi = vdupq_n_f32(f32::NEG_INFINITY);
+        let mut i = 0;
+        while i + 8 <= n {
+            acc_lo = vmaxq_f32(vld1q_f32(logits.as_ptr().add(i)), acc_lo);
+            acc_hi = vmaxq_f32(vld1q_f32(logits.as_ptr().add(i + 4)),
+                               acc_hi);
+            i += 8;
+        }
+        let mut acc = [f32::NEG_INFINITY; LANES];
+        vst1q_f32(acc.as_mut_ptr(), acc_lo);
+        vst1q_f32(acc.as_mut_ptr().add(4), acc_hi);
+        let mut m = f32::NEG_INFINITY;
+        for &a in &acc {
+            m = a.max(m);
+        }
+        while i < n {
+            m = logits[i].max(m);
+            i += 1;
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn isa_probe_is_stable() {
+        let a = isa();
+        let b = isa();
+        assert_eq!(a, b);
+        // On x86_64 the probe must land on a real x86 ISA.
+        #[cfg(target_arch = "x86_64")]
+        assert!(matches!(a, Isa::Avx2 | Isa::Sse2));
+    }
+}

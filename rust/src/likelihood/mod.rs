@@ -53,10 +53,16 @@ impl SpecTable {
 
         let mut p = vec![vec![0.0; d]; d];
         let mut q = vec![vec![0.0; d]; d];
+        // Batched LSE tables, one slot per flat logits row of the chunk
+        // (NaN = not yet normalized): every draft/verify row the chunk
+        // scores has its log-sum-exp computed **exactly once**, even when
+        // several scored tokens index the same row — the old loop called
+        // the O(V) normalizer once per scored token.
+        let mut dlse = vec![f64::NAN; bucket * d];
+        let mut qlse = vec![f64::NAN; bucket * d];
 
         let contexts: Vec<usize> = (0..d).collect();
         for chunk in contexts.chunks(bucket) {
-            let rows = chunk.len();
             // Build masked contexts: row r reveals the first chunk[r]
             // ordering positions.
             let mut masked = vec![mask; bucket * d];
@@ -74,23 +80,44 @@ impl SpecTable {
                 .collect();
             let target_logits = model.verify(&state, &full, &sig, bucket);
 
-            for (r, &c) in chunk.iter().enumerate().take(rows) {
+            // ---- batched LSE pass over every row this chunk reads ----
+            dlse.iter_mut().for_each(|x| *x = f64::NAN);
+            qlse.iter_mut().for_each(|x| *x = f64::NAN);
+            for (r, &c) in chunk.iter().enumerate() {
+                for dd in c..d {
+                    let fl = r * d + sigma[dd] as usize;
+                    if dlse[fl].is_nan() {
+                        dlse[fl] = lse_f64(&draft_logits
+                            [fl * v..fl * v + v]);
+                    }
+                    if dd > 0 {
+                        let tl = r * d + (dd - 1);
+                        if qlse[tl].is_nan() {
+                            qlse[tl] = lse_f64(&target_logits
+                                [tl * v..tl * v + v]);
+                        }
+                    }
+                }
+            }
+
+            // ---- scoring pass: one scalar read + cached LSE per entry
+            // (exp(l[tok] - lse) replaces the old softmax_row(row)[tok],
+            // which allocated and normalized a V-length vector per entry).
+            for (r, &c) in chunk.iter().enumerate() {
                 for dd in c..d {
                     let pos = sigma[dd] as usize;
                     let tok = tokens[pos] as usize;
-                    let row = &draft_logits
-                        [(r * d + pos) * v..(r * d + pos) * v + v];
-                    // One scalar read per row: exp(l[tok] - lse) replaces
-                    // the old softmax_row(row)[tok], which allocated and
-                    // normalized a full V-length vector per table entry.
-                    p[c][dd] = (row[tok] as f64 - lse_f64(row)).exp();
+                    let fl = r * d + pos;
+                    p[c][dd] = (draft_logits[fl * v + tok] as f64
+                        - dlse[fl])
+                        .exp();
                     if dd == 0 {
                         q[c][dd] = p[c][dd]; // first-position rule
                     } else {
-                        let tr = (r * d + (dd - 1)) * v;
-                        let trow = &target_logits[tr..tr + v];
-                        q[c][dd] =
-                            (trow[tok] as f64 - lse_f64(trow)).exp();
+                        let tl = r * d + (dd - 1);
+                        q[c][dd] = (target_logits[tl * v + tok] as f64
+                            - qlse[tl])
+                            .exp();
                     }
                 }
             }

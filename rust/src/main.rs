@@ -56,6 +56,8 @@ fn print_help() {
          \x20 serve     --artifacts DIR --addr 127.0.0.1:8080 [--models a,b]\n\
          \x20           [--queue-policy \"pending:256,shed;m=weight:4,\n\
          \x20           slo:0.05,burst:2\"] (weighted SLO-aware scheduling)\n\
+         \x20           [--step-threads N] (planar-phase workers; results\n\
+         \x20           are bitwise identical for any N)\n\
          \x20 generate  --artifacts DIR --model NAME [--n 4] [--sampler\n\
          \x20           speculative|mdm] [--window cosine:0.05] [--n-verify 1]\n\
          \x20           [--steps 64] [--seed 0] [--decode text8]\n\
@@ -109,6 +111,16 @@ fn start_coordinator(args: &Args) -> Result<Coordinator> {
             .apply_cli(&spec)
             .map_err(|e| anyhow!("--queue-policy: {e}"))?;
     }
+    // Planar-phase executor width of the engine's shared step pool
+    // (`--step-threads N`, or the STEP_THREADS env var — handy for CI
+    // and benches). 1 = the exact single-threaded code path. Token
+    // streams are bitwise identical for any value (see engine::pool),
+    // so this is purely a throughput knob.
+    let env_threads = std::env::var("STEP_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(1);
+    sched.step_threads = args.usize("step-threads", env_threads).max(1);
     Coordinator::start(
         model_factory(artifacts, only),
         BatcherConfig {

@@ -150,6 +150,30 @@ impl HybridModel for PjrtModel {
 
     fn draft(&self, tokens: &[i32], batch: usize)
              -> (xla::Literal, Vec<f32>) {
+        let mut state = None;
+        let mut logits = Vec::new();
+        self.draft_into(tokens, batch, &mut state, &mut logits);
+        (state.expect("draft_into sets the state"), logits)
+    }
+
+    fn verify(&self, state: &xla::Literal, tokens: &[i32], sigma: &[i32],
+              batch: usize) -> Vec<f32> {
+        let mut logits = Vec::new();
+        self.verify_into(state, tokens, sigma, batch, &mut logits);
+        logits
+    }
+
+    /// Arena-write draft: the device output is split **directly into the
+    /// caller's logits buffer** (the scheduler's `StepArena` hands its
+    /// retained `draft_logits` vec here), so warm steps reuse one stable
+    /// allocation instead of receiving a fresh `Vec` per forward pass
+    /// and dropping the old one. The host staging copy of the [B, D,
+    /// C+V] device array and the `h` literal upload are inherent to the
+    /// current host-resident PJRT flow (device-resident state is the
+    /// ROADMAP follow-up); what this override removes is the per-step
+    /// logits vec churn on the engine's hot path.
+    fn draft_into(&self, tokens: &[i32], batch: usize,
+                  state: &mut Option<xla::Literal>, logits: &mut Vec<f32>) {
         let d = self.config.seq_len;
         let c = self.config.hidden;
         let v = self.config.vocab_size;
@@ -162,11 +186,12 @@ impl HybridModel for PjrtModel {
         let mut elems = untuple(rows.swap_remove(0));
         assert_eq!(elems.len(), 1, "draft must return concat(h, logits)");
         // Single-array output [B, D, C+V] (see python make_draft_fn);
-        // split back into h and logits.
+        // split back into h and the caller's logits buffer.
         let full = elems.pop().unwrap().to_vec::<f32>().expect("draft vec");
         debug_assert_eq!(full.len(), batch * d * (c + v));
         let mut h = Vec::with_capacity(batch * d * c);
-        let mut logits = Vec::with_capacity(batch * d * v);
+        logits.clear();
+        logits.reserve(batch * d * v);
         for row in full.chunks_exact(c + v) {
             h.extend_from_slice(&row[..c]);
             logits.extend_from_slice(&row[c..]);
@@ -174,11 +199,17 @@ impl HybridModel for PjrtModel {
         let h_lit = xla::Literal::vec1(&h)
             .reshape(&[batch as i64, d as i64, c as i64])
             .expect("h reshape");
-        (h_lit, logits)
+        *state = Some(h_lit);
     }
 
-    fn verify(&self, state: &xla::Literal, tokens: &[i32], sigma: &[i32],
-              batch: usize) -> Vec<f32> {
+    /// Verify flavor of the arena seam. The host read (`to_vec`) must
+    /// allocate — the xla surface used here has no read-into-buffer
+    /// call — so the cheapest correct move is to hand that vec to the
+    /// caller's slot directly (no extra copy; the previous buffer is
+    /// dropped). A true zero-churn device→arena copy needs a raw-copy
+    /// literal API: ROADMAP follow-up alongside device-resident state.
+    fn verify_into(&self, state: &xla::Literal, tokens: &[i32],
+                   sigma: &[i32], batch: usize, logits: &mut Vec<f32>) {
         let d = self.config.seq_len;
         debug_assert_eq!(tokens.len(), batch * d);
         let exe = Self::exe_for(&self.verify, batch, "verify");
@@ -190,6 +221,6 @@ impl HybridModel for PjrtModel {
             .expect("verify execute");
         let mut elems = untuple(rows.swap_remove(0));
         assert_eq!(elems.len(), 1, "verify must return (logits,)");
-        elems.pop().unwrap().to_vec::<f32>().expect("verify vec")
+        *logits = elems.pop().unwrap().to_vec::<f32>().expect("verify vec");
     }
 }

@@ -82,6 +82,20 @@ impl HybridModel for PjrtModel {
               _batch: usize) -> Vec<f32> {
         unreachable!("stub runtime cannot execute models")
     }
+
+    // API parity with `runtime::pjrt`: the real runtime overrides the
+    // buffer-reusing flavors to write device outputs straight into the
+    // scheduler's arena; the stub mirrors the overrides so both feature
+    // configurations expose the identical surface.
+    fn draft_into(&self, _tokens: &[i32], _batch: usize,
+                  _state: &mut Option<()>, _logits: &mut Vec<f32>) {
+        unreachable!("stub runtime cannot execute models")
+    }
+
+    fn verify_into(&self, _state: &(), _tokens: &[i32], _sigma: &[i32],
+                   _batch: usize, _logits: &mut Vec<f32>) {
+        unreachable!("stub runtime cannot execute models")
+    }
 }
 
 #[cfg(test)]

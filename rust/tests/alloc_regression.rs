@@ -16,10 +16,12 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
+use std::sync::Arc;
+
 use ssmd::coordinator::sched::{CrossQueueScheduler, QueueId, QueuePolicy,
                                SchedConfig};
 use ssmd::engine::{MdmParams, MockModel, Prompt, SeqParams, SpecParams,
-                   SpecScheduler, Window};
+                   SpecScheduler, StepPool, Window};
 use ssmd::util::rng::Pcg;
 use ssmd::util::simclock::MonotonicClock;
 
@@ -132,6 +134,44 @@ fn warm_scheduler_steps_allocate_nothing() {
         "warm MDM steps must not allocate (got {mdm_allocs} allocations \
          across 4 steps)"
     );
+
+    // ---- pooled planar path (step_threads = 2, 2 residents) --------------
+    // The planar phases dispatch through the step pool's mutex/condvar
+    // hand-off (workers pre-spawned at pool construction), which must
+    // not touch the heap: no per-step channel, closure box, or Vec
+    // churn. Two residents so every phase really crosses the pool (one
+    // resident takes the inline single-chunk shortcut).
+    let pool = Arc::new(StepPool::new(2));
+    let mut model2 = MockModel::new(d, 16, 0xa110c);
+    model2.buckets = vec![2];
+    let mut sched = SpecScheduler::for_model(&model2);
+    sched.set_pool(pool.clone());
+    let params = SpecParams {
+        window: Window::Cosine { dtau: 0.02 },
+        ..Default::default()
+    };
+    sched.admit(&Prompt::empty(d), SeqParams::Spec(params.clone()),
+                Pcg::new(7));
+    sched.admit(&Prompt::empty(d), SeqParams::Spec(params), Pcg::new(8));
+    for _ in 0..3 {
+        sched.step(&model2);
+    }
+    assert_eq!(sched.n_active(), 2, "both sequences must stay resident");
+
+    let before = allocs();
+    for _ in 0..4 {
+        sched.step(&model2);
+    }
+    let pooled_allocs = allocs() - before;
+    assert_eq!(sched.n_active(), 2,
+               "measured pooled steps must not retire a sequence");
+    assert_eq!(
+        pooled_allocs, 0,
+        "warm pooled planar steps must not allocate (got {pooled_allocs} \
+         allocations across 4 steps with step_threads=2)"
+    );
+    drop(sched);
+    drop(pool);
 
     // ---- weighted cross-queue selector path -------------------------------
     // Multiple live queues through the full engine-loop cycle

@@ -1,0 +1,215 @@
+//! Thread-count / SIMD invariance of the planar scheduler.
+//!
+//! The planar step loop's determinism contract: for one seeded workload,
+//! **token streams and every metrics counter are bitwise identical** no
+//! matter how many step-pool threads execute the phases. Each row's
+//! noise stream is counter-based per (row, pcg-draw) and residents are
+//! mutually independent, so the executor count can only change wall
+//! time, never results. This file pins that at three levels — raw
+//! scheduler (speculative + MDM) and the full coordinator with
+//! `SchedConfig::step_threads` — at `step_threads ∈ {1, 2, 8}`.
+//!
+//! SIMD invariance rides on the same pin: CI runs this test with and
+//! without `--features simd`, and the block kernels the sampler calls
+//! are asserted bit-identical to the portable reference inside
+//! `engine::kernels::tests::dispatched_blocks_match_portable_bitwise`,
+//! so the streams asserted here are the same streams in both builds.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use ssmd::coordinator::{
+    BatcherConfig, Coordinator, EngineModel, GenRequest, ModelMap,
+    SamplerChoice, SchedConfig,
+};
+use ssmd::engine::{
+    MdmParams, MockModel, Prompt, SeqParams, SpecParams, SpecScheduler,
+    StepPool, Window,
+};
+use ssmd::util::rng::Pcg;
+
+const D: usize = 24;
+const V: usize = 12;
+
+/// A mixed workload: empty prompts, partially-revealed prompts, and
+/// enough sequences to exercise backfill through a small bucket ladder.
+fn prompts() -> Vec<Prompt> {
+    (0..10)
+        .map(|i| {
+            let mut p = Prompt::empty(D);
+            if i % 3 == 1 {
+                for pos in 0..D / 2 {
+                    p.0[pos] = Some(((pos + i) % V) as i32);
+                }
+            }
+            p
+        })
+        .collect()
+}
+
+fn model() -> MockModel {
+    let mut m = MockModel::new(D, V, 0x51d);
+    m.buckets = vec![1, 2, 4];
+    m
+}
+
+/// Everything the workload observes: per-sequence token streams (in
+/// admission order) plus every scheduler counter and stat.
+#[derive(Debug, PartialEq, Eq)]
+struct Fingerprint {
+    tokens: Vec<Vec<i32>>,
+    steps: u64,
+    row_steps: u64,
+    padded_row_steps: u64,
+    backfills: u64,
+    accepted: usize,
+    rejected: usize,
+    verify_passes: usize,
+    outer_loops: usize,
+}
+
+fn run_spec(threads: usize) -> Fingerprint {
+    let m = model();
+    let mut sched = SpecScheduler::for_model(&m);
+    sched.set_pool(Arc::new(StepPool::new(threads)));
+    let params = SpecParams {
+        window: Window::Cosine { dtau: 0.08 },
+        n_verify: 2,
+        temperature: 0.7,
+        ..Default::default()
+    };
+    let mut rng = Pcg::new(0xbeef);
+    let ids: Vec<_> = prompts()
+        .iter()
+        .map(|p| sched.admit(p, SeqParams::Spec(params.clone()),
+                             rng.split()))
+        .collect();
+    let mut done = BTreeMap::new();
+    while !sched.is_idle() {
+        for (id, s) in sched.step(&m) {
+            done.insert(id, s);
+        }
+    }
+    let stats = sched.take_stats();
+    Fingerprint {
+        tokens: ids
+            .iter()
+            .map(|id| done.remove(id).expect("retired").tokens)
+            .collect(),
+        steps: sched.steps(),
+        row_steps: sched.row_steps(),
+        padded_row_steps: sched.padded_row_steps(),
+        backfills: sched.backfills(),
+        accepted: stats.accepted,
+        rejected: stats.rejected,
+        verify_passes: stats.verify_passes,
+        outer_loops: stats.outer_loops,
+    }
+}
+
+fn run_mdm(threads: usize) -> Fingerprint {
+    let m = model();
+    let mut sched = SpecScheduler::for_model(&m);
+    sched.set_pool(Arc::new(StepPool::new(threads)));
+    let params = MdmParams { steps: 12, temperature: 0.7 };
+    let mut rng = Pcg::new(0xfeed);
+    let ids: Vec<_> = prompts()
+        .iter()
+        .map(|p| sched.admit(p, SeqParams::Mdm(params.clone()),
+                             rng.split()))
+        .collect();
+    let mut done = BTreeMap::new();
+    while !sched.is_idle() {
+        for (id, s) in sched.step(&m) {
+            done.insert(id, s);
+        }
+    }
+    let stats = sched.take_stats();
+    Fingerprint {
+        tokens: ids
+            .iter()
+            .map(|id| done.remove(id).expect("retired").tokens)
+            .collect(),
+        steps: sched.steps(),
+        row_steps: sched.row_steps(),
+        padded_row_steps: sched.padded_row_steps(),
+        backfills: sched.backfills(),
+        accepted: stats.accepted,
+        rejected: stats.rejected,
+        verify_passes: stats.verify_passes,
+        outer_loops: stats.outer_loops,
+    }
+}
+
+#[test]
+fn spec_workload_is_thread_count_invariant() {
+    let base = run_spec(1);
+    assert!(base.rejected > 0,
+            "workload must exercise the residual path, not just accepts");
+    assert!(base.backfills > 0, "workload must exercise backfill");
+    for t in [2usize, 8] {
+        assert_eq!(run_spec(t), base, "step_threads={t} diverged");
+    }
+}
+
+#[test]
+fn mdm_workload_is_thread_count_invariant() {
+    let base = run_mdm(1);
+    for t in [2usize, 8] {
+        assert_eq!(run_mdm(t), base, "step_threads={t} diverged");
+    }
+}
+
+fn coordinator_with_threads(step_threads: usize) -> Coordinator {
+    Coordinator::start(
+        || {
+            let mut m: ModelMap = BTreeMap::new();
+            let mut mm = MockModel::new(D, V, 0x51d);
+            mm.buckets = vec![1, 2, 4];
+            m.insert("mock".into(), Box::new(mm) as Box<dyn EngineModel>);
+            Ok(m)
+        },
+        BatcherConfig {
+            max_wait: Duration::from_millis(1),
+            sched: SchedConfig { step_threads, ..Default::default() },
+        },
+    )
+    .unwrap()
+}
+
+/// End-to-end wiring of `--step-threads`: a deterministic request must
+/// return identical samples whether the engine's shared pool has 1 or 4
+/// workers, for both samplers.
+#[test]
+fn coordinator_results_are_step_thread_invariant() {
+    let single = coordinator_with_threads(1);
+    let pooled = coordinator_with_threads(4);
+    for sampler in [
+        SamplerChoice::Speculative(SpecParams {
+            n_verify: 2,
+            ..Default::default()
+        }),
+        SamplerChoice::Mdm(MdmParams { steps: 8, temperature: 1.0 }),
+    ] {
+        let req = GenRequest {
+            model: "mock".into(),
+            n_samples: 6,
+            sampler,
+            seed: 4242,
+            deterministic: true,
+            ..Default::default()
+        };
+        let a = single.generate(req.clone()).unwrap();
+        let b = pooled.generate(req).unwrap();
+        assert_eq!(a.samples.len(), b.samples.len());
+        for (x, y) in a.samples.iter().zip(&b.samples) {
+            assert_eq!(x.tokens, y.tokens);
+            assert_eq!(x.accepted, y.accepted);
+            assert_eq!(x.rejected, y.rejected);
+            assert!((x.nfe - y.nfe).abs() < 1e-12);
+        }
+    }
+    single.shutdown();
+    pooled.shutdown();
+}
