@@ -1,0 +1,225 @@
+//! Record a live run's arrivals/costs as a JSONL trace and replay it
+//! deterministically through the virtual-time sim harness (`ssmd::sim`).
+//!
+//!   # Replay a trace twice; exit nonzero unless the replays are
+//!   # bitwise-stable (steps/sheds/violations/preemptions/tokens):
+//!   cargo run --example trace_replay -- --replay benchmarks/traces/smoke.jsonl
+//!
+//!   # Record a synthetic live workload against a real Coordinator
+//!   # (MockModels, wall clock), assemble the event stream into a
+//!   # trace, write it, and validate it replays:
+//!   cargo run --example trace_replay -- --record /tmp/recorded.jsonl
+//!
+//! Recording uses the coordinator's `BatcherConfig::trace` hook: the
+//! engine loop streams one event per admitted request (backdated
+//! arrival instant, model, n, seed, priority) and per executed step
+//! (model, observed wall cost). `sim::assemble_trace` groups the events
+//! by model into sim queues — per-queue step cost is the mean observed
+//! cost — so the recorded traffic *shape* replays in exact virtual time
+//! on any machine, however noisy the recording box was. CI replays a
+//! checked-in smoke trace (which exercises preemption) plus a fresh
+//! recording on every run.
+
+use std::collections::BTreeMap;
+use std::process::exit;
+use std::sync::mpsc;
+use std::time::Duration;
+
+use ssmd::coordinator::sched::{QueuePolicy, SchedConfig};
+use ssmd::coordinator::{
+    BatcherConfig, Coordinator, EngineModel, GenRequest, ModelMap,
+    SamplerChoice,
+};
+use ssmd::engine::{MockModel, SpecParams, Window};
+use ssmd::sim::{assemble_trace, p95, read_trace, simulate, write_trace,
+                QueueGeometry, Selector};
+use ssmd::util::args::Args;
+
+fn main() {
+    let args = Args::from_env();
+    // --expect-preemptions: fail unless the replay actually exercised
+    // the preemption path (CI passes it for the checked-in smoke trace,
+    // whose whole point is covering checkpoint/evict/park/resume — a
+    // silent preemptions==0 would mean the gate went dead).
+    let expect_preempt = args.bool("expect-preemptions");
+    if let Some(path) = args.opt_str("record") {
+        record(&path);
+        replay(&path, expect_preempt);
+    } else if let Some(path) = args.opt_str("replay") {
+        replay(&path, expect_preempt);
+    } else {
+        eprintln!(
+            "usage: trace_replay --replay TRACE.jsonl \
+             [--expect-preemptions] | --record OUT.jsonl"
+        );
+        exit(2);
+    }
+}
+
+/// Replay `path` twice through the sim harness and require the two
+/// reports — every counter and every token stream — to be bitwise
+/// identical. Prints a per-queue summary of the (stable) replay.
+fn replay(path: &str, expect_preempt: bool) {
+    let (cfg, specs, trace) = match read_trace(std::path::Path::new(path)) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("FAIL reading {path}: {e}");
+            exit(1);
+        }
+    };
+    println!(
+        "replaying {path}: {} queues, {} arrivals",
+        specs.len(),
+        trace.len()
+    );
+    let a = simulate(&specs, &trace, Selector::Weighted, &cfg);
+    let b = simulate(&specs, &trace, Selector::Weighted, &cfg);
+    if a != b {
+        eprintln!(
+            "FAIL {path}: two replays diverged (steps {:?} vs {:?}, \
+             shed {}/{} vs {}/{}, violations {} vs {})",
+            a.steps, b.steps, a.shed_requests, a.shed, b.shed_requests,
+            b.shed, a.slo_violations, b.slo_violations
+        );
+        exit(1);
+    }
+    for (i, w) in a.waits.iter().enumerate() {
+        let p = if w.is_empty() { 0.0 } else { p95(w) };
+        println!(
+            "  q{i}: steps={} finished={} p95_wait={:.4}s",
+            a.steps[i], a.finished[i], p
+        );
+    }
+    println!(
+        "  totals: shed={}req/{}seq slo_violations={} preempt_fires={} \
+         preemptions={} resumes={} t_end={:.3}s",
+        a.shed_requests, a.shed, a.slo_violations, a.preempt_fires,
+        a.preemptions, a.resumes, a.t_end
+    );
+    if expect_preempt && a.preemptions == 0 {
+        eprintln!(
+            "FAIL {path}: --expect-preemptions set but the replay never \
+             preempted (the preemption coverage this trace exists for \
+             is dead)"
+        );
+        exit(1);
+    }
+    println!("OK: replay is bitwise-stable");
+}
+
+/// Drive a synthetic live workload (bulk flood + latency burst) against
+/// a real Coordinator with the trace hook armed, then assemble and
+/// write the recorded trace.
+fn record(path: &str) {
+    let (tx, rx) = mpsc::channel();
+    let mut sched =
+        SchedConfig { preempt_after: 2, ..SchedConfig::default() };
+    sched.per_model.insert("bulk".into(), QueuePolicy {
+        preempt: true,
+        ..QueuePolicy::default()
+    });
+    sched.per_model.insert("slo".into(), QueuePolicy {
+        weight: 4.0,
+        slo_p95_s: Some(0.05),
+        ..QueuePolicy::default()
+    });
+    let geometry = vec![
+        QueueGeometry {
+            model: "bulk".into(),
+            d: 32,
+            vocab: 6,
+            bucket: 4,
+            model_seed: 7,
+            policy: sched.resolve("bulk"),
+        },
+        QueueGeometry {
+            model: "slo".into(),
+            d: 8,
+            vocab: 6,
+            bucket: 1,
+            model_seed: 11,
+            policy: sched.resolve("slo"),
+        },
+    ];
+    let c = Coordinator::start(
+        || {
+            let mut m: ModelMap = BTreeMap::new();
+            let mut bulk = MockModel::new(32, 6, 7);
+            bulk.buckets = vec![4];
+            m.insert("bulk".into(), Box::new(bulk) as Box<dyn EngineModel>);
+            let mut slo = MockModel::new(8, 6, 11);
+            slo.buckets = vec![1];
+            m.insert("slo".into(), Box::new(slo) as Box<dyn EngineModel>);
+            Ok(m)
+        },
+        BatcherConfig {
+            max_wait: Duration::from_millis(1),
+            sched,
+            trace: Some(tx),
+        },
+    )
+    .expect("coordinator");
+
+    // Bulk flood in the background; a latency burst rides on top.
+    let bulk = c.clone();
+    let t_bulk = std::thread::spawn(move || {
+        bulk.generate(GenRequest {
+            model: "bulk".into(),
+            n_samples: 12,
+            sampler: SamplerChoice::Speculative(SpecParams {
+                window: Window::Constant(1),
+                ..Default::default()
+            }),
+            seed: 41,
+            ..Default::default()
+        })
+        .expect("bulk generate")
+    });
+    let mut slo_handles = Vec::new();
+    for k in 0..4u64 {
+        let slo = c.clone();
+        slo_handles.push(std::thread::spawn(move || {
+            slo.generate(GenRequest {
+                model: "slo".into(),
+                n_samples: 2,
+                sampler: SamplerChoice::Speculative(SpecParams {
+                    window: Window::Constant(1),
+                    ..Default::default()
+                }),
+                seed: 100 + k,
+                priority: Some(1),
+                ..Default::default()
+            })
+            .expect("slo generate")
+        }));
+    }
+    let n_bulk = t_bulk.join().unwrap().samples.len();
+    let n_slo: usize = slo_handles
+        .into_iter()
+        .map(|h| h.join().unwrap().samples.len())
+        .sum();
+    c.shutdown();
+    println!("recorded live run: {n_bulk} bulk + {n_slo} slo samples");
+
+    // The engine thread holds a clone of the sender until shutdown; by
+    // now (both requests answered) every event of interest is buffered.
+    let events: Vec<_> = rx.try_iter().collect();
+    let n_arrivals = events
+        .iter()
+        .filter(|e| matches!(e, ssmd::sim::TraceEvent::Arrival { .. }))
+        .count();
+    if n_arrivals < 5 {
+        eprintln!("FAIL: expected 5 recorded arrivals, got {n_arrivals}");
+        exit(1);
+    }
+    let (specs, arrivals) = assemble_trace(&events, &geometry);
+    let cfg = SchedConfig { preempt_after: 2, ..SchedConfig::default() };
+    write_trace(std::path::Path::new(path), &cfg, &specs, &arrivals)
+        .expect("write trace");
+    println!(
+        "wrote {path}: {} queues, {} arrivals (mean step costs {:?})",
+        specs.len(),
+        arrivals.len(),
+        specs.iter().map(|s| s.step_cost).collect::<Vec<_>>()
+    );
+}

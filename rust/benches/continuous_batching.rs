@@ -68,6 +68,8 @@ struct RunStats {
     row_steps: u64,
     steps: u64,
     backfills: u64,
+    preemptions: u64,
+    resume_steps: u64,
 }
 
 /// Blocking: bucket-sized waves, each driven to completion before the
@@ -103,6 +105,8 @@ fn run_blocking(prompts: &[Prompt], params: &SpecParams,
         row_steps,
         steps,
         backfills: 0,
+        preemptions: 0,
+        resume_steps: 0,
     }
 }
 
@@ -133,6 +137,64 @@ fn run_continuous(prompts: &[Prompt], params: &SpecParams,
         row_steps: sched.row_steps(),
         steps: sched.steps(),
         backfills: sched.backfills(),
+        preemptions: sched.evictions(),
+        resume_steps: sched.resumes(),
+    }
+}
+
+/// Continuous batching under a scripted preemption cycle: at fixed step
+/// indexes two residents are checkpointed out (lowest priority first)
+/// and parked, pending work backfills their slots, and the checkpoints
+/// resume later. Everything drains exactly once — and because the
+/// eviction points are step-indexed (not timed), the counters below are
+/// fully deterministic (and thread-count invariant), so bench_trend can
+/// gate on them.
+fn run_preemptive(prompts: &[Prompt], params: &SpecParams,
+                  pool: &Arc<StepPool>) -> RunStats {
+    let m = model();
+    let mut rng = Pcg::new(1);
+    let mut sched = SpecScheduler::for_model(&m);
+    sched.set_pool(pool.clone());
+    let start = Instant::now();
+    for (i, p) in prompts.iter().enumerate() {
+        // Three priority classes so evict_lowest has real choices.
+        sched.admit_prio(p, SeqParams::Spec(params.clone()), rng.split(),
+                         (i % 3) as i32);
+    }
+    let mut latency_sum = 0.0;
+    let mut n_done = 0usize;
+    let mut parked = Vec::new();
+    let mut step_no = 0u64;
+    while !sched.is_idle() || !parked.is_empty() {
+        if step_no == 6 || step_no == 12 {
+            for _ in 0..2 {
+                if let Some(ck) = sched.evict_lowest() {
+                    parked.push(ck);
+                }
+            }
+        }
+        if step_no == 24 {
+            for ck in parked.drain(..) {
+                sched.resume(ck);
+            }
+        }
+        for _ in sched.step(&m) {
+            latency_sum += start.elapsed().as_secs_f64();
+            n_done += 1;
+        }
+        step_no += 1;
+    }
+    assert!(parked.is_empty(), "checkpoints left behind");
+    assert_eq!(n_done, prompts.len(),
+               "preemption lost or duplicated sequences");
+    RunStats {
+        mean_wall_per_sample_s: latency_sum / n_done as f64,
+        total_wall_s: start.elapsed().as_secs_f64(),
+        row_steps: sched.row_steps(),
+        steps: sched.steps(),
+        backfills: sched.backfills(),
+        preemptions: sched.evictions(),
+        resume_steps: sched.resumes(),
     }
 }
 
@@ -148,21 +210,26 @@ fn main() {
 
     let blocking = run_blocking(&prompts, &params, &pool);
     let continuous = run_continuous(&prompts, &params, &pool);
+    let preemptive = run_preemptive(&prompts, &params, &pool);
 
     println!(
-        "{:<12} {:>16} {:>12} {:>10} {:>12} {:>10}",
-        "mode", "wall/sample", "total", "steps", "row-steps", "backfills"
+        "{:<12} {:>16} {:>12} {:>10} {:>12} {:>10} {:>8} {:>8}",
+        "mode", "wall/sample", "total", "steps", "row-steps", "backfills",
+        "preempt", "resume"
     );
-    for (name, r) in [("blocking", &blocking), ("continuous", &continuous)]
+    for (name, r) in [("blocking", &blocking), ("continuous", &continuous),
+                      ("preemptive", &preemptive)]
     {
         println!(
-            "{:<12} {:>16} {:>12} {:>10} {:>12} {:>10}",
+            "{:<12} {:>16} {:>12} {:>10} {:>12} {:>10} {:>8} {:>8}",
             name,
             fmt_duration(r.mean_wall_per_sample_s),
             fmt_duration(r.total_wall_s),
             r.steps,
             r.row_steps,
-            r.backfills
+            r.backfills,
+            r.preemptions,
+            r.resume_steps
         );
     }
     println!(
@@ -181,6 +248,10 @@ fn main() {
         blocking.row_steps
     );
     assert!(continuous.backfills > 0, "workload must exercise backfill");
+    // The preemption cycle must actually checkpoint and resume work.
+    assert_eq!(preemptive.preemptions, 4, "two evictions of two");
+    assert_eq!(preemptive.resume_steps, 4,
+               "every checkpoint resumed exactly once");
 
     // Machine-readable perf artifact (uploaded by CI per PR). This bench
     // always runs its full deterministic workload (it measures one
@@ -206,6 +277,13 @@ fn main() {
         ("blocking.steps", blocking.steps as f64),
         ("continuous.steps", continuous.steps as f64),
         ("continuous.backfills", continuous.backfills as f64),
+        // Preemption cycle counters: deterministic (step-indexed evict/
+        // resume, thread-count invariant), so the trend gate sees any
+        // change in checkpoint/evict/resume bookkeeping.
+        ("preemptive.steps", preemptive.steps as f64),
+        ("preemptive.row_steps", preemptive.row_steps as f64),
+        ("preemptions", preemptive.preemptions as f64),
+        ("resume_steps", preemptive.resume_steps as f64),
         (
             "row_steps_saved_frac",
             1.0 - continuous.row_steps as f64 / blocking.row_steps as f64,

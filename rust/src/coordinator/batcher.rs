@@ -24,6 +24,13 @@ pub struct BatcherConfig {
     /// Cross-queue scheduling: default queue policy, per-model overrides,
     /// and the weighted-selector tuning knobs (see `coordinator::sched`).
     pub sched: SchedConfig,
+    /// Optional live-trace recorder: when set, the engine loop sends one
+    /// [`crate::sim::TraceEvent`] per admitted generate request (its
+    /// backdated arrival instant, model, sequence count, seed, priority)
+    /// and per executed step (model, observed cost). The stream is what
+    /// `examples/trace_replay.rs` assembles into a JSONL trace the sim
+    /// harness replays deterministically.
+    pub trace: Option<std::sync::mpsc::Sender<crate::sim::TraceEvent>>,
 }
 
 impl Default for BatcherConfig {
@@ -31,6 +38,7 @@ impl Default for BatcherConfig {
         BatcherConfig {
             max_wait: Duration::from_millis(5),
             sched: SchedConfig::default(),
+            trace: None,
         }
     }
 }

@@ -34,6 +34,21 @@
 //! `tests/sched_sim.rs` replays scripted multi-queue traces against it
 //! in exact virtual time; the engine thread drives it with wall time.
 //!
+//! **Preemption & priority.** Requests carry a `priority` class ordering
+//! work *within* a model's run queues (higher overtakes queued pending
+//! sequences; cross-queue shares stay weight-governed). When an SLO
+//! queue's pressure sits at its boost ceiling for
+//! `SchedConfig::preempt_after` rounds with work still waiting, the
+//! selector names the most over-entitlement `preempt:on` model as a
+//! victim ([`CrossQueueScheduler::preempt_check`]): the engine loop
+//! evicts that model's busiest run queue's residents **mid-sequence**
+//! as `engine::SeqCheckpoint`s (lowest priority first) and pauses the
+//! queue until the pressure clears — or unconditionally on drain, so
+//! shutdown answers every checkpointed sequence. Resumed sequences
+//! continue with bitwise-identical token streams (the checkpoint
+//! carries each sequence's counter-based RNG stream) and their
+//! `queue_wait_s` is observed only once, at the original placement.
+//!
 //! Metric notes: `queue_wait_s` observes one value per *sequence* at its
 //! slot-placement instant (enqueue → execution start, so pending-queue
 //! congestion and cross-queue waiting are both visible), while
@@ -58,8 +73,10 @@ use anyhow::{anyhow, Result};
 
 use crate::engine::{
     mdm_sample, speculative_sample, BoundStepper, HybridModel, Prompt,
-    Sample, SeqParams, SlotId, StepPhases, StepPool, Stepper,
+    Sample, SeqCheckpoint, SeqParams, SlotId, StepPhases, StepPool,
+    Stepper,
 };
+use crate::sim::TraceEvent;
 use crate::likelihood::{log_likelihood, rejection_posterior, SpecTable};
 use crate::util::json::Json;
 use crate::util::metrics::{Counter, Histogram, Registry};
@@ -289,6 +306,15 @@ struct EngineMetrics {
     c_steps: Arc<Counter>,
     c_slo: Arc<Counter>,
     c_shed: Arc<Counter>,
+    /// Sequences refused by admission backpressure (the request-level
+    /// companion is `shed_requests` — one shed request sheds all of its
+    /// sequences, and the two units must never be conflated).
+    c_shed_seqs: Arc<Counter>,
+    /// Sequences evicted mid-run by preemption / resumed checkpoints
+    /// placed back into slots / policy-level preemption fires.
+    c_preempt: Arc<Counter>,
+    c_resume: Arc<Counter>,
+    c_preempt_fires: Arc<Counter>,
 }
 
 impl EngineMetrics {
@@ -313,6 +339,10 @@ impl EngineMetrics {
             c_steps: metrics.counter("scheduler_steps"),
             c_slo: metrics.counter("slo_violations"),
             c_shed: metrics.counter("shed_requests"),
+            c_shed_seqs: metrics.counter("shed_seqs"),
+            c_preempt: metrics.counter("preemptions"),
+            c_resume: metrics.counter("resume_steps"),
+            c_preempt_fires: metrics.counter("preempt_fires"),
         }
     }
 }
@@ -348,6 +378,18 @@ struct RunQueue<'m> {
     routes: BTreeMap<SlotId, (u64, usize)>,
     /// Whether the formation-time batch size was recorded.
     formed: bool,
+    /// Checkpoints of residents evicted by preemption, held here — off
+    /// the stepper — while the queue is **paused**: a queue with parked
+    /// work is excluded from the ready set, so engine steps go to the
+    /// pressured SLO queue instead of immediately backfilling the freed
+    /// slots. Resumed (ahead of equal-priority fresh pending work, with
+    /// bitwise-identical continuation) once the trigger clears, and
+    /// unconditionally on drain. Checkpoints keep their `SlotId`, so
+    /// `routes` stays valid across the park/resume cycle and
+    /// `queue_wait_s` is never observed twice for a sequence.
+    parked: Vec<SeqCheckpoint>,
+    /// The SLO queue whose pressure caused the parking.
+    parked_trigger: Option<QueueId>,
 }
 
 fn engine_loop(models: ModelMap, rx: mpsc::Receiver<Job>,
@@ -367,6 +409,9 @@ fn engine_loop(models: ModelMap, rx: mpsc::Receiver<Job>,
     let mut xq = CrossQueueScheduler::new(
         Box::new(MonotonicClock::new()), &cfg.sched);
     let mut ready_buf: Vec<QueueId> = Vec::new();
+    // Preemption candidates (models with evictable residents), rebuilt
+    // each round like ready_buf.
+    let mut cand_buf: Vec<QueueId> = Vec::new();
     // Intra-model rotation cursors: the selector picks a *model*; that
     // model's own cursor rotates among its ready run queues (batch-key
     // variants) so they share the model's allocation fairly. The cursor
@@ -381,7 +426,28 @@ fn engine_loop(models: ModelMap, rx: mpsc::Receiver<Job>,
     let mut draining = false;
 
     loop {
-        let busy = queues.iter().any(|q| !q.stepper.is_idle());
+        // Resume parked checkpoints whose trigger pressure cleared —
+        // and always on drain/disconnect, so shutdown answers every
+        // checkpointed sequence before the loop exits.
+        for q in queues.iter_mut() {
+            if q.parked.is_empty() {
+                continue;
+            }
+            let clear = draining
+                || disconnected
+                || q.parked_trigger
+                    .map(|t| xq.preempt_cleared(t))
+                    .unwrap_or(true);
+            if clear {
+                for ck in q.parked.drain(..) {
+                    q.stepper.resume(ck);
+                }
+                q.parked_trigger = None;
+            }
+        }
+        let busy = queues
+            .iter()
+            .any(|q| !q.stepper.is_idle() || !q.parked.is_empty());
         if (draining || disconnected) && !busy {
             return; // nothing left to finish
         }
@@ -445,10 +511,14 @@ fn engine_loop(models: ModelMap, rx: mpsc::Receiver<Job>,
 
         // One scheduler step: the weighted selector picks a model among
         // everything with resident or pending work, then the rotation
-        // cursor picks one of that model's ready run queues.
+        // cursor picks one of that model's ready run queues. Queues with
+        // parked checkpoints are paused — not ready — until resumed.
         ready_buf.clear();
         for q in queues.iter() {
-            if !q.stepper.is_idle() && !ready_buf.contains(&q.sched_id) {
+            if !q.stepper.is_idle()
+                && q.parked.is_empty()
+                && !ready_buf.contains(&q.sched_id)
+            {
                 ready_buf.push(q.sched_id);
             }
         }
@@ -460,6 +530,7 @@ fn engine_loop(models: ModelMap, rx: mpsc::Receiver<Job>,
                 let i = (start + off) % n;
                 if queues[i].sched_id == sid
                     && !queues[i].stepper.is_idle()
+                    && queues[i].parked.is_empty()
                 {
                     picked = Some(i);
                     break;
@@ -471,14 +542,58 @@ fn engine_loop(models: ModelMap, rx: mpsc::Receiver<Job>,
             // within one cycle of the model's picks (index shifts from
             // `retain` below only rotate the origin, never skip).
             rr.insert(sid, (qi + 1) % n.max(1));
-            step_queue(&mut queues[qi], &mut inflight, &mut xq, &m);
+            step_queue(&mut queues[qi], &mut inflight, &mut xq, &m,
+                       cfg.trace.as_ref());
             // Export the selector's violation count as a monotonic
             // counter delta.
             let v = xq.slo_violations();
             m.c_slo.add(v - slo_seen);
             slo_seen = v;
+
+            // Preemption: a pressured SLO queue stuck at its boost
+            // ceiling for preempt_after rounds evicts the residents of
+            // the most over-entitlement preemptible model. The victim's
+            // busiest run queue is parked wholesale (checkpoints held in
+            // `parked`, the queue paused) until the trigger clears —
+            // see `RunQueue::parked`.
+            cand_buf.clear();
+            for q in queues.iter() {
+                if q.parked.is_empty()
+                    && q.stepper.n_active() > 0
+                    && !cand_buf.contains(&q.sched_id)
+                {
+                    cand_buf.push(q.sched_id);
+                }
+            }
+            if let Some((trigger, victim)) = xq.preempt_check(&cand_buf) {
+                let mut best: Option<usize> = None;
+                for (i, q) in queues.iter().enumerate() {
+                    if q.sched_id == victim
+                        && q.parked.is_empty()
+                        && q.stepper.n_active() > 0
+                    {
+                        let better = match best {
+                            None => true,
+                            Some(j) => q.stepper.n_active()
+                                > queues[j].stepper.n_active(),
+                        };
+                        if better {
+                            best = Some(i);
+                        }
+                    }
+                }
+                if let Some(vi) = best {
+                    let q = &mut queues[vi];
+                    while let Some(ck) = q.stepper.evict_lowest() {
+                        q.parked.push(ck);
+                    }
+                    m.c_preempt.add(q.parked.len() as u64);
+                    m.c_preempt_fires.inc();
+                    q.parked_trigger = Some(trigger);
+                }
+            }
         }
-        queues.retain(|q| !q.stepper.is_idle());
+        queues.retain(|q| !q.stepper.is_idle() || !q.parked.is_empty());
     }
 }
 
@@ -583,14 +698,16 @@ fn admit_generate<'m>(models: &'m ModelMap, queues: &mut Vec<RunQueue<'m>>,
     // on a cold batch key must not pay arena allocation or leave a dead
     // RunQueue behind. The request's channel transit time is backdated
     // into its arrival stamps so queue_wait_s still measures from the
-    // caller-side enqueue.
+    // caller-side enqueue; the stamps are tagged with the request id so
+    // a rollback removes exactly this request's entries.
     let lane = match existing {
         Some(qi) => queues[qi].lane,
         None => rid,
     };
-    if !xq.try_enqueue(sched_id, lane, n, enqueued.elapsed().as_secs_f64())
-    {
+    let age = enqueued.elapsed().as_secs_f64();
+    if !xq.try_enqueue(sched_id, lane, rid, n, age) {
         m.c_shed.inc();
+        m.c_shed_seqs.add(n as u64);
         m.c_errors.inc();
         let _ = reply.send(Err(anyhow!(
             "model '{}' queue is full: {} sequences requested, {}/{} \
@@ -614,21 +731,36 @@ fn admit_generate<'m>(models: &'m ModelMap, queues: &mut Vec<RunQueue<'m>>,
                     lane,
                     routes: BTreeMap::new(),
                     formed: false,
+                    parked: Vec::new(),
+                    parked_trigger: None,
                 });
                 queues.len() - 1
             }
             Err(e) => {
-                // Roll back the optimistic admission stamps.
-                xq.cancel_enqueue(sched_id, lane, n);
+                // Roll back exactly this request's optimistic stamps.
+                xq.cancel_enqueue(sched_id, lane, rid, n);
                 m.c_errors.inc();
                 let _ = reply.send(Err(e));
                 return;
             }
         },
     };
+    // Priority class: orders this request within its queue's pending
+    // work (and makes it a late preemption victim); cross-queue shares
+    // stay governed by the model's QueuePolicy weight.
+    let priority = req.priority.unwrap_or(cfg.sched.default_priority);
+    if let Some(tr) = &cfg.trace {
+        let _ = tr.send(TraceEvent::Arrival {
+            t: xq.now() - age,
+            model: req.model.clone(),
+            n,
+            seed: req.seed,
+            priority,
+        });
+    }
     let q = &mut queues[qi];
     for k in 0..n {
-        let sid = q.stepper.admit(&prompt, base.split());
+        let sid = q.stepper.admit_prio(&prompt, base.split(), priority);
         q.routes.insert(sid, (rid, k));
     }
     inflight.insert(rid, Inflight {
@@ -643,7 +775,8 @@ fn admit_generate<'m>(models: &'m ModelMap, queues: &mut Vec<RunQueue<'m>>,
 /// Run one scheduler step on a queue, report its cost to the selector,
 /// and deliver whatever completed.
 fn step_queue(q: &mut RunQueue<'_>, inflight: &mut BTreeMap<u64, Inflight>,
-              xq: &mut CrossQueueScheduler, m: &EngineMetrics) {
+              xq: &mut CrossQueueScheduler, m: &EngineMetrics,
+              trace: Option<&mpsc::Sender<TraceEvent>>) {
     if !q.formed {
         q.formed = true;
         // Batch size at formation time: sequences gathered before the
@@ -655,6 +788,7 @@ fn step_queue(q: &mut RunQueue<'_>, inflight: &mut BTreeMap<u64, Inflight>,
             .observe((q.stepper.n_active() + q.stepper.n_pending()) as f64);
     }
     let backfills_before = q.stepper.backfills();
+    let resumes_before = q.stepper.resumes();
     // Entitlement lag of the queue the selector just chose (how far
     // behind its weighted share it was when served).
     m.h_credit.observe(xq.credit(q.sched_id));
@@ -663,6 +797,12 @@ fn step_queue(q: &mut RunQueue<'_>, inflight: &mut BTreeMap<u64, Inflight>,
     let finished = q.stepper.step();
     let cost = t.elapsed().as_secs_f64();
     m.h_step.observe(cost);
+    if let Some(tr) = trace {
+        let _ = tr.send(TraceEvent::Step {
+            model: xq.key_of(q.sched_id).to_string(),
+            cost_s: cost,
+        });
+    }
     // Step-cost feedback, now per-phase: the weighted selector charges
     // this queue for the total service it just consumed and retains the
     // model/draw/LSE/accept split; the same split is exported as
@@ -679,18 +819,42 @@ fn step_queue(q: &mut RunQueue<'_>, inflight: &mut BTreeMap<u64, Inflight>,
     // are visible under load. Placement is the first thing step() does
     // (backfill precedes the forward pass), so the pre-step reading `t0`
     // is the placement instant — using now() here would bill the whole
-    // first step as wait. The selector pops this run queue's own
-    // arrival-stamp lane FIFO (admission order == placement order
-    // within a run queue), so every wait pairs exactly with its
-    // sequence even when batch-key siblings of the model are
-    // concurrently backlogged; the model-level SLO EWMA and violation
-    // counts are fed from the same exact values.
-    let n_placed = q.stepper.take_placements().len();
+    // first step as wait. Stamps are popped per *request tag* (the rid
+    // each placed slot routes to): priority classes let a later
+    // high-priority request's sequences enter slots before an earlier
+    // low-priority request's, so placement order within a run queue no
+    // longer follows admission order across requests — a plain lane-FIFO
+    // pop would hand the overtaker the overtaken request's older stamp,
+    // corrupting queue_wait_s and the SLO EWMA/violations (and thus the
+    // preemption trigger). Within one request placements stay
+    // admission-ordered, so oldest-of-tag pairs each wait exactly.
+    let placed = q.stepper.take_placements();
     let h_queue = &m.h_queue;
-    xq.placed_at(q.sched_id, q.lane, n_placed, t0, |w| h_queue.observe(w));
+    let mut i = 0;
+    while i < placed.len() {
+        let rid = q
+            .routes
+            .get(&placed[i])
+            .map(|&(rid, _)| rid)
+            .expect("placed slot is routed");
+        let mut j = i + 1;
+        while j < placed.len()
+            && q.routes.get(&placed[j]).map(|&(r, _)| r) == Some(rid)
+        {
+            j += 1;
+        }
+        xq.placed_at_tag(q.sched_id, q.lane, rid, j - i, t0,
+                         |w| h_queue.observe(w));
+        i = j;
+    }
     m.h_occupancy.observe(q.stepper.n_active() as f64);
     m.h_pending.observe(q.stepper.n_pending() as f64);
     m.c_backfills.add(q.stepper.backfills() - backfills_before);
+    // Resumed checkpoints re-entering slots this step. Their queue wait
+    // was observed at the original placement, so `take_placements`
+    // (above) deliberately excluded them — `queue_wait_s` pairs each
+    // sequence with exactly one wait even across a park/resume cycle.
+    m.c_resume.add(q.stepper.resumes() - resumes_before);
     m.c_steps.inc();
 
     for (sid, sample) in finished {
@@ -795,6 +959,7 @@ mod tests {
             BatcherConfig {
                 max_wait: Duration::from_millis(1),
                 sched,
+                ..Default::default()
             },
         )
         .unwrap()
@@ -1026,7 +1191,8 @@ mod tests {
             assert!(count >= 1.0, "missing histogram {key}");
         }
         let counters = snap.get("counters").unwrap();
-        for key in ["slo_violations", "shed_requests"] {
+        for key in ["slo_violations", "shed_requests", "shed_seqs",
+                    "preemptions", "resume_steps", "preempt_fires"] {
             assert!(counters.get(key).and_then(|c| c.as_f64()).is_some(),
                     "missing counter {key}");
         }
@@ -1058,7 +1224,9 @@ mod tests {
         // Exact suffix: the HTTP layer's 429 mapping keys on it.
         assert!(err.to_string().ends_with(SHED_ERROR_SUFFIX), "{err}");
         assert!(err.to_string().contains("6 sequences requested"), "{err}");
+        // Both shed granularities: 1 request carrying 6 sequences.
         assert_eq!(c.metrics.counter("shed_requests").get(), 1);
+        assert_eq!(c.metrics.counter("shed_seqs").get(), 6);
         // Within the bound, admission (and the request) succeeds.
         let ok = c
             .generate(GenRequest {
@@ -1099,6 +1267,176 @@ mod tests {
         for h in handles {
             assert_eq!(h.join().unwrap().samples.len(), 40);
         }
+        c.shutdown();
+    }
+
+    /// Priority classes order work within one run queue: a later
+    /// high-priority request overtakes an earlier low-priority one's
+    /// queued sequences. The high-priority request is sent only after
+    /// the low one's admission is observed (requests counter), and the
+    /// engine's idle admission window (500ms, measured from that same
+    /// admission) holds the first step back until both are queued — so
+    /// the ordering decision is purely the pending queue's, not a
+    /// wall-clock race. (The exact-ordering pin without any window
+    /// machinery lives at the scheduler level:
+    /// `engine::scheduler::tests::priority_orders_pending_within_queue`.)
+    #[test]
+    fn priority_overtakes_within_a_run_queue() {
+        let c = Coordinator::start(
+            || {
+                let mut m: ModelMap = BTreeMap::new();
+                let mut tiny = MockModel::new(8, 4, 5);
+                tiny.buckets = vec![1];
+                m.insert("tiny".into(),
+                         Box::new(tiny) as Box<dyn EngineModel>);
+                Ok(m)
+            },
+            BatcherConfig {
+                max_wait: Duration::from_millis(500),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let low = c.clone();
+        let t_low = std::thread::spawn(move || {
+            let r = low
+                .generate(GenRequest {
+                    model: "tiny".into(),
+                    n_samples: 4,
+                    seed: 1,
+                    priority: Some(0),
+                    ..Default::default()
+                })
+                .unwrap();
+            (Instant::now(), r)
+        });
+        // Wait until the engine has admitted the low-priority request
+        // (its 500ms pre-step window starts there), then enter the same
+        // live run queue with a higher priority class.
+        while c.metrics.counter("requests").get() < 1 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let hi = c.clone();
+        let t_hi = std::thread::spawn(move || {
+            let r = hi
+                .generate(GenRequest {
+                    model: "tiny".into(),
+                    n_samples: 1,
+                    seed: 2,
+                    priority: Some(9),
+                    ..Default::default()
+                })
+                .unwrap();
+            (Instant::now(), r)
+        });
+        let (done_low, r_low) = t_low.join().unwrap();
+        let (done_hi, r_hi) = t_hi.join().unwrap();
+        assert_eq!(r_low.samples.len(), 4);
+        assert_eq!(r_hi.samples.len(), 1);
+        // Capacity 1: the priority-9 sequence runs before the
+        // priority-0 request's queued tail, so its reply lands first.
+        assert!(done_hi < done_low,
+                "high-priority request must finish before the \
+                 low-priority bulk request");
+        c.shutdown();
+    }
+
+    /// Graceful shutdown with preempted residents: a drain must resume
+    /// and answer every checkpointed sequence — nothing lost, nothing
+    /// answered twice (a double answer would panic the routing table).
+    #[test]
+    fn shutdown_drains_preempted_checkpoints() {
+        // Any observed wait blows a 1ns SLO's boost ceiling, and one
+        // pressured round suffices: preemption fires as soon as the slo
+        // queue has a placement behind pending work.
+        let mut sched =
+            SchedConfig { preempt_after: 1, ..SchedConfig::default() };
+        sched.per_model.insert("slo".into(), QueuePolicy {
+            weight: 4.0,
+            slo_p95_s: Some(1e-9),
+            ..QueuePolicy::default()
+        });
+        sched.per_model.insert("bulk".into(), QueuePolicy {
+            preempt: true,
+            ..QueuePolicy::default()
+        });
+        let c = Coordinator::start(
+            || {
+                let mut m: ModelMap = BTreeMap::new();
+                let mut bulk = MockModel::new(64, 4, 5);
+                bulk.buckets = vec![1, 2, 4, 8, 16];
+                m.insert("bulk".into(),
+                         Box::new(bulk) as Box<dyn EngineModel>);
+                let mut slo = MockModel::new(8, 4, 9);
+                slo.buckets = vec![1];
+                m.insert("slo".into(),
+                         Box::new(slo) as Box<dyn EngineModel>);
+                Ok(m)
+            },
+            BatcherConfig {
+                max_wait: Duration::from_millis(1),
+                sched,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        // Long bulk request: 32 sequences of 64 positions (bucket 16 +
+        // pending overflow) keep residents mid-sequence long past the
+        // SLO burst's arrival.
+        let bulk = c.clone();
+        let t_bulk = std::thread::spawn(move || {
+            bulk.generate(GenRequest {
+                model: "bulk".into(),
+                n_samples: 32,
+                sampler: SamplerChoice::Speculative(SpecParams {
+                    window: crate::engine::Window::Constant(1),
+                    ..Default::default()
+                }),
+                ..Default::default()
+            })
+        });
+        while c.metrics.counter("scheduler_steps").get() < 1 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // SLO burst: its first placements arm the (unmeetable) SLO and
+        // trigger preemption of the bulk residents.
+        let slo = c.clone();
+        let t_slo = std::thread::spawn(move || {
+            slo.generate(GenRequest {
+                model: "slo".into(),
+                n_samples: 8,
+                sampler: SamplerChoice::Speculative(SpecParams {
+                    window: crate::engine::Window::Constant(1),
+                    ..Default::default()
+                }),
+                seed: 3,
+                ..Default::default()
+            })
+        });
+        // Wait for the preemption to actually fire, then shut down while
+        // the checkpoints are (likely still) parked.
+        let t0 = Instant::now();
+        while c.metrics.counter("preemptions").get() == 0 {
+            assert!(t0.elapsed() < Duration::from_secs(30),
+                    "preemption never fired");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        c.shutdown();
+        let r_bulk = t_bulk.join().unwrap().unwrap();
+        let r_slo = t_slo.join().unwrap().unwrap();
+        // Every checkpointed sequence was resumed and answered exactly
+        // once (token lengths prove completion, not valve cut-off:
+        // Constant(1) windows never hit max_outer at these depths).
+        assert_eq!(r_bulk.samples.len(), 32);
+        assert_eq!(r_slo.samples.len(), 8);
+        for s in r_bulk.samples.iter() {
+            assert!(s.tokens.iter().all(|&t| (0..4).contains(&t)),
+                    "preempted sequence retired incomplete: {:?}",
+                    s.tokens);
+        }
+        assert!(c.metrics.counter("preemptions").get() >= 1);
+        assert!(c.metrics.counter("resume_steps").get() >= 1,
+                "drain must place resumed checkpoints back into slots");
         c.shutdown();
     }
 

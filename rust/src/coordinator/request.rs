@@ -43,6 +43,13 @@ pub struct GenRequest {
     /// If true the response depends only on `seed` (no per-call entropy) —
     /// used by tests and the reproduction harnesses.
     pub deterministic: bool,
+    /// Priority class *within* this model's queue: higher-priority
+    /// requests overtake queued lower-priority sequences (admitted but
+    /// not yet executing) and are the last chosen as preemption victims.
+    /// Priority orders work inside a queue; cross-queue shares stay
+    /// governed by `QueuePolicy` weights. `None` takes the server's
+    /// `--default-priority`.
+    pub priority: Option<i32>,
 }
 
 impl Default for GenRequest {
@@ -54,6 +61,7 @@ impl Default for GenRequest {
             prompt: None,
             seed: 0,
             deterministic: false,
+            priority: None,
         }
     }
 }
@@ -190,6 +198,10 @@ impl GenRequest {
                 .get("deterministic")
                 .and_then(|d| d.as_bool())
                 .unwrap_or(false),
+            priority: v
+                .get("priority")
+                .and_then(|p| p.as_f64())
+                .map(|p| p as i32),
         })
     }
 }
@@ -286,6 +298,7 @@ mod tests {
         let r = GenRequest::from_json(&v).unwrap();
         assert_eq!(r.model, "owt");
         assert_eq!(r.n_samples, 2);
+        assert_eq!(r.priority, None, "absent priority stays unset");
         match r.sampler {
             SamplerChoice::Speculative(p) => {
                 assert_eq!(p.n_verify, 3);
@@ -320,6 +333,21 @@ mod tests {
             let v = Json::parse(s).unwrap();
             assert!(GenRequest::from_json(&v).is_err(), "{s}");
         }
+    }
+
+    #[test]
+    fn priority_parses_and_does_not_split_batch_keys() {
+        let v = Json::parse(
+            r#"{"model":"owt","n":1,"priority":-3}"#,
+        )
+        .unwrap();
+        let r = GenRequest::from_json(&v).unwrap();
+        assert_eq!(r.priority, Some(-3));
+        // Priorities order work WITHIN a run queue: two requests that
+        // differ only in priority must share a batch key.
+        let mut hi = r.clone();
+        hi.priority = Some(9);
+        assert_eq!(r.batch_key(), hi.batch_key());
     }
 
     #[test]

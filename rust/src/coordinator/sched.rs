@@ -43,8 +43,20 @@
 //!   boosts, or costs (property-tested in `tests/sched_sim.rs`).
 //! * **Admission backpressure** — [`CrossQueueScheduler::try_enqueue`]
 //!   bounds per-queue pending depth at `max_pending`; an over-full queue
-//!   either sheds the request (`shed_on_full`, counted in
-//!   `shed_requests`) or keeps queueing.
+//!   either sheds the request (`shed_on_full`, counted at both
+//!   granularities: `shed_requests` requests / `shed_seqs` sequences) or
+//!   keeps queueing.
+//! * **Preemption** — when an SLO queue's pressure sits at its boost
+//!   ceiling (wait EWMA >= slo · `max_boost`) with pending work for
+//!   [`SchedConfig::preempt_after`] consecutive rounds — boosting alone
+//!   freed nothing — [`CrossQueueScheduler::preempt_check`] names the
+//!   most over-entitlement `preempt:on` queue as a victim. The *caller*
+//!   (engine loop / sim harness) evicts that queue's residents as
+//!   `engine::SeqCheckpoint`s, pauses it, and resumes the checkpoints
+//!   once [`CrossQueueScheduler::preempt_cleared`] reports the trigger's
+//!   pressure gone (always on drain). Checkpoint/resume is bitwise
+//!   deterministic, so preemption trades only *when* bulk work runs,
+//!   never *what* it produces.
 //!
 //! A queue that goes idle keeps its state but has its `vtime` caught up
 //! to the ready frontier when it next becomes ready, so parked
@@ -84,6 +96,13 @@ pub struct QueuePolicy {
     /// When the pending bound is hit: shed the request (true) or keep
     /// queueing anyway (false).
     pub shed_on_full: bool,
+    /// Whether this queue's residents may be **preempted** (evicted
+    /// mid-sequence as checkpoints) when an SLO queue's pressure sits at
+    /// its boost ceiling for [`SchedConfig::preempt_after`] rounds
+    /// without relief. Spec option `preempt:on` / `preempt:off`. Mark
+    /// bulk queues preemptible; the pressured SLO queue itself is never
+    /// a victim.
+    pub preempt: bool,
 }
 
 impl Default for QueuePolicy {
@@ -94,6 +113,7 @@ impl Default for QueuePolicy {
             max_consecutive: 4,
             max_pending: usize::MAX,
             shed_on_full: false,
+            preempt: false,
         }
     }
 }
@@ -149,12 +169,22 @@ impl QueuePolicy {
                     }
                     self.max_pending = p;
                 }
+                Some(("preempt", v)) => match v.trim() {
+                    "on" => self.preempt = true,
+                    "off" => self.preempt = false,
+                    other => {
+                        return Err(format!(
+                            "bad preempt '{other}' (expected on|off)"
+                        ))
+                    }
+                },
                 None if part == "shed" => self.shed_on_full = true,
                 None if part == "queue" => self.shed_on_full = false,
                 _ => {
                     return Err(format!(
                         "bad queue-policy option '{part}' (expected \
-                         weight:W, slo:S, burst:N, pending:N, shed, queue)"
+                         weight:W, slo:S, burst:N, pending:N, \
+                         preempt:on|off, shed, queue)"
                     ))
                 }
             }
@@ -182,6 +212,16 @@ pub struct SchedConfig {
     /// exact single-threaded code path; token streams are bitwise
     /// identical for any value. CLI: `--step-threads N`.
     pub step_threads: usize,
+    /// Preemption trigger patience: rounds an SLO queue must sit at its
+    /// boost ceiling (wait EWMA >= slo · max_boost) with pending work —
+    /// i.e. boosting alone freed no slot — before
+    /// [`CrossQueueScheduler::preempt_check`] names a victim. CLI:
+    /// `--preempt-after N`.
+    pub preempt_after: u64,
+    /// Priority class assigned to requests that don't carry one
+    /// (higher = served earlier within a queue). CLI:
+    /// `--default-priority N`.
+    pub default_priority: i32,
 }
 
 impl Default for SchedConfig {
@@ -193,6 +233,8 @@ impl Default for SchedConfig {
             wait_alpha: 0.2,
             max_boost: 8.0,
             step_threads: 1,
+            preempt_after: 4,
+            default_priority: 0,
         }
     }
 }
@@ -248,8 +290,12 @@ struct QueueState {
     /// batch-key run queue): placements pop their own lane's FIFO, so
     /// per-sequence waits pair exactly even when several lanes of one
     /// queue are concurrently backlogged. Emptied lanes are removed, so
-    /// the map is bounded by concurrently-pending lanes.
-    arrivals: BTreeMap<u64, VecDeque<f64>>,
+    /// the map is bounded by concurrently-pending lanes. Each stamp
+    /// carries the caller's per-request `tag`, so a rollback
+    /// ([`CrossQueueScheduler::cancel_enqueue`]) removes exactly the
+    /// canceled request's entries even if another same-lane request was
+    /// admitted between the optimistic enqueue and the cancel.
+    arrivals: BTreeMap<u64, VecDeque<(u64, f64)>>,
     /// Total pending sequences across lanes (the `max_pending` subject).
     pending: usize,
     /// Consecutive pick rounds this queue was ready but passed over.
@@ -264,7 +310,18 @@ struct QueueState {
     /// no per-round allocation.
     phase_cost: StepPhases,
     slo_violations: u64,
-    shed: u64,
+    /// Admission-backpressure sheds, tracked at BOTH granularities: a
+    /// shed *request* rejects all `n` of its *sequences* at once, and
+    /// the two denominators answer different questions (how many callers
+    /// were turned away vs how much work was refused) — conflating them
+    /// was the historical bug.
+    shed_seqs: u64,
+    shed_reqs: u64,
+    /// Consecutive pick rounds this queue's SLO pressure sat at the
+    /// boost ceiling with pending work (preemption trigger streak).
+    pressure_rounds: u64,
+    /// Times this queue's pressure triggered a preemption.
+    preempt_fires: u64,
 }
 
 /// The cross-queue selector: pure state + an injected clock.
@@ -273,6 +330,7 @@ pub struct CrossQueueScheduler {
     starve_after: u64,
     wait_alpha: f64,
     max_boost: f64,
+    preempt_after: u64,
     queues: Vec<QueueState>,
     /// Ready-frontier virtual time (max vtime ever charged).
     vnow: f64,
@@ -283,6 +341,8 @@ pub struct CrossQueueScheduler {
     consecutive: u32,
     slo_violations: u64,
     shed_requests: u64,
+    shed_seqs: u64,
+    preempt_fires: u64,
 }
 
 impl CrossQueueScheduler {
@@ -293,6 +353,7 @@ impl CrossQueueScheduler {
             starve_after: cfg.starve_after.max(1),
             wait_alpha: cfg.wait_alpha.clamp(1e-6, 1.0),
             max_boost: cfg.max_boost.max(1.0),
+            preempt_after: cfg.preempt_after.max(1),
             queues: Vec::new(),
             vnow: 0.0,
             cost_ewma: 0.0,
@@ -301,6 +362,8 @@ impl CrossQueueScheduler {
             consecutive: 0,
             slo_violations: 0,
             shed_requests: 0,
+            shed_seqs: 0,
+            preempt_fires: 0,
         }
     }
 
@@ -331,31 +394,39 @@ impl CrossQueueScheduler {
             cost_total: 0.0,
             phase_cost: StepPhases::default(),
             slo_violations: 0,
-            shed: 0,
+            shed_seqs: 0,
+            shed_reqs: 0,
+            pressure_rounds: 0,
+            preempt_fires: 0,
         });
         QueueId(self.queues.len() - 1)
     }
 
-    /// Admission backpressure: record `n` sequences arriving now on
-    /// `lane` (minus `age_s`, the time the request already spent in
-    /// transit before the engine saw it). Returns false — and counts a
-    /// shed request — when the queue is over its pending bound and its
-    /// policy sheds. The bound spans all lanes of the queue.
-    pub fn try_enqueue(&mut self, qid: QueueId, lane: u64, n: usize,
-                       age_s: f64) -> bool {
+    /// Admission backpressure: record one request's `n` sequences
+    /// arriving now on `lane` (minus `age_s`, the time the request
+    /// already spent in transit before the engine saw it), stamped with
+    /// the caller's request `tag` so a later rollback can identify
+    /// exactly these entries. Returns false — and counts a shed — when
+    /// the queue is over its pending bound and its policy sheds; sheds
+    /// are tracked at both granularities (one *request* carrying `n`
+    /// *sequences*). The bound spans all lanes of the queue.
+    pub fn try_enqueue(&mut self, qid: QueueId, lane: u64, tag: u64,
+                       n: usize, age_s: f64) -> bool {
         let now = self.clock.now();
         let q = &mut self.queues[qid.0];
         if q.pending.saturating_add(n) > q.policy.max_pending
             && q.policy.shed_on_full
         {
-            q.shed += n as u64;
+            q.shed_seqs += n as u64;
+            q.shed_reqs += 1;
+            self.shed_seqs += n as u64;
             self.shed_requests += 1;
             return false;
         }
         let t = now - age_s.max(0.0);
         let dq = q.arrivals.entry(lane).or_default();
         for _ in 0..n {
-            dq.push_back(t);
+            dq.push_back((tag, t));
         }
         q.pending += n;
         true
@@ -376,9 +447,33 @@ impl CrossQueueScheduler {
     /// [`CrossQueueScheduler::placed`] with an explicit placement time:
     /// placement happens at step *start* (backfill precedes the forward
     /// pass), so the engine loop passes its pre-step clock reading rather
-    /// than billing the whole first step as queue wait.
+    /// than billing the whole first step as queue wait. Pops the lane's
+    /// oldest stamps regardless of tag — only correct while placements
+    /// follow admission order; under priority classes use
+    /// [`CrossQueueScheduler::placed_at_tag`].
     pub fn placed_at(&mut self, qid: QueueId, lane: u64, n: usize,
-                     now: f64, mut observe: impl FnMut(f64)) {
+                     now: f64, observe: impl FnMut(f64)) {
+        self.placed_impl(qid, lane, None, n, now, observe);
+    }
+
+    /// [`CrossQueueScheduler::placed_at`] popping the oldest stamps
+    /// belonging to request `tag`. Priority classes reorder placements
+    /// *across* requests within one run queue (a later high-priority
+    /// request's sequences can enter slots before an earlier
+    /// low-priority request's), so the lane FIFO alone would mis-pair
+    /// waits — inflating the overtaker's wait with the overtaken
+    /// request's older stamp and deflating the latter's, corrupting
+    /// `queue_wait_s`, the SLO EWMA, violation counts, and the
+    /// preemption trigger they feed. Within one request placements stay
+    /// admission-ordered (its sequences share a priority class), so
+    /// oldest-of-tag pairs exactly.
+    pub fn placed_at_tag(&mut self, qid: QueueId, lane: u64, tag: u64,
+                         n: usize, now: f64, observe: impl FnMut(f64)) {
+        self.placed_impl(qid, lane, Some(tag), n, now, observe);
+    }
+
+    fn placed_impl(&mut self, qid: QueueId, lane: u64, tag: Option<u64>,
+                   n: usize, now: f64, mut observe: impl FnMut(f64)) {
         if n == 0 {
             return;
         }
@@ -387,7 +482,15 @@ impl CrossQueueScheduler {
         let mut drained = false;
         if let Some(dq) = q.arrivals.get_mut(&lane) {
             for _ in 0..n {
-                let t = dq.pop_front().unwrap_or(now);
+                let t = match tag {
+                    None => dq.pop_front().map(|(_, t)| t),
+                    Some(tag) => {
+                        let idx =
+                            dq.iter().position(|&(g, _)| g == tag);
+                        idx.and_then(|i| dq.remove(i)).map(|(_, t)| t)
+                    }
+                }
+                .unwrap_or(now);
                 let wait = (now - t).max(0.0);
                 q.wait_ewma = if q.waits_seen == 0 {
                     wait
@@ -411,22 +514,34 @@ impl CrossQueueScheduler {
         }
     }
 
-    /// Roll back the `n` most recent admission stamps on `lane` without
-    /// observing waits (the coordinator uses this when a request was
-    /// optimistically admitted but its run queue could not be created).
-    pub fn cancel_enqueue(&mut self, qid: QueueId, lane: u64, n: usize) {
+    /// Roll back up to `n` admission stamps of request `tag` on `lane`
+    /// without observing waits (the coordinator uses this when a request
+    /// was optimistically admitted but its run queue could not be
+    /// created). Keying the rollback on `tag` removes exactly the
+    /// canceled request's entries: blindly popping the lane's most
+    /// recent stamps would corrupt the `queue_wait_s` of any same-lane
+    /// request admitted between the optimistic enqueue and the cancel
+    /// (pinned by `cancel_is_exact_under_interleaved_admissions`).
+    pub fn cancel_enqueue(&mut self, qid: QueueId, lane: u64, tag: u64,
+                          n: usize) {
         let q = &mut self.queues[qid.0];
+        let mut removed = 0usize;
         let mut drained = false;
         if let Some(dq) = q.arrivals.get_mut(&lane) {
-            for _ in 0..n {
-                dq.pop_back();
+            let mut i = dq.len();
+            while i > 0 && removed < n {
+                i -= 1;
+                if dq[i].0 == tag {
+                    dq.remove(i);
+                    removed += 1;
+                }
             }
             drained = dq.is_empty();
         }
         if drained {
             q.arrivals.remove(&lane);
         }
-        q.pending = q.pending.saturating_sub(n);
+        q.pending = q.pending.saturating_sub(removed);
     }
 
     /// [`CrossQueueScheduler::report_step`] with the engine's per-phase
@@ -493,6 +608,25 @@ impl CrossQueueScheduler {
         }
         self.pick_gen += 1;
         let cur_gen = self.pick_gen;
+
+        // Preemption-pressure streaks: one update per pick round. A
+        // queue is "at the ceiling" when its SLO boost is already capped
+        // (EWMA >= slo · max_boost — more boost cannot help) while work
+        // is still waiting; `preempt_check` fires once a streak reaches
+        // `preempt_after`. Fixed per-queue state, allocation-free.
+        for q in self.queues.iter_mut() {
+            let at_ceiling = match q.policy.slo_p95_s {
+                Some(slo) => {
+                    q.pending > 0 && q.wait_ewma >= slo * self.max_boost
+                }
+                None => false,
+            };
+            if at_ceiling {
+                q.pressure_rounds += 1;
+            } else {
+                q.pressure_rounds = 0;
+            }
+        }
 
         // Newly-ready catch-up: a queue that sat idle must re-enter at
         // the ready frontier, not spend its parked entitlement as a
@@ -595,6 +729,68 @@ impl CrossQueueScheduler {
         q.vtime - pressure
     }
 
+    /// Preemption policy: returns `(trigger, victim)` when some SLO
+    /// queue's wait-EWMA pressure has sat at its boost ceiling with
+    /// pending work for at least `preempt_after` consecutive rounds —
+    /// i.e. boosting alone is not freeing slots fast enough — and a
+    /// preemptible victim exists. `candidates` are the queues the caller
+    /// knows to hold evictable residents; among those with
+    /// `QueuePolicy::preempt` (the trigger excluded) the one **most over
+    /// its entitlement** (largest vtime — it consumed the most weighted
+    /// service) is named. Firing resets the trigger's streak, so the
+    /// next fire needs `preempt_after` fresh rounds of sustained
+    /// pressure (bounded thrash).
+    pub fn preempt_check(&mut self, candidates: &[QueueId])
+                         -> Option<(QueueId, QueueId)> {
+        let mut trigger: Option<usize> = None;
+        for (i, q) in self.queues.iter().enumerate() {
+            if q.policy.slo_p95_s.is_some()
+                && q.pressure_rounds >= self.preempt_after
+            {
+                let better = match trigger {
+                    None => true,
+                    Some(j) => {
+                        q.pressure_rounds > self.queues[j].pressure_rounds
+                    }
+                };
+                if better {
+                    trigger = Some(i);
+                }
+            }
+        }
+        let trigger = trigger?;
+        let mut victim: Option<usize> = None;
+        for &QueueId(i) in candidates {
+            if i == trigger || !self.queues[i].policy.preempt {
+                continue;
+            }
+            let better = match victim {
+                None => true,
+                Some(j) => self.queues[i].vtime > self.queues[j].vtime,
+            };
+            if better {
+                victim = Some(i);
+            }
+        }
+        let victim = victim?;
+        self.queues[trigger].pressure_rounds = 0;
+        self.queues[trigger].preempt_fires += 1;
+        self.preempt_fires += 1;
+        Some((QueueId(trigger), QueueId(victim)))
+    }
+
+    /// True when `trigger`'s preemption pressure has cleared — nothing
+    /// of it is pending anymore, or its wait EWMA recovered to its SLO —
+    /// at which point the caller resumes the checkpoints it parked.
+    /// (Callers additionally resume unconditionally on drain/shutdown.)
+    pub fn preempt_cleared(&self, trigger: QueueId) -> bool {
+        let q = &self.queues[trigger.0];
+        match q.policy.slo_p95_s {
+            Some(slo) => q.pending == 0 || q.wait_ewma <= slo,
+            None => true,
+        }
+    }
+
     /// SLO charge-rate boost of queue `i` (1.0 when within SLO).
     fn boost(&self, i: usize) -> f64 {
         let q = &self.queues[i];
@@ -631,9 +827,21 @@ impl CrossQueueScheduler {
         self.queues[qid.0].slo_violations
     }
 
-    /// Per-queue sequences rejected by admission backpressure.
+    /// Per-queue *sequences* rejected by admission backpressure.
     pub fn shed_of(&self, qid: QueueId) -> u64 {
-        self.queues[qid.0].shed
+        self.queues[qid.0].shed_seqs
+    }
+
+    /// Per-queue *requests* rejected by admission backpressure (each
+    /// shed request sheds all of its sequences at once; see
+    /// [`CrossQueueScheduler::shed_of`] for the sequence denominator).
+    pub fn shed_requests_of(&self, qid: QueueId) -> u64 {
+        self.queues[qid.0].shed_reqs
+    }
+
+    /// Per-queue preemption fires this queue's SLO pressure triggered.
+    pub fn preempt_fires_of(&self, qid: QueueId) -> u64 {
+        self.queues[qid.0].preempt_fires
     }
 
     pub fn cost_of(&self, qid: QueueId) -> f64 {
@@ -657,9 +865,19 @@ impl CrossQueueScheduler {
         self.slo_violations
     }
 
-    /// Total requests rejected by admission backpressure.
+    /// Total *requests* rejected by admission backpressure.
     pub fn shed_requests(&self) -> u64 {
         self.shed_requests
+    }
+
+    /// Total *sequences* rejected by admission backpressure.
+    pub fn shed_seqs(&self) -> u64 {
+        self.shed_seqs
+    }
+
+    /// Total preemptions fired by [`CrossQueueScheduler::preempt_check`].
+    pub fn preempt_fires(&self) -> u64 {
+        self.preempt_fires
     }
 }
 
@@ -767,7 +985,7 @@ mod tests {
         };
         let b = s.register("latency", slo);
         // One sequence waits 0.1s before placement: EWMA blows the SLO.
-        assert!(s.try_enqueue(b, 0, 1, 0.0));
+        assert!(s.try_enqueue(b, 0, 0, 1, 0.0));
         clock.advance(0.1);
         let mut waits = 0;
         s.placed(b, 0, 1, |w| {
@@ -790,7 +1008,7 @@ mod tests {
             slo_p95_s: Some(0.01),
             ..QueuePolicy::default()
         });
-        assert!(s.try_enqueue(b, 0, 1, 0.0));
+        assert!(s.try_enqueue(b, 0, 0, 1, 0.0));
         clock.advance(0.5);
         s.placed(b, 0, 1, |_| {});
         assert!(s.wait_ewma(b) > 0.01, "EWMA must be blown");
@@ -869,8 +1087,8 @@ mod tests {
             shed_on_full: true,
             ..QueuePolicy::default()
         });
-        assert!(s.try_enqueue(a, 0, 2, 0.0));
-        assert!(!s.try_enqueue(a, 0, 1, 0.0));
+        assert!(s.try_enqueue(a, 0, 0, 2, 0.0));
+        assert!(!s.try_enqueue(a, 0, 0, 1, 0.0));
         assert_eq!(s.shed_requests(), 1);
         assert_eq!(s.shed_of(a), 1);
         assert_eq!(s.pending_depth(a), 2);
@@ -880,7 +1098,7 @@ mod tests {
             shed_on_full: false,
             ..QueuePolicy::default()
         });
-        assert!(s.try_enqueue(b, 0, 5, 0.0));
+        assert!(s.try_enqueue(b, 0, 0, 5, 0.0));
         assert_eq!(s.pending_depth(b), 5);
         assert_eq!(s.shed_requests(), 1);
     }
@@ -928,9 +1146,9 @@ mod tests {
             slo_p95_s: Some(5.0),
             ..QueuePolicy::default()
         });
-        assert!(s.try_enqueue(q, 1, 1, 0.0)); // lane 1 arrives at t=0
+        assert!(s.try_enqueue(q, 1, 0, 1, 0.0)); // lane 1 arrives at t=0
         clock.advance(10.0);
-        assert!(s.try_enqueue(q, 2, 1, 0.0)); // lane 2 arrives at t=10
+        assert!(s.try_enqueue(q, 2, 0, 1, 0.0)); // lane 2 arrives at t=10
         assert_eq!(s.pending_depth(q), 2);
         // Lane 2 places immediately: wait must be 0, not 10.
         let mut w2 = f64::NAN;
@@ -950,10 +1168,10 @@ mod tests {
     fn cancel_enqueue_rolls_back_admission() {
         let (clock, mut s) = sched(&SchedConfig::default());
         let a = s.register("a", policy(1.0));
-        assert!(s.try_enqueue(a, 0, 2, 0.0));
+        assert!(s.try_enqueue(a, 0, 0, 2, 0.0));
         clock.advance(1.0);
-        assert!(s.try_enqueue(a, 7, 3, 0.0));
-        s.cancel_enqueue(a, 7, 3);
+        assert!(s.try_enqueue(a, 7, 7, 3, 0.0));
+        s.cancel_enqueue(a, 7, 7, 3);
         assert_eq!(s.pending_depth(a), 2);
         // The surviving lane-0 stamps still pair correctly.
         let mut seen = 0;
@@ -965,13 +1183,167 @@ mod tests {
         assert_eq!(s.pending_depth(a), 0);
     }
 
+    /// Priority classes reorder placements across requests within one
+    /// run queue; tag-keyed placement must pop each request's OWN
+    /// stamps, or the overtaking request inherits the overtaken one's
+    /// older arrival (inflated wait, spurious SLO violation) while the
+    /// overtaken request's waits are silently deflated.
+    #[test]
+    fn tagged_placement_pairs_waits_across_priorities() {
+        let (clock, mut s) = sched(&SchedConfig::default());
+        let q = s.register("m", QueuePolicy {
+            slo_p95_s: Some(5.0),
+            ..QueuePolicy::default()
+        });
+        // Request A (tag 1): 2 sequences at t=0. Request B (tag 2): 1
+        // sequence at t=1, higher priority — placed first.
+        assert!(s.try_enqueue(q, 0, 1, 2, 0.0));
+        clock.advance(1.0);
+        assert!(s.try_enqueue(q, 0, 2, 1, 0.0));
+        clock.advance(0.5);
+        let mut wb = f64::NAN;
+        s.placed_at_tag(q, 0, 2, 1, 1.5, |w| wb = w);
+        assert!((wb - 0.5).abs() < 1e-12,
+                "overtaker's wait mis-paired: {wb}");
+        assert_eq!(s.slo_violations(), 0, "no spurious violation");
+        // Request A places much later: its waits are the true ones.
+        clock.advance(4.5);
+        let mut seen = Vec::new();
+        s.placed_at_tag(q, 0, 1, 2, 6.0, |w| seen.push(w));
+        assert_eq!(seen, vec![6.0, 6.0]);
+        assert_eq!(s.slo_violations(), 2);
+        assert_eq!(s.pending_depth(q), 0);
+    }
+
+    /// The cancel-rollback bug: popping a lane's most recent stamps
+    /// blindly would remove an *interloper's* stamps when another
+    /// same-lane request was admitted between the optimistic enqueue and
+    /// the cancel. Tag-keyed stamps roll back exactly the canceled
+    /// request's entries, so the interloper's wait survives intact.
+    #[test]
+    fn cancel_is_exact_under_interleaved_admissions() {
+        let (clock, mut s) = sched(&SchedConfig::default());
+        let a = s.register("a", policy(1.0));
+        // Request 1 (tag 1) optimistically enqueued at t=0 on lane 0.
+        assert!(s.try_enqueue(a, 0, 1, 2, 0.0));
+        clock.advance(1.0);
+        // Interloper (tag 2) admitted on the SAME lane at t=1, before
+        // request 1's admission is rolled back.
+        assert!(s.try_enqueue(a, 0, 2, 1, 0.0));
+        s.cancel_enqueue(a, 0, 1, 2);
+        assert_eq!(s.pending_depth(a), 1);
+        // The interloper's stamp must be its own t=1 arrival (wait 2),
+        // not an inherited t=0 stamp (wait 3).
+        clock.advance(2.0);
+        let mut got = f64::NAN;
+        s.placed(a, 0, 1, |w| got = w);
+        assert!((got - 2.0).abs() < 1e-12,
+                "interloper wait corrupted by rollback: {got}");
+        assert_eq!(s.pending_depth(a), 0);
+        // Canceling more than the tag has stamps removes only its own.
+        assert!(s.try_enqueue(a, 0, 9, 1, 0.0));
+        s.cancel_enqueue(a, 0, 1, 5);
+        assert_eq!(s.pending_depth(a), 1, "foreign stamps must survive");
+        s.cancel_enqueue(a, 0, 9, 5);
+        assert_eq!(s.pending_depth(a), 0);
+    }
+
+    /// Shed accounting is tracked at both granularities: a shed request
+    /// rejects 1 *request* and all `n` of its *sequences* (the old code
+    /// mixed the units: per-queue sequences vs global requests).
+    #[test]
+    fn shed_accounting_tracks_both_granularities() {
+        let (_c, mut s) = sched(&SchedConfig::default());
+        let a = s.register("a", QueuePolicy {
+            max_pending: 3,
+            shed_on_full: true,
+            ..QueuePolicy::default()
+        });
+        assert!(s.try_enqueue(a, 0, 0, 3, 0.0));
+        // One request with 4 sequences: 1 request / 4 sequences shed.
+        assert!(!s.try_enqueue(a, 0, 1, 4, 0.0));
+        assert_eq!(s.shed_requests(), 1);
+        assert_eq!(s.shed_seqs(), 4);
+        assert_eq!(s.shed_requests_of(a), 1);
+        assert_eq!(s.shed_of(a), 4);
+        // A second shed of 2 sequences accumulates both denominators.
+        assert!(!s.try_enqueue(a, 0, 2, 2, 0.0));
+        assert_eq!(s.shed_requests(), 2);
+        assert_eq!(s.shed_seqs(), 6);
+        assert_eq!(s.shed_requests_of(a), 2);
+        assert_eq!(s.shed_of(a), 6);
+        assert_eq!(s.pending_depth(a), 3, "sheds admit nothing");
+    }
+
+    /// Preemption trigger: sustained ceiling pressure (EWMA >= slo ·
+    /// max_boost with pending work) for `preempt_after` rounds names the
+    /// most over-entitlement preemptible candidate; firing resets the
+    /// streak.
+    #[test]
+    fn preempt_fires_after_sustained_ceiling_pressure() {
+        let cfg = SchedConfig { preempt_after: 3, ..SchedConfig::default() };
+        let (clock, mut s) = sched(&cfg);
+        let bulk_a = s.register("bulk_a", QueuePolicy {
+            preempt: true,
+            ..QueuePolicy::default()
+        });
+        let bulk_b = s.register("bulk_b", QueuePolicy {
+            preempt: true,
+            ..QueuePolicy::default()
+        });
+        let slo = s.register("latency", QueuePolicy {
+            slo_p95_s: Some(0.01),
+            ..QueuePolicy::default()
+        });
+        // bulk_a consumed more weighted service: it is the most
+        // over-entitlement victim.
+        s.report_step(bulk_a, 0.5);
+        s.report_step(bulk_b, 0.1);
+        // Blow the SLO queue's EWMA past the ceiling (0.01 * 8 = 0.08)
+        // and leave pending work behind it.
+        assert!(s.try_enqueue(slo, 0, 0, 3, 0.0));
+        clock.advance(0.5);
+        s.placed(slo, 0, 1, |_| {});
+        assert!(s.wait_ewma(slo) >= 0.08, "EWMA must be at the ceiling");
+        let ready = [bulk_a, bulk_b, slo];
+        let candidates = [bulk_a, bulk_b];
+        // Streak too short: no fire for the first preempt_after-1 rounds.
+        for _ in 0..cfg.preempt_after - 1 {
+            s.pick(&ready).unwrap();
+            assert_eq!(s.preempt_check(&candidates), None,
+                       "fired before the pressure streak matured");
+        }
+        s.pick(&ready).unwrap();
+        assert_eq!(s.preempt_check(&candidates), Some((slo, bulk_a)),
+                   "most over-entitlement preemptible queue is the victim");
+        assert_eq!(s.preempt_fires(), 1);
+        assert_eq!(s.preempt_fires_of(slo), 1);
+        // The streak was reset: the very next round cannot re-fire.
+        s.pick(&ready).unwrap();
+        assert_eq!(s.preempt_check(&candidates), None);
+        // Non-preemptible candidates are never victims; the trigger
+        // itself is excluded even if marked preemptible.
+        for _ in 0..cfg.preempt_after {
+            s.pick(&ready).unwrap();
+        }
+        assert_eq!(s.preempt_check(&[slo]), None);
+        // Pressure clears when the pending work is gone (and again when
+        // the EWMA recovers below the SLO).
+        assert!(!s.preempt_cleared(slo));
+        s.placed(slo, 0, 2, |_| {});
+        assert_eq!(s.pending_depth(slo), 0);
+        assert!(s.preempt_cleared(slo));
+        // A queue with no SLO can never hold preemption pressure.
+        assert!(s.preempt_cleared(bulk_a));
+    }
+
     #[test]
     fn age_backdates_arrivals() {
         let (clock, mut s) = sched(&SchedConfig::default());
         let a = s.register("a", policy(1.0));
         clock.advance(1.0);
         // The request spent 0.3s in the channel before the engine saw it.
-        assert!(s.try_enqueue(a, 0, 1, 0.3));
+        assert!(s.try_enqueue(a, 0, 0, 1, 0.3));
         clock.advance(0.2);
         let mut got = f64::NAN;
         s.placed(a, 0, 1, |w| got = w);
@@ -990,6 +1362,12 @@ mod tests {
         assert!(p.shed_on_full);
         p.apply_spec("queue").unwrap();
         assert!(!p.shed_on_full);
+        assert!(!p.preempt);
+        p.apply_spec("preempt:on").unwrap();
+        assert!(p.preempt);
+        p.apply_spec("preempt:off").unwrap();
+        assert!(!p.preempt);
+        assert!(p.apply_spec("preempt:maybe").is_err());
         assert!(p.apply_spec("weight:-1").is_err());
         assert!(p.apply_spec("weight:inf").is_err());
         assert!(p.apply_spec("slo:inf").is_err());

@@ -19,8 +19,9 @@ pub mod window;
 pub use mdm::{mdm_sample, MdmParams};
 pub use mock::MockModel;
 pub use pool::{SharedSlice, StepPool};
-pub use scheduler::{pick_bucket, run_to_completion, BoundStepper, SeqParams,
-                    SlotId, SpecScheduler, StepPhases, Stepper};
+pub use scheduler::{pick_bucket, run_to_completion, BoundStepper,
+                    SeqCheckpoint, SeqParams, SlotId, SpecScheduler,
+                    StepPhases, Stepper};
 pub use softmax::{log_softmax_row, softmax_row};
 pub use speculative::{speculative_sample, SpecParams, SpecStats};
 pub use window::Window;

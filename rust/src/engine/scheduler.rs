@@ -66,6 +66,23 @@
 //! thread count**. Per-phase wall-clock costs are accumulated into
 //! [`StepPhases`] for the coordinator's step-cost reporting.
 //!
+//! ## Preemption (checkpoint / evict / resume)
+//!
+//! Residents are **evictable mid-sequence**: between steps,
+//! [`SpecScheduler::evict`] / [`SpecScheduler::evict_lowest`] pull a
+//! resident out as a [`SeqCheckpoint`] (revealed tokens, σ/window
+//! position, accept/reject tallies, and the sequence's counter-based RNG
+//! stream), freeing its slot; [`SpecScheduler::resume`] re-admits the
+//! checkpoint at the front of its priority class. Because every
+//! sequence owns an independent RNG stream and the model conditions each
+//! row only on that row, a preempted sequence's token stream is
+//! **bitwise identical** to the same-seed unpreempted run — and evicting
+//! it cannot perturb its neighbours either (pinned by
+//! `evict_resume_is_bitwise_identical`). Admissions carry a `priority`
+//! class ([`SpecScheduler::admit_prio`]) ordering the pending queue, so
+//! the serving layer can both queue-jump urgent work and choose
+//! preemption victims lowest-priority-first.
+//!
 //! `speculative_sample` / `mdm_sample` remain as drive-to-completion
 //! wrappers over this scheduler, so single-shot call sites (likelihood
 //! cross-checks, harnesses, examples, benches) are unchanged.
@@ -140,7 +157,53 @@ enum Kernel {
 
 struct Slot {
     id: SlotId,
+    /// Per-request priority class: within one scheduler the pending
+    /// queue is ordered by descending priority (FIFO inside a class), so
+    /// a high-priority sequence overtakes queued lower-priority work
+    /// without touching residents.
+    priority: i32,
+    /// True for a sequence re-entering via [`SpecScheduler::resume`]:
+    /// its re-placement is counted in `resumes` (not `placements`/
+    /// `backfills`) so callers never observe a second queue wait for it.
+    resumed: bool,
     kernel: Kernel,
+}
+
+/// A mid-sequence checkpoint: everything one evicted sequence needs to
+/// continue later with a **bitwise-identical token stream** — revealed
+/// tokens, the σ ordering and window position (`SeqState::i` /
+/// `MdmState`'s grid cursor), accept/reject tallies, and the
+/// per-resident counter-based RNG stream (the `Pcg` state *is* the
+/// stream offset, so resuming replays exactly the draws an unpreempted
+/// run would have made). Produced by [`SpecScheduler::evict`] /
+/// [`SpecScheduler::evict_lowest`] between steps; the caller holds it
+/// (off the scheduler) until [`SpecScheduler::resume`]. Sequences are
+/// mutually independent (per-sequence RNG streams, per-row model
+/// conditioning), so eviction can never perturb the streams of the
+/// sequences left behind either.
+pub struct SeqCheckpoint {
+    slot: Slot,
+}
+
+impl SeqCheckpoint {
+    /// The evicted sequence's slot handle; preserved across resume, so
+    /// caller-side routing keyed by [`SlotId`] stays valid.
+    pub fn id(&self) -> SlotId {
+        self.slot.id
+    }
+
+    pub fn priority(&self) -> i32 {
+        self.slot.priority
+    }
+
+    /// Ordering positions already decided (speculative: the σ-prefix
+    /// length; MDM: initially-masked positions revealed so far).
+    pub fn progress(&self) -> usize {
+        match &self.slot.kernel {
+            Kernel::Spec(s, _) => s.i,
+            Kernel::Mdm(m, _) => m.m0 - m.masked.len(),
+        }
+    }
 }
 
 /// Raw pointer to one resident's slot, collected once per step so the
@@ -282,6 +345,8 @@ pub struct SpecScheduler {
     row_steps: u64,
     padded_row_steps: u64,
     backfills: u64,
+    evictions: u64,
+    resumes: u64,
     placements: Vec<SlotId>,
     phases: StepPhases,
     /// Executor of the planar phases. The default is a single-thread
@@ -313,6 +378,8 @@ impl SpecScheduler {
             row_steps: 0,
             padded_row_steps: 0,
             backfills: 0,
+            evictions: 0,
+            resumes: 0,
             placements: Vec::new(),
             phases: StepPhases::default(),
             pool: Arc::new(StepPool::new(1)),
@@ -345,25 +412,29 @@ impl SpecScheduler {
         std::mem::take(&mut self.phases)
     }
 
-    /// Enqueue one sequence. It becomes resident at the next `step` with a
-    /// free slot; until then it parks in the pending queue (which is how
-    /// oversized requests get chunked across the bucket ladder).
+    /// Enqueue one sequence at the default priority (0). See
+    /// [`SpecScheduler::admit_prio`].
     pub fn admit(&mut self, prompt: &Prompt, params: SeqParams, rng: Pcg)
                  -> SlotId {
+        self.admit_prio(prompt, params, rng, 0)
+    }
+
+    /// Enqueue one sequence. It becomes resident at the next `step` with a
+    /// free slot; until then it parks in the pending queue (which is how
+    /// oversized requests get chunked across the bucket ladder). The
+    /// pending queue is ordered by descending `priority` — a later
+    /// high-priority admission overtakes queued lower-priority sequences
+    /// (residents are never displaced by admission; that is eviction's
+    /// job) — and FIFO within one priority class.
+    pub fn admit_prio(&mut self, prompt: &Prompt, params: SeqParams,
+                      rng: Pcg, priority: i32) -> SlotId {
         assert_eq!(prompt.0.len(), self.d,
                    "prompt length {} != D {}", prompt.0.len(), self.d);
         let mode = match &params {
             SeqParams::Spec(_) => Mode::Spec,
             SeqParams::Mdm(_) => Mode::Mdm,
         };
-        match self.mode {
-            None => self.mode = Some(mode),
-            Some(m) => assert_eq!(
-                m, mode,
-                "one scheduler batches one sampler kind; \
-                 key run queues by sampler settings"
-            ),
-        }
+        self.merge_mode(mode);
         let id = SlotId(self.next_id);
         self.next_id += 1;
         let kernel = match params {
@@ -376,8 +447,96 @@ impl SpecScheduler {
                 Kernel::Mdm(init_mdm(prompt, self.d, self.mask, rng), p)
             }
         };
-        self.pending.push_back(Slot { id, kernel });
+        self.enqueue_pending(Slot { id, priority, resumed: false, kernel });
         id
+    }
+
+    fn merge_mode(&mut self, mode: Mode) {
+        match self.mode {
+            None => self.mode = Some(mode),
+            Some(m) => assert_eq!(
+                m, mode,
+                "one scheduler batches one sampler kind; \
+                 key run queues by sampler settings"
+            ),
+        }
+    }
+
+    /// Insert into the pending queue keeping it sorted by descending
+    /// priority. Fresh admissions join the *back* of their priority class
+    /// (FIFO within a class); resumed checkpoints join the *front* of
+    /// theirs — they already waited out one queue pass and carry partial
+    /// progress, so equal-priority fresh work must not overtake them.
+    fn enqueue_pending(&mut self, slot: Slot) {
+        let p = slot.priority;
+        let pos = if slot.resumed {
+            self.pending.iter().position(|s| s.priority <= p)
+        } else {
+            self.pending.iter().position(|s| s.priority < p)
+        };
+        let idx = match pos {
+            Some(i) => i,
+            None => self.pending.len(),
+        };
+        self.pending.insert(idx, slot);
+    }
+
+    /// Evict a *resident* sequence mid-run, between steps: the slot is
+    /// freed (backfillable on the next step) and the sequence's complete
+    /// state comes back as a [`SeqCheckpoint`]. Returns `None` if `id`
+    /// is not currently resident (pending sequences are not evictable —
+    /// they hold no slot). Token-stream determinism is unaffected: the
+    /// checkpoint carries the sequence's own RNG stream and residents
+    /// are mutually independent.
+    pub fn evict(&mut self, id: SlotId) -> Option<SeqCheckpoint> {
+        for slot in self.slots.iter_mut() {
+            if slot.as_ref().map(|s| s.id) == Some(id) {
+                let s = slot.take().unwrap();
+                self.evictions += 1;
+                return Some(SeqCheckpoint { slot: s });
+            }
+        }
+        None
+    }
+
+    /// Evict the lowest-priority resident (ties broken toward the
+    /// latest-admitted — highest [`SlotId`] — which on average has the
+    /// least progress to redo). `None` when no sequence is resident.
+    pub fn evict_lowest(&mut self) -> Option<SeqCheckpoint> {
+        let mut victim: Option<(i32, SlotId)> = None;
+        for s in self.slots.iter().flatten() {
+            let better = match victim {
+                None => true,
+                Some((p, id)) => {
+                    s.priority < p || (s.priority == p && s.id > id)
+                }
+            };
+            if better {
+                victim = Some((s.priority, s.id));
+            }
+        }
+        victim.and_then(|(_, id)| self.evict(id))
+    }
+
+    /// Re-admit an evicted sequence. It rejoins the pending queue at the
+    /// *front* of its priority class (ahead of equal-priority fresh
+    /// admissions) keeping its original [`SlotId`], and continues from
+    /// its checkpointed state with a token stream bitwise identical to
+    /// an unpreempted run. Its re-placement is counted in
+    /// [`SpecScheduler::resumes`], not in `take_placements` — callers
+    /// must not observe a second queue wait for it.
+    pub fn resume(&mut self, ck: SeqCheckpoint) {
+        let mut slot = ck.slot;
+        let mode = match &slot.kernel {
+            Kernel::Spec(..) => Mode::Spec,
+            Kernel::Mdm(..) => Mode::Mdm,
+        };
+        self.merge_mode(mode);
+        // Checkpoints normally return to the scheduler that issued them;
+        // keep id allocation collision-free even if one does not.
+        self.next_id = self.next_id.max(slot.id.0 + 1);
+        slot.resumed = true;
+        self.enqueue_pending(slot);
     }
 
     pub fn n_active(&self) -> usize {
@@ -422,14 +581,29 @@ impl SpecScheduler {
         self.padded_row_steps
     }
 
-    /// Pending sequences placed into a slot freed by a retirement (i.e.
-    /// placements after the first step; initial placements don't count).
+    /// Fresh pending sequences placed into a slot freed by a retirement
+    /// (placements after the first step; initial placements and resumed
+    /// re-placements don't count).
     pub fn backfills(&self) -> u64 {
         self.backfills
     }
 
-    /// Sequences that entered a slot (began executing) since the last
-    /// call — lets the coordinator time enqueue -> execution start.
+    /// Sequences evicted mid-run via `evict`/`evict_lowest`.
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    /// Resumed sequences placed back into a slot (each checkpoint counts
+    /// once, at its re-placement step).
+    pub fn resumes(&self) -> u64 {
+        self.resumes
+    }
+
+    /// Sequences that entered a slot (began executing) for the *first
+    /// time* since the last call — lets the coordinator time enqueue ->
+    /// execution start. Resumed re-placements are deliberately excluded
+    /// (their wait was observed at the original placement; see
+    /// [`SpecScheduler::resumes`]).
     pub fn take_placements(&mut self) -> Vec<SlotId> {
         std::mem::take(&mut self.placements)
     }
@@ -443,11 +617,16 @@ impl SpecScheduler {
             }
             if slot.is_none() {
                 *slot = self.pending.pop_front();
-                self.placements.push(slot.as_ref().unwrap().id);
-                placed += 1;
-                if self.steps > 0 {
-                    self.backfills += 1;
+                let s = slot.as_ref().unwrap();
+                if s.resumed {
+                    self.resumes += 1;
+                } else {
+                    self.placements.push(s.id);
+                    if self.steps > 0 {
+                        self.backfills += 1;
+                    }
                 }
+                placed += 1;
             }
         }
         placed
@@ -1208,6 +1387,10 @@ pub fn pick_bucket(buckets: &[usize], n: usize) -> usize {
 /// `Box<dyn EngineModel>`.
 pub trait Stepper {
     fn admit(&mut self, prompt: &Prompt, rng: Pcg) -> SlotId;
+    /// [`Stepper::admit`] with an explicit priority class (pending-queue
+    /// ordering; see [`SpecScheduler::admit_prio`]).
+    fn admit_prio(&mut self, prompt: &Prompt, rng: Pcg, priority: i32)
+                  -> SlotId;
     fn step(&mut self) -> Vec<(SlotId, Sample)>;
     fn n_active(&self) -> usize;
     fn n_pending(&self) -> usize;
@@ -1215,6 +1398,14 @@ pub trait Stepper {
     fn capacity(&self) -> usize;
     fn steps(&self) -> u64;
     fn backfills(&self) -> u64;
+    /// Evict the lowest-priority resident as a checkpoint (preemption);
+    /// `None` when nothing is resident. See [`SpecScheduler::evict_lowest`].
+    fn evict_lowest(&mut self) -> Option<SeqCheckpoint>;
+    /// Re-admit an evicted checkpoint. See [`SpecScheduler::resume`].
+    fn resume(&mut self, ck: SeqCheckpoint);
+    /// Cumulative sequences evicted / resumed-into-slots counters.
+    fn evictions(&self) -> u64;
+    fn resumes(&self) -> u64;
     fn take_placements(&mut self) -> Vec<SlotId>;
     /// Per-phase wall-clock cost (model / draw / LSE / accept) since the
     /// last call — the coordinator's per-phase step-cost reporting.
@@ -1250,6 +1441,11 @@ impl<'m, M: HybridModel> Stepper for BoundStepper<'m, M> {
         self.sched.admit(prompt, self.params.clone(), rng)
     }
 
+    fn admit_prio(&mut self, prompt: &Prompt, rng: Pcg, priority: i32)
+                  -> SlotId {
+        self.sched.admit_prio(prompt, self.params.clone(), rng, priority)
+    }
+
     fn step(&mut self) -> Vec<(SlotId, Sample)> {
         self.sched.step(self.model)
     }
@@ -1276,6 +1472,22 @@ impl<'m, M: HybridModel> Stepper for BoundStepper<'m, M> {
 
     fn backfills(&self) -> u64 {
         self.sched.backfills()
+    }
+
+    fn evict_lowest(&mut self) -> Option<SeqCheckpoint> {
+        self.sched.evict_lowest()
+    }
+
+    fn resume(&mut self, ck: SeqCheckpoint) {
+        self.sched.resume(ck)
+    }
+
+    fn evictions(&self) -> u64 {
+        self.sched.evictions()
+    }
+
+    fn resumes(&self) -> u64 {
+        self.sched.resumes()
     }
 
     fn take_placements(&mut self) -> Vec<SlotId> {
@@ -1516,6 +1728,131 @@ mod tests {
             assert!(s.tokens.iter().all(|&t| (0..5).contains(&t)));
             assert!(s.nfe >= 1.0 && s.nfe <= 9.0, "{s:?}");
         }
+    }
+
+    /// The load-bearing preemption invariant: evicting residents
+    /// mid-sequence, letting other work run in their slots, and resuming
+    /// them later must reproduce the *exact* token streams (and
+    /// accept/reject tallies) of an uninterrupted same-seed run — the
+    /// checkpoint carries each sequence's full state including its RNG
+    /// stream, and sequences are mutually independent.
+    #[test]
+    fn evict_resume_is_bitwise_identical() {
+        let collect = |out: Vec<(SlotId, Sample)>| {
+            let mut m = std::collections::BTreeMap::new();
+            for (id, s) in out {
+                assert!(m.insert(id, (s.tokens, s.accepted, s.rejected))
+                            .is_none(),
+                        "sequence answered twice");
+            }
+            m
+        };
+        let admit_all = |sched: &mut SpecScheduler| {
+            let mut rng = Pcg::new(0xbeef);
+            (0..5)
+                .map(|_| {
+                    sched.admit(&Prompt::empty(16),
+                                spec(&SpecParams::default()), rng.split())
+                })
+                .collect::<Vec<SlotId>>()
+        };
+        let mut m = MockModel::new(16, 5, 23);
+        m.buckets = vec![1, 2];
+
+        // Baseline: uninterrupted drain.
+        let mut sched = SpecScheduler::for_model(&m);
+        admit_all(&mut sched);
+        let mut out = Vec::new();
+        while !sched.is_idle() {
+            out.extend(sched.step(&m));
+        }
+        let baseline = collect(out);
+        assert_eq!(baseline.len(), 5);
+
+        // Preempted run: same admissions; after two steps evict every
+        // resident, let pending sequences take the freed slots for a few
+        // steps, then resume the checkpoints and drain.
+        let mut sched = SpecScheduler::for_model(&m);
+        admit_all(&mut sched);
+        let mut out = Vec::new();
+        out.extend(sched.step(&m));
+        out.extend(sched.step(&m));
+        let mut parked = Vec::new();
+        while let Some(ck) = sched.evict_lowest() {
+            assert!(ck.progress() < 16, "evicted mid-sequence");
+            parked.push(ck);
+        }
+        assert_eq!(parked.len(), 2, "both residents evicted");
+        assert_eq!(sched.evictions(), 2);
+        assert_eq!(sched.n_active(), 0);
+        for _ in 0..3 {
+            out.extend(sched.step(&m)); // backfilled pending work runs
+        }
+        for ck in parked {
+            sched.resume(ck);
+        }
+        while !sched.is_idle() {
+            out.extend(sched.step(&m));
+        }
+        assert_eq!(sched.resumes(), 2);
+        assert_eq!(collect(out), baseline,
+                   "preempted token streams diverged from the \
+                    unpreempted run");
+    }
+
+    /// Pending-queue priority classes: higher priority overtakes queued
+    /// lower-priority work (FIFO within a class); residents stay put.
+    #[test]
+    fn priority_orders_pending_within_queue() {
+        let mut m = MockModel::new(8, 4, 3);
+        m.buckets = vec![1];
+        let mut sched = SpecScheduler::for_model(&m);
+        let mut rng = Pcg::new(6);
+        let params = SpecParams::default();
+        let a = sched.admit_prio(&Prompt::empty(8), spec(&params),
+                                 rng.split(), 0);
+        let b = sched.admit_prio(&Prompt::empty(8), spec(&params),
+                                 rng.split(), 5);
+        let c = sched.admit_prio(&Prompt::empty(8), spec(&params),
+                                 rng.split(), 5);
+        let d = sched.admit_prio(&Prompt::empty(8), spec(&params),
+                                 rng.split(), 0);
+        let mut order = Vec::new();
+        while !sched.is_idle() {
+            order.extend(sched.step(&m).into_iter().map(|(id, _)| id));
+        }
+        // Capacity 1 ⇒ retirement order == placement order: the two
+        // priority-5 sequences first (admission order within the class),
+        // then the priority-0 ones.
+        assert_eq!(order, vec![b, c, a, d]);
+    }
+
+    /// A resumed checkpoint rejoins *ahead of* equal-priority fresh
+    /// pending work (it already waited once and carries progress).
+    #[test]
+    fn resumed_rejoins_ahead_of_equal_priority_fresh() {
+        let mut m = MockModel::new(8, 4, 3);
+        m.buckets = vec![1];
+        let mut sched = SpecScheduler::for_model(&m);
+        let mut rng = Pcg::new(41);
+        let params = SpecParams::default();
+        let a = sched.admit(&Prompt::empty(8), spec(&params), rng.split());
+        let b = sched.admit(&Prompt::empty(8), spec(&params), rng.split());
+        sched.step(&m); // a resident, b pending
+        let ck = sched.evict(a).expect("a is resident");
+        assert_eq!(ck.id(), a);
+        assert!(sched.evict(a).is_none(), "already evicted");
+        sched.resume(ck);
+        let mut order = Vec::new();
+        while !sched.is_idle() {
+            order.extend(sched.step(&m).into_iter().map(|(id, _)| id));
+        }
+        assert_eq!(order, vec![a, b],
+                   "resumed sequence must run before equal-priority \
+                    fresh pending work");
+        // The resumed re-placement is a resume, not a fresh placement or
+        // backfill: a caller timing queue waits never sees `a` twice.
+        assert_eq!(sched.resumes(), 1);
     }
 
     /// Window-lazy drafting must not change the per-loop reveal

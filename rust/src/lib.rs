@@ -27,4 +27,5 @@ pub mod likelihood;
 pub mod oracle;
 pub mod runtime;
 pub mod server;
+pub mod sim;
 pub mod util;

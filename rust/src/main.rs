@@ -55,12 +55,15 @@ fn print_help() {
          COMMANDS:\n\
          \x20 serve     --artifacts DIR --addr 127.0.0.1:8080 [--models a,b]\n\
          \x20           [--queue-policy \"pending:256,shed;m=weight:4,\n\
-         \x20           slo:0.05,burst:2\"] (weighted SLO-aware scheduling)\n\
+         \x20           slo:0.05,burst:2,preempt:on\"] (weighted SLO-aware\n\
+         \x20           scheduling; preempt:on marks a queue evictable)\n\
+         \x20           [--default-priority N] [--preempt-after K]\n\
          \x20           [--step-threads N] (planar-phase workers; results\n\
          \x20           are bitwise identical for any N)\n\
          \x20 generate  --artifacts DIR --model NAME [--n 4] [--sampler\n\
          \x20           speculative|mdm] [--window cosine:0.05] [--n-verify 1]\n\
-         \x20           [--steps 64] [--seed 0] [--decode text8]\n\
+         \x20           [--steps 64] [--seed 0] [--priority P]\n\
+         \x20           [--decode text8]\n\
          \x20 score     --artifacts DIR --model NAME --tokens 1,2,3 [--seed 0]\n\
          \x20 flops     reproduce Appendix E\n\
          \x20 models    --artifacts DIR"
@@ -101,16 +104,25 @@ fn start_coordinator(args: &Args) -> Result<Coordinator> {
         .opt_str("models")
         .map(|s| s.split(',').map(|x| x.trim().to_string()).collect());
     // Cross-queue scheduling policies, e.g.
-    //   --queue-policy "pending:256,shed; owt=weight:4,slo:0.05"
+    //   --queue-policy "pending:256,shed; owt=weight:4,slo:0.05;
+    //                   gpt2=preempt:on"
     // (`;`-separated entries; `model=opts` overrides, bare opts edit the
     // default policy; opts are weight:W, slo:S, burst:N, pending:N,
-    // shed | queue).
+    // preempt:on|off, shed | queue).
     let mut sched = ssmd::coordinator::SchedConfig::default();
     if let Some(spec) = args.opt_str("queue-policy") {
         sched
             .apply_cli(&spec)
             .map_err(|e| anyhow!("--queue-policy: {e}"))?;
     }
+    // Preemptive serving knobs: --preempt-after K rounds of sustained
+    // SLO ceiling pressure before a preempt:on queue's residents are
+    // checkpointed out; --default-priority for requests that don't
+    // carry a priority class of their own.
+    sched.preempt_after =
+        args.u64("preempt-after", sched.preempt_after).max(1);
+    sched.default_priority =
+        args.i64("default-priority", sched.default_priority as i64) as i32;
     // Planar-phase executor width of the engine's shared step pool
     // (`--step-threads N`, or the STEP_THREADS env var — handy for CI
     // and benches). 1 = the exact single-threaded code path. Token
@@ -126,6 +138,7 @@ fn start_coordinator(args: &Args) -> Result<Coordinator> {
         BatcherConfig {
             max_wait: Duration::from_millis(args.u64("batch-wait-ms", 5)),
             sched,
+            ..Default::default()
         },
     )
 }
@@ -168,6 +181,9 @@ fn cmd_generate(args: &Args) -> Result<()> {
         seed: args.u64("seed", 0),
         deterministic: args.bool("deterministic"),
         prompt: None,
+        priority: args
+            .opt_str("priority")
+            .and_then(|p| p.parse::<i32>().ok()),
     })?;
     let decode = args.str("decode", "none");
     for (i, s) in resp.samples.iter().enumerate() {

@@ -90,9 +90,8 @@ fn untuple(mut row: Vec<xla::PjRtBuffer>) -> Vec<xla::Literal> {
 pub struct PjrtModel {
     pub name: String,
     pub config: ModelConfig,
-    /// Kept so buffers can be uploaded host->device without a Runtime
-    /// handle (future device-resident-state optimization; see §Perf).
-    #[allow(dead_code)]
+    /// Used to upload the verify state host->device once per draft (the
+    /// device-resident-state seam; see `State`).
     client: xla::PjRtClient,
     draft: BTreeMap<usize, xla::PjRtLoadedExecutable>,
     verify: BTreeMap<usize, xla::PjRtLoadedExecutable>,
@@ -117,12 +116,28 @@ impl PjrtModel {
             .reshape(&[rows as i64, cols as i64])
             .expect("reshape tokens")
     }
+
+    /// One host->device upload (the PJRT CPU client makes this a cheap
+    /// local copy; on an accelerator it is the transfer). `None` =
+    /// default device ordinal, matching the single-device clients this
+    /// runtime creates.
+    fn upload(&self, lit: &xla::Literal) -> xla::PjRtBuffer {
+        self.client
+            .buffer_from_host_literal(None, lit)
+            .expect("host->device upload")
+    }
 }
 
 impl HybridModel for PjrtModel {
-    /// Non-causal hiddens `[B, D, C]`, kept as a host literal between the
-    /// draft pass and the (possibly many) verify passes of one outer loop.
-    type State = xla::Literal;
+    /// Non-causal hiddens `[B, D, C]`, **device-resident**: uploaded once
+    /// per draft pass and handed to every verify execution of the outer
+    /// loop as a `PjRtBuffer`. The previous host-`Literal` state was
+    /// re-uploaded by `execute` on *every* verify call — with n_verify
+    /// inner passes per outer loop that re-paid the biggest transfer of
+    /// the step n_verify times (the ROADMAP follow-up this retires).
+    /// Token/sigma inputs still upload per verify pass: they change
+    /// every pass and are D/C+V times smaller than `h`.
+    type State = xla::PjRtBuffer;
 
     fn seq_len(&self) -> usize {
         self.config.seq_len
@@ -149,15 +164,15 @@ impl HybridModel for PjrtModel {
     }
 
     fn draft(&self, tokens: &[i32], batch: usize)
-             -> (xla::Literal, Vec<f32>) {
+             -> (xla::PjRtBuffer, Vec<f32>) {
         let mut state = None;
         let mut logits = Vec::new();
         self.draft_into(tokens, batch, &mut state, &mut logits);
         (state.expect("draft_into sets the state"), logits)
     }
 
-    fn verify(&self, state: &xla::Literal, tokens: &[i32], sigma: &[i32],
-              batch: usize) -> Vec<f32> {
+    fn verify(&self, state: &xla::PjRtBuffer, tokens: &[i32],
+              sigma: &[i32], batch: usize) -> Vec<f32> {
         let mut logits = Vec::new();
         self.verify_into(state, tokens, sigma, batch, &mut logits);
         logits
@@ -167,13 +182,16 @@ impl HybridModel for PjrtModel {
     /// caller's logits buffer** (the scheduler's `StepArena` hands its
     /// retained `draft_logits` vec here), so warm steps reuse one stable
     /// allocation instead of receiving a fresh `Vec` per forward pass
-    /// and dropping the old one. The host staging copy of the [B, D,
-    /// C+V] device array and the `h` literal upload are inherent to the
-    /// current host-resident PJRT flow (device-resident state is the
-    /// ROADMAP follow-up); what this override removes is the per-step
-    /// logits vec churn on the engine's hot path.
+    /// and dropping the old one, and the `h` state is uploaded to the
+    /// device **here, once** — the verify passes below execute against
+    /// the resident buffer instead of re-uploading a host literal per
+    /// pass. The host staging copy of the [B, D, C+V] device array is
+    /// still inherent to the single-array draft output contract (a
+    /// device-side split needs a dedicated executable: ROADMAP
+    /// follow-up).
     fn draft_into(&self, tokens: &[i32], batch: usize,
-                  state: &mut Option<xla::Literal>, logits: &mut Vec<f32>) {
+                  state: &mut Option<xla::PjRtBuffer>,
+                  logits: &mut Vec<f32>) {
         let d = self.config.seq_len;
         let c = self.config.hidden;
         let v = self.config.vocab_size;
@@ -199,25 +217,28 @@ impl HybridModel for PjrtModel {
         let h_lit = xla::Literal::vec1(&h)
             .reshape(&[batch as i64, d as i64, c as i64])
             .expect("h reshape");
-        *state = Some(h_lit);
+        *state = Some(self.upload(&h_lit));
     }
 
-    /// Verify flavor of the arena seam. The host read (`to_vec`) must
-    /// allocate — the xla surface used here has no read-into-buffer
-    /// call — so the cheapest correct move is to hand that vec to the
-    /// caller's slot directly (no extra copy; the previous buffer is
-    /// dropped). A true zero-churn device→arena copy needs a raw-copy
-    /// literal API: ROADMAP follow-up alongside device-resident state.
-    fn verify_into(&self, state: &xla::Literal, tokens: &[i32],
+    /// Verify flavor of the arena seam, running against the
+    /// **device-resident** `h` buffer: only the (much smaller)
+    /// token/sigma inputs are uploaded per pass, and the outer loop's
+    /// n_verify passes share one `h` transfer. The host read (`to_vec`)
+    /// must allocate — the xla surface used here has no
+    /// read-into-buffer call — so the cheapest correct move is to hand
+    /// that vec to the caller's slot directly (no extra copy; the
+    /// previous buffer is dropped). A true zero-churn device→arena copy
+    /// needs a raw-copy literal API: ROADMAP follow-up.
+    fn verify_into(&self, state: &xla::PjRtBuffer, tokens: &[i32],
                    sigma: &[i32], batch: usize, logits: &mut Vec<f32>) {
         let d = self.config.seq_len;
         debug_assert_eq!(tokens.len(), batch * d);
         let exe = Self::exe_for(&self.verify, batch, "verify");
-        let tok = Self::literal_i32(tokens, batch, d);
-        let sig = Self::literal_i32(sigma, batch, d);
-        let args: Vec<&xla::Literal> = vec![state, &tok, &sig];
+        let tok = self.upload(&Self::literal_i32(tokens, batch, d));
+        let sig = self.upload(&Self::literal_i32(sigma, batch, d));
+        let args: Vec<&xla::PjRtBuffer> = vec![state, &tok, &sig];
         let mut rows = exe
-            .execute::<&xla::Literal>(&args)
+            .execute_b::<&xla::PjRtBuffer>(&args)
             .expect("verify execute");
         let mut elems = untuple(rows.swap_remove(0));
         assert_eq!(elems.len(), 1, "verify must return (logits,)");

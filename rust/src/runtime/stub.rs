@@ -85,8 +85,10 @@ impl HybridModel for PjrtModel {
 
     // API parity with `runtime::pjrt`: the real runtime overrides the
     // buffer-reusing flavors to write device outputs straight into the
-    // scheduler's arena; the stub mirrors the overrides so both feature
-    // configurations expose the identical surface.
+    // scheduler's arena and keeps the verify state device-resident (its
+    // `State` is a PjRtBuffer uploaded once per draft; the unit State
+    // here stands in for it), so both feature configurations expose the
+    // identical surface.
     fn draft_into(&self, _tokens: &[i32], _batch: usize,
                   _state: &mut Option<()>, _logits: &mut Vec<f32>) {
         unreachable!("stub runtime cannot execute models")

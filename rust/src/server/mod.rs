@@ -256,6 +256,7 @@ mod tests {
             BatcherConfig {
                 max_wait: Duration::from_millis(1),
                 sched,
+                ..Default::default()
             },
         )
         .unwrap();
@@ -267,6 +268,23 @@ mod tests {
         let ok = s.route(&post("/generate", r#"{"model":"mock","n":1}"#));
         assert_eq!(ok.status, 200, "{}",
                    String::from_utf8_lossy(&ok.body));
+    }
+
+    #[test]
+    fn generate_accepts_priority_and_exports_preempt_counters() {
+        let s = test_server();
+        let r = s.route(&post(
+            "/generate",
+            r#"{"model":"mock","n":1,"priority":5,"seed":4}"#,
+        ));
+        assert_eq!(r.status, 200, "{}", String::from_utf8_lossy(&r.body));
+        let m = s.route(&get("/metrics"));
+        let v = Json::parse(&String::from_utf8_lossy(&m.body)).unwrap();
+        let counters = v.get("counters").unwrap();
+        for key in ["preemptions", "resume_steps", "preempt_fires",
+                    "shed_seqs"] {
+            assert!(counters.get(key).is_some(), "missing counter {key}");
+        }
     }
 
     #[test]

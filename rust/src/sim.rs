@@ -1,0 +1,814 @@
+//! Deterministic virtual-time simulation of the cross-queue scheduler,
+//! plus the recorded-trace format it replays.
+//!
+//! This started life inside `tests/sched_sim.rs` (PR 3) and is promoted
+//! to the library so **recorded traces from live runs** can be replayed
+//! through the exact same harness (`examples/trace_replay.rs`, the CI
+//! smoke replay) — the scenario-diversity door the ROADMAP asked for:
+//! any traffic shape you can capture, you can re-run bit-exactly.
+//!
+//! The weighted SLO-aware selector (`coordinator::sched`) is pure state
+//! driven by an injected `Clock`, so [`simulate`] replays scripted
+//! multi-queue arrival traces against real `BoundStepper`/`MockModel`
+//! steppers with synthetic per-step costs on a `SimClock` — every
+//! latency/fairness number is exact: no sleeps, no wall time, no flake.
+//! The round-robin baseline (the pre-weighted engine-loop policy) runs
+//! in the same harness, so selector comparisons hold everything else
+//! fixed.
+//!
+//! **Preemption** mirrors the engine loop: after each step the harness
+//! asks `preempt_check` whether a pressured SLO queue should evict the
+//! most over-entitlement `preempt:on` queue; victims' residents are
+//! checkpointed (`engine::SeqCheckpoint`), the queue is paused, and the
+//! checkpoints resume when `preempt_cleared` reports the pressure gone.
+//! [`Report::tokens`] records every retired sequence's token stream, so
+//! tests can pin the load-bearing invariant: a preempted sequence's
+//! tokens are **bitwise identical** to the same-seed unpreempted run.
+//!
+//! ## Trace format (JSONL)
+//!
+//! One JSON object per line; [`write_trace`] / [`read_trace`] round-trip
+//! it losslessly (u64 seeds travel as decimal strings — f64 JSON numbers
+//! would truncate past 2^53):
+//!
+//! ```text
+//! {"kind":"config","starve_after":64,"wait_alpha":0.2,"max_boost":8,
+//!  "preempt_after":4}
+//! {"kind":"queue","d":16,"vocab":6,"bucket":4,"model_seed":"7",
+//!  "step_cost":0.08,"weight":1,"burst":4,"shed":false,"preempt":true}
+//! {"kind":"queue","d":8,...,"slo":0.005,"pending":256,...}
+//! {"kind":"arrival","t":0.05,"queue":0,"n":2,"seed":"1001","priority":0}
+//! ```
+//!
+//! `slo` and `pending` are omitted when unset. Arrival lines must be
+//! time-sorted (the writer preserves order; [`simulate`] asserts it).
+//! Live runs are captured as a [`TraceEvent`] stream (the coordinator's
+//! `BatcherConfig::trace` hook) and assembled into this format by
+//! [`assemble_trace`].
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::io::Write as _;
+use std::path::Path;
+
+use crate::coordinator::sched::{CrossQueueScheduler, QueueId, QueuePolicy,
+                                SchedConfig};
+use crate::engine::{BoundStepper, MockModel, Prompt, SeqCheckpoint,
+                    SeqParams, SlotId, SpecParams, Stepper, Window};
+use crate::util::json::Json;
+use crate::util::rng::Pcg;
+use crate::util::simclock::{Clock, SimClock};
+
+/// One simulated queue: a MockModel geometry plus its scheduling policy
+/// and the synthetic virtual cost of one scheduler step.
+#[derive(Clone, Debug)]
+pub struct QueueSpec {
+    pub d: usize,
+    pub vocab: usize,
+    pub bucket: usize,
+    pub model_seed: u64,
+    pub policy: QueuePolicy,
+    /// Synthetic virtual cost of one scheduler step of this queue.
+    pub step_cost: f64,
+}
+
+impl QueueSpec {
+    pub fn new(d: usize, bucket: usize, step_cost: f64, policy: QueuePolicy)
+               -> QueueSpec {
+        QueueSpec { d, vocab: 6, bucket, model_seed: 7, policy, step_cost }
+    }
+}
+
+/// One request arrival: `n` sequences land on `queue` at virtual time
+/// `t`, seeded with `seed`, in priority class `priority`.
+#[derive(Clone, Copy, Debug)]
+pub struct Arrival {
+    pub t: f64,
+    pub queue: usize,
+    pub n: usize,
+    pub seed: u64,
+    pub priority: i32,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Selector {
+    RoundRobin,
+    Weighted,
+}
+
+/// Everything a simulation run observed. `PartialEq` is the determinism
+/// pin: two replays of one trace must compare bit-equal.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Report {
+    /// Per queue: one exact virtual-time queue wait per sequence
+    /// (admission -> first slot placement), in placement order. Resumed
+    /// re-placements are not re-observed.
+    pub waits: Vec<Vec<f64>>,
+    /// Per queue: scheduler steps executed.
+    pub steps: Vec<u64>,
+    /// Per queue: steps executed while *every* queue had work (the
+    /// window where weighted shares are defined).
+    pub busy_steps: Vec<u64>,
+    /// Per queue: sequences retired.
+    pub finished: Vec<usize>,
+    /// Total *sequences* rejected by admission backpressure.
+    pub shed: u64,
+    /// Total *requests* rejected by admission backpressure (one shed
+    /// request sheds all of its sequences — distinct denominators).
+    pub shed_requests: u64,
+    pub slo_violations: u64,
+    /// Largest ready-but-unpicked streak any queue experienced (paused
+    /// queues are parked deliberately and do not count).
+    pub max_starve: u64,
+    /// Sequences evicted mid-run by preemption / resumed into slots /
+    /// policy-level preemption fires.
+    pub preemptions: u64,
+    pub resumes: u64,
+    pub preempt_fires: u64,
+    /// Per queue: every retired sequence's token stream, keyed by its
+    /// stable `SlotId` — the bitwise checkpoint/resume determinism pin.
+    pub tokens: Vec<BTreeMap<SlotId, Vec<i32>>>,
+    pub t_end: f64,
+}
+
+/// Replay `trace` against the queues in `specs` under the given selector,
+/// in virtual time, until all admitted work drains. Asserts conservation
+/// (every admitted sequence finishes exactly once) internally. Preemption
+/// runs only under [`Selector::Weighted`] and only against `preempt:on`
+/// queues, mirroring the engine loop's wiring.
+pub fn simulate(specs: &[QueueSpec], trace: &[Arrival], selector: Selector,
+                cfg: &SchedConfig) -> Report {
+    for w in trace.windows(2) {
+        assert!(w[0].t <= w[1].t, "trace must be time-sorted");
+    }
+    let models: Vec<MockModel> = specs
+        .iter()
+        .map(|s| {
+            let mut m = MockModel::new(s.d, s.vocab, s.model_seed);
+            m.buckets = vec![s.bucket];
+            m
+        })
+        .collect();
+    let params = SpecParams {
+        window: Window::Constant(1),
+        ..Default::default()
+    };
+    let mut steppers: Vec<BoundStepper<'_, MockModel>> = models
+        .iter()
+        .map(|m| BoundStepper::new(m, SeqParams::Spec(params.clone())))
+        .collect();
+
+    let clock = SimClock::new();
+    let mut xq = CrossQueueScheduler::new(Box::new(clock.clone()), cfg);
+    let qids: Vec<QueueId> = specs
+        .iter()
+        .enumerate()
+        .map(|(i, s)| xq.register(&format!("q{i}"), s.policy.clone()))
+        .collect();
+    let weighted = selector == Selector::Weighted;
+
+    let nq = specs.len();
+    let mut admit_time: Vec<BTreeMap<SlotId, f64>> =
+        vec![BTreeMap::new(); nq];
+    // Which request tag (the arrival's admission index) each sequence
+    // belongs to: placements are reported per tag so the selector pops
+    // the right arrival's stamps even when priority classes reorder
+    // placements across arrivals (mirrors the engine loop).
+    let mut admit_tag: Vec<BTreeMap<SlotId, u64>> = vec![BTreeMap::new(); nq];
+    let mut seen_done: Vec<BTreeSet<SlotId>> = vec![BTreeSet::new(); nq];
+    let mut waits: Vec<Vec<f64>> = vec![Vec::new(); nq];
+    let mut tokens: Vec<BTreeMap<SlotId, Vec<i32>>> =
+        vec![BTreeMap::new(); nq];
+    let mut steps = vec![0u64; nq];
+    let mut busy_steps = vec![0u64; nq];
+    let mut finished = vec![0usize; nq];
+    let mut since_pick = vec![0u64; nq];
+    let mut max_starve = 0u64;
+    let mut harness_shed = 0u64;
+    let mut harness_shed_reqs = 0u64;
+    let mut parked: Vec<Vec<SeqCheckpoint>> = (0..nq)
+        .map(|_| Vec::new())
+        .collect();
+    let mut parked_trigger: Vec<Option<QueueId>> = vec![None; nq];
+    let mut preemptions = 0u64;
+    let mut rr = 0usize;
+    let mut next = 0usize;
+    let mut ready_buf: Vec<QueueId> = Vec::new();
+    let mut cand_buf: Vec<QueueId> = Vec::new();
+
+    loop {
+        // Admit everything due at the current virtual time (requests that
+        // arrived while the engine was stepping are backdated, exactly as
+        // the coordinator backdates channel transit time).
+        while next < trace.len() && trace[next].t <= clock.now() + 1e-12 {
+            let a = trace[next];
+            next += 1;
+            let age = (clock.now() - a.t).max(0.0);
+            if weighted {
+                if !xq.try_enqueue(qids[a.queue], 0, next as u64, a.n, age)
+                {
+                    continue; // shed by admission backpressure
+                }
+            } else {
+                let q = &specs[a.queue].policy;
+                let over = admit_time[a.queue].len()
+                    - seen_done[a.queue].len()
+                    - steppers[a.queue].n_active();
+                if q.shed_on_full && over + a.n > q.max_pending {
+                    harness_shed += a.n as u64;
+                    harness_shed_reqs += 1;
+                    continue;
+                }
+            }
+            let prompt = Prompt::empty(specs[a.queue].d);
+            let mut rng = Pcg::new(a.seed);
+            for _ in 0..a.n {
+                let sid = steppers[a.queue]
+                    .admit_prio(&prompt, rng.split(), a.priority);
+                admit_time[a.queue].insert(sid, a.t);
+                admit_tag[a.queue].insert(sid, next as u64);
+            }
+        }
+
+        // Resume parked checkpoints whose trigger pressure cleared
+        // (mirrors the engine loop's resume pass).
+        for i in 0..nq {
+            if parked[i].is_empty() {
+                continue;
+            }
+            let clear = parked_trigger[i]
+                .map(|t| xq.preempt_cleared(t))
+                .unwrap_or(true);
+            if clear {
+                for ck in parked[i].drain(..) {
+                    steppers[i].resume(ck);
+                }
+                parked_trigger[i] = None;
+            }
+        }
+
+        ready_buf.clear();
+        for (i, st) in steppers.iter().enumerate() {
+            if !st.is_idle() && parked[i].is_empty() {
+                ready_buf.push(qids[i]);
+            }
+        }
+        if ready_buf.is_empty() {
+            // Backstop: nothing runnable but checkpoints still parked
+            // (possible only for triggers without pressure semantics) —
+            // force-resume so the drain invariant holds.
+            if parked.iter().any(|p| !p.is_empty()) {
+                for i in 0..nq {
+                    for ck in parked[i].drain(..) {
+                        steppers[i].resume(ck);
+                    }
+                    parked_trigger[i] = None;
+                }
+                continue;
+            }
+            if next >= trace.len() {
+                break;
+            }
+            clock.set(trace[next].t);
+            continue;
+        }
+        let all_busy = ready_buf.len() == nq;
+
+        let qi = match selector {
+            Selector::Weighted => {
+                let sid = xq.pick(&ready_buf).expect("ready set non-empty");
+                qids.iter().position(|&q| q == sid).unwrap()
+            }
+            Selector::RoundRobin => {
+                // The pre-weighted engine loop: scan from a rotating
+                // cursor, step the first non-idle queue.
+                let mut chosen = None;
+                for off in 0..nq {
+                    let i = (rr + off) % nq;
+                    if !steppers[i].is_idle() {
+                        chosen = Some(i);
+                        break;
+                    }
+                }
+                let i = chosen.unwrap();
+                rr = i + 1;
+                i
+            }
+        };
+
+        // Starvation accounting, same definition as the selector's: a
+        // streak counts rounds a queue was ready but unpicked, and resets
+        // whenever the queue is picked, goes idle, or is deliberately
+        // paused by preemption.
+        for (i, st) in steppers.iter().enumerate() {
+            if st.is_idle() || !parked[i].is_empty() {
+                since_pick[i] = 0;
+            } else if i != qi {
+                since_pick[i] += 1;
+                max_starve = max_starve.max(since_pick[i]);
+            }
+        }
+        since_pick[qi] = 0;
+
+        // One step: placements happen at step start (backfill precedes
+        // the forward pass), so waits are measured against t0. Resumed
+        // re-placements are excluded from take_placements — a sequence
+        // pairs with exactly one wait even across a park/resume cycle.
+        let t0 = clock.now();
+        let done = steppers[qi].step();
+        let placed = steppers[qi].take_placements();
+        for sid in &placed {
+            let at = admit_time[qi]
+                .get(sid)
+                .copied()
+                .expect("placed sequence was admitted");
+            waits[qi].push(t0 - at);
+        }
+        if weighted {
+            // Tag-grouped placement reporting (see the engine loop):
+            // priority classes can reorder placements across arrivals,
+            // so each run of same-tag placements pops its own arrival's
+            // stamps — the EWMA feeding the SLO boost and preemption
+            // trigger sees exact waits.
+            let mut i = 0;
+            while i < placed.len() {
+                let tag = admit_tag[qi]
+                    .get(&placed[i])
+                    .copied()
+                    .expect("placed sequence was admitted");
+                let mut j = i + 1;
+                while j < placed.len()
+                    && admit_tag[qi].get(&placed[j]).copied() == Some(tag)
+                {
+                    j += 1;
+                }
+                xq.placed_at_tag(qids[qi], 0, tag, j - i, t0, |_| {});
+                i = j;
+            }
+        }
+        clock.advance(specs[qi].step_cost);
+        if weighted {
+            xq.report_step(qids[qi], specs[qi].step_cost);
+        }
+        steps[qi] += 1;
+        if all_busy {
+            busy_steps[qi] += 1;
+        }
+        for (sid, sample) in done {
+            assert!(seen_done[qi].insert(sid),
+                    "sequence {sid:?} answered twice");
+            assert!(admit_time[qi].contains_key(&sid),
+                    "retired sequence {sid:?} was never admitted");
+            finished[qi] += 1;
+            tokens[qi].insert(sid, sample.tokens);
+        }
+
+        // Preemption check after the step, mirroring the engine loop.
+        if weighted {
+            cand_buf.clear();
+            for (i, st) in steppers.iter().enumerate() {
+                if parked[i].is_empty() && st.n_active() > 0 {
+                    cand_buf.push(qids[i]);
+                }
+            }
+            if let Some((trig, victim)) = xq.preempt_check(&cand_buf) {
+                let vi = qids.iter().position(|&q| q == victim).unwrap();
+                while let Some(ck) = steppers[vi].evict_lowest() {
+                    parked[vi].push(ck);
+                    preemptions += 1;
+                }
+                parked_trigger[vi] = Some(trig);
+            }
+        }
+    }
+
+    for i in 0..nq {
+        assert_eq!(finished[i], admit_time[i].len(),
+                   "queue {i}: admitted sequences were lost");
+        assert_eq!(waits[i].len(), admit_time[i].len(),
+                   "queue {i}: placement accounting out of sync");
+    }
+    let resumes: u64 = steppers.iter().map(|s| s.resumes()).sum();
+    Report {
+        waits,
+        steps,
+        busy_steps,
+        finished,
+        // Sequence- and request-denominated explicitly on both paths
+        // (`shed_of` counts sequences, `shed_requests` counts requests)
+        // so conservation arithmetic against per-arrival n stays exact.
+        shed: if weighted {
+            qids.iter().map(|&q| xq.shed_of(q)).sum()
+        } else {
+            harness_shed
+        },
+        shed_requests: if weighted {
+            xq.shed_requests()
+        } else {
+            harness_shed_reqs
+        },
+        slo_violations: xq.slo_violations(),
+        max_starve,
+        preemptions,
+        resumes,
+        preempt_fires: xq.preempt_fires(),
+        tokens,
+        t_end: clock.now(),
+    }
+}
+
+/// Exact p95 over a non-empty sample (nearest-rank: the ceil(0.95·n)-th
+/// smallest value).
+pub fn p95(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((v.len() as f64) * 0.95).ceil() as usize;
+    v[rank.max(1).min(v.len()) - 1]
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+// ---------------------------------------------------------------------------
+// Trace JSONL (record -> replay)
+// ---------------------------------------------------------------------------
+
+/// One event from a live run, streamed by the coordinator's
+/// `BatcherConfig::trace` hook: request arrivals (backdated to the
+/// caller-side enqueue instant) and executed step costs per model.
+#[derive(Clone, Debug)]
+pub enum TraceEvent {
+    Arrival { t: f64, model: String, n: usize, seed: u64, priority: i32 },
+    Step { model: String, cost_s: f64 },
+}
+
+/// Per-model geometry the recorder cannot observe from the event stream
+/// (the replaying MockModel's shape and the policy to simulate under).
+#[derive(Clone, Debug)]
+pub struct QueueGeometry {
+    pub model: String,
+    pub d: usize,
+    pub vocab: usize,
+    pub bucket: usize,
+    pub model_seed: u64,
+    pub policy: QueuePolicy,
+}
+
+/// Assemble a recorded event stream into a replayable trace: one
+/// [`QueueSpec`] per geometry entry (step cost = the mean observed cost
+/// of that model's steps; 10ms when it never stepped) and time-sorted
+/// [`Arrival`]s normalized to start at t = 0. Arrivals for models
+/// without a geometry entry are dropped.
+pub fn assemble_trace(events: &[TraceEvent], geometry: &[QueueGeometry])
+                      -> (Vec<QueueSpec>, Vec<Arrival>) {
+    let index: BTreeMap<&str, usize> = geometry
+        .iter()
+        .enumerate()
+        .map(|(i, g)| (g.model.as_str(), i))
+        .collect();
+    let mut cost_sum = vec![0.0f64; geometry.len()];
+    let mut cost_n = vec![0u64; geometry.len()];
+    let mut t0 = f64::INFINITY;
+    for ev in events {
+        match ev {
+            TraceEvent::Step { model, cost_s } => {
+                if let Some(&i) = index.get(model.as_str()) {
+                    cost_sum[i] += cost_s;
+                    cost_n[i] += 1;
+                }
+            }
+            TraceEvent::Arrival { t, model, .. } => {
+                if index.contains_key(model.as_str()) {
+                    t0 = t0.min(*t);
+                }
+            }
+        }
+    }
+    if !t0.is_finite() {
+        t0 = 0.0;
+    }
+    let specs: Vec<QueueSpec> = geometry
+        .iter()
+        .enumerate()
+        .map(|(i, g)| QueueSpec {
+            d: g.d,
+            vocab: g.vocab,
+            bucket: g.bucket,
+            model_seed: g.model_seed,
+            policy: g.policy.clone(),
+            step_cost: if cost_n[i] > 0 {
+                cost_sum[i] / cost_n[i] as f64
+            } else {
+                0.01
+            },
+        })
+        .collect();
+    let mut arrivals: Vec<Arrival> = events
+        .iter()
+        .filter_map(|ev| match ev {
+            TraceEvent::Arrival { t, model, n, seed, priority } => {
+                index.get(model.as_str()).map(|&i| Arrival {
+                    t: (t - t0).max(0.0),
+                    queue: i,
+                    n: *n,
+                    seed: *seed,
+                    priority: *priority,
+                })
+            }
+            _ => None,
+        })
+        .collect();
+    arrivals.sort_by(|a, b| a.t.partial_cmp(&b.t).unwrap());
+    (specs, arrivals)
+}
+
+fn u64_str(v: u64) -> Json {
+    Json::str(v.to_string())
+}
+
+fn parse_u64(v: Option<&Json>) -> Result<u64, String> {
+    match v {
+        Some(Json::Str(s)) => {
+            s.parse().map_err(|_| format!("bad u64 '{s}'"))
+        }
+        Some(j) => j
+            .as_f64()
+            .map(|n| n as u64)
+            .ok_or_else(|| "bad u64".to_string()),
+        None => Err("missing u64 field".into()),
+    }
+}
+
+/// Serialize a (config, queues, arrivals) trace as JSONL (see module
+/// docs for the line grammar). Creates parent directories as needed.
+pub fn write_trace(path: &Path, cfg: &SchedConfig, specs: &[QueueSpec],
+                   trace: &[Arrival]) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let mut f = std::fs::File::create(path)?;
+    let cfg_line = Json::obj(vec![
+        ("kind", Json::str("config")),
+        ("starve_after", Json::num(cfg.starve_after as f64)),
+        ("wait_alpha", Json::num(cfg.wait_alpha)),
+        ("max_boost", Json::num(cfg.max_boost)),
+        ("preempt_after", Json::num(cfg.preempt_after as f64)),
+    ]);
+    writeln!(f, "{cfg_line}")?;
+    for s in specs {
+        let mut fields = vec![
+            ("kind", Json::str("queue")),
+            ("d", Json::num(s.d as f64)),
+            ("vocab", Json::num(s.vocab as f64)),
+            ("bucket", Json::num(s.bucket as f64)),
+            ("model_seed", u64_str(s.model_seed)),
+            ("step_cost", Json::num(s.step_cost)),
+            ("weight", Json::num(s.policy.weight)),
+            ("burst", Json::num(s.policy.max_consecutive as f64)),
+            ("shed", Json::Bool(s.policy.shed_on_full)),
+            ("preempt", Json::Bool(s.policy.preempt)),
+        ];
+        if let Some(slo) = s.policy.slo_p95_s {
+            fields.push(("slo", Json::num(slo)));
+        }
+        if s.policy.max_pending != usize::MAX {
+            fields.push(("pending", Json::num(s.policy.max_pending as f64)));
+        }
+        writeln!(f, "{}", Json::obj(fields))?;
+    }
+    for a in trace {
+        let line = Json::obj(vec![
+            ("kind", Json::str("arrival")),
+            ("t", Json::num(a.t)),
+            ("queue", Json::num(a.queue as f64)),
+            ("n", Json::num(a.n as f64)),
+            ("seed", u64_str(a.seed)),
+            ("priority", Json::num(a.priority as f64)),
+        ]);
+        writeln!(f, "{line}")?;
+    }
+    Ok(())
+}
+
+/// Parse a JSONL trace written by [`write_trace`] (or by hand — missing
+/// optional fields take their defaults).
+pub fn read_trace(path: &Path)
+                  -> Result<(SchedConfig, Vec<QueueSpec>, Vec<Arrival>),
+                            String> {
+    let body = std::fs::read_to_string(path)
+        .map_err(|e| format!("read {}: {e}", path.display()))?;
+    let mut cfg = SchedConfig::default();
+    let mut specs = Vec::new();
+    let mut arrivals = Vec::new();
+    for (ln, line) in body.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let v = Json::parse(line)
+            .map_err(|e| format!("line {}: {e:?}", ln + 1))?;
+        let kind = v
+            .get("kind")
+            .and_then(|k| k.as_str())
+            .ok_or_else(|| format!("line {}: missing kind", ln + 1))?;
+        match kind {
+            "config" => {
+                if let Some(x) = v.get("starve_after").and_then(Json::as_f64)
+                {
+                    cfg.starve_after = x as u64;
+                }
+                if let Some(x) = v.get("wait_alpha").and_then(Json::as_f64) {
+                    cfg.wait_alpha = x;
+                }
+                if let Some(x) = v.get("max_boost").and_then(Json::as_f64) {
+                    cfg.max_boost = x;
+                }
+                if let Some(x) =
+                    v.get("preempt_after").and_then(Json::as_f64)
+                {
+                    cfg.preempt_after = x as u64;
+                }
+            }
+            "queue" => {
+                let mut policy = QueuePolicy::default();
+                if let Some(w) = v.get("weight").and_then(Json::as_f64) {
+                    policy.weight = w;
+                }
+                policy.slo_p95_s = v.get("slo").and_then(Json::as_f64);
+                if let Some(b) = v.get("burst").and_then(Json::as_f64) {
+                    policy.max_consecutive = b as u32;
+                }
+                if let Some(p) = v.get("pending").and_then(Json::as_f64) {
+                    policy.max_pending = p as usize;
+                }
+                policy.shed_on_full = v
+                    .get("shed")
+                    .and_then(Json::as_bool)
+                    .unwrap_or(false);
+                policy.preempt = v
+                    .get("preempt")
+                    .and_then(Json::as_bool)
+                    .unwrap_or(false);
+                specs.push(QueueSpec {
+                    d: v.get("d")
+                        .and_then(Json::as_usize)
+                        .ok_or_else(|| format!("line {}: missing d",
+                                               ln + 1))?,
+                    vocab: v
+                        .get("vocab")
+                        .and_then(Json::as_usize)
+                        .unwrap_or(6),
+                    bucket: v
+                        .get("bucket")
+                        .and_then(Json::as_usize)
+                        .unwrap_or(1),
+                    model_seed: parse_u64(v.get("model_seed"))
+                        .map_err(|e| format!("line {}: {e}", ln + 1))?,
+                    policy,
+                    step_cost: v
+                        .get("step_cost")
+                        .and_then(Json::as_f64)
+                        .unwrap_or(0.01),
+                });
+            }
+            "arrival" => {
+                let queue = v
+                    .get("queue")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| {
+                        format!("line {}: missing queue", ln + 1)
+                    })?;
+                if queue >= specs.len() {
+                    return Err(format!(
+                        "line {}: arrival for queue {queue} but only {} \
+                         queue lines precede it",
+                        ln + 1,
+                        specs.len()
+                    ));
+                }
+                arrivals.push(Arrival {
+                    t: v.get("t").and_then(Json::as_f64).unwrap_or(0.0),
+                    queue,
+                    n: v.get("n").and_then(Json::as_usize).unwrap_or(1),
+                    seed: parse_u64(v.get("seed"))
+                        .map_err(|e| format!("line {}: {e}", ln + 1))?,
+                    priority: v
+                        .get("priority")
+                        .and_then(Json::as_f64)
+                        .unwrap_or(0.0) as i32,
+                });
+            }
+            other => {
+                return Err(format!("line {}: unknown kind '{other}'",
+                                   ln + 1))
+            }
+        }
+    }
+    if specs.is_empty() {
+        return Err("trace has no queue lines".into());
+    }
+    for w in arrivals.windows(2) {
+        if w[0].t > w[1].t {
+            return Err("arrival lines must be time-sorted".into());
+        }
+    }
+    Ok((cfg, specs, arrivals))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_roundtrips_losslessly() {
+        let cfg = SchedConfig {
+            starve_after: 32,
+            preempt_after: 2,
+            ..SchedConfig::default()
+        };
+        let specs = vec![
+            QueueSpec::new(16, 4, 0.08, QueuePolicy {
+                preempt: true,
+                ..QueuePolicy::default()
+            }),
+            QueueSpec::new(8, 1, 0.004, QueuePolicy {
+                weight: 4.0,
+                slo_p95_s: Some(0.005),
+                max_pending: 256,
+                ..QueuePolicy::default()
+            }),
+        ];
+        // A seed above 2^53 must survive (f64 JSON numbers would not).
+        let trace = vec![
+            Arrival { t: 0.0, queue: 0, n: 2,
+                      seed: (1u64 << 60) + 12345, priority: 0 },
+            Arrival { t: 0.5, queue: 1, n: 1, seed: 7, priority: 3 },
+        ];
+        let path = std::env::temp_dir()
+            .join(format!("ssmd_trace_rt_{}.jsonl", std::process::id()));
+        write_trace(&path, &cfg, &specs, &trace).unwrap();
+        let (cfg2, specs2, trace2) = read_trace(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(cfg2.starve_after, 32);
+        assert_eq!(cfg2.preempt_after, 2);
+        assert_eq!(specs2.len(), 2);
+        assert_eq!(specs2[0].d, 16);
+        assert!(specs2[0].policy.preempt);
+        assert_eq!(specs2[0].step_cost, 0.08);
+        assert_eq!(specs2[1].policy.slo_p95_s, Some(0.005));
+        assert_eq!(specs2[1].policy.max_pending, 256);
+        assert_eq!(specs2[1].policy.weight, 4.0);
+        assert_eq!(trace2.len(), 2);
+        assert_eq!(trace2[0].seed, (1u64 << 60) + 12345);
+        assert_eq!(trace2[0].n, 2);
+        assert_eq!(trace2[1].priority, 3);
+        assert_eq!(trace2[1].t, 0.5);
+    }
+
+    #[test]
+    fn assemble_trace_groups_models_and_averages_costs() {
+        let geometry = vec![
+            QueueGeometry {
+                model: "bulk".into(),
+                d: 16,
+                vocab: 6,
+                bucket: 4,
+                model_seed: 7,
+                policy: QueuePolicy::default(),
+            },
+            QueueGeometry {
+                model: "slo".into(),
+                d: 8,
+                vocab: 6,
+                bucket: 1,
+                model_seed: 9,
+                policy: QueuePolicy::default(),
+            },
+        ];
+        let events = vec![
+            TraceEvent::Arrival { t: 10.0, model: "bulk".into(), n: 2,
+                                  seed: 1, priority: 0 },
+            TraceEvent::Step { model: "bulk".into(), cost_s: 0.02 },
+            TraceEvent::Step { model: "bulk".into(), cost_s: 0.04 },
+            TraceEvent::Arrival { t: 10.5, model: "slo".into(), n: 1,
+                                  seed: 2, priority: 5 },
+            // Unknown models are dropped, not mis-bucketed.
+            TraceEvent::Arrival { t: 10.1, model: "ghost".into(), n: 9,
+                                  seed: 3, priority: 0 },
+        ];
+        let (specs, arrivals) = assemble_trace(&events, &geometry);
+        assert_eq!(specs.len(), 2);
+        assert!((specs[0].step_cost - 0.03).abs() < 1e-12);
+        assert_eq!(specs[1].step_cost, 0.01, "no steps -> default cost");
+        assert_eq!(arrivals.len(), 2);
+        // Times normalized to the earliest kept arrival; order sorted.
+        assert_eq!(arrivals[0].t, 0.0);
+        assert_eq!(arrivals[0].queue, 0);
+        assert!((arrivals[1].t - 0.5).abs() < 1e-12);
+        assert_eq!(arrivals[1].queue, 1);
+        assert_eq!(arrivals[1].priority, 5);
+    }
+}

@@ -67,6 +67,13 @@ impl Args {
             .unwrap_or(default)
     }
 
+    pub fn i64(&self, key: &str, default: i64) -> i64 {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
     pub fn f64(&self, key: &str, default: f64) -> f64 {
         self.flags
             .get(key)
@@ -111,6 +118,15 @@ mod tests {
         assert!(a.bool("flag"));
         assert!((a.f64("z", 0.0) - 1.5).abs() < 1e-12);
         assert_eq!(a.usize("missing", 7), 7);
+    }
+
+    #[test]
+    fn i64_accepts_negative_values() {
+        let a = parse("--priority -3");
+        // "--priority -3": the "-3" token does not start with "--", so
+        // it binds as the flag's value.
+        assert_eq!(a.i64("priority", 0), -3);
+        assert_eq!(a.i64("missing", -7), -7);
     }
 
     #[test]

@@ -200,8 +200,8 @@ fn warm_scheduler_steps_allocate_nothing() {
         ..QueuePolicy::default()
     });
     let qb = xq.register("b", QueuePolicy::default());
-    assert!(xq.try_enqueue(qa, 0, 1, 0.0));
-    assert!(xq.try_enqueue(qb, 0, 1, 0.0));
+    assert!(xq.try_enqueue(qa, 0, 0, 1, 0.0));
+    assert!(xq.try_enqueue(qb, 0, 0, 1, 0.0));
     let ready = [qa, qb];
     // Pre-warm both arenas directly (3 steps each — the SLO boost would
     // otherwise keep the selector on queue a and leave queue b's arena

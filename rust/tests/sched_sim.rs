@@ -1,293 +1,34 @@
 //! Deterministic virtual-time simulation of the cross-queue scheduler.
 //!
-//! The weighted SLO-aware selector (`coordinator::sched`) is pure state
-//! driven by an injected `Clock`, so this harness can replay scripted
-//! multi-queue arrival traces against real `BoundStepper`/`MockModel`
-//! steppers with **synthetic per-step costs** on a `SimClock` — every
-//! latency and fairness number below is exact: no sleeps, no wall time,
-//! no flakiness. The round-robin baseline (the pre-weighted engine-loop
-//! policy) runs in the same harness, so weighted-vs-RR comparisons hold
-//! everything else fixed.
+//! The harness itself lives in `ssmd::sim` (promoted to the library in
+//! PR 5 so `examples/trace_replay.rs` can replay *recorded* traces
+//! through it); this file holds the assertions:
 //!
-//! Sequences use a `Constant(1)` accept window, which decides exactly one
-//! ordering position per outer loop: a sequence of length `d` costs
-//! exactly `d` scheduler steps regardless of RNG, making step counts and
-//! drain times analytically checkable.
-//!
-//! Covered here:
-//! * the headline win — on a mixed workload (bulk queue at 10x the
+//! * the PR-3 headline — on a mixed workload (bulk queue at 10x the
 //!   request arrival rate of a small SLO queue) the SLO queue's simulated
 //!   p95 queue wait under the weighted scheduler is strictly lower than
 //!   under round-robin, and an all-one-queue trace shows zero throughput
 //!   loss vs round-robin;
+//! * the PR-5 headline — on a bulk-saturated trace with an SLO-queue
+//!   spike, **preemptive** scheduling (mid-sequence checkpoint/evict/
+//!   resume) gives strictly lower SLO-queue p95 than weighted
+//!   non-preemptive scheduling, while every preempted sequence's token
+//!   stream stays **bitwise identical** to the same-seed unpreempted
+//!   run;
+//! * trace record -> replay: the JSONL round-trip reproduces identical
+//!   step/shed/violation counters across replays;
 //! * scheduler invariants under randomized traces (seeded PCG, many
 //!   seeds): no sequence lost or double-answered, no non-empty queue
 //!   starves beyond a bounded number of rounds, weighted step shares of
 //!   backlogged queues converge to the configured ratios;
-//! * admission backpressure: shed-vs-queue accounting stays conservative.
+//! * admission backpressure: shed-vs-queue accounting stays conservative
+//!   at both granularities (requests and sequences).
 
-use std::collections::{BTreeMap, BTreeSet};
-
-use ssmd::coordinator::sched::{CrossQueueScheduler, QueueId, QueuePolicy,
-                               SchedConfig};
-use ssmd::engine::{BoundStepper, MockModel, Prompt, SeqParams, SlotId,
-                   SpecParams, Stepper, Window};
+use ssmd::coordinator::sched::{QueuePolicy, SchedConfig};
+use ssmd::sim::{mean, p95, read_trace, simulate, write_trace, Arrival,
+                QueueSpec, Report, Selector};
 use ssmd::util::ptest::{self, Size};
 use ssmd::util::rng::Pcg;
-use ssmd::util::simclock::{Clock, SimClock};
-
-#[derive(Clone, Debug)]
-struct QueueSpec {
-    d: usize,
-    vocab: usize,
-    bucket: usize,
-    model_seed: u64,
-    policy: QueuePolicy,
-    /// Synthetic virtual cost of one scheduler step of this queue.
-    step_cost: f64,
-}
-
-impl QueueSpec {
-    fn new(d: usize, bucket: usize, step_cost: f64, policy: QueuePolicy)
-           -> QueueSpec {
-        QueueSpec { d, vocab: 6, bucket, model_seed: 7, policy, step_cost }
-    }
-}
-
-#[derive(Clone, Copy, Debug)]
-struct Arrival {
-    t: f64,
-    queue: usize,
-    n: usize,
-    seed: u64,
-}
-
-#[derive(Clone, Copy, PartialEq)]
-enum Selector {
-    RoundRobin,
-    Weighted,
-}
-
-#[derive(Clone, Debug, PartialEq)]
-struct Report {
-    /// Per queue: one exact virtual-time queue wait per sequence
-    /// (admission -> slot placement), in placement order.
-    waits: Vec<Vec<f64>>,
-    /// Per queue: scheduler steps executed.
-    steps: Vec<u64>,
-    /// Per queue: steps executed while *every* queue had work (the
-    /// window where weighted shares are defined).
-    busy_steps: Vec<u64>,
-    /// Per queue: sequences retired.
-    finished: Vec<usize>,
-    /// Total *sequences* rejected by admission backpressure (a shed
-    /// request sheds all of its sequences).
-    shed: u64,
-    slo_violations: u64,
-    /// Largest ready-but-unpicked streak any queue experienced.
-    max_starve: u64,
-    t_end: f64,
-}
-
-/// Replay `trace` against the queues in `specs` under the given selector,
-/// in virtual time, until all admitted work drains. Asserts conservation
-/// (every admitted sequence finishes exactly once) internally.
-fn simulate(specs: &[QueueSpec], trace: &[Arrival], selector: Selector,
-            cfg: &SchedConfig) -> Report {
-    for w in trace.windows(2) {
-        assert!(w[0].t <= w[1].t, "trace must be time-sorted");
-    }
-    let models: Vec<MockModel> = specs
-        .iter()
-        .map(|s| {
-            let mut m = MockModel::new(s.d, s.vocab, s.model_seed);
-            m.buckets = vec![s.bucket];
-            m
-        })
-        .collect();
-    let params = SpecParams {
-        window: Window::Constant(1),
-        ..Default::default()
-    };
-    let mut steppers: Vec<BoundStepper<'_, MockModel>> = models
-        .iter()
-        .map(|m| BoundStepper::new(m, SeqParams::Spec(params.clone())))
-        .collect();
-
-    let clock = SimClock::new();
-    let mut xq = CrossQueueScheduler::new(Box::new(clock.clone()), cfg);
-    let qids: Vec<QueueId> = specs
-        .iter()
-        .enumerate()
-        .map(|(i, s)| xq.register(&format!("q{i}"), s.policy.clone()))
-        .collect();
-    let weighted = selector == Selector::Weighted;
-
-    let nq = specs.len();
-    let mut admit_time: Vec<BTreeMap<SlotId, f64>> =
-        vec![BTreeMap::new(); nq];
-    let mut seen_done: Vec<BTreeSet<SlotId>> = vec![BTreeSet::new(); nq];
-    let mut waits: Vec<Vec<f64>> = vec![Vec::new(); nq];
-    let mut steps = vec![0u64; nq];
-    let mut busy_steps = vec![0u64; nq];
-    let mut finished = vec![0usize; nq];
-    let mut since_pick = vec![0u64; nq];
-    let mut max_starve = 0u64;
-    let mut harness_shed = 0u64;
-    let mut rr = 0usize;
-    let mut next = 0usize;
-    let mut ready_buf: Vec<QueueId> = Vec::new();
-
-    loop {
-        // Admit everything due at the current virtual time (requests that
-        // arrived while the engine was stepping are backdated, exactly as
-        // the coordinator backdates channel transit time).
-        while next < trace.len() && trace[next].t <= clock.now() + 1e-12 {
-            let a = trace[next];
-            next += 1;
-            let age = (clock.now() - a.t).max(0.0);
-            if weighted {
-                if !xq.try_enqueue(qids[a.queue], 0, a.n, age) {
-                    continue; // shed by admission backpressure
-                }
-            } else {
-                let q = &specs[a.queue].policy;
-                let over = admit_time[a.queue].len()
-                    - seen_done[a.queue].len()
-                    - steppers[a.queue].n_active();
-                if q.shed_on_full && over + a.n > q.max_pending {
-                    harness_shed += a.n as u64;
-                    continue;
-                }
-            }
-            let prompt = Prompt::empty(specs[a.queue].d);
-            let mut rng = Pcg::new(a.seed);
-            for _ in 0..a.n {
-                let sid = steppers[a.queue].admit(&prompt, rng.split());
-                admit_time[a.queue].insert(sid, a.t);
-            }
-        }
-
-        ready_buf.clear();
-        for (i, st) in steppers.iter().enumerate() {
-            if !st.is_idle() {
-                ready_buf.push(qids[i]);
-            }
-        }
-        if ready_buf.is_empty() {
-            if next >= trace.len() {
-                break;
-            }
-            clock.set(trace[next].t);
-            continue;
-        }
-        let all_busy = ready_buf.len() == nq;
-
-        let qi = match selector {
-            Selector::Weighted => {
-                let sid = xq.pick(&ready_buf).expect("ready set non-empty");
-                qids.iter().position(|&q| q == sid).unwrap()
-            }
-            Selector::RoundRobin => {
-                // The pre-weighted engine loop: scan from a rotating
-                // cursor, step the first non-idle queue.
-                let mut chosen = None;
-                for off in 0..nq {
-                    let i = (rr + off) % nq;
-                    if !steppers[i].is_idle() {
-                        chosen = Some(i);
-                        break;
-                    }
-                }
-                let i = chosen.unwrap();
-                rr = i + 1;
-                i
-            }
-        };
-
-        // Starvation accounting, same definition as the selector's: a
-        // streak counts rounds a queue was ready but unpicked, and resets
-        // whenever the queue is picked or goes idle.
-        for (i, st) in steppers.iter().enumerate() {
-            if st.is_idle() {
-                since_pick[i] = 0;
-            } else if i != qi {
-                since_pick[i] += 1;
-                max_starve = max_starve.max(since_pick[i]);
-            }
-        }
-        since_pick[qi] = 0;
-
-        // One step: placements happen at step start (backfill precedes
-        // the forward pass), so waits are measured against t0.
-        let t0 = clock.now();
-        let done = steppers[qi].step();
-        let placed = steppers[qi].take_placements();
-        for sid in &placed {
-            let at = admit_time[qi]
-                .get(sid)
-                .copied()
-                .expect("placed sequence was admitted");
-            waits[qi].push(t0 - at);
-        }
-        if weighted {
-            xq.placed_at(qids[qi], 0, placed.len(), t0, |_| {});
-        }
-        clock.advance(specs[qi].step_cost);
-        if weighted {
-            xq.report_step(qids[qi], specs[qi].step_cost);
-        }
-        steps[qi] += 1;
-        if all_busy {
-            busy_steps[qi] += 1;
-        }
-        for (sid, _) in done {
-            assert!(seen_done[qi].insert(sid),
-                    "sequence {sid:?} answered twice");
-            assert!(admit_time[qi].contains_key(&sid),
-                    "retired sequence {sid:?} was never admitted");
-            finished[qi] += 1;
-        }
-    }
-
-    for i in 0..nq {
-        assert_eq!(finished[i], admit_time[i].len(),
-                   "queue {i}: admitted sequences were lost");
-        assert_eq!(waits[i].len(), admit_time[i].len(),
-                   "queue {i}: placement accounting out of sync");
-    }
-    Report {
-        waits,
-        steps,
-        busy_steps,
-        finished,
-        // Sequence-denominated on both paths (shed_of counts sequences;
-        // shed_requests counts requests) so conservation arithmetic
-        // against per-arrival n stays exact.
-        shed: if weighted {
-            qids.iter().map(|&q| xq.shed_of(q)).sum()
-        } else {
-            harness_shed
-        },
-        slo_violations: xq.slo_violations(),
-        max_starve,
-        t_end: clock.now(),
-    }
-}
-
-/// Exact p95 over a non-empty sample (nearest-rank: the ceil(0.95·n)-th
-/// smallest value).
-fn p95(xs: &[f64]) -> f64 {
-    assert!(!xs.is_empty());
-    let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let rank = ((v.len() as f64) * 0.95).ceil() as usize;
-    v[rank.max(1).min(v.len()) - 1]
-}
-
-fn mean(xs: &[f64]) -> f64 {
-    xs.iter().sum::<f64>() / xs.len() as f64
-}
 
 /// Headline mixed workload: a bulk queue taking 10 requests/s against a
 /// small SLO queue taking 1 request/s (bursts of 4 short sequences).
@@ -315,6 +56,7 @@ fn headline_setup() -> (Vec<QueueSpec>, Vec<Arrival>) {
             queue: 0,
             n: 1,
             seed: 1000 + k,
+            priority: 0,
         });
     }
     for k in 0..5 {
@@ -323,6 +65,7 @@ fn headline_setup() -> (Vec<QueueSpec>, Vec<Arrival>) {
             queue: 1,
             n: 4,
             seed: 2000 + k,
+            priority: 0,
         });
     }
     trace.sort_by(|a, b| a.t.partial_cmp(&b.t).unwrap());
@@ -354,6 +97,103 @@ fn weighted_beats_round_robin_on_slo_queue_p95() {
     assert!(w.slo_violations >= 1);
     // The bulk queue still drains with bounded starvation.
     assert!(w.max_starve <= cfg.starve_after + specs.len() as u64);
+    // No preemption was configured, so none may fire.
+    assert_eq!(w.preemptions, 0);
+    assert_eq!(w.preempt_fires, 0);
+}
+
+// ---------------------------------------------------------------------------
+// Preemptive serving headline
+// ---------------------------------------------------------------------------
+
+/// Bulk-saturated trace with an SLO-queue spike: the bulk queue carries
+/// ~51s of step work admitted in the first second; at t = 2.0 the SLO
+/// queue takes a 10-sequence spike whose waits blow its 5ms target far
+/// past the boost ceiling.
+fn preempt_setup(preempt: bool) -> (Vec<QueueSpec>, Vec<Arrival>) {
+    let specs = vec![
+        QueueSpec::new(16, 4, 0.08, QueuePolicy {
+            weight: 1.0,
+            preempt,
+            ..QueuePolicy::default()
+        }),
+        QueueSpec::new(8, 1, 0.004, QueuePolicy {
+            weight: 4.0,
+            slo_p95_s: Some(0.005),
+            // Without preemption the burst bound forces a 0.08s bulk
+            // step into every 8 SLO steps — the structural latency the
+            // preemptive run removes.
+            max_consecutive: 8,
+            ..QueuePolicy::default()
+        }),
+    ];
+    let mut trace = Vec::new();
+    for k in 0..20 {
+        trace.push(Arrival {
+            t: 0.05 * k as f64,
+            queue: 0,
+            n: 2,
+            seed: 1000 + k,
+            priority: 0,
+        });
+    }
+    for k in 0..10u64 {
+        trace.push(Arrival {
+            t: 2.0 + 0.001 * k as f64,
+            queue: 1,
+            n: 1,
+            seed: 2000 + k,
+            priority: 1,
+        });
+    }
+    trace.sort_by(|a, b| a.t.partial_cmp(&b.t).unwrap());
+    (specs, trace)
+}
+
+/// The PR-5 headline: preemption (park the saturated bulk queue's
+/// residents mid-sequence while the SLO spike drains, resume after)
+/// strictly beats weighted non-preemptive scheduling on SLO p95 — and
+/// checkpoint/resume is bitwise exact, so the bulk queue pays only
+/// *time*, never different tokens.
+#[test]
+fn preemption_beats_weighted_on_slo_spike_and_is_bitwise_exact() {
+    let cfg = SchedConfig { preempt_after: 2, ..SchedConfig::default() };
+    let (specs_pre, trace) = preempt_setup(true);
+    let (specs_plain, trace_plain) = preempt_setup(false);
+    let pre = simulate(&specs_pre, &trace, Selector::Weighted, &cfg);
+    let plain =
+        simulate(&specs_plain, &trace_plain, Selector::Weighted, &cfg);
+
+    // Conservation on both: 40 bulk + 10 SLO sequences served.
+    assert_eq!(pre.finished, vec![40, 10]);
+    assert_eq!(plain.finished, vec![40, 10]);
+
+    // Preemption actually happened (and resumed everything it parked).
+    assert!(pre.preempt_fires >= 1, "preemption never fired");
+    assert!(pre.preemptions >= 1);
+    assert_eq!(pre.preemptions, pre.resumes,
+               "every evicted sequence must be resumed exactly once");
+    assert_eq!(plain.preemptions, 0);
+
+    // Strictly lower SLO-queue p95 — the headline.
+    let (p95_pre, p95_plain) = (p95(&pre.waits[1]), p95(&plain.waits[1]));
+    assert!(
+        p95_pre < p95_plain,
+        "preemptive p95 {p95_pre:.3}s must beat non-preemptive \
+         {p95_plain:.3}s"
+    );
+    assert!(
+        p95_pre < 0.75 * p95_plain,
+        "preemptive p95 {p95_pre:.3}s vs {p95_plain:.3}s: gap collapsed"
+    );
+    assert!(mean(&pre.waits[1]) < mean(&plain.waits[1]));
+
+    // Bitwise checkpoint/resume determinism: every sequence — the
+    // preempted bulk residents included — produced the exact token
+    // stream of the unpreempted run (same seeds, same SlotIds).
+    assert_eq!(pre.tokens[0], plain.tokens[0],
+               "preempted bulk token streams diverged");
+    assert_eq!(pre.tokens[1], plain.tokens[1]);
 }
 
 #[test]
@@ -373,6 +213,7 @@ fn all_one_queue_trace_loses_no_throughput() {
             queue: 0,
             n: 1 + (k as usize % 3),
             seed: 300 + k,
+            priority: 0,
         });
     }
     let cfg = SchedConfig::default();
@@ -393,6 +234,28 @@ fn simulation_is_deterministic() {
     assert_eq!(a, b, "virtual-time simulation must be bit-reproducible");
 }
 
+/// Trace record -> replay round-trip: writing the preemptive headline
+/// scenario to JSONL, reading it back, and replaying must reproduce the
+/// direct run's counters exactly — and two replays of the same file must
+/// be bitwise identical (the CI smoke-trace gate relies on this).
+#[test]
+fn trace_roundtrip_replays_identical_counters() {
+    let cfg = SchedConfig { preempt_after: 2, ..SchedConfig::default() };
+    let (specs, trace) = preempt_setup(true);
+    let direct = simulate(&specs, &trace, Selector::Weighted, &cfg);
+    let path = std::env::temp_dir()
+        .join(format!("ssmd_sched_sim_rt_{}.jsonl", std::process::id()));
+    write_trace(&path, &cfg, &specs, &trace).unwrap();
+    let (cfg2, specs2, trace2) = read_trace(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    let replay_a = simulate(&specs2, &trace2, Selector::Weighted, &cfg2);
+    let replay_b = simulate(&specs2, &trace2, Selector::Weighted, &cfg2);
+    assert_eq!(replay_a, replay_b, "two replays must be bit-identical");
+    assert_eq!(replay_a, direct,
+               "replay through the JSONL round-trip must reproduce the \
+                direct run (steps/sheds/violations/tokens included)");
+}
+
 #[test]
 fn shed_policy_is_conservative_and_queue_policy_admits_all() {
     // 20 single-sequence requests land at t=0 on a depth-5 queue.
@@ -402,11 +265,15 @@ fn shed_policy_is_conservative_and_queue_policy_admits_all() {
         ..QueuePolicy::default()
     })];
     let trace: Vec<Arrival> = (0..20)
-        .map(|k| Arrival { t: 0.0, queue: 0, n: 1, seed: 50 + k })
+        .map(|k| Arrival { t: 0.0, queue: 0, n: 1, seed: 50 + k,
+                           priority: 0 })
         .collect();
     let cfg = SchedConfig::default();
     let r = simulate(&shed_spec, &trace, Selector::Weighted, &cfg);
     assert_eq!(r.shed, 15, "depth-5 bound must shed 15 of 20");
+    // Single-sequence requests: the request and sequence denominators
+    // coincide here; multi-sequence sheds are pinned in sched's units.
+    assert_eq!(r.shed_requests, 15);
     assert_eq!(r.finished[0], 5);
     // Same trace under queue-on-full: everything is admitted and served.
     let queue_spec = vec![QueueSpec::new(8, 1, 0.01, QueuePolicy {
@@ -416,7 +283,28 @@ fn shed_policy_is_conservative_and_queue_policy_admits_all() {
     })];
     let r = simulate(&queue_spec, &trace, Selector::Weighted, &cfg);
     assert_eq!(r.shed, 0);
+    assert_eq!(r.shed_requests, 0);
     assert_eq!(r.finished[0], 20);
+}
+
+/// A multi-sequence shed keeps the two denominators distinct end-to-end:
+/// one request of 4 sequences refused = 1 request / 4 sequences.
+#[test]
+fn shed_counters_distinguish_requests_from_sequences() {
+    let specs = vec![QueueSpec::new(8, 1, 0.01, QueuePolicy {
+        max_pending: 2,
+        shed_on_full: true,
+        ..QueuePolicy::default()
+    })];
+    let trace = vec![
+        Arrival { t: 0.0, queue: 0, n: 2, seed: 1, priority: 0 },
+        Arrival { t: 0.0, queue: 0, n: 4, seed: 2, priority: 0 },
+    ];
+    let r = simulate(&specs, &trace, Selector::Weighted,
+                     &SchedConfig::default());
+    assert_eq!(r.shed, 4, "4 sequences refused");
+    assert_eq!(r.shed_requests, 1, "1 request refused");
+    assert_eq!(r.finished[0], 2);
 }
 
 // ---------------------------------------------------------------------------
@@ -476,6 +364,7 @@ fn random_case(rng: &mut Pcg, s: Size)
             queue,
             n: 1 + rng.below(4),
             seed: rng.next_u64(),
+            priority: rng.below(3) as i32 - 1,
         });
     }
     (specs, trace, rng.next_u64())
@@ -503,6 +392,63 @@ fn property_no_loss_no_double_answer_bounded_starvation() {
             }
             // Starvation bound: starve_after plus one round per ready
             // queue (simultaneously-starved queues drain one per round).
+            let bound = cfg.starve_after + specs.len() as u64;
+            if r.max_starve > bound {
+                return Err(format!(
+                    "starve streak {} exceeds bound {bound}",
+                    r.max_starve
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Same conservation/starvation properties with preemption armed on
+/// every queue: parking/resuming under random adversarial traffic must
+/// not lose, duplicate, or (because parked queues are deliberately
+/// paused, not starved) trip the starvation accounting.
+#[test]
+fn property_preemption_conserves_under_random_traces() {
+    let cfg = SchedConfig {
+        starve_after: 16,
+        preempt_after: 2,
+        ..SchedConfig::default()
+    };
+    ptest::check(
+        8,
+        0x5eed_52,
+        |rng: &mut Pcg, s: Size| {
+            let (mut specs, trace, seed) = random_case(rng, s);
+            for q in specs.iter_mut() {
+                q.policy.preempt = true;
+                // Tight SLOs on the SLO-carrying queues so pressure
+                // actually reaches the ceiling under bursts.
+                if let Some(slo) = q.policy.slo_p95_s {
+                    q.policy.slo_p95_s = Some(slo / 100.0);
+                }
+            }
+            (specs, trace, seed)
+        },
+        |(specs, trace, _)| {
+            let r = simulate(specs, trace, Selector::Weighted, &cfg);
+            let admitted: usize =
+                trace.iter().map(|a| a.n).sum::<usize>()
+                    - r.shed as usize;
+            let served: usize = r.finished.iter().sum();
+            if served != admitted {
+                return Err(format!(
+                    "served {served} != admitted {admitted} \
+                     (preemptions {}, resumes {})",
+                    r.preemptions, r.resumes
+                ));
+            }
+            if r.preemptions != r.resumes {
+                return Err(format!(
+                    "evicted {} != resumed {}",
+                    r.preemptions, r.resumes
+                ));
+            }
             let bound = cfg.starve_after + specs.len() as u64;
             if r.max_starve > bound {
                 return Err(format!(
@@ -549,10 +495,11 @@ fn property_backlogged_step_shares_converge_to_weights() {
                     queue: i,
                     n: 40,
                     seed: seed ^ i as u64,
+                    priority: 0,
                 })
                 .collect();
-            let r = simulate(&specs, &trace, Selector::Weighted,
-                             &SchedConfig::default());
+            let r: Report = simulate(&specs, &trace, Selector::Weighted,
+                                     &SchedConfig::default());
             let total: u64 = r.busy_steps.iter().sum();
             let wsum: f64 = weights.iter().sum();
             for i in 0..*nq {

@@ -173,6 +173,7 @@ fn coordinator_with_threads(step_threads: usize) -> Coordinator {
         BatcherConfig {
             max_wait: Duration::from_millis(1),
             sched: SchedConfig { step_threads, ..Default::default() },
+            ..Default::default()
         },
     )
     .unwrap()
