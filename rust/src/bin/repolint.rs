@@ -1,0 +1,63 @@
+//! repolint — CLI front-end for the repo-native invariant linter
+//! (`ssmd::lint`). Walks `<root>/rust`, prints `path:line: [rule] msg`
+//! diagnostics, then the full allowlist (every suppression with its
+//! written reason), and exits nonzero if anything fired. CI gates on it;
+//! the same checks run under plain `cargo test` via the lint module's
+//! meta-test.
+//!
+//! USAGE: cargo run --bin repolint [-- --root DIR] [--quiet]
+//!   --root DIR   repo root to lint (default ".")
+//!   --quiet      diagnostics only, no allowlist / summary
+
+use std::path::Path;
+use std::process::ExitCode;
+
+use ssmd::lint;
+use ssmd::util::args::Args;
+
+fn main() -> ExitCode {
+    let args = Args::from_env();
+    let root = args.str("root", ".");
+    let quiet = args.bool("quiet");
+
+    let report = match lint::run_tree(Path::new(&root)) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("repolint: cannot walk {root}/rust: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    for d in &report.diags {
+        println!("{d}");
+    }
+
+    if !quiet {
+        if !report.allows.is_empty() {
+            println!("\nallowlist ({} entries):", report.allows.len());
+            for a in &report.allows {
+                println!(
+                    "  {}:{} allow({}) — {}",
+                    a.path,
+                    a.target,
+                    a.rules.join(", "),
+                    a.reason
+                );
+            }
+        }
+        println!(
+            "\nrepolint: {} files, {} diagnostic(s), {} allowlist \
+             entr{}",
+            report.files,
+            report.diags.len(),
+            report.allows.len(),
+            if report.allows.len() == 1 { "y" } else { "ies" },
+        );
+    }
+
+    if report.clean() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

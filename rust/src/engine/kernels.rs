@@ -89,6 +89,8 @@ pub(crate) const LN_POLY: [f64; 9] = [
 /// Mantissa bits of sqrt(2): the octave-fold threshold of [`fln64`].
 pub(crate) const LN_SQRT2_MANT: u64 = 0x6_a09e_667f_3bcd;
 
+// lint: hot-region — sampling kernels; allocation-free by contract
+// (scratch buffers are caller-owned, see residual_draw_into).
 /// Fast branchless `exp` for f32, intended for max-subtracted arguments
 /// (`x <= 0`); the result saturates at `2^±126` outside `|x| < 87`.
 /// Relative error ~5e-6. Inputs must be finite.
@@ -360,6 +362,7 @@ pub fn lse_f64(logits: &[f32]) -> f64 {
     let s: f64 = logits.iter().map(|&x| (x as f64 - m).exp()).sum();
     m + s.ln()
 }
+// lint: end-hot-region
 
 #[cfg(test)]
 mod tests {
@@ -468,6 +471,8 @@ mod tests {
         let (a, la) = gumbel_draw_lse(&row, 1.0, 42);
         let (b, lb) = gumbel_draw_lse(&row, 1.0, 42);
         assert_eq!((a, la.to_bits()), (b, lb.to_bits()));
+        // lint: allow(det-iteration) — test only counts distinct draws;
+        // iteration order is never observed.
         let distinct: std::collections::HashSet<usize> = (0..200)
             .map(|s| gumbel_draw_lse(&row, 1.0, s).0)
             .collect();

@@ -9,6 +9,7 @@ pub mod kernels;
 pub mod mdm;
 pub mod mock;
 pub mod pool;
+pub mod pool_model;
 pub mod scheduler;
 #[cfg(feature = "simd")]
 pub mod simd;

@@ -204,8 +204,10 @@ impl Drop for CompletionGuard<'_> {
 
 /// Contiguous chunk `i` of `0..n` split into `chunks` near-equal parts
 /// (the first `n % chunks` chunks carry one extra item). Pure function
-/// of its arguments — the determinism anchor of the pool.
-fn chunk_range(n: usize, chunks: usize, i: usize) -> Range<usize> {
+/// of its arguments — the determinism anchor of the pool. `pub(crate)`
+/// so the model checker (`engine::pool_model`) splits work with the
+/// exact production function.
+pub(crate) fn chunk_range(n: usize, chunks: usize, i: usize) -> Range<usize> {
     let base = n / chunks;
     let rem = n % chunks;
     let start = i * base + i.min(rem);
@@ -265,7 +267,12 @@ pub struct SharedSlice<T> {
     len: usize,
 }
 
+// SAFETY: a SharedSlice is only a pointer + length; every aliasing
+// obligation is deferred to the unsafe accessors below, whose contracts
+// require per-index exclusivity across threads.
 unsafe impl<T: Send> Send for SharedSlice<T> {}
+// SAFETY: same argument — a shared reference exposes nothing but the
+// unsafe accessors, so cross-thread sharing adds no new capability.
 unsafe impl<T: Send> Sync for SharedSlice<T> {}
 
 impl<T> SharedSlice<T> {
@@ -344,6 +351,7 @@ mod tests {
         pool.run(10, |w, range| {
             assert_eq!(w, 0);
             for i in range {
+                // SAFETY: i is in bounds and owned by this chunk alone.
                 unsafe { *view.get_mut(i) = i * i };
             }
         });
@@ -360,6 +368,7 @@ mod tests {
         let view = SharedSlice::new(&mut out);
         pool.run(n, |_w, range| {
             for i in range {
+                // SAFETY: i is in bounds and owned by this chunk alone.
                 unsafe { *view.get_mut(i) = i + 1 };
             }
         });
@@ -390,8 +399,14 @@ mod tests {
             let view = SharedSlice::new(&mut out);
             pool.run(513, |_w, range| {
                 for i in range {
+                    // lint: allow(rng-discipline) — fixed test mix, not
+                    // a generator stream.
                     let mut h = i as u64 ^ 0x9e3779b97f4a7c15;
+                    // lint: allow(rng-discipline) — fixed test mix, not
+                    // a generator stream.
                     h = h.wrapping_mul(0xbf58476d1ce4e5b9);
+                    // SAFETY: i is in bounds and owned by this chunk
+                    // alone.
                     unsafe { *view.get_mut(i) = h };
                 }
             });
@@ -438,6 +453,7 @@ mod tests {
         let view = SharedSlice::new(&mut out);
         pool.run(3, |_w, range| {
             for i in range {
+                // SAFETY: i is in bounds and owned by this chunk alone.
                 unsafe { *view.get_mut(i) = 7 };
             }
         });

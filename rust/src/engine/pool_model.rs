@@ -1,0 +1,429 @@
+//! Bounded exhaustive model checker for the [`pool`](super::pool)
+//! condvar protocol (a hand-rolled mini-loom; loom itself is
+//! unavailable offline).
+//!
+//! ## Why critical-section granularity is sound
+//!
+//! Every field of the pool's `JobState` is only ever read or written
+//! while holding the one `Mutex`, and every `notify_*` is issued while
+//! holding that same lock. Any real execution is therefore a
+//! serialization of the protocol's critical sections. Chunk execution
+//! happens outside the lock but touches only chunk-disjoint data (the
+//! `SharedSlice` contract), so it can be modeled as one independent
+//! atomic event between the job-capture and completion sections.
+//! Exhaustively interleaving these atomic transitions — plus condvar
+//! wait-sets with notify baked into the notifier's transition — covers
+//! every behavior of the real protocol.
+//!
+//! A thread parks (enters a wait-set) *atomically with* its failed
+//! predicate check, exactly the guarantee `Condvar::wait` gives by
+//! taking the lock guard; a lost wakeup would therefore appear here as
+//! a reachable state with no enabled transition. The main legs model no
+//! spurious wakeups, so:
+//!
+//! * **no lost wakeup / no deadlock** — every reachable quiescent state
+//!   is the fully-terminated one (workers exited, caller joined);
+//! * **exactly-once chunks** — every non-empty chunk of every job runs
+//!   exactly once (no double run, no skipped chunk) and `remaining`
+//!   never underflows or absorbs a stale decrement;
+//! * **panic visibility** — with the panic leg on, a caught worker
+//!   panic is always observable by the caller once its barrier passes;
+//! * **quiescence on drop** — shutdown leaves no thread parked.
+//!
+//! The spurious-wakeup leg re-checks all safety properties under
+//! spontaneous wakes (deadlock-freedom is vacuous there: a parked
+//! thread can always wake, so no state is transition-free until done).
+//!
+//! One intentional divergence from `StepPool::run`: jobs with
+//! `n_items <= 1` take the inline fast path in the real pool (no
+//! publish at all), so model configs use `n_items >= 2` — the protocol
+//! is only exercised beyond that threshold.
+//!
+//! Run with `cargo test pool_model` (the legs are ordinary unit tests;
+//! the largest explores a few thousand states and finishes in
+//! milliseconds).
+
+use std::collections::BTreeSet;
+
+use super::pool::chunk_range;
+
+/// One bounded scenario: a caller publishes `jobs` in sequence on a
+/// pool with `workers` worker threads (`chunks = workers + 1`, as in
+/// the real pool), then drops the pool.
+#[derive(Clone)]
+pub struct ModelCfg {
+    pub workers: usize,
+    /// `n_items` of each published job, in order (use values `>= 2`:
+    /// below that the real pool runs inline and never publishes).
+    pub jobs: Vec<usize>,
+    /// Add spontaneous condvar wakeups. Safety-only leg: every
+    /// assertion must still hold on every path, but deadlock-freedom
+    /// becomes vacuous (a parked thread is always wakeable).
+    pub spurious_wakeups: bool,
+    /// Let every non-empty worker chunk nondeterministically panic
+    /// (modeling the caught-and-recorded `catch_unwind` path).
+    pub worker_may_panic: bool,
+}
+
+impl ModelCfg {
+    pub fn new(workers: usize, jobs: &[usize]) -> ModelCfg {
+        ModelCfg {
+            workers,
+            jobs: jobs.to_vec(),
+            spurious_wakeups: false,
+            worker_may_panic: false,
+        }
+    }
+}
+
+/// Caller program counter: each variant is the next atomic transition
+/// the caller will take. `Barrier` re-runs its check on every wake,
+/// exactly like the `while remaining > 0 { wait }` loop it models.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+enum CallerPc {
+    Publish(usize),
+    RunChunk0(usize),
+    Barrier(usize),
+    Shutdown,
+    Join,
+    Done,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+enum WorkerPc {
+    /// About to run the wait-loop predicate check (lock held).
+    Check,
+    /// Captured `(gen, n_items)`; about to execute the chunk body
+    /// outside the lock.
+    Run(u64, usize),
+    /// About to run the completion section; the flag is "my chunk
+    /// panicked (caught)".
+    Finish(u64, bool),
+    Exited,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+struct Worker {
+    pc: WorkerPc,
+    seen_gen: u64,
+    /// In the `work` condvar's wait-set (not schedulable until a
+    /// notify — or a spurious wake — removes it).
+    parked: bool,
+}
+
+/// One interleaving state: thread positions + the mutex-protected
+/// `JobState` mirror + the run ledger the assertions check against.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+struct State {
+    caller: CallerPc,
+    /// Caller is in the `done` condvar's wait-set.
+    caller_parked: bool,
+    workers: Vec<Worker>,
+    gen: u64,
+    task: bool,
+    n_items: usize,
+    remaining: usize,
+    panicked: bool,
+    shutdown: bool,
+    /// `runs[(gen - 1) * chunks + chunk]`: times that chunk executed.
+    runs: Vec<u8>,
+    /// Ground truth per gen: some worker chunk of that job panicked.
+    chunk_panics: Vec<bool>,
+}
+
+fn record_run(t: &mut State, gen: u64, chunk: usize, chunks: usize) {
+    let idx = (gen - 1) as usize * chunks + chunk;
+    assert_eq!(t.runs[idx], 0,
+               "chunk {chunk} of job gen {gen} ran twice:\n{t:#?}");
+    t.runs[idx] = 1;
+}
+
+/// Barrier-passed invariants: the job's chunks each ran exactly once
+/// (empty chunks: zero times) and a worker panic, if any, is visible.
+fn check_job_complete(s: &State, chunks: usize) {
+    let gen = s.gen;
+    let base = (gen - 1) as usize * chunks;
+    for c in 0..chunks {
+        let expect =
+            usize::from(!chunk_range(s.n_items, chunks, c).is_empty());
+        let got = s.runs[base + c] as usize;
+        assert_eq!(got, expect,
+                   "chunk {c} of job gen {gen} ran {got} time(s), \
+                    expected {expect}:\n{s:#?}");
+    }
+    assert_eq!(s.panicked, s.chunk_panics[(gen - 1) as usize],
+               "worker panic not faithfully recorded at the \
+                barrier:\n{s:#?}");
+}
+
+fn check_terminal(s: &State) {
+    assert!(s.workers.iter().all(|w| w.pc == WorkerPc::Exited
+                                 && !w.parked),
+            "drop did not quiesce the workers:\n{s:#?}");
+    assert!(!s.task && s.remaining == 0 && !s.caller_parked,
+            "terminal state is not clean:\n{s:#?}");
+}
+
+/// All states reachable in one atomic transition. An empty result on a
+/// non-terminal state is a deadlock — with no spurious wakeups, that is
+/// precisely a lost wakeup.
+fn successors(s: &State, cfg: &ModelCfg) -> Vec<State> {
+    let chunks = cfg.workers + 1;
+    let mut out = Vec::new();
+
+    if !s.caller_parked {
+        match s.caller {
+            CallerPc::Publish(j) => {
+                assert!(!s.task,
+                        "publish over a still-posted task (run is not \
+                         reentrant):\n{s:#?}");
+                let mut t = s.clone();
+                t.gen += 1;
+                t.task = true;
+                t.n_items = cfg.jobs[j];
+                t.remaining = chunks - 1;
+                t.panicked = false;
+                // notify_all(work), issued under the lock.
+                for w in &mut t.workers {
+                    w.parked = false;
+                }
+                t.caller = CallerPc::RunChunk0(j);
+                out.push(t);
+            }
+            CallerPc::RunChunk0(j) => {
+                let mut t = s.clone();
+                if !chunk_range(t.n_items, chunks, 0).is_empty() {
+                    let gen = t.gen;
+                    record_run(&mut t, gen, 0, chunks);
+                }
+                t.caller = CallerPc::Barrier(j);
+                out.push(t);
+            }
+            CallerPc::Barrier(j) => {
+                let mut t = s.clone();
+                if t.remaining > 0 {
+                    t.caller_parked = true; // wait(done)
+                } else {
+                    check_job_complete(&t, chunks);
+                    t.task = false;
+                    t.caller = if j + 1 < cfg.jobs.len() {
+                        CallerPc::Publish(j + 1)
+                    } else {
+                        CallerPc::Shutdown
+                    };
+                }
+                out.push(t);
+            }
+            CallerPc::Shutdown => {
+                let mut t = s.clone();
+                t.shutdown = true;
+                for w in &mut t.workers {
+                    w.parked = false; // notify_all(work)
+                }
+                t.caller = CallerPc::Join;
+                out.push(t);
+            }
+            CallerPc::Join => {
+                // join() returns only once every worker exited.
+                if s.workers.iter().all(|w| w.pc == WorkerPc::Exited) {
+                    let mut t = s.clone();
+                    t.caller = CallerPc::Done;
+                    out.push(t);
+                }
+            }
+            CallerPc::Done => {}
+        }
+    }
+
+    for (i, w) in s.workers.iter().enumerate() {
+        if w.parked {
+            continue;
+        }
+        let chunk = i + 1;
+        match w.pc {
+            WorkerPc::Check => {
+                let mut t = s.clone();
+                if s.shutdown {
+                    t.workers[i].pc = WorkerPc::Exited;
+                } else if s.task && s.gen != w.seen_gen {
+                    t.workers[i].pc = WorkerPc::Run(s.gen, s.n_items);
+                    t.workers[i].seen_gen = s.gen;
+                } else {
+                    // wait(work): parking is atomic with the failed
+                    // check — the lock is held throughout.
+                    t.workers[i].parked = true;
+                }
+                out.push(t);
+            }
+            WorkerPc::Run(gen, n_items) => {
+                if chunk_range(n_items, chunks, chunk).is_empty() {
+                    let mut t = s.clone();
+                    t.workers[i].pc = WorkerPc::Finish(gen, false);
+                    out.push(t);
+                } else {
+                    let mut t = s.clone();
+                    record_run(&mut t, gen, chunk, chunks);
+                    t.workers[i].pc = WorkerPc::Finish(gen, false);
+                    out.push(t);
+                    if cfg.worker_may_panic {
+                        let mut t = s.clone();
+                        record_run(&mut t, gen, chunk, chunks);
+                        t.chunk_panics[(gen - 1) as usize] = true;
+                        t.workers[i].pc = WorkerPc::Finish(gen, true);
+                        out.push(t);
+                    }
+                }
+            }
+            WorkerPc::Finish(gen, p) => {
+                assert_eq!(gen, s.gen,
+                           "stale completion: worker {chunk} finishing \
+                            gen {gen}:\n{s:#?}");
+                assert!(s.remaining > 0,
+                        "remaining underflow (double \
+                         decrement):\n{s:#?}");
+                let mut t = s.clone();
+                if p {
+                    t.panicked = true;
+                }
+                t.remaining -= 1;
+                if t.remaining == 0 {
+                    // notify_one(done): the caller is the only thread
+                    // that ever waits on `done`, so there is no wake
+                    // choice to branch on.
+                    t.caller_parked = false;
+                }
+                t.workers[i].pc = WorkerPc::Check;
+                out.push(t);
+            }
+            WorkerPc::Exited => {}
+        }
+    }
+
+    if cfg.spurious_wakeups {
+        for (i, w) in s.workers.iter().enumerate() {
+            if w.parked {
+                let mut t = s.clone();
+                t.workers[i].parked = false;
+                out.push(t);
+            }
+        }
+        if s.caller_parked {
+            let mut t = s.clone();
+            t.caller_parked = false;
+            out.push(t);
+        }
+    }
+
+    out
+}
+
+/// Runaway backstop, far above any bounded config in the tests.
+const STATE_CAP: usize = 1_000_000;
+
+/// Exhaustively explore every interleaving of `cfg`, panicking (with
+/// the offending state) on any protocol violation. Returns the number
+/// of distinct states visited.
+pub fn explore(cfg: &ModelCfg) -> usize {
+    assert!(cfg.workers >= 1, "a workerless pool never publishes");
+    assert!(cfg.jobs.iter().all(|&n| n >= 2),
+            "jobs below 2 items take the real pool's inline fast path");
+    let chunks = cfg.workers + 1;
+    let init = State {
+        caller: if cfg.jobs.is_empty() {
+            CallerPc::Shutdown
+        } else {
+            CallerPc::Publish(0)
+        },
+        caller_parked: false,
+        workers: vec![
+            Worker { pc: WorkerPc::Check, seen_gen: 0, parked: false };
+            cfg.workers
+        ],
+        gen: 0,
+        task: false,
+        n_items: 0,
+        remaining: 0,
+        panicked: false,
+        shutdown: false,
+        runs: vec![0; cfg.jobs.len() * chunks],
+        chunk_panics: vec![false; cfg.jobs.len()],
+    };
+
+    let mut visited: BTreeSet<State> = BTreeSet::new();
+    let mut stack = vec![init.clone()];
+    visited.insert(init);
+    while let Some(s) = stack.pop() {
+        let succ = successors(&s, cfg);
+        if succ.is_empty() {
+            if s.caller == CallerPc::Done {
+                check_terminal(&s);
+            } else {
+                panic!("deadlock (lost wakeup): no enabled transition \
+                        in a non-terminal state:\n{s:#?}");
+            }
+        }
+        for t in succ {
+            if !visited.contains(&t) {
+                visited.insert(t.clone());
+                stack.push(t);
+            }
+        }
+        assert!(visited.len() <= STATE_CAP,
+                "state-space cap exceeded — unbounded model?");
+    }
+    visited.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_workers_two_jobs_all_interleavings() {
+        // The headline leg: 3 executors (caller + 2 workers), two
+        // consecutive jobs — covers job handoff, gen observation races,
+        // park/notify orderings, and drop.
+        let n = explore(&ModelCfg::new(2, &[5, 4]));
+        assert!(n > 200, "suspiciously small state space: {n}");
+    }
+
+    #[test]
+    fn three_workers_single_job() {
+        explore(&ModelCfg::new(3, &[7]));
+    }
+
+    #[test]
+    fn empty_trailing_chunks_still_quiesce() {
+        // 2 items over 3 chunks: chunk 2 is empty and must decrement
+        // without executing.
+        explore(&ModelCfg::new(2, &[2]));
+    }
+
+    #[test]
+    fn shutdown_with_no_jobs_quiesces() {
+        explore(&ModelCfg::new(3, &[]));
+    }
+
+    #[test]
+    fn worker_panics_are_recorded_and_visible() {
+        let mut cfg = ModelCfg::new(2, &[3]);
+        cfg.worker_may_panic = true;
+        explore(&cfg);
+    }
+
+    #[test]
+    fn panicked_job_leaves_the_pool_reusable() {
+        // A panic in job 1 must not poison job 2 (publish resets the
+        // flag; check_job_complete asserts per-job ground truth).
+        let mut cfg = ModelCfg::new(2, &[3, 4]);
+        cfg.worker_may_panic = true;
+        explore(&cfg);
+    }
+
+    #[test]
+    fn spurious_wakeups_cannot_break_safety() {
+        let mut cfg = ModelCfg::new(2, &[3, 2]);
+        cfg.spurious_wakeups = true;
+        explore(&cfg);
+    }
+}

@@ -90,13 +90,13 @@
 use std::any::Any;
 use std::collections::VecDeque;
 use std::sync::Arc;
-use std::time::Instant;
 
 use crate::engine::kernels;
 use crate::engine::mdm::{mdm_alpha, MdmParams};
 use crate::engine::pool::{SharedSlice, StepPool};
 use crate::engine::{HybridModel, Prompt, Sample, SpecParams, SpecStats};
 use crate::util::rng::Pcg;
+use crate::util::simclock::{Clock, MonotonicClock};
 
 /// Handle for an admitted sequence; unique within one scheduler.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
@@ -215,7 +215,11 @@ impl SeqCheckpoint {
 /// itself is not touched again until the phases finish.
 struct ResidentPtr(*mut Slot);
 
+// SAFETY: see the type docs above — each resident index is handed to
+// exactly one pool chunk, so no two threads alias one slot.
 unsafe impl Send for ResidentPtr {}
+// SAFETY: same disjointness argument as Send; shared references to the
+// wrapper only ever yield the one chunk-owned slot pointer.
 unsafe impl Sync for ResidentPtr {}
 
 /// Wall-clock cost of scheduler steps since the last
@@ -349,6 +353,12 @@ pub struct SpecScheduler {
     resumes: u64,
     placements: Vec<SlotId>,
     phases: StepPhases,
+    /// Time source for the [`StepPhases`] accounting. Wall time by
+    /// default; tests and the virtual-time sim install a `SimClock` via
+    /// [`SpecScheduler::set_clock`] so phase costs are scripted, not
+    /// measured — no raw `Instant::now` on the step path (enforced by
+    /// repolint's clock-discipline rule).
+    clock: Box<dyn Clock>,
     /// Executor of the planar phases. The default is a single-thread
     /// pool (no workers — the exact sequential code path); the engine
     /// installs its shared multi-thread pool via
@@ -382,6 +392,7 @@ impl SpecScheduler {
             resumes: 0,
             placements: Vec::new(),
             phases: StepPhases::default(),
+            clock: Box::new(MonotonicClock::new()),
             pool: Arc::new(StepPool::new(1)),
             arena: StepArena::new(capacity, seq_len, vocab, 1),
         }
@@ -405,6 +416,12 @@ impl SpecScheduler {
     /// Executor thread count of the installed pool.
     pub fn step_threads(&self) -> usize {
         self.pool.threads()
+    }
+
+    /// Install the time source for phase accounting (virtual time in
+    /// tests/sim; wall time is the default).
+    pub fn set_clock(&mut self, clock: Box<dyn Clock>) {
+        self.clock = clock;
     }
 
     /// Per-phase wall-clock cost accumulated since the last call.
@@ -729,6 +746,7 @@ impl SpecScheduler {
         let v = self.vocab;
         let mask = self.mask;
         let pool = &self.pool;
+        let clock: &dyn Clock = self.clock.as_ref();
         let slots = &mut self.slots;
         let stats = &mut self.stats;
         let phases = &mut self.phases;
@@ -739,6 +757,8 @@ impl SpecScheduler {
         } = &mut self.arena;
         let n_act = active.len();
 
+        // lint: hot-region — warm speculative step; allocation-free by
+        // contract (pinned dynamically by tests/alloc_regression.rs).
         // ---- draft pass: resident rows first, then pure-mask padding ----
         masked_tokens.clear();
         masked_tokens.resize(bucket * d, mask);
@@ -757,10 +777,10 @@ impl SpecScheduler {
             "padding rows must contribute only mask tokens"
         );
         let mut state_box = Self::take_state::<M>(state);
-        let t = Instant::now();
+        let t0 = clock.now();
         model.draft_into(&masked_tokens[..], bucket, &mut state_box,
                          draft_logits);
-        phases.model_s += t.elapsed().as_secs_f64();
+        phases.model_s += clock.now() - t0;
         stats.outer_loops += 1;
 
         // Per-resident slot pointers for the planar phases: each pool
@@ -803,7 +823,7 @@ impl SpecScheduler {
         }
         draft_lse.clear();
         draft_lse.resize(bucket * d, f64::NAN);
-        let t = Instant::now();
+        let t0 = clock.now();
         {
             let res: &[ResidentPtr] = &residents[..];
             let dl: &[f32] = &draft_logits[..];
@@ -822,11 +842,15 @@ impl SpecScheduler {
                     let w = p.window.limit(s.i, d);
                     let target = (s.i + w).min(d);
                     let inv_t = (1.0 / p.temperature) as f32;
+                    // SAFETY: element r of each per-resident buffer is
+                    // owned by this chunk (one resident, one chunk).
                     unsafe {
                         *tgt_w.get_mut(r) = target;
                         *j_w.get_mut(r) = s.i;
                         *vu_w.get_mut(r) = 0;
                     }
+                    // SAFETY: row r of the LSE buffer is owned by this
+                    // chunk.
                     let lse_row = unsafe { lse_w.range_mut(r * d, d) };
                     for od in s.i..target {
                         let pos = s.sigma[od] as usize;
@@ -837,17 +861,21 @@ impl SpecScheduler {
                         s.tokens[pos] = tok as i32;
                         lse_row[pos] = lse;
                     }
+                    // SAFETY: row r of the token buffer is owned by this
+                    // chunk.
                     let full_row = unsafe { full_w.range_mut(r * d, d) };
                     for od in 0..target {
                         let pos = s.sigma[od] as usize;
                         full_row[pos] = s.tokens[pos];
                     }
+                    // SAFETY: row r of the σ buffer is owned by this
+                    // chunk.
                     unsafe { sig_w.range_mut(r * d, d) }
                         .copy_from_slice(&s.sigma);
                 }
             });
         }
-        phases.draw_s += t.elapsed().as_secs_f64();
+        phases.draw_s += clock.now() - t0;
 
         let max_nv = (0..n_act)
             .map(|r| {
@@ -872,10 +900,10 @@ impl SpecScheduler {
             }
             let st =
                 (*state_box).as_ref().expect("draft_into sets the state");
-            let t = Instant::now();
+            let t0 = clock.now();
             model.verify_into(st, &full_tokens[..], &sigma_flat[..], bucket,
                               target_logits);
-            phases.model_s += t.elapsed().as_secs_f64();
+            phases.model_s += clock.now() - t0;
             stats.verify_passes += 1;
 
             // ---- phase 2: batched verify-row LSEs -----------------------
@@ -893,7 +921,7 @@ impl SpecScheduler {
             // on the thread count. (First-position rule: track dd-1
             // exists only for dd >= 1, hence the max(j, 1).)
             let planar_lse = pool.threads() > 1;
-            let t = Instant::now();
+            let t0 = clock.now();
             if planar_lse {
                 lse_jobs.clear();
                 for r in 0..n_act {
@@ -928,10 +956,10 @@ impl SpecScheduler {
                     }
                 });
             }
-            phases.lse_s += t.elapsed().as_secs_f64();
+            phases.lse_s += clock.now() - t0;
 
             // ---- phase 3: accept/residual sweeps ------------------------
-            let t = Instant::now();
+            let t0 = clock.now();
             acc_cnt.clear();
             acc_cnt.resize(n_act, 0);
             rej_cnt.clear();
@@ -956,14 +984,19 @@ impl SpecScheduler {
                         // exactly this chunk.
                         let slot = unsafe { &mut *res[r].0 };
                         let (s, p) = spec_parts(slot);
+                        // SAFETY: element r is owned by this chunk.
                         let jj = unsafe { *j_w.get_mut(r) };
                         if k >= p.n_verify.max(1) || jj >= tg[r] {
                             continue;
                         }
+                        // SAFETY: element r is owned by this chunk.
                         unsafe { *vu_w.get_mut(r) += 1 };
                         let inv_t = 1.0 / p.temperature;
                         let full_row =
+                            // SAFETY: row r is owned by this chunk.
                             unsafe { full_w.range_mut(r * d, d) };
+                        // SAFETY: scratch row `chunk` belongs to this
+                        // chunk by construction.
                         let scratch_row = unsafe { scr_w.get_mut(chunk) };
                         let mut dd = jj;
                         let mut accepted = 0usize;
@@ -1027,6 +1060,8 @@ impl SpecScheduler {
                                 break; // resample ends this inner sweep
                             }
                         }
+                        // SAFETY: element r of each per-resident buffer
+                        // is owned by this chunk.
                         unsafe {
                             *j_w.get_mut(r) = dd;
                             *acc_w.get_mut(r) = accepted;
@@ -1041,10 +1076,12 @@ impl SpecScheduler {
                 stats.accepted += a;
                 stats.rejected += rj;
             }
-            phases.accept_s += t.elapsed().as_secs_f64();
+            phases.accept_s += clock.now() - t0;
         }
         // Raw pointers die here; `slots` is re-borrowed below.
         residents.clear();
+        // lint: end-hot-region — retirement below may allocate (samples
+        // are materialized for the finished list).
 
         // ---- bookkeeping + immediate retirement -------------------------
         for (r, &si) in active.iter().enumerate() {
@@ -1090,6 +1127,7 @@ impl SpecScheduler {
         let v = self.vocab;
         let mask = self.mask;
         let pool = &self.pool;
+        let clock: &dyn Clock = self.clock.as_ref();
         let slots = &mut self.slots;
         let phases = &mut self.phases;
         let StepArena {
@@ -1098,6 +1136,8 @@ impl SpecScheduler {
         } = &mut self.arena;
         let n_act = active.len();
 
+        // lint: hot-region — warm MDM step; allocation-free by contract
+        // (pinned dynamically by tests/alloc_regression.rs).
         // Reveal counts for this step (advances each row's grid cursor).
         reveals.clear();
         for &si in active.iter() {
@@ -1116,10 +1156,10 @@ impl SpecScheduler {
             "padding rows must contribute only mask tokens"
         );
         let mut state_box = Self::take_state::<M>(state);
-        let t = Instant::now();
+        let t0 = clock.now();
         model.draft_into(&masked_tokens[..], bucket, &mut state_box,
                          draft_logits);
-        phases.model_s += t.elapsed().as_secs_f64();
+        phases.model_s += clock.now() - t0;
 
         // Per-resident slot pointers for the planar reveal phase.
         residents.clear();
@@ -1138,7 +1178,7 @@ impl SpecScheduler {
         }
 
         // ---- planar reveal/draw phase -----------------------------------
-        let t = Instant::now();
+        let t0 = clock.now();
         {
             let res: &[ResidentPtr] = &residents[..];
             let dl: &[f32] = &draft_logits[..];
@@ -1176,10 +1216,12 @@ impl SpecScheduler {
                 }
             });
         }
-        phases.draw_s += t.elapsed().as_secs_f64();
+        phases.draw_s += clock.now() - t0;
 
         // Raw pointers die here; retirement re-borrows `slots`.
         residents.clear();
+        // lint: end-hot-region — retirement below may allocate (samples
+        // are materialized for the finished list).
         for &si in active.iter() {
             let done = {
                 let (m, _) = mdm_mut(&mut slots[si]);

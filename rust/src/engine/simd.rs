@@ -76,14 +76,17 @@ pub fn isa() -> Isa {
 pub fn exp_accum_block(x: &[f32], inv_temp: f32, ms: f32,
                        acc: &mut [f32; LANES], out: &mut [f32; BLK]) {
     match isa() {
+        // SAFETY: isa() probed AVX2 support on this host.
         #[cfg(target_arch = "x86_64")]
         Isa::Avx2 => unsafe {
             x86::exp_accum_block_avx2(x, inv_temp, ms, acc, out)
         },
+        // SAFETY: SSE2 is the x86_64 baseline.
         #[cfg(target_arch = "x86_64")]
         Isa::Sse2 => unsafe {
             x86::exp_accum_block_sse2(x, inv_temp, ms, acc, out)
         },
+        // SAFETY: NEON is the aarch64 baseline.
         #[cfg(target_arch = "aarch64")]
         Isa::Neon => unsafe {
             arm::exp_accum_block_neon(x, inv_temp, ms, acc, out)
@@ -97,8 +100,10 @@ pub fn exp_accum_block(x: &[f32], inv_temp: f32, ms: f32,
 #[inline]
 pub fn neg_ln_block(u: &mut [f64; BLK]) {
     match isa() {
+        // SAFETY: isa() probed AVX2 support on this host.
         #[cfg(target_arch = "x86_64")]
         Isa::Avx2 => unsafe { x86::neg_ln_block_avx2(u) },
+        // SAFETY: NEON is the aarch64 baseline.
         #[cfg(target_arch = "aarch64")]
         Isa::Neon => unsafe { arm::neg_ln_block_neon(u) },
         _ => portable::neg_ln_block(u),
@@ -109,10 +114,13 @@ pub fn neg_ln_block(u: &mut [f64; BLK]) {
 #[inline]
 pub fn row_max(logits: &[f32]) -> f32 {
     match isa() {
+        // SAFETY: isa() probed AVX2 support on this host.
         #[cfg(target_arch = "x86_64")]
         Isa::Avx2 => unsafe { x86::row_max_avx2(logits) },
+        // SAFETY: SSE2 is the x86_64 baseline.
         #[cfg(target_arch = "x86_64")]
         Isa::Sse2 => unsafe { x86::row_max_sse2(logits) },
+        // SAFETY: NEON is the aarch64 baseline.
         #[cfg(target_arch = "aarch64")]
         Isa::Neon => unsafe { arm::row_max_neon(logits) },
         _ => portable::row_max(logits),

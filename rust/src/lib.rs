@@ -23,6 +23,7 @@ pub mod coordinator;
 pub mod engine;
 pub mod harness;
 pub mod flops;
+pub mod lint;
 pub mod likelihood;
 pub mod oracle;
 pub mod runtime;

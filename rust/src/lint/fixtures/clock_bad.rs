@@ -1,0 +1,9 @@
+// Lint fixture (never compiled): each banned wall-time construct once.
+use std::time::Instant;
+
+fn f() {
+    let t = Instant::now();
+    let s = std::time::SystemTime::now();
+    std::thread::sleep(std::time::Duration::from_millis(1));
+    let _ = (t, s);
+}

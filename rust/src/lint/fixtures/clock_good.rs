@@ -1,0 +1,22 @@
+// Lint fixture (never compiled): injected-clock discipline, plus the
+// constructs that must NOT fire (names in strings/comments, `Instant`
+// as a type, an annotated wall-time site).
+use std::time::Instant;
+
+struct Stamp {
+    at: Instant, // holding an Instant is fine; *reading the clock* isn't
+}
+
+fn f(clock: &dyn crate::util::simclock::Clock, s: &Stamp) -> f64 {
+    // Instant::now() in prose does not fire; neither does the string:
+    let _doc = "Instant::now() / thread::sleep belong in comments only";
+    let t0 = clock.now();
+    let _ = s;
+    clock.now() - t0
+}
+
+fn g() {
+    // OS-level timed wait: genuinely needs wall time.
+    let t = Instant::now(); // lint: allow(clock-discipline) — fixture: OS timeout example
+    let _ = t;
+}

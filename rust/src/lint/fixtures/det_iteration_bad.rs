@@ -1,0 +1,12 @@
+// Lint fixture (never compiled): seeded-order containers in engine
+// code — iteration order would differ run to run.
+fn f(keys: &[u64]) -> u64 {
+    let set: std::collections::HashSet<u64> =
+        keys.iter().copied().collect();
+    let mut acc = 0;
+    for k in &set {
+        acc ^= k; // order-dependent fold: the actual hazard
+    }
+    let map = std::collections::HashMap::<u64, u64>::new();
+    acc + map.len() as u64
+}

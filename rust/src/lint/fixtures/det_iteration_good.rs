@@ -1,0 +1,14 @@
+// Lint fixture (never compiled): index-ordered structures only.
+use std::collections::{BTreeMap, VecDeque};
+
+fn f(keys: &[u64]) -> u64 {
+    let map: BTreeMap<u64, u64> =
+        keys.iter().map(|&k| (k, k * 2)).collect();
+    let q: VecDeque<u64> = keys.iter().copied().collect();
+    let mut acc = 0;
+    for (k, v) in &map {
+        acc ^= k ^ v; // BTreeMap iterates in key order: deterministic
+    }
+    acc + q.len() as u64
+    // Prose may mention HashMap / HashSet without firing.
+}

@@ -1,0 +1,15 @@
+// Lint fixture (never compiled): every way to get the annotation
+// grammar wrong.
+fn f() {
+    // Unknown rule name:
+    let a = 1; // lint: allow(no-such-rule) — reason present but rule bogus
+    // Allow that suppresses nothing:
+    let b = 2; // lint: allow(det-iteration) — nothing to suppress here
+    let _ = (a, b);
+}
+
+fn g(n: usize) -> usize {
+    // lint: hot-region
+    n + 1
+    // ... never closed: unbalanced fence diagnostic at the open line.
+}

@@ -1,0 +1,18 @@
+// Lint fixture (never compiled): hand-rolled generator constants (two
+// spellings of the same family), OS entropy, and a struct-literal Pcg.
+use crate::util::rng::Pcg;
+
+fn f(state: u64) -> u64 {
+    let a = state.wrapping_mul(6364136223846793005);
+    let b = a ^ 0x9e37_79b9_7f4a_7c15u64;
+    b
+}
+
+fn g() -> u64 {
+    let seed = getrandom();
+    seed
+}
+
+fn h() -> Pcg {
+    Pcg { state: 1, inc: 3 }
+}

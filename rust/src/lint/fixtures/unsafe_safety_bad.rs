@@ -1,0 +1,24 @@
+// Lint fixture (never compiled): three `unsafe` sites with MISSING
+// justification, two correctly documented ones.
+struct W(*mut u8);
+
+unsafe impl Send for W {} // MISSING: no SAFETY comment anywhere above
+
+fn f(w: &W) {
+    let x = unsafe { *w.0 }; // MISSING: the comment above is prose
+    // This comment talks about performance, not safety.
+    let y = unsafe { *w.0.add(1) }; // MISSING: prose comment above
+
+    // SAFETY: w.0 is valid for reads per the constructor contract.
+    let z = unsafe { *w.0 };
+    let _ = (x, y, z);
+}
+
+/// Reads a raw pointer.
+///
+/// # Safety
+///
+/// `p` must be valid for reads.
+pub unsafe fn documented(p: *const u8) -> u8 {
+    *p
+}

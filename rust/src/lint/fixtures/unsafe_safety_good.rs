@@ -1,0 +1,33 @@
+// Lint fixture (never compiled): every unsafe site justified, in each
+// supported position.
+struct W(*mut u8);
+
+// SAFETY: W is only handed to one thread at a time by the pool.
+unsafe impl Send for W {}
+
+fn f(w: &W) {
+    // SAFETY: w.0 is valid for reads per the constructor contract,
+    // and the comment block may span several lines.
+    let x = unsafe { *w.0 };
+    /* SAFETY: same-line block comment form. */ let y = unsafe { *w.0 };
+
+    // SAFETY: attribute between the comment and the unsafe token is
+    // fine — attributes are skipped by the upward scan.
+    #[allow(clippy::identity_op)]
+    let z = unsafe { *w.0.add(0) };
+    let _ = (x, y, z);
+}
+
+/// Reads a raw pointer.
+///
+/// # Safety
+///
+/// `p` must be valid for reads.
+pub unsafe fn documented(p: *const u8) -> u8 {
+    *p
+}
+
+fn strings_and_comments_do_not_count_as_sites() {
+    let _s = "unsafe { this is a string, not code }";
+    // unsafe in prose: this comment mentions unsafe but is not a site.
+}

@@ -1,0 +1,17 @@
+// Lint fixture (never compiled): allocation constructors inside a
+// hot-region fence — one diagnostic per construct.
+fn step(xs: &mut Vec<u32>, n: usize) -> usize {
+    // lint: hot-region
+    let v = vec![0u32; n];
+    let doubled: Vec<u32> = xs.iter().map(|x| x * 2).collect();
+    let label = format!("step {n}");
+    let boxed = Box::new(n);
+    // lint: end-hot-region
+    v.len() + doubled.len() + label.len() + *boxed
+}
+
+fn outside_the_fence_is_fine(n: usize) -> Vec<u32> {
+    let mut v = Vec::new();
+    v.resize(n, 0);
+    v
+}

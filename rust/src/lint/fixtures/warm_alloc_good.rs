@@ -1,0 +1,22 @@
+// Lint fixture (never compiled): the arena idiom — warm steps reuse
+// capacity (clear/resize/copy_from_slice), never construct.
+fn step(arena: &mut Vec<u32>, scratch: &mut Vec<u32>, n: usize) -> u32 {
+    // lint: hot-region
+    arena.clear();
+    arena.resize(n, 0);
+    scratch.copy_from_slice(&arena[..scratch.len().min(n)]);
+    let mut acc = 0u32;
+    for &x in arena.iter() {
+        acc = acc.wrapping_add(x);
+    }
+    // A string mentioning vec![] or format!() does not fire.
+    let _doc = "vec![0; n] and format!() are banned here";
+    // lint: end-hot-region
+    acc
+}
+
+fn cold_setup(n: usize) -> Vec<u32> {
+    // Outside any fence: allocation is fine (setup/retirement paths).
+    let v = vec![0u32; n];
+    v
+}

@@ -1,0 +1,452 @@
+//! Hand-rolled Rust lexer for `repolint` (see `lint` module docs).
+//!
+//! The linter's rules are lexical pattern matches over *code* tokens, so
+//! the lexer's whole job is to classify source bytes well enough that a
+//! banned identifier inside a comment, a string literal, or a doc
+//! example can never produce a false diagnostic — and that comments
+//! (where `// SAFETY:` obligations and `// lint:` directives live)
+//! survive with their text and exact line spans. No external parser
+//! crates: the build is offline, and full Rust grammar is not needed for
+//! line-anchored lexical invariants.
+//!
+//! Handled beyond the obvious: nested block comments, doc comments
+//! (`///`, `//!`, `/**`, `/*!`), raw strings with arbitrary `#` fences
+//! (`r#"…"#`), byte/raw-byte strings and byte chars, char literals vs.
+//! lifetimes (`'a'` vs. `'a`), escapes inside char/string literals, and
+//! numeric literals with `_` separators and radix prefixes (normalized
+//! by [`parse_int`] so rules can match constants by *value*, not
+//! spelling).
+
+/// Token classes the rules distinguish.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword.
+    Ident,
+    /// Numeric literal (raw text; see [`parse_int`]).
+    Num,
+    /// One punctuation character (multi-char operators arrive as
+    /// consecutive tokens: `::` is `:`, `:`).
+    Punct,
+    /// `//…` comment (doc or plain), text includes the `//` marker.
+    LineComment,
+    /// `/*…*/` comment (doc or plain, possibly nested / multi-line).
+    BlockComment,
+    /// String, raw-string, byte-string or char literal. Contents are
+    /// deliberately opaque to every rule.
+    StrLit,
+    /// `'a`-style lifetime (or loop label).
+    Lifetime,
+}
+
+/// One lexed token with its position (1-based line, 0-based byte column
+/// of the first character; multi-line tokens also record their last
+/// line).
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+    pub end_line: u32,
+    pub col: u32,
+}
+
+impl Tok {
+    pub fn is_comment(&self) -> bool {
+        matches!(self.kind, TokKind::LineComment | TokKind::BlockComment)
+    }
+
+    /// Comment text with the `//` / `/*` / `*/` markers and doc sigils
+    /// stripped, for directive and `SAFETY:` scanning.
+    pub fn comment_text(&self) -> String {
+        debug_assert!(self.is_comment());
+        match self.kind {
+            TokKind::LineComment => {
+                let t = self.text.trim_start_matches('/');
+                t.strip_prefix('!').unwrap_or(t).to_string()
+            }
+            _ => {
+                let t = self
+                    .text
+                    .trim_start_matches("/*")
+                    .trim_start_matches(['*', '!'])
+                    .trim_end_matches("*/");
+                t.to_string()
+            }
+        }
+    }
+}
+
+/// Parse a Rust integer literal (any radix prefix, `_` separators, type
+/// suffix) to its value. Returns `None` for floats and malformed text.
+pub fn parse_int(text: &str) -> Option<u128> {
+    let t: String = text.chars().filter(|&c| c != '_').collect();
+    let (digits, radix) = if let Some(h) =
+        t.strip_prefix("0x").or_else(|| t.strip_prefix("0X"))
+    {
+        (h, 16)
+    } else if let Some(o) = t.strip_prefix("0o") {
+        (o, 8)
+    } else if let Some(b) = t.strip_prefix("0b") {
+        (b, 2)
+    } else {
+        (t.as_str(), 10)
+    };
+    // Trim a trailing type suffix (u8/i64/usize/…): keep the leading run
+    // of digits valid in this radix.
+    let end = digits
+        .char_indices()
+        .find(|(_, c)| !c.is_digit(radix))
+        .map(|(i, _)| i)
+        .unwrap_or(digits.len());
+    if end == 0 {
+        return None;
+    }
+    u128::from_str_radix(&digits[..end], radix).ok()
+}
+
+/// Lex `src` into tokens. Never fails: unrecognized bytes become
+/// single-char `Punct` tokens, so the rules always see *something* with
+/// a correct line number.
+pub fn lex(src: &str) -> Vec<Tok> {
+    Lexer { src: src.as_bytes(), pos: 0, line: 1, col: 0, toks: Vec::new() }
+        .run()
+}
+
+struct Lexer<'a> {
+    src: &'a [u8],
+    pos: usize,
+    line: u32,
+    col: u32,
+    toks: Vec<Tok>,
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    matches!(b, b'_' | b'a'..=b'z' | b'A'..=b'Z' | b'0'..=b'9')
+}
+
+impl Lexer<'_> {
+    fn peek(&self, ahead: usize) -> u8 {
+        *self.src.get(self.pos + ahead).unwrap_or(&0)
+    }
+
+    /// Advance one byte, tracking line/column.
+    fn bump(&mut self) {
+        let b = self.src[self.pos];
+        self.pos += 1;
+        if b == b'\n' {
+            self.line += 1;
+            self.col = 0;
+        } else {
+            self.col += 1;
+        }
+    }
+
+    fn push(&mut self, kind: TokKind, start: usize, line: u32, col: u32) {
+        let text =
+            String::from_utf8_lossy(&self.src[start..self.pos]).into_owned();
+        self.toks.push(Tok { kind, text, line, end_line: self.line, col });
+    }
+
+    fn run(mut self) -> Vec<Tok> {
+        while self.pos < self.src.len() {
+            let (line, col, start) = (self.line, self.col, self.pos);
+            match self.peek(0) {
+                b' ' | b'\t' | b'\r' | b'\n' => self.bump(),
+                b'/' if self.peek(1) == b'/' => {
+                    while self.pos < self.src.len() && self.peek(0) != b'\n'
+                    {
+                        self.bump();
+                    }
+                    self.push(TokKind::LineComment, start, line, col);
+                }
+                b'/' if self.peek(1) == b'*' => {
+                    self.block_comment();
+                    self.push(TokKind::BlockComment, start, line, col);
+                }
+                b'"' => {
+                    self.bump();
+                    self.string_body(None);
+                    self.push(TokKind::StrLit, start, line, col);
+                }
+                b'r' | b'b' if self.literal_prefix_len().is_some() => {
+                    // r"…", r#"…"#, b"…", br#"…"#, b'…': scan decided it
+                    // is a literal; consume prefix + body.
+                    let (plen, fence, is_char) =
+                        self.literal_prefix_len().unwrap();
+                    for _ in 0..plen {
+                        self.bump();
+                    }
+                    if is_char {
+                        self.char_body();
+                    } else {
+                        self.bump(); // opening quote
+                        self.string_body(fence);
+                    }
+                    self.push(TokKind::StrLit, start, line, col);
+                }
+                b'\'' => {
+                    if self.lifetime_ahead() {
+                        self.bump();
+                        while is_ident_byte(self.peek(0)) {
+                            self.bump();
+                        }
+                        self.push(TokKind::Lifetime, start, line, col);
+                    } else {
+                        self.char_body();
+                        self.push(TokKind::StrLit, start, line, col);
+                    }
+                }
+                b'_' | b'a'..=b'z' | b'A'..=b'Z' => {
+                    while is_ident_byte(self.peek(0)) {
+                        self.bump();
+                    }
+                    self.push(TokKind::Ident, start, line, col);
+                }
+                b'0'..=b'9' => {
+                    while is_ident_byte(self.peek(0))
+                        || (self.peek(0) == b'.'
+                            && self.peek(1).is_ascii_digit())
+                    {
+                        self.bump();
+                    }
+                    self.push(TokKind::Num, start, line, col);
+                }
+                _ => {
+                    self.bump();
+                    self.push(TokKind::Punct, start, line, col);
+                }
+            }
+        }
+        self.toks
+    }
+
+    /// At an `r`/`b`: peek whether a raw/byte literal starts here.
+    /// Returns `(prefix_len, raw_fence, is_char)` — `prefix_len` covers
+    /// the letters and any `#` fence up to (not including) the opening
+    /// quote; `raw_fence` is `Some(n)` for raw strings closed by
+    /// `"` + `#`×n; `is_char` flags `b'…'`.
+    fn literal_prefix_len(&self) -> Option<(usize, Option<usize>, bool)> {
+        let (mut k, mut raw) = (0usize, false);
+        if self.peek(0) == b'b' {
+            k = 1;
+            if self.peek(1) == b'r' {
+                k = 2;
+                raw = true;
+            } else if self.peek(1) == b'\'' {
+                return Some((1, None, true));
+            }
+        } else if self.peek(0) == b'r' {
+            k = 1;
+            raw = true;
+        }
+        let mut fence = 0usize;
+        if raw {
+            while self.peek(k) == b'#' {
+                fence += 1;
+                k += 1;
+            }
+        }
+        if self.peek(k) == b'"' {
+            Some((k, if raw { Some(fence) } else { None }, false))
+        } else {
+            None
+        }
+    }
+
+    /// `'` starts a lifetime (not a char literal) iff an identifier char
+    /// follows and the char after that identifier-start is not a closing
+    /// quote ('a' is a char, 'a is a lifetime, 'ab could only be a
+    /// label/lifetime).
+    fn lifetime_ahead(&self) -> bool {
+        let one = self.peek(1);
+        (one == b'_' || one.is_ascii_alphabetic()) && self.peek(2) != b'\''
+    }
+
+    /// Nested block comment body: `/* … /* … */ … */`.
+    fn block_comment(&mut self) {
+        self.bump();
+        self.bump();
+        let mut depth = 1usize;
+        while self.pos < self.src.len() && depth > 0 {
+            if self.peek(0) == b'/' && self.peek(1) == b'*' {
+                self.bump();
+                self.bump();
+                depth += 1;
+            } else if self.peek(0) == b'*' && self.peek(1) == b'/' {
+                self.bump();
+                self.bump();
+                depth -= 1;
+            } else {
+                self.bump();
+            }
+        }
+    }
+
+    /// String body after the opening quote. `fence: None` is a normal
+    /// (escaped) string; `Some(n)` a raw string closed by `"` + `#`×n.
+    fn string_body(&mut self, fence: Option<usize>) {
+        while self.pos < self.src.len() {
+            let b = self.peek(0);
+            self.bump();
+            match (b, fence) {
+                (b'\\', None) => {
+                    if self.pos < self.src.len() {
+                        self.bump();
+                    }
+                }
+                (b'"', None) => return,
+                (b'"', Some(n)) => {
+                    let mut seen = 0usize;
+                    while seen < n && self.peek(0) == b'#' {
+                        self.bump();
+                        seen += 1;
+                    }
+                    if seen == n {
+                        return;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+
+    /// Char (or byte-char) literal starting at the current `'`.
+    fn char_body(&mut self) {
+        self.bump(); // opening '
+        if self.peek(0) == b'\\' {
+            self.bump();
+            if self.pos < self.src.len() {
+                self.bump(); // escape head: n, ', \, u, x, …
+            }
+            // Multi-char escape tails (\u{…}, \x7f) run to the quote.
+            while self.pos < self.src.len() && self.peek(0) != b'\'' {
+                self.bump();
+            }
+        } else if self.pos < self.src.len() {
+            self.bump();
+        }
+        if self.peek(0) == b'\'' {
+            self.bump();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        lex(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn idents_and_puncts() {
+        let ks = kinds("foo::bar(x)");
+        assert_eq!(
+            ks,
+            vec![
+                (TokKind::Ident, "foo".into()),
+                (TokKind::Punct, ":".into()),
+                (TokKind::Punct, ":".into()),
+                (TokKind::Ident, "bar".into()),
+                (TokKind::Punct, "(".into()),
+                (TokKind::Ident, "x".into()),
+                (TokKind::Punct, ")".into()),
+            ]
+        );
+    }
+
+    #[test]
+    fn comments_keep_text_and_lines() {
+        let toks = lex("let a = 1; // SAFETY: fine\n/* block\nspan */ b");
+        let line = toks.iter().find(|t| t.kind == TokKind::LineComment)
+            .unwrap();
+        assert!(line.comment_text().contains("SAFETY: fine"));
+        assert_eq!(line.line, 1);
+        let block = toks.iter().find(|t| t.kind == TokKind::BlockComment)
+            .unwrap();
+        assert_eq!((block.line, block.end_line), (2, 3));
+    }
+
+    #[test]
+    fn banned_names_inside_strings_are_opaque() {
+        let toks = lex(r#"let s = "Instant::now() thread::sleep";"#);
+        assert!(toks.iter().all(|t| t.kind != TokKind::Ident
+                                 || (t.text != "Instant"
+                                     && t.text != "sleep")));
+    }
+
+    #[test]
+    fn raw_strings_and_fences() {
+        let toks = lex(r##"let s = r#"unsafe { "nested" }"# ; x"##);
+        let lits: Vec<_> =
+            toks.iter().filter(|t| t.kind == TokKind::StrLit).collect();
+        assert_eq!(lits.len(), 1);
+        assert!(toks.iter().any(|t| t.kind == TokKind::Ident
+                                && t.text == "x"));
+        assert!(toks.iter().all(|t| t.text != "unsafe"
+                                || t.kind == TokKind::StrLit));
+    }
+
+    #[test]
+    fn byte_literals() {
+        let toks = lex(r#"let a = b"bytes"; let c = b'x'; let r = rb;"#);
+        let lits =
+            toks.iter().filter(|t| t.kind == TokKind::StrLit).count();
+        assert_eq!(lits, 2);
+        // `rb` with no quote stays an identifier.
+        assert!(toks.iter().any(|t| t.kind == TokKind::Ident
+                                && t.text == "rb"));
+    }
+
+    #[test]
+    fn char_vs_lifetime() {
+        let toks = lex("fn f<'a>(x: &'a u8) { let c = 'x'; let d = '\\''; }");
+        let lifetimes =
+            toks.iter().filter(|t| t.kind == TokKind::Lifetime).count();
+        assert_eq!(lifetimes, 2);
+        let chars =
+            toks.iter().filter(|t| t.kind == TokKind::StrLit).count();
+        assert_eq!(chars, 2);
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let toks = lex("/* a /* b */ c */ after");
+        assert_eq!(toks.len(), 2);
+        assert_eq!(toks[1].text, "after");
+    }
+
+    #[test]
+    fn numeric_literals_normalize() {
+        assert_eq!(parse_int("0x9e37_79b9_7f4a_7c15"),
+                   // lint: allow(rng-discipline) — lexer's own
+                   // normalization test vector.
+                   Some(0x9e3779b97f4a7c15));
+        assert_eq!(parse_int("6364136223846793005"),
+                   // lint: allow(rng-discipline) — lexer's own
+                   // normalization test vector.
+                   Some(6364136223846793005));
+        assert_eq!(parse_int("1_000u64"), Some(1000));
+        assert_eq!(parse_int("0b1010"), Some(10));
+        assert_eq!(parse_int("abc"), None);
+    }
+
+    #[test]
+    fn float_range_does_not_glue() {
+        let ks = kinds("for i in 0..n_act {}");
+        assert!(ks.contains(&(TokKind::Num, "0".into())));
+        assert!(ks.contains(&(TokKind::Ident, "n_act".into())));
+        let ks2 = kinds("let x = 0.5;");
+        assert!(ks2.contains(&(TokKind::Num, "0.5".into())));
+    }
+
+    #[test]
+    fn columns_are_tracked() {
+        let toks = lex("ab /* c */ unsafe");
+        let u = toks.iter().find(|t| t.text == "unsafe").unwrap();
+        assert_eq!(u.col, 11);
+        let c = toks.iter().find(|t| t.is_comment()).unwrap();
+        assert_eq!(c.col, 3);
+    }
+}

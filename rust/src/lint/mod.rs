@@ -1,0 +1,532 @@
+//! `repolint` — repo-native static analysis enforcing the invariants the
+//! runtime tests can only sample.
+//!
+//! The headline guarantees of this codebase — bitwise-identical token
+//! streams across thread counts, SIMD on/off, and evict/resume — rest on
+//! conventions no compiler checks: counter-based per-sequence RNG,
+//! injected `Clock` time, zero-warm-alloc arenas, disjoint-write
+//! `SharedSlice` chunks, `// SAFETY:` obligations on every unsafe site.
+//! This module walks `rust/` (skipping `vendor/` and lint `fixtures/`)
+//! and enforces them as CI-gating diagnostics. The rules live in
+//! [`rules`]; the hand-rolled lexer (comments/strings/attributes aware,
+//! no external parser — the build is offline) in [`lexer`].
+//!
+//! ## Annotation grammar
+//!
+//! * `// lint: allow(<rule>[, <rule>…]) — <reason>` — suppress the named
+//!   rule(s) on the annotated line. Trailing on the offending line, or a
+//!   standalone comment directly above it (it covers the next code
+//!   line). The reason is **required**; an allow without one, naming an
+//!   unknown rule, or matching no diagnostic is itself a diagnostic.
+//! * `// lint: hot-region` … `// lint: end-hot-region` — fence a region
+//!   for the `warm-alloc` rule (allocation constructors banned inside).
+//!
+//! Run as `cargo run --bin repolint` (exit 0 = clean); the meta-test in
+//! this module keeps the live tree clean under plain `cargo test`.
+
+pub mod lexer;
+pub mod rules;
+
+use std::fmt;
+use std::path::Path;
+
+use lexer::{Tok, TokKind};
+
+/// One finding, pointing at `path:line`.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    pub rule: &'static str,
+    pub path: String,
+    pub line: u32,
+    pub msg: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.path, self.line, self.rule,
+               self.msg)
+    }
+}
+
+/// A parsed `lint: allow(...)` annotation (kept for reporting: repolint
+/// prints the full allowlist so reviewers see every suppression and its
+/// written reason).
+#[derive(Clone, Debug)]
+pub struct AllowEntry {
+    pub path: String,
+    /// Line of the annotation comment itself.
+    pub line: u32,
+    /// Code line the annotation covers.
+    pub target: u32,
+    pub rules: Vec<String>,
+    pub reason: String,
+}
+
+/// Lexed file plus the line-level classification the rules consume.
+pub struct FileCtx {
+    pub path: String,
+    /// Non-comment tokens, in order.
+    pub code: Vec<Tok>,
+    /// Inclusive line spans fenced by `lint: hot-region` markers.
+    pub hot_regions: Vec<(u32, u32)>,
+    /// All tokens (comments included), for same-line comment scans.
+    toks: Vec<Tok>,
+    /// 1-based; true if any non-comment token touches the line.
+    line_code: Vec<bool>,
+    /// 1-based; true if the first code token on the line is `#`.
+    line_attr: Vec<bool>,
+}
+
+impl FileCtx {
+    pub fn diag(&self, rule: &'static str, line: u32,
+                msg: impl Into<String>) -> Diagnostic {
+        Diagnostic { rule, path: self.path.clone(), line,
+                     msg: msg.into() }
+    }
+
+    pub fn line_has_code(&self, line: u32) -> bool {
+        self.line_code.get(line as usize).copied().unwrap_or(false)
+    }
+
+    pub fn is_attr_line(&self, line: u32) -> bool {
+        self.line_attr.get(line as usize).copied().unwrap_or(false)
+    }
+
+    /// Comment tokens whose span covers `line`.
+    pub fn comments_on(&self, line: u32) -> Vec<&Tok> {
+        self.toks
+            .iter()
+            .filter(|t| t.is_comment() && t.line <= line
+                    && line <= t.end_line)
+            .collect()
+    }
+
+    pub fn in_hot_region(&self, line: u32) -> bool {
+        self.hot_regions.iter().any(|&(a, b)| a <= line && line <= b)
+    }
+}
+
+/// Outcome of linting one source text.
+pub struct FileOutcome {
+    pub diags: Vec<Diagnostic>,
+    pub allows: Vec<AllowEntry>,
+}
+
+/// Outcome of linting a tree.
+pub struct Report {
+    pub files: usize,
+    pub diags: Vec<Diagnostic>,
+    pub allows: Vec<AllowEntry>,
+}
+
+impl Report {
+    pub fn clean(&self) -> bool {
+        self.diags.is_empty()
+    }
+}
+
+/// Lint one file's source. `path` is the repo-relative label used in
+/// diagnostics and for the per-rule path exemptions (see [`rules`]).
+pub fn check_source(path: &str, src: &str) -> FileOutcome {
+    let toks = lexer::lex(src);
+    let n_lines = src.lines().count().max(1) as u32;
+
+    let mut line_code = vec![false; n_lines as usize + 2];
+    let mut line_attr = vec![false; n_lines as usize + 2];
+    let mut first_code_col = vec![u32::MAX; n_lines as usize + 2];
+    for t in &toks {
+        if t.is_comment() {
+            continue;
+        }
+        for l in t.line..=t.end_line.min(n_lines) {
+            line_code[l as usize] = true;
+        }
+        let l = t.line as usize;
+        if t.col < first_code_col[l] {
+            first_code_col[l] = t.col;
+            line_attr[l] =
+                t.kind == TokKind::Punct && t.text == "#";
+        }
+    }
+
+    let mut diags = Vec::new();
+    let mut allows: Vec<AllowEntry> = Vec::new();
+    let mut hot_regions = Vec::new();
+    let mut open_hot: Option<u32> = None;
+
+    // ---- parse `lint:` directives out of the comments ----------------
+    for t in toks.iter().filter(|t| t.is_comment()) {
+        let text = t.comment_text();
+        let trimmed = text.trim();
+        let Some(rest) = trimmed.strip_prefix("lint:") else {
+            continue;
+        };
+        let rest = rest.trim();
+        if let Some(args) = rest.strip_prefix("allow(") {
+            match parse_allow(args) {
+                Ok((rule_names, reason)) => {
+                    let mut bad = false;
+                    for r in &rule_names {
+                        if !rules::RULES.contains(&r.as_str()) {
+                            diags.push(directive_diag(
+                                path, t.line,
+                                format!("unknown rule `{r}` in lint: \
+                                         allow(...)"),
+                            ));
+                            bad = true;
+                        }
+                    }
+                    if reason.is_empty() {
+                        diags.push(directive_diag(
+                            path, t.line,
+                            "lint: allow(...) requires a written reason \
+                             after an em-dash (`— <why>`)",
+                        ));
+                        bad = true;
+                    }
+                    if !bad {
+                        let target = if line_code
+                            .get(t.line as usize)
+                            .copied()
+                            .unwrap_or(false)
+                        {
+                            t.line
+                        } else {
+                            // Standalone comment: covers the next code
+                            // line.
+                            ((t.end_line + 1)..=n_lines)
+                                .find(|&l| line_code[l as usize])
+                                .unwrap_or(0)
+                        };
+                        allows.push(AllowEntry {
+                            path: path.to_string(),
+                            line: t.line,
+                            target,
+                            rules: rule_names,
+                            reason,
+                        });
+                    }
+                }
+                Err(msg) => diags.push(directive_diag(path, t.line, msg)),
+            }
+        } else if rest.starts_with("end-hot-region") {
+            match open_hot.take() {
+                Some(open) => hot_regions.push((open, t.line)),
+                None => diags.push(directive_diag(
+                    path, t.line,
+                    "lint: end-hot-region without an open hot-region",
+                )),
+            }
+        } else if rest.starts_with("hot-region") {
+            if open_hot.is_some() {
+                diags.push(directive_diag(
+                    path, t.line,
+                    "nested lint: hot-region (close the previous fence \
+                     first)",
+                ));
+            } else {
+                open_hot = Some(t.line);
+            }
+        } else {
+            diags.push(directive_diag(
+                path, t.line,
+                format!("unknown lint directive `{rest}`"),
+            ));
+        }
+    }
+    if let Some(open) = open_hot {
+        diags.push(directive_diag(
+            path, open,
+            "lint: hot-region never closed (missing end-hot-region)",
+        ));
+    }
+
+    let ctx = FileCtx {
+        path: path.to_string(),
+        code: toks.iter().filter(|t| !t.is_comment()).cloned().collect(),
+        hot_regions,
+        toks,
+        line_code,
+        line_attr,
+    };
+
+    // ---- rules, then the allowlist --------------------------------
+    let mut raw = Vec::new();
+    rules::run_all(&ctx, &mut raw);
+
+    let mut used = vec![false; allows.len()];
+    for d in raw {
+        let hit = allows.iter().position(|a| {
+            a.target == d.line && a.rules.iter().any(|r| r == d.rule)
+        });
+        match hit {
+            Some(i) => used[i] = true,
+            None => diags.push(d),
+        }
+    }
+    for (a, used) in allows.iter().zip(&used) {
+        if !used {
+            diags.push(directive_diag(
+                path, a.line,
+                format!("unused lint: allow({}) — nothing to suppress \
+                         on line {}", a.rules.join(", "), a.target),
+            ));
+        }
+    }
+
+    diags.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    FileOutcome { diags, allows }
+}
+
+fn directive_diag(path: &str, line: u32, msg: impl Into<String>)
+                  -> Diagnostic {
+    Diagnostic { rule: "lint-directive", path: path.to_string(), line,
+                 msg: msg.into() }
+}
+
+/// Parse `<rule>[, <rule>…]) — <reason>` (the text after `allow(`).
+fn parse_allow(args: &str) -> Result<(Vec<String>, String), String> {
+    let close = args
+        .find(')')
+        .ok_or_else(|| "unclosed lint: allow(".to_string())?;
+    let rule_names: Vec<String> = args[..close]
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if rule_names.is_empty() {
+        return Err("empty rule list in lint: allow()".to_string());
+    }
+    let reason = args[close + 1..]
+        .trim_start()
+        .trim_start_matches(['—', '–', '-', ':'])
+        .trim()
+        .to_string();
+    Ok((rule_names, reason))
+}
+
+/// Lint every `.rs` file under `<root>/rust`, skipping `vendor/`
+/// (third-party), `fixtures/` (intentionally-bad lint test inputs) and
+/// build output. Diagnostics are sorted `(path, line, rule)`.
+pub fn run_tree(root: &Path) -> std::io::Result<Report> {
+    let mut files = Vec::new();
+    collect_rs(&root.join("rust"), &mut files)?;
+    files.sort();
+    let mut report =
+        Report { files: files.len(), diags: Vec::new(),
+                 allows: Vec::new() };
+    for f in &files {
+        let bytes = std::fs::read(f)?;
+        let src = String::from_utf8_lossy(&bytes);
+        let label = f
+            .strip_prefix(root)
+            .unwrap_or(f)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let mut outcome = check_source(&label, &src);
+        report.diags.append(&mut outcome.diags);
+        report.allows.append(&mut outcome.allows);
+    }
+    Ok(report)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<std::path::PathBuf>)
+              -> std::io::Result<()> {
+    if !dir.is_dir() {
+        return Ok(());
+    }
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if path.is_dir() {
+            if matches!(name.as_ref(),
+                        "vendor" | "fixtures" | "target" | ".git")
+            {
+                continue;
+            }
+            collect_rs(&path, out)?;
+        } else if name.ends_with(".rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diags_of(path: &str, src: &str) -> Vec<Diagnostic> {
+        check_source(path, src).diags
+    }
+
+    fn rules_hit(diags: &[Diagnostic]) -> Vec<&'static str> {
+        let mut r: Vec<_> = diags.iter().map(|d| d.rule).collect();
+        r.dedup();
+        r
+    }
+
+    // ---- per-rule fixtures (bad must fire, good must be silent) ------
+
+    #[test]
+    fn unsafe_safety_fixtures() {
+        let bad = include_str!("fixtures/unsafe_safety_bad.rs");
+        let d = diags_of("rust/src/engine/fx.rs", bad);
+        assert!(d.iter().any(|d| d.rule == "unsafe-safety"),
+                "bad fixture must fire: {d:?}");
+        // Expected lines are marked in the fixture with `MISSING` text.
+        let flagged: Vec<u32> = d.iter()
+            .filter(|d| d.rule == "unsafe-safety")
+            .map(|d| d.line)
+            .collect();
+        assert_eq!(flagged.len(), 3, "{d:?}");
+
+        let good = include_str!("fixtures/unsafe_safety_good.rs");
+        let d = diags_of("rust/src/engine/fx.rs", good);
+        assert!(d.iter().all(|d| d.rule != "unsafe-safety"),
+                "good fixture must be silent: {d:?}");
+    }
+
+    #[test]
+    fn clock_discipline_fixtures() {
+        let bad = include_str!("fixtures/clock_bad.rs");
+        let d = diags_of("rust/src/coordinator/fx.rs", bad);
+        let hits =
+            d.iter().filter(|d| d.rule == "clock-discipline").count();
+        assert_eq!(hits, 3, "Instant::now + SystemTime + sleep: {d:?}");
+
+        let good = include_str!("fixtures/clock_good.rs");
+        let d = diags_of("rust/src/coordinator/fx.rs", good);
+        assert!(d.is_empty(), "{d:?}");
+
+        // The two clock-owning modules are exempt by path.
+        let d = diags_of("rust/src/util/simclock.rs", bad);
+        assert!(d.iter().all(|d| d.rule != "clock-discipline"));
+    }
+
+    #[test]
+    fn rng_discipline_fixtures() {
+        let bad = include_str!("fixtures/rng_bad.rs");
+        let d = diags_of("rust/src/coordinator/fx.rs", bad);
+        let hits =
+            d.iter().filter(|d| d.rule == "rng-discipline").count();
+        assert_eq!(hits, 4,
+                   "constant (2 spellings) + entropy + struct lit: {d:?}");
+
+        // kernels.rs and rng.rs are the sanctioned randomness sources.
+        let d = diags_of("rust/src/engine/kernels.rs", bad);
+        assert!(d.iter().all(|d| d.rule != "rng-discipline"));
+
+        let good = include_str!("fixtures/rng_good.rs");
+        let d = diags_of("rust/src/coordinator/fx.rs", good);
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn warm_alloc_fixtures() {
+        let bad = include_str!("fixtures/warm_alloc_bad.rs");
+        let d = diags_of("rust/src/engine/fx.rs", bad);
+        let hits: Vec<_> = d.iter()
+            .filter(|d| d.rule == "warm-alloc")
+            .collect();
+        assert_eq!(hits.len(), 4,
+                   "vec! + collect + format! + Box::new: {hits:?}");
+
+        let good = include_str!("fixtures/warm_alloc_good.rs");
+        let d = diags_of("rust/src/engine/fx.rs", good);
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn det_iteration_fixtures() {
+        let bad = include_str!("fixtures/det_iteration_bad.rs");
+        let d = diags_of("rust/src/engine/fx.rs", bad);
+        let hits =
+            d.iter().filter(|d| d.rule == "det-iteration").count();
+        assert_eq!(hits, 2, "HashMap + HashSet: {d:?}");
+
+        // Outside engine/ the rule does not apply.
+        let d = diags_of("rust/src/coordinator/fx.rs", bad);
+        assert!(d.iter().all(|d| d.rule != "det-iteration"));
+
+        let good = include_str!("fixtures/det_iteration_good.rs");
+        let d = diags_of("rust/src/engine/fx.rs", good);
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    // ---- annotation grammar ------------------------------------------
+
+    #[test]
+    fn allow_suppresses_with_reason_trailing_and_standalone() {
+        let src = "\
+fn f() {
+    let t = std::time::Instant::now(); // lint: allow(clock-discipline) — OS wait
+    // lint: allow(clock-discipline) — startup stamp
+    let u = std::time::Instant::now();
+    let _ = (t, u);
+}
+";
+        let out = check_source("rust/src/server/fx.rs", src);
+        assert!(out.diags.is_empty(), "{:?}", out.diags);
+        assert_eq!(out.allows.len(), 2);
+        assert_eq!(out.allows[0].reason, "OS wait");
+        assert_eq!(out.allows[1].target, 4);
+    }
+
+    #[test]
+    fn allow_without_reason_is_a_diagnostic() {
+        let src = "\
+fn f() {
+    let t = std::time::Instant::now(); // lint: allow(clock-discipline)
+    let _ = t;
+}
+";
+        let d = diags_of("rust/src/server/fx.rs", src);
+        assert!(d.iter().any(|d| d.rule == "lint-directive"
+                             && d.msg.contains("reason")), "{d:?}");
+        // The underlying violation also still fires.
+        assert!(d.iter().any(|d| d.rule == "clock-discipline"), "{d:?}");
+    }
+
+    #[test]
+    fn unknown_rule_and_unused_allow_are_diagnostics() {
+        let bad = include_str!("fixtures/directives_bad.rs");
+        let d = diags_of("rust/src/server/fx.rs", bad);
+        assert!(d.iter().any(|d| d.msg.contains("unknown rule")),
+                "{d:?}");
+        assert!(d.iter().any(|d| d.msg.contains("unused lint: allow")),
+                "{d:?}");
+        assert!(d.iter().any(|d| d.msg.contains("never closed")),
+                "{d:?}");
+    }
+
+    #[test]
+    fn hot_region_close_without_open_fires() {
+        let src = "// lint: end-hot-region\nfn f() {}\n";
+        let d = diags_of("rust/src/engine/fx.rs", src);
+        assert!(d.iter().any(|d| d.msg.contains("without an open")),
+                "{d:?}");
+    }
+
+    // ---- the meta-test: the live tree must be clean ------------------
+
+    #[test]
+    fn repolint_is_clean_on_the_live_tree() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let report = run_tree(root).expect("walk rust/");
+        assert!(report.files > 30,
+                "walked only {} files — wrong root?", report.files);
+        assert!(
+            report.clean(),
+            "repolint found {} diagnostic(s) on the live tree:\n{}",
+            report.diags.len(),
+            report.diags.iter().map(|d| d.to_string())
+                .collect::<Vec<_>>().join("\n"),
+        );
+        // Every allowlist entry carries a written reason (enforced at
+        // parse time, re-asserted here as the acceptance criterion).
+        assert!(report.allows.iter().all(|a| !a.reason.is_empty()));
+    }
+}

@@ -1,0 +1,289 @@
+//! The five repo-native invariant rules (see `lint` module docs for the
+//! invariant each one guards and README §"Correctness tooling" for the
+//! annotation grammar).
+//!
+//! Every rule is a lexical pass over a [`FileCtx`]: code tokens with
+//! line/column positions, per-line code/comment classification, and the
+//! `// lint: hot-region` fences. Rules push raw [`Diagnostic`]s; the
+//! runner in `lint::mod` applies the annotated allowlist afterwards, so
+//! rules themselves never consult `allow` directives.
+
+use crate::lint::lexer::{parse_int, Tok, TokKind};
+use crate::lint::{Diagnostic, FileCtx};
+
+/// Rule ids, as spelled inside `lint: allow(...)` annotations.
+pub const RULES: [&str; 5] = [
+    "unsafe-safety",
+    "clock-discipline",
+    "rng-discipline",
+    "warm-alloc",
+    "det-iteration",
+];
+
+/// RNG constants whose presence outside the sanctioned modules means a
+/// parallel generator is being hand-rolled: the PCG-XSH-RR multiplier
+/// and the three SplitMix64 finalizer/increment constants. Matched by
+/// *value* (any radix / `_` spelling).
+const RNG_CONSTANTS: [u128; 4] = [
+    // PCG multiplier (0x5851f42d4c957f2d).
+    6364136223846793005, // lint: allow(rng-discipline) — the rule's own match table, not a generator
+    // SplitMix64 golden-ratio increment.
+    0x9e3779b97f4a7c15, // lint: allow(rng-discipline) — the rule's own match table, not a generator
+    // SplitMix64 finalizer round 1.
+    0xbf58476d1ce4e5b9, // lint: allow(rng-discipline) — the rule's own match table, not a generator
+    // SplitMix64 finalizer round 2.
+    0x94d049bb133111eb, // lint: allow(rng-discipline) — the rule's own match table, not a generator
+];
+
+/// Identifiers that reach for OS entropy or nondeterministic seeding.
+const ENTROPY_IDENTS: [&str; 5] =
+    ["getrandom", "OsRng", "from_entropy", "thread_rng", "RandomState"];
+
+/// Allocation constructors banned inside `// lint: hot-region` fences
+/// (each pattern is a code-token sequence; `!` and `.` anchor macros and
+/// method calls).
+const ALLOC_PATTERNS: [&[&str]; 10] = [
+    &["Vec", ":", ":", "new"],
+    &["vec", "!"],
+    &[".", "to_vec"],
+    &[".", "collect"],
+    &["format", "!"],
+    &["Box", ":", ":", "new"],
+    &["String", ":", ":", "from"],
+    &["String", ":", ":", "new"],
+    &[".", "to_string"],
+    &[".", "to_owned"],
+];
+
+/// Run every rule that applies to `ctx.path` and append raw diagnostics.
+pub fn run_all(ctx: &FileCtx, out: &mut Vec<Diagnostic>) {
+    unsafe_safety(ctx, out);
+    // Exempt: the two clock-owning util modules implement the `Clock`
+    // sources themselves, and benches measure wall time by definition.
+    if !path_is(ctx, &["util/simclock.rs", "util/bench.rs"])
+        && !ctx.path.contains("benches/")
+    {
+        clock_discipline(ctx, out);
+    }
+    if !path_is(ctx, &["util/rng.rs", "engine/kernels.rs"]) {
+        rng_discipline(ctx, out);
+    }
+    warm_alloc(ctx, out);
+    if ctx.path.contains("src/engine/") {
+        det_iteration(ctx, out);
+    }
+}
+
+fn path_is(ctx: &FileCtx, suffixes: &[&str]) -> bool {
+    suffixes.iter().any(|s| ctx.path.ends_with(s))
+}
+
+/// Match `pat` against the code tokens starting at `i`: alphanumeric
+/// pattern elements must be whole `Ident` tokens, single-char elements
+/// `Punct` tokens.
+fn seq_at(code: &[Tok], i: usize, pat: &[&str]) -> bool {
+    if i + pat.len() > code.len() {
+        return false;
+    }
+    pat.iter().enumerate().all(|(k, p)| {
+        let t = &code[i + k];
+        if p.chars().all(|c| c.is_ascii_alphanumeric() || c == '_') {
+            t.kind == TokKind::Ident && t.text == *p
+        } else {
+            t.kind == TokKind::Punct && t.text == *p
+        }
+    })
+}
+
+/// **unsafe-safety** — every `unsafe` token (block, fn, or impl) must be
+/// immediately preceded by a justification: a `// SAFETY:` comment (or a
+/// `/// # Safety` doc section) in the contiguous comment/attribute block
+/// directly above it, or an earlier same-line comment. Guards: the
+/// hand-written aliasing contracts (`SharedSlice`, `ResidentPtr`) only
+/// stay sound while every site states its obligation.
+fn unsafe_safety(ctx: &FileCtx, out: &mut Vec<Diagnostic>) {
+    for u in ctx.code.iter().filter(|t| {
+        t.kind == TokKind::Ident && t.text == "unsafe"
+    }) {
+        if has_safety_justification(ctx, u) {
+            continue;
+        }
+        out.push(ctx.diag(
+            "unsafe-safety",
+            u.line,
+            "`unsafe` without an immediately-preceding `// SAFETY:` \
+             comment (or `# Safety` doc section) stating the proof \
+             obligation",
+        ));
+    }
+}
+
+fn comment_has_safety_marker(t: &Tok) -> bool {
+    let text = t.comment_text();
+    text.contains("SAFETY:") || text.contains("# Safety")
+}
+
+fn has_safety_justification(ctx: &FileCtx, u: &Tok) -> bool {
+    // Same line, earlier column: `/* SAFETY: … */ unsafe { … }`.
+    if ctx.comments_on(u.line).iter().any(|c| {
+        c.col < u.col && comment_has_safety_marker(c)
+    }) {
+        return true;
+    }
+    // Scan the contiguous comment/attribute block directly above.
+    let mut l = u.line.saturating_sub(1);
+    while l >= 1 {
+        if ctx.line_has_code(l) {
+            if ctx.is_attr_line(l) {
+                l -= 1;
+                continue;
+            }
+            return false;
+        }
+        let comments = ctx.comments_on(l);
+        if comments.is_empty() {
+            return false; // blank line ends the block
+        }
+        if comments.iter().any(|c| comment_has_safety_marker(c)) {
+            return true;
+        }
+        l -= 1;
+    }
+    false
+}
+
+/// **clock-discipline** — no raw `Instant::now` / `SystemTime` /
+/// `thread::sleep` outside `util/simclock.rs`, `util/bench.rs` and the
+/// wall-time-by-definition `benches/` harnesses: all
+/// scheduler-visible time flows through the injected `Clock`, so the
+/// virtual-time sim (`src/sim.rs`, `tests/sched_sim.rs`) can replay any
+/// policy decision deterministically. Wall-time-by-necessity call sites
+/// (OS timeouts, client-facing stamps) carry an allow annotation.
+fn clock_discipline(ctx: &FileCtx, out: &mut Vec<Diagnostic>) {
+    let code = &ctx.code;
+    for i in 0..code.len() {
+        if seq_at(code, i, &["Instant", ":", ":", "now"]) {
+            out.push(ctx.diag(
+                "clock-discipline",
+                code[i].line,
+                "raw `Instant::now()` — route through the injected \
+                 `Clock` (util/simclock.rs) or allowlist with a reason",
+            ));
+        } else if seq_at(code, i, &["SystemTime"]) {
+            out.push(ctx.diag(
+                "clock-discipline",
+                code[i].line,
+                "`SystemTime` is wall time the sim cannot virtualize — \
+                 use the injected `Clock` or allowlist with a reason",
+            ));
+        } else if seq_at(code, i, &["thread", ":", ":", "sleep"]) {
+            out.push(ctx.diag(
+                "clock-discipline",
+                code[i].line,
+                "raw `thread::sleep` — schedulable code must not block \
+                 on wall time; allowlist only OS-level waits",
+            ));
+        }
+    }
+}
+
+/// **rng-discipline** — outside `util/rng.rs` (the sequential PCG
+/// streams) and `engine/kernels.rs` (the counter-based SplitMix64 noise
+/// stream), no PCG/SplitMix construction and no OS-entropy calls: the
+/// per-sequence counter streams must remain the only randomness source,
+/// or bitwise evict/resume and thread-invariance break silently.
+fn rng_discipline(ctx: &FileCtx, out: &mut Vec<Diagnostic>) {
+    let code = &ctx.code;
+    for i in 0..code.len() {
+        let t = &code[i];
+        if t.kind == TokKind::Num {
+            if let Some(v) = parse_int(&t.text) {
+                if RNG_CONSTANTS.contains(&v) {
+                    out.push(ctx.diag(
+                        "rng-discipline",
+                        t.line,
+                        "PCG/SplitMix64 constant outside util/rng.rs / \
+                         engine/kernels.rs — a parallel generator is \
+                         being hand-rolled",
+                    ));
+                }
+            }
+        } else if t.kind == TokKind::Ident
+            && ENTROPY_IDENTS.contains(&t.text.as_str())
+        {
+            out.push(ctx.diag(
+                "rng-discipline",
+                t.line,
+                "OS-entropy / nondeterministic seeding — all randomness \
+                 must derive from seeded per-sequence streams",
+            ));
+        } else if seq_at(code, i, &["Pcg", "{"])
+            // Not a literal when preceded by `>` (return type position),
+            // `struct`, or `impl`.
+            && (i == 0
+                || !matches!(code[i - 1].text.as_str(),
+                             ">" | "struct" | "impl"))
+        {
+            out.push(ctx.diag(
+                "rng-discipline",
+                t.line,
+                "struct-literal `Pcg { .. }` bypasses the seeding \
+                 discipline — use `Pcg::new` / `Pcg::with_stream`",
+            ));
+        }
+    }
+}
+
+/// **warm-alloc** — inside `// lint: hot-region` fences no allocation
+/// constructors: the statically-visible complement of the counting-
+/// allocator gate (`tests/alloc_regression.rs`), which can only observe
+/// the paths a given test run happens to execute.
+fn warm_alloc(ctx: &FileCtx, out: &mut Vec<Diagnostic>) {
+    if ctx.hot_regions.is_empty() {
+        return;
+    }
+    let code = &ctx.code;
+    for i in 0..code.len() {
+        let line = code[i].line;
+        if !ctx.in_hot_region(line) {
+            continue;
+        }
+        for pat in ALLOC_PATTERNS {
+            if seq_at(code, i, pat) {
+                out.push(ctx.diag(
+                    "warm-alloc",
+                    line,
+                    format!(
+                        "`{}` inside a `lint: hot-region` fence — warm \
+                         steps must be allocation-free (see \
+                         tests/alloc_regression.rs)",
+                        pat.join("")
+                    ),
+                ));
+                break; // one diagnostic per token position
+            }
+        }
+    }
+}
+
+/// **det-iteration** — no `HashMap`/`HashSet` in `engine/` code:
+/// iteration order is seeded per-process, so any stream-affecting use
+/// breaks bitwise reproducibility across runs. Index-ordered structures
+/// (`Vec`, `VecDeque`, `BTreeMap`) only.
+fn det_iteration(ctx: &FileCtx, out: &mut Vec<Diagnostic>) {
+    for t in ctx.code.iter().filter(|t| {
+        t.kind == TokKind::Ident
+            && (t.text == "HashMap" || t.text == "HashSet")
+    }) {
+        out.push(ctx.diag(
+            "det-iteration",
+            t.line,
+            format!(
+                "`{}` in engine code — iteration order is seeded \
+                 per-process; use an index-ordered structure (Vec, \
+                 VecDeque, BTreeMap) or allowlist with a reason",
+                t.text
+            ),
+        ));
+    }
+}

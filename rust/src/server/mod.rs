@@ -66,6 +66,8 @@ impl Server {
                     });
                 }
                 Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    // lint: allow(clock-discipline) — accept-loop backoff
+                    // on a real nonblocking socket.
                     std::thread::sleep(std::time::Duration::from_millis(5));
                 }
                 Err(_) => {}
@@ -321,6 +323,8 @@ mod tests {
             })
             .unwrap();
         });
+        // lint: allow(clock-discipline) — test waits for a real TCP
+        // listener to come up.
         std::thread::sleep(Duration::from_millis(50));
         let mut conn = std::net::TcpStream::connect(addr).unwrap();
         let body = r#"{"model":"mock","n":1}"#;

@@ -158,6 +158,11 @@ pub fn simulate(specs: &[QueueSpec], trace: &[Arrival], selector: Selector,
         .collect();
 
     let clock = SimClock::new();
+    // Phase accounting inside the steppers runs on the same virtual
+    // timeline — the whole simulation is wall-time-free.
+    for st in steppers.iter_mut() {
+        st.sched.set_clock(Box::new(clock.clone()));
+    }
     let mut xq = CrossQueueScheduler::new(Box::new(clock.clone()), cfg);
     let qids: Vec<QueueId> = specs
         .iter()

@@ -164,6 +164,9 @@ pub struct Timer {
 
 impl Timer {
     pub fn new(hist: std::sync::Arc<Histogram>) -> Timer {
+        // lint: allow(clock-discipline) — operator-facing latency
+        // histograms report real wall time; no scheduling decision
+        // reads them.
         Timer { start: Instant::now(), hist }
     }
 }

@@ -192,6 +192,8 @@ fn full_http_stack_generate_and_score() {
             })
             .unwrap();
     });
+    // lint: allow(clock-discipline) — test waits for a real TCP
+    // listener to come up.
     std::thread::sleep(Duration::from_millis(50));
 
     let call = |path: &str, body: &str| -> (u16, Json) {
