@@ -42,15 +42,21 @@ fn main() {
     // whose whole point is covering checkpoint/evict/park/resume — a
     // silent preemptions==0 would mean the gate went dead).
     let expect_preempt = args.bool("expect-preemptions");
+    // --expect-faults: fail unless the replay actually exercised the
+    // failure layer (CI passes it for the checked-in chaos trace, whose
+    // point is covering fault containment, retries, the breaker, and
+    // deadline sheds — all-zero counters would mean the gate went dead).
+    let expect_faults = args.bool("expect-faults");
     if let Some(path) = args.opt_str("record") {
         record(&path);
-        replay(&path, expect_preempt);
+        replay(&path, expect_preempt, expect_faults);
     } else if let Some(path) = args.opt_str("replay") {
-        replay(&path, expect_preempt);
+        replay(&path, expect_preempt, expect_faults);
     } else {
         eprintln!(
             "usage: trace_replay --replay TRACE.jsonl \
-             [--expect-preemptions] | --record OUT.jsonl"
+             [--expect-preemptions] [--expect-faults] | \
+             --record OUT.jsonl"
         );
         exit(2);
     }
@@ -59,7 +65,7 @@ fn main() {
 /// Replay `path` twice through the sim harness and require the two
 /// reports — every counter and every token stream — to be bitwise
 /// identical. Prints a per-queue summary of the (stable) replay.
-fn replay(path: &str, expect_preempt: bool) {
+fn replay(path: &str, expect_preempt: bool, expect_faults: bool) {
     let (cfg, specs, trace) = match read_trace(std::path::Path::new(path)) {
         Ok(t) => t,
         Err(e) => {
@@ -96,11 +102,34 @@ fn replay(path: &str, expect_preempt: bool) {
         a.shed_requests, a.shed, a.slo_violations, a.preempt_fires,
         a.preemptions, a.resumes, a.t_end
     );
+    println!(
+        "  faults: engine_faults={} retries={} failed={:?} \
+         deadline_sheds={} breaker_opens={} breaker_shed={}",
+        a.engine_faults, a.retries, a.failed, a.deadline_sheds,
+        a.breaker_opens, a.breaker_shed
+    );
     if expect_preempt && a.preemptions == 0 {
         eprintln!(
             "FAIL {path}: --expect-preemptions set but the replay never \
              preempted (the preemption coverage this trace exists for \
              is dead)"
+        );
+        exit(1);
+    }
+    if expect_faults
+        && (a.engine_faults == 0
+            || a.retries == 0
+            || a.deadline_sheds == 0
+            || a.breaker_opens == 0
+            || a.breaker_shed == 0)
+    {
+        eprintln!(
+            "FAIL {path}: --expect-faults set but the replay left part \
+             of the failure layer unexercised (engine_faults={} \
+             retries={} deadline_sheds={} breaker_opens={} \
+             breaker_shed={})",
+            a.engine_faults, a.retries, a.deadline_sheds,
+            a.breaker_opens, a.breaker_shed
         );
         exit(1);
     }
@@ -156,6 +185,7 @@ fn record(path: &str) {
             max_wait: Duration::from_millis(1),
             sched,
             trace: Some(tx),
+            ..Default::default()
         },
     )
     .expect("coordinator");

@@ -15,6 +15,7 @@
 use std::time::Duration;
 
 use crate::coordinator::sched::SchedConfig;
+use crate::engine::FaultPlan;
 
 #[derive(Clone, Debug)]
 pub struct BatcherConfig {
@@ -31,6 +32,14 @@ pub struct BatcherConfig {
     /// `examples/trace_replay.rs` assembles into a JSONL trace the sim
     /// harness replays deterministically.
     pub trace: Option<std::sync::mpsc::Sender<crate::sim::TraceEvent>>,
+    /// Deterministic fault injection (`--fault-plan`): per-model
+    /// [`FaultPlan`]s applied to each fresh run queue's stepper (step
+    /// granularity; see `engine::fault`). Empty = no faults.
+    pub faults: std::collections::BTreeMap<String, FaultPlan>,
+    /// Server-wide default request deadline (`--deadline-ms`), applied
+    /// when a request carries no `deadline_ms` of its own. `None` = no
+    /// default deadline.
+    pub default_deadline_ms: Option<u64>,
 }
 
 impl Default for BatcherConfig {
@@ -39,6 +48,8 @@ impl Default for BatcherConfig {
             max_wait: Duration::from_millis(5),
             sched: SchedConfig::default(),
             trace: None,
+            faults: std::collections::BTreeMap::new(),
+            default_deadline_ms: None,
         }
     }
 }

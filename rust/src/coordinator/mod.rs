@@ -63,8 +63,9 @@
 pub mod batcher;
 pub mod request;
 pub mod sched;
+pub mod supervise;
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Instant;
@@ -72,9 +73,9 @@ use std::time::Instant;
 use anyhow::{anyhow, Result};
 
 use crate::engine::{
-    mdm_sample, speculative_sample, BoundStepper, HybridModel, Prompt,
-    Sample, SeqCheckpoint, SeqParams, SlotId, StepPhases, StepPool,
-    Stepper,
+    mdm_sample, speculative_sample, BoundStepper, FaultyStepper,
+    HybridModel, Prompt, Sample, SeqCheckpoint, SeqParams, SlotId,
+    StepError, StepPhases, StepPool, Stepper,
 };
 use crate::sim::TraceEvent;
 use crate::likelihood::{log_likelihood, rejection_posterior, SpecTable};
@@ -87,12 +88,25 @@ pub use batcher::BatcherConfig;
 pub use request::{GenRequest, GenResponse, SamplerChoice, ScoreRequest,
                   ScoreResponse};
 pub use sched::{CrossQueueScheduler, QueueId, QueuePolicy, SchedConfig};
+pub use supervise::{Breaker, BreakerState, SupervisePolicy};
 
 /// Exact suffix of admission-backpressure rejection messages. The HTTP
 /// layer keys its 429 mapping on it (the vendored anyhow shim has no
 /// typed errors), so the coordinator and server must agree on this one
-/// literal — change it here, nowhere else.
+/// literal — change it here, nowhere else. Client-echoed values in
+/// error messages are always single-quoted, so they cannot forge any of
+/// the three suffixes.
 pub const SHED_ERROR_SUFFIX: &str = ": request shed";
+
+/// Exact suffix of circuit-breaker fast rejections (model unhealthy).
+/// The HTTP layer maps it to 503 + `Retry-After`; the message carries
+/// `retry after <N>s` for the header value.
+pub const BREAKER_ERROR_SUFFIX: &str = ": model unavailable";
+
+/// Exact suffix of deadline-expiry rejections (admission or in-flight).
+/// The HTTP layer maps it to 504; `deadline_sheds` counts these apart
+/// from the 429 backpressure sheds.
+pub const DEADLINE_ERROR_SUFFIX: &str = ": deadline expired";
 
 /// Object-safe erasure of `HybridModel` (hides the associated State type)
 /// plus the operations the coordinator exposes.
@@ -211,7 +225,45 @@ enum Job {
     Info {
         reply: mpsc::Sender<Json>,
     },
+    Health {
+        reply: mpsc::Sender<Json>,
+    },
     Shutdown,
+}
+
+/// Reply-channel guard: every admitted request is answered **exactly
+/// once**. `send` consumes the responder; if one is instead dropped —
+/// an engine bug path, or the engine thread unwinding with requests in
+/// flight — the `Drop` impl delivers an explicit teardown `Err`, so
+/// `Coordinator::generate` returns an error instead of surfacing a bare
+/// channel disconnect (and can never hang on a reply that was silently
+/// thrown away).
+struct Responder {
+    tx: Option<mpsc::Sender<Result<GenResponse>>>,
+}
+
+impl Responder {
+    fn new(tx: mpsc::Sender<Result<GenResponse>>) -> Responder {
+        Responder { tx: Some(tx) }
+    }
+
+    /// Deliver the request's one definitive response.
+    fn send(mut self, r: Result<GenResponse>) {
+        if let Some(tx) = self.tx.take() {
+            let _ = tx.send(r);
+        }
+    }
+}
+
+impl Drop for Responder {
+    fn drop(&mut self) {
+        if let Some(tx) = self.tx.take() {
+            let _ = tx.send(Err(anyhow!(
+                "request dropped by engine teardown (engine thread exited \
+                 with the request in flight)"
+            )));
+        }
+    }
 }
 
 /// Handle used by the server / examples; cheaply cloneable.
@@ -254,6 +306,9 @@ impl Coordinator {
         Ok(Coordinator { tx, metrics })
     }
 
+    // lint: serve-region — caller-side request paths: every failure
+    // mode (engine gone, reply dropped) must surface as an `Err`, never
+    // a panic or a hang.
     pub fn generate(&self, req: GenRequest) -> Result<GenResponse> {
         let (reply, wait) = mpsc::channel();
         self.tx
@@ -281,9 +336,21 @@ impl Coordinator {
         wait.recv().map_err(|_| anyhow!("engine dropped reply"))
     }
 
+    /// Per-model supervision state for `/healthz`:
+    /// `{"ok": <no breaker open>, "models": {name: "closed" | "open" |
+    /// "half-open"}}`. `Err` means the engine thread itself is gone.
+    pub fn health(&self) -> Result<Json> {
+        let (reply, wait) = mpsc::channel();
+        self.tx
+            .send(Job::Health { reply })
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        wait.recv().map_err(|_| anyhow!("engine dropped reply"))
+    }
+
     pub fn shutdown(&self) {
         let _ = self.tx.send(Job::Shutdown);
     }
+    // lint: end-serve-region
 }
 
 /// Metric handles shared across the engine loop helpers.
@@ -318,6 +385,16 @@ struct EngineMetrics {
     c_preempt: Arc<Counter>,
     c_resume: Arc<Counter>,
     c_preempt_fires: Arc<Counter>,
+    /// Steps whose failure became definitive (fatal, or a transient
+    /// burst out of retries) and quarantined a run queue.
+    c_engine_faults: Arc<Counter>,
+    /// Transient step failures scheduled for a backed-off retry.
+    c_retries: Arc<Counter>,
+    /// Requests answered with a deadline-expiry error (admission or
+    /// in-flight) — deliberately separate from the 429 `shed_requests`.
+    c_deadline_sheds: Arc<Counter>,
+    /// Gauge: number of models whose breaker is currently not closed.
+    c_breaker_state: Arc<Counter>,
 }
 
 impl EngineMetrics {
@@ -346,17 +423,28 @@ impl EngineMetrics {
             c_preempt: metrics.counter("preemptions"),
             c_resume: metrics.counter("resume_steps"),
             c_preempt_fires: metrics.counter("preempt_fires"),
+            c_engine_faults: metrics.counter("engine_faults"),
+            c_retries: metrics.counter("retries"),
+            c_deadline_sheds: metrics.counter("deadline_sheds"),
+            c_breaker_state: metrics.counter("breaker_state"),
         }
     }
 }
 
 /// A request whose samples are in flight across scheduler steps.
 struct Inflight {
-    reply: mpsc::Sender<Result<GenResponse>>,
+    reply: Responder,
     enqueued: Instant,
     model: String,
     got: Vec<Option<Sample>>,
     remaining: usize,
+    /// Absolute expiry instant on the selector's clock (`xq.now()`
+    /// terms), derived from `deadline_ms` at admission; `None` = no
+    /// deadline. Checked between outer-loop steps and lazily at pick
+    /// time — an expired request is answered with a deadline error and
+    /// its sequences are removed wherever they sit (pending, resident,
+    /// or parked).
+    deadline: Option<f64>,
 }
 
 /// One continuous-batching run queue: all admitted sequences share a
@@ -393,8 +481,17 @@ struct RunQueue<'m> {
     parked: Vec<SeqCheckpoint>,
     /// The SLO queue whose pressure caused the parking.
     parked_trigger: Option<QueueId>,
+    /// Transient step failures in the current burst (reset by the first
+    /// successful step; a burst exceeding the supervision policy's
+    /// `max_retries` quarantines the queue).
+    retries: u32,
+    /// Retry backoff gate on the selector's clock: the queue is not
+    /// ready before this instant. 0.0 = no backoff pending.
+    not_before: f64,
 }
 
+// lint: serve-region — the engine loop owns every in-flight responder;
+// a panic here (or a skipped reply) breaks answer-exactly-once.
 fn engine_loop(models: ModelMap, rx: mpsc::Receiver<Job>,
                metrics: Arc<Registry>, cfg: BatcherConfig) {
     let m = EngineMetrics::new(&metrics);
@@ -402,6 +499,10 @@ fn engine_loop(models: ModelMap, rx: mpsc::Receiver<Job>,
     let mut req_counter: u64 = 0;
     let mut inflight: BTreeMap<u64, Inflight> = BTreeMap::new();
     let mut queues: Vec<RunQueue<'_>> = Vec::new();
+    // Per-model circuit breakers (supervision layer): entries appear at
+    // the first definitive model failure and gate admissions from then
+    // on. Missing entry = closed.
+    let mut breakers: BTreeMap<String, Breaker> = BTreeMap::new();
     // The engine's shared step pool: workers spawned once here, shared
     // by every run queue's scheduler (`--step-threads`; 1 = the exact
     // single-threaded code path). Thread count never changes results —
@@ -448,6 +549,11 @@ fn engine_loop(models: ModelMap, rx: mpsc::Receiver<Job>,
                 q.parked_trigger = None;
             }
         }
+        // Enforce request deadlines between steps (with lazy in-queue
+        // expiry): expired in-flight requests are answered now, and
+        // their sequences removed wherever they sit — pending, resident,
+        // or parked.
+        sweep_deadlines(&mut queues, &mut inflight, &mut xq, &m);
         let busy = queues
             .iter()
             .any(|q| !q.stepper.is_idle() || !q.parked.is_empty());
@@ -461,7 +567,7 @@ fn engine_loop(models: ModelMap, rx: mpsc::Receiver<Job>,
                 Ok(job) => {
                     if handle_job(job, &models, &mut queues, &mut inflight,
                                   &mut rng, &mut req_counter, &m, &cfg,
-                                  &mut xq, &pool) {
+                                  &mut xq, &pool, &breakers) {
                         draining = true;
                     }
                 }
@@ -482,7 +588,7 @@ fn engine_loop(models: ModelMap, rx: mpsc::Receiver<Job>,
                         if handle_job(job, &models, &mut queues,
                                       &mut inflight, &mut rng,
                                       &mut req_counter, &m, &cfg,
-                                      &mut xq, &pool) {
+                                      &mut xq, &pool, &breakers) {
                             draining = true;
                         }
                     }
@@ -502,7 +608,7 @@ fn engine_loop(models: ModelMap, rx: mpsc::Receiver<Job>,
                         if handle_job(job, &models, &mut queues,
                                       &mut inflight, &mut rng,
                                       &mut req_counter, &m, &cfg,
-                                      &mut xq, &pool) {
+                                      &mut xq, &pool, &breakers) {
                             draining = true;
                             break;
                         }
@@ -519,16 +625,20 @@ fn engine_loop(models: ModelMap, rx: mpsc::Receiver<Job>,
         // One scheduler step: the weighted selector picks a model among
         // everything with resident or pending work, then the rotation
         // cursor picks one of that model's ready run queues. Queues with
-        // parked checkpoints are paused — not ready — until resumed.
+        // parked checkpoints are paused — not ready — until resumed, and
+        // queues inside a retry-backoff window sit out until it elapses.
         ready_buf.clear();
+        let t_ready = xq.now();
         for q in queues.iter() {
             if !q.stepper.is_idle()
                 && q.parked.is_empty()
+                && t_ready >= q.not_before
                 && !ready_buf.contains(&q.sched_id)
             {
                 ready_buf.push(q.sched_id);
             }
         }
+        let mut stepped = false;
         if let Some(sid) = xq.pick(&ready_buf) {
             let n = queues.len();
             let start = rr.get(&sid).copied().unwrap_or(0);
@@ -538,19 +648,72 @@ fn engine_loop(models: ModelMap, rx: mpsc::Receiver<Job>,
                 if queues[i].sched_id == sid
                     && !queues[i].stepper.is_idle()
                     && queues[i].parked.is_empty()
+                    && t_ready >= queues[i].not_before
                 {
                     picked = Some(i);
                     break;
                 }
             }
-            let qi = picked.expect("picked model has a ready queue");
+            // A pick without a matching ready queue would be an engine
+            // bug (ready_buf was built from the same predicate); skip
+            // the step rather than panic with responders in flight.
+            let Some(qi) = picked else {
+                debug_assert!(false, "picked model has no ready queue");
+                continue;
+            };
             // Advance past the served queue: the next scan for this
             // model starts after it, so every ready sibling is reached
             // within one cycle of the model's picks (index shifts from
             // `retain` below only rotate the origin, never skip).
             rr.insert(sid, (qi + 1) % n.max(1));
-            step_queue(&mut queues[qi], &mut inflight, &mut xq, &m,
-                       cfg.trace.as_ref());
+            stepped = true;
+            match step_queue(&mut queues[qi], &mut inflight, &mut xq, &m,
+                             cfg.trace.as_ref()) {
+                Ok(()) => {
+                    // A successful step ends any retry burst and closes
+                    // the model's breaker (half-open probes included).
+                    let q = &mut queues[qi];
+                    q.retries = 0;
+                    q.not_before = 0.0;
+                    let name = xq.key_of(sid).to_string();
+                    if let Some(b) = breakers.get_mut(&name) {
+                        b.record_success(xq.now());
+                    }
+                }
+                Err(StepError::Transient(_))
+                    if queues[qi].retries
+                        < cfg.sched.supervise.max_retries =>
+                {
+                    // Transient fault with retries left: back the queue
+                    // off (bounded, Clock-driven) and try again later.
+                    // Scheduler state survives the failed step intact —
+                    // see the unwind-safety argument on
+                    // `BoundStepper::step`.
+                    let q = &mut queues[qi];
+                    q.retries += 1;
+                    q.not_before = xq.now()
+                        + cfg.sched.supervise.backoff_for(q.retries);
+                    m.c_retries.inc();
+                }
+                Err(e) => {
+                    // Definitive failure — fatal, or a transient burst
+                    // out of retries: quarantine this run queue only
+                    // (surviving queues' streams stay bitwise identical
+                    // to a fault-free run) and record the failure on the
+                    // model's breaker.
+                    m.c_engine_faults.inc();
+                    let name = xq.key_of(sid).to_string();
+                    let now = xq.now();
+                    breakers
+                        .entry(name)
+                        .or_insert_with(|| {
+                            Breaker::new(&cfg.sched.supervise)
+                        })
+                        .record_failure(now);
+                    quarantine_queue(&mut queues[qi], &mut inflight,
+                                     &mut xq, &m, e.message());
+                }
+            }
             // Export the selector's violation count as a monotonic
             // counter delta.
             let v = xq.slo_violations();
@@ -600,6 +763,20 @@ fn engine_loop(models: ModelMap, rx: mpsc::Receiver<Job>,
                 }
             }
         }
+        if !stepped && busy {
+            // Everything runnable is gated (retry backoff windows,
+            // parked checkpoints): sleep briefly instead of hot-spinning
+            // on try_recv until a gate opens.
+            // lint: allow(clock-discipline) — bounds a real busy-wait on
+            // the live engine thread; no virtual clock can advance it.
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        // Gauge: models currently degraded (breaker not closed).
+        let t_gauge = xq.now();
+        m.c_breaker_state.set(breakers
+            .values()
+            .filter(|b| b.state(t_gauge) != BreakerState::Closed)
+            .count() as u64);
         queues.retain(|q| !q.stepper.is_idle() || !q.parked.is_empty());
     }
 }
@@ -611,7 +788,8 @@ fn handle_job<'m>(job: Job, models: &'m ModelMap,
                   inflight: &mut BTreeMap<u64, Inflight>, rng: &mut Pcg,
                   req_counter: &mut u64, m: &EngineMetrics,
                   cfg: &BatcherConfig, xq: &mut CrossQueueScheduler,
-                  pool: &Arc<StepPool>) -> bool {
+                  pool: &Arc<StepPool>,
+                  breakers: &BTreeMap<String, Breaker>) -> bool {
     match job {
         Job::Shutdown => true,
         Job::Info { reply } => {
@@ -621,13 +799,35 @@ fn handle_job<'m>(job: Job, models: &'m ModelMap,
             let _ = reply.send(obj);
             false
         }
+        Job::Health { reply } => {
+            // `/healthz` body: overall ok = no breaker fully open (a
+            // half-open breaker is probing, so the model is admitting).
+            let now = xq.now();
+            let mut ok = true;
+            let mut states: BTreeMap<String, Json> = BTreeMap::new();
+            for name in models.keys() {
+                let st = breakers
+                    .get(name)
+                    .map(|b| b.state(now))
+                    .unwrap_or(BreakerState::Closed);
+                if st == BreakerState::Open {
+                    ok = false;
+                }
+                states.insert(name.clone(), Json::str(st.as_str()));
+            }
+            let _ = reply.send(Json::obj(vec![
+                ("ok", Json::Bool(ok)),
+                ("models", Json::Obj(states)),
+            ]));
+            false
+        }
         Job::Score { req, reply } => {
             let _ = reply.send(run_score(models, &req, rng));
             false
         }
         Job::Generate { req, reply, enqueued } => {
             admit_generate(models, queues, inflight, rng, req_counter, m,
-                           cfg, xq, pool, req, reply, enqueued);
+                           cfg, xq, pool, breakers, req, reply, enqueued);
             false
         }
     }
@@ -641,9 +841,14 @@ fn admit_generate<'m>(models: &'m ModelMap, queues: &mut Vec<RunQueue<'m>>,
                       inflight: &mut BTreeMap<u64, Inflight>, rng: &mut Pcg,
                       req_counter: &mut u64, m: &EngineMetrics,
                       cfg: &BatcherConfig, xq: &mut CrossQueueScheduler,
-                      pool: &Arc<StepPool>, req: GenRequest,
+                      pool: &Arc<StepPool>,
+                      breakers: &BTreeMap<String, Breaker>, req: GenRequest,
                       reply: mpsc::Sender<Result<GenResponse>>,
                       enqueued: Instant) {
+    // Guard the reply channel immediately: every path out of admission
+    // either sends explicitly or drops the responder, which itself sends
+    // a teardown error — the client is answered exactly once, always.
+    let reply = Responder::new(reply);
     m.c_reqs.inc();
     let rid = *req_counter;
     *req_counter += 1;
@@ -652,16 +857,31 @@ fn admit_generate<'m>(models: &'m ModelMap, queues: &mut Vec<RunQueue<'m>>,
         Some(model) => model,
         None => {
             m.c_errors.inc();
-            let _ =
-                reply.send(Err(anyhow!("unknown model '{}'", req.model)));
+            reply.send(Err(anyhow!("unknown model '{}'", req.model)));
             return;
         }
     };
+    // Circuit breaker: an unhealthy model fails fast at admission (503
+    // at the HTTP layer) instead of queueing work behind a failing
+    // backend. Half-open lets the admission through as a probe.
+    if let Some(b) = breakers.get(&req.model) {
+        let now = xq.now();
+        if !b.admit_allowed(now) {
+            let ra = b.retry_after_s(now).ceil().max(1.0) as u64;
+            m.c_errors.inc();
+            reply.send(Err(anyhow!(
+                "model '{}' unhealthy: circuit breaker open, retry after \
+                 {ra}s{BREAKER_ERROR_SUFFIX}",
+                req.model
+            )));
+            return;
+        }
+    }
     let d = model.seq_len();
     let prompt = req.prompt.clone().unwrap_or_else(|| Prompt::empty(d));
     if prompt.0.len() != d {
         m.c_errors.inc();
-        let _ = reply.send(Err(anyhow!(
+        reply.send(Err(anyhow!(
             "prompt length {} != D {d}", prompt.0.len()
         )));
         return;
@@ -685,7 +905,7 @@ fn admit_generate<'m>(models: &'m ModelMap, queues: &mut Vec<RunQueue<'m>>,
 
     let n = req.n_samples;
     if n == 0 {
-        let _ = reply.send(Ok(GenResponse {
+        reply.send(Ok(GenResponse {
             model: req.model.clone(),
             samples: Vec::new(),
             wall_s: 0.0,
@@ -712,11 +932,28 @@ fn admit_generate<'m>(models: &'m ModelMap, queues: &mut Vec<RunQueue<'m>>,
         None => rid,
     };
     let age = enqueued.elapsed().as_secs_f64();
+    // Deadline: measured from the caller-side enqueue instant, projected
+    // onto the selector's clock. Enforced here at admission, then
+    // between steps by the engine loop's sweep.
+    let deadline_ms = req.deadline_ms.or(cfg.default_deadline_ms);
+    let deadline = deadline_ms.map(|ms| xq.now() - age + ms as f64 / 1000.0);
+    if let Some(dl) = deadline {
+        if xq.now() >= dl {
+            m.c_deadline_sheds.inc();
+            m.c_errors.inc();
+            reply.send(Err(anyhow!(
+                "request spent {age:.3}s reaching the engine, past its \
+                 {}ms deadline{DEADLINE_ERROR_SUFFIX}",
+                deadline_ms.unwrap_or(0)
+            )));
+            return;
+        }
+    }
     if !xq.try_enqueue(sched_id, lane, rid, n, age) {
         m.c_shed.inc();
         m.c_shed_seqs.add(n as u64);
         m.c_errors.inc();
-        let _ = reply.send(Err(anyhow!(
+        reply.send(Err(anyhow!(
             "model '{}' queue is full: {} sequences requested, {}/{} \
              pending{SHED_ERROR_SUFFIX}",
             req.model,
@@ -731,6 +968,14 @@ fn admit_generate<'m>(models: &'m ModelMap, queues: &mut Vec<RunQueue<'m>>,
         Some(qi) => qi,
         None => match model.stepper(&req.sampler, pool.clone()) {
             Ok(stepper) => {
+                // `--fault-plan` wiring: a scripted plan for this model
+                // wraps the fresh run queue's stepper, firing at step
+                // granularity (each run queue counts its own steps).
+                let stepper = match cfg.faults.get(&req.model) {
+                    Some(plan) => Box::new(FaultyStepper::new(
+                        stepper, plan.clone())) as Box<dyn Stepper + 'm>,
+                    None => stepper,
+                };
                 queues.push(RunQueue {
                     key: key.clone(),
                     stepper,
@@ -740,6 +985,8 @@ fn admit_generate<'m>(models: &'m ModelMap, queues: &mut Vec<RunQueue<'m>>,
                     formed: false,
                     parked: Vec::new(),
                     parked_trigger: None,
+                    retries: 0,
+                    not_before: 0.0,
                 });
                 queues.len() - 1
             }
@@ -747,7 +994,7 @@ fn admit_generate<'m>(models: &'m ModelMap, queues: &mut Vec<RunQueue<'m>>,
                 // Roll back exactly this request's optimistic stamps.
                 xq.cancel_enqueue(sched_id, lane, rid, n);
                 m.c_errors.inc();
-                let _ = reply.send(Err(e));
+                reply.send(Err(e));
                 return;
             }
         },
@@ -776,14 +1023,18 @@ fn admit_generate<'m>(models: &'m ModelMap, queues: &mut Vec<RunQueue<'m>>,
         model: req.model,
         got: vec![None; n],
         remaining: n,
+        deadline,
     });
 }
 
 /// Run one scheduler step on a queue, report its cost to the selector,
-/// and deliver whatever completed.
+/// and deliver whatever completed. A step failure is returned for the
+/// engine loop's supervision (retry/backoff or quarantine) — this
+/// function itself never answers a request with an error.
 fn step_queue(q: &mut RunQueue<'_>, inflight: &mut BTreeMap<u64, Inflight>,
               xq: &mut CrossQueueScheduler, m: &EngineMetrics,
-              trace: Option<&mpsc::Sender<TraceEvent>>) {
+              trace: Option<&mpsc::Sender<TraceEvent>>)
+              -> std::result::Result<(), StepError> {
     if !q.formed {
         q.formed = true;
         // Batch size at formation time: sequences gathered before the
@@ -800,17 +1051,30 @@ fn step_queue(q: &mut RunQueue<'_>, inflight: &mut BTreeMap<u64, Inflight>,
     // behind its weighted share it was when served).
     m.h_credit.observe(xq.credit(q.sched_id));
     let t0 = xq.now();
-    let finished = q.stepper.step();
+    let stepped = q.stepper.step();
     // Cost on the selector's injected clock (wall time in production,
     // virtual time under test) — the engine loop has no raw Instant.
     let cost = xq.now() - t0;
     m.h_step.observe(cost);
+    m.c_steps.inc();
     if let Some(tr) = trace {
         let _ = tr.send(TraceEvent::Step {
             model: xq.key_of(q.sched_id).to_string(),
             cost_s: cost,
         });
     }
+    let finished = match stepped {
+        Ok(finished) => finished,
+        Err(e) => {
+            // Charge the failed step's cost so the entitlement ledger
+            // stays consistent, then hand the error up. Placements the
+            // failed step already made stay undrained here: a retry's
+            // next successful step (or the quarantine path) drains them
+            // and pops their arrival stamps.
+            xq.report_step_phases(q.sched_id, cost, &StepPhases::default());
+            return Err(e);
+        }
+    };
     // Step-cost feedback, now per-phase: the weighted selector charges
     // this queue for the total service it just consumed and retains the
     // model/draw/LSE/accept split; the same split is exported as
@@ -827,24 +1091,77 @@ fn step_queue(q: &mut RunQueue<'_>, inflight: &mut BTreeMap<u64, Inflight>,
     // are visible under load. Placement is the first thing step() does
     // (backfill precedes the forward pass), so the pre-step reading `t0`
     // is the placement instant — using now() here would bill the whole
-    // first step as wait. Stamps are popped per *request tag* (the rid
-    // each placed slot routes to): priority classes let a later
-    // high-priority request's sequences enter slots before an earlier
-    // low-priority request's, so placement order within a run queue no
-    // longer follows admission order across requests — a plain lane-FIFO
-    // pop would hand the overtaker the overtaken request's older stamp,
-    // corrupting queue_wait_s and the SLO EWMA/violations (and thus the
-    // preemption trigger). Within one request placements stay
-    // admission-ordered, so oldest-of-tag pairs each wait exactly.
+    // first step as wait.
     let placed = q.stepper.take_placements();
+    observe_placements(q, &placed, xq, m, t0);
+    m.h_occupancy.observe(q.stepper.n_active() as f64);
+    m.h_pending.observe(q.stepper.n_pending() as f64);
+    m.c_backfills.add(q.stepper.backfills() - backfills_before);
+    // Resumed checkpoints re-entering slots this step. Their queue wait
+    // was observed at the original placement, so `take_placements`
+    // (above) deliberately excluded them — `queue_wait_s` pairs each
+    // sequence with exactly one wait even across a park/resume cycle.
+    m.c_resume.add(q.stepper.resumes() - resumes_before);
+
+    for (sid, sample) in finished {
+        // Routing desyncs would be engine bugs; a panic here would tear
+        // down every in-flight request, so degrade to dropping the one
+        // sample instead (debug builds still assert).
+        let Some((rid, idx)) = q.routes.remove(&sid) else {
+            debug_assert!(false, "finished slot is not routed");
+            continue;
+        };
+        let completed = {
+            let Some(inf) = inflight.get_mut(&rid) else {
+                debug_assert!(false, "routed request is not in flight");
+                continue;
+            };
+            m.h_nfe.observe(sample.nfe);
+            inf.got[idx] = Some(sample);
+            inf.remaining -= 1;
+            inf.remaining == 0
+        };
+        if completed {
+            let Some(inf) = inflight.remove(&rid) else { continue };
+            let wall = inf.enqueued.elapsed().as_secs_f64();
+            m.h_latency.observe(wall);
+            m.c_samples.add(inf.got.len() as u64);
+            // `remaining == 0` ⇒ every slot is Some; flatten rather than
+            // unwrap per-sample so a miscount cannot panic the engine.
+            let samples: Vec<Sample> =
+                inf.got.into_iter().flatten().collect();
+            inf.reply.send(Ok(GenResponse {
+                model: inf.model,
+                samples,
+                wall_s: wall,
+            }));
+        }
+    }
+    Ok(())
+}
+
+/// Pop lane-FIFO arrival stamps for freshly placed sequences, one
+/// queue-wait observation per sequence, grouped per *request tag* (the
+/// rid each placed slot routes to): priority classes let a later
+/// high-priority request's sequences enter slots before an earlier
+/// low-priority request's, so placement order within a run queue no
+/// longer follows admission order across requests — a plain lane-FIFO
+/// pop would hand the overtaker the overtaken request's older stamp,
+/// corrupting queue_wait_s and the SLO EWMA/violations (and thus the
+/// preemption trigger). Within one request placements stay
+/// admission-ordered, so oldest-of-tag pairs each wait exactly.
+fn observe_placements(q: &mut RunQueue<'_>, placed: &[SlotId],
+                      xq: &mut CrossQueueScheduler, m: &EngineMetrics,
+                      t0: f64) {
     let h_queue = &m.h_queue;
     let mut i = 0;
     while i < placed.len() {
-        let rid = q
-            .routes
-            .get(&placed[i])
-            .map(|&(rid, _)| rid)
-            .expect("placed slot is routed");
+        let Some(rid) = q.routes.get(&placed[i]).map(|&(rid, _)| rid)
+        else {
+            debug_assert!(false, "placed slot is not routed");
+            i += 1;
+            continue;
+        };
         let mut j = i + 1;
         while j < placed.len()
             && q.routes.get(&placed[j]).map(|&(r, _)| r) == Some(rid)
@@ -855,45 +1172,111 @@ fn step_queue(q: &mut RunQueue<'_>, inflight: &mut BTreeMap<u64, Inflight>,
                          |w| h_queue.observe(w));
         i = j;
     }
-    m.h_occupancy.observe(q.stepper.n_active() as f64);
-    m.h_pending.observe(q.stepper.n_pending() as f64);
-    m.c_backfills.add(q.stepper.backfills() - backfills_before);
-    // Resumed checkpoints re-entering slots this step. Their queue wait
-    // was observed at the original placement, so `take_placements`
-    // (above) deliberately excluded them — `queue_wait_s` pairs each
-    // sequence with exactly one wait even across a park/resume cycle.
-    m.c_resume.add(q.stepper.resumes() - resumes_before);
-    m.c_steps.inc();
+}
 
-    for (sid, sample) in finished {
-        let (rid, idx) =
-            q.routes.remove(&sid).expect("finished slot is routed");
-        let completed = {
-            let inf =
-                inflight.get_mut(&rid).expect("routed request in flight");
-            m.h_nfe.observe(sample.nfe);
-            inf.got[idx] = Some(sample);
-            inf.remaining -= 1;
-            inf.remaining == 0
-        };
-        if completed {
-            let inf = inflight.remove(&rid).unwrap();
-            let wall = inf.enqueued.elapsed().as_secs_f64();
-            m.h_latency.observe(wall);
-            m.c_samples.add(inf.got.len() as u64);
-            let samples: Vec<Sample> = inf
-                .got
-                .into_iter()
-                .map(|s| s.expect("request completed"))
-                .collect();
-            let _ = inf.reply.send(Ok(GenResponse {
-                model: inf.model,
-                samples,
-                wall_s: wall,
-            }));
+/// Quarantine a run queue after a definitive step failure: remove every
+/// resident and pending sequence and answer each routed request with an
+/// explicit error, exactly once. Only this queue is touched — surviving
+/// queues' token streams stay bitwise identical to a fault-free run.
+fn quarantine_queue(q: &mut RunQueue<'_>,
+                    inflight: &mut BTreeMap<u64, Inflight>,
+                    xq: &mut CrossQueueScheduler, m: &EngineMetrics,
+                    msg: &str) {
+    // Only ready queues are stepped, and ready requires no parked
+    // checkpoints — quarantine never has parked work to dispose of.
+    debug_assert!(q.parked.is_empty());
+    // The failed step's placements were never drained; pop their stamps
+    // first (placement did happen, the wait is real) so the selector's
+    // lane FIFO holds no entries for rids that will never place again.
+    let placed = q.stepper.take_placements();
+    let t_now = xq.now();
+    observe_placements(q, &placed, xq, m, t_now);
+    // Residents: evict and drop the checkpoints (their stamps were
+    // popped at placement).
+    while q.stepper.evict_lowest().is_some() {}
+    // Pending sequences never placed: their stamps are still queued in
+    // the selector — roll them back per request, as a shed does.
+    let mut unplaced: BTreeMap<u64, usize> = BTreeMap::new();
+    for sid in q.stepper.take_pending_ids() {
+        if let Some(&(rid, _)) = q.routes.get(&sid) {
+            *unplaced.entry(rid).or_insert(0) += 1;
         }
     }
+    for (&rid, &k) in unplaced.iter() {
+        xq.cancel_enqueue(q.sched_id, q.lane, rid, k);
+    }
+    // Answer every request routed through this queue, exactly once. The
+    // queue is idle afterwards, so the engine loop's retain drops it;
+    // a later request on the same batch key builds a fresh stepper.
+    let routed: BTreeSet<u64> = std::mem::take(&mut q.routes)
+        .into_values()
+        .map(|(rid, _)| rid)
+        .collect();
+    for rid in routed {
+        let Some(inf) = inflight.remove(&rid) else {
+            debug_assert!(false, "routed request is not in flight");
+            continue;
+        };
+        m.c_errors.inc();
+        inf.reply.send(Err(anyhow!(
+            "model '{}' failed while serving this request: {msg}",
+            inf.model
+        )));
+    }
 }
+
+/// Answer every in-flight request whose deadline has passed and remove
+/// its sequences wherever they sit: resident slots are evicted (the
+/// checkpoint dropped), pending sequences are removed with their arrival
+/// stamps rolled back, parked checkpoints are discarded.
+fn sweep_deadlines(queues: &mut Vec<RunQueue<'_>>,
+                   inflight: &mut BTreeMap<u64, Inflight>,
+                   xq: &mut CrossQueueScheduler, m: &EngineMetrics) {
+    let now = xq.now();
+    let expired: Vec<u64> = inflight
+        .iter()
+        .filter(|(_, inf)| inf.deadline.map(|d| now >= d).unwrap_or(false))
+        .map(|(&rid, _)| rid)
+        .collect();
+    for rid in expired {
+        for q in queues.iter_mut() {
+            let sids: Vec<SlotId> = q
+                .routes
+                .iter()
+                .filter(|&(_, &(r, _))| r == rid)
+                .map(|(&sid, _)| sid)
+                .collect();
+            if sids.is_empty() {
+                continue;
+            }
+            let mut unplaced = 0usize;
+            for &sid in &sids {
+                if q.stepper.evict(sid).is_some() {
+                    // Resident: stamp was popped at placement.
+                } else if q.stepper.remove_pending(sid) {
+                    unplaced += 1;
+                } else {
+                    // Parked mid-preemption: drop the checkpoint.
+                    q.parked.retain(|ck| ck.id() != sid);
+                }
+                q.routes.remove(&sid);
+            }
+            if unplaced > 0 {
+                xq.cancel_enqueue(q.sched_id, q.lane, rid, unplaced);
+            }
+        }
+        let Some(inf) = inflight.remove(&rid) else { continue };
+        m.c_deadline_sheds.inc();
+        m.c_errors.inc();
+        inf.reply.send(Err(anyhow!(
+            "model '{}' request exceeded its deadline after {:.3}s\
+             {DEADLINE_ERROR_SUFFIX}",
+            inf.model,
+            inf.enqueued.elapsed().as_secs_f64()
+        )));
+    }
+}
+// lint: end-serve-region
 
 fn run_score(models: &ModelMap, req: &ScoreRequest, rng: &mut Pcg)
              -> Result<ScoreResponse> {
@@ -1202,7 +1585,9 @@ mod tests {
         }
         let counters = snap.get("counters").unwrap();
         for key in ["slo_violations", "shed_requests", "shed_seqs",
-                    "preemptions", "resume_steps", "preempt_fires"] {
+                    "preemptions", "resume_steps", "preempt_fires",
+                    "engine_faults", "retries", "deadline_sheds",
+                    "breaker_state"] {
             assert!(counters.get(key).and_then(|c| c.as_f64()).is_some(),
                     "missing counter {key}");
         }
@@ -1487,5 +1872,238 @@ mod tests {
         }
         weighted.shutdown();
         plain.shutdown();
+    }
+
+    /// Mock two-model coordinator with a `--fault-plan`-style spec.
+    fn chaos_coordinator(faults: &str, sched: SchedConfig) -> Coordinator {
+        Coordinator::start(
+            || {
+                let mut m: ModelMap = BTreeMap::new();
+                m.insert(
+                    "mock".into(),
+                    Box::new(MockModel::new(8, 4, 5)) as Box<dyn EngineModel>,
+                );
+                let mut tiny = MockModel::new(8, 4, 5);
+                tiny.buckets = vec![1, 2, 4];
+                m.insert("tiny".into(),
+                         Box::new(tiny) as Box<dyn EngineModel>);
+                Ok(m)
+            },
+            BatcherConfig {
+                max_wait: Duration::from_millis(1),
+                sched,
+                faults: crate::engine::fault::parse_fault_cli(faults)
+                    .unwrap(),
+                ..Default::default()
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn transient_fault_retries_and_succeeds() {
+        let mut sched = SchedConfig::default();
+        sched.supervise.backoff_s = 0.001;
+        let c = chaos_coordinator("mock=err@1", sched);
+        let resp = c
+            .generate(GenRequest {
+                model: "mock".into(),
+                n_samples: 2,
+                ..Default::default()
+            })
+            .unwrap();
+        assert_eq!(resp.samples.len(), 2);
+        assert!(c.metrics.counter("retries").get() >= 1,
+                "transient fault must be retried");
+        assert_eq!(c.metrics.counter("engine_faults").get(), 0,
+                   "a recovered burst is not a definitive fault");
+        c.shutdown();
+    }
+
+    #[test]
+    fn fatal_fault_quarantines_only_its_queue() {
+        // A fault-free reference run for the surviving request.
+        let det = GenRequest {
+            model: "mock".into(),
+            n_samples: 2,
+            seed: 77,
+            deterministic: true,
+            ..Default::default()
+        };
+        let clean = mock_coordinator();
+        let want = clean.generate(det.clone()).unwrap();
+        clean.shutdown();
+
+        // tiny's first step dies fatally; mock shares the engine thread.
+        let c = chaos_coordinator("tiny=panic@1", SchedConfig::default());
+        let cc = c.clone();
+        let doomed = std::thread::spawn(move || {
+            cc.generate(GenRequest {
+                model: "tiny".into(),
+                n_samples: 2,
+                ..Default::default()
+            })
+        });
+        let got = c.generate(det).unwrap();
+        let err = doomed.join().unwrap().unwrap_err();
+        assert!(err.to_string().contains("failed while serving"), "{err}");
+        assert!(c.metrics.counter("engine_faults").get() >= 1);
+        // The surviving request's token streams are bitwise identical
+        // to the fault-free run — quarantine touched one queue only.
+        assert_eq!(want.samples.len(), got.samples.len());
+        for (x, y) in want.samples.iter().zip(&got.samples) {
+            assert_eq!(x.tokens, y.tokens);
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn breaker_trips_fast_fails_and_reports_health() {
+        let mut sched = SchedConfig::default();
+        sched.supervise.breaker_threshold = 1;
+        sched.supervise.breaker_cooldown_s = 100.0;
+        let c = chaos_coordinator("tiny=panic@1", sched);
+        let err = c
+            .generate(GenRequest {
+                model: "tiny".into(),
+                n_samples: 1,
+                ..Default::default()
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("failed while serving"), "{err}");
+        // Breaker open: new admits fail fast with the 503 suffix and a
+        // retry hint, without touching the engine's queues.
+        let err = c
+            .generate(GenRequest {
+                model: "tiny".into(),
+                n_samples: 1,
+                ..Default::default()
+            })
+            .unwrap_err();
+        assert!(err.to_string().ends_with(BREAKER_ERROR_SUFFIX), "{err}");
+        assert!(err.to_string().contains("retry after"), "{err}");
+        // /healthz degrades: overall not ok, per-model states reported.
+        let h = c.health().unwrap();
+        assert_eq!(h.get("ok").and_then(|b| b.as_bool()), Some(false));
+        let models = h.get("models").unwrap();
+        assert_eq!(models.get("tiny").and_then(|s| s.as_str()),
+                   Some("open"));
+        assert_eq!(models.get("mock").and_then(|s| s.as_str()),
+                   Some("closed"));
+        // Healthy models keep serving while tiny's breaker is open.
+        let ok = c
+            .generate(GenRequest {
+                model: "mock".into(),
+                n_samples: 1,
+                ..Default::default()
+            })
+            .unwrap();
+        assert_eq!(ok.samples.len(), 1);
+        c.shutdown();
+    }
+
+    #[test]
+    fn deadline_expiry_answers_with_deadline_error() {
+        // tiny's first step stalls 300ms; the request's 100ms deadline
+        // expires mid-flight, so the between-steps sweep answers it.
+        // Constant(1) windows on D=8 guarantee the stalled step cannot
+        // finish the sequences first.
+        let c =
+            chaos_coordinator("tiny=stall@1:0.3", SchedConfig::default());
+        let err = c
+            .generate(GenRequest {
+                model: "tiny".into(),
+                n_samples: 2,
+                sampler: SamplerChoice::Speculative(SpecParams {
+                    window: crate::engine::Window::Constant(1),
+                    ..Default::default()
+                }),
+                deadline_ms: Some(100),
+                ..Default::default()
+            })
+            .unwrap_err();
+        assert!(err.to_string().ends_with(DEADLINE_ERROR_SUFFIX), "{err}");
+        assert_eq!(c.metrics.counter("deadline_sheds").get(), 1);
+        assert_eq!(c.metrics.counter("shed_requests").get(), 0,
+                   "deadline sheds are not backpressure sheds");
+        c.shutdown();
+    }
+
+    /// Engine model whose stepper construction panics — an uncontained
+    /// admission-path crash that kills the whole engine thread.
+    struct PanickingModel;
+
+    impl EngineModel for PanickingModel {
+        fn seq_len(&self) -> usize {
+            8
+        }
+        fn vocab(&self) -> usize {
+            4
+        }
+        fn has_verify(&self) -> bool {
+            true
+        }
+        fn max_bucket(&self) -> usize {
+            4
+        }
+        fn info(&self) -> Json {
+            Json::obj(vec![])
+        }
+        fn sample(&self, _: &[Prompt], _: &SamplerChoice, _: &mut Pcg)
+                  -> Result<Vec<Sample>> {
+            Err(anyhow!("unused"))
+        }
+        fn stepper<'a>(&'a self, _: &SamplerChoice, _: Arc<StepPool>)
+                       -> Result<Box<dyn Stepper + 'a>> {
+            panic!("injected: stepper construction exploded")
+        }
+        fn log_likelihood(&self, _: &[i32], _: &[i32]) -> Result<f64> {
+            Err(anyhow!("unused"))
+        }
+        fn rejection_posterior(&self, _: &[i32], _: &[i32])
+                               -> Result<Vec<f64>> {
+            Err(anyhow!("unused"))
+        }
+    }
+
+    /// The orphaned-client pin: an engine thread dying with a request in
+    /// flight must surface as an explicit `Err` from `generate()` (the
+    /// responder guard fires during unwind) — never a hang — and later
+    /// requests must see the dead engine as an error too.
+    #[test]
+    fn engine_death_answers_inflight_with_error() {
+        let c = Coordinator::start(
+            || {
+                let mut m: ModelMap = BTreeMap::new();
+                m.insert("bad".into(),
+                         Box::new(PanickingModel) as Box<dyn EngineModel>);
+                Ok(m)
+            },
+            BatcherConfig {
+                max_wait: Duration::from_millis(1),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let err = c
+            .generate(GenRequest {
+                model: "bad".into(),
+                n_samples: 1,
+                ..Default::default()
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("engine teardown"), "{err}");
+        let err = c
+            .generate(GenRequest {
+                model: "bad".into(),
+                n_samples: 1,
+                ..Default::default()
+            })
+            .unwrap_err();
+        assert!(
+            err.to_string().contains("engine thread gone")
+                || err.to_string().contains("engine dropped reply"),
+            "{err}"
+        );
     }
 }

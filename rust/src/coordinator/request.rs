@@ -50,6 +50,12 @@ pub struct GenRequest {
     /// governed by `QueuePolicy` weights. `None` takes the server's
     /// `--default-priority`.
     pub priority: Option<i32>,
+    /// Request deadline in milliseconds, measured from the caller-side
+    /// enqueue instant. Enforced at admission, lazily in pending queues,
+    /// and between engine steps; an expired request is answered with a
+    /// deadline error (HTTP 504) and counted in `deadline_sheds`. `None`
+    /// takes the server's `--deadline-ms` default (possibly none).
+    pub deadline_ms: Option<u64>,
 }
 
 impl Default for GenRequest {
@@ -62,6 +68,7 @@ impl Default for GenRequest {
             seed: 0,
             deterministic: false,
             priority: None,
+            deadline_ms: None,
         }
     }
 }
@@ -187,6 +194,34 @@ impl GenRequest {
             }
             _ => return Err("prompt must be an object".into()),
         };
+        // Range-validate client-facing knobs here so bad values are a
+        // parse error (HTTP 400), not engine behavior.
+        let priority = match v.get("priority") {
+            None | Some(Json::Null) => None,
+            Some(p) => {
+                let p = p.as_f64().ok_or("bad 'priority'")?;
+                if p.fract() != 0.0 || !(-1000.0..=1000.0).contains(&p) {
+                    return Err(format!(
+                        "priority {p} out of range [-1000, 1000]"
+                    ));
+                }
+                Some(p as i32)
+            }
+        };
+        let deadline_ms = match v.get("deadline_ms") {
+            None | Some(Json::Null) => None,
+            Some(d) => {
+                let d = d.as_f64().ok_or("bad 'deadline_ms'")?;
+                // Bounded above by a day: effectively-infinite deadlines
+                // should be expressed by omitting the field.
+                if d.fract() != 0.0 || d < 1.0 || d > 86_400_000.0 {
+                    return Err(format!(
+                        "deadline_ms {d} out of range [1, 86400000]"
+                    ));
+                }
+                Some(d as u64)
+            }
+        };
         Ok(GenRequest {
             model,
             n_samples,
@@ -198,10 +233,8 @@ impl GenRequest {
                 .get("deterministic")
                 .and_then(|d| d.as_bool())
                 .unwrap_or(false),
-            priority: v
-                .get("priority")
-                .and_then(|p| p.as_f64())
-                .map(|p| p as i32),
+            priority,
+            deadline_ms,
         })
     }
 }
@@ -329,10 +362,33 @@ mod tests {
             r#"{"model":"m","sampler":"bogus"}"#,
             r#"{"model":"m","window":"wat"}"#,
             r#"{"model":"m","prompt":{"0":1}}"#,
+            r#"{"model":"m","priority":1001}"#,
+            r#"{"model":"m","priority":-1001}"#,
+            r#"{"model":"m","priority":"high"}"#,
+            r#"{"model":"m","priority":0.5}"#,
+            r#"{"model":"m","deadline_ms":0}"#,
+            r#"{"model":"m","deadline_ms":-5}"#,
+            r#"{"model":"m","deadline_ms":86400001}"#,
+            r#"{"model":"m","deadline_ms":"soon"}"#,
         ] {
             let v = Json::parse(s).unwrap();
             assert!(GenRequest::from_json(&v).is_err(), "{s}");
         }
+    }
+
+    #[test]
+    fn deadline_parses_and_does_not_split_batch_keys() {
+        let v = Json::parse(
+            r#"{"model":"owt","n":1,"deadline_ms":250}"#,
+        )
+        .unwrap();
+        let r = GenRequest::from_json(&v).unwrap();
+        assert_eq!(r.deadline_ms, Some(250));
+        // Deadlines shape shedding, not sampling: two requests that
+        // differ only in deadline must share a run queue.
+        let mut other = r.clone();
+        other.deadline_ms = None;
+        assert_eq!(r.batch_key(), other.batch_key());
     }
 
     #[test]

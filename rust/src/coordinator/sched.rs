@@ -218,6 +218,9 @@ pub struct SchedConfig {
     /// [`CrossQueueScheduler::preempt_check`] names a victim. CLI:
     /// `--preempt-after N`.
     pub preempt_after: u64,
+    /// Retry / circuit-breaker policy of the engine's supervision layer
+    /// (see `coordinator::supervise`).
+    pub supervise: crate::coordinator::supervise::SupervisePolicy,
     /// Priority class assigned to requests that don't carry one
     /// (higher = served earlier within a queue). CLI:
     /// `--default-priority N`.
@@ -234,6 +237,8 @@ impl Default for SchedConfig {
             max_boost: 8.0,
             step_threads: 1,
             preempt_after: 4,
+            supervise:
+                crate::coordinator::supervise::SupervisePolicy::default(),
             default_priority: 0,
         }
     }

@@ -1,0 +1,221 @@
+//! Engine supervision policy: bounded retries with Clock-driven backoff
+//! and a per-model circuit breaker.
+//!
+//! Pure state machines — no threads, no wall clock. Every transition is
+//! driven by an explicit `now: f64` argument read from the caller's
+//! injected `Clock`, so the virtual-time chaos sim replays supervision
+//! decisions (backoff windows, breaker cooldowns) deterministically.
+//!
+//! Semantics (README §"Failure semantics"):
+//! * A **transient** step failure retries after `backoff_s · mult^(k-1)`
+//!   seconds (k = 1-based retry index), at most `max_retries` times per
+//!   failure burst; a successful step resets the burst.
+//! * A **fatal** failure, or a burst exhausting its retries, quarantines
+//!   the run queue and records one failure on the model's breaker.
+//! * `breaker_threshold` consecutive failures open the breaker: new
+//!   admissions for that model fail fast (503 at the HTTP layer) without
+//!   touching the engine. After `breaker_cooldown_s` the breaker
+//!   half-opens: the next admission goes through as a probe; a
+//!   subsequent engine success closes the breaker, another failure
+//!   re-opens it for a fresh cooldown.
+
+/// Supervision knobs, carried on `SchedConfig` so the engine loop, CLI,
+/// and sim all share one source of truth.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SupervisePolicy {
+    /// Retries per transient-failure burst before quarantining.
+    pub max_retries: u32,
+    /// Base backoff before the first retry, seconds.
+    pub backoff_s: f64,
+    /// Multiplier on each subsequent retry's backoff.
+    pub backoff_mult: f64,
+    /// Consecutive model failures that open the breaker.
+    pub breaker_threshold: u32,
+    /// Seconds an open breaker waits before half-opening.
+    pub breaker_cooldown_s: f64,
+}
+
+impl Default for SupervisePolicy {
+    fn default() -> Self {
+        SupervisePolicy {
+            max_retries: 2,
+            backoff_s: 0.05,
+            backoff_mult: 2.0,
+            breaker_threshold: 3,
+            breaker_cooldown_s: 1.0,
+        }
+    }
+}
+
+impl SupervisePolicy {
+    /// Backoff before retry `k` (1-based) of a burst.
+    pub fn backoff_for(&self, k: u32) -> f64 {
+        self.backoff_s * self.backoff_mult.powi(k.saturating_sub(1) as i32)
+    }
+}
+
+/// Externally-observable breaker state (exported via `/healthz`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Healthy: admissions flow.
+    Closed,
+    /// Tripped: admissions fail fast until the cooldown elapses.
+    Open,
+    /// Cooldown elapsed: admissions probe the engine; the next recorded
+    /// success closes, the next failure re-opens.
+    HalfOpen,
+}
+
+impl BreakerState {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BreakerState::Closed => "closed",
+            BreakerState::Open => "open",
+            BreakerState::HalfOpen => "half-open",
+        }
+    }
+}
+
+/// Per-model circuit breaker. Time never advances internally: `state`
+/// derives Open vs HalfOpen lazily from `now`, so an idle breaker
+/// half-opens exactly when the next admission looks at it.
+#[derive(Clone, Debug)]
+pub struct Breaker {
+    threshold: u32,
+    cooldown_s: f64,
+    consecutive_failures: u32,
+    /// Set when the breaker trips; `None` while closed.
+    opened_at: Option<f64>,
+}
+
+impl Breaker {
+    pub fn new(policy: &SupervisePolicy) -> Breaker {
+        Breaker {
+            threshold: policy.breaker_threshold.max(1),
+            cooldown_s: policy.breaker_cooldown_s,
+            consecutive_failures: 0,
+            opened_at: None,
+        }
+    }
+
+    pub fn state(&self, now: f64) -> BreakerState {
+        match self.opened_at {
+            None => BreakerState::Closed,
+            Some(t) if now - t >= self.cooldown_s => BreakerState::HalfOpen,
+            Some(_) => BreakerState::Open,
+        }
+    }
+
+    /// Whether a new admission may proceed at `now` (Closed, or a
+    /// HalfOpen probe).
+    pub fn admit_allowed(&self, now: f64) -> bool {
+        self.state(now) != BreakerState::Open
+    }
+
+    /// Seconds until the breaker half-opens (`Retry-After` hint); 0 when
+    /// not Open.
+    pub fn retry_after_s(&self, now: f64) -> f64 {
+        match self.opened_at {
+            Some(t) if self.state(now) == BreakerState::Open => {
+                (t + self.cooldown_s - now).max(0.0)
+            }
+            _ => 0.0,
+        }
+    }
+
+    /// Record a definitive model failure (fatal step, or a transient
+    /// burst that exhausted its retries).
+    pub fn record_failure(&mut self, now: f64) {
+        match self.state(now) {
+            // A half-open probe failing re-opens for a fresh cooldown.
+            BreakerState::HalfOpen => self.opened_at = Some(now),
+            BreakerState::Open => {}
+            BreakerState::Closed => {
+                self.consecutive_failures += 1;
+                if self.consecutive_failures >= self.threshold {
+                    self.opened_at = Some(now);
+                }
+            }
+        }
+    }
+
+    /// Record a successful engine step for this model.
+    pub fn record_success(&mut self, now: f64) {
+        // A success while Open can only come from work admitted before
+        // the trip; it proves the model lives, so close either way.
+        let _ = now;
+        self.consecutive_failures = 0;
+        self.opened_at = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> SupervisePolicy {
+        SupervisePolicy {
+            max_retries: 2,
+            backoff_s: 0.1,
+            backoff_mult: 2.0,
+            breaker_threshold: 3,
+            breaker_cooldown_s: 5.0,
+        }
+    }
+
+    #[test]
+    fn backoff_grows_geometrically() {
+        let p = policy();
+        assert!((p.backoff_for(1) - 0.1).abs() < 1e-12);
+        assert!((p.backoff_for(2) - 0.2).abs() < 1e-12);
+        assert!((p.backoff_for(3) - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn breaker_opens_after_threshold_and_half_opens_after_cooldown() {
+        let mut b = Breaker::new(&policy());
+        assert_eq!(b.state(0.0), BreakerState::Closed);
+        b.record_failure(1.0);
+        b.record_failure(2.0);
+        assert_eq!(b.state(2.0), BreakerState::Closed);
+        assert!(b.admit_allowed(2.0));
+        b.record_failure(3.0);
+        assert_eq!(b.state(3.0), BreakerState::Open);
+        assert!(!b.admit_allowed(3.0));
+        assert!((b.retry_after_s(4.0) - 4.0).abs() < 1e-12);
+        // Cooldown elapses lazily: same breaker, later clock.
+        assert_eq!(b.state(8.0), BreakerState::HalfOpen);
+        assert!(b.admit_allowed(8.0));
+        assert_eq!(b.retry_after_s(8.0), 0.0);
+    }
+
+    #[test]
+    fn half_open_probe_outcome_closes_or_reopens() {
+        let mut b = Breaker::new(&policy());
+        for t in 0..3 {
+            b.record_failure(t as f64);
+        }
+        assert_eq!(b.state(10.0), BreakerState::HalfOpen);
+        // Probe fails: re-open with a fresh cooldown window.
+        b.record_failure(10.0);
+        assert_eq!(b.state(11.0), BreakerState::Open);
+        assert_eq!(b.state(15.0), BreakerState::HalfOpen);
+        // Probe succeeds: fully closed, failure count reset.
+        b.record_success(15.0);
+        assert_eq!(b.state(15.0), BreakerState::Closed);
+        b.record_failure(16.0);
+        assert_eq!(b.state(16.0), BreakerState::Closed,
+                   "one failure after close must not trip");
+    }
+
+    #[test]
+    fn success_resets_consecutive_failures() {
+        let mut b = Breaker::new(&policy());
+        b.record_failure(0.0);
+        b.record_failure(1.0);
+        b.record_success(2.0);
+        b.record_failure(3.0);
+        b.record_failure(4.0);
+        assert_eq!(b.state(4.0), BreakerState::Closed);
+    }
+}

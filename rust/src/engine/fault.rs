@@ -1,0 +1,450 @@
+//! Deterministic fault injection (the chaos layer's only fault source).
+//!
+//! A [`FaultPlan`] scripts *when* a wrapped component misbehaves — panic,
+//! transient error, or injected latency — strictly by a monotone counter,
+//! never by wall time or OS entropy, so every chaos run replays
+//! bit-for-bit (the same clock/rng discipline repolint enforces on the
+//! scheduler; see README §"Correctness tooling" and §"Failure semantics").
+//!
+//! Two injection seams share the plan machinery:
+//! * [`FaultyModel`] wraps a [`HybridModel`] and fires on the Nth
+//!   draft/verify **model call**. Faults surface as real unwinds out of
+//!   the model boundary — exactly the shape a crashing PJRT backend has —
+//!   so `BoundStepper`'s `catch_unwind` containment is genuinely
+//!   exercised. Used by the chaos sim and engine/coordinator tests.
+//! * [`FaultyStepper`] wraps a run queue's boxed [`Stepper`] and fires on
+//!   the Nth **scheduler step**. This is the `BatcherConfig::faults` /
+//!   `--fault-plan` wiring: the engine cannot see through
+//!   `Box<dyn EngineModel>`, so panic faults here surface as an
+//!   already-classified [`StepError::Fatal`] rather than a genuine
+//!   unwind, and stalls block the engine thread for real wall time.
+
+use std::cell::Cell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use crate::engine::scheduler::{SeqCheckpoint, SlotId, StepError, StepPhases,
+                               StepResult, Stepper};
+use crate::engine::{HybridModel, Prompt};
+use crate::util::rng::Pcg;
+
+/// What a fault does when it fires.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultKind {
+    /// Simulated backend crash: a plain `panic!` unwind ([`FaultyModel`])
+    /// or a pre-classified [`StepError::Fatal`] ([`FaultyStepper`]).
+    Panic,
+    /// Transient backend error — retriable by the coordinator's
+    /// supervision policy.
+    Err,
+    /// Injected latency in seconds: the call still succeeds, but late.
+    Stall(f64),
+}
+
+/// One scripted fault: fires when the wrapped unit's counter reaches
+/// `at` (1-based; model calls for [`FaultyModel`], steps for
+/// [`FaultyStepper`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultSpec {
+    pub at: u64,
+    pub kind: FaultKind,
+}
+
+/// A deterministic fault script, replayable bit-for-bit.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Sorted by `at`. Multiple faults may share an index; the first
+    /// match wins (parse keeps input order within one index).
+    pub faults: Vec<FaultSpec>,
+}
+
+impl FaultPlan {
+    /// Parse `"panic@5,err@12,stall@20:0.5"`: comma-separated
+    /// `kind@index` entries, stalls carrying `:seconds`.
+    pub fn parse(s: &str) -> Result<FaultPlan, String> {
+        let mut faults = Vec::new();
+        for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (kind_s, rest) = part.split_once('@').ok_or_else(|| {
+                format!("fault '{part}': expected kind@index")
+            })?;
+            let (at_s, arg) = match rest.split_once(':') {
+                Some((a, b)) => (a, Some(b)),
+                None => (rest, None),
+            };
+            let at: u64 = at_s.trim().parse().map_err(|_| {
+                format!("fault '{part}': bad index '{at_s}'")
+            })?;
+            if at == 0 {
+                return Err(format!("fault '{part}': indices are 1-based"));
+            }
+            let kind = match (kind_s.trim(), arg) {
+                ("panic", None) => FaultKind::Panic,
+                ("err", None) => FaultKind::Err,
+                ("stall", Some(sec)) => {
+                    let s: f64 = sec.trim().parse().map_err(|_| {
+                        format!("fault '{part}': bad stall seconds '{sec}'")
+                    })?;
+                    if !s.is_finite() || s < 0.0 {
+                        return Err(format!(
+                            "fault '{part}': stall seconds must be finite \
+                             and >= 0"
+                        ));
+                    }
+                    FaultKind::Stall(s)
+                }
+                ("stall", None) => {
+                    return Err(format!(
+                        "fault '{part}': stall needs ':seconds'"
+                    ))
+                }
+                (k, _) => {
+                    return Err(format!(
+                        "fault '{part}': unknown kind '{k}' \
+                         (panic | err | stall)"
+                    ))
+                }
+            };
+            faults.push(FaultSpec { at, kind });
+        }
+        if faults.is_empty() {
+            return Err("empty fault plan".into());
+        }
+        faults.sort_by_key(|f| f.at);
+        Ok(FaultPlan { faults })
+    }
+
+    /// Inverse of [`FaultPlan::parse`] (trace-file round-trips).
+    pub fn format(&self) -> String {
+        self.faults
+            .iter()
+            .map(|f| match f.kind {
+                FaultKind::Panic => format!("panic@{}", f.at),
+                FaultKind::Err => format!("err@{}", f.at),
+                FaultKind::Stall(s) => format!("stall@{}:{}", f.at, s),
+            })
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+}
+
+/// Parse the CLI `--fault-plan` grammar: `;`-separated `model=plan`
+/// entries, e.g. `"mock=err@2,panic@5;tiny=stall@1:0.25"`.
+pub fn parse_fault_cli(spec: &str)
+                       -> Result<BTreeMap<String, FaultPlan>, String> {
+    let mut map = BTreeMap::new();
+    for entry in spec.split(';').map(str::trim).filter(|e| !e.is_empty()) {
+        let (model, plan) = entry.split_once('=').ok_or_else(|| {
+            format!("fault entry '{entry}': expected model=plan")
+        })?;
+        map.insert(model.trim().to_string(), FaultPlan::parse(plan)?);
+    }
+    if map.is_empty() {
+        return Err("empty fault plan spec".into());
+    }
+    Ok(map)
+}
+
+/// Panic payload tunneling a *transient* backend error through the
+/// infallible [`HybridModel`] interface. `BoundStepper::step` downcasts
+/// the caught payload: this type maps to [`StepError::Transient`]; any
+/// other payload is a genuine crash and maps to [`StepError::Fatal`].
+#[derive(Clone, Debug)]
+pub struct InjectedErr(pub String);
+
+/// Shared firing state for one wrapped component: the monotone counter
+/// plus stall seconds accrued but not yet observed. `Cell`-based so the
+/// `&self` model interface can advance it; single-threaded by design
+/// (each engine thread / sim owns its models outright).
+pub struct FaultState {
+    plan: FaultPlan,
+    count: Cell<u64>,
+    stalled: Cell<f64>,
+}
+
+impl FaultState {
+    pub fn new(plan: FaultPlan) -> FaultState {
+        FaultState { plan, count: Cell::new(0), stalled: Cell::new(0.0) }
+    }
+
+    /// Advance the counter and return the fault scheduled for this
+    /// count, if any. `Stall` faults additionally accrue their latency
+    /// into [`FaultState::take_stall`].
+    pub fn advance(&self) -> Option<FaultKind> {
+        let n = self.count.get() + 1;
+        self.count.set(n);
+        let hit =
+            self.plan.faults.iter().find(|f| f.at == n).map(|f| f.kind);
+        if let Some(FaultKind::Stall(s)) = hit {
+            self.stalled.set(self.stalled.get() + s);
+        }
+        hit
+    }
+
+    /// Calls/steps observed so far.
+    pub fn count(&self) -> u64 {
+        self.count.get()
+    }
+
+    /// Drain stall seconds accrued since the last call. The sim advances
+    /// its virtual clock by this; [`FaultyStepper`] instead sleeps as the
+    /// stall fires.
+    pub fn take_stall(&self) -> f64 {
+        let s = self.stalled.get();
+        self.stalled.set(0.0);
+        s
+    }
+}
+
+/// A [`HybridModel`] wrapper injecting the plan on the Nth draft/verify
+/// call. Deterministic: the counter is the only trigger, and the wrapped
+/// model's outputs are untouched on non-fault calls.
+pub struct FaultyModel<M: HybridModel> {
+    inner: M,
+    fault: Rc<FaultState>,
+}
+
+impl<M: HybridModel> FaultyModel<M> {
+    pub fn new(inner: M, plan: FaultPlan) -> FaultyModel<M> {
+        FaultyModel { inner, fault: Rc::new(FaultState::new(plan)) }
+    }
+
+    /// Handle to the shared firing state (the sim drains accrued stall
+    /// time out of it after each step).
+    pub fn fault_state(&self) -> Rc<FaultState> {
+        Rc::clone(&self.fault)
+    }
+
+    fn fire(&self) {
+        match self.fault.advance() {
+            Some(FaultKind::Panic) => panic!(
+                "injected fault: backend panic at model call {}",
+                self.fault.count()
+            ),
+            Some(FaultKind::Err) => {
+                std::panic::panic_any(InjectedErr(format!(
+                    "injected fault: transient backend error at model \
+                     call {}",
+                    self.fault.count()
+                )))
+            }
+            Some(FaultKind::Stall(_)) | None => {}
+        }
+    }
+}
+
+impl<M: HybridModel> HybridModel for FaultyModel<M> {
+    type State = M::State;
+
+    fn seq_len(&self) -> usize {
+        self.inner.seq_len()
+    }
+
+    fn vocab(&self) -> usize {
+        self.inner.vocab()
+    }
+
+    fn n_noncausal(&self) -> usize {
+        self.inner.n_noncausal()
+    }
+
+    fn n_causal(&self) -> usize {
+        self.inner.n_causal()
+    }
+
+    fn buckets(&self) -> Vec<usize> {
+        self.inner.buckets()
+    }
+
+    fn has_verify(&self) -> bool {
+        self.inner.has_verify()
+    }
+
+    fn draft(&self, tokens: &[i32], batch: usize)
+             -> (Self::State, Vec<f32>) {
+        self.fire();
+        self.inner.draft(tokens, batch)
+    }
+
+    fn verify(&self, state: &Self::State, tokens: &[i32], sigma: &[i32],
+              batch: usize) -> Vec<f32> {
+        self.fire();
+        self.inner.verify(state, tokens, sigma, batch)
+    }
+
+    fn draft_into(&self, tokens: &[i32], batch: usize,
+                  state: &mut Option<Self::State>, logits: &mut Vec<f32>) {
+        self.fire();
+        self.inner.draft_into(tokens, batch, state, logits)
+    }
+
+    fn verify_into(&self, state: &Self::State, tokens: &[i32],
+                   sigma: &[i32], batch: usize, logits: &mut Vec<f32>) {
+        self.fire();
+        self.inner.verify_into(state, tokens, sigma, batch, logits)
+    }
+}
+
+/// The `BatcherConfig::faults` seam: wraps a run queue's boxed
+/// [`Stepper`] and injects the plan at **step** granularity. Panic
+/// faults return a pre-classified [`StepError::Fatal`] (the genuine
+/// unwind path is exercised by [`FaultyModel`] under `BoundStepper`);
+/// stalls block for real wall time so `--fault-plan stall@…` exercises
+/// live deadline expiry.
+pub struct FaultyStepper<'m> {
+    inner: Box<dyn Stepper + 'm>,
+    fault: FaultState,
+}
+
+impl<'m> FaultyStepper<'m> {
+    pub fn new(inner: Box<dyn Stepper + 'm>, plan: FaultPlan)
+               -> FaultyStepper<'m> {
+        FaultyStepper { inner, fault: FaultState::new(plan) }
+    }
+}
+
+impl<'m> Stepper for FaultyStepper<'m> {
+    fn admit(&mut self, prompt: &Prompt, rng: Pcg) -> SlotId {
+        self.inner.admit(prompt, rng)
+    }
+
+    fn admit_prio(&mut self, prompt: &Prompt, rng: Pcg, priority: i32)
+                  -> SlotId {
+        self.inner.admit_prio(prompt, rng, priority)
+    }
+
+    fn step(&mut self) -> StepResult {
+        match self.fault.advance() {
+            Some(FaultKind::Panic) => {
+                return Err(StepError::Fatal(format!(
+                    "injected fault: backend panic at step {}",
+                    self.fault.count()
+                )))
+            }
+            Some(FaultKind::Err) => {
+                return Err(StepError::Transient(format!(
+                    "injected fault: transient backend error at step {}",
+                    self.fault.count()
+                )))
+            }
+            Some(FaultKind::Stall(_)) => {
+                let s = self.fault.take_stall();
+                // lint: allow(clock-discipline) — injected latency is
+                // wall latency by definition on the live engine thread;
+                // the sim stalls in virtual time via FaultyModel.
+                std::thread::sleep(std::time::Duration::from_secs_f64(s));
+            }
+            None => {}
+        }
+        self.inner.step()
+    }
+
+    fn n_active(&self) -> usize {
+        self.inner.n_active()
+    }
+
+    fn n_pending(&self) -> usize {
+        self.inner.n_pending()
+    }
+
+    fn is_idle(&self) -> bool {
+        self.inner.is_idle()
+    }
+
+    fn capacity(&self) -> usize {
+        self.inner.capacity()
+    }
+
+    fn steps(&self) -> u64 {
+        self.inner.steps()
+    }
+
+    fn backfills(&self) -> u64 {
+        self.inner.backfills()
+    }
+
+    fn evict(&mut self, id: SlotId) -> Option<SeqCheckpoint> {
+        self.inner.evict(id)
+    }
+
+    fn evict_lowest(&mut self) -> Option<SeqCheckpoint> {
+        self.inner.evict_lowest()
+    }
+
+    fn remove_pending(&mut self, id: SlotId) -> bool {
+        self.inner.remove_pending(id)
+    }
+
+    fn take_pending_ids(&mut self) -> Vec<SlotId> {
+        self.inner.take_pending_ids()
+    }
+
+    fn resume(&mut self, ck: SeqCheckpoint) {
+        self.inner.resume(ck)
+    }
+
+    fn evictions(&self) -> u64 {
+        self.inner.evictions()
+    }
+
+    fn resumes(&self) -> u64 {
+        self.inner.resumes()
+    }
+
+    fn take_placements(&mut self) -> Vec<SlotId> {
+        self.inner.take_placements()
+    }
+
+    fn take_phases(&mut self) -> StepPhases {
+        self.inner.take_phases()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_parses_and_round_trips() {
+        let p = FaultPlan::parse("err@12, panic@5,stall@20:0.5").unwrap();
+        assert_eq!(p.faults, vec![
+            FaultSpec { at: 5, kind: FaultKind::Panic },
+            FaultSpec { at: 12, kind: FaultKind::Err },
+            FaultSpec { at: 20, kind: FaultKind::Stall(0.5) },
+        ]);
+        assert_eq!(FaultPlan::parse(&p.format()).unwrap(), p);
+    }
+
+    #[test]
+    fn bad_plans_are_rejected() {
+        for bad in ["", "panic", "panic@0", "panic@x", "stall@3",
+                    "stall@3:nan", "stall@3:-1", "boom@2"] {
+            assert!(FaultPlan::parse(bad).is_err(), "accepted '{bad}'");
+        }
+    }
+
+    #[test]
+    fn cli_grammar_parses_per_model_plans() {
+        let m = parse_fault_cli("mock=err@2,panic@5; tiny=stall@1:0.25")
+            .unwrap();
+        assert_eq!(m.len(), 2);
+        assert_eq!(m["mock"].faults.len(), 2);
+        assert_eq!(m["tiny"].faults[0].kind, FaultKind::Stall(0.25));
+        assert!(parse_fault_cli("err@2").is_err(), "model= is required");
+        assert!(parse_fault_cli("").is_err());
+    }
+
+    #[test]
+    fn state_fires_deterministically_and_accrues_stalls() {
+        let st = FaultState::new(
+            FaultPlan::parse("err@2,stall@3:0.25,stall@4:0.5").unwrap(),
+        );
+        assert_eq!(st.advance(), None);
+        assert_eq!(st.advance(), Some(FaultKind::Err));
+        assert_eq!(st.advance(), Some(FaultKind::Stall(0.25)));
+        assert_eq!(st.advance(), Some(FaultKind::Stall(0.5)));
+        assert_eq!(st.advance(), None);
+        assert_eq!(st.count(), 5);
+        assert!((st.take_stall() - 0.75).abs() < 1e-12);
+        assert_eq!(st.take_stall(), 0.0);
+    }
+}

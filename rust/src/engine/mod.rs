@@ -5,6 +5,7 @@
 //! mock models without PJRT. The production implementation lives in
 //! `runtime::PjrtModel`.
 
+pub mod fault;
 pub mod kernels;
 pub mod mdm;
 pub mod mock;
@@ -17,12 +18,14 @@ pub mod softmax;
 pub mod speculative;
 pub mod window;
 
+pub use fault::{FaultKind, FaultPlan, FaultSpec, FaultyModel,
+                FaultyStepper, InjectedErr};
 pub use mdm::{mdm_sample, MdmParams};
 pub use mock::MockModel;
 pub use pool::{SharedSlice, StepPool};
 pub use scheduler::{pick_bucket, run_to_completion, BoundStepper,
                     SeqCheckpoint, SeqParams, SlotId, SpecScheduler,
-                    StepPhases, Stepper};
+                    StepError, StepPhases, StepResult, Stepper};
 pub use softmax::{log_softmax_row, softmax_row};
 pub use speculative::{speculative_sample, SpecParams, SpecStats};
 pub use window::Window;

@@ -556,6 +556,26 @@ impl SpecScheduler {
         self.enqueue_pending(slot);
     }
 
+    /// Remove a *pending* (not-yet-resident) sequence, dropping its
+    /// state. Returns `false` if `id` is not pending. Deadline expiry
+    /// uses this for sequences that never reached a slot; residents go
+    /// through [`SpecScheduler::evict`] instead.
+    pub fn remove_pending(&mut self, id: SlotId) -> bool {
+        match self.pending.iter().position(|s| s.id == id) {
+            Some(i) => {
+                self.pending.remove(i);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Drain the pending queue, returning the removed ids in queue
+    /// order (quarantine: the coordinator answers each one explicitly).
+    pub fn take_pending_ids(&mut self) -> Vec<SlotId> {
+        self.pending.drain(..).map(|s| s.id).collect()
+    }
+
     pub fn n_active(&self) -> usize {
         self.slots.iter().filter(|s| s.is_some()).count()
     }
@@ -1424,6 +1444,33 @@ pub fn pick_bucket(buckets: &[usize], n: usize) -> usize {
 // Object-safe stepping facade for the coordinator
 // ---------------------------------------------------------------------------
 
+/// Why a step failed. The coordinator's supervision policy keys off the
+/// variant: `Transient` is retriable, `Fatal` quarantines the queue.
+#[derive(Clone, Debug, PartialEq)]
+pub enum StepError {
+    /// The model call failed but unwound at a phase boundary where every
+    /// resident kernel still satisfies its between-step invariant (see
+    /// the safety argument on `BoundStepper::step`). Retrying the step
+    /// is valid; the retried queue's streams may consume later RNG
+    /// positions than a fault-free run, but other queues are untouched.
+    Transient(String),
+    /// The step unwound for an unclassified reason (a genuine panic).
+    /// The queue's state must be treated as torn: quarantine it, never
+    /// re-step it.
+    Fatal(String),
+}
+
+impl StepError {
+    pub fn message(&self) -> &str {
+        match self {
+            StepError::Transient(m) | StepError::Fatal(m) => m,
+        }
+    }
+}
+
+/// Outcome of one fallible scheduler step.
+pub type StepResult = Result<Vec<(SlotId, Sample)>, StepError>;
+
 /// What the coordinator's run queues drive: a scheduler bound to a model,
 /// with the `HybridModel::State` type erased so it can live behind
 /// `Box<dyn EngineModel>`.
@@ -1433,16 +1480,29 @@ pub trait Stepper {
     /// ordering; see [`SpecScheduler::admit_prio`]).
     fn admit_prio(&mut self, prompt: &Prompt, rng: Pcg, priority: i32)
                   -> SlotId;
-    fn step(&mut self) -> Vec<(SlotId, Sample)>;
+    /// Run one outer loop. Model-call unwinds are contained at this
+    /// boundary and classified as [`StepError`]; `Err` never leaves a
+    /// resident sequence half-stepped (see `BoundStepper::step`).
+    fn step(&mut self) -> StepResult;
     fn n_active(&self) -> usize;
     fn n_pending(&self) -> usize;
     fn is_idle(&self) -> bool;
     fn capacity(&self) -> usize;
     fn steps(&self) -> u64;
     fn backfills(&self) -> u64;
+    /// Evict one specific resident as a checkpoint (quarantine/deadline
+    /// paths); `None` if `id` is not resident. See
+    /// [`SpecScheduler::evict`].
+    fn evict(&mut self, id: SlotId) -> Option<SeqCheckpoint>;
     /// Evict the lowest-priority resident as a checkpoint (preemption);
     /// `None` when nothing is resident. See [`SpecScheduler::evict_lowest`].
     fn evict_lowest(&mut self) -> Option<SeqCheckpoint>;
+    /// Drop one pending sequence (deadline expiry before placement).
+    /// See [`SpecScheduler::remove_pending`].
+    fn remove_pending(&mut self, id: SlotId) -> bool;
+    /// Drain the pending queue (quarantine). See
+    /// [`SpecScheduler::take_pending_ids`].
+    fn take_pending_ids(&mut self) -> Vec<SlotId>;
     /// Re-admit an evicted checkpoint. See [`SpecScheduler::resume`].
     fn resume(&mut self, ck: SeqCheckpoint);
     /// Cumulative sequences evicted / resumed-into-slots counters.
@@ -1488,8 +1548,52 @@ impl<'m, M: HybridModel> Stepper for BoundStepper<'m, M> {
         self.sched.admit_prio(prompt, self.params.clone(), rng, priority)
     }
 
-    fn step(&mut self) -> Vec<(SlotId, Sample)> {
-        self.sched.step(self.model)
+    /// The containment boundary: every model call in the engine runs
+    /// under this `catch_unwind`, so a crashing backend kills one step
+    /// of one run queue, never the engine thread.
+    ///
+    /// Unwind-safety argument for the `AssertUnwindSafe` below — why no
+    /// torn state escapes the catch:
+    /// * The only unwind sources inside `SpecScheduler::step` are the
+    ///   `draft_into`/`verify_into` model calls, executed on this thread
+    ///   (the step pool runs only the pure kernel phases). A panic in
+    ///   the pure phases would be an engine bug; it is classified
+    ///   `Fatal` and the queue is quarantined, never re-stepped, so even
+    ///   then torn state is unreachable.
+    /// * Phases execute planar: every kernel-mutating phase (draw,
+    ///   accept) runs to completion across all rows before the next
+    ///   model call begins. At any model-call unwind point the resident
+    ///   kernels therefore satisfy their between-step invariant.
+    /// * All per-step buffers (tokens, logits, sigma, proposals) live in
+    ///   the `StepArena` and are rebuilt from kernel state at the top of
+    ///   every step, so partially-written scratch never feeds a retry.
+    /// * The only state a `Transient` retry observes from the failed
+    ///   attempt is per-sequence RNG streams advanced past draws whose
+    ///   proposals died with the arena: later stream positions, same
+    ///   distribution, other queues untouched.
+    fn step(&mut self) -> StepResult {
+        let model = self.model;
+        let sched = &mut self.sched;
+        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            sched.step(model)
+        })) {
+            Ok(finished) => Ok(finished),
+            Err(payload) => {
+                if let Some(e) =
+                    payload.downcast_ref::<crate::engine::InjectedErr>()
+                {
+                    Err(StepError::Transient(e.0.clone()))
+                } else if let Some(m) = payload.downcast_ref::<&str>() {
+                    Err(StepError::Fatal(format!("model panicked: {m}")))
+                } else if let Some(m) = payload.downcast_ref::<String>() {
+                    Err(StepError::Fatal(format!("model panicked: {m}")))
+                } else {
+                    Err(StepError::Fatal(
+                        "model panicked: <non-string payload>".into(),
+                    ))
+                }
+            }
+        }
     }
 
     fn n_active(&self) -> usize {
@@ -1516,8 +1620,20 @@ impl<'m, M: HybridModel> Stepper for BoundStepper<'m, M> {
         self.sched.backfills()
     }
 
+    fn evict(&mut self, id: SlotId) -> Option<SeqCheckpoint> {
+        self.sched.evict(id)
+    }
+
     fn evict_lowest(&mut self) -> Option<SeqCheckpoint> {
         self.sched.evict_lowest()
+    }
+
+    fn remove_pending(&mut self, id: SlotId) -> bool {
+        self.sched.remove_pending(id)
+    }
+
+    fn take_pending_ids(&mut self) -> Vec<SlotId> {
+        self.sched.take_pending_ids()
     }
 
     fn resume(&mut self, ck: SeqCheckpoint) {

@@ -1,0 +1,18 @@
+//! Fixture: `serve-no-unwrap` must fire on every panicking extractor
+//! inside a `lint: serve-region` fence (3 hits below) and stay silent
+//! on the same spellings outside the fence.
+
+fn outside_the_fence() {
+    let x: Option<u32> = Some(1);
+    let _ = x.unwrap(); // not fenced: silent
+}
+
+// lint: serve-region — fixture fence
+fn handle(req: Option<&str>) -> usize {
+    let body = req.unwrap(); // MISSING
+    let parsed: Result<usize, ()> = Ok(body.len());
+    let n = parsed.expect("fixture"); // MISSING
+    let m: Option<usize> = Some(n);
+    m.unwrap() // MISSING
+}
+// lint: end-serve-region

@@ -1,0 +1,21 @@
+//! Fixture: fenced request-handling code that answers errors instead of
+//! panicking must be silent — including the `unwrap_or*` family, whose
+//! names merely contain "unwrap", and an allow-annotated site whose
+//! infallibility invariant is written out.
+
+// lint: serve-region — fixture fence
+fn handle(req: Option<&str>) -> usize {
+    let body = req.unwrap_or("");
+    let n: Option<usize> = Some(body.len());
+    let n = n.unwrap_or_else(|| 0);
+    match Some(n) {
+        Some(v) => v,
+        None => 0,
+    }
+}
+
+fn fixed_point(x: Option<u32>) -> u32 {
+    // lint: allow(serve-no-unwrap) — fixture: caller guarantees Some
+    x.unwrap()
+}
+// lint: end-serve-region

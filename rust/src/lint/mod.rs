@@ -20,6 +20,10 @@
 //!   unknown rule, or matching no diagnostic is itself a diagnostic.
 //! * `// lint: hot-region` … `// lint: end-hot-region` — fence a region
 //!   for the `warm-alloc` rule (allocation constructors banned inside).
+//! * `// lint: serve-region` … `// lint: end-serve-region` — fence a
+//!   request-handling region for the `serve-no-unwrap` rule (panicking
+//!   extractors banned inside; the rule runs only under
+//!   `src/coordinator/` and `src/server/`).
 //!
 //! Run as `cargo run --bin repolint` (exit 0 = clean); the meta-test in
 //! this module keeps the live tree clean under plain `cargo test`.
@@ -69,6 +73,8 @@ pub struct FileCtx {
     pub code: Vec<Tok>,
     /// Inclusive line spans fenced by `lint: hot-region` markers.
     pub hot_regions: Vec<(u32, u32)>,
+    /// Inclusive line spans fenced by `lint: serve-region` markers.
+    pub serve_regions: Vec<(u32, u32)>,
     /// All tokens (comments included), for same-line comment scans.
     toks: Vec<Tok>,
     /// 1-based; true if any non-comment token touches the line.
@@ -103,6 +109,10 @@ impl FileCtx {
 
     pub fn in_hot_region(&self, line: u32) -> bool {
         self.hot_regions.iter().any(|&(a, b)| a <= line && line <= b)
+    }
+
+    pub fn in_serve_region(&self, line: u32) -> bool {
+        self.serve_regions.iter().any(|&(a, b)| a <= line && line <= b)
     }
 }
 
@@ -153,6 +163,8 @@ pub fn check_source(path: &str, src: &str) -> FileOutcome {
     let mut allows: Vec<AllowEntry> = Vec::new();
     let mut hot_regions = Vec::new();
     let mut open_hot: Option<u32> = None;
+    let mut serve_regions = Vec::new();
+    let mut open_serve: Option<u32> = None;
 
     // ---- parse `lint:` directives out of the comments ----------------
     for t in toks.iter().filter(|t| t.is_comment()) {
@@ -227,6 +239,26 @@ pub fn check_source(path: &str, src: &str) -> FileOutcome {
             } else {
                 open_hot = Some(t.line);
             }
+        // `end-serve-region` must be tested before `serve-region` —
+        // the latter is a prefix of the former.
+        } else if rest.starts_with("end-serve-region") {
+            match open_serve.take() {
+                Some(open) => serve_regions.push((open, t.line)),
+                None => diags.push(directive_diag(
+                    path, t.line,
+                    "lint: end-serve-region without an open serve-region",
+                )),
+            }
+        } else if rest.starts_with("serve-region") {
+            if open_serve.is_some() {
+                diags.push(directive_diag(
+                    path, t.line,
+                    "nested lint: serve-region (close the previous fence \
+                     first)",
+                ));
+            } else {
+                open_serve = Some(t.line);
+            }
         } else {
             diags.push(directive_diag(
                 path, t.line,
@@ -240,11 +272,18 @@ pub fn check_source(path: &str, src: &str) -> FileOutcome {
             "lint: hot-region never closed (missing end-hot-region)",
         ));
     }
+    if let Some(open) = open_serve {
+        diags.push(directive_diag(
+            path, open,
+            "lint: serve-region never closed (missing end-serve-region)",
+        ));
+    }
 
     let ctx = FileCtx {
         path: path.to_string(),
         code: toks.iter().filter(|t| !t.is_comment()).cloned().collect(),
         hot_regions,
+        serve_regions,
         toks,
         line_code,
         line_attr,
@@ -454,6 +493,39 @@ mod tests {
         let good = include_str!("fixtures/det_iteration_good.rs");
         let d = diags_of("rust/src/engine/fx.rs", good);
         assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn serve_no_unwrap_fixtures() {
+        let bad = include_str!("fixtures/serve_no_unwrap_bad.rs");
+        let d = diags_of("rust/src/coordinator/fx.rs", bad);
+        let hits =
+            d.iter().filter(|d| d.rule == "serve-no-unwrap").count();
+        assert_eq!(hits, 3,
+                   "unwrap + expect + unwrap, fenced sites only: {d:?}");
+
+        // Outside coordinator/ and server/ the rule does not apply.
+        let d = diags_of("rust/src/engine/fx.rs", bad);
+        assert!(d.iter().all(|d| d.rule != "serve-no-unwrap"), "{d:?}");
+
+        // Non-panicking extraction, `unwrap_or*` spellings, and a
+        // reasoned allow must all be silent.
+        let good = include_str!("fixtures/serve_no_unwrap_good.rs");
+        let d = diags_of("rust/src/server/fx.rs", good);
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn serve_region_close_without_open_fires() {
+        let src = "// lint: end-serve-region\nfn f() {}\n";
+        let d = diags_of("rust/src/server/fx.rs", src);
+        assert!(d.iter().any(|d| d.msg.contains("without an open")),
+                "{d:?}");
+
+        let src = "// lint: serve-region — fence\nfn f() {}\n";
+        let d = diags_of("rust/src/server/fx.rs", src);
+        assert!(d.iter().any(|d| d.msg.contains("never closed")),
+                "{d:?}");
     }
 
     // ---- annotation grammar ------------------------------------------

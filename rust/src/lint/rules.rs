@@ -1,4 +1,4 @@
-//! The five repo-native invariant rules (see `lint` module docs for the
+//! The six repo-native invariant rules (see `lint` module docs for the
 //! invariant each one guards and README §"Correctness tooling" for the
 //! annotation grammar).
 //!
@@ -12,12 +12,13 @@ use crate::lint::lexer::{parse_int, Tok, TokKind};
 use crate::lint::{Diagnostic, FileCtx};
 
 /// Rule ids, as spelled inside `lint: allow(...)` annotations.
-pub const RULES: [&str; 5] = [
+pub const RULES: [&str; 6] = [
     "unsafe-safety",
     "clock-discipline",
     "rng-discipline",
     "warm-alloc",
     "det-iteration",
+    "serve-no-unwrap",
 ];
 
 /// RNG constants whose presence outside the sanctioned modules means a
@@ -71,6 +72,11 @@ pub fn run_all(ctx: &FileCtx, out: &mut Vec<Diagnostic>) {
     warm_alloc(ctx, out);
     if ctx.path.contains("src/engine/") {
         det_iteration(ctx, out);
+    }
+    if ctx.path.contains("src/coordinator/")
+        || ctx.path.contains("src/server/")
+    {
+        serve_no_unwrap(ctx, out);
     }
 }
 
@@ -257,6 +263,43 @@ fn warm_alloc(ctx: &FileCtx, out: &mut Vec<Diagnostic>) {
                         "`{}` inside a `lint: hot-region` fence — warm \
                          steps must be allocation-free (see \
                          tests/alloc_regression.rs)",
+                        pat.join("")
+                    ),
+                ));
+                break; // one diagnostic per token position
+            }
+        }
+    }
+}
+
+/// **serve-no-unwrap** — inside `// lint: serve-region` fences (the
+/// request-handling paths of `coordinator/` and `server/`), no
+/// panicking extractors: a stray `.unwrap()` / `.expect(..)` turns a
+/// bad request or a contained engine fault into a panic on the serving
+/// thread — a dropped connection or a hung client — instead of an error
+/// response. The `unwrap_or*` family never matches (each is a single
+/// ident token distinct from `unwrap`); genuinely-infallible sites
+/// carry a `lint: allow(serve-no-unwrap)` with the invariant written
+/// out.
+fn serve_no_unwrap(ctx: &FileCtx, out: &mut Vec<Diagnostic>) {
+    if ctx.serve_regions.is_empty() {
+        return;
+    }
+    let code = &ctx.code;
+    for i in 0..code.len() {
+        let line = code[i].line;
+        if !ctx.in_serve_region(line) {
+            continue;
+        }
+        for pat in [&[".", "unwrap"][..], &[".", "expect"][..]] {
+            if seq_at(code, i, pat) {
+                out.push(ctx.diag(
+                    "serve-no-unwrap",
+                    line,
+                    format!(
+                        "`{}` inside a `lint: serve-region` fence — \
+                         request paths must answer errors, not panic \
+                         the serving thread",
                         pat.join("")
                     ),
                 ));

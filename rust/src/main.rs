@@ -60,10 +60,15 @@ fn print_help() {
          \x20           [--default-priority N] [--preempt-after K]\n\
          \x20           [--step-threads N] (planar-phase workers; results\n\
          \x20           are bitwise identical for any N)\n\
+         \x20           [--fault-plan \"m=err@2,panic@5;m2=stall@1:0.25\"]\n\
+         \x20           (deterministic fault injection for chaos drills)\n\
+         \x20           [--deadline-ms N] (default request deadline;\n\
+         \x20           expired requests are answered 504 and counted in\n\
+         \x20           deadline_sheds)\n\
          \x20 generate  --artifacts DIR --model NAME [--n 4] [--sampler\n\
          \x20           speculative|mdm] [--window cosine:0.05] [--n-verify 1]\n\
          \x20           [--steps 64] [--seed 0] [--priority P]\n\
-         \x20           [--decode text8]\n\
+         \x20           [--deadline-ms N] [--decode text8]\n\
          \x20 score     --artifacts DIR --model NAME --tokens 1,2,3 [--seed 0]\n\
          \x20 flops     reproduce Appendix E\n\
          \x20 models    --artifacts DIR"
@@ -133,11 +138,30 @@ fn start_coordinator(args: &Args) -> Result<Coordinator> {
         .and_then(|v| v.parse::<usize>().ok())
         .unwrap_or(1);
     sched.step_threads = args.usize("step-threads", env_threads).max(1);
+    // Failure-layer knobs: --fault-plan scripts deterministic faults per
+    // model (chaos drills against a live server, e.g.
+    // "owt=err@2,panic@5;gpt2=stall@1:0.25"); --deadline-ms sets the
+    // default request deadline for requests that carry none.
+    let faults = match args.opt_str("fault-plan") {
+        Some(spec) => ssmd::engine::fault::parse_fault_cli(&spec)
+            .map_err(|e| anyhow!("--fault-plan: {e}"))?,
+        None => BTreeMap::new(),
+    };
+    let default_deadline_ms = args
+        .opt_str("deadline-ms")
+        .map(|v| {
+            v.parse::<u64>()
+                .map_err(|_| anyhow!("--deadline-ms: bad value '{v}'"))
+        })
+        .transpose()?
+        .filter(|&ms| ms > 0);
     Coordinator::start(
         model_factory(artifacts, only),
         BatcherConfig {
             max_wait: Duration::from_millis(args.u64("batch-wait-ms", 5)),
             sched,
+            faults,
+            default_deadline_ms,
             ..Default::default()
         },
     )
@@ -184,6 +208,10 @@ fn cmd_generate(args: &Args) -> Result<()> {
         priority: args
             .opt_str("priority")
             .and_then(|p| p.parse::<i32>().ok()),
+        deadline_ms: args
+            .opt_str("deadline-ms")
+            .and_then(|d| d.parse::<u64>().ok())
+            .filter(|&ms| ms > 0),
     })?;
     let decode = args.str("decode", "none");
     for (i, s) in resp.samples.iter().enumerate() {

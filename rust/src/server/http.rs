@@ -39,6 +39,9 @@ pub struct Response {
     pub status: u16,
     pub content_type: &'static str,
     pub body: Vec<u8>,
+    /// Extra response headers (e.g. `Retry-After` on 503s). Names are
+    /// static — the API only emits a fixed vocabulary of headers.
+    pub extra_headers: Vec<(&'static str, String)>,
 }
 
 impl Response {
@@ -47,6 +50,7 @@ impl Response {
             status,
             content_type: "application/json",
             body: v.to_string().into_bytes(),
+            extra_headers: Vec::new(),
         }
     }
 
@@ -57,6 +61,13 @@ impl Response {
         )
     }
 
+    /// Builder: attach an extra header.
+    pub fn with_header(mut self, name: &'static str, value: String)
+                       -> Response {
+        self.extra_headers.push((name, value));
+        self
+    }
+
     pub fn serialize(&self) -> Vec<u8> {
         let reason = match self.status {
             200 => "OK",
@@ -64,16 +75,22 @@ impl Response {
             404 => "Not Found",
             429 => "Too Many Requests",
             500 => "Internal Server Error",
+            503 => "Service Unavailable",
+            504 => "Gateway Timeout",
             _ => "Status",
         };
-        let mut out = format!(
-            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n\r\n",
+        let mut head = format!(
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n",
             self.status,
             reason,
             self.content_type,
             self.body.len()
-        )
-        .into_bytes();
+        );
+        for (k, v) in &self.extra_headers {
+            head.push_str(&format!("{k}: {v}\r\n"));
+        }
+        head.push_str("\r\n");
+        let mut out = head.into_bytes();
         out.extend_from_slice(&self.body);
         out
     }
@@ -164,6 +181,18 @@ mod tests {
         assert!(s.starts_with("HTTP/1.1 200 OK\r\n"));
         assert!(s.contains("Content-Length: 7"));
         assert!(s.ends_with("{\"a\":1}"));
+    }
+
+    #[test]
+    fn extra_headers_serialize_before_the_body() {
+        let r = Response::error(503, "unavailable")
+            .with_header("Retry-After", "2".into());
+        let s = String::from_utf8(r.serialize()).unwrap();
+        assert!(s.starts_with("HTTP/1.1 503 Service Unavailable\r\n"), "{s}");
+        assert!(s.contains("Retry-After: 2\r\n"), "{s}");
+        let head_end = s.find("\r\n\r\n").unwrap();
+        assert!(s[..head_end].contains("Retry-After"),
+                "header must be in the head, not the body");
     }
 
     #[test]

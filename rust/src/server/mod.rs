@@ -1,11 +1,16 @@
 //! Threaded HTTP/1.1 server + JSON API (tokio/hyper unavailable offline).
 //!
 //! Endpoints:
-//!   GET  /healthz   -> {"ok":true}
+//!   GET  /healthz   -> engine + per-model breaker state (503 when degraded)
 //!   GET  /metrics   -> metrics registry snapshot
 //!   GET  /models    -> per-model config/buckets
 //!   POST /generate  -> run a sampling request (see request::GenRequest)
 //!   POST /score     -> exact likelihood + rejection posterior (Prop 3.1/C.2)
+//!
+//! Failure mapping (see `coordinator` suffix constants): backpressure
+//! sheds -> 429, circuit-breaker fast rejections -> 503 + `Retry-After`,
+//! deadline expiry -> 504, unknown model -> 404; everything else the
+//! engine reports is a 500.
 
 pub mod http;
 
@@ -92,11 +97,12 @@ impl Server {
         }
     }
 
+    // lint: serve-region — request handling must never panic a
+    // connection thread; a stray unwrap here turns a bad request or an
+    // engine fault into a dropped connection instead of an error body.
     pub fn route(&self, req: &Request) -> Response {
         match (req.method.as_str(), req.path.as_str()) {
-            ("GET", "/healthz") => {
-                Response::json(200, &Json::obj(vec![("ok", Json::Bool(true))]))
-            }
+            ("GET", "/healthz") => self.handle_health(),
             ("GET", "/metrics") => {
                 Response::json(200, &self.coordinator.metrics.snapshot())
             }
@@ -107,6 +113,27 @@ impl Server {
             ("POST", "/generate") => self.handle_generate(req),
             ("POST", "/score") => self.handle_score(req),
             _ => Response::error(404, "not found"),
+        }
+    }
+
+    /// Live health: the engine reports per-model circuit-breaker state.
+    /// Any open breaker (or a dead engine thread) degrades the endpoint
+    /// to 503 so load balancers rotate traffic away, while the JSON body
+    /// still names which models are affected.
+    fn handle_health(&self) -> Response {
+        match self.coordinator.health() {
+            Ok(h) => {
+                let ok = h.get("ok").and_then(|b| b.as_bool())
+                    .unwrap_or(false);
+                Response::json(if ok { 200 } else { 503 }, &h)
+            }
+            Err(e) => Response::json(
+                503,
+                &Json::obj(vec![
+                    ("ok", Json::Bool(false)),
+                    ("error", Json::str(e.to_string())),
+                ]),
+            ),
         }
     }
 
@@ -121,25 +148,7 @@ impl Server {
         };
         match self.coordinator.generate(gen_req) {
             Ok(resp) => Response::json(200, &resp.to_json()),
-            Err(e) => {
-                let msg = e.to_string();
-                // Admission-backpressure sheds are overload, not server
-                // faults: surface 429 so load balancers / retry
-                // middleware back off instead of treating the engine as
-                // crashed. The shed path is recognized by the shared
-                // `SHED_ERROR_SUFFIX` constant (the vendored anyhow shim
-                // has no typed variants); client-echoed values in other
-                // errors are always single-quoted, so they cannot forge
-                // the suffix.
-                let status =
-                    if msg.ends_with(crate::coordinator::SHED_ERROR_SUFFIX)
-                    {
-                        429
-                    } else {
-                        500
-                    };
-                Response::error(status, &msg)
-            }
+            Err(e) => map_engine_error(&e.to_string()),
         }
     }
 
@@ -154,10 +163,56 @@ impl Server {
         };
         match self.coordinator.score(score_req) {
             Ok(resp) => Response::json(200, &resp.to_json()),
-            Err(e) => Response::error(500, &e.to_string()),
+            Err(e) => map_engine_error(&e.to_string()),
         }
     }
 }
+
+/// Map an engine error string to an HTTP response. The vendored anyhow
+/// shim has no typed variants, so the coordinator tags its well-known
+/// failure classes with exact message suffixes (client-echoed values are
+/// always single-quoted, so they cannot forge a suffix):
+///   - `SHED_ERROR_SUFFIX` — admission backpressure. 429 so load
+///     balancers / retry middleware back off instead of treating the
+///     engine as crashed.
+///   - `BREAKER_ERROR_SUFFIX` — circuit breaker open. 503 plus a
+///     `Retry-After` header derived from the breaker cooldown.
+///   - `DEADLINE_ERROR_SUFFIX` — the request's deadline expired before
+///     it finished. 504: the upstream ran out of time, retrying
+///     immediately with the same budget will likely time out again.
+///   - `unknown model '…'` prefix — 404, a client addressing error.
+/// Anything else is an internal fault: 500.
+fn map_engine_error(msg: &str) -> Response {
+    use crate::coordinator::{
+        BREAKER_ERROR_SUFFIX, DEADLINE_ERROR_SUFFIX, SHED_ERROR_SUFFIX,
+    };
+    if msg.ends_with(SHED_ERROR_SUFFIX) {
+        Response::error(429, msg)
+    } else if msg.ends_with(BREAKER_ERROR_SUFFIX) {
+        Response::error(503, msg)
+            .with_header("Retry-After", retry_after_seconds(msg))
+    } else if msg.ends_with(DEADLINE_ERROR_SUFFIX) {
+        Response::error(504, msg)
+    } else if msg.starts_with("unknown model '") {
+        Response::error(404, msg)
+    } else {
+        Response::error(500, msg)
+    }
+}
+
+/// Pull the `retry after <N>s` hint out of a breaker rejection for the
+/// `Retry-After` header. Falls back to "1": the header must always
+/// accompany the 503 so well-behaved clients back off a bounded amount.
+fn retry_after_seconds(msg: &str) -> String {
+    let tail = match msg.rsplit("retry after ").next() {
+        Some(t) => t,
+        None => return "1".to_string(),
+    };
+    let digits: String =
+        tail.chars().take_while(|c| c.is_ascii_digit()).collect();
+    if digits.is_empty() { "1".to_string() } else { digits }
+}
+// lint: end-serve-region
 
 #[cfg(test)]
 mod tests {
@@ -179,6 +234,38 @@ mod tests {
             },
             BatcherConfig {
                 max_wait: Duration::from_millis(1),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        Server::new(c)
+    }
+
+    /// Two-model server with a fault plan that kills `tiny`'s first step
+    /// and a hair-trigger breaker (threshold 1, long cooldown).
+    fn chaos_server() -> Server {
+        use crate::coordinator::SchedConfig;
+        let mut sched = SchedConfig::default();
+        sched.supervise.breaker_threshold = 1;
+        sched.supervise.breaker_cooldown_s = 100.0;
+        let c = Coordinator::start(
+            || {
+                let mut m: ModelMap = BTreeMap::new();
+                m.insert(
+                    "mock".into(),
+                    Box::new(MockModel::new(8, 4, 5)) as Box<dyn EngineModel>,
+                );
+                m.insert(
+                    "tiny".into(),
+                    Box::new(MockModel::new(8, 4, 5)) as Box<dyn EngineModel>,
+                );
+                Ok(m)
+            },
+            BatcherConfig {
+                max_wait: Duration::from_millis(1),
+                sched,
+                faults: crate::engine::fault::parse_fault_cli("tiny=panic@1")
+                    .unwrap(),
                 ..Default::default()
             },
         )
@@ -284,7 +371,8 @@ mod tests {
         let v = Json::parse(&String::from_utf8_lossy(&m.body)).unwrap();
         let counters = v.get("counters").unwrap();
         for key in ["preemptions", "resume_steps", "preempt_fires",
-                    "shed_seqs"] {
+                    "shed_seqs", "engine_faults", "retries",
+                    "deadline_sheds", "breaker_state"] {
             assert!(counters.get(key).is_some(), "missing counter {key}");
         }
     }
@@ -295,6 +383,90 @@ mod tests {
         assert_eq!(s.route(&post("/generate", "{not json")).status, 400);
         assert_eq!(s.route(&post("/generate", r#"{"n":1}"#)).status, 400);
         assert_eq!(s.route(&get("/bogus")).status, 404);
+    }
+
+    /// Client mistakes on /generate and /score always get a 4xx with a
+    /// JSON error body — never a 500 or a dropped connection.
+    #[test]
+    fn error_bodies_are_json_4xx() {
+        let s = test_server();
+        for (path, body, status) in [
+            ("/generate", "{not json", 400),
+            ("/score", "{not json", 400),
+            ("/generate", r#"{"model":"nope","n":1}"#, 404),
+            ("/score",
+             r#"{"model":"nope","tokens":[0,1,2,3,0,1,2,3]}"#, 404),
+            ("/generate", r#"{"model":"mock","n":1,"priority":9999}"#, 400),
+            ("/generate", r#"{"model":"mock","n":1,"priority":0.5}"#, 400),
+            ("/generate", r#"{"model":"mock","n":1,"deadline_ms":0}"#, 400),
+            ("/generate",
+             r#"{"model":"mock","n":1,"deadline_ms":"soon"}"#, 400),
+        ] {
+            let r = s.route(&post(path, body));
+            let text = String::from_utf8_lossy(&r.body).to_string();
+            assert_eq!(r.status, status, "{path} {body}: {text}");
+            let v = Json::parse(&text).unwrap();
+            assert!(v.get("error").is_some(),
+                    "{path} {body}: error body must be JSON, got {text}");
+        }
+    }
+
+    /// Pure mapping: each tagged engine-error class gets its status, and
+    /// the breaker 503 carries the parsed Retry-After hint.
+    #[test]
+    fn engine_error_suffixes_map_to_statuses() {
+        use crate::coordinator::{
+            BREAKER_ERROR_SUFFIX, DEADLINE_ERROR_SUFFIX, SHED_ERROR_SUFFIX,
+        };
+        assert_eq!(map_engine_error(&format!("x{SHED_ERROR_SUFFIX}")).status,
+                   429);
+        let r = map_engine_error(&format!(
+            "model 'm' unhealthy: circuit breaker open, retry after 7s\
+             {BREAKER_ERROR_SUFFIX}"
+        ));
+        assert_eq!(r.status, 503);
+        assert_eq!(r.extra_headers,
+                   vec![("Retry-After", "7".to_string())]);
+        assert_eq!(
+            map_engine_error(&format!("x{DEADLINE_ERROR_SUFFIX}")).status,
+            504);
+        assert_eq!(map_engine_error("unknown model 'nope'").status, 404);
+        assert_eq!(map_engine_error("wat").status, 500);
+        // Malformed hint still yields a bounded backoff.
+        assert_eq!(retry_after_seconds("no hint here"), "1");
+    }
+
+    #[test]
+    fn breaker_open_maps_to_503_with_retry_after_and_degraded_health() {
+        let s = chaos_server();
+        // First request trips tiny's injected panic: a definitive engine
+        // fault, surfaced as a 500 with the failure message.
+        let r = s.route(&post("/generate", r#"{"model":"tiny","n":1}"#));
+        assert_eq!(r.status, 500, "{}", String::from_utf8_lossy(&r.body));
+        assert!(String::from_utf8_lossy(&r.body)
+                    .contains("failed while serving"));
+        // Breaker now open: new admits fast-fail 503 with Retry-After.
+        let r = s.route(&post("/generate", r#"{"model":"tiny","n":1}"#));
+        assert_eq!(r.status, 503, "{}", String::from_utf8_lossy(&r.body));
+        let ra = r
+            .extra_headers
+            .iter()
+            .find(|(k, _)| *k == "Retry-After")
+            .map(|(_, v)| v.clone())
+            .expect("503 must carry Retry-After");
+        assert!(ra.parse::<u64>().unwrap() >= 1, "Retry-After: {ra}");
+        // /healthz degrades to 503 and names the open breaker.
+        let h = s.route(&get("/healthz"));
+        assert_eq!(h.status, 503);
+        let v = Json::parse(&String::from_utf8_lossy(&h.body)).unwrap();
+        assert_eq!(v.get("ok").and_then(|b| b.as_bool()), Some(false));
+        assert_eq!(
+            v.get("models").unwrap().get("tiny").and_then(|s| s.as_str()),
+            Some("open"));
+        // The healthy model keeps serving through the degradation.
+        let ok = s.route(&post("/generate", r#"{"model":"mock","n":1}"#));
+        assert_eq!(ok.status, 200, "{}",
+                   String::from_utf8_lossy(&ok.body));
     }
 
     #[test]

@@ -25,6 +25,21 @@
 //! tests can pin the load-bearing invariant: a preempted sequence's
 //! tokens are **bitwise identical** to the same-seed unpreempted run.
 //!
+//! **Chaos** (PR 7): each queue may carry a deterministic [`FaultPlan`]
+//! — its MockModel is wrapped in [`FaultyModel`], so injected panics
+//! genuinely unwind out of the model boundary and are contained by
+//! `BoundStepper`'s `catch_unwind`, the exact production path. The
+//! harness then mirrors the engine loop's supervision: transient
+//! failures retry with virtual-time backoff, definitive failures
+//! quarantine only the affected queue (every in-flight sequence it held
+//! is counted `failed`, exactly once) and feed that queue's circuit
+//! breaker; open breakers fast-fail admissions. Arrivals may carry a
+//! `deadline` (seconds of budget from arrival); expired sequences are
+//! swept between steps and counted in `deadline_sheds`. The conservation
+//! pin becomes: every admitted sequence is finished, failed, or
+//! deadline-shed — exactly one of the three — and surviving queues'
+//! token streams stay bitwise identical to a fault-free run.
+//!
 //! ## Trace format (JSONL)
 //!
 //! One JSON object per line; [`write_trace`] / [`read_trace`] round-trip
@@ -33,27 +48,34 @@
 //!
 //! ```text
 //! {"kind":"config","starve_after":64,"wait_alpha":0.2,"max_boost":8,
-//!  "preempt_after":4}
+//!  "preempt_after":4,"max_retries":2,"backoff_s":0.05,
+//!  "breaker_threshold":3,"breaker_cooldown_s":1}
 //! {"kind":"queue","d":16,"vocab":6,"bucket":4,"model_seed":"7",
 //!  "step_cost":0.08,"weight":1,"burst":4,"shed":false,"preempt":true}
-//! {"kind":"queue","d":8,...,"slo":0.005,"pending":256,...}
-//! {"kind":"arrival","t":0.05,"queue":0,"n":2,"seed":"1001","priority":0}
+//! {"kind":"queue","d":8,...,"slo":0.005,"pending":256,
+//!  "faults":"err@2,panic@5",...}
+//! {"kind":"arrival","t":0.05,"queue":0,"n":2,"seed":"1001","priority":0,
+//!  "deadline":0.25}
 //! ```
 //!
-//! `slo` and `pending` are omitted when unset. Arrival lines must be
-//! time-sorted (the writer preserves order; [`simulate`] asserts it).
-//! Live runs are captured as a [`TraceEvent`] stream (the coordinator's
-//! `BatcherConfig::trace` hook) and assembled into this format by
-//! [`assemble_trace`].
+//! `slo`, `pending`, `faults`, and `deadline` are omitted when unset.
+//! Arrival lines must be time-sorted (the writer preserves order;
+//! [`simulate`] asserts it). Live runs are captured as a [`TraceEvent`]
+//! stream (the coordinator's `BatcherConfig::trace` hook) and assembled
+//! into this format by [`assemble_trace`].
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::io::Write as _;
 use std::path::Path;
+use std::rc::Rc;
 
 use crate::coordinator::sched::{CrossQueueScheduler, QueueId, QueuePolicy,
                                 SchedConfig};
-use crate::engine::{BoundStepper, MockModel, Prompt, SeqCheckpoint,
-                    SeqParams, SlotId, SpecParams, Stepper, Window};
+use crate::coordinator::{Breaker, BreakerState};
+use crate::engine::fault::FaultState;
+use crate::engine::{BoundStepper, FaultPlan, FaultyModel, MockModel,
+                    Prompt, SeqCheckpoint, SeqParams, SlotId, SpecParams,
+                    StepError, Stepper, Window};
 use crate::util::json::Json;
 use crate::util::rng::Pcg;
 use crate::util::simclock::{Clock, SimClock};
@@ -69,17 +91,29 @@ pub struct QueueSpec {
     pub policy: QueuePolicy,
     /// Synthetic virtual cost of one scheduler step of this queue.
     pub step_cost: f64,
+    /// Deterministic fault script for this queue's model (fires on the
+    /// Nth draft/verify call via [`FaultyModel`]). `None` = fault-free.
+    pub fault: Option<FaultPlan>,
 }
 
 impl QueueSpec {
     pub fn new(d: usize, bucket: usize, step_cost: f64, policy: QueuePolicy)
                -> QueueSpec {
-        QueueSpec { d, vocab: 6, bucket, model_seed: 7, policy, step_cost }
+        QueueSpec {
+            d,
+            vocab: 6,
+            bucket,
+            model_seed: 7,
+            policy,
+            step_cost,
+            fault: None,
+        }
     }
 }
 
 /// One request arrival: `n` sequences land on `queue` at virtual time
-/// `t`, seeded with `seed`, in priority class `priority`.
+/// `t`, seeded with `seed`, in priority class `priority`, optionally
+/// carrying `deadline` seconds of completion budget from `t`.
 #[derive(Clone, Copy, Debug)]
 pub struct Arrival {
     pub t: f64,
@@ -87,6 +121,22 @@ pub struct Arrival {
     pub n: usize,
     pub seed: u64,
     pub priority: i32,
+    /// Completion budget in virtual seconds from `t`; sequences alive
+    /// past `t + deadline` are swept and counted in `deadline_sheds`.
+    pub deadline: Option<f64>,
+}
+
+impl Default for Arrival {
+    fn default() -> Arrival {
+        Arrival {
+            t: 0.0,
+            queue: 0,
+            n: 1,
+            seed: 0,
+            priority: 0,
+            deadline: None,
+        }
+    }
 }
 
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
@@ -110,6 +160,21 @@ pub struct Report {
     pub busy_steps: Vec<u64>,
     /// Per queue: sequences retired.
     pub finished: Vec<usize>,
+    /// Per queue: sequences answered as failed when a definitive fault
+    /// quarantined their run queue (each counted exactly once).
+    pub failed: Vec<usize>,
+    /// Definitive step failures (fatal, or a transient burst out of
+    /// retries) — the sim's `engine_faults` counter.
+    pub engine_faults: u64,
+    /// Transient step failures that were retried after backoff.
+    pub retries: u64,
+    /// Sequences removed because their deadline expired (at admission or
+    /// mid-flight) — distinct from backpressure `shed`.
+    pub deadline_sheds: u64,
+    /// Sequences fast-failed at admission by an open circuit breaker.
+    pub breaker_shed: u64,
+    /// Closed->Open breaker transitions observed.
+    pub breaker_opens: u64,
     /// Total *sequences* rejected by admission backpressure.
     pub shed: u64,
     /// Total *requests* rejected by admission backpressure (one shed
@@ -140,19 +205,24 @@ pub fn simulate(specs: &[QueueSpec], trace: &[Arrival], selector: Selector,
     for w in trace.windows(2) {
         assert!(w[0].t <= w[1].t, "trace must be time-sorted");
     }
-    let models: Vec<MockModel> = specs
+    // Every model is wrapped in FaultyModel (an empty plan never fires),
+    // so injected faults exercise the genuine unwind-containment path
+    // through BoundStepper::step.
+    let models: Vec<FaultyModel<MockModel>> = specs
         .iter()
         .map(|s| {
             let mut m = MockModel::new(s.d, s.vocab, s.model_seed);
             m.buckets = vec![s.bucket];
-            m
+            FaultyModel::new(m, s.fault.clone().unwrap_or_default())
         })
         .collect();
+    let fault_states: Vec<Rc<FaultState>> =
+        models.iter().map(|m| m.fault_state()).collect();
     let params = SpecParams {
         window: Window::Constant(1),
         ..Default::default()
     };
-    let mut steppers: Vec<BoundStepper<'_, MockModel>> = models
+    let mut steppers: Vec<BoundStepper<'_, FaultyModel<MockModel>>> = models
         .iter()
         .map(|m| BoundStepper::new(m, SeqParams::Spec(params.clone())))
         .collect();
@@ -199,6 +269,23 @@ pub fn simulate(specs: &[QueueSpec], trace: &[Arrival], selector: Selector,
     let mut next = 0usize;
     let mut ready_buf: Vec<QueueId> = Vec::new();
     let mut cand_buf: Vec<QueueId> = Vec::new();
+    // Supervision state, mirroring the engine loop: per-queue retry
+    // bursts with virtual-time backoff, and a per-queue (= per-model)
+    // circuit breaker gating admissions.
+    let mut q_retries = vec![0u32; nq];
+    let mut not_before = vec![0.0f64; nq];
+    let mut breakers: Vec<Breaker> =
+        (0..nq).map(|_| Breaker::new(&cfg.supervise)).collect();
+    let mut failed: Vec<BTreeSet<SlotId>> = vec![BTreeSet::new(); nq];
+    let mut deadlined: Vec<BTreeSet<SlotId>> = vec![BTreeSet::new(); nq];
+    let mut deadline_at: Vec<BTreeMap<SlotId, f64>> =
+        vec![BTreeMap::new(); nq];
+    let mut placed_set: Vec<BTreeSet<SlotId>> = vec![BTreeSet::new(); nq];
+    let mut engine_faults = 0u64;
+    let mut retries = 0u64;
+    let mut deadline_sheds = 0u64;
+    let mut breaker_shed = 0u64;
+    let mut breaker_opens = 0u64;
 
     loop {
         // Admit everything due at the current virtual time (requests that
@@ -207,7 +294,22 @@ pub fn simulate(specs: &[QueueSpec], trace: &[Arrival], selector: Selector,
         while next < trace.len() && trace[next].t <= clock.now() + 1e-12 {
             let a = trace[next];
             next += 1;
-            let age = (clock.now() - a.t).max(0.0);
+            let t_admit = clock.now();
+            let age = (t_admit - a.t).max(0.0);
+            // Circuit-breaker gate first (the engine's admission order):
+            // an open breaker answers the request without queueing it.
+            if !breakers[a.queue].admit_allowed(t_admit) {
+                breaker_shed += a.n as u64;
+                continue;
+            }
+            // Deadline already burned in transit: a deadline shed, not a
+            // backpressure shed.
+            if let Some(dl) = a.deadline {
+                if age >= dl {
+                    deadline_sheds += a.n as u64;
+                    continue;
+                }
+            }
             if weighted {
                 if !xq.try_enqueue(qids[a.queue], 0, next as u64, a.n, age)
                 {
@@ -217,6 +319,8 @@ pub fn simulate(specs: &[QueueSpec], trace: &[Arrival], selector: Selector,
                 let q = &specs[a.queue].policy;
                 let over = admit_time[a.queue].len()
                     - seen_done[a.queue].len()
+                    - failed[a.queue].len()
+                    - deadlined[a.queue].len()
                     - steppers[a.queue].n_active();
                 if q.shed_on_full && over + a.n > q.max_pending {
                     harness_shed += a.n as u64;
@@ -231,6 +335,9 @@ pub fn simulate(specs: &[QueueSpec], trace: &[Arrival], selector: Selector,
                     .admit_prio(&prompt, rng.split(), a.priority);
                 admit_time[a.queue].insert(sid, a.t);
                 admit_tag[a.queue].insert(sid, next as u64);
+                if let Some(dl) = a.deadline {
+                    deadline_at[a.queue].insert(sid, a.t + dl);
+                }
             }
         }
 
@@ -251,9 +358,49 @@ pub fn simulate(specs: &[QueueSpec], trace: &[Arrival], selector: Selector,
             }
         }
 
+        // Deadline sweep (the engine's between-steps sweep): expired
+        // sequences are removed wherever they live — resident slot,
+        // pending queue, or parked checkpoint — and counted as deadline
+        // sheds. Surviving sequences are untouched, so their token
+        // streams stay bitwise identical to an unswept run.
+        let t_sweep = clock.now();
+        for i in 0..nq {
+            if deadline_at[i].is_empty() {
+                continue;
+            }
+            let expired: Vec<SlotId> = deadline_at[i]
+                .iter()
+                .filter(|&(_, &dl)| t_sweep >= dl)
+                .map(|(&sid, _)| sid)
+                .collect();
+            for sid in expired {
+                deadline_at[i].remove(&sid);
+                if steppers[i].evict(sid).is_some() {
+                    // Resident: evicted, checkpoint dropped.
+                } else if steppers[i].remove_pending(sid) {
+                    // Never placed: roll its admission stamp back so the
+                    // selector's pending depth stays exact.
+                    if weighted && !placed_set[i].contains(&sid) {
+                        let tag = admit_tag[i][&sid];
+                        xq.cancel_enqueue(qids[i], 0, tag, 1);
+                    }
+                } else {
+                    let before = parked[i].len();
+                    parked[i].retain(|ck| ck.id() != sid);
+                    assert_eq!(parked[i].len() + 1, before,
+                               "expired sequence {sid:?} not found");
+                }
+                deadlined[i].insert(sid);
+                deadline_sheds += 1;
+            }
+        }
+
         ready_buf.clear();
+        let t_ready = clock.now();
         for (i, st) in steppers.iter().enumerate() {
-            if !st.is_idle() && parked[i].is_empty() {
+            if !st.is_idle() && parked[i].is_empty()
+                && t_ready + 1e-12 >= not_before[i]
+            {
                 ready_buf.push(qids[i]);
             }
         }
@@ -270,10 +417,24 @@ pub fn simulate(specs: &[QueueSpec], trace: &[Arrival], selector: Selector,
                 }
                 continue;
             }
-            if next >= trace.len() {
+            // Jump virtual time to the next wake instant: the earliest
+            // arrival or the earliest backoff expiry of a non-idle queue.
+            let wake = steppers
+                .iter()
+                .enumerate()
+                .filter(|(i, st)| !st.is_idle() && parked[*i].is_empty())
+                .map(|(i, _)| not_before[i])
+                .fold(f64::INFINITY, f64::min);
+            let next_t = if next < trace.len() {
+                trace[next].t
+            } else {
+                f64::INFINITY
+            };
+            let t = wake.min(next_t);
+            if !t.is_finite() {
                 break;
             }
-            clock.set(trace[next].t);
+            clock.set(t.max(clock.now()));
             continue;
         }
         let all_busy = ready_buf.len() == nq;
@@ -285,11 +446,14 @@ pub fn simulate(specs: &[QueueSpec], trace: &[Arrival], selector: Selector,
             }
             Selector::RoundRobin => {
                 // The pre-weighted engine loop: scan from a rotating
-                // cursor, step the first non-idle queue.
+                // cursor, step the first ready queue (same readiness
+                // gates as the ready set: not parked, not backing off).
                 let mut chosen = None;
                 for off in 0..nq {
                     let i = (rr + off) % nq;
-                    if !steppers[i].is_idle() {
+                    if !steppers[i].is_idle() && parked[i].is_empty()
+                        && t_ready + 1e-12 >= not_before[i]
+                    {
                         chosen = Some(i);
                         break;
                     }
@@ -319,7 +483,11 @@ pub fn simulate(specs: &[QueueSpec], trace: &[Arrival], selector: Selector,
         // re-placements are excluded from take_placements — a sequence
         // pairs with exactly one wait even across a park/resume cycle.
         let t0 = clock.now();
-        let done = steppers[qi].step();
+        let step = steppers[qi].step();
+        // Placements persist even through a failed step (backfill
+        // precedes the model call; see BoundStepper's unwind-safety
+        // argument), so waits and selector stamps are observed on both
+        // the success and the failure path.
         let placed = steppers[qi].take_placements();
         for sid in &placed {
             let at = admit_time[qi]
@@ -327,6 +495,7 @@ pub fn simulate(specs: &[QueueSpec], trace: &[Arrival], selector: Selector,
                 .copied()
                 .expect("placed sequence was admitted");
             waits[qi].push(t0 - at);
+            placed_set[qi].insert(*sid);
         }
         if weighted {
             // Tag-grouped placement reporting (see the engine loop):
@@ -350,21 +519,71 @@ pub fn simulate(specs: &[QueueSpec], trace: &[Arrival], selector: Selector,
                 i = j;
             }
         }
-        clock.advance(specs[qi].step_cost);
+        // Injected stalls accrue virtually: the step happened, but late.
+        let cost = specs[qi].step_cost + fault_states[qi].take_stall();
+        clock.advance(cost);
         if weighted {
-            xq.report_step(qids[qi], specs[qi].step_cost);
+            xq.report_step(qids[qi], cost);
         }
         steps[qi] += 1;
         if all_busy {
             busy_steps[qi] += 1;
         }
-        for (sid, sample) in done {
-            assert!(seen_done[qi].insert(sid),
-                    "sequence {sid:?} answered twice");
-            assert!(admit_time[qi].contains_key(&sid),
-                    "retired sequence {sid:?} was never admitted");
-            finished[qi] += 1;
-            tokens[qi].insert(sid, sample.tokens);
+        match step {
+            Ok(done) => {
+                q_retries[qi] = 0;
+                not_before[qi] = 0.0;
+                breakers[qi].record_success(clock.now());
+                for (sid, sample) in done {
+                    assert!(seen_done[qi].insert(sid),
+                            "sequence {sid:?} answered twice");
+                    assert!(admit_time[qi].contains_key(&sid),
+                            "retired sequence {sid:?} was never admitted");
+                    deadline_at[qi].remove(&sid);
+                    finished[qi] += 1;
+                    tokens[qi].insert(sid, sample.tokens);
+                }
+            }
+            Err(StepError::Transient(_))
+                if q_retries[qi] < cfg.supervise.max_retries =>
+            {
+                // Transient with retries left: bounded virtual-time
+                // backoff, scheduler state intact for the retry.
+                q_retries[qi] += 1;
+                not_before[qi] =
+                    clock.now() + cfg.supervise.backoff_for(q_retries[qi]);
+                retries += 1;
+            }
+            Err(_) => {
+                // Definitive failure: quarantine this queue only. Every
+                // sequence it holds — resident or pending — is counted
+                // failed exactly once; other queues are untouched.
+                engine_faults += 1;
+                let t_fail = clock.now();
+                let was_open =
+                    breakers[qi].state(t_fail) == BreakerState::Open;
+                breakers[qi].record_failure(t_fail);
+                if !was_open
+                    && breakers[qi].state(t_fail) == BreakerState::Open
+                {
+                    breaker_opens += 1;
+                }
+                while let Some(ck) = steppers[qi].evict_lowest() {
+                    let sid = ck.id();
+                    deadline_at[qi].remove(&sid);
+                    failed[qi].insert(sid);
+                }
+                for sid in steppers[qi].take_pending_ids() {
+                    if weighted && !placed_set[qi].contains(&sid) {
+                        let tag = admit_tag[qi][&sid];
+                        xq.cancel_enqueue(qids[qi], 0, tag, 1);
+                    }
+                    deadline_at[qi].remove(&sid);
+                    failed[qi].insert(sid);
+                }
+                q_retries[qi] = 0;
+                not_before[qi] = 0.0;
+            }
         }
 
         // Preemption check after the step, mirroring the engine loop.
@@ -387,9 +606,12 @@ pub fn simulate(specs: &[QueueSpec], trace: &[Arrival], selector: Selector,
     }
 
     for i in 0..nq {
-        assert_eq!(finished[i], admit_time[i].len(),
+        // Conservation: every admitted sequence is finished, failed, or
+        // deadline-shed — exactly one of the three.
+        assert_eq!(finished[i] + failed[i].len() + deadlined[i].len(),
+                   admit_time[i].len(),
                    "queue {i}: admitted sequences were lost");
-        assert_eq!(waits[i].len(), admit_time[i].len(),
+        assert_eq!(waits[i].len(), placed_set[i].len(),
                    "queue {i}: placement accounting out of sync");
     }
     let resumes: u64 = steppers.iter().map(|s| s.resumes()).sum();
@@ -398,6 +620,12 @@ pub fn simulate(specs: &[QueueSpec], trace: &[Arrival], selector: Selector,
         steps,
         busy_steps,
         finished,
+        failed: failed.iter().map(|f| f.len()).collect(),
+        engine_faults,
+        retries,
+        deadline_sheds,
+        breaker_shed,
+        breaker_opens,
         // Sequence- and request-denominated explicitly on both paths
         // (`shed_of` counts sequences, `shed_requests` counts requests)
         // so conservation arithmetic against per-arrival n stays exact.
@@ -507,6 +735,9 @@ pub fn assemble_trace(events: &[TraceEvent], geometry: &[QueueGeometry])
             } else {
                 0.01
             },
+            // Live recordings carry the faults that *happened*, not a
+            // plan; chaos plans are authored into the trace file by hand.
+            fault: None,
         })
         .collect();
     let mut arrivals: Vec<Arrival> = events
@@ -519,6 +750,7 @@ pub fn assemble_trace(events: &[TraceEvent], geometry: &[QueueGeometry])
                     n: *n,
                     seed: *seed,
                     priority: *priority,
+                    deadline: None,
                 })
             }
             _ => None,
@@ -561,6 +793,13 @@ pub fn write_trace(path: &Path, cfg: &SchedConfig, specs: &[QueueSpec],
         ("wait_alpha", Json::num(cfg.wait_alpha)),
         ("max_boost", Json::num(cfg.max_boost)),
         ("preempt_after", Json::num(cfg.preempt_after as f64)),
+        ("max_retries", Json::num(cfg.supervise.max_retries as f64)),
+        ("backoff_s", Json::num(cfg.supervise.backoff_s)),
+        ("backoff_mult", Json::num(cfg.supervise.backoff_mult)),
+        ("breaker_threshold",
+         Json::num(cfg.supervise.breaker_threshold as f64)),
+        ("breaker_cooldown_s",
+         Json::num(cfg.supervise.breaker_cooldown_s)),
     ]);
     writeln!(f, "{cfg_line}")?;
     for s in specs {
@@ -582,18 +821,24 @@ pub fn write_trace(path: &Path, cfg: &SchedConfig, specs: &[QueueSpec],
         if s.policy.max_pending != usize::MAX {
             fields.push(("pending", Json::num(s.policy.max_pending as f64)));
         }
+        if let Some(fp) = &s.fault {
+            fields.push(("faults", Json::str(fp.format())));
+        }
         writeln!(f, "{}", Json::obj(fields))?;
     }
     for a in trace {
-        let line = Json::obj(vec![
+        let mut fields = vec![
             ("kind", Json::str("arrival")),
             ("t", Json::num(a.t)),
             ("queue", Json::num(a.queue as f64)),
             ("n", Json::num(a.n as f64)),
             ("seed", u64_str(a.seed)),
             ("priority", Json::num(a.priority as f64)),
-        ]);
-        writeln!(f, "{line}")?;
+        ];
+        if let Some(dl) = a.deadline {
+            fields.push(("deadline", Json::num(dl)));
+        }
+        writeln!(f, "{}", Json::obj(fields))?;
     }
     Ok(())
 }
@@ -636,6 +881,28 @@ pub fn read_trace(path: &Path)
                 {
                     cfg.preempt_after = x as u64;
                 }
+                if let Some(x) = v.get("max_retries").and_then(Json::as_f64)
+                {
+                    cfg.supervise.max_retries = x as u32;
+                }
+                if let Some(x) = v.get("backoff_s").and_then(Json::as_f64) {
+                    cfg.supervise.backoff_s = x;
+                }
+                if let Some(x) =
+                    v.get("backoff_mult").and_then(Json::as_f64)
+                {
+                    cfg.supervise.backoff_mult = x;
+                }
+                if let Some(x) =
+                    v.get("breaker_threshold").and_then(Json::as_f64)
+                {
+                    cfg.supervise.breaker_threshold = x as u32;
+                }
+                if let Some(x) =
+                    v.get("breaker_cooldown_s").and_then(Json::as_f64)
+                {
+                    cfg.supervise.breaker_cooldown_s = x;
+                }
             }
             "queue" => {
                 let mut policy = QueuePolicy::default();
@@ -677,6 +944,12 @@ pub fn read_trace(path: &Path)
                         .get("step_cost")
                         .and_then(Json::as_f64)
                         .unwrap_or(0.01),
+                    fault: v
+                        .get("faults")
+                        .and_then(Json::as_str)
+                        .map(FaultPlan::parse)
+                        .transpose()
+                        .map_err(|e| format!("line {}: {e}", ln + 1))?,
                 });
             }
             "arrival" => {
@@ -704,6 +977,7 @@ pub fn read_trace(path: &Path)
                         .get("priority")
                         .and_then(Json::as_f64)
                         .unwrap_or(0.0) as i32,
+                    deadline: v.get("deadline").and_then(Json::as_f64),
                 });
             }
             other => {
@@ -739,18 +1013,23 @@ mod tests {
                 preempt: true,
                 ..QueuePolicy::default()
             }),
-            QueueSpec::new(8, 1, 0.004, QueuePolicy {
-                weight: 4.0,
-                slo_p95_s: Some(0.005),
-                max_pending: 256,
-                ..QueuePolicy::default()
-            }),
+            QueueSpec {
+                fault: Some(FaultPlan::parse("err@2,stall@5:0.25").unwrap()),
+                ..QueueSpec::new(8, 1, 0.004, QueuePolicy {
+                    weight: 4.0,
+                    slo_p95_s: Some(0.005),
+                    max_pending: 256,
+                    ..QueuePolicy::default()
+                })
+            },
         ];
         // A seed above 2^53 must survive (f64 JSON numbers would not).
         let trace = vec![
             Arrival { t: 0.0, queue: 0, n: 2,
-                      seed: (1u64 << 60) + 12345, priority: 0 },
-            Arrival { t: 0.5, queue: 1, n: 1, seed: 7, priority: 3 },
+                      seed: (1u64 << 60) + 12345, priority: 0,
+                      deadline: None },
+            Arrival { t: 0.5, queue: 1, n: 1, seed: 7, priority: 3,
+                      deadline: Some(0.25) },
         ];
         let path = std::env::temp_dir()
             .join(format!("ssmd_trace_rt_{}.jsonl", std::process::id()));
@@ -766,11 +1045,16 @@ mod tests {
         assert_eq!(specs2[1].policy.slo_p95_s, Some(0.005));
         assert_eq!(specs2[1].policy.max_pending, 256);
         assert_eq!(specs2[1].policy.weight, 4.0);
+        assert_eq!(specs2[0].fault, None);
+        assert_eq!(specs2[1].fault,
+                   Some(FaultPlan::parse("err@2,stall@5:0.25").unwrap()));
         assert_eq!(trace2.len(), 2);
         assert_eq!(trace2[0].seed, (1u64 << 60) + 12345);
         assert_eq!(trace2[0].n, 2);
+        assert_eq!(trace2[0].deadline, None);
         assert_eq!(trace2[1].priority, 3);
         assert_eq!(trace2[1].t, 0.5);
+        assert_eq!(trace2[1].deadline, Some(0.25));
     }
 
     #[test]

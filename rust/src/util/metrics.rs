@@ -28,6 +28,12 @@ impl Counter {
     pub fn get(&self) -> u64 {
         self.0.load(Ordering::Relaxed)
     }
+
+    /// Overwrite the value — for the few gauge-like exports (e.g.
+    /// `breaker_state`) that report a current level, not a total.
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
 }
 
 const BUCKETS_PER_OCTAVE: usize = 16;
