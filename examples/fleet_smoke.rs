@@ -1,0 +1,201 @@
+//! Sharded-serving smoke gate (run by CI next to the chaos smoke gate).
+//!
+//! Two layers, both asserted:
+//!
+//! 1. **Virtual-time fleet sim** — replays a saturated mixed trace
+//!    through `ssmd::sim::simulate_fleet` at 1 and 2 replicas and fails
+//!    unless 2 replicas deliver >= 1.5x aggregate token throughput with
+//!    bitwise-identical token streams, then replays a skewed burst and
+//!    fails unless checkpoint migration actually fires (idle replica
+//!    adopts mid-sequence work) at zero token drift.
+//!
+//! 2. **Live sharded coordinator** — boots `Coordinator::start_sharded`
+//!    with 2 replica engine threads over a mock model, fires skewed
+//!    deterministic requests (both replicas idle at send time, so the
+//!    router lands each whole request on replica 0 and replica 1 can
+//!    only get work by adopting a migrated checkpoint), and fails unless
+//!    a live migration happens, every response matches the single-engine
+//!    baseline bitwise, and the per-replica health/metrics surfaces
+//!    (`engines` array, `_e{id}` suffixes, `migrations` counter) are
+//!    populated.
+//!
+//!   cargo run --release --example fleet_smoke
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+use ssmd::coordinator::sched::{QueuePolicy, SchedConfig};
+use ssmd::coordinator::{
+    BatcherConfig, Coordinator, EngineModel, GenRequest, ModelMap,
+    SamplerChoice,
+};
+use ssmd::engine::{MockModel, SpecParams, Window};
+use ssmd::sim::{simulate_fleet, Arrival, QueueSpec};
+use ssmd::util::json::Json;
+
+fn sim_gate() -> Result<()> {
+    let cfg = SchedConfig::default();
+
+    // Saturated mixed trace: the replica-scaling headline.
+    let specs = vec![
+        QueueSpec::new(12, 2, 0.03, QueuePolicy::default()),
+        QueueSpec::new(8, 1, 0.03, QueuePolicy {
+            weight: 2.0,
+            ..QueuePolicy::default()
+        }),
+    ];
+    let trace: Vec<Arrival> = (0..24u64)
+        .map(|k| Arrival {
+            t: 0.01 * k as f64,
+            queue: (k % 2) as usize,
+            n: 2,
+            seed: 5000 + k,
+            ..Arrival::default()
+        })
+        .collect();
+    let one = simulate_fleet(&specs, &trace, 1, &cfg, false);
+    let two = simulate_fleet(&specs, &trace, 2, &cfg, true);
+    if one.tokens != two.tokens {
+        return Err(anyhow!("replica count changed a token stream"));
+    }
+    let ratio = two.token_throughput() / one.token_throughput();
+    println!(
+        "sim: 1 replica {:.0} tok/s, 2 replicas {:.0} tok/s ({ratio:.2}x)",
+        one.token_throughput(),
+        two.token_throughput()
+    );
+    if ratio < 1.5 {
+        return Err(anyhow!("throughput scaling {ratio:.2}x < 1.5x"));
+    }
+
+    // Skewed burst: one 8-sequence arrival routes whole to replica 0;
+    // replica 1 can only work by adopting a migrated checkpoint.
+    let specs = vec![QueueSpec::new(8, 4, 0.05, QueuePolicy::default())];
+    let burst = vec![Arrival { n: 8, seed: 77, ..Arrival::default() }];
+    let single = simulate_fleet(&specs, &burst, 1, &cfg, false);
+    let moved = simulate_fleet(&specs, &burst, 2, &cfg, true);
+    if moved.migrations == 0 || moved.finished[1] == 0 {
+        return Err(anyhow!(
+            "skewed burst exercised no migration \
+             (migrations {}, finished on replica 1: {})",
+            moved.migrations, moved.finished[1]
+        ));
+    }
+    if moved.tokens != single.tokens {
+        return Err(anyhow!("migration changed a token stream bitwise"));
+    }
+    println!(
+        "sim: skewed burst migrated {} checkpoint(s), {} finished on the \
+         adopter, tokens bitwise identical",
+        moved.migrations, moved.finished[1]
+    );
+    Ok(())
+}
+
+fn mock_factory()
+    -> impl Fn() -> Result<ModelMap> + Clone + Send + 'static {
+    || {
+        let mut map: ModelMap = BTreeMap::new();
+        map.insert(
+            "mock".into(),
+            Box::new(MockModel::new(64, 12, 0x51d)) as Box<dyn EngineModel>,
+        );
+        Ok(map)
+    }
+}
+
+fn live_request(seed: u64) -> GenRequest {
+    GenRequest {
+        model: "mock".into(),
+        n_samples: 16,
+        sampler: SamplerChoice::Speculative(SpecParams {
+            window: Window::Cosine { dtau: 0.02 },
+            n_verify: 2,
+            temperature: 0.7,
+            ..Default::default()
+        }),
+        seed,
+        deterministic: true,
+        ..Default::default()
+    }
+}
+
+fn live_gate() -> Result<()> {
+    let cfg = || BatcherConfig {
+        max_wait: Duration::from_millis(1),
+        ..Default::default()
+    };
+    let baseline = Coordinator::start(mock_factory(), cfg())?;
+    let fleet = Coordinator::start_sharded(mock_factory(), cfg(), 2)?;
+
+    let expect = baseline.generate(live_request(4242))?;
+    let mut migrated = 0u64;
+    // Each attempt is a fresh skewed load (both replicas idle at send
+    // time -> the whole request lands on replica 0). Wall-clock timing
+    // decides *when* replica 1's idle poll sees the migration board, so
+    // retry until one fires; token equality is asserted on every try.
+    for _ in 0..200 {
+        let got = fleet.generate(live_request(4242))?;
+        if got.samples.len() != expect.samples.len() {
+            return Err(anyhow!("sharded sample count diverged"));
+        }
+        for (a, b) in expect.samples.iter().zip(&got.samples) {
+            if a.tokens != b.tokens {
+                return Err(anyhow!(
+                    "sharded response diverged from single-engine \
+                     baseline bitwise"
+                ));
+            }
+        }
+        let h = fleet.health()?;
+        migrated = h
+            .get("migrations")
+            .and_then(|m| m.as_f64())
+            .unwrap_or(0.0) as u64;
+        if migrated >= 1 {
+            break;
+        }
+    }
+    if migrated == 0 {
+        return Err(anyhow!("no live migration fired in 200 attempts"));
+    }
+
+    let h = fleet.health()?;
+    if h.get("ok").and_then(|b| b.as_bool()) != Some(true) {
+        return Err(anyhow!("sharded /healthz not ok"));
+    }
+    let n_engines = match h.get("engines") {
+        Some(Json::Arr(engines)) => engines.len(),
+        _ => 0,
+    };
+    if n_engines != 2 {
+        return Err(anyhow!("health engines array has {n_engines} entries"));
+    }
+    let snap = fleet.metrics.snapshot();
+    // Replica 0 is the migration origin, so its suffixed counters must
+    // exist (the bare fleet-wide `migrations` lives in /healthz).
+    for name in ["requests_e0", "requests_e1", "migrations_e0"] {
+        let present = snap
+            .get("counters")
+            .and_then(|c| c.get(name))
+            .is_some();
+        if !present {
+            return Err(anyhow!("metrics snapshot missing '{name}'"));
+        }
+    }
+    println!(
+        "live: {migrated} migration(s), responses bitwise identical to \
+         single-engine, per-replica health + metrics populated"
+    );
+    baseline.shutdown();
+    fleet.shutdown();
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    sim_gate()?;
+    live_gate()?;
+    println!("fleet smoke: PASS");
+    Ok(())
+}

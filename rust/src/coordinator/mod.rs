@@ -62,6 +62,7 @@
 
 pub mod batcher;
 pub mod request;
+pub mod router;
 pub mod sched;
 pub mod supervise;
 
@@ -87,8 +88,11 @@ use crate::util::simclock::MonotonicClock;
 pub use batcher::BatcherConfig;
 pub use request::{GenRequest, GenResponse, SamplerChoice, ScoreRequest,
                   ScoreResponse};
+pub use router::RouterState;
 pub use sched::{CrossQueueScheduler, QueueId, QueuePolicy, SchedConfig};
 pub use supervise::{Breaker, BreakerState, SupervisePolicy};
+
+use router::Migrant;
 
 /// Exact suffix of admission-backpressure rejection messages. The HTTP
 /// layer keys its 429 mapping on it (the vendored anyhow shim has no
@@ -212,7 +216,7 @@ impl<M: HybridModel> EngineModel for M {
 
 pub type ModelMap = BTreeMap<String, Box<dyn EngineModel>>;
 
-enum Job {
+pub(crate) enum Job {
     Generate {
         req: GenRequest,
         reply: mpsc::Sender<Result<GenResponse>>,
@@ -227,6 +231,15 @@ enum Job {
     },
     Health {
         reply: mpsc::Sender<Json>,
+    },
+    /// A sample finished (or definitively failed) on a replica that
+    /// adopted the sequence via checkpoint migration, delivered back to
+    /// the origin engine that owns the request's responder. `Err` is a
+    /// flattened message (the vendored anyhow has no typed errors).
+    Remote {
+        rid: u64,
+        idx: usize,
+        result: std::result::Result<Sample, String>,
     },
     Shutdown,
 }
@@ -266,10 +279,14 @@ impl Drop for Responder {
     }
 }
 
-/// Handle used by the server / examples; cheaply cloneable.
+/// Handle used by the server / examples; cheaply cloneable. One job
+/// channel per engine replica (`Coordinator::start` spawns one,
+/// [`Coordinator::start_sharded`] N); in sharded mode the shared
+/// [`RouterState`] picks the replica for each admission.
 #[derive(Clone)]
 pub struct Coordinator {
-    tx: mpsc::Sender<Job>,
+    txs: Vec<mpsc::Sender<Job>>,
+    router: Option<Arc<RouterState>>,
     pub metrics: Arc<Registry>,
 }
 
@@ -280,30 +297,54 @@ impl Coordinator {
     where
         F: FnOnce() -> Result<ModelMap> + Send + 'static,
     {
-        let (tx, rx) = mpsc::channel::<Job>();
         let metrics = Arc::new(Registry::default());
-        let m = metrics.clone();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        std::thread::Builder::new()
-            .name("ssmd-engine".into())
-            .spawn(move || {
-                let models = match factory() {
-                    Ok(models) => {
-                        let _ = ready_tx.send(Ok(()));
-                        models
-                    }
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(e));
-                        return;
-                    }
-                };
-                engine_loop(models, rx, m, batcher);
-            })
-            .expect("spawn engine thread");
-        ready_rx
-            .recv()
-            .map_err(|_| anyhow!("engine thread died during startup"))??;
-        Ok(Coordinator { tx, metrics })
+        let tx = spawn_engine(factory, batcher, metrics.clone(), None)?;
+        Ok(Coordinator { txs: vec![tx], router: None, metrics })
+    }
+
+    /// Spawn `n_engines` replica engine threads behind a shared router.
+    /// `factory` runs inside *each* thread (PJRT handles are not Send),
+    /// so every replica owns an identical model map, its own slot
+    /// tables, `StepPool`, and run queues. Admissions are routed
+    /// least-loaded; replicas publish load every loop, steal queued
+    /// work, and migrate mid-sequence checkpoints through the router's
+    /// board (migrated token streams stay bitwise identical — see
+    /// `SpecScheduler::adopt`). Replica `e`'s metrics are exported with
+    /// an `_e{e}` name suffix alongside a shared `migrations` counter.
+    pub fn start_sharded<F>(factory: F, batcher: BatcherConfig,
+                            n_engines: usize) -> Result<Coordinator>
+    where
+        F: Fn() -> Result<ModelMap> + Send + Clone + 'static,
+    {
+        let n = n_engines.max(1);
+        if n == 1 {
+            return Coordinator::start(factory, batcher);
+        }
+        let metrics = Arc::new(Registry::default());
+        let router = Arc::new(RouterState::new(n));
+        let mut txs = Vec::with_capacity(n);
+        for e in 0..n {
+            let (tx, rx) = mpsc::channel::<Job>();
+            let ctx = EngineCtx {
+                router: router.clone(),
+                engine_id: e,
+                tx: tx.clone(),
+            };
+            let tx = spawn_engine_on(factory.clone(), batcher.clone(),
+                                     metrics.clone(), Some(ctx), tx, rx)?;
+            txs.push(tx);
+        }
+        Ok(Coordinator { txs, router: Some(router), metrics })
+    }
+
+    /// Number of engine replicas behind this handle.
+    pub fn n_engines(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Shared router state (None in single-engine mode).
+    pub fn router(&self) -> Option<&Arc<RouterState>> {
+        self.router.as_ref()
     }
 
     // lint: serve-region — caller-side request paths: every failure
@@ -311,7 +352,10 @@ impl Coordinator {
     // a panic or a hang.
     pub fn generate(&self, req: GenRequest) -> Result<GenResponse> {
         let (reply, wait) = mpsc::channel();
-        self.tx
+        // Sharded: least-loaded replica takes the admission (ties to the
+        // lowest engine id); single-engine: the one channel.
+        let e = self.router.as_ref().map(|r| r.route()).unwrap_or(0);
+        self.txs[e]
             // lint: allow(clock-discipline) — caller-side wall stamp: the
             // engine backdates channel transit from it, and the caller
             // thread has no injected clock to share with the engine.
@@ -322,7 +366,8 @@ impl Coordinator {
 
     pub fn score(&self, req: ScoreRequest) -> Result<ScoreResponse> {
         let (reply, wait) = mpsc::channel();
-        self.tx
+        let e = self.router.as_ref().map(|r| r.route()).unwrap_or(0);
+        self.txs[e]
             .send(Job::Score { req, reply })
             .map_err(|_| anyhow!("engine thread gone"))?;
         wait.recv().map_err(|_| anyhow!("engine dropped reply"))?
@@ -330,7 +375,8 @@ impl Coordinator {
 
     pub fn models_info(&self) -> Result<Json> {
         let (reply, wait) = mpsc::channel();
-        self.tx
+        // Replicas are built from one factory: any replica's map serves.
+        self.txs[0]
             .send(Job::Info { reply })
             .map_err(|_| anyhow!("engine thread gone"))?;
         wait.recv().map_err(|_| anyhow!("engine dropped reply"))
@@ -339,18 +385,126 @@ impl Coordinator {
     /// Per-model supervision state for `/healthz`:
     /// `{"ok": <no breaker open>, "models": {name: "closed" | "open" |
     /// "half-open"}}`. `Err` means the engine thread itself is gone.
+    /// Sharded mode merges every replica (worst state per model wins)
+    /// and adds an `engines` array with each replica's own view plus
+    /// the router's migration/steal counters.
     pub fn health(&self) -> Result<Json> {
-        let (reply, wait) = mpsc::channel();
-        self.tx
-            .send(Job::Health { reply })
-            .map_err(|_| anyhow!("engine thread gone"))?;
-        wait.recv().map_err(|_| anyhow!("engine dropped reply"))
+        let Some(router) = self.router.as_ref() else {
+            let (reply, wait) = mpsc::channel();
+            self.txs[0]
+                .send(Job::Health { reply })
+                .map_err(|_| anyhow!("engine thread gone"))?;
+            return wait
+                .recv()
+                .map_err(|_| anyhow!("engine dropped reply"));
+        };
+        let mut ok = true;
+        let mut merged: BTreeMap<String, Json> = BTreeMap::new();
+        let mut engines = Vec::new();
+        for (e, tx) in self.txs.iter().enumerate() {
+            let (reply, wait) = mpsc::channel();
+            tx.send(Job::Health { reply })
+                .map_err(|_| anyhow!("engine {e} thread gone"))?;
+            let h = wait
+                .recv()
+                .map_err(|_| anyhow!("engine {e} dropped reply"))?;
+            if !h.get("ok").and_then(|b| b.as_bool()).unwrap_or(false) {
+                ok = false;
+            }
+            if let Some(Json::Obj(models)) = h.get("models") {
+                for (name, st) in models.iter() {
+                    let worse = match (
+                        merged.get(name).and_then(|s| s.as_str()),
+                        st.as_str(),
+                    ) {
+                        // Worst state per model across replicas:
+                        // open > half-open > closed.
+                        (Some("open"), _) => false,
+                        (Some("half-open"), Some("open")) => true,
+                        (Some("half-open"), _) => false,
+                        _ => true,
+                    };
+                    if worse {
+                        merged.insert(name.clone(), st.clone());
+                    }
+                }
+            }
+            engines.push(h);
+        }
+        Ok(Json::obj(vec![
+            ("ok", Json::Bool(ok)),
+            ("models", Json::Obj(merged)),
+            ("engines", Json::arr(engines)),
+            ("migrations", Json::num(router.migrations() as f64)),
+            ("steals", Json::num(router.steals() as f64)),
+        ]))
     }
 
     pub fn shutdown(&self) {
-        let _ = self.tx.send(Job::Shutdown);
+        for tx in &self.txs {
+            let _ = tx.send(Job::Shutdown);
+        }
     }
     // lint: end-serve-region
+}
+
+/// Spawn one engine thread with a fresh channel (single-engine path).
+fn spawn_engine<F>(factory: F, batcher: BatcherConfig,
+                   metrics: Arc<Registry>, ctx: Option<EngineCtx>)
+                   -> Result<mpsc::Sender<Job>>
+where
+    F: FnOnce() -> Result<ModelMap> + Send + 'static,
+{
+    let (tx, rx) = mpsc::channel::<Job>();
+    spawn_engine_on(factory, batcher, metrics, ctx, tx, rx)
+}
+
+/// Spawn one engine thread on an existing channel (sharded replicas
+/// pre-create theirs so the ctx can carry a clone of its own sender as
+/// the migration return address).
+fn spawn_engine_on<F>(factory: F, batcher: BatcherConfig,
+                      metrics: Arc<Registry>, ctx: Option<EngineCtx>,
+                      tx: mpsc::Sender<Job>, rx: mpsc::Receiver<Job>)
+                      -> Result<mpsc::Sender<Job>>
+where
+    F: FnOnce() -> Result<ModelMap> + Send + 'static,
+{
+    let name = match &ctx {
+        Some(c) => format!("ssmd-engine-{}", c.engine_id),
+        None => "ssmd-engine".into(),
+    };
+    let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+    std::thread::Builder::new()
+        .name(name)
+        .spawn(move || {
+            let models = match factory() {
+                Ok(models) => {
+                    let _ = ready_tx.send(Ok(()));
+                    models
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            engine_loop(models, rx, metrics, batcher, ctx);
+        })
+        .expect("spawn engine thread");
+    ready_rx
+        .recv()
+        .map_err(|_| anyhow!("engine thread died during startup"))??;
+    Ok(tx)
+}
+
+/// Sharded-mode context handed to each replica's engine loop.
+pub(crate) struct EngineCtx {
+    /// Shared router: load gauges, the migration board, counters.
+    router: Arc<RouterState>,
+    /// This replica's index (metric suffix, `SlotId` namespace base).
+    engine_id: usize,
+    /// This replica's own job sender — the migration return address
+    /// stamped into every `Migrant` it posts.
+    tx: mpsc::Sender<Job>,
 }
 
 /// Metric handles shared across the engine loop helpers.
@@ -395,38 +549,51 @@ struct EngineMetrics {
     c_deadline_sheds: Arc<Counter>,
     /// Gauge: number of models whose breaker is currently not closed.
     c_breaker_state: Arc<Counter>,
+    /// Sequences migrated out to another replica mid-run (sharded mode;
+    /// stays 0 on a single engine).
+    c_migrations: Arc<Counter>,
 }
 
 impl EngineMetrics {
     fn new(metrics: &Registry) -> EngineMetrics {
+        EngineMetrics::with_suffix(metrics, "")
+    }
+
+    /// Registry has name-keyed series only (no labels), so per-replica
+    /// metrics are the same names suffixed `_e{engine_id}`. The
+    /// single-engine path uses the empty suffix — every historical name
+    /// (and every test pinned on one) is unchanged.
+    fn with_suffix(metrics: &Registry, s: &str) -> EngineMetrics {
         EngineMetrics {
-            h_latency: metrics.histogram("generate_latency_s"),
-            h_queue: metrics.histogram("queue_wait_s"),
-            h_batch: metrics.histogram("batch_size"),
-            h_nfe: metrics.histogram("nfe_per_sample"),
-            h_occupancy: metrics.histogram("slot_occupancy"),
-            h_step: metrics.histogram("step_latency_s"),
-            h_step_model: metrics.histogram("step_model_s"),
-            h_step_draw: metrics.histogram("step_draw_s"),
-            h_step_lse: metrics.histogram("step_lse_s"),
-            h_step_accept: metrics.histogram("step_accept_s"),
-            h_pending: metrics.histogram("pending_depth"),
-            h_credit: metrics.histogram("queue_credit"),
-            c_reqs: metrics.counter("requests"),
-            c_samples: metrics.counter("samples"),
-            c_errors: metrics.counter("errors"),
-            c_backfills: metrics.counter("backfills"),
-            c_steps: metrics.counter("scheduler_steps"),
-            c_slo: metrics.counter("slo_violations"),
-            c_shed: metrics.counter("shed_requests"),
-            c_shed_seqs: metrics.counter("shed_seqs"),
-            c_preempt: metrics.counter("preemptions"),
-            c_resume: metrics.counter("resume_steps"),
-            c_preempt_fires: metrics.counter("preempt_fires"),
-            c_engine_faults: metrics.counter("engine_faults"),
-            c_retries: metrics.counter("retries"),
-            c_deadline_sheds: metrics.counter("deadline_sheds"),
-            c_breaker_state: metrics.counter("breaker_state"),
+            h_latency: metrics.histogram(&format!("generate_latency_s{s}")),
+            h_queue: metrics.histogram(&format!("queue_wait_s{s}")),
+            h_batch: metrics.histogram(&format!("batch_size{s}")),
+            h_nfe: metrics.histogram(&format!("nfe_per_sample{s}")),
+            h_occupancy: metrics.histogram(&format!("slot_occupancy{s}")),
+            h_step: metrics.histogram(&format!("step_latency_s{s}")),
+            h_step_model: metrics.histogram(&format!("step_model_s{s}")),
+            h_step_draw: metrics.histogram(&format!("step_draw_s{s}")),
+            h_step_lse: metrics.histogram(&format!("step_lse_s{s}")),
+            h_step_accept: metrics.histogram(&format!("step_accept_s{s}")),
+            h_pending: metrics.histogram(&format!("pending_depth{s}")),
+            h_credit: metrics.histogram(&format!("queue_credit{s}")),
+            c_reqs: metrics.counter(&format!("requests{s}")),
+            c_samples: metrics.counter(&format!("samples{s}")),
+            c_errors: metrics.counter(&format!("errors{s}")),
+            c_backfills: metrics.counter(&format!("backfills{s}")),
+            c_steps: metrics.counter(&format!("scheduler_steps{s}")),
+            c_slo: metrics.counter(&format!("slo_violations{s}")),
+            c_shed: metrics.counter(&format!("shed_requests{s}")),
+            c_shed_seqs: metrics.counter(&format!("shed_seqs{s}")),
+            c_preempt: metrics.counter(&format!("preemptions{s}")),
+            c_resume: metrics.counter(&format!("resume_steps{s}")),
+            c_preempt_fires: metrics.counter(&format!("preempt_fires{s}")),
+            c_engine_faults: metrics.counter(&format!("engine_faults{s}")),
+            c_retries: metrics.counter(&format!("retries{s}")),
+            c_deadline_sheds:
+                metrics.counter(&format!("deadline_sheds{s}")),
+            c_breaker_state: metrics.counter(&format!("breaker_state{s}")),
+            c_migrations: metrics.counter(&format!("migrations{s}")),
         }
     }
 }
@@ -467,6 +634,16 @@ struct RunQueue<'m> {
     lane: u64,
     /// slot -> (request id, sample index within the request).
     routes: BTreeMap<SlotId, (u64, usize)>,
+    /// Adopted (migrated-in) sequences: local slot id -> origin engine's
+    /// (request id, sample index, return channel). Kept apart from
+    /// `routes` — these rids live in *another* replica's inflight table,
+    /// and their finished samples travel back as `Job::Remote`.
+    remote_routes: BTreeMap<SlotId, (u64, usize, mpsc::Sender<Job>)>,
+    /// First request admitted on this batch key, kept as the migration
+    /// prototype: an adopter rebuilds an identical stepper from its
+    /// model + sampler (the checkpoint carries all per-sequence state,
+    /// so any same-key request serves).
+    proto: GenRequest,
     /// Whether the formation-time batch size was recorded.
     formed: bool,
     /// Checkpoints of residents evicted by preemption, held here — off
@@ -493,9 +670,26 @@ struct RunQueue<'m> {
 // lint: serve-region — the engine loop owns every in-flight responder;
 // a panic here (or a skipped reply) breaks answer-exactly-once.
 fn engine_loop(models: ModelMap, rx: mpsc::Receiver<Job>,
-               metrics: Arc<Registry>, cfg: BatcherConfig) {
-    let m = EngineMetrics::new(&metrics);
-    let mut rng = Pcg::new(0x55d);
+               metrics: Arc<Registry>, cfg: BatcherConfig,
+               ctx: Option<EngineCtx>) {
+    let m = match &ctx {
+        Some(c) => EngineMetrics::with_suffix(
+            &metrics, &format!("_e{}", c.engine_id)),
+        None => EngineMetrics::new(&metrics),
+    };
+    // Replica `e` mints SlotIds from `e << 40` upward: migrated
+    // checkpoints keep globally-unique ids in traces, and the adopter
+    // re-mints on arrival (`Stepper::adopt`) so routing tables never
+    // collide either way. Single-engine base stays 0 — id sequences
+    // (and the token-stream pins keyed on them) are unchanged.
+    let id_base = ctx
+        .as_ref()
+        .map(|c| (c.engine_id as u64) << 40)
+        .unwrap_or(0);
+    // Engine entropy diverges per replica (id_base mixes in) so two
+    // replicas' live-mode requests never share a stream; single-engine
+    // (base 0) keeps the historical seed exactly.
+    let mut rng = Pcg::new(0x55d ^ id_base);
     let mut req_counter: u64 = 0;
     let mut inflight: BTreeMap<u64, Inflight> = BTreeMap::new();
     let mut queues: Vec<RunQueue<'_>> = Vec::new();
@@ -513,9 +707,11 @@ fn engine_loop(models: ModelMap, rx: mpsc::Receiver<Job>,
     let mut xq = CrossQueueScheduler::new(
         Box::new(MonotonicClock::new()), &cfg.sched);
     let mut ready_buf: Vec<QueueId> = Vec::new();
-    // Preemption candidates (models with evictable residents), rebuilt
-    // each round like ready_buf.
-    let mut cand_buf: Vec<QueueId> = Vec::new();
+    // Preemption candidates (models with evictable residents, paired
+    // with their total residual work), rebuilt each round like
+    // ready_buf — the selector prefers high-residual victims among the
+    // over-entitled, so a nearly-finished batch is evicted last.
+    let mut cand_buf: Vec<(QueueId, u64)> = Vec::new();
     // Intra-model rotation cursors: the selector picks a *model*; that
     // model's own cursor rotates among its ready run queues (batch-key
     // variants) so they share the model's allocation fairly. The cursor
@@ -554,48 +750,90 @@ fn engine_loop(models: ModelMap, rx: mpsc::Receiver<Job>,
         // their sequences removed wherever they sit — pending, resident,
         // or parked.
         sweep_deadlines(&mut queues, &mut inflight, &mut xq, &m);
+        // Sharded: a replica whose sequences all migrated out has idle
+        // queues but a non-empty inflight table — it must keep looping
+        // to receive the `Job::Remote` results that answer them.
         let busy = queues
             .iter()
-            .any(|q| !q.stepper.is_idle() || !q.parked.is_empty());
+            .any(|q| !q.stepper.is_idle() || !q.parked.is_empty())
+            || (ctx.is_some() && !inflight.is_empty());
         if (draining || disconnected) && !busy {
             return; // nothing left to finish
         }
+        // Publish this replica's load before blocking or stepping, so
+        // admission routing and peers' migration decisions see it.
+        if let Some(c) = &ctx {
+            let load: usize = queues
+                .iter()
+                .map(|q| q.stepper.residual() + q.stepper.n_pending())
+                .sum();
+            c.router.publish(c.engine_id, load);
+        }
         if !draining && !busy {
-            // Idle: block for work, then hold a brief admission window so
-            // near-simultaneous requests share their first step.
-            match rx.recv() {
-                Ok(job) => {
-                    if handle_job(job, &models, &mut queues, &mut inflight,
-                                  &mut rng, &mut req_counter, &m, &cfg,
-                                  &mut xq, &pool, &breakers) {
-                        draining = true;
-                    }
-                }
-                Err(_) => return,
-            }
-            // lint: allow(clock-discipline) — anchors a real OS
-            // recv_timeout deadline; virtual time cannot wake a channel.
-            let deadline = Instant::now() + cfg.max_wait;
-            while !draining {
-                // lint: allow(clock-discipline) — remaining OS timeout
-                // for recv_timeout against the deadline above.
-                let now = Instant::now();
-                if now >= deadline {
-                    break;
-                }
-                match rx.recv_timeout(deadline - now) {
+            if let Some(c) = &ctx {
+                // Sharded idle: poll for jobs *and* adoptable
+                // checkpoints — a blocking recv would never see the
+                // migration board.
+                match rx.recv_timeout(std::time::Duration::from_millis(1))
+                {
                     Ok(job) => {
                         if handle_job(job, &models, &mut queues,
                                       &mut inflight, &mut rng,
                                       &mut req_counter, &m, &cfg,
-                                      &mut xq, &pool, &breakers) {
+                                      &mut xq, &pool, &breakers, id_base) {
                             draining = true;
                         }
                     }
-                    Err(mpsc::RecvTimeoutError::Timeout) => break,
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        adopt_migrants(c, &models, &mut queues, &mut xq,
+                                       &pool, &cfg, id_base);
+                    }
                     Err(mpsc::RecvTimeoutError::Disconnected) => {
                         disconnected = true;
+                    }
+                }
+            } else {
+                // Idle: block for work, then hold a brief admission
+                // window so near-simultaneous requests share their
+                // first step.
+                match rx.recv() {
+                    Ok(job) => {
+                        if handle_job(job, &models, &mut queues,
+                                      &mut inflight, &mut rng,
+                                      &mut req_counter, &m, &cfg,
+                                      &mut xq, &pool, &breakers, id_base) {
+                            draining = true;
+                        }
+                    }
+                    Err(_) => return,
+                }
+                // lint: allow(clock-discipline) — anchors a real OS
+                // recv_timeout deadline; virtual time cannot wake a
+                // channel.
+                let deadline = Instant::now() + cfg.max_wait;
+                while !draining {
+                    // lint: allow(clock-discipline) — remaining OS
+                    // timeout for recv_timeout against the deadline
+                    // above.
+                    let now = Instant::now();
+                    if now >= deadline {
                         break;
+                    }
+                    match rx.recv_timeout(deadline - now) {
+                        Ok(job) => {
+                            if handle_job(job, &models, &mut queues,
+                                          &mut inflight, &mut rng,
+                                          &mut req_counter, &m, &cfg,
+                                          &mut xq, &pool, &breakers,
+                                          id_base) {
+                                draining = true;
+                            }
+                        }
+                        Err(mpsc::RecvTimeoutError::Timeout) => break,
+                        Err(mpsc::RecvTimeoutError::Disconnected) => {
+                            disconnected = true;
+                            break;
+                        }
                     }
                 }
             }
@@ -608,11 +846,30 @@ fn engine_loop(models: ModelMap, rx: mpsc::Receiver<Job>,
                         if handle_job(job, &models, &mut queues,
                                       &mut inflight, &mut rng,
                                       &mut req_counter, &m, &cfg,
-                                      &mut xq, &pool, &breakers) {
+                                      &mut xq, &pool, &breakers, id_base) {
                             draining = true;
                             break;
                         }
                     }
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        disconnected = true;
+                        break;
+                    }
+                }
+            }
+        } else if ctx.is_some() {
+            // Draining, sharded: the channel stays open only for the
+            // `Job::Remote` results that answer requests whose
+            // sequences migrated out. New work is refused (its reply
+            // sender drops, answering "engine dropped reply").
+            loop {
+                match rx.try_recv() {
+                    Ok(Job::Remote { rid, idx, result }) => {
+                        deliver_remote(rid, idx, result, &mut queues,
+                                       &mut inflight, &mut xq, &m);
+                    }
+                    Ok(_) => {}
                     Err(mpsc::TryRecvError::Empty) => break,
                     Err(mpsc::TryRecvError::Disconnected) => {
                         disconnected = true;
@@ -728,11 +985,18 @@ fn engine_loop(models: ModelMap, rx: mpsc::Receiver<Job>,
             // see `RunQueue::parked`.
             cand_buf.clear();
             for q in queues.iter() {
-                if q.parked.is_empty()
-                    && q.stepper.n_active() > 0
-                    && !cand_buf.contains(&q.sched_id)
-                {
-                    cand_buf.push(q.sched_id);
+                if q.parked.is_empty() && q.stepper.n_active() > 0 {
+                    let res = q.stepper.residual() as u64;
+                    match cand_buf
+                        .iter_mut()
+                        .find(|(sid, _)| *sid == q.sched_id)
+                    {
+                        // A model's residual is summed across its
+                        // batch-key run queues — the victim policy
+                        // ranks models, not individual queues.
+                        Some((_, r)) => *r += res,
+                        None => cand_buf.push((q.sched_id, res)),
+                    }
                 }
             }
             if let Some((trigger, victim)) = xq.preempt_check(&cand_buf) {
@@ -760,7 +1024,31 @@ fn engine_loop(models: ModelMap, rx: mpsc::Receiver<Job>,
                     m.c_preempt.add(q.parked.len() as u64);
                     m.c_preempt_fires.inc();
                     q.parked_trigger = Some(trigger);
+                    // Charge the victim's checkpoint budget with the
+                    // redo work just parked (progress a resume must
+                    // replay): a queue evicted past
+                    // `SchedConfig::checkpoint_budget` stops being a
+                    // victim, so evict/resume cycles cannot livelock it.
+                    let redo: u64 = q
+                        .parked
+                        .iter()
+                        .map(|ck| ck.progress() as u64)
+                        .sum();
+                    xq.charge_preemption(victim, redo);
                 }
+            }
+        }
+        // Migration: while peers sit idle and the board is clear, shed
+        // one resident per round to the fleet. Eviction/adoption is
+        // bitwise-identical continuation, so this trades only a little
+        // checkpoint plumbing for a whole extra engine's throughput.
+        if let Some(c) = &ctx {
+            if !draining
+                && !disconnected
+                && c.router.someone_else_idle(c.engine_id)
+                && c.router.board_depth() == 0
+            {
+                migrate_out(c, &mut queues, &inflight, &m);
             }
         }
         if !stepped && busy {
@@ -789,9 +1077,14 @@ fn handle_job<'m>(job: Job, models: &'m ModelMap,
                   req_counter: &mut u64, m: &EngineMetrics,
                   cfg: &BatcherConfig, xq: &mut CrossQueueScheduler,
                   pool: &Arc<StepPool>,
-                  breakers: &BTreeMap<String, Breaker>) -> bool {
+                  breakers: &BTreeMap<String, Breaker>,
+                  id_base: u64) -> bool {
     match job {
         Job::Shutdown => true,
+        Job::Remote { rid, idx, result } => {
+            deliver_remote(rid, idx, result, queues, inflight, xq, m);
+            false
+        }
         Job::Info { reply } => {
             let obj = Json::Obj(
                 models.iter().map(|(k, v)| (k.clone(), v.info())).collect(),
@@ -827,7 +1120,8 @@ fn handle_job<'m>(job: Job, models: &'m ModelMap,
         }
         Job::Generate { req, reply, enqueued } => {
             admit_generate(models, queues, inflight, rng, req_counter, m,
-                           cfg, xq, pool, breakers, req, reply, enqueued);
+                           cfg, xq, pool, breakers, req, reply, enqueued,
+                           id_base);
             false
         }
     }
@@ -844,7 +1138,7 @@ fn admit_generate<'m>(models: &'m ModelMap, queues: &mut Vec<RunQueue<'m>>,
                       pool: &Arc<StepPool>,
                       breakers: &BTreeMap<String, Breaker>, req: GenRequest,
                       reply: mpsc::Sender<Result<GenResponse>>,
-                      enqueued: Instant) {
+                      enqueued: Instant, id_base: u64) {
     // Guard the reply channel immediately: every path out of admission
     // either sends explicitly or drops the responder, which itself sends
     // a teardown error — the client is answered exactly once, always.
@@ -967,7 +1261,9 @@ fn admit_generate<'m>(models: &'m ModelMap, queues: &mut Vec<RunQueue<'m>>,
     let qi = match existing {
         Some(qi) => qi,
         None => match model.stepper(&req.sampler, pool.clone()) {
-            Ok(stepper) => {
+            Ok(mut stepper) => {
+                // Per-replica SlotId namespace (base 0 single-engine).
+                stepper.set_id_base(id_base);
                 // `--fault-plan` wiring: a scripted plan for this model
                 // wraps the fresh run queue's stepper, firing at step
                 // granularity (each run queue counts its own steps).
@@ -982,6 +1278,8 @@ fn admit_generate<'m>(models: &'m ModelMap, queues: &mut Vec<RunQueue<'m>>,
                     sched_id,
                     lane,
                     routes: BTreeMap::new(),
+                    remote_routes: BTreeMap::new(),
+                    proto: req.clone(),
                     formed: false,
                     parked: Vec::new(),
                     parked_trigger: None,
@@ -1104,6 +1402,18 @@ fn step_queue(q: &mut RunQueue<'_>, inflight: &mut BTreeMap<u64, Inflight>,
     m.c_resume.add(q.stepper.resumes() - resumes_before);
 
     for (sid, sample) in finished {
+        // Adopted (migrated-in) sequence: the sample travels home to
+        // the origin engine, which owns the request's responder. A
+        // closed origin channel means that engine already tore down and
+        // answered its requests — drop silently.
+        if let Some((rid, idx, origin)) = q.remote_routes.remove(&sid) {
+            let _ = origin.send(Job::Remote {
+                rid,
+                idx,
+                result: Ok(sample),
+            });
+            continue;
+        }
         // Routing desyncs would be engine bugs; a panic here would tear
         // down every in-flight request, so degrade to dropping the one
         // sample instead (debug builds still assert).
@@ -1205,6 +1515,17 @@ fn quarantine_queue(q: &mut RunQueue<'_>,
     for (&rid, &k) in unplaced.iter() {
         xq.cancel_enqueue(q.sched_id, q.lane, rid, k);
     }
+    // Adopted sequences belong to requests on their origin engines:
+    // report the failure home instead of answering locally. A closed
+    // origin channel means that engine already tore down (and answered
+    // its requests on exit) — nothing more to do for those.
+    for (_, (rid, idx, origin)) in std::mem::take(&mut q.remote_routes) {
+        let _ = origin.send(Job::Remote {
+            rid,
+            idx,
+            result: Err(msg.to_string()),
+        });
+    }
     // Answer every request routed through this queue, exactly once. The
     // queue is idle afterwards, so the engine loop's retain drops it;
     // a later request on the same batch key builds a fresh stepper.
@@ -1274,6 +1595,222 @@ fn sweep_deadlines(queues: &mut Vec<RunQueue<'_>>,
             inf.model,
             inf.enqueued.elapsed().as_secs_f64()
         )));
+    }
+}
+
+/// Shed one resident sequence to the migration board. Policy: evict the
+/// lowest-progress resident of the busiest eligible queue (>= 2 active,
+/// so a local resident always remains and the queue keeps stepping).
+/// Only deadline-less requests migrate — the deadline sweep needs the
+/// sequence local to enforce its budget. Eviction/adoption preserves the
+/// per-sequence RNG stream, so the migrated token stream stays bitwise
+/// identical to an unmigrated same-seed run.
+fn migrate_out(ctx: &EngineCtx, queues: &mut [RunQueue<'_>],
+               inflight: &BTreeMap<u64, Inflight>, m: &EngineMetrics) {
+    let mut best: Option<usize> = None;
+    for (i, q) in queues.iter().enumerate() {
+        if q.parked.is_empty() && q.stepper.n_active() >= 2 {
+            let better = match best {
+                None => true,
+                Some(j) => {
+                    q.stepper.n_active() > queues[j].stepper.n_active()
+                }
+            };
+            if better {
+                best = Some(i);
+            }
+        }
+    }
+    let Some(qi) = best else { return };
+    let q = &mut queues[qi];
+    let Some(ck) = q.stepper.evict_lowest() else { return };
+    let sid = ck.id();
+    // Eligibility is only knowable after the evict names the victim;
+    // an ineligible sequence resumes in place, which is bitwise-free.
+    let eligible = q
+        .routes
+        .get(&sid)
+        .and_then(|&(rid, _)| inflight.get(&rid))
+        .map(|inf| inf.deadline.is_none())
+        .unwrap_or(false);
+    if !eligible {
+        q.stepper.resume(ck);
+        return;
+    }
+    let Some((rid, idx)) = q.routes.remove(&sid) else {
+        debug_assert!(false, "eligible migrant lost its route");
+        q.stepper.resume(ck);
+        return;
+    };
+    m.c_migrations.inc();
+    ctx.router.post(Migrant {
+        ck,
+        proto: q.proto.clone(),
+        rid,
+        idx,
+        origin: ctx.tx.clone(),
+    });
+}
+
+/// Adopt checkpoints posted on the migration board: rebuild (or reuse) a
+/// run queue matching each migrant's batch key, re-mint its slot id in
+/// this replica's namespace, and record the origin-engine return route.
+/// Returns the number adopted (an idle replica uses it to decide whether
+/// this poll round found work).
+fn adopt_migrants<'m>(ctx: &EngineCtx, models: &'m ModelMap,
+                      queues: &mut Vec<RunQueue<'m>>,
+                      xq: &mut CrossQueueScheduler, pool: &Arc<StepPool>,
+                      cfg: &BatcherConfig, id_base: u64) -> usize {
+    let migrants = ctx.router.take(8);
+    let mut adopted = 0usize;
+    for mig in migrants {
+        let Some(model) = models.get(&mig.proto.model) else {
+            // Replicas share one factory, so this is defensive: report
+            // home rather than strand the request.
+            let _ = mig.origin.send(Job::Remote {
+                rid: mig.rid,
+                idx: mig.idx,
+                result: Err(format!(
+                    "migration target lacks model '{}'", mig.proto.model
+                )),
+            });
+            continue;
+        };
+        let key = mig.proto.batch_key();
+        let qi = match queues.iter().position(|q| q.key == key) {
+            Some(qi) => qi,
+            None => match model.stepper(&mig.proto.sampler, pool.clone()) {
+                Ok(mut stepper) => {
+                    stepper.set_id_base(id_base);
+                    let stepper = match cfg.faults.get(&mig.proto.model) {
+                        Some(plan) => Box::new(FaultyStepper::new(
+                            stepper, plan.clone()))
+                            as Box<dyn Stepper + 'm>,
+                        None => stepper,
+                    };
+                    let sched_id = xq.register(
+                        &mig.proto.model,
+                        cfg.sched.resolve(&mig.proto.model),
+                    );
+                    queues.push(RunQueue {
+                        key,
+                        stepper,
+                        sched_id,
+                        // Local request ids count up from 0; keep the
+                        // adopted queue's lane disjoint from them.
+                        lane: u64::MAX ^ mig.rid,
+                        routes: BTreeMap::new(),
+                        remote_routes: BTreeMap::new(),
+                        proto: mig.proto.clone(),
+                        // No local admission will observe formation:
+                        // skip the batch-size observation on first step.
+                        formed: true,
+                        parked: Vec::new(),
+                        parked_trigger: None,
+                        retries: 0,
+                        not_before: 0.0,
+                    });
+                    queues.len() - 1
+                }
+                Err(e) => {
+                    let _ = mig.origin.send(Job::Remote {
+                        rid: mig.rid,
+                        idx: mig.idx,
+                        result: Err(e.to_string()),
+                    });
+                    continue;
+                }
+            },
+        };
+        let q = &mut queues[qi];
+        let sid = q.stepper.adopt(mig.ck);
+        q.remote_routes.insert(sid, (mig.rid, mig.idx, mig.origin));
+        adopted += 1;
+    }
+    adopted
+}
+
+/// Deliver a `Job::Remote` result on the origin engine: fill the sample
+/// slot of the request that migrated the sequence out, answering the
+/// request when its last sample lands. A remote failure purges the
+/// request's remaining local sequences and answers with an error, once —
+/// mirroring what `quarantine_queue` does for a local failure.
+fn deliver_remote(rid: u64, idx: usize,
+                  result: std::result::Result<Sample, String>,
+                  queues: &mut Vec<RunQueue<'_>>,
+                  inflight: &mut BTreeMap<u64, Inflight>,
+                  xq: &mut CrossQueueScheduler, m: &EngineMetrics) {
+    match result {
+        Ok(sample) => {
+            let completed = {
+                // A missing request means a deadline sweep or quarantine
+                // already answered it; the late sample is dropped.
+                let Some(inf) = inflight.get_mut(&rid) else { return };
+                if idx >= inf.got.len() || inf.got[idx].is_some() {
+                    debug_assert!(false, "remote result misrouted");
+                    return;
+                }
+                m.h_nfe.observe(sample.nfe);
+                inf.got[idx] = Some(sample);
+                inf.remaining -= 1;
+                inf.remaining == 0
+            };
+            if completed {
+                let Some(inf) = inflight.remove(&rid) else { return };
+                let wall = inf.enqueued.elapsed().as_secs_f64();
+                m.h_latency.observe(wall);
+                m.c_samples.add(inf.got.len() as u64);
+                let samples: Vec<Sample> =
+                    inf.got.into_iter().flatten().collect();
+                inf.reply.send(Ok(GenResponse {
+                    model: inf.model,
+                    samples,
+                    wall_s: wall,
+                }));
+            }
+        }
+        Err(msg) => {
+            purge_request(rid, queues, xq);
+            let Some(inf) = inflight.remove(&rid) else { return };
+            m.c_errors.inc();
+            inf.reply.send(Err(anyhow!(
+                "model '{}' failed while serving this request on a \
+                 migration target: {msg}",
+                inf.model
+            )));
+        }
+    }
+}
+
+/// Remove every local sequence of one request, wherever it sits —
+/// the per-request inner loop of `sweep_deadlines`, reused when a
+/// migrated-out sibling fails remotely.
+fn purge_request(rid: u64, queues: &mut Vec<RunQueue<'_>>,
+                 xq: &mut CrossQueueScheduler) {
+    for q in queues.iter_mut() {
+        let sids: Vec<SlotId> = q
+            .routes
+            .iter()
+            .filter(|&(_, &(r, _))| r == rid)
+            .map(|(&sid, _)| sid)
+            .collect();
+        if sids.is_empty() {
+            continue;
+        }
+        let mut unplaced = 0usize;
+        for &sid in &sids {
+            if q.stepper.evict(sid).is_some() {
+                // Resident: stamp was popped at placement.
+            } else if q.stepper.remove_pending(sid) {
+                unplaced += 1;
+            } else {
+                q.parked.retain(|ck| ck.id() != sid);
+            }
+            q.routes.remove(&sid);
+        }
+        if unplaced > 0 {
+            xq.cancel_enqueue(q.sched_id, q.lane, rid, unplaced);
+        }
     }
 }
 // lint: end-serve-region
@@ -2105,5 +2642,117 @@ mod tests {
                 || err.to_string().contains("engine dropped reply"),
             "{err}"
         );
+    }
+
+    /// Cloneable factory for sharded starts: each replica thread builds
+    /// its own identical model map.
+    fn sharded_mock(n: usize) -> Coordinator {
+        Coordinator::start_sharded(
+            || {
+                let mut m: ModelMap = BTreeMap::new();
+                m.insert(
+                    "mock".into(),
+                    Box::new(MockModel::new(8, 4, 5)) as Box<dyn EngineModel>,
+                );
+                Ok(m)
+            },
+            BatcherConfig {
+                max_wait: Duration::from_millis(1),
+                ..Default::default()
+            },
+            n,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn sharded_roundtrips_and_answers_every_request_once() {
+        let c = sharded_mock(2);
+        assert_eq!(c.n_engines(), 2);
+        // Concurrent clients spread across replicas by the router; every
+        // request must come back answered, exactly once each.
+        let mut handles = Vec::new();
+        for k in 0..8u64 {
+            let c = c.clone();
+            handles.push(std::thread::spawn(move || {
+                c.generate(GenRequest {
+                    model: "mock".into(),
+                    n_samples: 2,
+                    seed: k,
+                    deterministic: true,
+                    ..Default::default()
+                })
+            }));
+        }
+        for h in handles {
+            let resp = h.join().unwrap().unwrap();
+            assert_eq!(resp.samples.len(), 2);
+        }
+        c.shutdown();
+    }
+
+    /// The response of a deterministic request depends only on the
+    /// request — not on which replica served it. Sharding (including its
+    /// per-replica SlotId namespace and RNG stream split) must leave
+    /// token streams bitwise identical to the single-engine path.
+    #[test]
+    fn sharded_deterministic_response_matches_single_engine() {
+        let req = || GenRequest {
+            model: "mock".into(),
+            n_samples: 3,
+            seed: 1234,
+            deterministic: true,
+            ..Default::default()
+        };
+        let single = mock_coordinator();
+        let a = single.generate(req()).unwrap();
+        single.shutdown();
+        let sharded = sharded_mock(3);
+        let b = sharded.generate(req()).unwrap();
+        sharded.shutdown();
+        let toks =
+            |r: &GenResponse| -> Vec<Vec<i32>> {
+                r.samples.iter().map(|s| s.tokens.clone()).collect()
+            };
+        assert_eq!(toks(&a), toks(&b),
+                   "replica choice changed a deterministic token stream");
+    }
+
+    /// Sharded `/healthz` merges replica views: per-replica entries under
+    /// `engines`, worst-per-model summary on top, router counters along.
+    #[test]
+    fn sharded_health_reports_per_replica_views() {
+        let c = sharded_mock(2);
+        let h = c.health().unwrap();
+        assert_eq!(h.get("ok").and_then(|b| b.as_bool()), Some(true));
+        let Some(Json::Arr(engines)) = h.get("engines") else {
+            panic!("missing engines array: {h:?}")
+        };
+        assert_eq!(engines.len(), 2);
+        for e in engines {
+            assert_eq!(e.get("ok").and_then(|b| b.as_bool()), Some(true));
+        }
+        assert!(h.get("migrations").is_some());
+        assert!(h.get("steals").is_some());
+        c.shutdown();
+    }
+
+    /// `start_sharded(.., 1)` collapses to the single-engine path: no
+    /// router, and metric names keep their historical (unsuffixed) form.
+    #[test]
+    fn sharded_n1_is_single_engine() {
+        let c = sharded_mock(1);
+        assert_eq!(c.n_engines(), 1);
+        assert!(c.router().is_none());
+        let resp = c
+            .generate(GenRequest {
+                model: "mock".into(),
+                n_samples: 1,
+                ..Default::default()
+            })
+            .unwrap();
+        assert_eq!(resp.samples.len(), 1);
+        assert!(c.metrics.counter("requests").get() >= 1);
+        c.shutdown();
     }
 }

@@ -1,0 +1,186 @@
+//! Cross-engine router: extends the virtual-time selector across
+//! replicas. Shared by every engine thread spawned by
+//! `Coordinator::start_sharded` and by the caller-side admission path.
+//!
+//! Three mechanisms, all built on per-replica load gauges the engine
+//! loops publish once per outer iteration:
+//!   * **admission routing** — a new request goes to the least-loaded
+//!     replica (ties to the lowest engine id, keeping placement
+//!     deterministic for a given load vector);
+//!   * **work stealing / migration** — a hot replica evicts a resident
+//!     mid-sequence as a `SeqCheckpoint` and posts it on the board; an
+//!     idle replica adopts it (`SpecScheduler::adopt` re-mints the slot
+//!     id locally) and sends the finished sample back to the origin
+//!     engine, which owns the request's responder. Checkpoints carry
+//!     the per-sequence RNG stream, so a migrated sequence's token
+//!     stream is bitwise identical to an unmigrated same-seed run.
+//!
+//! The board is a plain mutexed vec — migrations are rare (only fired
+//! when another replica sits idle) and the critical sections are a
+//! push/drain, so contention is negligible next to a model step.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::Mutex;
+
+use crate::engine::SeqCheckpoint;
+
+use super::request::GenRequest;
+use super::Job;
+
+/// One mid-sequence checkpoint in transit between replicas.
+pub(crate) struct Migrant {
+    /// The evicted sequence (RNG stream and progress included).
+    pub ck: SeqCheckpoint,
+    /// A request with the same `batch_key` as the sequence's run queue —
+    /// the adopter rebuilds a matching stepper (model + sampler) from
+    /// it. The checkpoint itself carries all per-sequence state, so any
+    /// same-key request works as the prototype.
+    pub proto: GenRequest,
+    /// Origin-side request id / sample index the result routes back to.
+    pub rid: u64,
+    pub idx: usize,
+    /// The origin engine's job channel (`Job::Remote` return path).
+    pub origin: mpsc::Sender<Job>,
+}
+
+/// State shared between the replicas of one sharded coordinator.
+pub struct RouterState {
+    /// Per-replica load gauges: resident residual + pending count,
+    /// published by each engine loop once per outer iteration. Relaxed
+    /// ordering everywhere — the values are advisory (a stale read
+    /// routes one request slightly unevenly, nothing breaks).
+    loads: Vec<AtomicUsize>,
+    /// Migration board: checkpoints posted by hot replicas, waiting for
+    /// an idle replica to adopt them.
+    board: Mutex<Vec<Migrant>>,
+    /// Sequences posted for migration (each post counts once).
+    migrations: AtomicU64,
+    /// Board drains by an adopting replica that got >= 1 migrant.
+    steals: AtomicU64,
+}
+
+// lint: serve-region — admission routing and the migration board sit on
+// every sharded request path; a panic here strands checkpoints (and the
+// requests routed through them) fleet-wide.
+impl RouterState {
+    pub fn new(n_engines: usize) -> RouterState {
+        RouterState {
+            loads: (0..n_engines).map(|_| AtomicUsize::new(0)).collect(),
+            board: Mutex::new(Vec::new()),
+            migrations: AtomicU64::new(0),
+            steals: AtomicU64::new(0),
+        }
+    }
+
+    pub fn n_engines(&self) -> usize {
+        self.loads.len()
+    }
+
+    /// Least-loaded admission routing (ties to the lowest engine id).
+    pub fn route(&self) -> usize {
+        let mut best = 0usize;
+        let mut best_load = usize::MAX;
+        for (i, l) in self.loads.iter().enumerate() {
+            let v = l.load(Ordering::Relaxed);
+            if v < best_load {
+                best = i;
+                best_load = v;
+            }
+        }
+        best
+    }
+
+    /// Publish a replica's current load (engine loop, once per round).
+    /// Out-of-range ids are ignored rather than indexed — the router
+    /// must never panic an engine thread.
+    pub(crate) fn publish(&self, engine: usize, load: usize) {
+        if let Some(l) = self.loads.get(engine) {
+            l.store(load, Ordering::Relaxed);
+        }
+    }
+
+    pub fn load_of(&self, engine: usize) -> usize {
+        self.loads
+            .get(engine)
+            .map(|l| l.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    /// True when some *other* replica is idle — the signal a busy
+    /// replica uses to decide migration is worth the evict/adopt cost.
+    pub(crate) fn someone_else_idle(&self, engine: usize) -> bool {
+        self.loads
+            .iter()
+            .enumerate()
+            .any(|(i, l)| i != engine && l.load(Ordering::Relaxed) == 0)
+    }
+
+    /// Post a checkpoint for adoption.
+    pub(crate) fn post(&self, m: Migrant) {
+        self.migrations.fetch_add(1, Ordering::Relaxed);
+        match self.board.lock() {
+            Ok(mut b) => b.push(m),
+            // A poisoned board means a replica panicked mid-push; the
+            // migrant is lost, but its Responder-backed request still
+            // gets a teardown answer from the origin engine's exit.
+            Err(_) => {}
+        }
+    }
+
+    /// Adopt up to `max` posted checkpoints (idle replicas call this).
+    pub(crate) fn take(&self, max: usize) -> Vec<Migrant> {
+        let mut b = match self.board.lock() {
+            Ok(b) => b,
+            Err(_) => return Vec::new(),
+        };
+        let k = b.len().min(max);
+        let taken: Vec<Migrant> = b.drain(..k).collect();
+        if !taken.is_empty() {
+            self.steals.fetch_add(1, Ordering::Relaxed);
+        }
+        taken
+    }
+
+    /// Checkpoints currently parked on the board.
+    pub fn board_depth(&self) -> usize {
+        self.board.lock().map(|b| b.len()).unwrap_or(0)
+    }
+
+    pub fn migrations(&self) -> u64 {
+        self.migrations.load(Ordering::Relaxed)
+    }
+
+    pub fn steals(&self) -> u64 {
+        self.steals.load(Ordering::Relaxed)
+    }
+}
+// lint: end-serve-region
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn route_picks_least_loaded_with_low_id_ties() {
+        let r = RouterState::new(3);
+        assert_eq!(r.route(), 0, "all-zero loads tie to engine 0");
+        r.publish(0, 5);
+        r.publish(1, 2);
+        r.publish(2, 2);
+        assert_eq!(r.route(), 1, "tie between 1 and 2 goes low");
+        r.publish(1, 9);
+        assert_eq!(r.route(), 2);
+    }
+
+    #[test]
+    fn idle_detection_excludes_self() {
+        let r = RouterState::new(2);
+        r.publish(0, 7);
+        r.publish(1, 0);
+        assert!(r.someone_else_idle(0));
+        assert!(!r.someone_else_idle(1), "own idleness does not count");
+        r.publish(1, 3);
+        assert!(!r.someone_else_idle(0));
+    }
+}

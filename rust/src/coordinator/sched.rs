@@ -49,14 +49,23 @@
 //! * **Preemption** — when an SLO queue's pressure sits at its boost
 //!   ceiling (wait EWMA >= slo · `max_boost`) with pending work for
 //!   [`SchedConfig::preempt_after`] consecutive rounds — boosting alone
-//!   freed nothing — [`CrossQueueScheduler::preempt_check`] names the
-//!   most over-entitlement `preempt:on` queue as a victim. The *caller*
-//!   (engine loop / sim harness) evicts that queue's residents as
-//!   `engine::SeqCheckpoint`s, pauses it, and resumes the checkpoints
-//!   once [`CrossQueueScheduler::preempt_cleared`] reports the trigger's
-//!   pressure gone (always on drain). Checkpoint/resume is bitwise
-//!   deterministic, so preemption trades only *when* bulk work runs,
-//!   never *what* it produces.
+//!   freed nothing — [`CrossQueueScheduler::preempt_check`] names a
+//!   `preempt:on` victim: over-entitlement candidates (vtime above the
+//!   trigger's) outrank the rest, and within a class the queue with the
+//!   most caller-reported **residual work** wins — evicting a
+//!   nearly-finished resident parks the most completed work for the
+//!   least freed capacity, so low-residual queues are preempted last.
+//!   The *caller* (engine loop / sim harness) evicts that queue's
+//!   residents as `engine::SeqCheckpoint`s, pauses it, reports the
+//!   parked progress via [`CrossQueueScheduler::charge_preemption`],
+//!   and resumes the checkpoints once
+//!   [`CrossQueueScheduler::preempt_cleared`] reports the trigger's
+//!   pressure gone (always on drain). A per-queue **checkpoint budget**
+//!   ([`SchedConfig::checkpoint_budget`]) caps the cumulative charged
+//!   redo steps: a queue past its budget stops being a victim, so
+//!   repeated evict/resume cycles cannot livelock a bulk queue.
+//!   Checkpoint/resume is bitwise deterministic, so preemption trades
+//!   only *when* bulk work runs, never *what* it produces.
 //!
 //! A queue that goes idle keeps its state but has its `vtime` caught up
 //! to the ready frontier when it next becomes ready, so parked
@@ -218,6 +227,16 @@ pub struct SchedConfig {
     /// [`CrossQueueScheduler::preempt_check`] names a victim. CLI:
     /// `--preempt-after N`.
     pub preempt_after: u64,
+    /// Per-queue preemption redo budget: cumulative evicted progress
+    /// (ordering positions parked behind checkpoints, reported by the
+    /// caller via [`CrossQueueScheduler::charge_preemption`]) beyond
+    /// which a queue stops being named a preemption victim. Bounds the
+    /// total completed work evict/resume cycles can park for any one
+    /// queue — without it, sustained SLO pressure can livelock a bulk
+    /// queue by re-evicting it forever. `0` disables preemption
+    /// entirely (every candidate counts as already exhausted). CLI:
+    /// `--checkpoint-budget N`.
+    pub checkpoint_budget: u64,
     /// Retry / circuit-breaker policy of the engine's supervision layer
     /// (see `coordinator::supervise`).
     pub supervise: crate::coordinator::supervise::SupervisePolicy,
@@ -237,6 +256,7 @@ impl Default for SchedConfig {
             max_boost: 8.0,
             step_threads: 1,
             preempt_after: 4,
+            checkpoint_budget: 4096,
             supervise:
                 crate::coordinator::supervise::SupervisePolicy::default(),
             default_priority: 0,
@@ -327,6 +347,9 @@ struct QueueState {
     pressure_rounds: u64,
     /// Times this queue's pressure triggered a preemption.
     preempt_fires: u64,
+    /// Cumulative redo steps charged against this queue by preemptions
+    /// it was the victim of (the checkpoint-budget subject).
+    redo_charged: u64,
 }
 
 /// The cross-queue selector: pure state + an injected clock.
@@ -336,6 +359,7 @@ pub struct CrossQueueScheduler {
     wait_alpha: f64,
     max_boost: f64,
     preempt_after: u64,
+    checkpoint_budget: u64,
     queues: Vec<QueueState>,
     /// Ready-frontier virtual time (max vtime ever charged).
     vnow: f64,
@@ -359,6 +383,7 @@ impl CrossQueueScheduler {
             wait_alpha: cfg.wait_alpha.clamp(1e-6, 1.0),
             max_boost: cfg.max_boost.max(1.0),
             preempt_after: cfg.preempt_after.max(1),
+            checkpoint_budget: cfg.checkpoint_budget,
             queues: Vec::new(),
             vnow: 0.0,
             cost_ewma: 0.0,
@@ -403,6 +428,7 @@ impl CrossQueueScheduler {
             shed_reqs: 0,
             pressure_rounds: 0,
             preempt_fires: 0,
+            redo_charged: 0,
         });
         QueueId(self.queues.len() - 1)
     }
@@ -739,13 +765,19 @@ impl CrossQueueScheduler {
     /// pending work for at least `preempt_after` consecutive rounds —
     /// i.e. boosting alone is not freeing slots fast enough — and a
     /// preemptible victim exists. `candidates` are the queues the caller
-    /// knows to hold evictable residents; among those with
-    /// `QueuePolicy::preempt` (the trigger excluded) the one **most over
-    /// its entitlement** (largest vtime — it consumed the most weighted
-    /// service) is named. Firing resets the trigger's streak, so the
-    /// next fire needs `preempt_after` fresh rounds of sustained
-    /// pressure (bounded thrash).
-    pub fn preempt_check(&mut self, candidates: &[QueueId])
+    /// knows to hold evictable residents, each paired with its
+    /// **residual work** (ordering positions its residents still have to
+    /// decide — `engine` callers read `Stepper::residual`). Among those
+    /// with `QueuePolicy::preempt` (the trigger excluded, queues past
+    /// their [`SchedConfig::checkpoint_budget`] skipped), candidates
+    /// **over their entitlement** (vtime above the trigger's — they
+    /// consumed more weighted service than the pressured queue) outrank
+    /// the rest; within a class the largest residual wins (a
+    /// nearly-finished victim would park the most completed work for the
+    /// least freed capacity), ties to the largest vtime. Firing resets
+    /// the trigger's streak, so the next fire needs `preempt_after`
+    /// fresh rounds of sustained pressure (bounded thrash).
+    pub fn preempt_check(&mut self, candidates: &[(QueueId, u64)])
                          -> Option<(QueueId, QueueId)> {
         let mut trigger: Option<usize> = None;
         for (i, q) in self.queues.iter().enumerate() {
@@ -764,24 +796,50 @@ impl CrossQueueScheduler {
             }
         }
         let trigger = trigger?;
-        let mut victim: Option<usize> = None;
-        for &QueueId(i) in candidates {
+        let trigger_vtime = self.queues[trigger].vtime;
+        // (index, over-entitlement, residual) of the best victim so far.
+        let mut victim: Option<(usize, bool, u64)> = None;
+        for &(QueueId(i), residual) in candidates {
             if i == trigger || !self.queues[i].policy.preempt {
                 continue;
             }
+            if self.queues[i].redo_charged >= self.checkpoint_budget {
+                continue;
+            }
+            let over = self.queues[i].vtime > trigger_vtime;
             let better = match victim {
                 None => true,
-                Some(j) => self.queues[i].vtime > self.queues[j].vtime,
+                Some((j, j_over, j_res)) => {
+                    if over != j_over {
+                        over
+                    } else if residual != j_res {
+                        residual > j_res
+                    } else {
+                        self.queues[i].vtime > self.queues[j].vtime
+                    }
+                }
             };
             if better {
-                victim = Some(i);
+                victim = Some((i, over, residual));
             }
         }
-        let victim = victim?;
+        let (victim, _, _) = victim?;
         self.queues[trigger].pressure_rounds = 0;
         self.queues[trigger].preempt_fires += 1;
         self.preempt_fires += 1;
         Some((QueueId(trigger), QueueId(victim)))
+    }
+
+    /// Report the redo cost of a preemption the caller just executed:
+    /// `redo_steps` is the parked progress (Σ `SeqCheckpoint::progress`)
+    /// of the checkpoints evicted from `victim`. Accumulates against the
+    /// victim's [`SchedConfig::checkpoint_budget`]; once the budget is
+    /// exhausted [`CrossQueueScheduler::preempt_check`] stops naming the
+    /// queue, so evict/resume cycles cannot starve it of forward
+    /// progress indefinitely.
+    pub fn charge_preemption(&mut self, victim: QueueId, redo_steps: u64) {
+        let q = &mut self.queues[victim.0];
+        q.redo_charged = q.redo_charged.saturating_add(redo_steps);
     }
 
     /// True when `trigger`'s preemption pressure has cleared — nothing
@@ -847,6 +905,12 @@ impl CrossQueueScheduler {
     /// Per-queue preemption fires this queue's SLO pressure triggered.
     pub fn preempt_fires_of(&self, qid: QueueId) -> u64 {
         self.queues[qid.0].preempt_fires
+    }
+
+    /// Cumulative redo steps charged against this queue as a preemption
+    /// victim (see [`CrossQueueScheduler::charge_preemption`]).
+    pub fn redo_charged_of(&self, qid: QueueId) -> u64 {
+        self.queues[qid.0].redo_charged
     }
 
     pub fn cost_of(&self, qid: QueueId) -> f64 {
@@ -1281,9 +1345,9 @@ mod tests {
     }
 
     /// Preemption trigger: sustained ceiling pressure (EWMA >= slo ·
-    /// max_boost with pending work) for `preempt_after` rounds names the
-    /// most over-entitlement preemptible candidate; firing resets the
-    /// streak.
+    /// max_boost with pending work) for `preempt_after` rounds names a
+    /// preemptible candidate — over-entitlement queues first, most
+    /// residual work within the class; firing resets the streak.
     #[test]
     fn preempt_fires_after_sustained_ceiling_pressure() {
         let cfg = SchedConfig { preempt_after: 3, ..SchedConfig::default() };
@@ -1300,8 +1364,11 @@ mod tests {
             slo_p95_s: Some(0.01),
             ..QueuePolicy::default()
         });
-        // bulk_a consumed more weighted service: it is the most
-        // over-entitlement victim.
+        // Both bulk queues are over their entitlement (vtime above the
+        // idle trigger's 0); bulk_b holds more residual work, so it is
+        // the preferred victim even though bulk_a consumed more service
+        // — evicting the queue with the least work left would park the
+        // most completed progress.
         s.report_step(bulk_a, 0.5);
         s.report_step(bulk_b, 0.1);
         // Blow the SLO queue's EWMA past the ceiling (0.01 * 8 = 0.08)
@@ -1311,7 +1378,7 @@ mod tests {
         s.placed(slo, 0, 1, |_| {});
         assert!(s.wait_ewma(slo) >= 0.08, "EWMA must be at the ceiling");
         let ready = [bulk_a, bulk_b, slo];
-        let candidates = [bulk_a, bulk_b];
+        let candidates = [(bulk_a, 4u64), (bulk_b, 40u64)];
         // Streak too short: no fire for the first preempt_after-1 rounds.
         for _ in 0..cfg.preempt_after - 1 {
             s.pick(&ready).unwrap();
@@ -1319,19 +1386,26 @@ mod tests {
                        "fired before the pressure streak matured");
         }
         s.pick(&ready).unwrap();
-        assert_eq!(s.preempt_check(&candidates), Some((slo, bulk_a)),
-                   "most over-entitlement preemptible queue is the victim");
+        assert_eq!(s.preempt_check(&candidates), Some((slo, bulk_b)),
+                   "largest-residual over-entitlement queue is the victim");
         assert_eq!(s.preempt_fires(), 1);
         assert_eq!(s.preempt_fires_of(slo), 1);
         // The streak was reset: the very next round cannot re-fire.
         s.pick(&ready).unwrap();
         assert_eq!(s.preempt_check(&candidates), None);
+        // With equal residuals, the vtime tie-break names the most
+        // over-entitlement queue (the historical rule).
+        for _ in 0..cfg.preempt_after {
+            s.pick(&ready).unwrap();
+        }
+        assert_eq!(s.preempt_check(&[(bulk_a, 7), (bulk_b, 7)]),
+                   Some((slo, bulk_a)));
         // Non-preemptible candidates are never victims; the trigger
         // itself is excluded even if marked preemptible.
         for _ in 0..cfg.preempt_after {
             s.pick(&ready).unwrap();
         }
-        assert_eq!(s.preempt_check(&[slo]), None);
+        assert_eq!(s.preempt_check(&[(slo, 9)]), None);
         // Pressure clears when the pending work is gone (and again when
         // the EWMA recovers below the SLO).
         assert!(!s.preempt_cleared(slo));
@@ -1340,6 +1414,87 @@ mod tests {
         assert!(s.preempt_cleared(slo));
         // A queue with no SLO can never hold preemption pressure.
         assert!(s.preempt_cleared(bulk_a));
+    }
+
+    /// Residual ranking applies *within* the over-entitlement class: a
+    /// candidate below the trigger's vtime never outranks one above it,
+    /// no matter how much residual work it holds.
+    #[test]
+    fn preempt_prefers_over_entitlement_before_residual() {
+        let cfg = SchedConfig { preempt_after: 1, ..SchedConfig::default() };
+        let (clock, mut s) = sched(&cfg);
+        let lean = s.register("lean", QueuePolicy {
+            preempt: true,
+            ..QueuePolicy::default()
+        });
+        let fat = s.register("fat", QueuePolicy {
+            preempt: true,
+            ..QueuePolicy::default()
+        });
+        let slo = s.register("latency", QueuePolicy {
+            slo_p95_s: Some(0.01),
+            ..QueuePolicy::default()
+        });
+        // Put the trigger's vtime between the two candidates': `lean`
+        // stays under-entitled, `fat` over-entitled.
+        s.report_step(slo, 0.3);
+        s.report_step(fat, 0.6);
+        assert!(s.try_enqueue(slo, 0, 0, 2, 0.0));
+        clock.advance(0.5);
+        s.placed(slo, 0, 1, |_| {});
+        s.pick(&[lean, fat, slo]).unwrap();
+        assert_eq!(s.preempt_check(&[(lean, 1000), (fat, 1)]),
+                   Some((slo, fat)),
+                   "under-entitled residual-heavy queue must not outrank \
+                    an over-entitled one");
+    }
+
+    /// Checkpoint budget: a queue whose charged redo steps reach
+    /// `checkpoint_budget` stops being named a victim, so sustained SLO
+    /// pressure falls through to the next candidate (or fires nothing)
+    /// instead of re-evicting the same bulk queue forever.
+    #[test]
+    fn checkpoint_budget_retires_exhausted_victims() {
+        let cfg = SchedConfig {
+            preempt_after: 1,
+            checkpoint_budget: 10,
+            ..SchedConfig::default()
+        };
+        let (clock, mut s) = sched(&cfg);
+        let bulk_a = s.register("bulk_a", QueuePolicy {
+            preempt: true,
+            ..QueuePolicy::default()
+        });
+        let bulk_b = s.register("bulk_b", QueuePolicy {
+            preempt: true,
+            ..QueuePolicy::default()
+        });
+        let slo = s.register("latency", QueuePolicy {
+            slo_p95_s: Some(0.01),
+            ..QueuePolicy::default()
+        });
+        s.report_step(bulk_a, 0.5);
+        s.report_step(bulk_b, 0.4);
+        assert!(s.try_enqueue(slo, 0, 0, 2, 0.0));
+        clock.advance(0.5);
+        s.placed(slo, 0, 1, |_| {});
+        let ready = [bulk_a, bulk_b, slo];
+        // bulk_a has more residual: first fire names it, the caller
+        // charges the parked progress.
+        s.pick(&ready).unwrap();
+        assert_eq!(s.preempt_check(&[(bulk_a, 30), (bulk_b, 20)]),
+                   Some((slo, bulk_a)));
+        s.charge_preemption(bulk_a, 10);
+        assert_eq!(s.redo_charged_of(bulk_a), 10);
+        // Budget exhausted: the next fire must fall through to bulk_b
+        // even though bulk_a still ranks first on residual.
+        s.pick(&ready).unwrap();
+        assert_eq!(s.preempt_check(&[(bulk_a, 30), (bulk_b, 20)]),
+                   Some((slo, bulk_b)));
+        s.charge_preemption(bulk_b, 10);
+        // Every candidate exhausted: pressure no longer fires at all.
+        s.pick(&ready).unwrap();
+        assert_eq!(s.preempt_check(&[(bulk_a, 30), (bulk_b, 20)]), None);
     }
 
     #[test]

@@ -382,6 +382,18 @@ impl<'m> Stepper for FaultyStepper<'m> {
         self.inner.resume(ck)
     }
 
+    fn adopt(&mut self, ck: SeqCheckpoint) -> SlotId {
+        self.inner.adopt(ck)
+    }
+
+    fn residual(&self) -> usize {
+        self.inner.residual()
+    }
+
+    fn set_id_base(&mut self, base: u64) {
+        self.inner.set_id_base(base)
+    }
+
     fn evictions(&self) -> u64 {
         self.inner.evictions()
     }

@@ -429,6 +429,40 @@ impl SpecScheduler {
         std::mem::take(&mut self.phases)
     }
 
+    /// Namespace this scheduler's [`SlotId`] allocation: subsequent
+    /// admissions draw ids from `base` upward. Multi-engine serving gives
+    /// each replica a disjoint base (replica `k` uses `k << 40`) so a
+    /// checkpoint migrated between replicas can never collide with an id
+    /// the adopting scheduler issued locally. Must be called before any
+    /// admission; single-engine paths keep the default base 0, so their
+    /// id sequences (and every token-stream pin keyed on them) are
+    /// unchanged.
+    pub fn set_id_base(&mut self, base: u64) {
+        assert_eq!(
+            self.next_id, 0,
+            "set_id_base must precede the first admission"
+        );
+        self.next_id = base;
+    }
+
+    /// Total remaining work across *resident* sequences, in ordering
+    /// positions still to decide (speculative: `D - i`; MDM: masked
+    /// positions left). This is what an eviction puts at risk of delay:
+    /// the preemption victim policy prefers queues with the most
+    /// residual (evicting a nearly-finished resident maximizes the
+    /// completed work parked behind a checkpoint). Pending sequences are
+    /// excluded — they hold no slot and are never evicted.
+    pub fn residual(&self) -> usize {
+        self.slots
+            .iter()
+            .flatten()
+            .map(|s| match &s.kernel {
+                Kernel::Spec(st, _) => self.d.saturating_sub(st.i),
+                Kernel::Mdm(m, _) => m.masked.len(),
+            })
+            .sum()
+    }
+
     /// Enqueue one sequence at the default priority (0). See
     /// [`SpecScheduler::admit_prio`].
     pub fn admit(&mut self, prompt: &Prompt, params: SeqParams, rng: Pcg)
@@ -554,6 +588,21 @@ impl SpecScheduler {
         self.next_id = self.next_id.max(slot.id.0 + 1);
         slot.resumed = true;
         self.enqueue_pending(slot);
+    }
+
+    /// Adopt a checkpoint minted by *another* scheduler (cross-replica
+    /// migration): re-mint the slot id from this scheduler's own counter
+    /// so id namespaces never interleave, then resume as usual. The id
+    /// is only a routing label — kernel state (σ ordering, tallies, the
+    /// per-sequence RNG stream) is untouched, so the bitwise-identical
+    /// continuation guarantee of [`SpecScheduler::resume`] carries over.
+    /// Returns the new local id for the caller's routing tables.
+    pub fn adopt(&mut self, mut ck: SeqCheckpoint) -> SlotId {
+        let id = SlotId(self.next_id);
+        self.next_id += 1;
+        ck.slot.id = id;
+        self.resume(ck);
+        id
     }
 
     /// Remove a *pending* (not-yet-resident) sequence, dropping its
@@ -1505,6 +1554,18 @@ pub trait Stepper {
     fn take_pending_ids(&mut self) -> Vec<SlotId>;
     /// Re-admit an evicted checkpoint. See [`SpecScheduler::resume`].
     fn resume(&mut self, ck: SeqCheckpoint);
+    /// Adopt a checkpoint from *another* scheduler, re-minting its slot
+    /// id locally; returns the new id. See [`SpecScheduler::adopt`].
+    fn adopt(&mut self, ck: SeqCheckpoint) -> SlotId;
+    /// Total remaining work (ordering positions still to decide) across
+    /// resident sequences — the preemption victim policy's residual-work
+    /// signal. See [`SpecScheduler::residual`].
+    fn residual(&self) -> usize;
+    /// Namespace [`SlotId`] allocation from `base` upward (multi-engine
+    /// replicas use disjoint bases so migrated checkpoints cannot
+    /// collide). Must precede the first admission. See
+    /// [`SpecScheduler::set_id_base`].
+    fn set_id_base(&mut self, base: u64);
     /// Cumulative sequences evicted / resumed-into-slots counters.
     fn evictions(&self) -> u64;
     fn resumes(&self) -> u64;
@@ -1638,6 +1699,18 @@ impl<'m, M: HybridModel> Stepper for BoundStepper<'m, M> {
 
     fn resume(&mut self, ck: SeqCheckpoint) {
         self.sched.resume(ck)
+    }
+
+    fn adopt(&mut self, ck: SeqCheckpoint) -> SlotId {
+        self.sched.adopt(ck)
+    }
+
+    fn residual(&self) -> usize {
+        self.sched.residual()
+    }
+
+    fn set_id_base(&mut self, base: u64) {
+        self.sched.set_id_base(base)
     }
 
     fn evictions(&self) -> u64 {

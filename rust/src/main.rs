@@ -58,6 +58,14 @@ fn print_help() {
          \x20           slo:0.05,burst:2,preempt:on\"] (weighted SLO-aware\n\
          \x20           scheduling; preempt:on marks a queue evictable)\n\
          \x20           [--default-priority N] [--preempt-after K]\n\
+         \x20           [--checkpoint-budget N] (cap on preemption redo\n\
+         \x20           steps per victim queue; 0 disables preemption)\n\
+         \x20           [--engines N] (shard into N replica engines behind\n\
+         \x20           a least-loaded router with work stealing and\n\
+         \x20           bitwise-identical checkpoint migration)\n\
+         \x20           [--max-conns N] [--io-timeout-ms N] (connection\n\
+         \x20           budget — 503 over the cap — and per-stream I/O\n\
+         \x20           timeout)\n\
          \x20           [--step-threads N] (planar-phase workers; results\n\
          \x20           are bitwise identical for any N)\n\
          \x20           [--fault-plan \"m=err@2,panic@5;m2=stall@1:0.25\"]\n\
@@ -76,8 +84,10 @@ fn print_help() {
 }
 
 /// Build the engine-thread model factory for the given artifact dir.
+/// `Fn + Clone` (not `FnOnce`): sharded serving runs one copy per
+/// replica engine thread, since PJRT handles are not `Send`.
 fn model_factory(artifacts: String, only: Option<Vec<String>>)
-                 -> impl FnOnce() -> Result<ModelMap> + Send + 'static {
+                 -> impl Fn() -> Result<ModelMap> + Clone + Send + 'static {
     move || {
         let manifest = Manifest::load(&artifacts)?;
         let runtime = Runtime::cpu()?;
@@ -126,6 +136,10 @@ fn start_coordinator(args: &Args) -> Result<Coordinator> {
     // carry a priority class of their own.
     sched.preempt_after =
         args.u64("preempt-after", sched.preempt_after).max(1);
+    // --checkpoint-budget N caps the cumulative redo steps preemption
+    // may park per victim queue (0 disables preemption entirely).
+    sched.checkpoint_budget =
+        args.u64("checkpoint-budget", sched.checkpoint_budget);
     sched.default_priority =
         args.i64("default-priority", sched.default_priority as i64) as i32;
     // Planar-phase executor width of the engine's shared step pool
@@ -155,7 +169,11 @@ fn start_coordinator(args: &Args) -> Result<Coordinator> {
         })
         .transpose()?
         .filter(|&ms| ms > 0);
-    Coordinator::start(
+    // --engines N shards the engine into N replicas behind the
+    // least-loaded router (work stealing + checkpoint migration); 1 is
+    // the exact single-engine code path.
+    let engines = args.usize("engines", 1).max(1);
+    Coordinator::start_sharded(
         model_factory(artifacts, only),
         BatcherConfig {
             max_wait: Duration::from_millis(args.u64("batch-wait-ms", 5)),
@@ -164,13 +182,21 @@ fn start_coordinator(args: &Args) -> Result<Coordinator> {
             default_deadline_ms,
             ..Default::default()
         },
+        engines,
     )
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let coordinator = start_coordinator(args)?;
     let addr = args.str("addr", "127.0.0.1:8080");
-    Server::new(coordinator).serve(&addr)
+    // Connection budget (503 + Connection: close over the cap) and
+    // per-stream I/O timeout for reads and writes.
+    let max_conns = args.usize("max-conns", 256).max(1);
+    let io_timeout =
+        Duration::from_millis(args.u64("io-timeout-ms", 30_000).max(1));
+    Server::new(coordinator)
+        .with_limits(max_conns, io_timeout)
+        .serve(&addr)
 }
 
 fn sampler_from_args(args: &Args) -> Result<SamplerChoice> {

@@ -1,10 +1,11 @@
 //! Minimal HTTP/1.1 message parsing and serialization.
 //!
 //! Supports what the API needs: request line, headers, Content-Length
-//! bodies, keep-alive. Not a general server — no chunked encoding, no TLS.
+//! bodies, keep-alive (HTTP/1.0 default-close honored), pipelining (bytes
+//! past one request's body carry over to the next parse). Not a general
+//! server — no chunked encoding, no TLS.
 
 use std::io::Read;
-use std::net::TcpStream;
 
 use crate::util::json::Json;
 
@@ -12,6 +13,10 @@ use crate::util::json::Json;
 pub struct Request {
     pub method: String,
     pub path: String,
+    /// True when the request line announced HTTP/1.0, whose default
+    /// (absent a `Connection` header) is close-after-response — the
+    /// opposite of HTTP/1.1's keep-alive default.
+    pub http10: bool,
     pub headers: Vec<(String, String)>,
     pub body: Vec<u8>,
 }
@@ -24,9 +29,15 @@ impl Request {
             .map(|(_, v)| v.as_str())
     }
 
+    /// Whether the connection survives this exchange. An explicit
+    /// `Connection` header always wins; otherwise the version default
+    /// applies (HTTP/1.1 keep-alive, HTTP/1.0 close).
     pub fn keep_alive(&self) -> bool {
-        !matches!(self.header("connection"),
-                  Some(v) if v.eq_ignore_ascii_case("close"))
+        match self.header("connection") {
+            Some(v) if v.eq_ignore_ascii_case("close") => false,
+            Some(v) if v.eq_ignore_ascii_case("keep-alive") => true,
+            _ => !self.http10,
+        }
     }
 
     pub fn body_str(&self) -> String {
@@ -97,14 +108,27 @@ impl Response {
 }
 
 /// Parse one request from a stream. Returns Ok(None) on clean EOF.
-pub fn read_request(stream: &mut TcpStream)
-                    -> std::io::Result<Option<Request>> {
-    let mut buf = Vec::new();
+///
+/// `carry` is the connection's read-ahead buffer: bytes past this
+/// request's body (a pipelined next request) are left in it for the next
+/// call, which consumes them before touching the stream again.
+/// Historically those bytes were silently truncated away, so the second
+/// of two pipelined keep-alive requests hung until the client sent more
+/// data. The caller owns one `carry` per connection.
+pub fn read_request<R: Read>(stream: &mut R, carry: &mut Vec<u8>)
+                             -> std::io::Result<Option<Request>> {
+    let mut buf = std::mem::take(carry);
     let mut tmp = [0u8; 4096];
-    // Read until the header terminator.
+    // Read until the header terminator (read-ahead bytes first).
     let header_end = loop {
         if let Some(pos) = find_subslice(&buf, b"\r\n\r\n") {
             break pos;
+        }
+        if buf.len() > 1 << 20 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "headers too large",
+            ));
         }
         let n = stream.read(&mut tmp)?;
         if n == 0 {
@@ -117,12 +141,6 @@ pub fn read_request(stream: &mut TcpStream)
             ));
         }
         buf.extend_from_slice(&tmp[..n]);
-        if buf.len() > 1 << 20 {
-            return Err(std::io::Error::new(
-                std::io::ErrorKind::InvalidData,
-                "headers too large",
-            ));
-        }
     };
 
     let header_text = String::from_utf8_lossy(&buf[..header_end]).to_string();
@@ -131,6 +149,9 @@ pub fn read_request(stream: &mut TcpStream)
     let mut parts = request_line.split_whitespace();
     let method = parts.next().unwrap_or_default().to_string();
     let path = parts.next().unwrap_or_default().to_string();
+    let http10 = parts
+        .next()
+        .is_some_and(|v| v.eq_ignore_ascii_case("HTTP/1.0"));
     if method.is_empty() || path.is_empty() {
         return Err(std::io::Error::new(
             std::io::ErrorKind::InvalidData,
@@ -149,19 +170,23 @@ pub fn read_request(stream: &mut TcpStream)
         .and_then(|(_, v)| v.parse().ok())
         .unwrap_or(0);
 
-    let mut body = buf[header_end + 4..].to_vec();
-    while body.len() < content_length {
+    let body_start = header_end + 4;
+    while buf.len() < body_start + content_length {
         let n = stream.read(&mut tmp)?;
         if n == 0 {
+            // Content-Length promised more bytes than the peer sent:
+            // a framing mismatch, not a clean close.
             return Err(std::io::Error::new(
                 std::io::ErrorKind::UnexpectedEof,
                 "eof in body",
             ));
         }
-        body.extend_from_slice(&tmp[..n]);
+        buf.extend_from_slice(&tmp[..n]);
     }
-    body.truncate(content_length);
-    Ok(Some(Request { method, path, headers, body }))
+    // Everything past this request's body belongs to the next one.
+    *carry = buf.split_off(body_start + content_length);
+    let body = buf.split_off(body_start);
+    Ok(Some(Request { method, path, http10, headers, body }))
 }
 
 fn find_subslice(haystack: &[u8], needle: &[u8]) -> Option<usize> {
@@ -214,10 +239,112 @@ mod tests {
         let r = Request {
             method: "GET".into(),
             path: "/".into(),
+            http10: false,
             headers: vec![("Content-Type".into(), "text/plain".into())],
             body: vec![],
         };
         assert_eq!(r.header("content-type"), Some("text/plain"));
         assert!(r.keep_alive());
+    }
+
+    fn req(raw: &[u8], carry: &mut Vec<u8>)
+           -> std::io::Result<Option<Request>> {
+        let mut cursor = raw;
+        read_request(&mut cursor, carry)
+    }
+
+    #[test]
+    fn parses_request_line_version_and_body() {
+        let mut carry = Vec::new();
+        let r = req(
+            b"POST /generate HTTP/1.1\r\nContent-Length: 4\r\n\r\nabcd",
+            &mut carry,
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(r.method, "POST");
+        assert_eq!(r.path, "/generate");
+        assert!(!r.http10);
+        assert_eq!(r.body, b"abcd");
+        assert!(r.keep_alive(), "HTTP/1.1 defaults to keep-alive");
+        assert!(carry.is_empty());
+    }
+
+    /// HTTP/1.0 default is close-after-response; an explicit
+    /// `Connection: keep-alive` opts back in. HTTP/1.1 is the reverse.
+    #[test]
+    fn http10_defaults_to_close() {
+        let mut carry = Vec::new();
+        let r = req(b"GET / HTTP/1.0\r\n\r\n", &mut carry)
+            .unwrap()
+            .unwrap();
+        assert!(r.http10);
+        assert!(!r.keep_alive(), "HTTP/1.0 without Connection must close");
+        let r = req(
+            b"GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n",
+            &mut carry,
+        )
+        .unwrap()
+        .unwrap();
+        assert!(r.keep_alive(), "explicit keep-alive overrides the default");
+        let r = req(
+            b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n",
+            &mut carry,
+        )
+        .unwrap()
+        .unwrap();
+        assert!(!r.keep_alive());
+    }
+
+    /// Two pipelined requests on one connection: the bytes of the second
+    /// must survive in `carry` (they were historically truncated away)
+    /// and parse without touching the stream again.
+    #[test]
+    fn pipelined_requests_carry_over() {
+        let mut carry = Vec::new();
+        let raw = b"POST /a HTTP/1.1\r\nContent-Length: 3\r\n\r\nxyz\
+                    GET /b HTTP/1.1\r\n\r\n";
+        let mut cursor = &raw[..];
+        let first = read_request(&mut cursor, &mut carry)
+            .unwrap()
+            .unwrap();
+        assert_eq!(first.path, "/a");
+        assert_eq!(first.body, b"xyz");
+        assert!(carry.starts_with(b"GET /b"), "read-ahead must be kept");
+        // The stream is at EOF; the second request parses from carry.
+        let second = read_request(&mut cursor, &mut carry)
+            .unwrap()
+            .unwrap();
+        assert_eq!(second.path, "/b");
+        assert!(second.body.is_empty());
+        assert!(carry.is_empty());
+        // Third call: clean EOF.
+        assert!(read_request(&mut cursor, &mut carry).unwrap().is_none());
+    }
+
+    /// Headers that never terminate within the 1 MiB bound are rejected
+    /// as InvalidData (the caller answers 400), not read forever.
+    #[test]
+    fn oversized_headers_rejected() {
+        let mut raw = b"GET / HTTP/1.1\r\n".to_vec();
+        raw.extend(std::iter::repeat(b'x').take((1 << 20) + 16));
+        let mut carry = Vec::new();
+        let err = req(&raw, &mut carry).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("headers too large"));
+    }
+
+    /// Content-Length larger than the bytes actually sent is a framing
+    /// mismatch: UnexpectedEof, never a short body passed to a handler.
+    #[test]
+    fn content_length_mismatch_is_unexpected_eof() {
+        let mut carry = Vec::new();
+        let err = req(
+            b"POST /a HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc",
+            &mut carry,
+        )
+        .unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::UnexpectedEof);
+        assert!(err.to_string().contains("eof in body"));
     }
 }

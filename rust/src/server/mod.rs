@@ -16,7 +16,9 @@ pub mod http;
 
 use std::io::Write;
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::Result;
 
@@ -26,27 +28,58 @@ use http::{read_request, Request, Response};
 
 pub struct Server {
     coordinator: Coordinator,
+    /// Concurrent-connection budget. Accepts over the cap are answered
+    /// 503 + `Retry-After` and closed instead of spawning yet another
+    /// thread — an unbounded thread-per-connection accept loop let a
+    /// connection flood exhaust the process.
+    max_conns: usize,
+    /// Per-stream read/write timeout. Without one, an idle keep-alive
+    /// peer (or a slow-header client) pinned its thread forever.
+    io_timeout: Duration,
+    conns: Arc<AtomicUsize>,
+}
+
+/// RAII share of the connection budget: decrements the live-connection
+/// count when the serving thread finishes, however it exits.
+struct ConnPermit {
+    conns: Arc<AtomicUsize>,
+}
+
+impl Drop for ConnPermit {
+    fn drop(&mut self) {
+        self.conns.fetch_sub(1, Ordering::SeqCst);
+    }
 }
 
 impl Server {
     pub fn new(coordinator: Coordinator) -> Server {
-        Server { coordinator }
+        Server {
+            coordinator,
+            max_conns: 256,
+            io_timeout: Duration::from_secs(30),
+            conns: Arc::new(AtomicUsize::new(0)),
+        }
     }
 
-    /// Bind and serve forever (thread per connection).
+    /// Override the connection budget and per-stream I/O timeout
+    /// (`--max-conns` / `--io-timeout-ms`).
+    pub fn with_limits(mut self, max_conns: usize, io_timeout: Duration)
+                       -> Server {
+        self.max_conns = max_conns;
+        self.io_timeout = io_timeout;
+        self
+    }
+
+    /// Bind and serve forever (thread per connection, budget-capped).
     pub fn serve(self, addr: &str) -> Result<()> {
         let listener = TcpListener::bind(addr)?;
         eprintln!("ssmd serving on http://{addr}");
         let this = Arc::new(self);
         for stream in listener.incoming() {
-            let stream = match stream {
-                Ok(s) => s,
+            match stream {
+                Ok(s) => this.accept_one(s),
                 Err(_) => continue,
-            };
-            let srv = this.clone();
-            std::thread::spawn(move || {
-                let _ = srv.handle_conn(stream);
-            });
+            }
         }
         Ok(())
     }
@@ -65,10 +98,7 @@ impl Server {
             match listener.accept() {
                 Ok((stream, _)) => {
                     stream.set_nonblocking(false).ok();
-                    let srv = this.clone();
-                    std::thread::spawn(move || {
-                        let _ = srv.handle_conn(stream);
-                    });
+                    this.accept_one(stream);
                 }
                 Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                     // lint: allow(clock-discipline) — accept-loop backoff
@@ -80,15 +110,51 @@ impl Server {
         }
     }
 
-    fn handle_conn(&self, mut stream: TcpStream) -> Result<()> {
-        // keep-alive loop: serve requests until the peer closes.
+    /// Apply stream limits, claim a budget slot, and hand the connection
+    /// to its serving thread — or reject it 503 when over the cap.
+    fn accept_one(self: &Arc<Self>, stream: TcpStream) {
+        stream.set_read_timeout(Some(self.io_timeout)).ok();
+        stream.set_write_timeout(Some(self.io_timeout)).ok();
+        let prev = self.conns.fetch_add(1, Ordering::SeqCst);
+        if prev >= self.max_conns {
+            self.conns.fetch_sub(1, Ordering::SeqCst);
+            reject_over_capacity(stream);
+            return;
+        }
+        let permit = ConnPermit { conns: self.conns.clone() };
+        let srv = self.clone();
+        std::thread::spawn(move || {
+            let _ = srv.handle_conn(stream, permit);
+        });
+    }
+
+    fn handle_conn(&self, mut stream: TcpStream, _permit: ConnPermit)
+                   -> Result<()> {
+        // keep-alive loop: serve requests until the peer closes. `carry`
+        // holds read-ahead bytes between pipelined requests.
+        let mut carry = Vec::new();
         loop {
-            let req = match read_request(&mut stream) {
+            let req = match read_request(&mut stream, &mut carry) {
                 Ok(Some(r)) => r,
-                Ok(None) | Err(_) => return Ok(()),
+                Ok(None) => return Ok(()),
+                Err(e) if e.kind() == std::io::ErrorKind::InvalidData => {
+                    // Unframeable input: tell the client why, then close
+                    // (resyncing a corrupt HTTP stream is hopeless).
+                    let resp = Response::error(400, &e.to_string())
+                        .with_header("Connection", "close".into());
+                    let _ = stream.write_all(&resp.serialize());
+                    return Ok(());
+                }
+                // Timeouts and half-finished requests: just drop.
+                Err(_) => return Ok(()),
             };
             let keep_alive = req.keep_alive();
             let resp = self.route(&req);
+            let resp = if keep_alive {
+                resp
+            } else {
+                resp.with_header("Connection", "close".into())
+            };
             stream.write_all(&resp.serialize())?;
             stream.flush()?;
             if !keep_alive {
@@ -201,16 +267,29 @@ fn map_engine_error(msg: &str) -> Response {
 }
 
 /// Pull the `retry after <N>s` hint out of a breaker rejection for the
-/// `Retry-After` header. Falls back to "1": the header must always
-/// accompany the 503 so well-behaved clients back off a bounded amount.
+/// `Retry-After` header. Only a message that actually contains the
+/// marker yields a parsed hint — `rsplit(..).next()` returned the whole
+/// message when the marker was absent (its `None` arm was dead code), so
+/// any rejection that happened to *start* with digits produced a bogus
+/// backoff. Falls back to "1": the header must always accompany the 503
+/// so well-behaved clients back off a bounded amount.
 fn retry_after_seconds(msg: &str) -> String {
-    let tail = match msg.rsplit("retry after ").next() {
-        Some(t) => t,
+    let tail = match msg.rsplit_once("retry after ") {
+        Some((_, tail)) => tail,
         None => return "1".to_string(),
     };
     let digits: String =
         tail.chars().take_while(|c| c.is_ascii_digit()).collect();
     if digits.is_empty() { "1".to_string() } else { digits }
+}
+
+/// Answer an over-budget accept with a 503 the client can act on, then
+/// drop the stream without ever spawning a serving thread for it.
+fn reject_over_capacity(mut stream: TcpStream) {
+    let resp = Response::error(503, "server at connection capacity")
+        .with_header("Retry-After", "1".into())
+        .with_header("Connection", "close".into());
+    let _ = stream.write_all(&resp.serialize());
 }
 // lint: end-serve-region
 
@@ -277,6 +356,7 @@ mod tests {
         Request {
             method: "POST".into(),
             path: path.into(),
+            http10: false,
             headers: vec![],
             body: body.as_bytes().to_vec(),
         }
@@ -286,9 +366,29 @@ mod tests {
         Request {
             method: "GET".into(),
             path: path.into(),
+            http10: false,
             headers: vec![],
             body: vec![],
         }
+    }
+
+    /// Run a server on `addr` in a background thread until the returned
+    /// stop flag is set. Waits for the listener before returning.
+    fn spawn_server(s: Server, addr: &'static str)
+                    -> (Arc<std::sync::atomic::AtomicBool>,
+                        std::thread::JoinHandle<()>) {
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::spawn(move || {
+            s.serve_until(addr, move || {
+                stop2.load(std::sync::atomic::Ordering::Relaxed)
+            })
+            .unwrap();
+        });
+        // lint: allow(clock-discipline) — test waits for a real TCP
+        // listener to come up.
+        std::thread::sleep(Duration::from_millis(50));
+        (stop, handle)
     }
 
     #[test]
@@ -512,6 +612,97 @@ mod tests {
         conn.read_to_string(&mut out).unwrap();
         assert!(out.starts_with("HTTP/1.1 200"), "{out}");
         assert!(out.contains("tokens"), "{out}");
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        handle.join().unwrap();
+    }
+
+    /// The Retry-After hint is only scraped when the marker is present;
+    /// a rejection that merely starts with digits must not leak them.
+    #[test]
+    fn retry_after_requires_marker() {
+        assert_eq!(retry_after_seconds("42 failures, cooling down"), "1");
+        assert_eq!(retry_after_seconds("retry after 12s"), "12");
+        assert_eq!(retry_after_seconds("retry after soon"), "1");
+    }
+
+    /// With a zero connection budget every accept is answered 503 with
+    /// Retry-After and Connection: close instead of being served.
+    #[test]
+    fn connection_budget_rejects_with_503() {
+        use std::io::Read;
+        let s = test_server().with_limits(0, Duration::from_secs(5));
+        let addr = "127.0.0.1:39472";
+        let (stop, handle) = spawn_server(s, addr);
+        let mut conn = std::net::TcpStream::connect(addr).unwrap();
+        conn.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let mut out = String::new();
+        conn.read_to_string(&mut out).unwrap();
+        assert!(out.starts_with("HTTP/1.1 503"), "{out}");
+        assert!(out.contains("connection capacity"), "{out}");
+        assert!(out.contains("Retry-After: 1"), "{out}");
+        assert!(out.contains("Connection: close"), "{out}");
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        handle.join().unwrap();
+    }
+
+    /// An idle keep-alive peer is cut loose once the read timeout fires
+    /// instead of pinning its serving thread forever.
+    #[test]
+    fn idle_connection_times_out() {
+        use std::io::Read;
+        let s = test_server().with_limits(8, Duration::from_millis(100));
+        let addr = "127.0.0.1:39473";
+        let (stop, handle) = spawn_server(s, addr);
+        let mut conn = std::net::TcpStream::connect(addr).unwrap();
+        conn.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        // Send nothing: the server must hang up on its own.
+        let mut buf = [0u8; 16];
+        let n = conn.read(&mut buf).unwrap();
+        assert_eq!(n, 0, "server must close an idle connection");
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        handle.join().unwrap();
+    }
+
+    /// Two pipelined requests in one write get two responses on the one
+    /// connection (the second's bytes used to be truncated away), and
+    /// the final response carries Connection: close.
+    #[test]
+    fn pipelined_requests_over_tcp() {
+        use std::io::{Read, Write};
+        let s = test_server();
+        let addr = "127.0.0.1:39474";
+        let (stop, handle) = spawn_server(s, addr);
+        let mut conn = std::net::TcpStream::connect(addr).unwrap();
+        conn.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        write!(
+            conn,
+            "GET /healthz HTTP/1.1\r\n\r\n\
+             GET /healthz HTTP/1.1\r\nConnection: close\r\n\r\n"
+        )
+        .unwrap();
+        let mut out = String::new();
+        conn.read_to_string(&mut out).unwrap();
+        assert_eq!(out.matches("HTTP/1.1 200").count(), 2, "{out}");
+        assert!(out.contains("Connection: close"), "{out}");
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        handle.join().unwrap();
+    }
+
+    /// A garbage request line gets a 400 with Connection: close rather
+    /// than a silently dropped connection.
+    #[test]
+    fn bad_request_line_gets_400_and_close() {
+        use std::io::{Read, Write};
+        let s = test_server();
+        let addr = "127.0.0.1:39475";
+        let (stop, handle) = spawn_server(s, addr);
+        let mut conn = std::net::TcpStream::connect(addr).unwrap();
+        conn.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        write!(conn, "GARBAGE\r\n\r\n").unwrap();
+        let mut out = String::new();
+        conn.read_to_string(&mut out).unwrap();
+        assert!(out.starts_with("HTTP/1.1 400"), "{out}");
+        assert!(out.contains("Connection: close"), "{out}");
         stop.store(true, std::sync::atomic::Ordering::Relaxed);
         handle.join().unwrap();
     }

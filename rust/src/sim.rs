@@ -40,6 +40,16 @@
 //! deadline-shed — exactly one of the three — and surviving queues'
 //! token streams stay bitwise identical to a fault-free run.
 //!
+//! **Fleet** (PR 8): [`simulate_fleet`] runs N replicas — each with its
+//! own steppers, selector, and supervision — on one shared `SimClock`,
+//! stepping all ready replicas concurrently per round (the clock
+//! advances by the max cost, so aggregate throughput scales with
+//! replica count). It mirrors the live router policies exactly:
+//! least-loaded admission routing and idle-replica checkpoint migration
+//! (evict on A, `adopt` on B), with [`FleetReport::tokens`] keyed by
+//! (arrival, sequence) so the bitwise-migration pin compares runs
+//! across replica counts and migration on/off.
+//!
 //! ## Trace format (JSONL)
 //!
 //! One JSON object per line; [`write_trace`] / [`read_trace`] round-trip
@@ -268,7 +278,7 @@ pub fn simulate(specs: &[QueueSpec], trace: &[Arrival], selector: Selector,
     let mut rr = 0usize;
     let mut next = 0usize;
     let mut ready_buf: Vec<QueueId> = Vec::new();
-    let mut cand_buf: Vec<QueueId> = Vec::new();
+    let mut cand_buf: Vec<(QueueId, u64)> = Vec::new();
     // Supervision state, mirroring the engine loop: per-queue retry
     // bursts with virtual-time backoff, and a per-queue (= per-model)
     // circuit breaker gating admissions.
@@ -586,20 +596,27 @@ pub fn simulate(specs: &[QueueSpec], trace: &[Arrival], selector: Selector,
             }
         }
 
-        // Preemption check after the step, mirroring the engine loop.
+        // Preemption check after the step, mirroring the engine loop:
+        // candidates carry their residual work (the victim policy
+        // prefers high-residual queues among the over-entitled), and the
+        // parked redo work is charged against the victim's checkpoint
+        // budget so evict/resume cycles cannot livelock one queue.
         if weighted {
             cand_buf.clear();
             for (i, st) in steppers.iter().enumerate() {
                 if parked[i].is_empty() && st.n_active() > 0 {
-                    cand_buf.push(qids[i]);
+                    cand_buf.push((qids[i], st.residual() as u64));
                 }
             }
             if let Some((trig, victim)) = xq.preempt_check(&cand_buf) {
                 let vi = qids.iter().position(|&q| q == victim).unwrap();
+                let mut redo = 0u64;
                 while let Some(ck) = steppers[vi].evict_lowest() {
+                    redo += ck.progress() as u64;
                     parked[vi].push(ck);
                     preemptions += 1;
                 }
+                xq.charge_preemption(victim, redo);
                 parked_trigger[vi] = Some(trig);
             }
         }
@@ -644,6 +661,420 @@ pub fn simulate(specs: &[QueueSpec], trace: &[Arrival], selector: Selector,
         preemptions,
         resumes,
         preempt_fires: xq.preempt_fires(),
+        tokens,
+        t_end: clock.now(),
+    }
+}
+
+/// Everything a fleet (multi-replica) simulation observed. `PartialEq`
+/// is the determinism pin, as with [`Report`]. Token streams are keyed
+/// by **(arrival index, sequence index within the arrival)** — stable
+/// across replica counts and migration choices, unlike `SlotId`s (the
+/// adopter re-mints those) — so the bitwise pin compares a migrated run
+/// directly against an unmigrated or single-replica one.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetReport {
+    /// Per replica: scheduler steps executed.
+    pub steps: Vec<u64>,
+    /// Per replica: sequences retired *on* it (migrated-in included).
+    pub finished: Vec<usize>,
+    /// Sequences admitted past backpressure, fleet-wide.
+    pub admitted: usize,
+    /// Sequences answered failed by a quarantine, fleet-wide.
+    pub failed: usize,
+    /// Sequences removed by deadline expiry (admission or mid-flight).
+    pub deadline_sheds: u64,
+    /// Sequences rejected by admission backpressure.
+    pub shed: u64,
+    /// Mid-sequence checkpoints migrated between replicas.
+    pub migrations: u64,
+    /// (arrival index, sequence index) -> retired token stream.
+    pub tokens: BTreeMap<(usize, usize), Vec<i32>>,
+    pub t_end: f64,
+}
+
+impl FleetReport {
+    /// Total tokens retired per virtual second — the aggregate
+    /// throughput number the replica-scaling pin compares.
+    pub fn token_throughput(&self) -> f64 {
+        let toks: usize = self.tokens.values().map(|t| t.len()).sum();
+        toks as f64 / self.t_end.max(1e-12)
+    }
+}
+
+/// Multi-replica mirror of [`simulate`]: `n_engines` replicas, each with
+/// its own steppers (one per [`QueueSpec`], `SlotId` base `e << 40`),
+/// weighted selector, and retry/quarantine supervision, all on one
+/// shared [`SimClock`]. Each round every replica with ready work steps
+/// once *concurrently* — the clock advances by the **max** cost among
+/// the replicas that stepped, which is what makes aggregate throughput
+/// scale with replica count. Mirrors of the live router policies:
+///
+/// * **admission routing** — each arrival goes whole to the
+///   least-loaded replica (resident residual + pending; ties low), the
+///   deterministic twin of `RouterState::route`;
+/// * **migration** (`migrate = true`) — when a replica sits fully idle
+///   while another has a queue with >= 2 residents, the busy replica
+///   evicts its lowest-progress resident and the idle one adopts it
+///   (`Stepper::adopt` re-mints the slot id), at most one checkpoint in
+///   flight per round, deadline-carrying sequences excluded — exactly
+///   the live `migrate_out`/`adopt_migrants` policy.
+///
+/// Intra-replica preemption/parking is deliberately not mirrored here
+/// ([`simulate`] owns that single-engine behaviour); the fleet harness
+/// isolates the router policies. Conservation is asserted internally:
+/// every admitted sequence is finished, failed, or deadline-shed —
+/// exactly one of the three, fleet-wide — and no sequence retires twice.
+pub fn simulate_fleet(specs: &[QueueSpec], trace: &[Arrival],
+                      n_engines: usize, cfg: &SchedConfig, migrate: bool)
+                      -> FleetReport {
+    assert!(n_engines >= 1);
+    for w in trace.windows(2) {
+        assert!(w[0].t <= w[1].t, "trace must be time-sorted");
+    }
+    let nq = specs.len();
+    let ne = n_engines;
+    // Per-replica model instances so fault scripts fire independently
+    // per replica (shared call counters would couple them).
+    let models: Vec<Vec<FaultyModel<MockModel>>> = (0..ne)
+        .map(|_| {
+            specs
+                .iter()
+                .map(|s| {
+                    let mut m = MockModel::new(s.d, s.vocab, s.model_seed);
+                    m.buckets = vec![s.bucket];
+                    FaultyModel::new(m, s.fault.clone().unwrap_or_default())
+                })
+                .collect()
+        })
+        .collect();
+    let fault_states: Vec<Vec<Rc<FaultState>>> = models
+        .iter()
+        .map(|row| row.iter().map(|m| m.fault_state()).collect())
+        .collect();
+    let params = SpecParams {
+        window: Window::Constant(1),
+        ..Default::default()
+    };
+    let clock = SimClock::new();
+    let mut steppers: Vec<Vec<BoundStepper<'_, FaultyModel<MockModel>>>> =
+        models
+            .iter()
+            .enumerate()
+            .map(|(e, row)| {
+                row.iter()
+                    .map(|m| {
+                        let mut st =
+                            BoundStepper::new(m, SeqParams::Spec(
+                                params.clone()));
+                        st.set_id_base((e as u64) << 40);
+                        st.sched.set_clock(Box::new(clock.clone()));
+                        st
+                    })
+                    .collect()
+            })
+            .collect();
+    let mut xqs: Vec<CrossQueueScheduler> = (0..ne)
+        .map(|_| CrossQueueScheduler::new(Box::new(clock.clone()), cfg))
+        .collect();
+    let qids: Vec<Vec<QueueId>> = (0..ne)
+        .map(|e| {
+            specs
+                .iter()
+                .enumerate()
+                .map(|(i, s)| {
+                    xqs[e].register(&format!("q{i}"), s.policy.clone())
+                })
+                .collect()
+        })
+        .collect();
+
+    // Per-sequence record, keyed (replica, queue, slot): its stable
+    // (arrival, sequence) identity, deadline, and arrival tag (for
+    // selector-stamp rollbacks). Migration moves the record to the
+    // adopter's key.
+    struct SeqInfo {
+        key: (usize, usize),
+        deadline: Option<f64>,
+        tag: u64,
+    }
+    let mut info: Vec<Vec<BTreeMap<SlotId, SeqInfo>>> =
+        (0..ne).map(|_| (0..nq).map(|_| BTreeMap::new()).collect())
+               .collect();
+    // Sequences whose arrival stamp was popped at placement (adopted
+    // checkpoints count as placed: their stamp lived — and was popped —
+    // on the origin replica's selector).
+    let mut placed: Vec<Vec<BTreeSet<SlotId>>> =
+        (0..ne).map(|_| (0..nq).map(|_| BTreeSet::new()).collect())
+               .collect();
+    let mut q_retries: Vec<Vec<u32>> = vec![vec![0u32; nq]; ne];
+    let mut not_before: Vec<Vec<f64>> = vec![vec![0.0f64; nq]; ne];
+    let mut steps = vec![0u64; ne];
+    let mut finished = vec![0usize; ne];
+    let mut tokens: BTreeMap<(usize, usize), Vec<i32>> = BTreeMap::new();
+    let mut admitted = 0usize;
+    let mut failed = 0usize;
+    let mut deadline_sheds = 0u64;
+    // Post-admission sweeps only (in-transit expiries never admit), so
+    // the final conservation assert can be an exact equality.
+    let mut dl_inflight = 0usize;
+    let mut migrations = 0u64;
+    let mut next = 0usize;
+
+    let load_of = |steppers: &Vec<Vec<BoundStepper<'_, _>>>, e: usize| {
+        steppers[e]
+            .iter()
+            .map(|st| st.residual() + st.n_pending())
+            .sum::<usize>()
+    };
+
+    loop {
+        // Admit due arrivals, each routed whole to the least-loaded
+        // replica (ties to the lowest id — RouterState::route's twin).
+        while next < trace.len() && trace[next].t <= clock.now() + 1e-12 {
+            let a = trace[next];
+            let tag = next as u64;
+            next += 1;
+            let t_admit = clock.now();
+            let age = (t_admit - a.t).max(0.0);
+            if let Some(dl) = a.deadline {
+                if age >= dl {
+                    deadline_sheds += a.n as u64;
+                    continue;
+                }
+            }
+            let mut e_best = 0usize;
+            let mut best = usize::MAX;
+            for e in 0..ne {
+                let l = load_of(&steppers, e);
+                if l < best {
+                    best = l;
+                    e_best = e;
+                }
+            }
+            if !xqs[e_best].try_enqueue(qids[e_best][a.queue], 0, tag,
+                                        a.n, age) {
+                continue; // shed by admission backpressure
+            }
+            let prompt = Prompt::empty(specs[a.queue].d);
+            let mut rng = Pcg::new(a.seed);
+            for k in 0..a.n {
+                let sid = steppers[e_best][a.queue]
+                    .admit_prio(&prompt, rng.split(), a.priority);
+                info[e_best][a.queue].insert(sid, SeqInfo {
+                    key: (tag as usize, k),
+                    deadline: a.deadline.map(|dl| a.t + dl),
+                    tag,
+                });
+                admitted += 1;
+            }
+        }
+
+        // Deadline sweep, per replica (mirrors the engine's
+        // between-steps sweep; deadline sequences never migrate, so
+        // each lives where it was admitted).
+        let t_sweep = clock.now();
+        for e in 0..ne {
+            for q in 0..nq {
+                let expired: Vec<SlotId> = info[e][q]
+                    .iter()
+                    .filter(|&(_, i)| {
+                        i.deadline.map(|dl| t_sweep >= dl).unwrap_or(false)
+                    })
+                    .map(|(&sid, _)| sid)
+                    .collect();
+                for sid in expired {
+                    let Some(i) = info[e][q].remove(&sid) else { continue };
+                    if steppers[e][q].evict(sid).is_some() {
+                        // Resident: stamp popped at placement.
+                    } else if steppers[e][q].remove_pending(sid)
+                        && !placed[e][q].contains(&sid)
+                    {
+                        xqs[e].cancel_enqueue(qids[e][q], 0, i.tag, 1);
+                    }
+                    deadline_sheds += 1;
+                    dl_inflight += 1;
+                }
+            }
+        }
+
+        // Step phase: every replica with ready work steps once,
+        // concurrently; the shared clock then advances by the max cost
+        // among them (the fleet's wall time is the slowest replica's).
+        let t0 = clock.now();
+        let mut max_cost = 0.0f64;
+        let mut any_stepped = false;
+        for e in 0..ne {
+            let ready: Vec<QueueId> = (0..nq)
+                .filter(|&q| {
+                    !steppers[e][q].is_idle()
+                        && t0 + 1e-12 >= not_before[e][q]
+                })
+                .map(|q| qids[e][q])
+                .collect();
+            if ready.is_empty() {
+                continue;
+            }
+            let sid_q = xqs[e].pick(&ready).expect("ready set non-empty");
+            let q = qids[e].iter().position(|&x| x == sid_q).unwrap();
+            let step = steppers[e][q].step();
+            let placed_now = steppers[e][q].take_placements();
+            let mut i = 0;
+            while i < placed_now.len() {
+                let tag = info[e][q]
+                    .get(&placed_now[i])
+                    .map(|x| x.tag)
+                    .expect("placed sequence was admitted");
+                let mut j = i + 1;
+                while j < placed_now.len()
+                    && info[e][q].get(&placed_now[j]).map(|x| x.tag)
+                        == Some(tag)
+                {
+                    j += 1;
+                }
+                xqs[e].placed_at_tag(qids[e][q], 0, tag, j - i, t0,
+                                     |_| {});
+                i = j;
+            }
+            for sid in &placed_now {
+                placed[e][q].insert(*sid);
+            }
+            let cost =
+                specs[q].step_cost + fault_states[e][q].take_stall();
+            xqs[e].report_step(qids[e][q], cost);
+            max_cost = max_cost.max(cost);
+            any_stepped = true;
+            steps[e] += 1;
+            match step {
+                Ok(done) => {
+                    q_retries[e][q] = 0;
+                    not_before[e][q] = 0.0;
+                    for (sid, sample) in done {
+                        let Some(i) = info[e][q].remove(&sid) else {
+                            panic!("retired sequence was never admitted");
+                        };
+                        finished[e] += 1;
+                        assert!(
+                            tokens.insert(i.key, sample.tokens).is_none(),
+                            "sequence {:?} answered twice", i.key
+                        );
+                    }
+                }
+                Err(StepError::Transient(_))
+                    if q_retries[e][q] < cfg.supervise.max_retries =>
+                {
+                    q_retries[e][q] += 1;
+                    not_before[e][q] = clock.now()
+                        + cfg.supervise.backoff_for(q_retries[e][q]);
+                }
+                Err(_) => {
+                    // Definitive failure: quarantine replica e's queue q
+                    // only. Adopted sequences it held are counted failed
+                    // here too (the live path reports them home; the sim
+                    // owns both ends, so the global count is the same).
+                    while let Some(ck) = steppers[e][q].evict_lowest() {
+                        if info[e][q].remove(&ck.id()).is_some() {
+                            failed += 1;
+                        }
+                    }
+                    for sid in steppers[e][q].take_pending_ids() {
+                        let Some(i) = info[e][q].remove(&sid) else {
+                            continue;
+                        };
+                        if !placed[e][q].contains(&sid) {
+                            xqs[e].cancel_enqueue(qids[e][q], 0, i.tag, 1);
+                        }
+                        failed += 1;
+                    }
+                    q_retries[e][q] = 0;
+                    not_before[e][q] = 0.0;
+                }
+            }
+        }
+        if !any_stepped {
+            let wake = (0..ne)
+                .flat_map(|e| (0..nq).map(move |q| (e, q)))
+                .filter(|&(e, q)| !steppers[e][q].is_idle())
+                .map(|(e, q)| not_before[e][q])
+                .fold(f64::INFINITY, f64::min);
+            let next_t = if next < trace.len() {
+                trace[next].t
+            } else {
+                f64::INFINITY
+            };
+            let t = wake.min(next_t);
+            if !t.is_finite() {
+                break;
+            }
+            clock.set(t.max(clock.now()));
+            continue;
+        }
+        clock.advance(max_cost);
+
+        // Migration: an idle replica adopts one checkpoint from the
+        // busiest queue (>= 2 residents, so the origin keeps stepping)
+        // of the most loaded replica — at most one checkpoint in flight
+        // per round, deadline-carrying sequences excluded, exactly the
+        // live policy. Adoption re-mints the slot id in the adopter's
+        // namespace; the sequence's RNG stream rides the checkpoint, so
+        // its tokens stay bitwise identical either way.
+        if migrate && ne > 1 {
+            let idle =
+                (0..ne).find(|&e| steppers[e].iter().all(|s| s.is_idle()));
+            if let Some(e_to) = idle {
+                let e_from = (0..ne)
+                    .filter(|&e| e != e_to)
+                    .max_by_key(|&e| load_of(&steppers, e));
+                if let Some(e_from) = e_from {
+                    let q_best = (0..nq)
+                        .filter(|&q| steppers[e_from][q].n_active() >= 2)
+                        .max_by_key(|&q| steppers[e_from][q].n_active());
+                    if let Some(q) = q_best {
+                        if let Some(ck) = steppers[e_from][q].evict_lowest()
+                        {
+                            let sid = ck.id();
+                            let eligible = info[e_from][q]
+                                .get(&sid)
+                                .map(|i| i.deadline.is_none())
+                                .unwrap_or(false);
+                            if eligible {
+                                let Some(rec) = info[e_from][q].remove(&sid)
+                                else {
+                                    unreachable!("eligible checked above")
+                                };
+                                let new_sid =
+                                    steppers[e_to][q].adopt(ck);
+                                info[e_to][q].insert(new_sid, rec);
+                                placed[e_to][q].insert(new_sid);
+                                migrations += 1;
+                            } else {
+                                steppers[e_from][q].resume(ck);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // Conservation, fleet-wide: every admitted sequence is finished,
+    // failed, or deadline-shed — exactly one of the three (in-transit
+    // deadline sheds happen pre-admission and are excluded here).
+    let done: usize = finished.iter().sum();
+    assert_eq!(tokens.len(), done, "a retired sequence is missing tokens");
+    assert_eq!(admitted, done + failed + dl_inflight,
+               "admitted sequences were lost");
+    let shed: u64 = (0..ne)
+        .map(|e| qids[e].iter().map(|&q| xqs[e].shed_of(q)).sum::<u64>())
+        .sum();
+    FleetReport {
+        steps,
+        finished,
+        admitted,
+        failed,
+        deadline_sheds,
+        shed,
+        migrations,
         tokens,
         t_end: clock.now(),
     }

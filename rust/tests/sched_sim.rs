@@ -208,6 +208,33 @@ fn preemption_beats_weighted_on_slo_spike_and_is_bitwise_exact() {
     assert_eq!(pre.tokens[1], plain.tokens[1]);
 }
 
+/// `SchedConfig::checkpoint_budget` wired through the engine-mirroring
+/// harness: redo work parked by each preemption is charged against the
+/// victim's budget, and a zero budget marks every victim exhausted from
+/// the start — SLO pressure can then never fire a preemption. Since
+/// checkpoint/resume is bitwise-free, turning the knob changes timing
+/// only, never tokens.
+#[test]
+fn checkpoint_budget_caps_preemption_without_token_drift() {
+    let (specs, trace) = preempt_setup(true);
+    let open = SchedConfig { preempt_after: 2, ..SchedConfig::default() };
+    let zero = SchedConfig {
+        preempt_after: 2,
+        checkpoint_budget: 0,
+        ..SchedConfig::default()
+    };
+    let pre = simulate(&specs, &trace, Selector::Weighted, &open);
+    let off = simulate(&specs, &trace, Selector::Weighted, &zero);
+    assert!(pre.preempt_fires >= 1, "default budget must let fires through");
+    assert_eq!(off.preempt_fires, 0,
+               "zero budget must retire every victim before the first fire");
+    assert_eq!(off.preemptions, 0);
+    // Conservation and bitwise determinism hold on both settings.
+    assert_eq!(off.finished, vec![40, 10]);
+    assert_eq!(pre.tokens, off.tokens,
+               "checkpoint budget changed a token stream");
+}
+
 #[test]
 fn all_one_queue_trace_loses_no_throughput() {
     // Adversarial trace: every arrival targets one queue. The weighted
