@@ -5,6 +5,15 @@
 //!   # bitwise-stable (steps/sheds/violations/preemptions/tokens):
 //!   cargo run --example trace_replay -- --replay benchmarks/traces/smoke.jsonl
 //!
+//!   # Fleet replay: N replicas on one shared virtual clock, honouring
+//!   # any replica-kill script recorded in the trace. With
+//!   # --expect-faults the run fails unless a kill actually evacuated
+//!   # checkpoints, the victim restarted under supervision, and every
+//!   # admitted sequence still finished:
+//!   cargo run --example trace_replay -- \
+//!       --replay benchmarks/traces/fleet_kill.jsonl --engines 2 \
+//!       --expect-faults
+//!
 //!   # Record a synthetic live workload against a real Coordinator
 //!   # (MockModels, wall clock), assemble the event stream into a
 //!   # trace, write it, and validate it replays:
@@ -31,8 +40,9 @@ use ssmd::coordinator::{
     SamplerChoice,
 };
 use ssmd::engine::{MockModel, SpecParams, Window};
-use ssmd::sim::{assemble_trace, p95, read_trace, simulate, write_trace,
-                QueueGeometry, Selector};
+use ssmd::sim::{assemble_trace, p95, read_trace, simulate,
+                simulate_fleet_opts, write_trace, Arrival, FleetOptions,
+                FleetScript, QueueGeometry, QueueSpec, Selector};
 use ssmd::util::args::Args;
 
 fn main() {
@@ -47,14 +57,17 @@ fn main() {
     // point is covering fault containment, retries, the breaker, and
     // deadline sheds — all-zero counters would mean the gate went dead).
     let expect_faults = args.bool("expect-faults");
+    // --engines N (default 1): N>1 replays through the fleet sim —
+    // replicas on one shared clock, replica-kill scripts honoured.
+    let engines = args.usize("engines", 1);
     if let Some(path) = args.opt_str("record") {
         record(&path);
-        replay(&path, expect_preempt, expect_faults);
+        replay(&path, engines, expect_preempt, expect_faults);
     } else if let Some(path) = args.opt_str("replay") {
-        replay(&path, expect_preempt, expect_faults);
+        replay(&path, engines, expect_preempt, expect_faults);
     } else {
         eprintln!(
-            "usage: trace_replay --replay TRACE.jsonl \
+            "usage: trace_replay --replay TRACE.jsonl [--engines N] \
              [--expect-preemptions] [--expect-faults] | \
              --record OUT.jsonl"
         );
@@ -65,14 +78,21 @@ fn main() {
 /// Replay `path` twice through the sim harness and require the two
 /// reports — every counter and every token stream — to be bitwise
 /// identical. Prints a per-queue summary of the (stable) replay.
-fn replay(path: &str, expect_preempt: bool, expect_faults: bool) {
-    let (cfg, specs, trace) = match read_trace(std::path::Path::new(path)) {
-        Ok(t) => t,
-        Err(e) => {
-            eprintln!("FAIL reading {path}: {e}");
-            exit(1);
-        }
-    };
+fn replay(path: &str, engines: usize, expect_preempt: bool,
+          expect_faults: bool) {
+    let (cfg, specs, trace, fleet) =
+        match read_trace(std::path::Path::new(path)) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("FAIL reading {path}: {e}");
+                exit(1);
+            }
+        };
+    if engines > 1 || !fleet.is_empty() {
+        replay_fleet(path, &cfg, &specs, &trace, &fleet, engines.max(1),
+                     expect_faults);
+        return;
+    }
     println!(
         "replaying {path}: {} queues, {} arrivals",
         specs.len(),
@@ -134,6 +154,81 @@ fn replay(path: &str, expect_preempt: bool, expect_faults: bool) {
         exit(1);
     }
     println!("OK: replay is bitwise-stable");
+}
+
+/// Fleet replay: run the trace through `simulate_fleet_opts` twice and
+/// require bitwise-identical reports; if the trace scripts replica
+/// kills, additionally replay a kill-free same-seed fleet and require
+/// every token stream the chaos run retired — evacuated or not — to be
+/// bitwise identical to the undisturbed run's. With `expect_faults`,
+/// fail unless the kill actually fired (checkpoints evacuated, victim
+/// restarted) *and* the fleet still answered every admitted sequence.
+fn replay_fleet(path: &str, cfg: &SchedConfig, specs: &[QueueSpec],
+                trace: &[Arrival], fleet: &FleetScript, engines: usize,
+                expect_faults: bool) {
+    let opts = fleet.options(false);
+    println!(
+        "fleet-replaying {path}: {} queues, {} arrivals, {} replicas, \
+         {} kill scripts",
+        specs.len(),
+        trace.len(),
+        engines,
+        fleet.replica_faults.len()
+    );
+    let a = simulate_fleet_opts(specs, trace, engines, cfg, opts.clone());
+    let b = simulate_fleet_opts(specs, trace, engines, cfg, opts.clone());
+    if a != b {
+        eprintln!(
+            "FAIL {path}: two fleet replays diverged (steps {:?} vs {:?}, \
+             evacuations {} vs {}, restarts {} vs {})",
+            a.steps, b.steps, a.evacuations, b.evacuations,
+            a.replica_restarts, b.replica_restarts
+        );
+        exit(1);
+    }
+    // Evacuation must not perturb a single token: every stream the
+    // chaos run retired must match the kill-free same-seed fleet's
+    // stream for the same (arrival, sequence) key.
+    if !fleet.replica_faults.is_empty() {
+        let calm = simulate_fleet_opts(specs, trace, engines, cfg,
+                                       FleetOptions {
+                                           replica_faults: Vec::new(),
+                                           ..opts
+                                       });
+        for (k, stream) in &a.tokens {
+            if calm.tokens.get(k) != Some(stream) {
+                eprintln!(
+                    "FAIL {path}: evacuated stream for arrival {} seq {} \
+                     differs from the kill-free same-seed run",
+                    k.0, k.1
+                );
+                exit(1);
+            }
+        }
+    }
+    let done: usize = a.finished.iter().sum();
+    println!(
+        "  fleet: admitted={} done={done} failed={} deadline_sheds={} \
+         shed={} brownout_shed={} migrations={} evacuations={} \
+         replica_restarts={} t_end={:.3}s",
+        a.admitted, a.failed, a.deadline_sheds, a.shed, a.brownout_shed,
+        a.migrations, a.evacuations, a.replica_restarts, a.t_end
+    );
+    if expect_faults
+        && (a.evacuations == 0
+            || a.replica_restarts == 0
+            || a.failed != 0
+            || done != a.admitted)
+    {
+        eprintln!(
+            "FAIL {path}: --expect-faults set but the replica-loss layer \
+             went unexercised or lossy (evacuations={} replica_restarts={} \
+             failed={} done={done}/{} admitted)",
+            a.evacuations, a.replica_restarts, a.failed, a.admitted
+        );
+        exit(1);
+    }
+    println!("OK: fleet replay is bitwise-stable and loss-free");
 }
 
 /// Drive a synthetic live workload (bulk flood + latency burst) against

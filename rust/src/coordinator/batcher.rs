@@ -40,6 +40,11 @@ pub struct BatcherConfig {
     /// when a request carries no `deadline_ms` of its own. `None` = no
     /// default deadline.
     pub default_deadline_ms: Option<u64>,
+    /// Sharded mode: seconds without a heartbeat (load-gauge publish)
+    /// before the router marks a replica Down and admission routes
+    /// around it. Exactly at the threshold a replica is still Up; see
+    /// `coordinator::router::Liveness`.
+    pub heartbeat_timeout_s: f64,
 }
 
 impl Default for BatcherConfig {
@@ -50,6 +55,7 @@ impl Default for BatcherConfig {
             trace: None,
             faults: std::collections::BTreeMap::new(),
             default_deadline_ms: None,
+            heartbeat_timeout_s: 30.0,
         }
     }
 }

@@ -2,31 +2,43 @@
 //! replicas. Shared by every engine thread spawned by
 //! `Coordinator::start_sharded` and by the caller-side admission path.
 //!
-//! Three mechanisms, all built on per-replica load gauges the engine
+//! Four mechanisms, all built on per-replica load gauges the engine
 //! loops publish once per outer iteration:
 //!   * **admission routing** — a new request goes to the least-loaded
-//!     replica (ties to the lowest engine id, keeping placement
+//!     *live* replica (ties to the lowest engine id, keeping placement
 //!     deterministic for a given load vector);
-//!   * **work stealing / migration** — a hot replica evicts a resident
-//!     mid-sequence as a `SeqCheckpoint` and posts it on the board; an
-//!     idle replica adopts it (`SpecScheduler::adopt` re-mints the slot
-//!     id locally) and sends the finished sample back to the origin
-//!     engine, which owns the request's responder. Checkpoints carry
-//!     the per-sequence RNG stream, so a migrated sequence's token
-//!     stream is bitwise identical to an unmigrated same-seed run.
+//!   * **death detection** — publishing a load gauge doubles as a
+//!     heartbeat ([`Liveness`]); a replica whose last beat is older than
+//!     the missed-beat threshold is [`ReplicaState::Down`] and admission
+//!     skips it. When *every* replica is down the caller sheds with
+//!     503 + `Retry-After` (brown-out) instead of routing into a void;
+//!   * **work stealing / migration / evacuation** — a hot replica evicts
+//!     a resident mid-sequence as a `SeqCheckpoint` and posts it on the
+//!     board; an idle replica adopts it (`SpecScheduler::adopt` re-mints
+//!     the slot id locally) and routes the finished sample through the
+//!     migrant's [home](super::MigrantHome) — the origin engine's job
+//!     channel, or, for checkpoints evacuated off a dying replica, a
+//!     shared `EvacRecord` that answers the client directly. Checkpoints
+//!     carry the per-sequence RNG stream, so a migrated or evacuated
+//!     sequence's token stream is bitwise identical to an undisturbed
+//!     same-seed run.
 //!
 //! The board is a plain mutexed vec — migrations are rare (only fired
-//! when another replica sits idle) and the critical sections are a
-//! push/drain, so contention is negligible next to a model step.
+//! when another replica sits idle, or when a replica dies) and the
+//! critical sections are a push/drain, so contention is negligible next
+//! to a model step. A poisoned board (a replica panicked mid-push) is
+//! **rebuilt, not tolerated**: the lock is un-poisoned, the surviving
+//! contents kept, and the event counted in `board_poisoned` — silently
+//! dropping posted migrants would strand their requests.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc;
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard};
+use std::time::Instant;
 
 use crate::engine::SeqCheckpoint;
 
 use super::request::GenRequest;
-use super::Job;
+use super::MigrantHome;
 
 /// One mid-sequence checkpoint in transit between replicas.
 pub(crate) struct Migrant {
@@ -37,11 +49,126 @@ pub(crate) struct Migrant {
     /// it. The checkpoint itself carries all per-sequence state, so any
     /// same-key request works as the prototype.
     pub proto: GenRequest,
-    /// Origin-side request id / sample index the result routes back to.
-    pub rid: u64,
-    pub idx: usize,
-    /// The origin engine's job channel (`Job::Remote` return path).
-    pub origin: mpsc::Sender<Job>,
+    /// Where the finished sample reports: the origin engine's job
+    /// channel (load-balancing migration) or a shared evacuation record
+    /// that answers the client directly (the origin is dead).
+    pub home: MigrantHome,
+    /// Router-epoch instant the checkpoint was posted (stamped by
+    /// [`RouterState::post`]); adopters observe `now - posted_at` as
+    /// `evacuation_latency_s` for evacuated migrants.
+    pub posted_at: f64,
+    /// True when this checkpoint was evacuated off a dying replica
+    /// (counted in `evacuations` at adoption) rather than posted by the
+    /// load-balancing `migrate_out` path.
+    pub evacuated: bool,
+}
+
+/// Replica lifecycle as the router sees it: `Up` (beating), `Down`
+/// (missed-beat threshold exceeded, or its engine thread exited),
+/// `Restarting` (the supervisor accepted the exit and is backing off
+/// before respawn).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReplicaState {
+    Up,
+    Down,
+    Restarting,
+}
+
+impl ReplicaState {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ReplicaState::Up => "up",
+            ReplicaState::Down => "down",
+            ReplicaState::Restarting => "restarting",
+        }
+    }
+}
+
+/// Pure per-replica heartbeat state, driven by an explicit `now` (the
+/// same lazy-deadline style as `Breaker`): no threads, no wall clock, so
+/// the fleet sim drives it in virtual time and the live router feeds it
+/// its own epoch seconds. A replica is `Down` when its last beat is
+/// *strictly* older than `timeout_s` — exactly at the threshold it is
+/// still `Up` (pinned by `tests/fleet_sim.rs`). Clock skew between
+/// replicas cannot exist: every reading comes from one shared clock
+/// (the router's epoch live, one `SimClock` in the sim).
+pub struct Liveness {
+    timeout_s: f64,
+    beats: Vec<f64>,
+    restarting: Vec<bool>,
+}
+
+impl Liveness {
+    /// `n` replicas, all considered freshly beaten at `t = 0` (startup
+    /// grace: a replica has `timeout_s` to publish its first beat).
+    pub fn new(n: usize, timeout_s: f64) -> Liveness {
+        Liveness {
+            timeout_s,
+            beats: vec![0.0; n],
+            restarting: vec![false; n],
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.beats.len()
+    }
+
+    pub fn timeout_s(&self) -> f64 {
+        self.timeout_s
+    }
+
+    /// Record a heartbeat. Beats never move backwards, and a beat from a
+    /// respawned engine clears its `Restarting` mark.
+    pub fn beat(&mut self, e: usize, now: f64) {
+        if let Some(b) = self.beats.get_mut(e) {
+            if now > *b {
+                *b = now;
+            }
+        }
+        if let Some(r) = self.restarting.get_mut(e) {
+            *r = false;
+        }
+    }
+
+    /// Mark a replica as accepted-for-restart (the supervisor is backing
+    /// off before respawn). Cleared by its next beat.
+    pub fn mark_restarting(&mut self, e: usize) {
+        if let Some(r) = self.restarting.get_mut(e) {
+            *r = true;
+        }
+    }
+
+    pub fn state(&self, e: usize, now: f64) -> ReplicaState {
+        if self.restarting.get(e).copied().unwrap_or(false) {
+            return ReplicaState::Restarting;
+        }
+        let beat = self.beats.get(e).copied().unwrap_or(f64::NEG_INFINITY);
+        // Strictly-greater: exactly at the threshold the replica is
+        // still Up (a beat every `timeout_s` keeps it alive forever).
+        if now - beat > self.timeout_s {
+            ReplicaState::Down
+        } else {
+            ReplicaState::Up
+        }
+    }
+
+    pub fn is_up(&self, e: usize, now: f64) -> bool {
+        self.state(e, now) == ReplicaState::Up
+    }
+
+    pub fn any_up(&self, now: f64) -> bool {
+        (0..self.n()).any(|e| self.is_up(e, now))
+    }
+
+    pub fn all_down(&self, now: f64) -> bool {
+        !self.any_up(now)
+    }
+
+    /// The last instant at which replica `e` still counts as `Up`
+    /// (strictly after this it is `Down`) — the sim's wake-time hook.
+    pub fn down_at(&self, e: usize) -> f64 {
+        self.beats.get(e).copied().unwrap_or(0.0) + self.timeout_s
+    }
 }
 
 /// State shared between the replicas of one sharded coordinator.
@@ -51,6 +178,11 @@ pub struct RouterState {
     /// ordering everywhere — the values are advisory (a stale read
     /// routes one request slightly unevenly, nothing breaks).
     loads: Vec<AtomicUsize>,
+    /// Per-replica heartbeat state; `publish` doubles as the beat.
+    liveness: Mutex<Liveness>,
+    /// Wall anchor for `now_s` — all liveness reads share this epoch, so
+    /// replica-to-replica clock skew is structurally impossible.
+    epoch: Instant,
     /// Migration board: checkpoints posted by hot replicas, waiting for
     /// an idle replica to adopt them.
     board: Mutex<Vec<Migrant>>,
@@ -58,18 +190,33 @@ pub struct RouterState {
     migrations: AtomicU64,
     /// Board drains by an adopting replica that got >= 1 migrant.
     steals: AtomicU64,
+    /// Checkpoints evacuated off dying replicas and adopted elsewhere.
+    evacuations: AtomicU64,
+    /// Supervised engine-thread respawns.
+    replica_restarts: AtomicU64,
+    /// Poisoned-board recoveries (a replica panicked holding the lock).
+    board_poisoned: AtomicU64,
 }
 
-// lint: serve-region — admission routing and the migration board sit on
-// every sharded request path; a panic here strands checkpoints (and the
-// requests routed through them) fleet-wide.
+// lint: serve-region — admission routing, liveness, and the migration
+// board sit on every sharded request path; a panic here strands
+// checkpoints (and the requests routed through them) fleet-wide.
 impl RouterState {
-    pub fn new(n_engines: usize) -> RouterState {
+    pub fn new(n_engines: usize, heartbeat_timeout_s: f64) -> RouterState {
         RouterState {
             loads: (0..n_engines).map(|_| AtomicUsize::new(0)).collect(),
+            liveness: Mutex::new(Liveness::new(n_engines,
+                                               heartbeat_timeout_s)),
+            // lint: allow(clock-discipline) — the live router's liveness
+            // epoch is wall time by definition; the sim drives the pure
+            // Liveness struct on its SimClock instead.
+            epoch: Instant::now(),
             board: Mutex::new(Vec::new()),
             migrations: AtomicU64::new(0),
             steals: AtomicU64::new(0),
+            evacuations: AtomicU64::new(0),
+            replica_restarts: AtomicU64::new(0),
+            board_poisoned: AtomicU64::new(0),
         }
     }
 
@@ -77,14 +224,35 @@ impl RouterState {
         self.loads.len()
     }
 
-    /// Least-loaded admission routing (ties to the lowest engine id).
-    pub fn route(&self) -> usize {
-        let mut best = 0usize;
+    /// Seconds since this router was created — the shared timeline every
+    /// liveness decision reads (one clock, no skew).
+    pub fn now_s(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    /// The liveness lock never poisons in practice (no callee panics),
+    /// but recover rather than propagate if it ever does: heartbeat
+    /// state is monotone and always safe to keep.
+    fn live(&self) -> MutexGuard<'_, Liveness> {
+        self.liveness.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Least-loaded admission routing among `Up` replicas (ties to the
+    /// lowest engine id). `None` means brown-out: every replica is down
+    /// (or restarting) and the caller should shed with 503 +
+    /// `Retry-After` instead of queueing into a void.
+    pub fn route(&self) -> Option<usize> {
+        let now = self.now_s();
+        let live = self.live();
+        let mut best: Option<usize> = None;
         let mut best_load = usize::MAX;
         for (i, l) in self.loads.iter().enumerate() {
+            if !live.is_up(i, now) {
+                continue;
+            }
             let v = l.load(Ordering::Relaxed);
             if v < best_load {
-                best = i;
+                best = Some(i);
                 best_load = v;
             }
         }
@@ -92,12 +260,41 @@ impl RouterState {
     }
 
     /// Publish a replica's current load (engine loop, once per round).
-    /// Out-of-range ids are ignored rather than indexed — the router
-    /// must never panic an engine thread.
+    /// Doubles as the replica's heartbeat. Out-of-range ids are ignored
+    /// rather than indexed — the router must never panic an engine
+    /// thread.
     pub(crate) fn publish(&self, engine: usize, load: usize) {
         if let Some(l) = self.loads.get(engine) {
             l.store(load, Ordering::Relaxed);
         }
+        let now = self.now_s();
+        self.live().beat(engine, now);
+    }
+
+    /// Record a heartbeat without touching the load gauge (supervisor
+    /// re-registration after a respawn).
+    pub(crate) fn beat(&self, engine: usize) {
+        let now = self.now_s();
+        self.live().beat(engine, now);
+    }
+
+    /// Mark a replica as supervisor-accepted for restart.
+    pub(crate) fn mark_restarting(&self, engine: usize) {
+        self.live().mark_restarting(engine);
+    }
+
+    pub fn replica_state(&self, engine: usize) -> ReplicaState {
+        let now = self.now_s();
+        self.live().state(engine, now)
+    }
+
+    pub fn any_up(&self) -> bool {
+        let now = self.now_s();
+        self.live().any_up(now)
+    }
+
+    pub fn heartbeat_timeout_s(&self) -> f64 {
+        self.live().timeout_s()
     }
 
     pub fn load_of(&self, engine: usize) -> usize {
@@ -107,33 +304,46 @@ impl RouterState {
             .unwrap_or(0)
     }
 
-    /// True when some *other* replica is idle — the signal a busy
+    /// True when some *other* live replica is idle — the signal a busy
     /// replica uses to decide migration is worth the evict/adopt cost.
+    /// Dead replicas are excluded: their stale zero gauge must not
+    /// attract checkpoints nobody will adopt.
     pub(crate) fn someone_else_idle(&self, engine: usize) -> bool {
-        self.loads
-            .iter()
-            .enumerate()
-            .any(|(i, l)| i != engine && l.load(Ordering::Relaxed) == 0)
+        let now = self.now_s();
+        let live = self.live();
+        self.loads.iter().enumerate().any(|(i, l)| {
+            i != engine
+                && live.is_up(i, now)
+                && l.load(Ordering::Relaxed) == 0
+        })
     }
 
-    /// Post a checkpoint for adoption.
-    pub(crate) fn post(&self, m: Migrant) {
-        self.migrations.fetch_add(1, Ordering::Relaxed);
+    /// Lock the board, rebuilding it if a replica panicked while holding
+    /// the lock: clear the poison, keep the surviving contents (pushes
+    /// are single `Vec::push` calls, so the vec is never torn), and
+    /// count the recovery. Tolerating the poison instead would silently
+    /// strand every migrant posted afterwards.
+    fn board_lock(&self) -> MutexGuard<'_, Vec<Migrant>> {
         match self.board.lock() {
-            Ok(mut b) => b.push(m),
-            // A poisoned board means a replica panicked mid-push; the
-            // migrant is lost, but its Responder-backed request still
-            // gets a teardown answer from the origin engine's exit.
-            Err(_) => {}
+            Ok(b) => b,
+            Err(e) => {
+                self.board.clear_poison();
+                self.board_poisoned.fetch_add(1, Ordering::Relaxed);
+                e.into_inner()
+            }
         }
+    }
+
+    /// Post a checkpoint for adoption (stamps `posted_at`).
+    pub(crate) fn post(&self, mut m: Migrant) {
+        self.migrations.fetch_add(1, Ordering::Relaxed);
+        m.posted_at = self.now_s();
+        self.board_lock().push(m);
     }
 
     /// Adopt up to `max` posted checkpoints (idle replicas call this).
     pub(crate) fn take(&self, max: usize) -> Vec<Migrant> {
-        let mut b = match self.board.lock() {
-            Ok(b) => b,
-            Err(_) => return Vec::new(),
-        };
+        let mut b = self.board_lock();
         let k = b.len().min(max);
         let taken: Vec<Migrant> = b.drain(..k).collect();
         if !taken.is_empty() {
@@ -144,7 +354,7 @@ impl RouterState {
 
     /// Checkpoints currently parked on the board.
     pub fn board_depth(&self) -> usize {
-        self.board.lock().map(|b| b.len()).unwrap_or(0)
+        self.board_lock().len()
     }
 
     pub fn migrations(&self) -> u64 {
@@ -153,6 +363,26 @@ impl RouterState {
 
     pub fn steals(&self) -> u64 {
         self.steals.load(Ordering::Relaxed)
+    }
+
+    pub(crate) fn count_evacuation(&self) {
+        self.evacuations.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn evacuations(&self) -> u64 {
+        self.evacuations.load(Ordering::Relaxed)
+    }
+
+    pub(crate) fn count_replica_restart(&self) {
+        self.replica_restarts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn replica_restarts(&self) -> u64 {
+        self.replica_restarts.load(Ordering::Relaxed)
+    }
+
+    pub fn board_poisoned(&self) -> u64 {
+        self.board_poisoned.load(Ordering::Relaxed)
     }
 }
 // lint: end-serve-region
@@ -163,24 +393,75 @@ mod tests {
 
     #[test]
     fn route_picks_least_loaded_with_low_id_ties() {
-        let r = RouterState::new(3);
-        assert_eq!(r.route(), 0, "all-zero loads tie to engine 0");
+        let r = RouterState::new(3, 60.0);
+        assert_eq!(r.route(), Some(0), "all-zero loads tie to engine 0");
         r.publish(0, 5);
         r.publish(1, 2);
         r.publish(2, 2);
-        assert_eq!(r.route(), 1, "tie between 1 and 2 goes low");
+        assert_eq!(r.route(), Some(1), "tie between 1 and 2 goes low");
         r.publish(1, 9);
-        assert_eq!(r.route(), 2);
+        assert_eq!(r.route(), Some(2));
     }
 
     #[test]
     fn idle_detection_excludes_self() {
-        let r = RouterState::new(2);
+        let r = RouterState::new(2, 60.0);
         r.publish(0, 7);
         r.publish(1, 0);
         assert!(r.someone_else_idle(0));
         assert!(!r.someone_else_idle(1), "own idleness does not count");
         r.publish(1, 3);
         assert!(!r.someone_else_idle(0));
+    }
+
+    #[test]
+    fn liveness_threshold_is_strict() {
+        // Exactly at the missed-beat threshold a replica is still Up;
+        // strictly past it, Down. Beating exactly every `timeout_s`
+        // therefore keeps a replica alive forever.
+        let mut l = Liveness::new(2, 0.5);
+        l.beat(0, 1.0);
+        assert_eq!(l.state(0, 1.5), ReplicaState::Up,
+                   "exactly at threshold must still be Up");
+        assert_eq!(l.state(0, 1.5 + 1e-9), ReplicaState::Down);
+        assert_eq!(l.down_at(0), 1.5);
+        // Replica 1 never beat after construction: Up through t=0.5,
+        // Down after (startup grace).
+        assert_eq!(l.state(1, 0.5), ReplicaState::Up);
+        assert_eq!(l.state(1, 0.6), ReplicaState::Down);
+        assert!(!l.all_down(0.5));
+        assert!(l.all_down(2.0));
+    }
+
+    #[test]
+    fn restarting_is_marked_until_next_beat() {
+        let mut l = Liveness::new(1, 0.1);
+        l.mark_restarting(0);
+        assert_eq!(l.state(0, 0.0), ReplicaState::Restarting);
+        assert!(!l.any_up(0.0), "restarting replicas take no traffic");
+        l.beat(0, 5.0);
+        assert_eq!(l.state(0, 5.0), ReplicaState::Up);
+        // Beats are monotone: a stale publish cannot move time backwards.
+        l.beat(0, 1.0);
+        assert_eq!(l.down_at(0), 5.1);
+    }
+
+    #[test]
+    fn route_skips_down_replicas_and_brown_out_is_total() {
+        let r = RouterState::new(2, 600.0);
+        r.publish(0, 5);
+        r.publish(1, 9);
+        assert_eq!(r.route(), Some(0));
+        // Mark 0 restarting: routing falls over to the loaded survivor.
+        r.mark_restarting(0);
+        assert_eq!(r.route(), Some(1));
+        assert_eq!(r.replica_state(0), ReplicaState::Restarting);
+        // Both out: brown-out (route is None, any_up false).
+        r.mark_restarting(1);
+        assert_eq!(r.route(), None);
+        assert!(!r.any_up());
+        // A beat (re-registration) restores routing.
+        r.beat(1);
+        assert_eq!(r.route(), Some(1));
     }
 }

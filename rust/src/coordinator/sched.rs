@@ -463,6 +463,30 @@ impl CrossQueueScheduler {
         true
     }
 
+    /// Non-counting capacity probe: would a request of `n` sequences be
+    /// refused by [`CrossQueueScheduler::try_enqueue`] right now? Lets
+    /// priority-aware shedding displace a victim *before* the final
+    /// `try_enqueue` — whose failure is what counts the shed — so a
+    /// displaced-then-admitted arrival is never also counted shed.
+    pub fn is_full(&self, qid: QueueId, n: usize) -> bool {
+        let q = &self.queues[qid.0];
+        q.pending.saturating_add(n) > q.policy.max_pending
+            && q.policy.shed_on_full
+    }
+
+    /// Count a shed decided *outside* `try_enqueue` — priority-aware
+    /// shedding evicts an already-admitted victim (whose stamps the
+    /// caller rolls back via [`CrossQueueScheduler::cancel_enqueue`]) to
+    /// make room for a higher-priority arrival, and this keeps the
+    /// per-queue and global shed counters truthful for that path.
+    pub fn count_shed(&mut self, qid: QueueId, seqs: u64, reqs: u64) {
+        let q = &mut self.queues[qid.0];
+        q.shed_seqs += seqs;
+        q.shed_reqs += reqs;
+        self.shed_seqs += seqs;
+        self.shed_requests += reqs;
+    }
+
     /// Report `n` sequences of `lane` entering slots (execution start).
     /// Pops that lane's arrival stamps, updates the wait EWMA, counts
     /// SLO violations, and hands each wait to `observe` (the coordinator

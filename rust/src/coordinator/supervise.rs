@@ -149,6 +149,63 @@ impl Breaker {
     }
 }
 
+/// Replica-level supervisor: decides whether a dead engine thread is
+/// respawned and after how long. Pure state like [`Breaker`] — the
+/// sharded coordinator's supervisor thread and the fleet sim both drive
+/// it, one in wall time, one in virtual time.
+///
+/// Each replica gets a bounded restart budget (`max_retries` from the
+/// shared [`SupervisePolicy`]); each accepted exit backs off
+/// geometrically via [`SupervisePolicy::backoff_for`] before the
+/// respawn. A replica that exhausts its budget stays Down permanently —
+/// the router routes around it and brown-out only fires when every
+/// replica is gone.
+#[derive(Clone, Debug)]
+pub struct ReplicaSupervisor {
+    policy: SupervisePolicy,
+    restarts: Vec<u32>,
+}
+
+impl ReplicaSupervisor {
+    pub fn new(n_replicas: usize, policy: SupervisePolicy) -> Self {
+        ReplicaSupervisor {
+            policy,
+            restarts: vec![0; n_replicas],
+        }
+    }
+
+    /// Restart budget per replica (how many respawns are allowed).
+    pub fn budget(&self) -> u32 {
+        self.policy.max_retries
+    }
+
+    /// An engine thread for replica `e` exited. Returns
+    /// `Some(backoff_s)` — wait that long, then respawn — while the
+    /// replica has budget left; `None` once the budget is exhausted
+    /// (leave it Down).
+    pub fn on_exit(&mut self, e: usize) -> Option<f64> {
+        let k = match self.restarts.get_mut(e) {
+            Some(k) => k,
+            None => return None,
+        };
+        if *k >= self.policy.max_retries {
+            return None;
+        }
+        *k += 1;
+        Some(self.policy.backoff_for(*k))
+    }
+
+    /// Respawns granted so far for replica `e`.
+    pub fn restarts_of(&self, e: usize) -> u32 {
+        self.restarts.get(e).copied().unwrap_or(0)
+    }
+
+    /// Respawns granted so far across the fleet.
+    pub fn total_restarts(&self) -> u64 {
+        self.restarts.iter().map(|&k| k as u64).sum()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -206,6 +263,25 @@ mod tests {
         b.record_failure(16.0);
         assert_eq!(b.state(16.0), BreakerState::Closed,
                    "one failure after close must not trip");
+    }
+
+    #[test]
+    fn replica_supervisor_backs_off_geometrically_within_budget() {
+        let mut s = ReplicaSupervisor::new(2, policy());
+        assert_eq!(s.budget(), 2);
+        // First exit of replica 1: first backoff step.
+        let d1 = s.on_exit(1).expect("budget available");
+        assert!((d1 - 0.1).abs() < 1e-12);
+        // Second exit: doubled backoff; budget now exhausted.
+        let d2 = s.on_exit(1).expect("budget available");
+        assert!((d2 - 0.2).abs() < 1e-12);
+        assert_eq!(s.on_exit(1), None, "budget of 2 exhausted");
+        assert_eq!(s.restarts_of(1), 2);
+        // Budgets are per replica: replica 0 is untouched.
+        assert!(s.on_exit(0).is_some());
+        assert_eq!(s.total_restarts(), 3);
+        // Out-of-range replica ids never respawn.
+        assert_eq!(s.on_exit(7), None);
     }
 
     #[test]

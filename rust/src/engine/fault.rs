@@ -39,6 +39,12 @@ pub enum FaultKind {
     Err,
     /// Injected latency in seconds: the call still succeeds, but late.
     Stall(f64),
+    /// Replica death: the owning engine thread terminates deterministically
+    /// at this step, evacuating its checkpoints ([`FaultyStepper`] surfaces
+    /// it as [`StepError::Killed`]; replica scripts in the fleet sim drive
+    /// it directly). At model-call granularity it degrades to a plain
+    /// panic (a dead backend is a crashed backend from inside one call).
+    Kill,
 }
 
 /// One scripted fault: fires when the wrapped unit's counter reaches
@@ -97,10 +103,11 @@ impl FaultPlan {
                         "fault '{part}': stall needs ':seconds'"
                     ))
                 }
+                ("kill", None) => FaultKind::Kill,
                 (k, _) => {
                     return Err(format!(
                         "fault '{part}': unknown kind '{k}' \
-                         (panic | err | stall)"
+                         (panic | err | stall | kill)"
                     ))
                 }
             };
@@ -121,6 +128,7 @@ impl FaultPlan {
                 FaultKind::Panic => format!("panic@{}", f.at),
                 FaultKind::Err => format!("err@{}", f.at),
                 FaultKind::Stall(s) => format!("stall@{}:{}", f.at, s),
+                FaultKind::Kill => format!("kill@{}", f.at),
             })
             .collect::<Vec<_>>()
             .join(",")
@@ -216,7 +224,7 @@ impl<M: HybridModel> FaultyModel<M> {
 
     fn fire(&self) {
         match self.fault.advance() {
-            Some(FaultKind::Panic) => panic!(
+            Some(FaultKind::Panic) | Some(FaultKind::Kill) => panic!(
                 "injected fault: backend panic at model call {}",
                 self.fault.count()
             ),
@@ -333,6 +341,12 @@ impl<'m> Stepper for FaultyStepper<'m> {
                 // the sim stalls in virtual time via FaultyModel.
                 std::thread::sleep(std::time::Duration::from_secs_f64(s));
             }
+            Some(FaultKind::Kill) => {
+                return Err(StepError::Killed(format!(
+                    "injected fault: replica kill at step {}",
+                    self.fault.count()
+                )))
+            }
             None => {}
         }
         self.inner.step()
@@ -378,6 +392,18 @@ impl<'m> Stepper for FaultyStepper<'m> {
         self.inner.take_pending_ids()
     }
 
+    fn take_pending(&mut self) -> Vec<SeqCheckpoint> {
+        self.inner.take_pending()
+    }
+
+    fn lowest_pending(&self) -> Option<(SlotId, i32)> {
+        self.inner.lowest_pending()
+    }
+
+    fn is_pending(&self, id: SlotId) -> bool {
+        self.inner.is_pending(id)
+    }
+
     fn resume(&mut self, ck: SeqCheckpoint) {
         self.inner.resume(ck)
     }
@@ -417,11 +443,13 @@ mod tests {
 
     #[test]
     fn plan_parses_and_round_trips() {
-        let p = FaultPlan::parse("err@12, panic@5,stall@20:0.5").unwrap();
+        let p = FaultPlan::parse("err@12, panic@5,stall@20:0.5,kill@30")
+            .unwrap();
         assert_eq!(p.faults, vec![
             FaultSpec { at: 5, kind: FaultKind::Panic },
             FaultSpec { at: 12, kind: FaultKind::Err },
             FaultSpec { at: 20, kind: FaultKind::Stall(0.5) },
+            FaultSpec { at: 30, kind: FaultKind::Kill },
         ]);
         assert_eq!(FaultPlan::parse(&p.format()).unwrap(), p);
     }

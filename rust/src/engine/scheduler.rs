@@ -625,6 +625,32 @@ impl SpecScheduler {
         self.pending.drain(..).map(|s| s.id).collect()
     }
 
+    /// Drain the pending queue as checkpoints, in queue order. A pending
+    /// slot *is* its complete state (it never touched a slot table), so
+    /// wrapping it as a [`SeqCheckpoint`] is exact: an adopter resumes it
+    /// from zero progress with a bitwise-identical token stream. Replica
+    /// evacuation uses this to re-board not-yet-placed work instead of
+    /// dropping it.
+    pub fn take_pending(&mut self) -> Vec<SeqCheckpoint> {
+        self.pending.drain(..).map(|slot| SeqCheckpoint { slot }).collect()
+    }
+
+    /// The lowest-priority pending sequence — the back of the queue
+    /// (pending is sorted by descending priority; within the lowest
+    /// class the back is the youngest fresh admission, the cheapest to
+    /// turn away). Priority-aware shedding inspects this to decide
+    /// whether an incoming higher-class request should displace pending
+    /// work instead of being shed itself.
+    pub fn lowest_pending(&self) -> Option<(SlotId, i32)> {
+        self.pending.back().map(|s| (s.id, s.priority))
+    }
+
+    /// Whether `id` currently sits in the pending queue (not resident,
+    /// not retired).
+    pub fn is_pending(&self, id: SlotId) -> bool {
+        self.pending.iter().any(|s| s.id == id)
+    }
+
     pub fn n_active(&self) -> usize {
         self.slots.iter().filter(|s| s.is_some()).count()
     }
@@ -1507,12 +1533,20 @@ pub enum StepError {
     /// The queue's state must be treated as torn: quarantine it, never
     /// re-step it.
     Fatal(String),
+    /// The whole replica is dead (an injected `kill@N` fault or an
+    /// equivalent terminal backend condition). Unlike `Fatal`, the queue
+    /// state is *not* torn — the kill fires at a step boundary, before
+    /// any model call — so the engine loop evacuates every checkpoint it
+    /// holds onto the migration board and exits its thread.
+    Killed(String),
 }
 
 impl StepError {
     pub fn message(&self) -> &str {
         match self {
-            StepError::Transient(m) | StepError::Fatal(m) => m,
+            StepError::Transient(m)
+            | StepError::Fatal(m)
+            | StepError::Killed(m) => m,
         }
     }
 }
@@ -1552,6 +1586,15 @@ pub trait Stepper {
     /// Drain the pending queue (quarantine). See
     /// [`SpecScheduler::take_pending_ids`].
     fn take_pending_ids(&mut self) -> Vec<SlotId>;
+    /// Drain the pending queue as zero-progress checkpoints (replica
+    /// evacuation). See [`SpecScheduler::take_pending`].
+    fn take_pending(&mut self) -> Vec<SeqCheckpoint>;
+    /// The lowest-priority pending sequence, if any (priority-aware
+    /// shedding's victim probe). See [`SpecScheduler::lowest_pending`].
+    fn lowest_pending(&self) -> Option<(SlotId, i32)>;
+    /// Whether `id` is currently pending. See
+    /// [`SpecScheduler::is_pending`].
+    fn is_pending(&self, id: SlotId) -> bool;
     /// Re-admit an evicted checkpoint. See [`SpecScheduler::resume`].
     fn resume(&mut self, ck: SeqCheckpoint);
     /// Adopt a checkpoint from *another* scheduler, re-minting its slot
@@ -1695,6 +1738,18 @@ impl<'m, M: HybridModel> Stepper for BoundStepper<'m, M> {
 
     fn take_pending_ids(&mut self) -> Vec<SlotId> {
         self.sched.take_pending_ids()
+    }
+
+    fn take_pending(&mut self) -> Vec<SeqCheckpoint> {
+        self.sched.take_pending()
+    }
+
+    fn lowest_pending(&self) -> Option<(SlotId, i32)> {
+        self.sched.lowest_pending()
+    }
+
+    fn is_pending(&self, id: SlotId) -> bool {
+        self.sched.is_pending(id)
     }
 
     fn resume(&mut self, ck: SeqCheckpoint) {

@@ -63,6 +63,9 @@ fn print_help() {
          \x20           [--engines N] (shard into N replica engines behind\n\
          \x20           a least-loaded router with work stealing and\n\
          \x20           bitwise-identical checkpoint migration)\n\
+         \x20           [--heartbeat-timeout-s S] (missed-beat threshold\n\
+         \x20           before a replica is marked Down and its work\n\
+         \x20           evacuates to survivors; default 30)\n\
          \x20           [--max-conns N] [--io-timeout-ms N] (connection\n\
          \x20           budget — 503 over the cap — and per-stream I/O\n\
          \x20           timeout)\n\
@@ -171,8 +174,15 @@ fn start_coordinator(args: &Args) -> Result<Coordinator> {
         .filter(|&ms| ms > 0);
     // --engines N shards the engine into N replicas behind the
     // least-loaded router (work stealing + checkpoint migration); 1 is
-    // the exact single-engine code path.
+    // the exact single-engine code path. --heartbeat-timeout-s tunes
+    // replica death detection: strictly longer than this without a
+    // load-gauge beat marks a replica Down (admission routes around it;
+    // its checkpoints evacuate to survivors).
     let engines = args.usize("engines", 1).max(1);
+    let heartbeat_timeout_s = args
+        .f64("heartbeat-timeout-s",
+             BatcherConfig::default().heartbeat_timeout_s)
+        .max(0.001);
     Coordinator::start_sharded(
         model_factory(artifacts, only),
         BatcherConfig {
@@ -180,6 +190,7 @@ fn start_coordinator(args: &Args) -> Result<Coordinator> {
             sched,
             faults,
             default_deadline_ms,
+            heartbeat_timeout_s,
             ..Default::default()
         },
         engines,

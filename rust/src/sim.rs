@@ -50,6 +50,22 @@
 //! (arrival, sequence) so the bitwise-migration pin compares runs
 //! across replica counts and migration on/off.
 //!
+//! **Replica loss** (this PR): [`simulate_fleet_opts`] adds scripted
+//! replica kills ([`FleetOptions::replica_faults`], `kill@N` firing on a
+//! replica's Nth step attempt). A killed replica evacuates every
+//! resident and pending sequence onto a migration board and stops
+//! heartbeating; the router twin ([`Liveness`], driven by the same
+//! shared `SimClock` — clock skew between replicas is impossible by
+//! construction) marks it Down strictly past the missed-beat threshold,
+//! sweeps anything that was routed to it inside the detection window,
+//! and grants a supervised restart under geometric backoff and a
+//! bounded budget. Survivors adopt the board (`Stepper::adopt`
+//! re-mints), so evacuated token streams stay bitwise identical to an
+//! undisturbed same-seed run — for *any* adopter choice
+//! ([`FleetOptions::adopter_offset`]). When no replica is Up, arrivals
+//! brown-out (counted, never admitted); conservation stays exact:
+//! admitted = finished + failed + deadline-shed.
+//!
 //! ## Trace format (JSONL)
 //!
 //! One JSON object per line; [`write_trace`] / [`read_trace`] round-trip
@@ -81,8 +97,8 @@ use std::rc::Rc;
 
 use crate::coordinator::sched::{CrossQueueScheduler, QueueId, QueuePolicy,
                                 SchedConfig};
-use crate::coordinator::{Breaker, BreakerState};
-use crate::engine::fault::FaultState;
+use crate::coordinator::{Breaker, BreakerState, Liveness, ReplicaState};
+use crate::engine::fault::{FaultKind, FaultState};
 use crate::engine::{BoundStepper, FaultPlan, FaultyModel, MockModel,
                     Prompt, SeqCheckpoint, SeqParams, SlotId, SpecParams,
                     StepError, Stepper, Window};
@@ -185,9 +201,11 @@ pub struct Report {
     pub breaker_shed: u64,
     /// Closed->Open breaker transitions observed.
     pub breaker_opens: u64,
-    /// Total *sequences* rejected by admission backpressure.
+    /// Total *sequences* shed by admission backpressure — turned away at
+    /// the door, or admitted and later displaced by a strictly
+    /// higher-priority arrival (priority-aware shedding).
     pub shed: u64,
-    /// Total *requests* rejected by admission backpressure (one shed
+    /// Total *requests* shed by admission backpressure (one shed
     /// request sheds all of its sequences — distinct denominators).
     pub shed_requests: u64,
     pub slo_violations: u64,
@@ -288,6 +306,9 @@ pub fn simulate(specs: &[QueueSpec], trace: &[Arrival], selector: Selector,
         (0..nq).map(|_| Breaker::new(&cfg.supervise)).collect();
     let mut failed: Vec<BTreeSet<SlotId>> = vec![BTreeSet::new(); nq];
     let mut deadlined: Vec<BTreeSet<SlotId>> = vec![BTreeSet::new(); nq];
+    // Admitted-then-evicted by priority-aware shedding (a strictly
+    // higher-priority arrival displaced them from a full queue).
+    let mut shed_admitted: Vec<BTreeSet<SlotId>> = vec![BTreeSet::new(); nq];
     let mut deadline_at: Vec<BTreeMap<SlotId, f64>> =
         vec![BTreeMap::new(); nq];
     let mut placed_set: Vec<BTreeSet<SlotId>> = vec![BTreeSet::new(); nq];
@@ -321,8 +342,59 @@ pub fn simulate(specs: &[QueueSpec], trace: &[Arrival], selector: Selector,
                 }
             }
             if weighted {
-                if !xq.try_enqueue(qids[a.queue], 0, next as u64, a.n, age)
-                {
+                let tag = next as u64;
+                // Priority-aware shedding: over a full queue, shed the
+                // lowest-priority class first instead of turning the
+                // arrival away FIFO-blind. The victim must be *strictly*
+                // lower-priority and fully pending (no sequence of its
+                // request already holds a slot); the whole request is
+                // displaced, mirroring the engine loop's
+                // `shed_lowest_pending`. Displacement happens *before*
+                // the counting `try_enqueue`, so an arrival that wins a
+                // spot this way is never also counted shed.
+                while xq.is_full(qids[a.queue], a.n) {
+                    let qi = a.queue;
+                    let Some((vsid, vprio)) = steppers[qi].lowest_pending()
+                    else {
+                        break;
+                    };
+                    if vprio >= a.priority {
+                        break;
+                    }
+                    let vtag = admit_tag[qi][&vsid];
+                    let victims: Vec<SlotId> = admit_tag[qi]
+                        .iter()
+                        .filter(|&(sid, &t)| {
+                            t == vtag && steppers[qi].is_pending(*sid)
+                        })
+                        .map(|(&sid, _)| sid)
+                        .collect();
+                    let fully_pending = admit_tag[qi]
+                        .iter()
+                        .filter(|&(_, &t)| t == vtag)
+                        .all(|(sid, _)| {
+                            steppers[qi].is_pending(*sid)
+                                || seen_done[qi].contains(sid)
+                                || deadlined[qi].contains(sid)
+                                || shed_admitted[qi].contains(sid)
+                        });
+                    if !fully_pending || victims.is_empty() {
+                        break;
+                    }
+                    let mut removed = 0u64;
+                    for sid in victims {
+                        if steppers[qi].remove_pending(sid)
+                            && !placed_set[qi].contains(&sid)
+                        {
+                            xq.cancel_enqueue(qids[qi], 0, vtag, 1);
+                        }
+                        deadline_at[qi].remove(&sid);
+                        shed_admitted[qi].insert(sid);
+                        removed += 1;
+                    }
+                    xq.count_shed(qids[qi], removed, 1);
+                }
+                if !xq.try_enqueue(qids[a.queue], 0, tag, a.n, age) {
                     continue; // shed by admission backpressure
                 }
             } else {
@@ -623,9 +695,10 @@ pub fn simulate(specs: &[QueueSpec], trace: &[Arrival], selector: Selector,
     }
 
     for i in 0..nq {
-        // Conservation: every admitted sequence is finished, failed, or
-        // deadline-shed — exactly one of the three.
-        assert_eq!(finished[i] + failed[i].len() + deadlined[i].len(),
+        // Conservation: every admitted sequence is finished, failed,
+        // deadline-shed, or priority-shed — exactly one of the four.
+        assert_eq!(finished[i] + failed[i].len() + deadlined[i].len()
+                       + shed_admitted[i].len(),
                    admit_time[i].len(),
                    "queue {i}: admitted sequences were lost");
         assert_eq!(waits[i].len(), placed_set[i].len(),
@@ -688,6 +761,16 @@ pub struct FleetReport {
     pub shed: u64,
     /// Mid-sequence checkpoints migrated between replicas.
     pub migrations: u64,
+    /// Checkpoints evacuated off killed replicas and adopted by a
+    /// survivor (board leftovers nobody could adopt count `failed`
+    /// instead).
+    pub evacuations: u64,
+    /// Supervised respawns granted (each after its backoff elapsed).
+    pub replica_restarts: u64,
+    /// Sequences answered 503 at admission because *every* replica was
+    /// down (total brown-out) — never admitted, excluded from
+    /// conservation.
+    pub brownout_shed: u64,
     /// (arrival index, sequence index) -> retired token stream.
     pub tokens: BTreeMap<(usize, usize), Vec<i32>>,
     pub t_end: f64,
@@ -728,6 +811,60 @@ impl FleetReport {
 pub fn simulate_fleet(specs: &[QueueSpec], trace: &[Arrival],
                       n_engines: usize, cfg: &SchedConfig, migrate: bool)
                       -> FleetReport {
+    simulate_fleet_opts(specs, trace, n_engines, cfg, FleetOptions {
+        migrate,
+        ..FleetOptions::default()
+    })
+}
+
+/// Replica-loss knobs for [`simulate_fleet_opts`] — the fleet sim's
+/// failure-handling policy surface, mirroring the live coordinator
+/// (`BatcherConfig::heartbeat_timeout_s`, `ReplicaSupervisor`, the
+/// router's brown-out and evacuation board).
+#[derive(Clone, Debug)]
+pub struct FleetOptions {
+    /// Idle-replica checkpoint migration (the load-balancing policy).
+    pub migrate: bool,
+    /// Replica-kill scripts: `(replica, plan)`. A plan's `kill@N` entry
+    /// fires on that replica's Nth *step attempt* (counted across its
+    /// queues, before any model work — the `FaultyStepper` seam's
+    /// virtual twin). Non-kill kinds are ignored at replica granularity;
+    /// queue-level chaos stays on [`QueueSpec::fault`].
+    pub replica_faults: Vec<(usize, FaultPlan)>,
+    /// Missed-beat threshold: virtual seconds without a heartbeat before
+    /// the router marks a replica Down. Strictly-greater-than, exactly
+    /// like the live [`Liveness`].
+    pub heartbeat_timeout_s: f64,
+    /// Supervised respawns allowed per replica; once exhausted the
+    /// replica stays Down permanently.
+    pub restart_budget: u32,
+    /// Which Up replica adopts evacuated checkpoints: rank
+    /// `adopter_offset % |Up|` in least-loaded (ties-low) order. The
+    /// bitwise-identity pin must hold for every offset — adopter choice
+    /// can never change a token stream.
+    pub adopter_offset: usize,
+}
+
+impl Default for FleetOptions {
+    fn default() -> FleetOptions {
+        FleetOptions {
+            migrate: false,
+            replica_faults: Vec::new(),
+            heartbeat_timeout_s: 5.0,
+            restart_budget: 2,
+            adopter_offset: 0,
+        }
+    }
+}
+
+/// [`simulate_fleet`] with replica-loss handling (see [`FleetOptions`]
+/// and the module docs' **Replica loss** section): scripted kills,
+/// heartbeat death detection, checkpoint evacuation with bitwise-stable
+/// adoption, supervised restart under geometric backoff, and total
+/// brown-out when no replica is Up.
+pub fn simulate_fleet_opts(specs: &[QueueSpec], trace: &[Arrival],
+                           n_engines: usize, cfg: &SchedConfig,
+                           opts: FleetOptions) -> FleetReport {
     assert!(n_engines >= 1);
     for w in trace.windows(2) {
         assert!(w[0].t <= w[1].t, "trace must be time-sorted");
@@ -821,6 +958,73 @@ pub fn simulate_fleet(specs: &[QueueSpec], trace: &[Arrival],
     let mut migrations = 0u64;
     let mut next = 0usize;
 
+    // Replica-loss state. Kill scripts fire deterministically by step
+    // count; liveness is the live router's exact state machine, driven
+    // here by the one shared SimClock — every replica reads the same
+    // timeline, so inter-replica clock skew is impossible by
+    // construction (asserted by tests/fleet_sim.rs).
+    let kill_plans: Vec<FaultState> = (0..ne)
+        .map(|e| {
+            let mut plan = FaultPlan::default();
+            for (re, p) in &opts.replica_faults {
+                if *re == e {
+                    plan.faults.extend(p.faults.iter().copied());
+                }
+            }
+            plan.faults.sort_by_key(|f| f.at);
+            FaultState::new(plan)
+        })
+        .collect();
+    let mut alive = vec![true; ne];
+    // False between a kill and the router's missed-beat detection of it
+    // (the window in which admission still routes to the corpse).
+    let mut detected = vec![true; ne];
+    let mut liveness = Liveness::new(ne, opts.heartbeat_timeout_s);
+    let mut restarts = vec![0u32; ne];
+    let mut restart_at: Vec<Option<f64>> = vec![None; ne];
+    let mut evacuations = 0u64;
+    let mut replica_restarts = 0u64;
+    let mut brownout_shed = 0u64;
+    // The migration board: checkpoints evacuated off dead replicas,
+    // waiting for an Up replica to adopt them.
+    let mut board: Vec<(usize, SeqCheckpoint, SeqInfo)> = Vec::new();
+
+    // Drain every sequence replica `e` holds — resident or pending —
+    // onto the board. Un-placed pending sequences roll their admission
+    // stamps back so the dead selector's depth stays exact;
+    // deadline-carrying sequences are answered failed instead of risking
+    // expiry in transit (the live evacuation does the same).
+    fn evacuate_replica_sim<'m>(
+        e: usize,
+        steppers: &mut [Vec<BoundStepper<'m, FaultyModel<MockModel>>>],
+        info: &mut [Vec<BTreeMap<SlotId, SeqInfo>>],
+        placed: &[Vec<BTreeSet<SlotId>>],
+        xqs: &mut [CrossQueueScheduler],
+        qids: &[Vec<QueueId>],
+        board: &mut Vec<(usize, SeqCheckpoint, SeqInfo)>,
+        failed: &mut usize,
+    ) {
+        for q in 0..steppers[e].len() {
+            let mut cks: Vec<SeqCheckpoint> = Vec::new();
+            while let Some(ck) = steppers[e][q].evict_lowest() {
+                cks.push(ck);
+            }
+            cks.extend(steppers[e][q].take_pending());
+            for ck in cks {
+                let sid = ck.id();
+                let Some(rec) = info[e][q].remove(&sid) else { continue };
+                if !placed[e][q].contains(&sid) {
+                    xqs[e].cancel_enqueue(qids[e][q], 0, rec.tag, 1);
+                }
+                if rec.deadline.is_some() {
+                    *failed += 1;
+                } else {
+                    board.push((q, ck, rec));
+                }
+            }
+        }
+    }
+
     let load_of = |steppers: &Vec<Vec<BoundStepper<'_, _>>>, e: usize| {
         steppers[e]
             .iter()
@@ -829,8 +1033,61 @@ pub fn simulate_fleet(specs: &[QueueSpec], trace: &[Arrival],
     };
 
     loop {
+        // Heartbeats: every live replica publishes one per round (the
+        // load-gauge path doubles as the beat, as in the live router).
+        // Killed replicas simply stop beating — the missed-beat
+        // threshold is the only death-detection signal.
+        let t_beat = clock.now();
+        for e in 0..ne {
+            if alive[e] {
+                liveness.beat(e, t_beat);
+            }
+        }
+
+        // Supervised restart: a granted respawn comes back once its
+        // backoff elapses, re-registers (its beat clears Restarting),
+        // and serves again with fresh retry state.
+        for e in 0..ne {
+            if let Some(eta) = restart_at[e] {
+                if t_beat + 1e-12 >= eta {
+                    restart_at[e] = None;
+                    alive[e] = true;
+                    for q in 0..nq {
+                        q_retries[e][q] = 0;
+                        not_before[e][q] = 0.0;
+                    }
+                    liveness.beat(e, t_beat);
+                    replica_restarts += 1;
+                }
+            }
+        }
+
+        // Router-side death detection: strictly past the missed-beat
+        // threshold the replica flips Down. Sweep anything that was
+        // routed to it inside the detection window (admission kept
+        // believing it Up, exactly as the live router does), then let
+        // the supervisor grant a restart under budget.
+        for e in 0..ne {
+            if detected[e]
+                || liveness.state(e, t_beat) != ReplicaState::Down
+            {
+                continue;
+            }
+            evacuate_replica_sim(e, &mut steppers, &mut info, &placed,
+                                 &mut xqs, &qids, &mut board, &mut failed);
+            detected[e] = true;
+            if restarts[e] < opts.restart_budget {
+                restarts[e] += 1;
+                liveness.mark_restarting(e);
+                restart_at[e] =
+                    Some(t_beat + cfg.supervise.backoff_for(restarts[e]));
+            }
+        }
+
         // Admit due arrivals, each routed whole to the least-loaded
-        // replica (ties to the lowest id — RouterState::route's twin).
+        // replica the router believes Up (ties to the lowest id —
+        // RouterState::route's twin). No Up replica at all is a total
+        // brown-out: the arrival is answered 503, never admitted.
         while next < trace.len() && trace[next].t <= clock.now() + 1e-12 {
             let a = trace[next];
             let tag = next as u64;
@@ -843,15 +1100,22 @@ pub fn simulate_fleet(specs: &[QueueSpec], trace: &[Arrival],
                     continue;
                 }
             }
-            let mut e_best = 0usize;
+            let mut e_best = None;
             let mut best = usize::MAX;
             for e in 0..ne {
+                if liveness.state(e, t_admit) != ReplicaState::Up {
+                    continue;
+                }
                 let l = load_of(&steppers, e);
                 if l < best {
                     best = l;
-                    e_best = e;
+                    e_best = Some(e);
                 }
             }
+            let Some(e_best) = e_best else {
+                brownout_shed += a.n as u64;
+                continue;
+            };
             if !xqs[e_best].try_enqueue(qids[e_best][a.queue], 0, tag,
                                         a.n, age) {
                 continue; // shed by admission backpressure
@@ -867,6 +1131,33 @@ pub fn simulate_fleet(specs: &[QueueSpec], trace: &[Arrival],
                     tag,
                 });
                 admitted += 1;
+            }
+        }
+
+        // Board adoption: evacuated checkpoints drain whole to one Up
+        // replica — rank `adopter_offset % |Up|` in least-loaded
+        // (ties-low) order. Adoption re-mints slot ids; the sequence's
+        // RNG stream rides the checkpoint, so the adopter's identity can
+        // never change a token stream (the property test sweeps every
+        // offset). With no Up replica the board simply waits — a later
+        // restart adopts it, or teardown answers it failed.
+        if !board.is_empty() {
+            let t_adopt = clock.now();
+            let mut cands: Vec<usize> = (0..ne)
+                .filter(|&e| {
+                    alive[e]
+                        && liveness.state(e, t_adopt) == ReplicaState::Up
+                })
+                .collect();
+            cands.sort_by_key(|&e| (load_of(&steppers, e), e));
+            if !cands.is_empty() {
+                let e_to = cands[opts.adopter_offset % cands.len()];
+                for (q, ck, rec) in board.drain(..) {
+                    let new_sid = steppers[e_to][q].adopt(ck);
+                    info[e_to][q].insert(new_sid, rec);
+                    placed[e_to][q].insert(new_sid);
+                    evacuations += 1;
+                }
             }
         }
 
@@ -905,6 +1196,9 @@ pub fn simulate_fleet(specs: &[QueueSpec], trace: &[Arrival],
         let mut max_cost = 0.0f64;
         let mut any_stepped = false;
         for e in 0..ne {
+            if !alive[e] {
+                continue;
+            }
             let ready: Vec<QueueId> = (0..nq)
                 .filter(|&q| {
                     !steppers[e][q].is_idle()
@@ -913,6 +1207,20 @@ pub fn simulate_fleet(specs: &[QueueSpec], trace: &[Arrival],
                 .map(|q| qids[e][q])
                 .collect();
             if ready.is_empty() {
+                continue;
+            }
+            // Replica-kill scripts fire on the Nth step *attempt*,
+            // before any model work — the FaultyStepper Kill seam's
+            // virtual twin. The replica dies whole: its entire state
+            // (every queue's residents and pending) evacuates to the
+            // board, and it stops beating. Detection is the router's
+            // job, at the missed-beat threshold.
+            if matches!(kill_plans[e].advance(), Some(FaultKind::Kill)) {
+                alive[e] = false;
+                detected[e] = false;
+                evacuate_replica_sim(e, &mut steppers, &mut info,
+                                     &placed, &mut xqs, &qids, &mut board,
+                                     &mut failed);
                 continue;
             }
             let sid_q = xqs[e].pick(&ready).expect("ready set non-empty");
@@ -992,11 +1300,25 @@ pub fn simulate_fleet(specs: &[QueueSpec], trace: &[Arrival],
             }
         }
         if !any_stepped {
+            // Live replicas wake at their earliest backoff expiry; dead
+            // ones wake the fleet at their missed-beat detection instant
+            // (strictly past the threshold) or their granted restart —
+            // sequences stranded on an undetected corpse must not spin
+            // the clock in place, and a dead fleet must still advance to
+            // detection and through restart backoff.
             let wake = (0..ne)
+                .filter(|&e| alive[e])
                 .flat_map(|e| (0..nq).map(move |q| (e, q)))
                 .filter(|&(e, q)| !steppers[e][q].is_idle())
                 .map(|(e, q)| not_before[e][q])
                 .fold(f64::INFINITY, f64::min);
+            let wake = (0..ne)
+                .filter(|&e| !detected[e])
+                .map(|e| liveness.down_at(e) + 1e-9)
+                .fold(wake, f64::min);
+            let wake = (0..ne)
+                .filter_map(|e| restart_at[e])
+                .fold(wake, f64::min);
             let next_t = if next < trace.len() {
                 trace[next].t
             } else {
@@ -1018,12 +1340,13 @@ pub fn simulate_fleet(specs: &[QueueSpec], trace: &[Arrival],
         // live policy. Adoption re-mints the slot id in the adopter's
         // namespace; the sequence's RNG stream rides the checkpoint, so
         // its tokens stay bitwise identical either way.
-        if migrate && ne > 1 {
-            let idle =
-                (0..ne).find(|&e| steppers[e].iter().all(|s| s.is_idle()));
+        if opts.migrate && ne > 1 {
+            let idle = (0..ne).find(|&e| {
+                alive[e] && steppers[e].iter().all(|s| s.is_idle())
+            });
             if let Some(e_to) = idle {
                 let e_from = (0..ne)
-                    .filter(|&e| e != e_to)
+                    .filter(|&e| e != e_to && alive[e])
                     .max_by_key(|&e| load_of(&steppers, e));
                 if let Some(e_from) = e_from {
                     let q_best = (0..nq)
@@ -1057,9 +1380,16 @@ pub fn simulate_fleet(specs: &[QueueSpec], trace: &[Arrival],
         }
     }
 
+    // Teardown: board leftovers nobody could adopt (every replica
+    // permanently down) are answered failed — the live coordinator's
+    // shutdown does exactly this to unadopted migrants via `home_fail`.
+    failed += board.len();
+    board.clear();
+
     // Conservation, fleet-wide: every admitted sequence is finished,
     // failed, or deadline-shed — exactly one of the three (in-transit
-    // deadline sheds happen pre-admission and are excluded here).
+    // deadline sheds and brown-out rejections happen pre-admission and
+    // are excluded here).
     let done: usize = finished.iter().sum();
     assert_eq!(tokens.len(), done, "a retired sequence is missing tokens");
     assert_eq!(admitted, done + failed + dl_inflight,
@@ -1075,6 +1405,9 @@ pub fn simulate_fleet(specs: &[QueueSpec], trace: &[Arrival],
         deadline_sheds,
         shed,
         migrations,
+        evacuations,
+        replica_restarts,
+        brownout_shed,
         tokens,
         t_end: clock.now(),
     }
@@ -1208,17 +1541,59 @@ fn parse_u64(v: Option<&Json>) -> Result<u64, String> {
     }
 }
 
+/// Replica-level chaos carried by a trace file: `replica` lines
+/// (`{"kind":"replica","engine":E,"faults":"kill@N"}`) plus the fleet
+/// config keys `heartbeat_s` / `restart_budget`. All-default for
+/// single-engine traces; [`FleetScript::options`] folds it into a
+/// [`FleetOptions`] for replay.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FleetScript {
+    pub replica_faults: Vec<(usize, FaultPlan)>,
+    pub heartbeat_s: Option<f64>,
+    pub restart_budget: Option<u32>,
+}
+
+impl FleetScript {
+    pub fn is_empty(&self) -> bool {
+        self.replica_faults.is_empty()
+            && self.heartbeat_s.is_none()
+            && self.restart_budget.is_none()
+    }
+
+    /// Fold into [`FleetOptions`], keeping that type's defaults for any
+    /// key the trace omitted.
+    pub fn options(&self, migrate: bool) -> FleetOptions {
+        let d = FleetOptions::default();
+        FleetOptions {
+            migrate,
+            replica_faults: self.replica_faults.clone(),
+            heartbeat_timeout_s: self.heartbeat_s
+                .unwrap_or(d.heartbeat_timeout_s),
+            restart_budget: self.restart_budget.unwrap_or(d.restart_budget),
+            adopter_offset: 0,
+        }
+    }
+}
+
 /// Serialize a (config, queues, arrivals) trace as JSONL (see module
 /// docs for the line grammar). Creates parent directories as needed.
 pub fn write_trace(path: &Path, cfg: &SchedConfig, specs: &[QueueSpec],
                    trace: &[Arrival]) -> std::io::Result<()> {
+    write_trace_fleet(path, cfg, specs, trace, &FleetScript::default())
+}
+
+/// [`write_trace`] plus a replica-level chaos script (fleet config keys
+/// on the config line, one `replica` line per scripted replica).
+pub fn write_trace_fleet(path: &Path, cfg: &SchedConfig,
+                         specs: &[QueueSpec], trace: &[Arrival],
+                         fleet: &FleetScript) -> std::io::Result<()> {
     if let Some(dir) = path.parent() {
         if !dir.as_os_str().is_empty() {
             std::fs::create_dir_all(dir)?;
         }
     }
     let mut f = std::fs::File::create(path)?;
-    let cfg_line = Json::obj(vec![
+    let mut cfg_fields = vec![
         ("kind", Json::str("config")),
         ("starve_after", Json::num(cfg.starve_after as f64)),
         ("wait_alpha", Json::num(cfg.wait_alpha)),
@@ -1231,8 +1606,21 @@ pub fn write_trace(path: &Path, cfg: &SchedConfig, specs: &[QueueSpec],
          Json::num(cfg.supervise.breaker_threshold as f64)),
         ("breaker_cooldown_s",
          Json::num(cfg.supervise.breaker_cooldown_s)),
-    ]);
-    writeln!(f, "{cfg_line}")?;
+    ];
+    if let Some(hb) = fleet.heartbeat_s {
+        cfg_fields.push(("heartbeat_s", Json::num(hb)));
+    }
+    if let Some(rb) = fleet.restart_budget {
+        cfg_fields.push(("restart_budget", Json::num(rb as f64)));
+    }
+    writeln!(f, "{}", Json::obj(cfg_fields))?;
+    for (e, plan) in &fleet.replica_faults {
+        writeln!(f, "{}", Json::obj(vec![
+            ("kind", Json::str("replica")),
+            ("engine", Json::num(*e as f64)),
+            ("faults", Json::str(plan.format())),
+        ]))?;
+    }
     for s in specs {
         let mut fields = vec![
             ("kind", Json::str("queue")),
@@ -1274,16 +1662,20 @@ pub fn write_trace(path: &Path, cfg: &SchedConfig, specs: &[QueueSpec],
     Ok(())
 }
 
-/// Parse a JSONL trace written by [`write_trace`] (or by hand — missing
-/// optional fields take their defaults).
+/// Parse a JSONL trace written by [`write_trace`] /
+/// [`write_trace_fleet`] (or by hand — missing optional fields take
+/// their defaults). The [`FleetScript`] element is all-default for
+/// traces without replica lines or fleet config keys.
 pub fn read_trace(path: &Path)
-                  -> Result<(SchedConfig, Vec<QueueSpec>, Vec<Arrival>),
+                  -> Result<(SchedConfig, Vec<QueueSpec>, Vec<Arrival>,
+                             FleetScript),
                             String> {
     let body = std::fs::read_to_string(path)
         .map_err(|e| format!("read {}: {e}", path.display()))?;
     let mut cfg = SchedConfig::default();
     let mut specs = Vec::new();
     let mut arrivals = Vec::new();
+    let mut fleet = FleetScript::default();
     for (ln, line) in body.lines().enumerate() {
         let line = line.trim();
         if line.is_empty() {
@@ -1334,6 +1726,30 @@ pub fn read_trace(path: &Path)
                 {
                     cfg.supervise.breaker_cooldown_s = x;
                 }
+                fleet.heartbeat_s =
+                    v.get("heartbeat_s").and_then(Json::as_f64);
+                fleet.restart_budget = v
+                    .get("restart_budget")
+                    .and_then(Json::as_f64)
+                    .map(|x| x as u32);
+            }
+            "replica" => {
+                let engine =
+                    v.get("engine").and_then(Json::as_usize).ok_or_else(
+                        || format!("line {}: missing engine", ln + 1),
+                    )?;
+                let plan = v
+                    .get("faults")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| {
+                        format!("line {}: replica line needs faults",
+                                ln + 1)
+                    })
+                    .and_then(|s| {
+                        FaultPlan::parse(s)
+                            .map_err(|e| format!("line {}: {e}", ln + 1))
+                    })?;
+                fleet.replica_faults.push((engine, plan));
             }
             "queue" => {
                 let mut policy = QueuePolicy::default();
@@ -1425,7 +1841,7 @@ pub fn read_trace(path: &Path)
             return Err("arrival lines must be time-sorted".into());
         }
     }
-    Ok((cfg, specs, arrivals))
+    Ok((cfg, specs, arrivals, fleet))
 }
 
 #[cfg(test)]
@@ -1465,8 +1881,9 @@ mod tests {
         let path = std::env::temp_dir()
             .join(format!("ssmd_trace_rt_{}.jsonl", std::process::id()));
         write_trace(&path, &cfg, &specs, &trace).unwrap();
-        let (cfg2, specs2, trace2) = read_trace(&path).unwrap();
+        let (cfg2, specs2, trace2, fleet2) = read_trace(&path).unwrap();
         let _ = std::fs::remove_file(&path);
+        assert!(fleet2.is_empty(), "plain traces carry no fleet script");
         assert_eq!(cfg2.starve_after, 32);
         assert_eq!(cfg2.preempt_after, 2);
         assert_eq!(specs2.len(), 2);
@@ -1486,6 +1903,40 @@ mod tests {
         assert_eq!(trace2[1].priority, 3);
         assert_eq!(trace2[1].t, 0.5);
         assert_eq!(trace2[1].deadline, Some(0.25));
+    }
+
+    #[test]
+    fn fleet_script_round_trips_and_folds_into_options() {
+        let cfg = SchedConfig::default();
+        let specs = vec![QueueSpec::new(8, 2, 0.01,
+                                        QueuePolicy::default())];
+        let trace = vec![Arrival { seed: 11, ..Arrival::default() }];
+        let fleet = FleetScript {
+            replica_faults: vec![
+                (1, FaultPlan::parse("kill@4").unwrap()),
+                (0, FaultPlan::parse("kill@9,kill@40").unwrap()),
+            ],
+            heartbeat_s: Some(0.25),
+            restart_budget: Some(1),
+        };
+        let path = std::env::temp_dir()
+            .join(format!("ssmd_trace_fleet_{}.jsonl",
+                          std::process::id()));
+        write_trace_fleet(&path, &cfg, &specs, &trace, &fleet).unwrap();
+        let (_, specs2, trace2, fleet2) = read_trace(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(specs2.len(), 1);
+        assert_eq!(trace2.len(), 1);
+        assert_eq!(fleet2, fleet, "fleet script must survive round-trip");
+        let opts = fleet2.options(true);
+        assert!(opts.migrate);
+        assert_eq!(opts.heartbeat_timeout_s, 0.25);
+        assert_eq!(opts.restart_budget, 1);
+        assert_eq!(opts.replica_faults.len(), 2);
+        // Omitted keys fall back to FleetOptions defaults.
+        let d = FleetScript::default().options(false);
+        assert_eq!(d.heartbeat_timeout_s,
+                   FleetOptions::default().heartbeat_timeout_s);
     }
 
     #[test]

@@ -11,13 +11,23 @@
 //! * **router conservation** — across randomized multi-replica traces
 //!   (deadlines, transient and fatal faults included): every admitted
 //!   sequence is finished, failed, or deadline-shed, exactly once; no
-//!   sequence is answered twice; replays are bit-identical.
+//!   sequence is answered twice; replays are bit-identical;
+//! * **replica loss** — a scripted mid-run `kill@N` evacuates the
+//!   victim's checkpoints onto the migration board, a survivor adopts
+//!   them, the victim restarts under supervised backoff, every admitted
+//!   sequence still finishes, and the evacuated token streams are
+//!   bitwise identical to a kill-free same-seed run — whichever replica
+//!   adopts (the property test sweeps `adopter_offset` and randomized
+//!   kill scripts).
 
 use ssmd::coordinator::sched::{QueuePolicy, SchedConfig};
+use ssmd::coordinator::Liveness;
 use ssmd::engine::FaultPlan;
-use ssmd::sim::{simulate_fleet, Arrival, QueueSpec};
+use ssmd::sim::{simulate_fleet, simulate_fleet_opts, Arrival, FleetOptions,
+                QueueSpec};
 use ssmd::util::ptest::{self, Size};
 use ssmd::util::rng::Pcg;
+use ssmd::util::simclock::{Clock, SimClock};
 
 /// Saturated mixed workload: two models with comparable step costs and
 /// enough near-simultaneous arrivals that both replicas stay busy for
@@ -104,6 +114,86 @@ fn fleet_sim_is_deterministic() {
     let a = simulate_fleet(&specs, &trace, 3, &cfg, true);
     let b = simulate_fleet(&specs, &trace, 3, &cfg, true);
     assert_eq!(a, b, "fleet replay diverged");
+}
+
+/// The replica-loss acceptance scenario (the fleet_kill.jsonl CI trace's
+/// in-repo twin): 2 replicas, replica 0 killed on its 3rd step attempt
+/// while holding four mid-flight sequences, tight missed-beat threshold,
+/// restart budget 2, and a post-restart arrival.
+fn kill_case() -> (Vec<QueueSpec>, Vec<Arrival>, FleetOptions) {
+    let specs = vec![QueueSpec::new(16, 2, 0.01, QueuePolicy::default())];
+    let mut trace: Vec<Arrival> = (0..4)
+        .map(|k| Arrival {
+            t: 0.0,
+            queue: 0,
+            n: 2,
+            seed: 11 + k,
+            ..Arrival::default()
+        })
+        .collect();
+    // Lands after detection + backoff: the respawned replica serves it.
+    trace.push(Arrival { t: 1.0, queue: 0, n: 2, seed: 15,
+                         ..Arrival::default() });
+    let opts = FleetOptions {
+        replica_faults: vec![(0, FaultPlan::parse("kill@3").unwrap())],
+        heartbeat_timeout_s: 0.5,
+        restart_budget: 2,
+        ..FleetOptions::default()
+    };
+    (specs, trace, opts)
+}
+
+/// The tentpole's replica-loss acceptance pin: a scripted mid-run kill
+/// loses nothing — every admitted sequence finishes (evacuated
+/// checkpoints are adopted by the survivor), the victim restarts under
+/// supervised backoff and serves again, and every token stream is
+/// bitwise identical to the kill-free same-seed fleet.
+#[test]
+fn scripted_kill_evacuates_restarts_and_loses_nothing() {
+    let (specs, trace, opts) = kill_case();
+    let cfg = SchedConfig::default();
+    let r = simulate_fleet_opts(&specs, &trace, 2, &cfg, opts.clone());
+    let r2 = simulate_fleet_opts(&specs, &trace, 2, &cfg, opts.clone());
+    assert_eq!(r, r2, "kill replay diverged");
+    assert!(r.evacuations >= 1,
+            "the kill must evacuate the victim's checkpoints");
+    assert!(r.replica_restarts >= 1,
+            "the victim must restart under supervision");
+    assert_eq!(r.failed, 0);
+    assert_eq!(r.brownout_shed, 0, "one replica stayed up throughout");
+    let done: usize = r.finished.iter().sum();
+    assert_eq!(done, r.admitted, "an admitted sequence was lost");
+    assert_eq!(r.admitted, 10, "every arrival admitted");
+    assert!(r.finished[0] >= 1,
+            "the respawned replica must serve again (t=1 arrival)");
+    // Bitwise identity: the kill, the evacuation, and the adopter's
+    // identity are invisible to results — same streams as a calm fleet.
+    let calm = simulate_fleet_opts(&specs, &trace, 2, &cfg, FleetOptions {
+        replica_faults: Vec::new(),
+        ..opts
+    });
+    assert_eq!(r.tokens, calm.tokens,
+               "evacuation changed a token stream bitwise");
+}
+
+/// Clock skew between replicas is impossible by construction: every
+/// replica reads the one shared [`SimClock`] timeline (clones share
+/// state), so two beats recorded "now" can never disagree about the
+/// missed-beat deadline. The threshold-edge cases (exactly-at-threshold
+/// is still Up, strictly-past is Down) are pinned in `router.rs` units.
+#[test]
+fn shared_simclock_makes_replica_skew_impossible() {
+    let a = SimClock::new();
+    let b = a.clone();
+    a.advance(1.25);
+    assert_eq!(a.now(), b.now(), "clone observed a different timeline");
+    b.set(3.5);
+    assert_eq!(a.now(), 3.5, "set through one handle moves both");
+    let mut l = Liveness::new(2, 0.5);
+    l.beat(0, a.now());
+    l.beat(1, b.now());
+    assert_eq!(l.down_at(0), l.down_at(1),
+               "same-instant beats must share a missed-beat deadline");
 }
 
 /// Random fleet cases: 1-3 queues, bursty/heavy-tailed/flood arrival
@@ -204,6 +294,141 @@ fn property_fleet_conserves_across_random_traces() {
                 if one.tokens != r.tokens {
                     return Err(
                         "replica count changed token streams".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Random replica-kill cases: fault-free deadline-free queues (so token
+/// streams are comparable against a kill-free run), 2-3 replicas, 1-2
+/// `kill@N` scripts on random replicas, randomized missed-beat
+/// threshold.
+fn random_kill_case(rng: &mut Pcg, s: Size)
+                    -> (Vec<QueueSpec>, Vec<Arrival>, usize,
+                        Vec<(usize, FaultPlan)>, f64) {
+    let nq = 1 + rng.below(2);
+    let specs: Vec<QueueSpec> = (0..nq)
+        .map(|_| {
+            QueueSpec {
+                d: 8,
+                vocab: 4 + rng.below(4),
+                bucket: 1 + rng.below(2),
+                model_seed: rng.next_u64(),
+                policy: QueuePolicy::default(),
+                step_cost: 0.005 + rng.f64() * 0.045,
+                fault: None,
+            }
+        })
+        .collect();
+    let n_arrivals = 6 + (s.0 * 3).min(10);
+    let mut t = 0.0;
+    let mut trace = Vec::new();
+    for _ in 0..n_arrivals {
+        if rng.below(3) == 0 {
+            t += rng.f64() * 0.4;
+        }
+        trace.push(Arrival {
+            t,
+            queue: rng.below(nq),
+            n: 1 + rng.below(3),
+            seed: rng.next_u64(),
+            ..Arrival::default()
+        });
+    }
+    let ne = 2 + rng.below(2);
+    let kills: Vec<(usize, FaultPlan)> = (0..1 + rng.below(2))
+        .map(|_| {
+            let spec = format!("kill@{}", 1 + rng.below(12));
+            (rng.below(ne), FaultPlan::parse(&spec).unwrap())
+        })
+        .collect();
+    let heartbeat = 0.1 + rng.f64() * 0.5;
+    (specs, trace, ne, kills, heartbeat)
+}
+
+/// The evacuation-identity property: across randomized replica-kill
+/// scripts, every adopter choice (`adopter_offset` swept) produces the
+/// *same* report — and every token stream the chaos fleet retires is
+/// bitwise identical to the kill-free same-seed fleet's stream for that
+/// (arrival, sequence). Conservation holds throughout: nothing admitted
+/// is lost (kills under a restart budget are loss-free), and arrivals
+/// are only ever rejected by total brown-out.
+#[test]
+fn property_kills_conserve_and_evacuation_is_bitwise_invisible() {
+    let cfg = SchedConfig::default();
+    ptest::check(
+        8,
+        0x5eed_f2,
+        random_kill_case,
+        |(specs, trace, ne, kills, heartbeat)| {
+            let opts_at = |off: usize| FleetOptions {
+                migrate: false,
+                replica_faults: kills.clone(),
+                heartbeat_timeout_s: *heartbeat,
+                restart_budget: 2,
+                adopter_offset: off,
+            };
+            let calm = simulate_fleet_opts(specs, trace, *ne, &cfg,
+                                           FleetOptions {
+                                               replica_faults: Vec::new(),
+                                               ..opts_at(0)
+                                           });
+            let base = simulate_fleet_opts(specs, trace, *ne, &cfg,
+                                           opts_at(0));
+            for off in 0..3usize {
+                let r = simulate_fleet_opts(specs, trace, *ne, &cfg,
+                                            opts_at(off));
+                let r2 = simulate_fleet_opts(specs, trace, *ne, &cfg,
+                                             opts_at(off));
+                if r != r2 {
+                    return Err(format!("offset {off}: replay diverged"));
+                }
+                // Loss-free: a kill under restart budget loses nothing.
+                let done: usize = r.finished.iter().sum();
+                if r.failed != 0 || done != r.admitted {
+                    return Err(format!(
+                        "offset {off}: admitted {} but done {done}, \
+                         failed {}",
+                        r.admitted, r.failed
+                    ));
+                }
+                // Every sequence of every arrival is admitted or
+                // brown-out-rejected (no backpressure in these cases).
+                let total: usize = trace.iter().map(|a| a.n).sum();
+                if r.admitted + r.brownout_shed as usize != total {
+                    return Err(format!(
+                        "offset {off}: sequences lost: total {total}, \
+                         admitted {}, brownout {}",
+                        r.admitted, r.brownout_shed
+                    ));
+                }
+                // The adopter's identity is invisible to results. (If a
+                // total brown-out fired, the *answer set* may shift with
+                // kill timing — which shifts with adopter load — so the
+                // full-map comparison only applies brown-out-free; the
+                // per-key calm comparison below covers the rest.)
+                if r.brownout_shed == 0
+                    && base.brownout_shed == 0
+                    && r.tokens != base.tokens
+                {
+                    return Err(format!(
+                        "offset {off}: adopter choice changed a token \
+                         stream"
+                    ));
+                }
+                // Evacuated or not, every retired stream matches the
+                // kill-free same-seed fleet bitwise (brown-out may make
+                // the chaos run's answer set a subset of the calm one).
+                for (k, stream) in &r.tokens {
+                    if calm.tokens.get(k) != Some(stream) {
+                        return Err(format!(
+                            "offset {off}: stream for arrival {} seq {} \
+                             differs from the kill-free run",
+                            k.0, k.1
+                        ));
+                    }
                 }
             }
             Ok(())
