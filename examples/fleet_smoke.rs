@@ -126,6 +126,10 @@ fn live_gate() -> Result<()> {
         max_wait: Duration::from_millis(1),
         ..Default::default()
     };
+    // The whole live gate is a request-admission path against real
+    // coordinators: every failure must surface as an `Err`, never a
+    // panic (repolint serve-no-unwrap pins this).
+    // lint: serve-region
     let baseline = Coordinator::start(mock_factory(), cfg())?;
     let fleet = Coordinator::start_sharded(mock_factory(), cfg(), 2)?;
 
@@ -190,6 +194,7 @@ fn live_gate() -> Result<()> {
     );
     baseline.shutdown();
     fleet.shutdown();
+    // lint: end-serve-region
     Ok(())
 }
 

@@ -77,13 +77,21 @@ fn main() -> Result<()> {
     let stop2 = stop.clone();
     let addr2 = addr.clone();
     let server_handle = std::thread::spawn(move || {
-        server
-            .serve_until(&addr2, move || stop2.load(Ordering::Relaxed))
-            .unwrap();
+        let stopped = move || stop2.load(Ordering::Relaxed);
+        if let Err(e) = server.serve_until(&addr2, stopped) {
+            eprintln!("server exited with error: {e}");
+        }
     });
+    // lint: allow(clock-discipline) — real TCP demo: give the OS a
+    // beat to bind the listener before clients connect.
     std::thread::sleep(Duration::from_millis(100));
 
     // ---- hammer it -------------------------------------------------------
+    // Client issue/response handling is a request-admission path: it
+    // must report failures, not panic (repolint serve-no-unwrap).
+    // lint: serve-region
+    // lint: allow(clock-discipline) — operator-facing wall-clock
+    // throughput for a live TCP run; no scheduler reads it.
     let started = Instant::now();
     let mut handles = Vec::new();
     for c in 0..n_clients {
@@ -98,6 +106,8 @@ fn main() -> Result<()> {
                         "seed":{}}}"#,
                     c * 1000 + r
                 );
+                // lint: allow(clock-discipline) — client-observed
+                // latency over real TCP is wall time by definition.
                 let t = Instant::now();
                 let resp = http_post(&addr, "/generate", &body)?;
                 lat.push(t.elapsed().as_secs_f64());
@@ -107,16 +117,20 @@ fn main() -> Result<()> {
                     .and_then(|s| s.as_arr())
                     .map(|s| s.len())
                     .unwrap_or(0);
-                assert_eq!(n, 1, "unexpected sample count");
+                if n != 1 {
+                    return Err(anyhow!("unexpected sample count: {n}"));
+                }
             }
             Ok(lat)
         }));
     }
     let mut latencies = Vec::new();
     for h in handles {
-        latencies.extend(h.join().unwrap()?);
+        let lat = h.join().map_err(|_| anyhow!("client thread panicked"))?;
+        latencies.extend(lat?);
     }
     let wall = started.elapsed().as_secs_f64();
+    // lint: end-serve-region
 
     latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let total = latencies.len();
@@ -140,6 +154,8 @@ fn main() -> Result<()> {
     println!("{snap}");
 
     stop.store(true, Ordering::Relaxed);
-    server_handle.join().unwrap();
+    if server_handle.join().is_err() {
+        return Err(anyhow!("server thread panicked during shutdown"));
+    }
     Ok(())
 }

@@ -265,7 +265,11 @@ fn record(path: &str) {
             policy: sched.resolve("slo"),
         },
     ];
-    let c = Coordinator::start(
+    // The record path drives a real Coordinator like a serving client:
+    // failures must report and exit nonzero, not panic a worker thread
+    // mid-recording (repolint serve-no-unwrap pins this).
+    // lint: serve-region
+    let c = match Coordinator::start(
         || {
             let mut m: ModelMap = BTreeMap::new();
             let mut bulk = MockModel::new(32, 6, 7);
@@ -282,8 +286,13 @@ fn record(path: &str) {
             trace: Some(tx),
             ..Default::default()
         },
-    )
-    .expect("coordinator");
+    ) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("FAIL: coordinator boot: {e}");
+            exit(1);
+        }
+    };
 
     // Bulk flood in the background; a latency burst rides on top.
     let bulk = c.clone();
@@ -298,7 +307,6 @@ fn record(path: &str) {
             seed: 41,
             ..Default::default()
         })
-        .expect("bulk generate")
     });
     let mut slo_handles = Vec::new();
     for k in 0..4u64 {
@@ -315,14 +323,33 @@ fn record(path: &str) {
                 priority: Some(1),
                 ..Default::default()
             })
-            .expect("slo generate")
         }));
     }
-    let n_bulk = t_bulk.join().unwrap().samples.len();
-    let n_slo: usize = slo_handles
-        .into_iter()
-        .map(|h| h.join().unwrap().samples.len())
-        .sum();
+    let n_bulk = match t_bulk.join() {
+        Ok(Ok(resp)) => resp.samples.len(),
+        Ok(Err(e)) => {
+            eprintln!("FAIL: bulk generate: {e}");
+            exit(1);
+        }
+        Err(_) => {
+            eprintln!("FAIL: bulk client thread panicked");
+            exit(1);
+        }
+    };
+    let mut n_slo = 0usize;
+    for h in slo_handles {
+        match h.join() {
+            Ok(Ok(resp)) => n_slo += resp.samples.len(),
+            Ok(Err(e)) => {
+                eprintln!("FAIL: slo generate: {e}");
+                exit(1);
+            }
+            Err(_) => {
+                eprintln!("FAIL: slo client thread panicked");
+                exit(1);
+            }
+        }
+    }
     c.shutdown();
     println!("recorded live run: {n_bulk} bulk + {n_slo} slo samples");
 
@@ -339,8 +366,13 @@ fn record(path: &str) {
     }
     let (specs, arrivals) = assemble_trace(&events, &geometry);
     let cfg = SchedConfig { preempt_after: 2, ..SchedConfig::default() };
-    write_trace(std::path::Path::new(path), &cfg, &specs, &arrivals)
-        .expect("write trace");
+    if let Err(e) =
+        write_trace(std::path::Path::new(path), &cfg, &specs, &arrivals)
+    {
+        eprintln!("FAIL writing {path}: {e}");
+        exit(1);
+    }
+    // lint: end-serve-region
     println!(
         "wrote {path}: {} queues, {} arrivals (mean step costs {:?})",
         specs.len(),

@@ -1,8 +1,11 @@
 //! repolint — CLI front-end for the repo-native invariant linter
-//! (`ssmd::lint`). Walks `<root>/rust`, prints `path:line: [rule] msg`
-//! diagnostics, then the full allowlist (every suppression with its
-//! written reason), and exits nonzero if anything fired. CI gates on it;
-//! the same checks run under plain `cargo test` via the lint module's
+//! (`ssmd::lint`): the six lexical rules plus the concurrency pass
+//! (lock-order, guard-blocking, lock-recovery). Walks `<root>/rust`
+//! (src, tests, benches) and `<root>/examples`, prints
+//! `path:line: [rule] msg` diagnostics, then the full allowlist (every
+//! suppression with its written reason) and the lock-order graph
+//! summary, and exits nonzero if anything fired. CI gates on it; the
+//! same checks run under plain `cargo test` via the lint module's
 //! meta-test.
 //!
 //! USAGE: cargo run --bin repolint [-- --root DIR] [--quiet]
@@ -52,6 +55,14 @@ fn main() -> ExitCode {
             report.diags.len(),
             report.allows.len(),
             if report.allows.len() == 1 { "y" } else { "ies" },
+        );
+        println!(
+            "lock-order graph: {} fn(s), {} lock class(es), {} \
+             edge(s), {} cycle(s)",
+            report.stats.fns,
+            report.stats.classes,
+            report.stats.edges,
+            report.stats.cycles,
         );
     }
 

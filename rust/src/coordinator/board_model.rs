@@ -1,0 +1,555 @@
+//! Bounded exhaustive model checker for the migration-board protocol
+//! (kill → evacuate → adopt / supervised restart / board poisoning) — a
+//! hand-rolled mini-loom in the style of
+//! [`engine::pool_model`](crate::engine::pool_model).
+//!
+//! ## Why critical-section granularity is sound
+//!
+//! Every shared structure of the protocol is touched only inside one
+//! short critical section at a time: the board is a `Mutex<Vec<Migrant>>`
+//! whose operations are a single push (`post`), a prefix drain (`take`),
+//! or a whole-vec take (`take_all`); liveness state lives behind its own
+//! `Mutex` with single-call sections (`beat`, `state`, `mark_restarting`);
+//! and the supervisor serializes replica exits through one mpsc channel,
+//! processing them strictly in arrival order on a single thread. Any real
+//! execution is therefore a serialization of these atomic sections, and
+//! exhaustively interleaving them — one transition per section — covers
+//! every behavior of the real protocol up to the model's bounds.
+//!
+//! The model does **not** re-implement the two decision procedures it
+//! pins. Liveness verdicts come from the production [`Liveness`] struct
+//! (rebuilt from the state's beat ticks each check, so the strict
+//! `now - beat > timeout` threshold is the production code path), and
+//! every supervisor decision replays the production
+//! [`ReplicaSupervisor`] (reconstructed from the state's restart counts,
+//! so budget exhaustion and the `all_gone` drain trigger are the
+//! production logic).
+//!
+//! Properties pinned on every reachable interleaving:
+//!
+//! * **no lost checkpoint** — every checkpoint is always in exactly one
+//!   place (resident, board, adopted, or answered), and in terminal
+//!   states every checkpoint's request has been answered exactly once
+//!   unless it is still resident/adopted on a live replica (the bounded
+//!   horizon cut it off mid-flight). A checkpoint stranded on the board
+//!   with no replica left to adopt it is the stranded-client bug the
+//!   `final_drain` flag exists to demonstrate.
+//! * **exactly-once adoption** — an adoption always takes a checkpoint
+//!   in the `Board` state; a drained migrant can never be re-adopted,
+//!   and answering is guarded by an explicit at-most-once ledger.
+//! * **no adopt-after-poison loss** — a replica panicking while holding
+//!   the board lock (mid-`post`; `Vec::push` is never torn) poisons the
+//!   lock; the recovery contract (rebuild, keep contents) must hand
+//!   every surviving migrant to exactly one adopter. The
+//!   `poison_drops_board` leg shows the checker catches the "tolerate
+//!   poison by starting empty" anti-policy as a lost checkpoint.
+//! * **supervisor/router quiescence** — terminal states have no queued
+//!   exit messages and no replica parked in `Restarting`; the
+//!   production `Liveness` never calls a currently-beating replica
+//!   `Down`, always detects a dead one once the strict threshold
+//!   passes, and reports brown-out (`any_up == false`) exactly when no
+//!   replica is live — so the router's admission view agrees with
+//!   ground truth in every interleaving.
+//!
+//! Run with `cargo test board_model` — the legs are ordinary unit
+//! tests; the largest (poisoned-board recovery) explores ~15k distinct
+//! states, the headline two-replica leg ~4k, all in well under a second.
+
+use std::collections::BTreeSet;
+
+use super::router::Liveness;
+use super::supervise::{ReplicaSupervisor, SupervisePolicy};
+use super::ReplicaState;
+
+/// One bounded scenario.
+#[derive(Clone)]
+pub struct BoardCfg {
+    /// Engine replicas in the fleet.
+    pub replicas: usize,
+    /// Initial owner replica of each checkpoint (`owners[i]` holds
+    /// checkpoint `i` resident at t = 0).
+    pub owners: Vec<usize>,
+    /// Clock ticks explored (each tick is one liveness-visible instant).
+    pub horizon: u32,
+    /// Heartbeat timeout in ticks (production `Liveness` threshold:
+    /// strictly more than this many ticks without a beat is `Down`).
+    pub timeout_ticks: u32,
+    /// Restart budget per replica (production `SupervisePolicy`
+    /// `max_retries`).
+    pub restart_budget: u32,
+    /// Total kill events enumerated across the run.
+    pub max_kills: u32,
+    /// Also enumerate kills that poison the board lock (the replica
+    /// panicked while holding it, right after its push completed).
+    pub poison_kill: bool,
+    /// Model the production all-gone drain: when the supervisor marks
+    /// the last replica permanently down it fails every migrant still
+    /// on the board. `false` demonstrates the stranded-client bug the
+    /// drain fixes (see `missing_final_drain_strands_evacuated_clients`).
+    pub final_drain: bool,
+    /// Anti-policy leg: poison recovery *drops* the board instead of
+    /// keeping it. Must be caught as a lost checkpoint.
+    pub poison_drops_board: bool,
+}
+
+impl BoardCfg {
+    pub fn new(replicas: usize, owners: &[usize]) -> BoardCfg {
+        BoardCfg {
+            replicas,
+            owners: owners.to_vec(),
+            horizon: 3,
+            timeout_ticks: 1,
+            restart_budget: 1,
+            max_kills: 2,
+            poison_kill: false,
+            final_drain: true,
+            poison_drops_board: false,
+        }
+    }
+
+    fn policy(&self) -> SupervisePolicy {
+        SupervisePolicy {
+            max_retries: self.restart_budget,
+            // Backoff durations are real-time concerns; the model's
+            // `Respawn` transition already interleaves the respawn
+            // against every other event, which subsumes any duration.
+            backoff_s: 0.01,
+            backoff_mult: 2.0,
+            breaker_threshold: 3,
+            breaker_cooldown_s: 1.0,
+        }
+    }
+}
+
+/// Replica lifecycle as the supervisor sees it. `Dead` means the engine
+/// thread exited and its `ReplicaExit` message is queued; `Gone` is
+/// permanently down (budget declined).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+enum Rep {
+    Up,
+    Dead,
+    Restarting,
+    Gone,
+}
+
+/// Where one checkpoint currently lives — exactly one place at a time,
+/// which *is* the conservation invariant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+enum Ck {
+    /// Resident on replica `e` (original placement).
+    Held(u8),
+    /// Posted on the migration board, awaiting adoption.
+    Board,
+    /// Adopted by replica `e` after a board drain.
+    Adopted(u8),
+    /// Request answered with a finished sample.
+    Done,
+    /// Request answered with a definitive error (all-gone drain).
+    Failed,
+}
+
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+struct State {
+    clock: u32,
+    /// Last beat tick per replica (monotone, production `Liveness::beat`).
+    beats: Vec<u32>,
+    reps: Vec<Rep>,
+    cks: Vec<Ck>,
+    /// Board contents in posting order (`take` drains a prefix, so FIFO
+    /// order is observable).
+    board: Vec<u8>,
+    /// The supervisor's exit channel: engine ids in arrival order.
+    exits: Vec<u8>,
+    /// Respawns granted per replica — replayed through the production
+    /// `ReplicaSupervisor` for every new decision.
+    restarts: Vec<u32>,
+    kills: u32,
+    /// Board lock currently poisoned (panicking push completed).
+    poisoned: bool,
+    /// Poison recoveries performed (`board_poisoned` counter mirror).
+    recoveries: u32,
+    /// Times each checkpoint's request was answered (must never pass 1).
+    answers: Vec<u8>,
+}
+
+/// Rebuild the production supervisor from the state's ledger so the
+/// next decision runs the real budget / all-gone logic.
+fn rebuild_supervisor(s: &State, cfg: &BoardCfg) -> ReplicaSupervisor {
+    let mut sup = ReplicaSupervisor::new(cfg.replicas, cfg.policy());
+    for e in 0..cfg.replicas {
+        for _ in 0..s.restarts[e] {
+            assert!(sup.on_exit(e).is_some(),
+                    "restart ledger exceeds the production budget:\n{s:#?}");
+        }
+        if s.reps[e] == Rep::Gone {
+            sup.mark_gone(e);
+        }
+    }
+    sup
+}
+
+/// Rebuild the production liveness view from the state's beat ticks.
+fn rebuild_liveness(s: &State, cfg: &BoardCfg) -> Liveness {
+    let mut lv = Liveness::new(cfg.replicas, cfg.timeout_ticks as f64);
+    for e in 0..cfg.replicas {
+        lv.beat(e, s.beats[e] as f64);
+        if s.reps[e] == Rep::Restarting {
+            lv.mark_restarting(e);
+        }
+    }
+    lv
+}
+
+/// Answer checkpoint `i` (exactly-once ledger).
+fn answer(s: &mut State, i: usize, ok: bool) {
+    assert_eq!(s.answers[i], 0,
+               "checkpoint {i} answered twice:\n{s:#?}");
+    s.answers[i] = 1;
+    s.cks[i] = if ok { Ck::Done } else { Ck::Failed };
+}
+
+/// Take the board lock: a poisoned lock is recovered first, keeping the
+/// surviving contents (the production `lock_recover_or` contract) — or
+/// dropping them under the `poison_drops_board` anti-policy leg.
+fn board_access(s: &mut State, cfg: &BoardCfg) {
+    if !s.poisoned {
+        return;
+    }
+    s.poisoned = false;
+    s.recoveries += 1;
+    if cfg.poison_drops_board {
+        // Anti-policy: "recover" by starting empty. The dropped
+        // migrants stay in `Ck::Board` with no board entry — the
+        // conservation check below reports them as lost.
+        s.board.clear();
+    }
+}
+
+/// Invariants that must hold in *every* reachable state.
+fn check_state(s: &State, cfg: &BoardCfg) {
+    // Conservation: the board FIFO lists exactly the checkpoints whose
+    // location is `Board`, each once. (The poison-drops anti-policy
+    // violates exactly this.)
+    let on_board: BTreeSet<u8> = s.board.iter().copied().collect();
+    assert_eq!(on_board.len(), s.board.len(),
+               "board lists a checkpoint twice:\n{s:#?}");
+    for (i, ck) in s.cks.iter().enumerate() {
+        let listed = on_board.contains(&(i as u8));
+        assert_eq!(matches!(ck, Ck::Board), listed,
+                   "checkpoint {i} lost or duplicated between its \
+                    location ({ck:?}) and the board FIFO:\n{s:#?}");
+        // A checkpoint can only sit on a replica that is actually up —
+        // kills evacuate everything atomically with the death.
+        if let Ck::Held(e) | Ck::Adopted(e) = ck {
+            assert_eq!(s.reps[*e as usize], Rep::Up,
+                       "checkpoint {i} rides a dead replica:\n{s:#?}");
+        }
+        // Answer ledger agrees with the location enum.
+        let answered = matches!(ck, Ck::Done | Ck::Failed);
+        assert_eq!(s.answers[i] == 1, answered,
+                   "answer ledger out of sync for checkpoint \
+                    {i}:\n{s:#?}");
+    }
+    // Router agreement, through the production Liveness: a beating
+    // replica is never misdeclared, a dead one is detected once the
+    // strict threshold passes, and brown-out is total exactly when no
+    // replica is live.
+    let lv = rebuild_liveness(s, cfg);
+    let now = s.clock as f64;
+    for e in 0..cfg.replicas {
+        match s.reps[e] {
+            Rep::Up if s.beats[e] == s.clock => {
+                assert_eq!(lv.state(e, now), ReplicaState::Up,
+                           "freshly-beating replica {e} misdeclared:\n{s:#?}");
+            }
+            Rep::Restarting => {
+                assert_eq!(lv.state(e, now), ReplicaState::Restarting,
+                           "supervisor-marked replica {e} not shown \
+                            Restarting:\n{s:#?}");
+            }
+            Rep::Dead | Rep::Gone
+                if s.clock - s.beats[e] > cfg.timeout_ticks =>
+            {
+                assert_eq!(lv.state(e, now), ReplicaState::Down,
+                           "dead replica {e} undetected past the \
+                            threshold:\n{s:#?}");
+            }
+            _ => {}
+        }
+    }
+    if s.reps.iter().all(|&r| r != Rep::Up)
+        && (0..cfg.replicas)
+            .all(|e| s.clock - s.beats[e] > cfg.timeout_ticks)
+    {
+        assert!(!lv.any_up(now),
+                "no replica lives yet the router would still route \
+                 (brown-out must be total):\n{s:#?}");
+    }
+}
+
+/// Terminal-state invariants (no enabled transition).
+fn check_terminal(s: &State) {
+    assert!(s.exits.is_empty(),
+            "supervisor left an exit unprocessed:\n{s:#?}");
+    assert!(s.reps.iter().all(|&r| r != Rep::Restarting),
+            "a respawn never happened:\n{s:#?}");
+    for (i, ck) in s.cks.iter().enumerate() {
+        match ck {
+            Ck::Done | Ck::Failed => {}
+            // Mid-flight on a live replica: the bounded horizon cut the
+            // run short, which is fine — the replica would finish it.
+            Ck::Held(e) | Ck::Adopted(e) => {
+                assert_eq!(s.reps[*e as usize], Rep::Up,
+                           "in-flight checkpoint {i} on a dead \
+                            replica:\n{s:#?}");
+            }
+            Ck::Board => panic!(
+                "checkpoint {i} stranded on the board with nobody left \
+                 to adopt it — its client hangs forever:\n{s:#?}"
+            ),
+        }
+    }
+}
+
+/// All states reachable in one atomic transition.
+fn successors(s: &State, cfg: &BoardCfg) -> Vec<State> {
+    let mut out = Vec::new();
+
+    // Clock tick: liveness thresholds are the only timed behavior.
+    if s.clock < cfg.horizon {
+        let mut t = s.clone();
+        t.clock += 1;
+        out.push(t);
+    }
+
+    for e in 0..cfg.replicas {
+        match s.reps[e] {
+            Rep::Up => {
+                // Heartbeat (engine loop publish), through the
+                // production monotone beat.
+                if s.beats[e] < s.clock {
+                    let mut t = s.clone();
+                    let mut lv = rebuild_liveness(s, cfg);
+                    lv.beat(e, t.clock as f64);
+                    t.beats[e] =
+                        (lv.down_at(e) - cfg.timeout_ticks as f64) as u32;
+                    out.push(t);
+                }
+                // Kill: evacuate every held/adopted checkpoint onto the
+                // board (one atomic section — `evacuate_replica` posts
+                // before the thread exits), queue the exit message.
+                if s.kills < cfg.max_kills {
+                    let mut t = s.clone();
+                    for (i, ck) in t.cks.iter_mut().enumerate() {
+                        if matches!(ck, Ck::Held(x) | Ck::Adopted(x)
+                                    if *x as usize == e)
+                        {
+                            *ck = Ck::Board;
+                            t.board.push(i as u8);
+                        }
+                    }
+                    t.reps[e] = Rep::Dead;
+                    t.exits.push(e as u8);
+                    t.kills += 1;
+                    if cfg.poison_kill {
+                        // Same death, but the panic hit while the board
+                        // lock was held (push itself never tears).
+                        let mut p = t.clone();
+                        p.poisoned = true;
+                        out.push(p);
+                    }
+                    out.push(t);
+                }
+                // Adopt the board's FIFO-front migrant (idle-replica
+                // poll; production `take` drains a prefix — one at a
+                // time maximizes the interleavings covered).
+                if !s.board.is_empty() {
+                    let mut t = s.clone();
+                    board_access(&mut t, cfg);
+                    if let Some(&i) = t.board.first() {
+                        t.board.remove(0);
+                        assert_eq!(t.cks[i as usize], Ck::Board,
+                                   "adopting checkpoint {i} that is not \
+                                    on the board:\n{s:#?}");
+                        t.cks[i as usize] = Ck::Adopted(e as u8);
+                    }
+                    out.push(t);
+                }
+                // Finish a resident or adopted sequence: the request is
+                // answered exactly once with a sample.
+                for i in 0..s.cks.len() {
+                    if matches!(s.cks[i], Ck::Held(x) | Ck::Adopted(x)
+                                if x as usize == e)
+                    {
+                        let mut t = s.clone();
+                        answer(&mut t, i, true);
+                        out.push(t);
+                    }
+                }
+            }
+            Rep::Restarting => {
+                // Supervisor respawn completes: the engine re-registers
+                // with an immediate beat.
+                let mut t = s.clone();
+                t.reps[e] = Rep::Up;
+                t.beats[e] = t.clock;
+                out.push(t);
+            }
+            Rep::Dead | Rep::Gone => {}
+        }
+    }
+
+    // Supervisor processes the oldest queued exit, with the production
+    // decision procedure.
+    if let Some(&e) = s.exits.first() {
+        let e = e as usize;
+        let mut t = s.clone();
+        t.exits.remove(0);
+        let mut sup = rebuild_supervisor(s, cfg);
+        match sup.on_exit(e) {
+            Some(_backoff) => {
+                t.restarts[e] += 1;
+                t.reps[e] = Rep::Restarting;
+            }
+            None => {
+                t.reps[e] = Rep::Gone;
+                sup.mark_gone(e);
+                if sup.all_gone() && cfg.final_drain {
+                    // Production drain: fail every stranded migrant
+                    // home, exactly once, through the board lock
+                    // (recovering poison like any other access).
+                    board_access(&mut t, cfg);
+                    for i in std::mem::take(&mut t.board) {
+                        answer(&mut t, i as usize, false);
+                    }
+                }
+            }
+        }
+        out.push(t);
+    }
+
+    out
+}
+
+/// Runaway backstop, far above any bounded config in the tests.
+const STATE_CAP: usize = 1_000_000;
+
+/// Exhaustively explore every interleaving of `cfg`, panicking (with
+/// the offending state) on any protocol violation. Returns the number
+/// of distinct states visited.
+pub fn explore(cfg: &BoardCfg) -> usize {
+    assert!(cfg.replicas >= 1 && cfg.replicas <= 8);
+    assert!(cfg.owners.iter().all(|&e| e < cfg.replicas),
+            "checkpoint owner out of range");
+    let init = State {
+        clock: 0,
+        beats: vec![0; cfg.replicas],
+        reps: vec![Rep::Up; cfg.replicas],
+        cks: cfg.owners.iter().map(|&e| Ck::Held(e as u8)).collect(),
+        board: Vec::new(),
+        exits: Vec::new(),
+        restarts: vec![0; cfg.replicas],
+        kills: 0,
+        poisoned: false,
+        recoveries: 0,
+        answers: vec![0; cfg.owners.len()],
+    };
+
+    let mut visited: BTreeSet<State> = BTreeSet::new();
+    let mut stack = vec![init.clone()];
+    visited.insert(init);
+    while let Some(s) = stack.pop() {
+        check_state(&s, cfg);
+        let succ = successors(&s, cfg);
+        if succ.is_empty() {
+            check_terminal(&s);
+        }
+        for t in succ {
+            if !visited.contains(&t) {
+                visited.insert(t.clone());
+                stack.push(t);
+            }
+        }
+        assert!(visited.len() <= STATE_CAP,
+                "state-space cap exceeded — unbounded model?");
+    }
+    visited.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_replicas_two_checkpoints_full_protocol() {
+        // The headline leg: both replicas killable, both checkpoints
+        // evacuating/adopting across restarts — covers kill/adopt
+        // races, exit-order handling, and the liveness view throughout.
+        let n = explore(&BoardCfg::new(2, &[0, 1]));
+        assert!(n > 1_000, "suspiciously small state space: {n}");
+    }
+
+    #[test]
+    fn poisoned_board_recovery_preserves_migrants() {
+        // Kills may poison the board lock; recovery keeps the contents
+        // and every surviving migrant still reaches exactly one adopter.
+        let mut cfg = BoardCfg::new(2, &[0, 1]);
+        cfg.poison_kill = true;
+        explore(&cfg);
+    }
+
+    #[test]
+    fn restart_budget_exhaustion_drains_the_board() {
+        // Budget 0: every exit is declined. The all-gone drain must
+        // answer every evacuated checkpoint with an error — no client
+        // may hang.
+        let mut cfg = BoardCfg::new(2, &[0, 0, 1]);
+        cfg.restart_budget = 0;
+        explore(&cfg);
+    }
+
+    #[test]
+    fn single_replica_fleet_restarts_then_drains() {
+        // One replica, budget 1: first kill restarts, second kill is
+        // declined and the drain answers whatever was evacuated.
+        let mut cfg = BoardCfg::new(1, &[0, 0]);
+        cfg.restart_budget = 1;
+        cfg.max_kills = 2;
+        explore(&cfg);
+    }
+
+    #[test]
+    fn no_kills_every_checkpoint_finishes_locally() {
+        let mut cfg = BoardCfg::new(2, &[0, 1]);
+        cfg.max_kills = 0;
+        explore(&cfg);
+    }
+
+    #[test]
+    fn missing_final_drain_strands_evacuated_clients() {
+        // Negative leg: without the all-gone drain, a declined exit
+        // leaves evacuated checkpoints on a board nobody will ever
+        // drain — the checker must catch the stranded client.
+        let mut cfg = BoardCfg::new(1, &[0]);
+        cfg.restart_budget = 0;
+        cfg.max_kills = 1;
+        cfg.final_drain = false;
+        let r = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| explore(&cfg)));
+        assert!(r.is_err(),
+                "the checker failed to catch the stranded-client bug");
+    }
+
+    #[test]
+    fn poison_drop_anti_policy_is_caught_as_lost_checkpoints() {
+        // Negative leg: "recovering" a poisoned board by starting
+        // empty silently loses migrants — conservation must fire.
+        let mut cfg = BoardCfg::new(2, &[0]);
+        cfg.poison_kill = true;
+        cfg.poison_drops_board = true;
+        let r = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| explore(&cfg)));
+        assert!(r.is_err(),
+                "the checker failed to catch the dropped-board policy");
+    }
+}

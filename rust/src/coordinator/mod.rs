@@ -61,6 +61,7 @@
 //! backpressure.
 
 pub mod batcher;
+pub mod board_model;
 pub mod request;
 pub mod router;
 pub mod sched;
@@ -85,6 +86,7 @@ use crate::util::json::Json;
 use crate::util::metrics::{Counter, Histogram, Registry};
 use crate::util::rng::Pcg;
 use crate::util::simclock::MonotonicClock;
+use crate::util::sync::lock_recover;
 
 pub use batcher::BatcherConfig;
 pub use request::{GenRequest, GenResponse, SamplerChoice, ScoreRequest,
@@ -331,26 +333,29 @@ impl EvacRecord {
     /// panics while holding them; recover rather than propagate poison —
     /// losing the responder here would hang a client forever.
     fn reply_lock(&self) -> std::sync::MutexGuard<'_, Option<Responder>> {
-        self.reply.lock().unwrap_or_else(|e| e.into_inner())
+        lock_recover(&self.reply)
     }
 
     /// Fill sample `idx`; the filler of the last outstanding sample
     /// answers the client.
     pub(crate) fn complete(&self, idx: usize, sample: Sample) {
-        let mut got =
-            self.got.lock().unwrap_or_else(|e| e.into_inner());
-        if idx >= got.len() || got[idx].is_some() {
-            debug_assert!(false, "evacuated result misrouted");
-            return;
-        }
-        got[idx] = Some(sample);
-        if self.remaining.fetch_sub(1, Ordering::AcqRel) != 1 {
-            return;
-        }
+        // The samples are assembled and the `got` guard dropped before
+        // the responder send: the reply is a channel hop and must not
+        // pin this record's lock (repolint guard-blocking).
+        let samples: Vec<Sample> = {
+            let mut got = lock_recover(&self.got);
+            if idx >= got.len() || got[idx].is_some() {
+                debug_assert!(false, "evacuated result misrouted");
+                return;
+            }
+            got[idx] = Some(sample);
+            if self.remaining.fetch_sub(1, Ordering::AcqRel) != 1 {
+                return;
+            }
+            std::mem::take(&mut *got).into_iter().flatten().collect()
+        };
         let Some(reply) = self.reply_lock().take() else { return };
         let wall = self.enqueued.elapsed().as_secs_f64();
-        let samples: Vec<Sample> =
-            std::mem::take(&mut *got).into_iter().flatten().collect();
         reply.send(Ok(GenResponse {
             model: self.model.clone(),
             samples,
@@ -477,7 +482,16 @@ impl Coordinator {
                         let Some(backoff) = sup.on_exit(e) else {
                             // Budget exhausted: drop the receiver; the
                             // router routes around the permanently-Down
-                            // replica from here on.
+                            // replica from here on. If this was the
+                            // last replica, nobody will ever drain the
+                            // board again — fail its migrants now
+                            // (pinned by `board_model`: a checkpoint
+                            // stranded on the board hangs its client
+                            // forever).
+                            sup.mark_gone(e);
+                            if sup.all_gone() {
+                                drain_dead_fleet(&router, exit.evac_homes);
+                            }
                             continue;
                         };
                         router.mark_restarting(e);
@@ -506,10 +520,19 @@ impl Coordinator {
                                 c_restarts.inc();
                             }
                             Err(_) => {
-                                // Factory failed on respawn: leave the
-                                // replica Down (it may earn another
-                                // attempt if a future exit arrives —
-                                // it will not, its thread is gone).
+                                // Factory failed on respawn: the
+                                // replica is permanently Down (its
+                                // thread is gone, no future exit will
+                                // arrive). The evacuation records were
+                                // consumed by the failed spawn — their
+                                // responders answered on drop — but a
+                                // last-replica failure must still
+                                // drain the board.
+                                sup.mark_gone(e);
+                                if sup.all_gone() {
+                                    drain_dead_fleet(&router,
+                                                     BTreeMap::new());
+                                }
                             }
                         }
                     }
@@ -873,11 +896,12 @@ struct RunQueue<'m> {
     lane: u64,
     /// slot -> (request id, sample index within the request).
     routes: BTreeMap<SlotId, (u64, usize)>,
-    /// Adopted (migrated-in) sequences: local slot id -> origin engine's
-    /// (request id, sample index, return channel). Kept apart from
-    /// `routes` — these rids live in *another* replica's inflight table,
-    /// and their finished samples travel back as `Job::Remote`.
-    remote_routes: BTreeMap<SlotId, (u64, usize, mpsc::Sender<Job>)>,
+    /// Adopted (migrated-in) sequences: local slot id -> the migrant's
+    /// home (origin engine channel or evacuation record). Kept apart
+    /// from `routes` — these requests live in *another* replica's
+    /// inflight table (or a dead one's `EvacRecord`), and their
+    /// finished samples travel home instead of answering locally.
+    remote_routes: BTreeMap<SlotId, MigrantHome>,
     /// First request admitted on this batch key, kept as the migration
     /// prototype: an adopter rebuilds an identical stepper from its
     /// model + sampler (the checkpoint carries all per-sequence state,
@@ -2046,6 +2070,27 @@ fn home_fail(home: MigrantHome, msg: String) {
             });
         }
         MigrantHome::Evac { rec, .. } => rec.fail(&msg),
+    }
+}
+
+/// Every replica is permanently down (budget-exhausted declines and/or
+/// failed respawns): no engine thread will ever poll the board or finish
+/// an evacuated sequence again. Fail every stranded migrant home and
+/// every handed-over evacuation record, so each re-homed request gets
+/// its one definitive error instead of hanging on a responder nobody
+/// owns. Exactly-once is preserved: `take_all` empties the board under
+/// its lock and record failure `take`s the responder. Exhaustively
+/// pinned by [`board_model`] (`restart_budget_exhaustion_drains_the_board`
+/// and the `final_drain: false` negative leg).
+fn drain_dead_fleet(router: &RouterState,
+                    homes: BTreeMap<u64, Arc<EvacRecord>>) {
+    const MSG: &str = "every replica is permanently down; the fleet \
+                       cannot finish this sequence";
+    for mig in router.take_all() {
+        home_fail(mig.home, MSG.to_string());
+    }
+    for (_, rec) in homes {
+        rec.fail(MSG);
     }
 }
 

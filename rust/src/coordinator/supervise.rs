@@ -164,6 +164,11 @@ impl Breaker {
 pub struct ReplicaSupervisor {
     policy: SupervisePolicy,
     restarts: Vec<u32>,
+    /// Marked when the supervisor gives up on a replica for good — a
+    /// declined exit (budget exhausted) or a failed respawn. Once every
+    /// replica is marked, no engine thread will ever run again and the
+    /// fleet must drain its shared state (see `drain_dead_fleet`).
+    gone: Vec<bool>,
 }
 
 impl ReplicaSupervisor {
@@ -171,6 +176,7 @@ impl ReplicaSupervisor {
         ReplicaSupervisor {
             policy,
             restarts: vec![0; n_replicas],
+            gone: vec![false; n_replicas],
         }
     }
 
@@ -198,6 +204,27 @@ impl ReplicaSupervisor {
     /// Respawns granted so far for replica `e`.
     pub fn restarts_of(&self, e: usize) -> u32 {
         self.restarts.get(e).copied().unwrap_or(0)
+    }
+
+    /// Record that replica `e` is permanently down: its exit was
+    /// declined ([`Self::on_exit`] returned `None`) or its respawn
+    /// factory failed. Idempotent.
+    pub fn mark_gone(&mut self, e: usize) {
+        if let Some(g) = self.gone.get_mut(e) {
+            *g = true;
+        }
+    }
+
+    /// Whether replica `e` was marked permanently down.
+    pub fn is_gone(&self, e: usize) -> bool {
+        self.gone.get(e).copied().unwrap_or(false)
+    }
+
+    /// Every replica is permanently down: no engine thread exists or
+    /// will ever be respawned. The caller must drain shared fleet state
+    /// (migration board, evacuation records) — nobody else ever will.
+    pub fn all_gone(&self) -> bool {
+        self.gone.iter().all(|&g| g)
     }
 
     /// Respawns granted so far across the fleet.
@@ -282,6 +309,22 @@ mod tests {
         assert_eq!(s.total_restarts(), 3);
         // Out-of-range replica ids never respawn.
         assert_eq!(s.on_exit(7), None);
+    }
+
+    #[test]
+    fn gone_marks_accumulate_until_all_gone() {
+        let mut s = ReplicaSupervisor::new(2, policy());
+        assert!(!s.all_gone(), "fresh fleet is not gone");
+        s.mark_gone(0);
+        assert!(s.is_gone(0));
+        assert!(!s.is_gone(1));
+        assert!(!s.all_gone(), "one survivor keeps the fleet alive");
+        s.mark_gone(0); // idempotent
+        s.mark_gone(1);
+        assert!(s.all_gone(), "every replica marked: fleet is gone");
+        // Out-of-range marks are ignored, not panics.
+        s.mark_gone(9);
+        assert!(!s.is_gone(9));
     }
 
     #[test]

@@ -36,6 +36,8 @@ use std::ops::Range;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
+use crate::util::sync::{lock_recover, wait_recover};
+
 /// The shape every pooled task is erased to: `(chunk_index, item_range)`.
 /// Chunk 0 always runs on the thread that called [`StepPool::run`];
 /// `chunk_index` doubles as a scratch-buffer selector for tasks that
@@ -141,7 +143,7 @@ impl StepPool {
                     &'static Task,
                 >(r)
             });
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = lock_recover(&self.shared.state);
             debug_assert!(st.task.is_none(),
                           "StepPool::run is not reentrant");
             st.gen = st.gen.wrapping_add(1);
@@ -165,7 +167,7 @@ impl StepPool {
         drop(guard);
         // Re-raise a worker-chunk panic on the calling thread (workers
         // catch theirs so the barrier always completes).
-        let panicked = self.shared.state.lock().unwrap().panicked;
+        let panicked = lock_recover(&self.shared.state).panicked;
         if panicked {
             panic!("StepPool task panicked in a worker chunk");
         }
@@ -175,7 +177,7 @@ impl StepPool {
 impl Drop for StepPool {
     fn drop(&mut self) {
         {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = lock_recover(&self.shared.state);
             st.shutdown = true;
             self.shared.work.notify_all();
         }
@@ -194,9 +196,9 @@ struct CompletionGuard<'a> {
 
 impl Drop for CompletionGuard<'_> {
     fn drop(&mut self) {
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = lock_recover(&self.shared.state);
         while st.remaining > 0 {
-            st = self.shared.done.wait(st).unwrap();
+            st = wait_recover(&self.shared.done, st);
         }
         st.task = None;
     }
@@ -219,7 +221,7 @@ fn worker_loop(shared: &Shared, chunk: usize) {
     let mut seen_gen = 0u64;
     loop {
         let (task, gen, n_items, chunks) = {
-            let mut st = shared.state.lock().unwrap();
+            let mut st = lock_recover(&shared.state);
             loop {
                 if st.shutdown {
                     return;
@@ -229,7 +231,7 @@ fn worker_loop(shared: &Shared, chunk: usize) {
                         break (t, st.gen, st.n_items, st.chunks);
                     }
                 }
-                st = shared.work.wait(st).unwrap();
+                st = wait_recover(&shared.work, st);
             }
         };
         seen_gen = gen;
@@ -246,7 +248,7 @@ fn worker_loop(shared: &Shared, chunk: usize) {
                 (task.0)(chunk, range)
             }))
         };
-        let mut st = shared.state.lock().unwrap();
+        let mut st = lock_recover(&shared.state);
         if outcome.is_err() {
             st.panicked = true;
         }

@@ -1,0 +1,1282 @@
+//! Static concurrency analysis on the repolint lexer: per-function
+//! lock-acquisition facts, an interprocedural lock-order graph, and
+//! guard-discipline rules.
+//!
+//! The fleet's deadlock-freedom rests on conventions no compiler
+//! checks: every mutex is taken through a recovery helper or a named
+//! accessor (`live()`, `board_lock()`, `reply_lock()`), nested
+//! acquisitions follow one global order, and no guard is held across a
+//! blocking call. This pass enforces them as three CI-gating rules:
+//!
+//! * **lock-order** — nested acquisitions define edges in a global
+//!   lock-order graph (lock classes are the mutex *field names*, which
+//!   are unique across the codebase by convention). Any cycle is a
+//!   potential deadlock; re-acquiring a class already held (directly or
+//!   by calling a function that acquires it) is a guaranteed one.
+//!   Acquisition facts propagate interprocedurally over a lexer-derived
+//!   call graph (callees matched by name *and* arity, so `Option::take`
+//!   never aliases `RouterState::take(max)`).
+//! * **guard-blocking** — a live guard across a model call
+//!   (`.step`/`.sample`/`.draft_into`/`.verify_into`), a channel
+//!   `send`/`recv`, a `join`, a `thread::sleep`, or a condvar wait
+//!   stalls every thread that needs the lock. Condvar waits are exempt
+//!   for the guard they atomically release (`cv.wait(g)` /
+//!   `wait_recover(&cv, g)` — the wait *names* the guard), but still
+//!   flagged for any other guard held.
+//! * **lock-recovery** — raw `.lock()` anywhere outside `util/sync.rs`
+//!   drifts from the one poisoned-lock recovery policy; sites must use
+//!   `lock_recover` / `lock_recover_or` (or a same-file accessor built
+//!   on them).
+//!
+//! ## How facts are extracted
+//!
+//! Functions are found lexically (`fn name<…>(params)`); a *guard
+//! accessor* is a same-file function returning a `MutexGuard` whose
+//! body acquires exactly one class — calling it counts as acquiring
+//! that class. Guard liveness is tracked per body: `let g = <acquire>`
+//! holds to the end of the enclosing brace block or an explicit
+//! `drop(g)`; an unbound acquisition is a temporary held to the end of
+//! its statement. The per-file pass reports everything derivable from
+//! one file (`check_source`); `check_tree` re-resolves calls against
+//! the whole tree's function table and reports only what needed
+//! cross-file knowledge, so nothing is double-reported.
+//!
+//! ## Soundness and limits
+//!
+//! The pass is conservative where it matters (a call edge propagates
+//! the callee's *transitive* acquire set; same-named same-arity
+//! functions are unioned) and unsound only in documented ways: guards
+//! obtained through a *cross-file* accessor call are invisible to the
+//! guard tracker (cross-file lock-order still flows through the call
+//! graph), closures are analyzed as part of their enclosing function
+//! (acquisitions inside a deferred closure attribute to the definer —
+//! conservative), and blocking-call detection is pattern-based.
+//! Findings are suppressed with the established
+//! `// lint: allow(<rule>) — <why>` grammar; cycle diagnostics that
+//! need cross-file facts are matched against allows at tree level.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::lint::lexer::{Tok, TokKind};
+use crate::lint::rules::seq_at;
+use crate::lint::{Diagnostic, FileCtx};
+
+/// Per-function facts: what it acquires directly, and every call site
+/// (with the lock classes held at the call).
+#[derive(Clone, Debug, Default)]
+pub struct FnFacts {
+    pub name: String,
+    /// Parameter count excluding any `self` receiver.
+    pub arity: usize,
+    /// (lock class, line) acquired directly in the body.
+    pub acquires: Vec<(String, u32)>,
+    pub calls: Vec<CallSite>,
+}
+
+#[derive(Clone, Debug)]
+pub struct CallSite {
+    pub callee: String,
+    pub arity: usize,
+    pub line: u32,
+    /// Lock classes held when the call is made.
+    pub held: Vec<String>,
+}
+
+/// Everything the tree-level pass needs from one file.
+#[derive(Clone, Debug, Default)]
+pub struct FileFacts {
+    pub path: String,
+    pub fns: Vec<FnFacts>,
+    /// Lock-order edges derivable from this file alone (direct nesting
+    /// plus same-file call resolution): (held, acquired, line).
+    pub edges: Vec<(String, String, u32)>,
+    /// (class, line) of call-into-held-class deadlocks already reported
+    /// by the per-file pass (so the tree pass does not repeat them).
+    pub call_deadlocks: Vec<(String, u32)>,
+}
+
+/// Per-file analysis result: facts for the tree pass + raw diagnostics
+/// (fed through the allowlist by `check_source` like any rule's).
+pub struct FileAnalysis {
+    pub facts: FileFacts,
+    pub diags: Vec<Diagnostic>,
+}
+
+/// Tree-level summary printed by the repolint binary.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TreeStats {
+    pub fns: usize,
+    pub classes: usize,
+    pub edges: usize,
+    pub cycles: usize,
+}
+
+// ---------------------------------------------------------------------
+// Per-file pass
+// ---------------------------------------------------------------------
+
+/// Names that are language/std plumbing, never lock-order call edges.
+/// (`drop(g)` in particular must release, not "call `Drop::drop`".)
+const NEVER_CALL_EDGE: [&str; 4] = ["drop", "Some", "Ok", "Err"];
+
+const KEYWORDS: [&str; 12] = [
+    "if", "while", "match", "for", "loop", "return", "let", "else",
+    "move", "in", "as", "unsafe",
+];
+
+/// Blocking-call patterns: (display name, token pattern, wait-family).
+/// Wait-family calls atomically release the guard they *name* in their
+/// arguments, so that guard is exempt at the site.
+const BLOCKING: [(&str, &[&str], bool); 13] = [
+    (".send(", &[".", "send", "("], false),
+    (".recv(", &[".", "recv", "("], false),
+    (".recv_timeout(", &[".", "recv_timeout", "("], false),
+    (".join(", &[".", "join", "("], false),
+    ("thread::sleep", &["thread", ":", ":", "sleep"], false),
+    (".step(", &[".", "step", "("], false),
+    (".sample(", &[".", "sample", "("], false),
+    (".draft_into(", &[".", "draft_into", "("], false),
+    (".verify_into(", &[".", "verify_into", "("], false),
+    (".wait(", &[".", "wait", "("], true),
+    (".wait_timeout(", &[".", "wait_timeout", "("], true),
+    (".wait_while(", &[".", "wait_while", "("], true),
+    ("wait_recover(", &["wait_recover", "("], true),
+];
+
+struct FnDef {
+    name: String,
+    arity: usize,
+    ret_guard: bool,
+    /// Token index range of the body (inside the braces).
+    body: std::ops::Range<usize>,
+}
+
+#[derive(Clone)]
+struct Guard {
+    /// `None` = statement temporary.
+    name: Option<String>,
+    class: String,
+    depth: i32,
+    line: u32,
+}
+
+/// Run the whole per-file analysis. Called by `lint::check_source` for
+/// every file; `util/sync.rs` (the recovery primitives themselves) is
+/// skipped.
+pub fn analyze(ctx: &FileCtx) -> FileAnalysis {
+    let mut a = FileAnalysis {
+        facts: FileFacts { path: ctx.path.clone(), ..Default::default() },
+        diags: Vec::new(),
+    };
+    if ctx.path.ends_with("util/sync.rs") {
+        return a;
+    }
+    let code = &ctx.code;
+
+    // lock-recovery: raw `.lock()` is banned outside util/sync.rs.
+    for i in 0..code.len() {
+        if seq_at(code, i, &[".", "lock", "("]) {
+            a.diags.push(ctx.diag(
+                "lock-recovery",
+                code[i].line,
+                "raw `.lock()` — poisoned-lock recovery must be uniform: \
+                 use `util::sync::lock_recover` / `lock_recover_or`",
+            ));
+        }
+    }
+
+    let defs = parse_fns(code);
+    let accessors = accessor_map(code, &defs);
+
+    let mut edge_map: BTreeMap<(String, String), u32> = BTreeMap::new();
+    for d in &defs {
+        let f = walk_body(ctx, code, d, &accessors, &mut edge_map,
+                          &mut a.diags);
+        a.facts.fns.push(f);
+    }
+
+    // Same-file interprocedural resolution.
+    let (call_edges, call_deadlocks) = resolve_calls(&a.facts.fns);
+    for (e, line) in call_edges {
+        edge_map.entry(e).or_insert(line);
+    }
+    for (class, line) in &call_deadlocks {
+        a.diags.push(ctx.diag(
+            "lock-order",
+            *line,
+            format!(
+                "call acquires `{class}` while a guard on `{class}` is \
+                 already held — re-entrant `Mutex` acquisition \
+                 deadlocks"
+            ),
+        ));
+    }
+    a.facts.call_deadlocks = call_deadlocks;
+
+    // Per-file cycle report (tree pass will skip these).
+    let sited: BTreeMap<(String, String), (String, u32)> = edge_map
+        .iter()
+        .map(|((h, q), l)| {
+            ((h.clone(), q.clone()), (ctx.path.clone(), *l))
+        })
+        .collect();
+    cycle_diags(&sited, &mut a.diags);
+
+    a.facts.edges = edge_map
+        .into_iter()
+        .map(|((h, q), l)| (h, q, l))
+        .collect();
+    a
+}
+
+// ---------------------------------------------------------------------
+// Function discovery
+// ---------------------------------------------------------------------
+
+fn parse_fns(code: &[Tok]) -> Vec<FnDef> {
+    let mut defs = Vec::new();
+    let mut i = 0;
+    while i < code.len() {
+        if !(code[i].kind == TokKind::Ident && code[i].text == "fn") {
+            i += 1;
+            continue;
+        }
+        // `fn(u32) -> u32` pointer types have no name ident.
+        let Some(name_tok) = code.get(i + 1) else { break };
+        if name_tok.kind != TokKind::Ident {
+            i += 1;
+            continue;
+        }
+        let name = name_tok.text.clone();
+        let mut j = i + 2;
+        // Skip generic params `<…>` between name and `(`.
+        if is_punct(code.get(j), "<") {
+            let mut angle = 0i32;
+            while j < code.len() {
+                if is_punct(code.get(j), "<") {
+                    angle += 1;
+                } else if is_punct(code.get(j), ">")
+                    && !is_punct(code.get(j.wrapping_sub(1)), "-")
+                {
+                    angle -= 1;
+                    if angle == 0 {
+                        j += 1;
+                        break;
+                    }
+                }
+                j += 1;
+            }
+        }
+        if !is_punct(code.get(j), "(") {
+            i += 2;
+            continue;
+        }
+        let (arity_raw, has_self, close) = count_params(code, j);
+        let arity = arity_raw.saturating_sub(has_self as usize);
+        // Return type / where clause, then body `{` or trait-decl `;`.
+        let mut k = close + 1;
+        let mut ret_guard = false;
+        while k < code.len() {
+            let t = &code[k];
+            if is_punct(Some(t), "{") || is_punct(Some(t), ";") {
+                break;
+            }
+            if t.kind == TokKind::Ident && t.text == "MutexGuard" {
+                ret_guard = true;
+            }
+            k += 1;
+        }
+        if is_punct(code.get(k), "{") {
+            let end = match_brace(code, k);
+            defs.push(FnDef {
+                name,
+                arity,
+                ret_guard,
+                body: (k + 1)..end,
+            });
+        }
+        i += 2; // keep scanning inside the body: nested fns are fns too
+    }
+    defs
+}
+
+fn is_punct(t: Option<&Tok>, p: &str) -> bool {
+    t.map_or(false, |t| t.kind == TokKind::Punct && t.text == p)
+}
+
+/// Index of the `}` matching the `{` at `open`.
+fn match_brace(code: &[Tok], open: usize) -> usize {
+    let mut depth = 0i32;
+    for (k, t) in code.iter().enumerate().skip(open) {
+        if t.kind == TokKind::Punct {
+            match t.text.as_str() {
+                "{" => depth += 1,
+                "}" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return k;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    code.len()
+}
+
+/// Count comma-separated params of the list opening at `open`; commas
+/// inside nested `()`/`[]`/`{}`/`<>` don't count. Returns
+/// (count, first param mentions `self`, index of the closing paren).
+fn count_params(code: &[Tok], open: usize) -> (usize, bool, usize) {
+    let mut paren = 0i32;
+    let mut angle = 0i32;
+    let mut nest = 0i32; // [] and {}
+    let mut commas = 0usize;
+    let mut any = false;
+    let mut has_self = false;
+    let mut in_first = true;
+    let mut k = open;
+    while k < code.len() {
+        let t = &code[k];
+        if t.kind == TokKind::Punct {
+            match t.text.as_str() {
+                "(" => paren += 1,
+                ")" => {
+                    paren -= 1;
+                    if paren == 0 {
+                        return (commas + any as usize, has_self, k);
+                    }
+                }
+                "[" | "{" => nest += 1,
+                "]" | "}" => nest -= 1,
+                "<" => angle += 1,
+                ">" => {
+                    if !is_punct(code.get(k.wrapping_sub(1)), "-") {
+                        angle = (angle - 1).max(0);
+                    }
+                }
+                "," if paren == 1 && angle == 0 && nest == 0 => {
+                    commas += 1;
+                    in_first = false;
+                }
+                _ => {}
+            }
+        }
+        if k > open && paren >= 1 {
+            any = true;
+            if in_first
+                && t.kind == TokKind::Ident
+                && t.text == "self"
+            {
+                has_self = true;
+            }
+        }
+        k += 1;
+    }
+    (commas + any as usize, has_self, code.len().saturating_sub(1))
+}
+
+/// Same-file guard accessors: a fn returning `MutexGuard` whose body
+/// acquires exactly one class. Calling one acquires that class.
+fn accessor_map(code: &[Tok], defs: &[FnDef])
+                -> BTreeMap<String, String> {
+    let mut map = BTreeMap::new();
+    for d in defs.iter().filter(|d| d.ret_guard) {
+        let mut classes = BTreeSet::new();
+        let mut i = d.body.start;
+        while i < d.body.end {
+            if let Some((class, _, consumed)) =
+                primitive_acquire_at(code, i)
+            {
+                classes.insert(class);
+                i += consumed;
+            } else {
+                i += 1;
+            }
+        }
+        if classes.len() == 1 {
+            map.insert(d.name.clone(),
+                       classes.into_iter().next().unwrap());
+        }
+    }
+    map
+}
+
+// ---------------------------------------------------------------------
+// Acquisition / binding detection
+// ---------------------------------------------------------------------
+
+/// A primitive acquisition at `i`: raw `.lock(`, `lock_recover(&…)`, or
+/// `lock_recover_or(&…, …)`. Returns (class, binding-probe index,
+/// tokens consumed).
+fn primitive_acquire_at(code: &[Tok], i: usize)
+                        -> Option<(String, usize, usize)> {
+    if seq_at(code, i, &[".", "lock", "("]) {
+        let recv = code.get(i.wrapping_sub(1))?;
+        if recv.kind == TokKind::Ident {
+            return Some((recv.text.clone(), i, 3));
+        }
+        return None;
+    }
+    for helper in ["lock_recover", "lock_recover_or"] {
+        if seq_at(code, i, &[helper, "("]) {
+            let class = first_arg_class(code, i + 1)?;
+            return Some((class, i, 2));
+        }
+    }
+    None
+}
+
+/// Last ident of the first argument of the call opening at `open`
+/// (`&self.board, …` → `board`).
+fn first_arg_class(code: &[Tok], open: usize) -> Option<String> {
+    let mut depth = 0i32;
+    let mut last = None;
+    for t in code.iter().skip(open) {
+        if t.kind == TokKind::Punct {
+            match t.text.as_str() {
+                "(" | "[" | "{" => depth += 1,
+                ")" | "]" | "}" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return last;
+                    }
+                }
+                "," if depth == 1 => return last,
+                _ => {}
+            }
+        } else if t.kind == TokKind::Ident && depth >= 1 {
+            last = Some(t.text.clone());
+        }
+    }
+    last
+}
+
+enum Binding {
+    Named(String),
+    Reassign(String),
+    Temp,
+}
+
+/// What the acquisition whose expression reaches back from `probe`
+/// binds to: `let [mut] NAME = …` → Named, `NAME = …` at statement
+/// start → Reassign, anything else → Temp.
+fn binding_before(code: &[Tok], probe: usize) -> Binding {
+    let mut j = probe;
+    while j > 0 {
+        let t = &code[j - 1];
+        let skip = (t.kind == TokKind::Ident && t.text != "let")
+            || (t.kind == TokKind::Punct
+                && matches!(t.text.as_str(), "." | ":" | "&" | "*"));
+        if skip {
+            j -= 1;
+            continue;
+        }
+        break;
+    }
+    if j == 0 || !is_punct(code.get(j - 1), "=") {
+        return Binding::Temp;
+    }
+    // `==`, `=>`, `+=` etc. are distinct tokens only if the lexer kept
+    // them apart; guard against a comparison by requiring an ident.
+    let Some(name) = code.get(j.wrapping_sub(2)) else {
+        return Binding::Temp;
+    };
+    if name.kind != TokKind::Ident {
+        return Binding::Temp;
+    }
+    let before = code.get(j.wrapping_sub(3));
+    let is_let = |t: Option<&Tok>| {
+        t.map_or(false, |t| t.kind == TokKind::Ident && t.text == "let")
+    };
+    if is_let(before) {
+        return Binding::Named(name.text.clone());
+    }
+    if before.map_or(false, |t| {
+        t.kind == TokKind::Ident && t.text == "mut"
+    }) && is_let(code.get(j.wrapping_sub(4)))
+    {
+        return Binding::Named(name.text.clone());
+    }
+    // Statement-start plain assignment: re-binding an existing guard.
+    if before.map_or(true, |t| {
+        t.kind == TokKind::Punct
+            && matches!(t.text.as_str(), ";" | "{" | "}")
+    }) {
+        return Binding::Reassign(name.text.clone());
+    }
+    Binding::Temp
+}
+
+// ---------------------------------------------------------------------
+// The guard-tracking body walk
+// ---------------------------------------------------------------------
+
+#[allow(clippy::too_many_arguments)]
+fn walk_body(
+    ctx: &FileCtx,
+    code: &[Tok],
+    d: &FnDef,
+    accessors: &BTreeMap<String, String>,
+    edges: &mut BTreeMap<(String, String), u32>,
+    diags: &mut Vec<Diagnostic>,
+) -> FnFacts {
+    let mut f = FnFacts {
+        name: d.name.clone(),
+        arity: d.arity,
+        ..Default::default()
+    };
+    let mut guards: Vec<Guard> = Vec::new();
+    let mut depth = 0i32;
+    let mut i = d.body.start;
+    while i < d.body.end {
+        let t = &code[i];
+        if t.kind == TokKind::Punct {
+            match t.text.as_str() {
+                "{" => depth += 1,
+                "}" => {
+                    depth -= 1;
+                    guards.retain(|g| g.depth <= depth);
+                }
+                ";" => guards.retain(|g| {
+                    g.name.is_some() || g.depth != depth
+                }),
+                _ => {}
+            }
+        }
+        // Nested fn: its body is analyzed as its own FnDef.
+        if t.kind == TokKind::Ident
+            && t.text == "fn"
+            && code.get(i + 1).map_or(false, |n| n.kind == TokKind::Ident)
+        {
+            let mut k = i + 2;
+            while k < d.body.end && !is_punct(code.get(k), "{")
+                && !is_punct(code.get(k), ";")
+            {
+                k += 1;
+            }
+            i = if is_punct(code.get(k), "{") {
+                match_brace(code, k) + 1
+            } else {
+                k + 1
+            };
+            continue;
+        }
+        // `drop(g)` releases a named guard (and is never a call edge).
+        if seq_at(code, i, &["drop", "("])
+            && code.get(i + 2).map_or(false, |n| n.kind == TokKind::Ident)
+            && is_punct(code.get(i + 3), ")")
+        {
+            let name = &code[i + 2].text;
+            guards.retain(|g| g.name.as_deref() != Some(name));
+            i += 4;
+            continue;
+        }
+        // Acquisition (primitive or same-file accessor call)?
+        let acq = primitive_acquire_at(code, i).or_else(|| {
+            if code[i].kind == TokKind::Punct && code[i].text == "." {
+                let name = code.get(i + 1)?;
+                if name.kind == TokKind::Ident
+                    && is_punct(code.get(i + 2), "(")
+                    && is_punct(code.get(i + 3), ")")
+                {
+                    let class = accessors.get(&name.text)?;
+                    return Some((class.clone(), i, 4));
+                }
+            }
+            None
+        });
+        if let Some((class, probe, consumed)) = acq {
+            f.acquires.push((class.clone(), t.line));
+            for g in &guards {
+                if g.class == class {
+                    diags.push(ctx.diag(
+                        "lock-order",
+                        t.line,
+                        format!(
+                            "acquiring `{class}` while a guard on \
+                             `{class}` (taken on line {}) is still \
+                             held — re-entrant `Mutex` acquisition \
+                             deadlocks",
+                            g.line
+                        ),
+                    ));
+                } else {
+                    edges
+                        .entry((g.class.clone(), class.clone()))
+                        .or_insert(t.line);
+                }
+            }
+            match binding_before(code, probe) {
+                Binding::Named(n) | Binding::Reassign(n) => {
+                    guards.push(Guard {
+                        name: Some(n),
+                        class,
+                        depth,
+                        line: t.line,
+                    });
+                }
+                Binding::Temp => guards.push(Guard {
+                    name: None,
+                    class,
+                    depth,
+                    line: t.line,
+                }),
+            }
+            i += consumed;
+            continue;
+        }
+        // Blocking call with a guard live?
+        if let Some((label, open, is_wait)) = blocking_at(code, i) {
+            if !guards.is_empty() {
+                let exempt: BTreeSet<String> = if is_wait {
+                    arg_idents(code, open)
+                } else {
+                    BTreeSet::new()
+                };
+                let held: Vec<&Guard> = guards
+                    .iter()
+                    .filter(|g| {
+                        g.name
+                            .as_ref()
+                            .map_or(true, |n| !exempt.contains(n))
+                    })
+                    .collect();
+                if !held.is_empty() {
+                    let classes: Vec<String> = held
+                        .iter()
+                        .map(|g| format!("`{}` (line {})", g.class,
+                                         g.line))
+                        .collect();
+                    diags.push(ctx.diag(
+                        "guard-blocking",
+                        t.line,
+                        format!(
+                            "`{label}` while holding a guard on {} — \
+                             blocking with a lock held stalls every \
+                             thread that needs it; drop the guard \
+                             first",
+                            classes.join(", ")
+                        ),
+                    ));
+                }
+            }
+            i += 2;
+            continue;
+        }
+        // Call site (for interprocedural propagation)?
+        if let Some((callee, arity, next)) = call_at(code, i, accessors) {
+            f.calls.push(CallSite {
+                callee,
+                arity,
+                line: t.line,
+                held: guards.iter().map(|g| g.class.clone()).collect(),
+            });
+            i = next;
+            continue;
+        }
+        i += 1;
+    }
+    f
+}
+
+/// Blocking-call pattern at `i`: (label, index of the open paren,
+/// wait-family).
+fn blocking_at(code: &[Tok], i: usize) -> Option<(&'static str, usize,
+                                                  bool)> {
+    for (label, pat, is_wait) in BLOCKING {
+        if seq_at(code, i, pat) {
+            // The paren is the pattern's last element except for
+            // thread::sleep, where it follows the matched idents.
+            let open = i + pat.len()
+                - usize::from(pat.last() == Some(&"("));
+            return Some((label, open, is_wait));
+        }
+    }
+    None
+}
+
+/// Ident texts among the arguments of the call opening at `open`.
+fn arg_idents(code: &[Tok], open: usize) -> BTreeSet<String> {
+    let mut depth = 0i32;
+    let mut out = BTreeSet::new();
+    for t in code.iter().skip(open) {
+        if t.kind == TokKind::Punct {
+            match t.text.as_str() {
+                "(" | "[" | "{" => depth += 1,
+                ")" | "]" | "}" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return out;
+                    }
+                }
+                _ => {}
+            }
+        } else if t.kind == TokKind::Ident {
+            out.insert(t.text.clone());
+        }
+    }
+    out
+}
+
+/// A call site at `i`: `.name(…)` or bare `name(…)`. Returns
+/// (callee, argument count, index to resume scanning at). Accessor
+/// names and the recovery/wait primitives are handled elsewhere.
+fn call_at(code: &[Tok], i: usize,
+           accessors: &BTreeMap<String, String>)
+           -> Option<(String, usize, usize)> {
+    let (name_idx, method) =
+        if code[i].kind == TokKind::Punct && code[i].text == "." {
+            (i + 1, true)
+        } else {
+            (i, false)
+        };
+    let name = code.get(name_idx)?;
+    if name.kind != TokKind::Ident {
+        return None;
+    }
+    if !is_punct(code.get(name_idx + 1), "(") {
+        return None;
+    }
+    let text = name.text.as_str();
+    if KEYWORDS.contains(&text)
+        || NEVER_CALL_EDGE.contains(&text)
+        || accessors.contains_key(text)
+        || matches!(text,
+                    "lock" | "lock_recover" | "lock_recover_or"
+                    | "wait_recover")
+    {
+        return None;
+    }
+    if !method {
+        // `fn name(` is a definition; `.name(` was handled above.
+        let prev = code.get(i.wrapping_sub(1));
+        if prev.map_or(false, |p| {
+            (p.kind == TokKind::Ident && p.text == "fn")
+                || (p.kind == TokKind::Punct && p.text == ".")
+        }) {
+            return None;
+        }
+    }
+    let (args, _, _close) = count_params(code, name_idx + 1);
+    Some((name.text.clone(), args, name_idx + 2))
+}
+
+// ---------------------------------------------------------------------
+// Interprocedural resolution (shared by the file and tree passes)
+// ---------------------------------------------------------------------
+
+/// Transitive acquire sets over the call graph, then the edges implied
+/// by "call made while holding a guard". Functions are keyed by
+/// (name, arity); same-keyed functions are unioned (conservative).
+/// Returns (edges, call-into-held-class deadlocks).
+fn resolve_calls(fns: &[FnFacts])
+                 -> (Vec<((String, String), u32)>,
+                     Vec<(String, u32)>) {
+    resolve_calls_against(fns, fns)
+}
+
+/// Every elementary cycle in the lock-order graph, each reported once
+/// as its list of consecutive edges. Detection: for each edge (a, b),
+/// a shortest path b → a closes a cycle; canonical rotation dedupes.
+fn find_cycles(edge_keys: &BTreeSet<(String, String)>)
+               -> Vec<Vec<(String, String)>> {
+    let mut adj: BTreeMap<&str, Vec<&str>> = BTreeMap::new();
+    for (h, q) in edge_keys {
+        adj.entry(h.as_str()).or_default().push(q.as_str());
+    }
+    let mut seen: BTreeSet<Vec<String>> = BTreeSet::new();
+    let mut out = Vec::new();
+    for (a, b) in edge_keys {
+        let Some(path) = shortest_path(&adj, b, a) else { continue };
+        let mut nodes: Vec<String> = vec![a.clone()];
+        nodes.extend(path); // b, …, a
+        nodes.pop(); // drop the repeated `a`
+        // Canonical form: rotate so the smallest class leads.
+        let min = nodes.iter().enumerate().min_by_key(|(_, n)| *n)
+            .map(|(i, _)| i).unwrap_or(0);
+        let key: Vec<String> =
+            nodes[min..].iter().chain(nodes[..min].iter())
+                .cloned().collect();
+        if !seen.insert(key) {
+            continue;
+        }
+        let mut legs = Vec::new();
+        for w in 0..nodes.len() {
+            let h = nodes[w].clone();
+            let q = nodes[(w + 1) % nodes.len()].clone();
+            legs.push((h, q));
+        }
+        out.push(legs);
+    }
+    out
+}
+
+/// Format the found cycles as diagnostics, each anchored at its first
+/// edge's site and listing every edge's site as a deadlock trace.
+fn cycle_diags(
+    edges: &BTreeMap<(String, String), (String, u32)>,
+    out: &mut Vec<Diagnostic>,
+) {
+    let keys: BTreeSet<(String, String)> =
+        edges.keys().cloned().collect();
+    for legs in find_cycles(&keys) {
+        out.push(cycle_diag(&legs, edges));
+    }
+}
+
+fn cycle_diag(
+    legs: &[(String, String)],
+    edges: &BTreeMap<(String, String), (String, u32)>,
+) -> Diagnostic {
+    let text: Vec<String> = legs
+        .iter()
+        .map(|k| {
+            let (p, l) = &edges[k];
+            format!("`{}` → `{}` ({p}:{l})", k.0, k.1)
+        })
+        .collect();
+    let (path0, line0) = &edges[&legs[0]];
+    Diagnostic {
+        rule: "lock-order",
+        path: path0.clone(),
+        line: *line0,
+        msg: format!(
+            "lock-order cycle: {} — these acquisition orders oppose \
+             each other and can deadlock under contention; pick one \
+             global order",
+            text.join(", ")
+        ),
+    }
+}
+
+fn shortest_path(
+    adj: &BTreeMap<&str, Vec<&str>>,
+    from: &str,
+    to: &str,
+) -> Option<Vec<String>> {
+    use std::collections::VecDeque;
+    let mut prev: BTreeMap<&str, &str> = BTreeMap::new();
+    let mut q = VecDeque::from([from]);
+    let mut visited = BTreeSet::from([from]);
+    while let Some(n) = q.pop_front() {
+        if n == to {
+            let mut path = vec![to.to_string()];
+            let mut cur = to;
+            while cur != from {
+                cur = prev[cur];
+                path.push(cur.to_string());
+            }
+            path.reverse();
+            return Some(path);
+        }
+        for &m in adj.get(n).into_iter().flatten() {
+            if visited.insert(m) {
+                prev.insert(m, n);
+                q.push_back(m);
+            }
+        }
+    }
+    None
+}
+
+// ---------------------------------------------------------------------
+// Tree-level pass
+// ---------------------------------------------------------------------
+
+/// Re-resolve every call against the whole tree's function table and
+/// report what needed cross-file knowledge: lock-order cycles whose
+/// edges span files (or rest on cross-file call resolution) and
+/// call-into-held-class deadlocks the per-file pass could not see.
+pub fn check_tree(files: &[FileFacts])
+                  -> (Vec<Diagnostic>, TreeStats) {
+    let mut diags = Vec::new();
+
+    // Global edge map with file attribution + "derivable per-file".
+    let mut edges: BTreeMap<(String, String), (String, u32, bool)> =
+        BTreeMap::new();
+    for f in files {
+        for (h, q, line) in &f.edges {
+            edges.insert((h.clone(), q.clone()),
+                         (f.path.clone(), *line, true));
+        }
+    }
+    let all_fns: Vec<FnFacts> =
+        files.iter().flat_map(|f| f.fns.iter().cloned()).collect();
+    for f in files {
+        let (ce, deadlocks) = resolve_calls_against(&f.fns, &all_fns);
+        for ((h, q), line) in ce {
+            edges.entry((h, q)).or_insert((f.path.clone(), line,
+                                           false));
+        }
+        for (class, line) in deadlocks {
+            if f.call_deadlocks.contains(&(class.clone(), line)) {
+                continue; // already reported per-file
+            }
+            diags.push(Diagnostic {
+                rule: "lock-order",
+                path: f.path.clone(),
+                line,
+                msg: format!(
+                    "call acquires `{class}` (through the cross-file \
+                     call graph) while a guard on `{class}` is held — \
+                     re-entrant `Mutex` acquisition deadlocks"
+                ),
+            });
+        }
+    }
+
+    // Cycles: skip ones fully derivable from a single file (the
+    // per-file pass already reported them).
+    let keys: BTreeSet<(String, String)> =
+        edges.keys().cloned().collect();
+    let sited: BTreeMap<(String, String), (String, u32)> = edges
+        .iter()
+        .map(|(k, (p, l, _))| (k.clone(), (p.clone(), *l)))
+        .collect();
+    let cycles = find_cycles(&keys);
+    let n_cycles = cycles.len();
+    for legs in cycles {
+        let per_file_derivable = legs.iter().all(|k| {
+            let (p, _, local) = &edges[k];
+            *local && *p == edges[&legs[0]].0
+        });
+        if !per_file_derivable {
+            diags.push(cycle_diag(&legs, &sited));
+        }
+    }
+
+    let classes: BTreeSet<&String> = all_fns
+        .iter()
+        .flat_map(|f| f.acquires.iter().map(|(c, _)| c))
+        .collect();
+    let stats = TreeStats {
+        fns: all_fns.len(),
+        classes: classes.len(),
+        edges: edges.len(),
+        cycles: n_cycles,
+    };
+    (diags, stats)
+}
+
+/// Like `resolve_calls`, but `local` fns' calls resolve against the
+/// whole tree's table (`global`).
+fn resolve_calls_against(
+    local: &[FnFacts],
+    global: &[FnFacts],
+) -> (Vec<((String, String), u32)>, Vec<(String, u32)>) {
+    type Key = (String, usize);
+    let mut acq: BTreeMap<Key, BTreeSet<String>> = BTreeMap::new();
+    for f in global {
+        let e = acq.entry((f.name.clone(), f.arity)).or_default();
+        e.extend(f.acquires.iter().map(|(c, _)| c.clone()));
+    }
+    loop {
+        let mut changed = false;
+        for f in global {
+            let key = (f.name.clone(), f.arity);
+            let mut add = BTreeSet::new();
+            for c in &f.calls {
+                if let Some(s) = acq.get(&(c.callee.clone(), c.arity))
+                {
+                    add.extend(s.iter().cloned());
+                }
+            }
+            let e = acq.entry(key).or_default();
+            let before = e.len();
+            e.extend(add);
+            changed |= e.len() != before;
+        }
+        if !changed {
+            break;
+        }
+    }
+    let mut edges = Vec::new();
+    let mut deadlocks = Vec::new();
+    for f in local {
+        for c in f.calls.iter().filter(|c| !c.held.is_empty()) {
+            let Some(s) = acq.get(&(c.callee.clone(), c.arity)) else {
+                continue;
+            };
+            for class in s {
+                for h in &c.held {
+                    if h == class {
+                        deadlocks.push((class.clone(), c.line));
+                    } else {
+                        edges.push(((h.clone(), class.clone()),
+                                    c.line));
+                    }
+                }
+            }
+        }
+    }
+    deadlocks.sort();
+    deadlocks.dedup();
+    (edges, deadlocks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::check_source;
+
+    fn diags(src: &str) -> Vec<Diagnostic> {
+        check_source("rust/src/coordinator/fx.rs", src)
+            .diags
+            .into_iter()
+            .filter(|d| {
+                matches!(d.rule,
+                         "lock-order" | "guard-blocking"
+                         | "lock-recovery")
+            })
+            .collect()
+    }
+
+    #[test]
+    fn self_deadlock_direct() {
+        let d = diags(
+            "fn f(s: &S) {\n\
+             let a = lock_recover(&s.state);\n\
+             let b = lock_recover(&s.state);\n\
+             let _ = (a, b);\n\
+             }\n",
+        );
+        assert!(d.iter().any(|d| d.rule == "lock-order"
+                             && d.msg.contains("re-entrant")),
+                "{d:?}");
+    }
+
+    #[test]
+    fn opposite_orders_cycle_and_drop_releases() {
+        let d = diags(
+            "fn ab(s: &S) {\n\
+             let a = lock_recover(&s.alpha);\n\
+             let b = lock_recover(&s.beta);\n\
+             let _ = (a, b);\n\
+             }\n\
+             fn ba(s: &S) {\n\
+             let b = lock_recover(&s.beta);\n\
+             drop(b);\n\
+             let a = lock_recover(&s.alpha);\n\
+             let _ = a;\n\
+             }\n",
+        );
+        assert!(d.is_empty(), "drop() must break the edge: {d:?}");
+
+        let d = diags(
+            "fn ab(s: &S) {\n\
+             let a = lock_recover(&s.alpha);\n\
+             let b = lock_recover(&s.beta);\n\
+             let _ = (a, b);\n\
+             }\n\
+             fn ba(s: &S) {\n\
+             let b = lock_recover(&s.beta);\n\
+             let a = lock_recover(&s.alpha);\n\
+             let _ = (a, b);\n\
+             }\n",
+        );
+        assert_eq!(
+            d.iter().filter(|d| d.msg.contains("cycle")).count(),
+            1,
+            "{d:?}"
+        );
+    }
+
+    #[test]
+    fn interprocedural_edge_through_call_graph() {
+        // f holds alpha and calls g; g locks beta. h does beta→alpha
+        // directly. Cycle needs the call edge.
+        let d = diags(
+            "fn f(s: &S) {\n\
+             let a = lock_recover(&s.alpha);\n\
+             g(s);\n\
+             let _ = a;\n\
+             }\n\
+             fn g(s: &S) {\n\
+             let b = lock_recover(&s.beta);\n\
+             let _ = b;\n\
+             }\n\
+             fn h(s: &S) {\n\
+             let b = lock_recover(&s.beta);\n\
+             let a = lock_recover(&s.alpha);\n\
+             let _ = (a, b);\n\
+             }\n",
+        );
+        assert_eq!(
+            d.iter().filter(|d| d.msg.contains("cycle")).count(),
+            1,
+            "{d:?}"
+        );
+    }
+
+    #[test]
+    fn arity_separates_same_named_callees() {
+        // `o.take()` (arity 0) must not resolve to `take(s, max)`
+        // (arity 2), so no beta edge — and no cycle.
+        let d = diags(
+            "fn take(s: &S, max: usize) -> usize {\n\
+             let b = lock_recover(&s.beta);\n\
+             max\n\
+             }\n\
+             fn f(s: &S, o: &mut Option<u32>) {\n\
+             let a = lock_recover(&s.alpha);\n\
+             let _ = o.take();\n\
+             let _ = a;\n\
+             }\n\
+             fn h(s: &S) {\n\
+             let b = lock_recover(&s.beta);\n\
+             let a = lock_recover(&s.alpha);\n\
+             let _ = (a, b);\n\
+             }\n",
+        );
+        assert!(d.iter().all(|d| !d.msg.contains("cycle")), "{d:?}");
+    }
+
+    #[test]
+    fn guard_blocking_fires_and_condvar_own_guard_is_exempt() {
+        let d = diags(
+            "fn f(s: &S, tx: &Sender<u32>) {\n\
+             let g = lock_recover(&s.state);\n\
+             tx.send(1).ok();\n\
+             drop(g);\n\
+             }\n",
+        );
+        assert_eq!(
+            d.iter().filter(|d| d.rule == "guard-blocking").count(),
+            1, "{d:?}"
+        );
+
+        let d = diags(
+            "fn f(s: &S) {\n\
+             let mut st = lock_recover(&s.state);\n\
+             st = wait_recover(&s.cv, st);\n\
+             let _ = st;\n\
+             }\n",
+        );
+        assert!(d.is_empty(),
+                "wait on the guard's own lock is the protocol: {d:?}");
+
+        // …but a *second* guard held across the wait is flagged.
+        let d = diags(
+            "fn f(s: &S) {\n\
+             let other = lock_recover(&s.other);\n\
+             let mut st = lock_recover(&s.state);\n\
+             st = wait_recover(&s.cv, st);\n\
+             let _ = (st, other);\n\
+             }\n",
+        );
+        assert_eq!(
+            d.iter().filter(|d| d.rule == "guard-blocking").count(),
+            1, "{d:?}"
+        );
+    }
+
+    #[test]
+    fn accessor_call_is_an_acquisition() {
+        let src = "\
+impl S {
+    fn live(&self) -> MutexGuard<'_, u32> {
+        lock_recover(&self.liveness)
+    }
+    fn f(&self, tx: &Sender<u32>) {
+        let lv = self.live();
+        tx.send(1).ok();
+        drop(lv);
+    }
+}
+";
+        let d = diags(src);
+        assert!(
+            d.iter().any(|d| d.rule == "guard-blocking"
+                         && d.msg.contains("liveness")),
+            "accessor guard must be tracked by class: {d:?}"
+        );
+    }
+
+    #[test]
+    fn lock_recovery_bans_raw_lock_outside_sync() {
+        let d = diags("fn f(m: &Mutex<u32>) { let _ = m.lock(); }\n");
+        assert_eq!(
+            d.iter().filter(|d| d.rule == "lock-recovery").count(),
+            1, "{d:?}"
+        );
+        // util/sync.rs itself is the one sanctioned home.
+        let out = check_source(
+            "rust/src/util/sync.rs",
+            "fn f(m: &Mutex<u32>) { let _ = m.lock(); }\n",
+        );
+        assert!(out.diags.is_empty(), "{:?}", out.diags);
+    }
+
+    #[test]
+    fn temp_guard_dies_at_statement_end() {
+        // `s.board_lock().push(x)` then a send on the next statement:
+        // the temporary guard must not leak across the `;`.
+        let src = "\
+impl S {
+    fn board_lock(&self) -> MutexGuard<'_, Vec<u32>> {
+        lock_recover_or(&self.board, || {})
+    }
+    fn f(&self, tx: &Sender<u32>) {
+        self.board_lock().push(1);
+        tx.send(1).ok();
+    }
+}
+";
+        let d = diags(src);
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn tree_pass_sees_cross_file_cycles() {
+        let a = check_source(
+            "rust/src/coordinator/a.rs",
+            "fn fa(s: &S) {\n\
+             let a = lock_recover(&s.alpha);\n\
+             let b = lock_recover(&s.beta);\n\
+             let _ = (a, b);\n\
+             }\n",
+        );
+        let b = check_source(
+            "rust/src/coordinator/b.rs",
+            "fn fb(s: &S) {\n\
+             let b = lock_recover(&s.beta);\n\
+             let a = lock_recover(&s.alpha);\n\
+             let _ = (a, b);\n\
+             }\n",
+        );
+        assert!(a.diags.is_empty() && b.diags.is_empty(),
+                "each file alone is consistent: {:?} {:?}",
+                a.diags, b.diags);
+        let (diags, stats) = check_tree(&[a.facts, b.facts]);
+        assert_eq!(stats.cycles, 1, "{diags:?}");
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert!(diags[0].msg.contains("cycle"), "{diags:?}");
+    }
+
+    #[test]
+    fn tree_pass_skips_cycles_already_reported_per_file() {
+        let a = check_source(
+            "rust/src/coordinator/a.rs",
+            "fn ab(s: &S) {\n\
+             let a = lock_recover(&s.alpha);\n\
+             let b = lock_recover(&s.beta);\n\
+             let _ = (a, b);\n\
+             }\n\
+             fn ba(s: &S) {\n\
+             let b = lock_recover(&s.beta);\n\
+             let a = lock_recover(&s.alpha);\n\
+             let _ = (a, b);\n\
+             }\n",
+        );
+        assert_eq!(
+            a.diags.iter().filter(|d| d.msg.contains("cycle")).count(),
+            1
+        );
+        let (diags, stats) = check_tree(&[a.facts]);
+        assert_eq!(stats.cycles, 1);
+        assert!(diags.is_empty(),
+                "per-file cycle must not repeat at tree level: \
+                 {diags:?}");
+    }
+}

@@ -1,0 +1,24 @@
+//! Lint fixture (never compiled): guards held across blocking calls.
+//! Expected: exactly two `guard-blocking` diagnostics — a channel send
+//! under a lock, and a condvar wait with a *second* guard still held
+//! (the waited-on guard itself is the protocol and exempt).
+
+use std::sync::Mutex;
+
+pub struct S {
+    state: Mutex<u32>,
+    other: Mutex<u32>,
+}
+
+pub fn send_under_lock(s: &S, tx: &std::sync::mpsc::Sender<u32>) {
+    let g = lock_recover(&s.state);
+    tx.send(*g).ok();
+    drop(g);
+}
+
+pub fn wait_with_second_guard(s: &S, cv: &std::sync::Condvar) {
+    let other = lock_recover(&s.other);
+    let mut st = lock_recover(&s.state);
+    st = wait_recover(cv, st);
+    let _ = (st, other);
+}

@@ -1,0 +1,29 @@
+//! Lint fixture (never compiled): the disciplined counterparts —
+//! drop before send, condvar wait naming its own guard, statement
+//! temporaries that die before the blocking call. Expected: silent.
+
+use std::sync::Mutex;
+
+pub struct S {
+    state: Mutex<u32>,
+    count: Mutex<u64>,
+}
+
+pub fn send_after_drop(s: &S, tx: &std::sync::mpsc::Sender<u32>) {
+    let g = lock_recover(&s.state);
+    let v = *g;
+    drop(g);
+    tx.send(v).ok();
+}
+
+pub fn wait_own_guard(s: &S, cv: &std::sync::Condvar) {
+    let mut st = lock_recover(&s.state);
+    while *st == 0 {
+        st = wait_recover(cv, st);
+    }
+}
+
+pub fn temp_guard_then_send(s: &S, tx: &std::sync::mpsc::Sender<u32>) {
+    *lock_recover(&s.count) += 1;
+    tx.send(0).ok();
+}

@@ -1,0 +1,30 @@
+//! Lint fixture (never compiled): opposite nested acquisition orders
+//! and a re-entrant acquisition. Expected: exactly two `lock-order`
+//! diagnostics — one cycle, one re-entrant deadlock.
+
+use std::sync::Mutex;
+
+pub struct S {
+    alpha: Mutex<u32>,
+    beta: Mutex<u32>,
+}
+
+pub fn ab(s: &S) {
+    let a = lock_recover(&s.alpha);
+    let b = lock_recover(&s.beta);
+    let _ = (a, b);
+}
+
+// Opposite order: closes the alpha → beta → alpha cycle.
+pub fn ba(s: &S) {
+    let b = lock_recover(&s.beta);
+    let a = lock_recover(&s.alpha);
+    let _ = (a, b);
+}
+
+// Re-entrant acquisition: a guaranteed self-deadlock.
+pub fn aa(s: &S) {
+    let first = lock_recover(&s.alpha);
+    let second = lock_recover(&s.alpha);
+    let _ = (first, second);
+}

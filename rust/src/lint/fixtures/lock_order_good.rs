@@ -1,0 +1,37 @@
+//! Lint fixture (never compiled): every nesting follows one global
+//! order (alpha before beta), an explicit `drop` releases before the
+//! opposite-order site, and the accessor idiom is tracked by class.
+//! Expected: silent.
+
+use std::sync::{Mutex, MutexGuard};
+
+pub struct S {
+    alpha: Mutex<u32>,
+    beta: Mutex<u32>,
+}
+
+impl S {
+    fn alpha_lock(&self) -> MutexGuard<'_, u32> {
+        lock_recover(&self.alpha)
+    }
+
+    pub fn ab(&self) {
+        let a = self.alpha_lock();
+        let b = lock_recover(&self.beta);
+        let _ = (a, b);
+    }
+
+    pub fn ab_again(&self) {
+        let a = lock_recover(&self.alpha);
+        let b = lock_recover(&self.beta);
+        let _ = (a, b);
+    }
+
+    // beta alone, after alpha is explicitly released: no edge.
+    pub fn a_then_b(&self) {
+        let a = self.alpha_lock();
+        drop(a);
+        let b = lock_recover(&self.beta);
+        let _ = b;
+    }
+}

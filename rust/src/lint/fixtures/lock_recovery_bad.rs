@@ -1,0 +1,20 @@
+//! Lint fixture (never compiled): raw `.lock()` outside `util/sync.rs`
+//! — both the panicking and the hand-rolled-recovery spelling drift
+//! from the one recovery policy. Expected: exactly two `lock-recovery`
+//! diagnostics.
+
+use std::sync::Mutex;
+
+pub struct S {
+    state: Mutex<u32>,
+}
+
+pub fn observe(s: &S) {
+    let mut g = s.state.lock().unwrap();
+    *g += 1;
+}
+
+pub fn observe_recovering(s: &S) {
+    let mut g = s.state.lock().unwrap_or_else(|e| e.into_inner());
+    *g += 1;
+}

@@ -1,0 +1,28 @@
+//! Lint fixture (never compiled): the sanctioned spellings — the
+//! recovery helpers, the counted-recovery variant, and a reasoned
+//! allow as the escape hatch. Expected: silent.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+pub struct S {
+    count: Mutex<u64>,
+    board: Mutex<Vec<u32>>,
+    poisoned: AtomicU64,
+}
+
+pub fn observe(s: &S) {
+    *lock_recover(&s.count) += 1;
+}
+
+pub fn observe_counted(s: &S) {
+    let mut g = lock_recover_or(&s.board, || {
+        s.poisoned.fetch_add(1, Ordering::Relaxed);
+    });
+    g.push(1);
+}
+
+pub fn raw_with_reason(m: &Mutex<u32>) {
+    // lint: allow(lock-recovery) — foreign guard type the helper cannot express
+    let _ = m.lock();
+}

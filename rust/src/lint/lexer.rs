@@ -418,6 +418,55 @@ mod tests {
     }
 
     #[test]
+    fn deeply_nested_block_comments() {
+        // The concurrency pass reads code *around* comments; a
+        // mis-counted nesting level would swallow real acquisitions.
+        let toks = lex("/* 1 /* 2 /* 3 */ 2 */ 1 */ lock_recover");
+        assert_eq!(toks.len(), 2);
+        assert_eq!(toks[0].kind, TokKind::BlockComment);
+        assert_eq!(toks[1].text, "lock_recover");
+
+        // Unterminated inner comment must not panic, and must not
+        // leak trailing text as code.
+        let toks = lex("/* outer /* inner */ still-open");
+        assert!(toks.iter().all(|t| t.is_comment()));
+    }
+
+    #[test]
+    fn raw_strings_with_many_hashes() {
+        // `r##"…"#…"##`: a single-`#` close inside must not end the
+        // literal early and expose `.lock()` tokens to the rules.
+        let src = r###"let s = r##"x.lock() "# y.lock()"## ; tail"###;
+        let toks = lex(src);
+        let lits: Vec<_> =
+            toks.iter().filter(|t| t.kind == TokKind::StrLit).collect();
+        assert_eq!(lits.len(), 1);
+        assert!(lits[0].text.contains("x.lock()"));
+        assert!(toks.iter().all(|t| t.kind != TokKind::Ident
+                                || t.text != "lock"));
+        assert!(toks.iter().any(|t| t.kind == TokKind::Ident
+                                && t.text == "tail"));
+    }
+
+    #[test]
+    fn lifetime_vs_char_inside_generic_bounds() {
+        // `MutexGuard<'a, T>` return types feed accessor detection:
+        // the `'a` must lex as a lifetime, not open a char literal
+        // that swallows `, T>`.
+        let toks =
+            lex("fn g<'a, T: Iterator<Item = &'a u8>>(x: &'a T) \
+                 -> MutexGuard<'a, T> { let c = 'g'; }");
+        let lifetimes =
+            toks.iter().filter(|t| t.kind == TokKind::Lifetime).count();
+        assert_eq!(lifetimes, 4);
+        let chars: Vec<_> =
+            toks.iter().filter(|t| t.kind == TokKind::StrLit).collect();
+        assert_eq!(chars.len(), 1);
+        assert!(toks.iter().any(|t| t.kind == TokKind::Ident
+                                && t.text == "MutexGuard"));
+    }
+
+    #[test]
     fn numeric_literals_normalize() {
         assert_eq!(parse_int("0x9e37_79b9_7f4a_7c15"),
                    // lint: allow(rng-discipline) — lexer's own

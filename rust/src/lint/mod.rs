@@ -5,11 +5,15 @@
 //! streams across thread counts, SIMD on/off, and evict/resume — rest on
 //! conventions no compiler checks: counter-based per-sequence RNG,
 //! injected `Clock` time, zero-warm-alloc arenas, disjoint-write
-//! `SharedSlice` chunks, `// SAFETY:` obligations on every unsafe site.
-//! This module walks `rust/` (skipping `vendor/` and lint `fixtures/`)
-//! and enforces them as CI-gating diagnostics. The rules live in
-//! [`rules`]; the hand-rolled lexer (comments/strings/attributes aware,
-//! no external parser — the build is offline) in [`lexer`].
+//! `SharedSlice` chunks, `// SAFETY:` obligations on every unsafe site,
+//! one global lock order and one poisoned-lock recovery policy across
+//! the fleet. This module walks `rust/` and `examples/` (skipping
+//! `vendor/` and lint `fixtures/`) and enforces them as CI-gating
+//! diagnostics. The lexical rules live in [`rules`]; the concurrency
+//! pass (lock-order graph, guard-across-blocking-call, lock-recovery)
+//! in [`concurrency`]; the hand-rolled lexer (comments/strings/
+//! attributes aware, no external parser — the build is offline) in
+//! [`lexer`].
 //!
 //! ## Annotation grammar
 //!
@@ -23,11 +27,12 @@
 //! * `// lint: serve-region` … `// lint: end-serve-region` — fence a
 //!   request-handling region for the `serve-no-unwrap` rule (panicking
 //!   extractors banned inside; the rule runs only under
-//!   `src/coordinator/` and `src/server/`).
+//!   `src/coordinator/`, `src/server/`, and `examples/`).
 //!
 //! Run as `cargo run --bin repolint` (exit 0 = clean); the meta-test in
 //! this module keeps the live tree clean under plain `cargo test`.
 
+pub mod concurrency;
 pub mod lexer;
 pub mod rules;
 
@@ -120,6 +125,12 @@ impl FileCtx {
 pub struct FileOutcome {
     pub diags: Vec<Diagnostic>,
     pub allows: Vec<AllowEntry>,
+    /// Lock-acquisition facts for the tree-level concurrency pass.
+    pub facts: concurrency::FileFacts,
+    /// `lock-order` allows that matched nothing per-file: cycle
+    /// diagnostics can need cross-file facts, so their usefulness is
+    /// decided by `run_tree`, not here.
+    pub deferred: Vec<AllowEntry>,
 }
 
 /// Outcome of linting a tree.
@@ -127,6 +138,8 @@ pub struct Report {
     pub files: usize,
     pub diags: Vec<Diagnostic>,
     pub allows: Vec<AllowEntry>,
+    /// Lock-order graph summary (classes / edges / cycles).
+    pub stats: concurrency::TreeStats,
 }
 
 impl Report {
@@ -289,9 +302,11 @@ pub fn check_source(path: &str, src: &str) -> FileOutcome {
         line_attr,
     };
 
-    // ---- rules, then the allowlist --------------------------------
+    // ---- rules + the concurrency pass, then the allowlist ------------
     let mut raw = Vec::new();
     rules::run_all(&ctx, &mut raw);
+    let analysis = concurrency::analyze(&ctx);
+    raw.extend(analysis.diags);
 
     let mut used = vec![false; allows.len()];
     for d in raw {
@@ -303,18 +318,26 @@ pub fn check_source(path: &str, src: &str) -> FileOutcome {
             None => diags.push(d),
         }
     }
+    let mut deferred = Vec::new();
     for (a, used) in allows.iter().zip(&used) {
-        if !used {
-            diags.push(directive_diag(
-                path, a.line,
-                format!("unused lint: allow({}) — nothing to suppress \
-                         on line {}", a.rules.join(", "), a.target),
-            ));
+        if *used {
+            continue;
         }
+        // Unmatched `lock-order` allows may suppress a tree-level
+        // cycle diagnostic: their verdict belongs to `run_tree`.
+        if a.rules.iter().any(|r| r == "lock-order") {
+            deferred.push(a.clone());
+            continue;
+        }
+        diags.push(directive_diag(
+            path, a.line,
+            format!("unused lint: allow({}) — nothing to suppress \
+                     on line {}", a.rules.join(", "), a.target),
+        ));
     }
 
     diags.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
-    FileOutcome { diags, allows }
+    FileOutcome { diags, allows, facts: analysis.facts, deferred }
 }
 
 fn directive_diag(path: &str, line: u32, msg: impl Into<String>)
@@ -344,16 +367,23 @@ fn parse_allow(args: &str) -> Result<(Vec<String>, String), String> {
     Ok((rule_names, reason))
 }
 
-/// Lint every `.rs` file under `<root>/rust`, skipping `vendor/`
-/// (third-party), `fixtures/` (intentionally-bad lint test inputs) and
-/// build output. Diagnostics are sorted `(path, line, rule)`.
+/// Lint every `.rs` file under `<root>/rust` and `<root>/examples`
+/// (the trace-replay / fleet-smoke examples carry serve-path code),
+/// skipping `vendor/` (third-party), `fixtures/` (intentionally-bad
+/// lint test inputs) and build output; then run the tree-level
+/// concurrency pass (cross-file lock-order cycles) over the collected
+/// facts. Diagnostics are sorted `(path, line, rule)`.
 pub fn run_tree(root: &Path) -> std::io::Result<Report> {
     let mut files = Vec::new();
     collect_rs(&root.join("rust"), &mut files)?;
+    collect_rs(&root.join("examples"), &mut files)?;
     files.sort();
     let mut report =
         Report { files: files.len(), diags: Vec::new(),
-                 allows: Vec::new() };
+                 allows: Vec::new(),
+                 stats: concurrency::TreeStats::default() };
+    let mut facts = Vec::new();
+    let mut deferred = Vec::new();
     for f in &files {
         let bytes = std::fs::read(f)?;
         let src = String::from_utf8_lossy(&bytes);
@@ -365,7 +395,38 @@ pub fn run_tree(root: &Path) -> std::io::Result<Report> {
         let mut outcome = check_source(&label, &src);
         report.diags.append(&mut outcome.diags);
         report.allows.append(&mut outcome.allows);
+        facts.push(outcome.facts);
+        deferred.append(&mut outcome.deferred);
     }
+
+    // ---- tree-level concurrency pass, with deferred allows -----------
+    let (tree_diags, stats) = concurrency::check_tree(&facts);
+    report.stats = stats;
+    let mut used = vec![false; deferred.len()];
+    for d in tree_diags {
+        let hit = deferred.iter().position(|a| {
+            a.path == d.path
+                && a.target == d.line
+                && a.rules.iter().any(|r| r == d.rule)
+        });
+        match hit {
+            Some(i) => used[i] = true,
+            None => report.diags.push(d),
+        }
+    }
+    for (a, used) in deferred.iter().zip(&used) {
+        if !used {
+            report.diags.push(directive_diag(
+                &a.path, a.line,
+                format!("unused lint: allow({}) — nothing to suppress \
+                         on line {}", a.rules.join(", "), a.target),
+            ));
+        }
+    }
+    report
+        .diags
+        .sort_by(|a, b| (a.path.clone(), a.line, a.rule)
+                 .cmp(&(b.path.clone(), b.line, b.rule)));
     Ok(report)
 }
 
@@ -516,6 +577,50 @@ mod tests {
     }
 
     #[test]
+    fn lock_order_fixtures() {
+        let bad = include_str!("fixtures/lock_order_bad.rs");
+        let d = diags_of("rust/src/coordinator/fx.rs", bad);
+        let hits = d.iter().filter(|d| d.rule == "lock-order").count();
+        assert_eq!(hits, 2,
+                   "one cycle + one re-entrant acquisition: {d:?}");
+        assert!(d.iter().any(|d| d.msg.contains("cycle")), "{d:?}");
+        assert!(d.iter().any(|d| d.msg.contains("re-entrant")),
+                "{d:?}");
+
+        let good = include_str!("fixtures/lock_order_good.rs");
+        let d = diags_of("rust/src/coordinator/fx.rs", good);
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn guard_blocking_fixtures() {
+        let bad = include_str!("fixtures/guard_blocking_bad.rs");
+        let d = diags_of("rust/src/coordinator/fx.rs", bad);
+        let hits =
+            d.iter().filter(|d| d.rule == "guard-blocking").count();
+        assert_eq!(hits, 2,
+                   "send under lock + wait with a second guard: {d:?}");
+
+        let good = include_str!("fixtures/guard_blocking_good.rs");
+        let d = diags_of("rust/src/coordinator/fx.rs", good);
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn lock_recovery_fixtures() {
+        let bad = include_str!("fixtures/lock_recovery_bad.rs");
+        let d = diags_of("rust/src/coordinator/fx.rs", bad);
+        let hits =
+            d.iter().filter(|d| d.rule == "lock-recovery").count();
+        assert_eq!(hits, 2,
+                   "both raw `.lock()` spellings must fire: {d:?}");
+
+        let good = include_str!("fixtures/lock_recovery_good.rs");
+        let d = diags_of("rust/src/coordinator/fx.rs", good);
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
     fn serve_region_close_without_open_fires() {
         let src = "// lint: end-serve-region\nfn f() {}\n";
         let d = diags_of("rust/src/server/fx.rs", src);
@@ -587,9 +692,10 @@ fn f() {
     #[test]
     fn repolint_is_clean_on_the_live_tree() {
         let root = Path::new(env!("CARGO_MANIFEST_DIR"));
-        let report = run_tree(root).expect("walk rust/");
-        assert!(report.files > 30,
-                "walked only {} files — wrong root?", report.files);
+        let report = run_tree(root).expect("walk rust/ + examples/");
+        assert!(report.files > 40,
+                "walked only {} files — wrong root, or the examples/ \
+                 walk regressed?", report.files);
         assert!(
             report.clean(),
             "repolint found {} diagnostic(s) on the live tree:\n{}",
@@ -600,5 +706,13 @@ fn f() {
         // Every allowlist entry carries a written reason (enforced at
         // parse time, re-asserted here as the acceptance criterion).
         assert!(report.allows.iter().all(|a| !a.reason.is_empty()));
+        // The concurrency pass saw the fleet's lock classes and found
+        // a cycle-free order (the acceptance criterion for the
+        // lock-order rule: zero cycles on the live tree).
+        assert_eq!(report.stats.cycles, 0,
+                   "lock-order cycles on the live tree");
+        assert!(report.stats.classes >= 5 && report.stats.edges >= 1,
+                "concurrency pass extracted implausibly few facts: \
+                 {:?}", report.stats);
     }
 }

@@ -1,6 +1,9 @@
-//! The six repo-native invariant rules (see `lint` module docs for the
-//! invariant each one guards and README §"Correctness tooling" for the
-//! annotation grammar).
+//! The six lexical repo-native invariant rules (see `lint` module docs
+//! for the invariant each one guards and README §"Correctness tooling"
+//! for the annotation grammar). The three concurrency rules —
+//! lock-order, guard-blocking, lock-recovery — live in
+//! `lint::concurrency` and share this module's `RULES` registry and
+//! token-sequence matcher.
 //!
 //! Every rule is a lexical pass over a [`FileCtx`]: code tokens with
 //! line/column positions, per-line code/comment classification, and the
@@ -11,14 +14,22 @@
 use crate::lint::lexer::{parse_int, Tok, TokKind};
 use crate::lint::{Diagnostic, FileCtx};
 
-/// Rule ids, as spelled inside `lint: allow(...)` annotations.
-pub const RULES: [&str; 6] = [
+/// Rule ids, as spelled inside `lint: allow(...)` annotations. The
+/// first six are the lexical rules in this module; the last three are
+/// the concurrency pass (`lint::concurrency`): lock-order (deadlock
+/// cycles + re-entrant acquisition), guard-blocking (guard held across
+/// a blocking call), and lock-recovery (raw `.lock()` outside
+/// `util/sync.rs`).
+pub const RULES: [&str; 9] = [
     "unsafe-safety",
     "clock-discipline",
     "rng-discipline",
     "warm-alloc",
     "det-iteration",
     "serve-no-unwrap",
+    "lock-order",
+    "guard-blocking",
+    "lock-recovery",
 ];
 
 /// RNG constants whose presence outside the sanctioned modules means a
@@ -75,6 +86,7 @@ pub fn run_all(ctx: &FileCtx, out: &mut Vec<Diagnostic>) {
     }
     if ctx.path.contains("src/coordinator/")
         || ctx.path.contains("src/server/")
+        || ctx.path.starts_with("examples/")
     {
         serve_no_unwrap(ctx, out);
     }
@@ -86,8 +98,8 @@ fn path_is(ctx: &FileCtx, suffixes: &[&str]) -> bool {
 
 /// Match `pat` against the code tokens starting at `i`: alphanumeric
 /// pattern elements must be whole `Ident` tokens, single-char elements
-/// `Punct` tokens.
-fn seq_at(code: &[Tok], i: usize, pat: &[&str]) -> bool {
+/// `Punct` tokens. Shared with the concurrency pass.
+pub(crate) fn seq_at(code: &[Tok], i: usize, pat: &[&str]) -> bool {
     if i + pat.len() > code.len() {
         return false;
     }

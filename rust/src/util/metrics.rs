@@ -11,6 +11,7 @@ use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::util::json::Json;
+use crate::util::sync::lock_recover;
 
 /// Monotonic counter.
 #[derive(Default)]
@@ -68,9 +69,11 @@ fn bucket_value(i: usize) -> f64 {
 
 impl Histogram {
     pub fn observe(&self, v: f64) {
-        let mut counts = self.counts.lock().unwrap();
+        let mut counts = lock_recover(&self.counts);
         counts[bucket_index(v)] += 1;
-        *self.sum.lock().unwrap() += v;
+        // Lock order: `counts` before `sum` (observe is the only place
+        // both are held; every other method takes one at a time).
+        *lock_recover(&self.sum) += v;
         self.n.fetch_add(1, Ordering::Relaxed);
     }
 
@@ -83,12 +86,12 @@ impl Histogram {
         if n == 0 {
             0.0
         } else {
-            *self.sum.lock().unwrap() / n as f64
+            *lock_recover(&self.sum) / n as f64
         }
     }
 
     pub fn quantile(&self, q: f64) -> f64 {
-        let counts = self.counts.lock().unwrap();
+        let counts = lock_recover(&self.counts);
         let total: u64 = counts.iter().sum();
         if total == 0 {
             return 0.0;
@@ -124,38 +127,44 @@ pub struct Registry {
 
 impl Registry {
     pub fn counter(&self, name: &str) -> std::sync::Arc<Counter> {
-        self.counters
-            .lock()
-            .unwrap()
+        lock_recover(&self.counters)
             .entry(name.to_string())
             .or_default()
             .clone()
     }
 
     pub fn histogram(&self, name: &str) -> std::sync::Arc<Histogram> {
-        self.histograms
-            .lock()
-            .unwrap()
+        lock_recover(&self.histograms)
             .entry(name.to_string())
             .or_default()
             .clone()
     }
 
     pub fn snapshot(&self) -> Json {
-        let counters = Json::Obj(
-            self.counters
-                .lock()
-                .unwrap()
+        // Clone the Arc'd values out under each registry guard, then
+        // serialize with no guard held: `Histogram::snapshot` takes the
+        // histogram's own locks, so reading it under a registry guard
+        // would nest registry -> histogram lock acquisitions.
+        let counters: Vec<(String, std::sync::Arc<Counter>)> =
+            lock_recover(&self.counters)
                 .iter()
-                .map(|(k, v)| (k.clone(), Json::num(v.get() as f64)))
+                .map(|(k, v)| (k.clone(), v.clone()))
+                .collect();
+        let hists: Vec<(String, std::sync::Arc<Histogram>)> =
+            lock_recover(&self.histograms)
+                .iter()
+                .map(|(k, v)| (k.clone(), v.clone()))
+                .collect();
+        let counters = Json::Obj(
+            counters
+                .into_iter()
+                .map(|(k, v)| (k, Json::num(v.get() as f64)))
                 .collect(),
         );
         let hists = Json::Obj(
-            self.histograms
-                .lock()
-                .unwrap()
-                .iter()
-                .map(|(k, v)| (k.clone(), v.snapshot()))
+            hists
+                .into_iter()
+                .map(|(k, v)| (k, v.snapshot()))
                 .collect(),
         );
         Json::obj(vec![("counters", counters), ("histograms", hists)])

@@ -10,3 +10,4 @@ pub mod metrics;
 pub mod ptest;
 pub mod rng;
 pub mod simclock;
+pub mod sync;

@@ -1,0 +1,122 @@
+//! Poisoned-lock recovery, standardized.
+//!
+//! Every mutex in this codebase guards state that stays valid across a
+//! panic on another thread: metrics counters, the router's liveness and
+//! migration-board vectors, the step pool's completion counters, the
+//! evacuation records' reply slots. All of them recover from poisoning
+//! by taking the guard anyway (`PoisonError::into_inner`) — a panicked
+//! peer must degrade one request, never wedge the fleet. Before this
+//! module each site hand-rolled the recovery (`unwrap_or_else`, a
+//! `match` with `clear_poison`, a plain `unwrap`); now there is exactly
+//! one idiom, and the `lock-recovery` lint rule (rust/src/lint/
+//! concurrency.rs) bans raw `.lock()` everywhere else so new sites
+//! cannot drift.
+//!
+//! The helpers also clear the poison flag: recovery here means
+//! *recovered* — later acquirers take the fast `Ok` path instead of
+//! re-entering the error arm on every lock for the rest of the process.
+//! Sites that want to observe recovery (the router counts board
+//! poisonings into `/healthz`) use [`lock_recover_or`], whose hook runs
+//! exactly once per poisoning because the flag is cleared under the
+//! same acquisition.
+
+use std::sync::{Condvar, Mutex, MutexGuard};
+
+/// Acquire `m`, recovering (and clearing) poison silently.
+///
+/// This file is the one place allowed to call raw `.lock()`; everything
+/// else goes through here (enforced by the `lock-recovery` lint rule).
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(e) => {
+            m.clear_poison();
+            e.into_inner()
+        }
+    }
+}
+
+/// Acquire `m`; on poison, clear the flag, run `on_poison` (observe the
+/// recovery — bump a counter, log), and return the guard anyway.
+pub fn lock_recover_or<T>(
+    m: &Mutex<T>,
+    on_poison: impl FnOnce(),
+) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(e) => {
+            m.clear_poison();
+            on_poison();
+            e.into_inner()
+        }
+    }
+}
+
+/// `Condvar::wait` with the same recovery policy: a wait that observes
+/// poison re-takes the guard instead of panicking the waiter.
+pub fn wait_recover<'a, T>(
+    cv: &Condvar,
+    g: MutexGuard<'a, T>,
+) -> MutexGuard<'a, T> {
+    match cv.wait(g) {
+        Ok(g) => g,
+        Err(e) => e.into_inner(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    fn poison(m: &Arc<Mutex<u32>>) {
+        let m2 = Arc::clone(m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the lock");
+        })
+        .join();
+        assert!(m.is_poisoned());
+    }
+
+    #[test]
+    fn lock_recover_takes_and_clears_poison() {
+        let m = Arc::new(Mutex::new(7u32));
+        poison(&m);
+        assert_eq!(*lock_recover(&m), 7);
+        // Recovery cleared the flag: the next lock is a clean Ok.
+        assert!(!m.is_poisoned());
+        assert!(m.lock().is_ok());
+    }
+
+    #[test]
+    fn lock_recover_or_fires_hook_exactly_once_per_poisoning() {
+        let m = Arc::new(Mutex::new(0u32));
+        poison(&m);
+        let mut hits = 0;
+        *lock_recover_or(&m, || hits += 1) += 1;
+        // Flag cleared under the first recovery: no second hook fire.
+        *lock_recover_or(&m, || hits += 1) += 1;
+        assert_eq!(hits, 1);
+        assert_eq!(*lock_recover(&m), 2);
+    }
+
+    #[test]
+    fn wait_recover_returns_the_guard() {
+        use std::sync::Condvar;
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        let p2 = Arc::clone(&pair);
+        let h = std::thread::spawn(move || {
+            let (m, cv) = &*p2;
+            *lock_recover(m) = true;
+            cv.notify_all();
+        });
+        let (m, cv) = &*pair;
+        let mut g = lock_recover(m);
+        while !*g {
+            g = wait_recover(cv, g);
+        }
+        h.join().unwrap();
+        assert!(*g);
+    }
+}
